@@ -1,0 +1,97 @@
+//! Bit-width design-space exploration (extends paper Fig. 8): sweep the
+//! datapath width and report accuracy together with the modelled FPGA
+//! cost, i.e. the accuracy/area Pareto front a hardware designer needs.
+//!
+//!     cargo run --release --example bitwidth_sweep -- [--scale S]
+
+use anyhow::Result;
+use infilter::datasets::esc10;
+use infilter::fixed::{FixedConfig, FixedPipeline};
+use infilter::fpga::resources::{estimate, ArchParams, CostModel};
+use infilter::mp::machine::Standardizer;
+use infilter::runtime::engine::ModelEngine;
+use infilter::train::{train_heads, TrainConfig};
+use infilter::util::cli::Args;
+use infilter::util::par::par_map;
+use infilter::util::prng::Pcg32;
+use infilter::util::table::Table;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    infilter::util::logging::set_level_from_str(args.get_or("log", "warn"));
+    let scale = args.get_f64("scale", 0.15);
+    let threads = args.get_usize(
+        "threads",
+        std::thread::available_parallelism().map_or(4, |n| n.get()),
+    );
+
+    let mut eng = ModelEngine::open(Path::new("artifacts"), 1.0)?;
+    let clip_len = eng.frame_len() * eng.clip_frames();
+
+    // balanced crying-baby task, float-trained reference model
+    let ds = esc10::build(42, scale);
+    let class = 3;
+    let mut rng = Pcg32::new(0x5eed);
+    let pick = |clips: &[infilter::datasets::Clip], rng: &mut Pcg32| {
+        let pos: Vec<_> = clips.iter().filter(|c| c.label == class).cloned().collect();
+        let negp: Vec<_> = clips.iter().filter(|c| c.label != class).cloned().collect();
+        let idx = rng.sample_indices(negp.len(), pos.len().min(negp.len()));
+        let mut out = pos.clone();
+        let mut y = vec![true; pos.len()];
+        for i in idx {
+            out.push(negp[i].clone());
+            y.push(false);
+        }
+        for c in out.iter_mut() {
+            c.samples.truncate(clip_len);
+        }
+        (out, y)
+    };
+    let (tr, tr_y) = pick(&ds.train, &mut rng);
+    let (te, te_y) = pick(&ds.test, &mut rng);
+
+    let phi = eng.clip_features_many(&tr.iter().map(|c| c.samples.as_slice()).collect::<Vec<_>>())?;
+    let std = Standardizer::fit(&phi);
+    let k = std.apply_all(&phi);
+    let targets: Vec<Vec<f32>> = tr_y
+        .iter()
+        .map(|&p| if p { vec![1.0, 0.0] } else { vec![0.0, 1.0] })
+        .collect();
+    let cfg = TrainConfig::default();
+    let (params, _) = train_heads(&mut eng, &k, &targets, 2, &cfg)?;
+
+    let mut table = Table::new(
+        "bitwidth sweep: accuracy vs modelled FPGA cost",
+        &["bits", "test_acc_%", "LUT", "FF", "slices", "mW@50MHz"],
+    );
+    let cm = CostModel::default();
+    for bits in [4u32, 6, 8, 10, 12, 16] {
+        let pipe = FixedPipeline::build(
+            &eng.plan, 1.0, cfg.gamma_end, &params, &std, &phi,
+            FixedConfig::with_bits(bits),
+        );
+        let preds = par_map(&te, threads, |c| {
+            let m = pipe.classify(&c.samples);
+            m[0] > m[1]
+        });
+        let acc = preds.iter().zip(&te_y).filter(|(p, y)| p == y).count() as f64
+            / te_y.len().max(1) as f64;
+        let mut arch = ArchParams::paper_default();
+        arch.data_bits = bits as usize;
+        arch.acc_bits = bits as usize + 14;
+        let est = estimate(&arch, &cm);
+        table.row(vec![
+            bits.to_string(),
+            format!("{:.1}", 100.0 * acc),
+            est.luts().to_string(),
+            est.ffs().to_string(),
+            est.slices().to_string(),
+            format!("{:.1}", est.power_mw(&cm, 50.0)),
+        ]);
+    }
+    println!("{}", table.render());
+    table.write_csv(Path::new("results/bitwidth_sweep.csv"))?;
+    println!("bitwidth_sweep OK");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: load the AOT artifacts, extract in-filter MP features
+//! from one synthetic clip, and classify it with a freshly trained
+//! 2-class MP kernel machine.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Everything below the `ModelEngine::open` line is pure rust — python
+//! only ran at build time to lower the HLO.
+
+use anyhow::Result;
+use infilter::datasets::esc10;
+use infilter::mp::machine::Standardizer;
+use infilter::runtime::engine::ModelEngine;
+use infilter::train::{train_heads, TrainConfig};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    // 1. open the PJRT runtime on the AOT artifacts
+    let mut eng = ModelEngine::open(Path::new("artifacts"), 1.0)?;
+    let clip_len = eng.frame_len() * eng.clip_frames();
+    println!(
+        "engine: {} filters, frame {} samples, clip {} samples",
+        eng.n_filters(),
+        eng.frame_len(),
+        clip_len
+    );
+
+    // 2. a tiny balanced task: crying_baby (class 3) vs dog (class 0)
+    let mut clips = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..12u64 {
+        for (class, pos) in [(3usize, true), (0usize, false)] {
+            let mut c = esc10::synth_clip(7, class, i);
+            c.samples.truncate(clip_len);
+            clips.push(c);
+            labels.push(pos);
+        }
+    }
+
+    // 3. in-filter MP features through the mp_frame_features HLO
+    let phi =
+        eng.clip_features_many(&clips.iter().map(|c| c.samples.as_slice()).collect::<Vec<_>>())?;
+    println!("extracted {} feature vectors of dim {}", phi.len(), phi[0].len());
+
+    // 4. train the MP kernel machine via the AOT train-step artifact
+    let std = Standardizer::fit(&phi);
+    let k = std.apply_all(&phi);
+    let targets: Vec<Vec<f32>> = labels
+        .iter()
+        .map(|&p| if p { vec![1.0, 0.0] } else { vec![0.0, 1.0] })
+        .collect();
+    let cfg = TrainConfig {
+        epochs: 25,
+        ..TrainConfig::default()
+    };
+    let (params, losses) = train_heads(&mut eng, &k, &targets, 2, &cfg)?;
+    println!(
+        "trained: loss {:.4} -> {:.4} over {} steps",
+        losses.first().unwrap(),
+        losses.last().unwrap(),
+        losses.len()
+    );
+
+    // 5. classify a fresh clip end to end (features + inference HLOs)
+    let mut probe = esc10::synth_clip(99, 3, 1234);
+    probe.samples.truncate(clip_len);
+    let phi_probe = eng.clip_features(&probe.samples)?;
+    let (p, zp, zm) = eng.inference(&params, &std, &phi_probe, cfg.gamma_end)?;
+    println!("decision p = {p:?} (z+ = {zp:?}, z- = {zm:?})");
+    let verdict = if p[0] > p[1] { "crying_baby" } else { "not crying_baby" };
+    println!("verdict: {verdict}");
+    assert!(p[0] > p[1], "expected the crying-baby head to win");
+    println!("quickstart OK");
+    Ok(())
+}

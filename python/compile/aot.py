@@ -1,0 +1,198 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); python never appears on the
+rust request path afterwards.
+
+Interchange format is HLO text, NOT `lowered.compile().serialize()`:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the HLO text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Every artifact is described in artifacts/manifest.json (shapes, dtypes,
+constants) which rust/src/runtime/ loads and validates at startup, so
+python/config.py stays the single source of truth for static shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import filterbank as fb
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shapes(tree):
+    return [list(x.shape) for x in jax.tree_util.tree_leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# artifact definitions
+# ---------------------------------------------------------------------------
+
+def mp_op(x, gamma):
+    """Raw batched MP — runtime smoke test, microbench, rust cross-check."""
+    from .kernels import mp as mpk
+
+    return (mpk.mp(x, gamma),)
+
+
+def mp_frame_features(bp_state, lp_state, frame, bp, lp, gamma_f):
+    st, phi = fb.frame_features(
+        fb.FrameState(bp_state, lp_state), frame, bp, lp, gamma_f, mode="mp"
+    )
+    return st.bp, st.lp, phi
+
+
+def fir_frame_features(bp_state, lp_state, frame, bp, lp):
+    st, phi = fb.frame_features(
+        fb.FrameState(bp_state, lp_state), frame, bp, lp, 0.0, mode="fir"
+    )
+    return st.bp, st.lp, phi
+
+
+def mp_inference(phi, mu, sigma, wp, wm, bp_, bm_, gamma_1):
+    """Single-clip inference: raw accumulated phi -> (p, z+, z-)."""
+    k = M.standardize(phi, mu, sigma)[None, :]
+    p, zp, zm = M.decision(M.Params(wp, wm, bp_, bm_), k, gamma_1)
+    return p[0], zp[0], zm[0]
+
+
+def mp_eval(k, wp, wm, bp_, bm_, gamma_1):
+    """Batched eval over pre-standardised features: (B,P) -> p (B,C)."""
+    p, zp, zm = M.decision(M.Params(wp, wm, bp_, bm_), k, gamma_1)
+    return p, zp, zm
+
+
+def mp_train_step(wp, wm, bp_, bm_, k, y, lr, gamma_1):
+    new, loss = M.train_step(M.Params(wp, wm, bp_, bm_), k, y, lr, gamma_1)
+    return new.wp, new.wm, new.bp, new.bm, loss
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_all(out_dir: str) -> dict:
+    O, F, BT, LT = C.N_OCTAVES, C.FILTERS_PER_OCTAVE, C.BP_TAPS, C.LP_TAPS
+    P, T = C.N_FILTERS, C.FRAME_LEN
+    scalar = _spec()
+
+    defs: dict[str, tuple] = {
+        "mp_op": (mp_op, (_spec(256, 32), scalar)),
+    }
+    for B in C.INFER_BATCHES:
+        args = (
+            _spec(B, O, BT - 1),
+            _spec(B, O - 1, LT - 1),
+            _spec(B, T),
+            _spec(O, F, BT),
+            _spec(O - 1, LT),
+            scalar,
+        )
+        defs[f"mp_frame_features_b{B}"] = (mp_frame_features, args)
+    defs["fir_frame_features_b1"] = (
+        fir_frame_features,
+        (
+            _spec(1, O, BT - 1),
+            _spec(1, O - 1, LT - 1),
+            _spec(1, T),
+            _spec(O, F, BT),
+            _spec(O - 1, LT),
+        ),
+    )
+    for Cn in C.HEAD_VARIANTS:
+        defs[f"mp_inference_c{Cn}"] = (
+            mp_inference,
+            (
+                _spec(P), _spec(P), _spec(P),
+                _spec(Cn, P), _spec(Cn, P), _spec(Cn), _spec(Cn),
+                scalar,
+            ),
+        )
+        defs[f"mp_eval_c{Cn}"] = (
+            mp_eval,
+            (
+                _spec(C.TRAIN_BATCH, P),
+                _spec(Cn, P), _spec(Cn, P), _spec(Cn), _spec(Cn),
+                scalar,
+            ),
+        )
+        defs[f"mp_train_step_c{Cn}"] = (
+            mp_train_step,
+            (
+                _spec(Cn, P), _spec(Cn, P), _spec(Cn), _spec(Cn),
+                _spec(C.TRAIN_BATCH, P), _spec(C.TRAIN_BATCH, Cn),
+                scalar, scalar,
+            ),
+        )
+
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text/1",
+        "constants": {
+            "sample_rate": C.SAMPLE_RATE,
+            "frame_len": C.FRAME_LEN,
+            "n_octaves": C.N_OCTAVES,
+            "filters_per_octave": C.FILTERS_PER_OCTAVE,
+            "n_filters": C.N_FILTERS,
+            "bp_taps": C.BP_TAPS,
+            "lp_taps": C.LP_TAPS,
+            "gamma_f_default": C.GAMMA_F_DEFAULT,
+            "gamma_1_default": C.GAMMA_1_DEFAULT,
+            "gamma_n": C.GAMMA_N,
+            "train_batch": C.TRAIN_BATCH,
+            "clip_frames": C.CLIP_FRAMES,
+            "clip_len": C.CLIP_LEN,
+        },
+        "artifacts": {},
+    }
+    for name, (fn, args) in defs.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _shapes(args),
+            "outputs": _shapes(outs),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"  {name:28s} {len(text):>9d} chars -> {fname}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build_all(args.out)
+    print(f"manifest -> {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Shared build-time constants for the AOT artifacts.
+
+These must match rust/src/config/ — aot.py serialises them into
+artifacts/manifest.json, which the rust side loads at startup, so there
+is exactly one source of truth for shapes (this file) and the rust
+runtime refuses to run against a stale manifest.
+"""
+
+SAMPLE_RATE = 16_000
+FRAME_LEN = 2_048          # divisible by 2^(N_OCTAVES-1)
+N_OCTAVES = 6
+FILTERS_PER_OCTAVE = 5
+N_FILTERS = N_OCTAVES * FILTERS_PER_OCTAVE  # 30, as in the paper
+BP_TAPS = 16               # paper: BP window size 16 (order 15)
+LP_TAPS = 6                # paper: LP window size 6
+GAMMA_F_DEFAULT = 1.0      # MP filtering gamma (paper gamma_f), tunable
+GAMMA_1_DEFAULT = 4.0      # inference-engine gamma (annealed in training)
+GAMMA_N = 1.0              # normalisation gamma (paper: gamma_n = 1)
+
+TRAIN_BATCH = 64
+INFER_BATCHES = (1, 8)     # lowered frame-feature batch variants
+HEAD_VARIANTS = (10, 2)    # ESC-10 one-vs-all heads; FSDD speakers
+
+CLIP_FRAMES = 8            # clips are CLIP_FRAMES * FRAME_LEN = 16384 samples
+CLIP_LEN = CLIP_FRAMES * FRAME_LEN

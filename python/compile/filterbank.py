@@ -1,0 +1,130 @@
+"""L2: multirate FIR filter bank — conventional (MAC) and MP-domain paths.
+
+Implements the paper's Fig. 3 pipeline with explicit, frame-carried
+delay-line state so the rust coordinator can stream audio frame by frame
+(L3 owns one state tensor per sensor stream):
+
+    octave o signal s_o  --BP bank (F filters, shared input window)--> HWR
+        --sum over frame--> partial accumulators Phi (added up by L3)
+    s_{o+1} = downsample2( LP(s_o) )      (anti-aliasing low pass)
+
+All shapes are static and batch-aware: every function takes a leading
+batch dimension B (number of sensor streams served in one PJRT dispatch),
+which is how the rust dynamic batcher amortises dispatch overhead.
+
+Two filtering back ends:
+  * `fir`  — conventional inner product (MAC) — the float baseline
+             (paper Fig. 4, Table III "floating point" columns).
+  * `mp`   — paper eq. (9): y = MP([h+x, -h-x], gf) - MP([h-x, -h+x], gf)
+             via the L1 Pallas kernel — the multiplierless path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .kernels import mp as mpk
+
+
+class FrameState(NamedTuple):
+    """Per-stream delay-line state carried across frames.
+
+    bp: (B, O, bp_taps-1)  — per-octave shared input history for the BP bank
+    lp: (B, O-1, lp_taps-1) — per-transition history for the anti-alias LP
+    """
+
+    bp: jnp.ndarray
+    lp: jnp.ndarray
+
+
+def zero_state(batch: int, n_octaves: int, bp_taps: int, lp_taps: int) -> FrameState:
+    return FrameState(
+        bp=jnp.zeros((batch, n_octaves, bp_taps - 1), jnp.float32),
+        lp=jnp.zeros((batch, n_octaves - 1, lp_taps - 1), jnp.float32),
+    )
+
+
+def make_windows(sig: jnp.ndarray, state: jnp.ndarray, taps: int):
+    """Sliding windows with carried history.
+
+    sig: (B, T), state: (B, taps-1) holding the previous taps-1 samples
+    (oldest first). Returns (win (B, T, taps), new_state (B, taps-1))
+    where win[b, t, k] = sample at time t-k (k=0 is the newest).
+    """
+    T = sig.shape[1]
+    full = jnp.concatenate([state, sig], axis=1)  # (B, T+taps-1)
+    win = jnp.stack(
+        [full[:, taps - 1 - k : taps - 1 - k + T] for k in range(taps)], axis=-1
+    )
+    return win, full[:, T:]
+
+
+def fir_bank(win: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Conventional MAC filter bank. win: (B,T,M), h: (F,M) -> (B,T,F)."""
+    return jnp.einsum("btm,fm->btf", win, h)
+
+
+def mp_bank(win: jnp.ndarray, h: jnp.ndarray, gamma_f) -> jnp.ndarray:
+    """MP-domain filter bank (paper eq. 9). win: (B,T,M), h: (F,M) -> (B,T,F).
+
+    Every (b, t, f) triple becomes one row of a width-2M MP batch — the
+    batched analogue of the FPGA's time-multiplexed MP modules.
+    """
+    w4 = win[:, :, None, :]  # (B,T,1,M)
+    h4 = h[None, None, :, :]  # (1,1,F,M)
+    plus = jnp.concatenate(
+        [h4 + w4, jnp.broadcast_to(-h4 - w4, w4.shape[:2] + h.shape)], axis=-1
+    )
+    minus = jnp.concatenate(
+        [h4 - w4, jnp.broadcast_to(-h4 + w4, w4.shape[:2] + h.shape)], axis=-1
+    )
+    return mpk.mp(plus, gamma_f) - mpk.mp(minus, gamma_f)
+
+
+def _filt(sig, state, h, gamma_f, mode):
+    """Filter a (B,T) signal with a bank h (F,M); returns ((B,T,F), state')."""
+    win, new_state = make_windows(sig, state, h.shape[-1])
+    if mode == "mp":
+        return mp_bank(win, h, gamma_f), new_state
+    return fir_bank(win, h), new_state
+
+
+def frame_features(
+    state: FrameState,
+    frame: jnp.ndarray,
+    bp: jnp.ndarray,
+    lp: jnp.ndarray,
+    gamma_f,
+    *,
+    mode: str,
+):
+    """Process one audio frame through the full multirate bank.
+
+    state: FrameState; frame: (B, T) with T divisible by 2^(O-1);
+    bp: (O, F, bp_taps) band-pass banks per octave;
+    lp: (O-1, lp_taps) anti-alias low-pass per octave transition.
+
+    Returns (new_state, phi_part (B, O*F)) — the HWR-accumulated partial
+    kernel contributions of this frame (eq. 11 restricted to the frame);
+    the L3 coordinator adds them into its per-stream accumulators and
+    standardises at clip end (eq. 12).
+    """
+    n_oct, n_filt, _ = bp.shape
+    sig = frame
+    new_bp, new_lp, parts = [], [], []
+    for o in range(n_oct):
+        y, st = _filt(sig, state.bp[:, o], bp[o], gamma_f, mode)
+        new_bp.append(st)
+        # HWR + accumulate over the frame (paper eqs. 10-11)
+        parts.append(jnp.sum(jnp.maximum(y, 0.0), axis=1))  # (B, F)
+        if o < n_oct - 1:
+            ylp, stl = _filt(sig, state.lp[:, o], lp[o][None, :], gamma_f, mode)
+            new_lp.append(stl)
+            sig = ylp[:, ::2, 0]  # decimate by 2
+    new_state = FrameState(
+        bp=jnp.stack(new_bp, axis=1),
+        lp=jnp.stack(new_lp, axis=1),
+    )
+    return new_state, jnp.concatenate(parts, axis=-1)

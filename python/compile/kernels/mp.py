@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: batched Margin Propagation (reverse water-filling).
+
+The MP operator z = MP(L, gamma) solves  sum_i [L_i - z]_+ = gamma.
+On the paper's FPGA this is an iterative counter/comparator loop (Gu's
+algorithm, [27], [40]); here the same fixed-point iteration is expressed
+as a Newton iteration on the piecewise-linear constraint
+
+    z <- z + ( sum_i [L_i - z]_+  -  gamma ) / |{ i : L_i > z }|
+
+started from the all-active solution z0 = (sum_i L_i - gamma) / n.
+Because f(z) = sum [L_i - z]_+ - gamma is convex, decreasing and
+piecewise linear with n breakpoints, and f(z0) >= 0, the iterates
+increase monotonically and land *exactly* on the root after at most n
+steps (each step either finishes or crosses >= 1 breakpoint). We run
+`iters = n` by default so the kernel is bit-identical (up to float
+rounding) with the sort-based oracle in ref.py.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the FPGA's
+time-multiplexed MP modules become *rows* of a (rows, n) batch; BlockSpec
+tiles rows into VMEM-sized blocks; the kernel body is VPU-shaped
+(add/compare/select only — the paper's whole point is that there are no
+multiplies; the single divide-by-count is a shift in the fixed-point
+hardware model under rust/src/fixed/).
+
+interpret=True everywhere: CPU-PJRT cannot run Mosaic custom-calls, and
+interpret-mode pallas lowers to plain HLO that the rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid block. 512 rows x 64 lanes x 4 B = 128 KiB block — a
+# comfortable VMEM working set (<16 MiB) while keeping the grid short so
+# the lowered HLO stays compact. Tuned in the §Perf pass.
+DEFAULT_BLOCK_ROWS = 512
+
+
+def _mp_block_kernel(x_ref, g_ref, o_ref, *, iters: int):
+    """One block: x_ref (bm, n) rows, g_ref (1,) gamma, o_ref (bm,) out."""
+    x = x_ref[...]
+    gamma = g_ref[0]
+    n = x.shape[-1]
+    # all-active start: f(z0) >= 0 always (sum [L-z]_+ >= sum (L-z))
+    z = (jnp.sum(x, axis=-1) - gamma) / n
+
+    def body(_, z):
+        diff = x - z[:, None]
+        active = diff > 0.0
+        resid = jnp.sum(jnp.where(active, diff, 0.0), axis=-1) - gamma
+        count = jnp.sum(active.astype(x.dtype), axis=-1)
+        return z + resid / jnp.maximum(count, 1.0)
+
+    z = jax.lax.fori_loop(0, iters, body, z, unroll=False)
+    o_ref[...] = z
+
+
+def mp_rows(x: jnp.ndarray, gamma, *, iters: int | None = None,
+            block_rows: int = DEFAULT_BLOCK_ROWS) -> jnp.ndarray:
+    """Batched MP over the last axis of a 2-D rows tensor via Pallas.
+
+    x: (rows, n) float32; gamma: scalar. Returns (rows,) float32.
+    Rows are padded up to a multiple of `block_rows` (padding rows are
+    computed and discarded — they cost nothing extra within a block).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    rows, n = x.shape
+    if iters is None:
+        iters = n
+    g = jnp.reshape(jnp.asarray(gamma, jnp.float32), (1,))
+
+    bm = min(block_rows, max(rows, 1))
+    padded = -(-rows // bm) * bm  # ceil multiple
+    if padded != rows:
+        x = jnp.concatenate(
+            [x, jnp.zeros((padded - rows, n), x.dtype)], axis=0)
+
+    out = pl.pallas_call(
+        functools.partial(_mp_block_kernel, iters=iters),
+        grid=(padded // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=True,
+    )(x, g)
+    return out[:rows]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def mp(x: jnp.ndarray, gamma) -> jnp.ndarray:
+    """z = MP(x, gamma) over the last axis; any leading shape.
+
+    Forward runs the Pallas Newton kernel; backward uses the analytic
+    piecewise-linear sub-gradient (see ref.mp_grad_ref), so the op is
+    usable inside jax.grad for MP-aware training (paper §III, 'integrated
+    training using MP-based approximation').
+    """
+    return _mp_fwd_impl(x, gamma)
+
+
+def _mp_fwd_impl(x, gamma):
+    x = jnp.asarray(x, jnp.float32)
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    rows = 1
+    for d in lead:
+        rows *= d
+    z = mp_rows(x.reshape(rows, n), gamma)
+    return z.reshape(lead)
+
+
+def _mp_fwd(x, gamma):
+    z = _mp_fwd_impl(x, gamma)
+    return z, (jnp.asarray(x, jnp.float32), z)
+
+
+def _mp_bwd(res, g):
+    x, z = res
+    active = (x > z[..., None]).astype(x.dtype)
+    k = jnp.maximum(jnp.sum(active, axis=-1), 1.0)
+    dx = g[..., None] * active / k[..., None]
+    dgamma = jnp.sum(g * (-1.0 / k))
+    return dx, dgamma
+
+
+mp.defvjp(_mp_fwd, _mp_bwd)
+
+
+def mp_pair(a: jnp.ndarray, b: jnp.ndarray, gamma) -> jnp.ndarray:
+    """MP over two stacked operands (the z = MP([z+, z-], gamma_n)
+    normalisation of paper eq. 5). a, b same shape; returns that shape."""
+    return mp(jnp.stack([a, b], axis=-1), gamma)

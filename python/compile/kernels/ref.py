@@ -1,0 +1,84 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+`mp_ref` is the *exact* Margin Propagation operator computed by the
+sort-based reverse water-filling formula — the ground truth every other
+implementation (Pallas Newton kernel, rust float `mp::`, rust fixed-point
+`fixed::`) is validated against.
+
+Definition (paper §III, and [27]):
+
+    z = MP(L, gamma)  is the unique solution of  sum_i [L_i - z]_+ = gamma
+
+for gamma > 0. The map is piecewise linear in L: with L sorted descending
+and S_k the prefix sums, z = (S_k* - gamma) / k* where
+
+    k* = max{ k : k * L_(k) + gamma >= S_k }.
+
+This is the sparsemax support rule with gamma generalising the unit
+simplex constant.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mp_ref(x: jnp.ndarray, gamma) -> jnp.ndarray:
+    """Exact MP over the last axis. x: (..., n) -> (...)."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[-1]
+    xs = jnp.sort(x, axis=-1)[..., ::-1]  # descending
+    cs = jnp.cumsum(xs, axis=-1)
+    k = jnp.arange(1, n + 1, dtype=x.dtype)
+    # support rule: k * xs_k + gamma >= cs_k  (>= so gamma == 0 -> z = max)
+    feasible = k * xs + gamma >= cs
+    # k* = largest feasible k (feasible set is a prefix for convex pwl)
+    kstar = jnp.sum(feasible.astype(jnp.int32), axis=-1)
+    kstar = jnp.clip(kstar, 1, n)
+    gathered = jnp.take_along_axis(cs, (kstar - 1)[..., None], axis=-1)[..., 0]
+    z = (gathered - gamma) / kstar.astype(x.dtype)
+    return z
+
+
+def mp_grad_ref(x: jnp.ndarray, gamma) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Analytic sub-gradient of z = MP(x, gamma).
+
+    Returns (dz/dx, dz/dgamma):
+      dz/dx_i   = 1[x_i > z] / k      with k = |{i : x_i > z}|
+      dz/dgamma = -1 / k
+    """
+    z = mp_ref(x, gamma)
+    active = (x > z[..., None]).astype(x.dtype)
+    k = jnp.maximum(jnp.sum(active, axis=-1), 1.0)
+    return active / k[..., None], -1.0 / k
+
+
+def fir_direct_ref(sig: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Causal direct-form FIR: y[t] = sum_k h[k] sig[t-k], zero initial state.
+
+    sig: (T,), h: (M,) -> y: (T,). Reference for the windowed
+    implementations in filterbank.py (which carry explicit delay-line
+    state across frames).
+    """
+    sig = jnp.asarray(sig, jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    full = jnp.convolve(sig, h)  # length T + M - 1
+    return full[: sig.shape[0]]
+
+
+def mp_fir_ref(sig: jnp.ndarray, h: jnp.ndarray, gamma_f) -> jnp.ndarray:
+    """Reference MP-domain FIR (paper eq. 9), zero initial state.
+
+    y[t] = MP([h + w_t, -h - w_t], gf) - MP([h - w_t, -h + w_t], gf)
+    where w_t = (sig[t], sig[t-1], ..., sig[t-M+1]).
+    """
+    sig = jnp.asarray(sig, jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    M = h.shape[0]
+    T = sig.shape[0]
+    padded = jnp.concatenate([jnp.zeros((M - 1,), sig.dtype), sig])
+    # w[t, k] = sig[t - k]
+    win = jnp.stack([padded[M - 1 - k : M - 1 - k + T] for k in range(M)], axis=-1)
+    plus = jnp.concatenate([h[None, :] + win, -h[None, :] - win], axis=-1)
+    minus = jnp.concatenate([h[None, :] - win, -h[None, :] + win], axis=-1)
+    return mp_ref(plus, gamma_f) - mp_ref(minus, gamma_f)

@@ -1,0 +1,117 @@
+"""L2: the paper's MP kernel machine — inference and MP-aware training.
+
+Implements paper §III-B (eqs. 1-7) on top of the L1 Pallas MP kernel:
+
+    z+ = MP([w+ + K+, w- + K-, b+], gamma_1)          (eq. 3)
+    z- = MP([w+ + K-, w- + K+, b-], gamma_1)          (eq. 4)
+    z  = MP([z+, z-], gamma_n = 1)                    (eq. 5)
+    p+/- = [z+/- - z]_+ ,   p = p+ - p-               (eqs. 6-7)
+
+K is the standardised filter-bank feature vector Phi (paper Appendix A),
+so "feature extraction and kernel function are combined".
+
+Training (paper §III 'integrated training using MP-based approximation'):
+gradients flow through the MP custom_vjp (exact piecewise-linear
+sub-gradients), so the learned weights absorb the MP filtering
+approximation error. We train on the pre-normalisation margin
+d = z+ - z- with a logistic loss — the classification decision
+sign(p) == sign(d) is identical (z is a monotone tie-breaker between z+
+and z-), but d has non-vanishing sub-gradients outside the |z+ - z-| < 1
+linear region of eq. 5, which stabilises training; eq. 5-7 are still what
+inference reports. Gamma annealing is driven by the rust training driver
+(gamma_1 is a runtime input of the train-step artifact).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mp as mpk
+from . import config as C
+
+
+class Params(NamedTuple):
+    """One-vs-all MP kernel machine parameters (C heads, P features)."""
+
+    wp: jnp.ndarray  # (C, P)  w+
+    wm: jnp.ndarray  # (C, P)  w-
+    bp: jnp.ndarray  # (C,)    b+
+    bm: jnp.ndarray  # (C,)    b-
+
+
+def init_params(key, n_heads: int, n_features: int, scale: float = 0.1) -> Params:
+    kp, km = jax.random.split(key)
+    return Params(
+        wp=scale * jax.random.normal(kp, (n_heads, n_features), jnp.float32),
+        wm=scale * jax.random.normal(km, (n_heads, n_features), jnp.float32),
+        bp=jnp.zeros((n_heads,), jnp.float32),
+        bm=jnp.zeros((n_heads,), jnp.float32),
+    )
+
+
+def standardize(phi: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. 12. mu/sigma are training-set statistics computed by the
+    rust driver and passed as learned constants at inference."""
+    return (phi - mu) / (sigma + 1e-6)
+
+
+def margins(params: Params, k: jnp.ndarray, gamma_1) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(z+, z-) for a batch of standardised features k: (B, P) -> (B, C)."""
+    kp = k[:, None, :]      # K+  (B,1,P)
+    km = -k[:, None, :]     # K-
+    wp = params.wp[None]    # (1,C,P)
+    wm = params.wm[None]
+    B, Cn = k.shape[0], params.wp.shape[0]
+    bp = jnp.broadcast_to(params.bp[None, :, None], (B, Cn, 1))
+    bm = jnp.broadcast_to(params.bm[None, :, None], (B, Cn, 1))
+    plus = jnp.concatenate(
+        [jnp.broadcast_to(wp + kp, (B, Cn, k.shape[1])),
+         jnp.broadcast_to(wm + km, (B, Cn, k.shape[1])), bp], axis=-1)
+    minus = jnp.concatenate(
+        [jnp.broadcast_to(wp + km, (B, Cn, k.shape[1])),
+         jnp.broadcast_to(wm + kp, (B, Cn, k.shape[1])), bm], axis=-1)
+    return mpk.mp(plus, gamma_1), mpk.mp(minus, gamma_1)
+
+
+def decision(params: Params, k: jnp.ndarray, gamma_1):
+    """Full inference head (eqs. 2-7). k: (B, P) standardised features.
+
+    Returns (p, z+, z-) with p in [-1, 1], p = p+ - p-, p+ + p- = 1.
+    """
+    zp, zm = margins(params, k, gamma_1)
+    z = mpk.mp_pair(zp, zm, C.GAMMA_N)  # eq. 5
+    pp = jnp.maximum(zp - z, 0.0)       # eq. 7 (reverse water-filling)
+    pm = jnp.maximum(zm - z, 0.0)
+    return pp - pm, zp, zm
+
+
+def loss_fn(params: Params, k: jnp.ndarray, y: jnp.ndarray, gamma_1,
+            weight_decay: float = 1e-4) -> jnp.ndarray:
+    """Logistic loss on the margin d = z+ - z- (see module docstring).
+
+    k: (B, P) standardised features; y: (B, C) one-vs-all targets in {0,1}.
+    """
+    zp, zm = margins(params, k, gamma_1)
+    d = zp - zm
+    yy = 2.0 * y - 1.0  # {0,1} -> {-1,+1}
+    ce = jnp.mean(jax.nn.softplus(-yy * d))
+    reg = weight_decay * (jnp.mean(params.wp**2) + jnp.mean(params.wm**2))
+    return ce + reg
+
+
+def train_step(params: Params, k: jnp.ndarray, y: jnp.ndarray, lr, gamma_1):
+    """One SGD step; returns (new_params, loss). All-array signature so it
+    AOT-lowers to a single HLO the rust driver loops over."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, k, y, gamma_1)
+    new = Params(*(p - lr * g for p, g in zip(params, grads)))
+    return new, loss
+
+
+def accuracy(params: Params, k: jnp.ndarray, y: jnp.ndarray, gamma_1) -> jnp.ndarray:
+    """Per-head binary accuracy of sign(p). Returns (C,)."""
+    p, _, _ = decision(params, k, gamma_1)
+    pred = (p > 0.0).astype(jnp.float32)
+    return jnp.mean((pred == y).astype(jnp.float32), axis=0)

@@ -1,0 +1,180 @@
+"""L2 filterbank: windowing, streaming state-carry equivalence, MP path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import filterbank as fb
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_sig(rng, B, T):
+    return (rng.normal(size=(B, T)) * 0.5).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# windows / direct FIR
+# ---------------------------------------------------------------------------
+
+@given(
+    T=st.integers(4, 64),
+    taps=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_windows_zero_state_matches_convolution(T, taps, seed):
+    rng = np.random.default_rng(seed)
+    sig = _rand_sig(rng, 1, T)
+    h = rng.normal(size=(taps,)).astype(np.float32)
+    win, _ = fb.make_windows(jnp.asarray(sig), jnp.zeros((1, taps - 1), jnp.float32), taps)
+    y = np.asarray(fb.fir_bank(win, jnp.asarray(h[None, :])))[0, :, 0]
+    y_ref = np.asarray(ref.fir_direct_ref(jnp.asarray(sig[0]), jnp.asarray(h)))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_windows_state_carry_streaming_equivalence():
+    """Processing a signal in chunks with carried state == processing whole."""
+    rng = np.random.default_rng(21)
+    T, taps = 96, 8
+    sig = _rand_sig(rng, 2, T)
+    h = jnp.asarray(rng.normal(size=(3, taps)).astype(np.float32))
+
+    # whole-signal
+    win, _ = fb.make_windows(jnp.asarray(sig), jnp.zeros((2, taps - 1), jnp.float32), taps)
+    y_whole = np.asarray(fb.fir_bank(win, h))
+
+    # chunked
+    state = jnp.zeros((2, taps - 1), jnp.float32)
+    chunks = []
+    for c in range(0, T, 32):
+        win, state = fb.make_windows(jnp.asarray(sig[:, c : c + 32]), state, taps)
+        chunks.append(np.asarray(fb.fir_bank(win, h)))
+    y_chunks = np.concatenate(chunks, axis=1)
+    np.testing.assert_allclose(y_chunks, y_whole, rtol=1e-5, atol=1e-6)
+
+
+def test_window_newest_sample_first():
+    sig = jnp.asarray(np.arange(1, 7, dtype=np.float32)[None, :])
+    win, state = fb.make_windows(sig, jnp.zeros((1, 2), jnp.float32), 3)
+    # win[0, t] = [x[t], x[t-1], x[t-2]]
+    np.testing.assert_allclose(np.asarray(win[0, 2]), [3.0, 2.0, 1.0])
+    np.testing.assert_allclose(np.asarray(win[0, 0]), [1.0, 0.0, 0.0])
+    np.testing.assert_allclose(np.asarray(state[0]), [5.0, 6.0])  # oldest first
+
+
+# ---------------------------------------------------------------------------
+# MP filtering path
+# ---------------------------------------------------------------------------
+
+@given(
+    T=st.integers(4, 24),
+    taps=st.sampled_from([3, 8, 16]),
+    gamma=st.floats(0.2, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_mp_bank_matches_mp_fir_ref(T, taps, gamma, seed):
+    rng = np.random.default_rng(seed)
+    sig = _rand_sig(rng, 1, T)
+    h = rng.normal(size=(taps,)).astype(np.float32) * 0.3
+    win, _ = fb.make_windows(jnp.asarray(sig), jnp.zeros((1, taps - 1), jnp.float32), taps)
+    y = np.asarray(fb.mp_bank(win, jnp.asarray(h[None, :]), gamma))[0, :, 0]
+    y_ref = np.asarray(ref.mp_fir_ref(jnp.asarray(sig[0]), jnp.asarray(h), gamma))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_mp_bank_zero_signal_zero_output():
+    # symmetric operands => z+ == z- => y == 0
+    win = jnp.zeros((1, 5, 8), jnp.float32)
+    h = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8)).astype(np.float32))
+    y = np.asarray(fb.mp_bank(win, h, 1.0))
+    np.testing.assert_allclose(y, 0.0, atol=1e-6)
+
+
+def test_mp_bank_antisymmetry():
+    # swapping x -> -x swaps z+ and z-  =>  y -> -y
+    rng = np.random.default_rng(5)
+    win = jnp.asarray(rng.normal(size=(1, 4, 6)).astype(np.float32))
+    h = jnp.asarray(rng.normal(size=(2, 6)).astype(np.float32))
+    y1 = np.asarray(fb.mp_bank(win, h, 1.0))
+    y2 = np.asarray(fb.mp_bank(-win, h, 1.0))
+    np.testing.assert_allclose(y2, -y1, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# full frame pipeline
+# ---------------------------------------------------------------------------
+
+def _small_cfg():
+    O, F, BT, LT, T, B = 3, 2, 6, 4, 64, 2
+    rng = np.random.default_rng(33)
+    bp = jnp.asarray(rng.normal(size=(O, F, BT)).astype(np.float32) * 0.2)
+    lp = jnp.asarray(rng.normal(size=(O - 1, LT)).astype(np.float32) * 0.2)
+    return O, F, BT, LT, T, B, bp, lp
+
+
+def test_frame_features_shapes_and_state():
+    O, F, BT, LT, T, B, bp, lp = _small_cfg()
+    st0 = fb.zero_state(B, O, BT, LT)
+    rng = np.random.default_rng(2)
+    frame = jnp.asarray(_rand_sig(rng, B, T))
+    st1, phi = fb.frame_features(st0, frame, bp, lp, 1.0, mode="fir")
+    assert phi.shape == (B, O * F)
+    assert st1.bp.shape == (B, O, BT - 1)
+    assert st1.lp.shape == (B, O - 1, LT - 1)
+    assert np.all(np.asarray(phi) >= 0.0)  # HWR + sum is non-negative
+
+
+def test_frame_features_streaming_equivalence_fir():
+    """phi(whole clip) == sum of phi(frames) with carried state."""
+    O, F, BT, LT, T, B, bp, lp = _small_cfg()
+    rng = np.random.default_rng(8)
+    clip = jnp.asarray(_rand_sig(rng, B, 4 * T))
+
+    st_w = fb.zero_state(B, O, BT, LT)
+    _, phi_whole = fb.frame_features(st_w, clip, bp, lp, 1.0, mode="fir")
+
+    state = fb.zero_state(B, O, BT, LT)
+    acc = np.zeros((B, O * F), np.float32)
+    for f in range(4):
+        state, phi = fb.frame_features(
+            state, clip[:, f * T : (f + 1) * T], bp, lp, 1.0, mode="fir"
+        )
+        acc += np.asarray(phi)
+    np.testing.assert_allclose(acc, np.asarray(phi_whole), rtol=1e-4, atol=1e-4)
+
+
+def test_frame_features_streaming_equivalence_mp():
+    O, F, BT, LT, T, B, bp, lp = _small_cfg()
+    rng = np.random.default_rng(14)
+    clip = jnp.asarray(_rand_sig(rng, B, 2 * T))
+
+    st_w = fb.zero_state(B, O, BT, LT)
+    _, phi_whole = fb.frame_features(st_w, clip, bp, lp, 0.7, mode="mp")
+
+    state = fb.zero_state(B, O, BT, LT)
+    acc = np.zeros((B, O * F), np.float32)
+    for f in range(2):
+        state, phi = fb.frame_features(
+            state, clip[:, f * T : (f + 1) * T], bp, lp, 0.7, mode="mp"
+        )
+        acc += np.asarray(phi)
+    np.testing.assert_allclose(acc, np.asarray(phi_whole), rtol=1e-4, atol=1e-4)
+
+
+def test_frame_features_batch_rows_independent():
+    """Row b of a batched call == the same clip processed alone (B=1)."""
+    O, F, BT, LT, T, B, bp, lp = _small_cfg()
+    rng = np.random.default_rng(17)
+    frame = jnp.asarray(_rand_sig(rng, B, T))
+    _, phi_b = fb.frame_features(fb.zero_state(B, O, BT, LT), frame, bp, lp, 1.0, mode="mp")
+    for b in range(B):
+        _, phi_1 = fb.frame_features(
+            fb.zero_state(1, O, BT, LT), frame[b : b + 1], bp, lp, 1.0, mode="mp"
+        )
+        np.testing.assert_allclose(
+            np.asarray(phi_b[b]), np.asarray(phi_1[0]), rtol=1e-4, atol=1e-4
+        )

@@ -1,0 +1,129 @@
+"""L2 kernel machine: eqs. 2-7 invariants, training convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params(seed, C, P, scale=0.3):
+    return M.init_params(jax.random.PRNGKey(seed), C, P, scale)
+
+
+# ---------------------------------------------------------------------------
+# decision invariants (paper eqs. 5-7)
+# ---------------------------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    B=st.integers(1, 6),
+    C=st.sampled_from([2, 10]),
+    P=st.sampled_from([4, 30]),
+    gamma=st.floats(0.5, 8.0),
+)
+@settings(max_examples=15, deadline=None)
+def test_p_plus_p_minus_sum_to_one(seed, B, C, P, gamma):
+    rng = np.random.default_rng(seed)
+    params = _params(seed, C, P)
+    k = jnp.asarray(rng.normal(size=(B, P)).astype(np.float32))
+    p, zp, zm = M.decision(params, k, gamma)
+    from compile.kernels import mp as mpk
+
+    z = mpk.mp_pair(zp, zm, 1.0)
+    pp = np.maximum(np.asarray(zp - z), 0.0)
+    pm = np.maximum(np.asarray(zm - z), 0.0)
+    # paper eq. 6 side condition: p+ + p- = gamma_n = 1, p in [-1, 1]
+    np.testing.assert_allclose(pp + pm, 1.0, rtol=1e-4, atol=1e-4)
+    assert np.all(np.asarray(p) <= 1.0 + 1e-5)
+    assert np.all(np.asarray(p) >= -1.0 - 1e-5)
+    np.testing.assert_allclose(np.asarray(p), pp - pm, rtol=1e-5, atol=1e-5)
+
+
+def test_decision_sign_matches_margin_sign():
+    """sign(p) == sign(z+ - z-) — the training surrogate is decision-
+    equivalent to the paper's normalised output."""
+    rng = np.random.default_rng(3)
+    params = _params(3, 10, 30)
+    k = jnp.asarray(rng.normal(size=(16, 30)).astype(np.float32))
+    p, zp, zm = M.decision(params, k, 4.0)
+    d = np.asarray(zp - zm)
+    p = np.asarray(p)
+    mask = np.abs(d) > 1e-5
+    assert np.all(np.sign(p[mask]) == np.sign(d[mask]))
+
+
+def test_standardize():
+    phi = jnp.asarray([2.0, 4.0], jnp.float32)
+    mu = jnp.asarray([1.0, 1.0], jnp.float32)
+    sig = jnp.asarray([1.0, 3.0], jnp.float32)
+    out = np.asarray(M.standardize(phi, mu, sig))
+    np.testing.assert_allclose(out, [1.0, 1.0], rtol=1e-4)
+
+
+def test_swap_weights_flips_decision():
+    """Swapping (w+, b+) with (w-, b-) swaps z+ and z- => p -> -p."""
+    rng = np.random.default_rng(5)
+    params = _params(5, 2, 8)
+    swapped = M.Params(params.wm, params.wp, params.bm, params.bp)
+    k = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    p1, zp1, zm1 = M.decision(params, k, 2.0)
+    p2, zp2, zm2 = M.decision(swapped, k, 2.0)
+    np.testing.assert_allclose(np.asarray(zp1), np.asarray(zm2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p1), -np.asarray(p2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def _toy_problem(seed=0, B=64, P=8):
+    """Linearly separable two-cluster data, one head."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, size=(B,)).astype(np.float32)
+    centers = np.where(y[:, None] > 0.5, 1.0, -1.0) * np.linspace(0.5, 1.5, P)
+    k = (centers + 0.3 * rng.normal(size=(B, P))).astype(np.float32)
+    return jnp.asarray(k), jnp.asarray(y[:, None])
+
+
+def test_train_step_decreases_loss():
+    k, y = _toy_problem()
+    params = _params(1, 1, 8, scale=0.05)
+    l0 = float(M.loss_fn(params, k, y, 4.0))
+    for _ in range(30):
+        params, loss = M.train_step(params, k, y, 0.2, 4.0)
+    assert float(loss) < l0 * 0.8
+
+
+def test_training_reaches_high_accuracy_on_separable_data():
+    k, y = _toy_problem(seed=2)
+    params = _params(2, 1, 8, scale=0.05)
+    for _ in range(150):
+        params, _ = M.train_step(params, k, y, 0.2, 4.0)
+    acc = float(M.accuracy(params, k, y, 4.0)[0])
+    assert acc >= 0.95
+
+
+def test_gamma_annealing_path():
+    """Training with decreasing gamma_1 (paper: 'gamma annealing') still
+    converges — the train-step artifact takes gamma as a runtime input."""
+    k, y = _toy_problem(seed=4)
+    params = _params(4, 1, 8, scale=0.05)
+    for i in range(120):
+        gamma = 8.0 * (0.97**i) + 1.0
+        params, loss = M.train_step(params, k, y, 0.2, gamma)
+    acc = float(M.accuracy(params, k, y, 1.0)[0])
+    assert acc >= 0.9
+
+
+def test_train_step_multihead_shapes():
+    rng = np.random.default_rng(6)
+    params = _params(6, 10, 30)
+    k = jnp.asarray(rng.normal(size=(64, 30)).astype(np.float32))
+    y = jnp.asarray((rng.random((64, 10)) > 0.5).astype(np.float32))
+    new, loss = M.train_step(params, k, y, 0.1, 4.0)
+    assert new.wp.shape == (10, 30) and new.bm.shape == (10,)
+    assert np.isfinite(float(loss))

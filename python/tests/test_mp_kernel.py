@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas MP kernel vs the exact sort-based oracle.
+
+The hypothesis sweeps here are the CORE correctness signal for the whole
+stack — the rust float/fixed implementations and the FPGA model are all
+transitively validated against ref.mp_ref through these tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mp as mpk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def exact(x, gamma):
+    return np.asarray(ref.mp_ref(jnp.asarray(x), gamma))
+
+
+# ---------------------------------------------------------------------------
+# oracle self-consistency: mp_ref solves the defining constraint
+# ---------------------------------------------------------------------------
+
+@given(
+    rows=st.integers(1, 8),
+    n=st.integers(2, 64),
+    gamma=st.floats(1e-3, 50.0),
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_ref_satisfies_constraint(rows, n, gamma, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(rows, n)) * scale).astype(np.float32)
+    z = exact(x, gamma)
+    resid = np.sum(np.maximum(x - z[:, None], 0.0), axis=-1)
+    np.testing.assert_allclose(resid, gamma, rtol=2e-4, atol=2e-4 * scale)
+
+
+def test_ref_gamma_zero_is_max():
+    x = np.array([[1.0, -2.0, 3.0, 0.5]], np.float32)
+    assert exact(x, 0.0)[0] == pytest.approx(3.0)
+
+
+def test_ref_large_gamma_all_active():
+    x = np.array([[1.0, 2.0, 3.0, 4.0]], np.float32)
+    gamma = 1000.0
+    # all-active segment: z = (sum - gamma) / n
+    assert exact(x, gamma)[0] == pytest.approx((10.0 - gamma) / 4.0, rel=1e-6)
+
+
+def test_ref_ties():
+    x = np.full((1, 8), 2.5, np.float32)
+    z = exact(x, 4.0)
+    assert z[0] == pytest.approx(2.5 - 0.5, rel=1e-6)  # 8*(2.5-z) = 4
+
+
+def test_ref_shift_invariance():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(5, 16)).astype(np.float32)
+    z0 = exact(x, 2.0)
+    z1 = exact(x + 10.0, 2.0)
+    np.testing.assert_allclose(z1, z0 + 10.0, rtol=1e-5, atol=1e-5)
+
+
+def test_ref_scale_equivariance():
+    # MP(a*L, a*gamma) = a*MP(L, gamma)
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(5, 16)).astype(np.float32)
+    a = 3.0
+    np.testing.assert_allclose(
+        exact(a * x, a * 2.0), a * exact(x, 2.0), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@given(
+    rows=st.integers(1, 40),
+    n=st.sampled_from([2, 3, 8, 12, 16, 31, 32, 61, 64]),
+    gamma=st.floats(1e-3, 30.0),
+    scale=st.floats(0.05, 20.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_kernel_matches_oracle(rows, n, gamma, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(rows, n)) * scale).astype(np.float32)
+    z = np.asarray(mpk.mp(jnp.asarray(x), gamma))
+    np.testing.assert_allclose(z, exact(x, gamma), rtol=3e-5, atol=3e-5 * scale)
+
+
+def test_kernel_multidim_leading_shape():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(3, 4, 5, 12)).astype(np.float32)
+    z = np.asarray(mpk.mp(jnp.asarray(x), 1.3))
+    assert z.shape == (3, 4, 5)
+    np.testing.assert_allclose(
+        z.reshape(-1), exact(x.reshape(-1, 12), 1.3), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_kernel_block_padding_boundary():
+    # rows just around the block size exercise the padding path
+    for rows in (511, 512, 513, 1024, 1025):
+        rng = np.random.default_rng(rows)
+        x = rng.normal(size=(rows, 8)).astype(np.float32)
+        z = np.asarray(mpk.mp_rows(jnp.asarray(x), 2.0))
+        np.testing.assert_allclose(z, exact(x, 2.0), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_constant_rows():
+    x = np.zeros((4, 16), np.float32)
+    z = np.asarray(mpk.mp(jnp.asarray(x), 4.0))
+    np.testing.assert_allclose(z, -4.0 / 16.0, rtol=1e-6)
+
+
+def test_mp_pair_matches_stacked():
+    rng = np.random.default_rng(9)
+    a = rng.normal(size=(6,)).astype(np.float32)
+    b = rng.normal(size=(6,)).astype(np.float32)
+    z = np.asarray(mpk.mp_pair(jnp.asarray(a), jnp.asarray(b), 1.0))
+    zr = exact(np.stack([a, b], -1), 1.0)
+    np.testing.assert_allclose(z, zr, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradients
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1), gamma=st.floats(0.1, 5.0))
+@settings(max_examples=10, deadline=None)
+def test_grad_matches_numeric(seed, gamma):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(2, 10)).astype(np.float32)
+
+    def f(x, g):
+        return jnp.sum(mpk.mp(x, g) ** 2)
+
+    gx = np.asarray(jax.grad(f, argnums=0)(jnp.asarray(x), gamma))
+    eps = 1e-3
+    for i in range(2):
+        for j in range(0, 10, 3):
+            xp, xm = x.copy(), x.copy()
+            xp[i, j] += eps
+            xm[i, j] -= eps
+            num = (f(jnp.asarray(xp), gamma) - f(jnp.asarray(xm), gamma)) / (2 * eps)
+            assert abs(float(num) - gx[i, j]) < 5e-2
+
+
+def test_grad_gamma():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+
+    def f(g):
+        return jnp.sum(mpk.mp(x, g))
+
+    g0 = 1.5
+    ga = float(jax.grad(f)(g0))
+    eps = 1e-3
+    num = (float(f(g0 + eps)) - float(f(g0 - eps))) / (2 * eps)
+    assert abs(ga - num) < 1e-2
+
+
+def test_grad_analytic_formula():
+    rng = np.random.default_rng(13)
+    x = rng.normal(size=(4, 12)).astype(np.float32)
+    dx_ref, dg_ref = ref.mp_grad_ref(jnp.asarray(x), 2.0)
+
+    def f(x, g):
+        return jnp.sum(mpk.mp(x, g))
+
+    dx = jax.grad(f, argnums=0)(jnp.asarray(x), 2.0)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref), rtol=1e-5, atol=1e-6)

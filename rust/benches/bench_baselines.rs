@@ -1,0 +1,36 @@
+//! Baseline-system benches: SMO SVM training/prediction and the CAR-IHC
+//! cascade — the comparison costs behind Tables II-IV.
+
+use infilter::bench_util::Bench;
+use infilter::carihc::CarIhc;
+use infilter::svm::{self, Kernel, SmoConfig};
+use infilter::util::prng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("bench_baselines");
+    let mut rng = Pcg32::new(5);
+
+    // SVM on 30-dim features
+    let n = 200;
+    let xs: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let c = if i % 2 == 0 { 1.0 } else { -1.0 };
+            (0..30).map(|_| (c + rng.normal() * 0.8) as f32).collect()
+        })
+        .collect();
+    let ys: Vec<bool> = (0..n).map(|i| i % 2 == 0).collect();
+    let kernel = Kernel::Rbf { gamma: 0.05 };
+    b.run("svm/smo_train/n200_d30", || {
+        svm::train(&xs, &ys, kernel, &SmoConfig::default())
+    });
+    let model = svm::train(&xs, &ys, kernel, &SmoConfig::default());
+    b.run("svm/predict/d30", || model.predict(&xs[0]));
+
+    // CAR-IHC cascade over a 1 s clip
+    let clip: Vec<f32> = rng.normal_vec(16384).iter().map(|x| 0.25 * x).collect();
+    let mut car = CarIhc::paper_default();
+    b.run_with_throughput("carihc/features_clip16384", Some((1.024, "audio_s")), || {
+        car.features(&clip)
+    });
+    b.finish();
+}

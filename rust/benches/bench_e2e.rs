@@ -1,0 +1,61 @@
+//! End-to-end benches: full-clip classification (features + inference
+//! through the HLO artifacts) and the streaming coordinator's serving
+//! throughput — the headline realtime-factor numbers in EXPERIMENTS.md.
+
+use infilter::bench_util::Bench;
+use infilter::coordinator::server::{serve, ServeConfig};
+use infilter::datasets::esc10;
+use infilter::mp::machine::{Params, Standardizer};
+use infilter::runtime::engine::ModelEngine;
+use infilter::train::TrainedModel;
+use infilter::util::prng::Pcg32;
+use std::path::Path;
+
+fn main() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_e2e: artifacts not built, skipping");
+        return;
+    }
+    let mut b = Bench::new("bench_e2e");
+    let mut eng = ModelEngine::open(Path::new("artifacts"), 1.0).unwrap();
+    let clip_len = eng.frame_len() * eng.clip_frames();
+    let mut rng = Pcg32::new(6);
+    let model = TrainedModel {
+        classes: (0..10).map(|c| format!("c{c}")).collect(),
+        params: Params {
+            wp: (0..10).map(|_| rng.normal_vec(30)).collect(),
+            wm: (0..10).map(|_| rng.normal_vec(30)).collect(),
+            bp: vec![0.0; 10],
+            bm: vec![0.0; 10],
+        },
+        std: Standardizer {
+            mu: vec![50.0; 30],
+            sigma: vec![20.0; 30],
+        },
+        gamma_f: 1.0,
+        gamma_1: 4.0,
+    };
+
+    let clip = esc10::synth_clip(7, 3, 0);
+    let samples = &clip.samples[..clip_len];
+    // full single-clip path: features (8 frames) + inference
+    eng.clip_features(samples).unwrap();
+    b.run_with_throughput("e2e/classify_one_clip", Some((1.024, "audio_s")), || {
+        let phi = eng.clip_features(samples).unwrap();
+        eng.inference(&model.params, &model.std, &phi, 4.0).unwrap()
+    });
+
+    // serving throughput, 8 streams x 1 clip, max rate (one number per
+    // bench sample is a full serve run — keep the workload small)
+    std::env::set_var("INFILTER_BENCH_QUICK", "1");
+    let cfg = ServeConfig {
+        n_streams: 8,
+        clips_per_stream: 1,
+        seed: 1,
+        ..Default::default()
+    };
+    b.run_with_throughput("e2e/serve_8streams_1clip", Some((8.0 * 1.024, "audio_s")), || {
+        serve(&mut eng, &model, &cfg).unwrap()
+    });
+    b.finish();
+}

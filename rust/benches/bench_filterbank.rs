@@ -1,0 +1,57 @@
+//! Frame-feature path benches: the coordinator hot path (HLO b1 vs b8 —
+//! the dynamic-batcher crossover), the rust float MP bank, the
+//! conventional FIR bank and the direct high-order bank (Fig. 4 cost
+//! story).
+
+use infilter::bench_util::Bench;
+use infilter::dsp::multirate::{BandPlan, MultirateFirBank};
+use infilter::features;
+use infilter::mp::filter::MpMultirateBank;
+use infilter::runtime::engine::ModelEngine;
+use infilter::util::prng::Pcg32;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::new("bench_filterbank");
+    let plan = BandPlan::paper_default();
+    let mut rng = Pcg32::new(2);
+    let frame: Vec<f32> = rng.normal_vec(2048).iter().map(|x| 0.3 * x).collect();
+
+    // rust banks, one 2048-sample frame (128 ms of audio)
+    let mut fir = MultirateFirBank::new(&plan);
+    b.run_with_throughput("bank/rust_fir_multirate/frame2048", Some((0.128, "audio_s")), || {
+        fir.process(&frame)
+    });
+    let mut mp = MpMultirateBank::new(&plan, 1.0);
+    b.run_with_throughput("bank/rust_mp_float/frame2048", Some((0.128, "audio_s")), || {
+        mp.process(&frame)
+    });
+    b.run("bank/rust_direct_orders15to200/frame2048", || {
+        features::direct_features(&plan, &frame)
+    });
+
+    // HLO paths
+    if Path::new("artifacts/manifest.json").exists() {
+        let mut eng = ModelEngine::open(Path::new("artifacts"), 1.0).unwrap();
+        let mut st = eng.zero_state();
+        eng.mp_frame_features(&mut st, &frame).unwrap(); // warm compile
+        b.run_with_throughput("bank/hlo_b1/frame2048", Some((0.128, "audio_s")), || {
+            eng.mp_frame_features(&mut st, &frame).unwrap()
+        });
+        let mut states: Vec<_> = (0..8).map(|_| eng.zero_state()).collect();
+        let frames: Vec<&[f32]> = (0..8).map(|_| frame.as_slice()).collect();
+        eng.mp_frame_features_b8(&mut states, &frames).unwrap();
+        b.run_with_throughput(
+            "bank/hlo_b8/8x_frame2048",
+            Some((8.0 * 0.128, "audio_s")),
+            || eng.mp_frame_features_b8(&mut states, &frames).unwrap(),
+        );
+        // conventional-FIR HLO baseline
+        let mut st2 = eng.zero_state();
+        eng.fir_frame_features(&mut st2, &frame).unwrap();
+        b.run_with_throughput("bank/hlo_fir_b1/frame2048", Some((0.128, "audio_s")), || {
+            eng.fir_frame_features(&mut st2, &frame).unwrap()
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,45 @@
+//! Fixed-point hardware-model benches: the Fig. 8 / Table I datapath
+//! costs — integer MP filter-bank accumulate per clip, quantisation,
+//! CSD standardisation.
+
+use infilter::bench_util::Bench;
+use infilter::dsp::multirate::BandPlan;
+use infilter::fixed::q::{CsdScale, QFormat};
+use infilter::fixed::{FixedConfig, FixedPipeline};
+use infilter::mp::machine::{Params, Standardizer};
+use infilter::util::prng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("bench_fixed");
+    let mut rng = Pcg32::new(4);
+    let plan = BandPlan::paper_default();
+    let clip: Vec<f32> = rng.normal_vec(16384).iter().map(|x| 0.25 * x).collect();
+    let train_phi = vec![rng.uniform_vec(30, 10.0, 100.0); 8];
+    let std = Standardizer {
+        mu: rng.uniform_vec(30, 20.0, 60.0),
+        sigma: rng.uniform_vec(30, 5.0, 20.0),
+    };
+    for bits in [8u32, 12] {
+        let pipe = FixedPipeline::build(
+            &plan, 1.0, 4.0,
+            &Params::zeros(2, 30), &std, &train_phi,
+            FixedConfig::with_bits(bits),
+        );
+        b.run_with_throughput(
+            &format!("fixed/accumulate_clip16384/w{bits}"),
+            Some((1.024, "audio_s")),
+            || pipe.accumulate(&clip),
+        );
+        let acc = pipe.accumulate(&clip);
+        b.run(&format!("fixed/standardize/w{bits}"), || {
+            pipe.standardize(&acc)
+        });
+    }
+    let q = QFormat::new(8, 6);
+    b.run_with_throughput("fixed/quantize_16k_samples", Some((16384.0, "samples")), || {
+        q.quantize_vec(&clip)
+    });
+    let csd = CsdScale::approximate(0.731, 3);
+    b.run("fixed/csd_apply", || csd.apply(12345));
+    b.finish();
+}

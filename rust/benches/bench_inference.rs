@@ -1,0 +1,68 @@
+//! Inference-engine benches: the MP kernel machine head in float rust,
+//! integer hardware model, and through the HLO artifacts (single +
+//! batched eval) — the per-clip decision cost of Tables III/IV.
+
+use infilter::bench_util::Bench;
+use infilter::fixed::{FixedConfig, FixedPipeline};
+use infilter::mp::machine::{decide, Params, Standardizer};
+use infilter::runtime::engine::ModelEngine;
+use infilter::util::prng::Pcg32;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::new("bench_inference");
+    let mut rng = Pcg32::new(3);
+    let p = 30;
+    let mk_params = |heads: usize, rng: &mut Pcg32| Params {
+        wp: (0..heads).map(|_| rng.normal_vec(p)).collect(),
+        wm: (0..heads).map(|_| rng.normal_vec(p)).collect(),
+        bp: rng.normal_vec(heads),
+        bm: rng.normal_vec(heads),
+    };
+    let params10 = mk_params(10, &mut rng);
+    let params2 = mk_params(2, &mut rng);
+    let k = rng.normal_vec(p);
+
+    b.run("infer/rust_float/c10", || decide(&params10, &k, 4.0));
+    b.run("infer/rust_float/c2", || decide(&params2, &k, 4.0));
+
+    // integer inference engine
+    let std = Standardizer {
+        mu: vec![0.0; p],
+        sigma: vec![1.0; p],
+    };
+    let train_phi = vec![rng.uniform_vec(p, 0.0, 100.0); 8];
+    let pipe = FixedPipeline::build(
+        &infilter::dsp::multirate::BandPlan::paper_default(),
+        1.0, 4.0, &params10, &std, &train_phi, FixedConfig::with_bits(8),
+    );
+    let kq: Vec<i64> = k.iter().map(|&x| (x * 16.0) as i64).collect();
+    b.run("infer/int8_hw_model/c10", || pipe.infer(&kq));
+
+    if Path::new("artifacts/manifest.json").exists() {
+        let mut eng = ModelEngine::open(Path::new("artifacts"), 1.0).unwrap();
+        let phi = rng.uniform_vec(p, 0.0, 100.0);
+        let st = Standardizer {
+            mu: rng.uniform_vec(p, 20.0, 60.0),
+            sigma: rng.uniform_vec(p, 5.0, 20.0),
+        };
+        eng.inference(&params10, &st, &phi, 4.0).unwrap();
+        b.run("infer/hlo_single/c10", || {
+            eng.inference(&params10, &st, &phi, 4.0).unwrap()
+        });
+        let rows: Vec<Vec<f32>> = (0..64).map(|_| rng.normal_vec(p)).collect();
+        eng.eval_margins(&params10, &rows, 4.0).unwrap();
+        b.run_with_throughput("infer/hlo_eval_batch64/c10", Some((64.0, "clips")), || {
+            eng.eval_margins(&params10, &rows, 4.0).unwrap()
+        });
+        // train step (the driver's unit cost)
+        let mut pm = params10.clone();
+        let kb = rng.normal_vec(64 * p);
+        let yb = rng.uniform_vec(64 * 10, 0.0, 1.0);
+        eng.train_step(&mut pm, &kb, &yb, 0.1, 4.0).unwrap();
+        b.run("train/hlo_train_step/c10_b64", || {
+            eng.train_step(&mut pm, &kb, &yb, 0.1, 4.0).unwrap()
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,49 @@
+//! L1 core-operator microbenches: the MP operator in every
+//! implementation (rust exact sort, rust Newton, integer shift-Newton,
+//! and the AOT `mp_op` HLO batch) — the unit costs behind every
+//! table/figure.
+
+use infilter::bench_util::Bench;
+use infilter::fixed::mp_int;
+use infilter::mp;
+use infilter::util::prng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("bench_mp");
+    let mut rng = Pcg32::new(1);
+
+    for n in [8usize, 32, 61, 128] {
+        let xs = rng.normal_vec(n);
+        b.run(&format!("mp/exact_sort/n{n}"), || mp::mp(&xs, 1.5));
+        b.run(&format!("mp/newton_n_iters/n{n}"), || {
+            mp::mp_newton(&xs, 1.5, n)
+        });
+        b.run(&format!("mp/newton_8_iters/n{n}"), || {
+            mp::mp_newton(&xs, 1.5, 8)
+        });
+        let q: Vec<i64> = xs.iter().map(|&x| (x * 1024.0) as i64).collect();
+        let iters = mp_int::default_iters(n, 10);
+        b.run(&format!("mp/int_shift_newton/n{n}"), || {
+            mp_int::mp_int(&q, 1536, iters)
+        });
+    }
+
+    // eq. 9 filter step (2 MP evals over 2M)
+    let h: Vec<i64> = rng.normal_vec(16).iter().map(|&x| (x * 256.0) as i64).collect();
+    let w: Vec<i64> = rng.normal_vec(16).iter().map(|&x| (x * 256.0) as i64).collect();
+    let mut scratch = vec![0i64; 32];
+    b.run("mp/int_fir_step/taps16", || {
+        mp_int::mp_fir_step(&h, &w, 256, 22, &mut scratch)
+    });
+
+    // HLO batched op (256 rows x 32) if artifacts exist
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut rt = infilter::runtime::Runtime::open(std::path::Path::new("artifacts")).unwrap();
+        let x = rng.normal_vec(256 * 32);
+        rt.call("mp_op", &[x.clone(), vec![1.0]]).unwrap(); // warm compile
+        b.run_with_throughput("mp/hlo_mp_op/rows256_n32", Some((256.0, "rows")), || {
+            rt.call("mp_op", &[x.clone(), vec![1.0]]).unwrap()
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,175 @@
+//! Custom micro-benchmark harness (criterion is unavailable offline; see
+//! DESIGN.md §4). Used by `cargo bench` targets under rust/benches/.
+//!
+//! Usage inside a `harness = false` bench binary:
+//! ```ignore
+//! let mut b = bench_util::Bench::new("bench_mp");
+//! b.run("mp/exact/n32", || mp::mp(&xs, 1.0));
+//! b.finish();
+//! ```
+//! Each case is warmed up, then timed over adaptive batches until the
+//! measurement window is filled; median / p95 / MAD of per-iteration
+//! times are reported and appended to results/bench.jsonl.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// minimum timed samples (batches)
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // INFILTER_BENCH_QUICK=1 trims the windows for CI-style runs
+        if std::env::var("INFILTER_BENCH_QUICK").is_ok() {
+            BenchConfig {
+                warmup: Duration::from_millis(50),
+                measure: Duration::from_millis(200),
+                min_samples: 10,
+            }
+        } else {
+            BenchConfig {
+                warmup: Duration::from_millis(300),
+                measure: Duration::from_secs(2),
+                min_samples: 20,
+            }
+        }
+    }
+}
+
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub mad_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+pub struct Bench {
+    pub suite: String,
+    pub cfg: BenchConfig,
+    pub results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        Bench {
+            suite: suite.to_string(),
+            cfg: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should return something observable (black-boxed).
+    pub fn run<R, F: FnMut() -> R>(&mut self, name: &str, f: F) {
+        self.run_with_throughput(name, None, f);
+    }
+
+    /// Like `run`, with a throughput annotation: `items` processed per
+    /// call, reported as items/s.
+    pub fn run_with_throughput<R, F: FnMut() -> R>(
+        &mut self,
+        name: &str,
+        items: Option<(f64, &'static str)>,
+        mut f: F,
+    ) {
+        // warmup + batch-size calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.cfg.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.cfg.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        // target ~30 samples in the measure window
+        let batch = ((self.cfg.measure.as_secs_f64() / 30.0 / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::new();
+        let mut total_iters = 0u64;
+        let t1 = Instant::now();
+        while t1.elapsed() < self.cfg.measure || samples.len() < self.cfg.min_samples {
+            let s = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(s.elapsed().as_secs_f64() * 1e9 / batch as f64);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        let median = stats::median(&samples);
+        let p95 = stats::percentile(&samples, 95.0);
+        let devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        let mad = stats::median(&devs);
+        let thr = items.map(|(n, unit)| (n / (median / 1e9), unit));
+        let line = match thr {
+            Some((rate, unit)) => format!(
+                "{:-44} {:>12.1} ns/iter (p95 {:>12.1}, mad {:>8.1})  {:>14.0} {}/s",
+                name, median, p95, mad, rate, unit
+            ),
+            None => format!(
+                "{:-44} {:>12.1} ns/iter (p95 {:>12.1}, mad {:>8.1})",
+                name, median, p95, mad
+            ),
+        };
+        println!("{line}");
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: median,
+            p95_ns: p95,
+            mad_ns: mad,
+            throughput: thr,
+        });
+    }
+
+    /// Print the footer and append JSONL records to results/bench.jsonl.
+    pub fn finish(&self) {
+        let path = std::path::Path::new("results").join("bench.jsonl");
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let mut lines = String::new();
+        for r in &self.results {
+            let j = Json::obj(vec![
+                ("suite", Json::Str(self.suite.clone())),
+                ("name", Json::Str(r.name.clone())),
+                ("median_ns", Json::Num(r.median_ns)),
+                ("p95_ns", Json::Num(r.p95_ns)),
+                ("mad_ns", Json::Num(r.mad_ns)),
+                ("iters", Json::Num(r.iters as f64)),
+            ]);
+            lines.push_str(&j.to_string());
+            lines.push('\n');
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            let _ = f.write_all(lines.as_bytes());
+        }
+        println!("[{}] {} cases", self.suite, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        std::env::set_var("INFILTER_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let xs: Vec<f64> = (0..1000).map(f64::from).collect();
+        b.run("sum1000", || xs.iter().sum::<f64>());
+        assert_eq!(b.results.len(), 1);
+        let r = &b.results[0];
+        assert!(r.median_ns > 10.0 && r.median_ns < 1e7, "{}", r.median_ns);
+        assert!(r.iters > 0);
+    }
+}

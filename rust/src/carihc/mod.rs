@@ -1,0 +1,224 @@
+//! CAR-IHC cochlear front end baseline (paper Table II/III "CAR-IHC IIR
+//! and SVM", i.e. the [6] comparison system).
+//!
+//! Simplified CAR (Cascade of Asymmetric Resonators) model: a chain of
+//! 30 second-order resonator sections with Greenwood-spaced pole
+//! frequencies descending base -> apex; each section's output is tapped
+//! into an IHC stage (half-wave rectification + one-pole low-pass, the
+//! membrane capacitance). Per-section accumulated IHC output over a clip
+//! is the 30-dim feature vector — same shape and role as the paper's
+//! in-filter kernel, so the same classifiers compare head-to-head.
+
+use crate::dsp::greenwood;
+
+/// One asymmetric resonator section (direct-form-II biquad) + IHC tap.
+#[derive(Clone, Debug)]
+pub struct Section {
+    // biquad coefficients
+    b0: f64,
+    b1: f64,
+    b2: f64,
+    a1: f64,
+    a2: f64,
+    // state
+    z1: f64,
+    z2: f64,
+    // IHC low-pass state + coefficient
+    ihc: f64,
+    ihc_a: f64,
+}
+
+impl Section {
+    /// Resonator at pole frequency `fc` (Hz) with quality factor `q`,
+    /// sampled at `fs`. The zero pair sits half an octave above the pole
+    /// (the CAR "asymmetry": steep high side, gentle low side).
+    pub fn new(fc: f64, q: f64, fs: f64, ihc_cut: f64) -> Section {
+        use std::f64::consts::PI;
+        let theta = 2.0 * PI * fc / fs;
+        let r = 1.0 - theta / (2.0 * q);
+        let r = r.clamp(0.0, 0.9995);
+        // poles at r * e^{+-j theta}
+        let a1 = -2.0 * r * theta.cos();
+        let a2 = r * r;
+        // zeros half an octave up, slightly inside the unit circle
+        let theta_z = (theta * 1.4142).min(PI * 0.95);
+        let rz = 0.9;
+        let b0 = 1.0;
+        let b1 = -2.0 * rz * theta_z.cos();
+        let b2 = rz * rz;
+        // resonant peaking: gain ~2 at the pole frequency, so the
+        // travelling wave is locally amplified at its place (tonotopy);
+        // off-resonance the cascade's zeros attenuate what has passed
+        let gain = biquad_gain_at(b0, b1, b2, a1, a2, theta);
+        let g = 2.0 / gain.max(1e-9);
+        let ihc_a = 1.0 - (-2.0 * PI * ihc_cut / fs).exp();
+        Section {
+            b0: b0 * g,
+            b1: b1 * g,
+            b2: b2 * g,
+            a1,
+            a2,
+            z1: 0.0,
+            z2: 0.0,
+            ihc: 0.0,
+            ihc_a,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.z1 = 0.0;
+        self.z2 = 0.0;
+        self.ihc = 0.0;
+    }
+
+    /// One sample through the resonator; returns (cascade_out, ihc_out).
+    #[inline]
+    pub fn step(&mut self, x: f64) -> (f64, f64) {
+        // direct form II transposed
+        let y = self.b0 * x + self.z1;
+        self.z1 = self.b1 * x - self.a1 * y + self.z2;
+        self.z2 = self.b2 * x - self.a2 * y;
+        // IHC: half-wave rectify + membrane low pass
+        let rect = y.max(0.0);
+        self.ihc += self.ihc_a * (rect - self.ihc);
+        (y, self.ihc)
+    }
+}
+
+fn biquad_gain_at(b0: f64, b1: f64, b2: f64, a1: f64, a2: f64, theta: f64) -> f64 {
+    let (c1, s1) = (theta.cos(), theta.sin());
+    let (c2, s2) = ((2.0 * theta).cos(), (2.0 * theta).sin());
+    let nr = b0 + b1 * c1 + b2 * c2;
+    let ni = -(b1 * s1 + b2 * s2);
+    let dr = 1.0 + a1 * c1 + a2 * c2;
+    let di = -(a1 * s1 + a2 * s2);
+    ((nr * nr + ni * ni) / (dr * dr + di * di)).sqrt()
+}
+
+/// The full cascade front end.
+pub struct CarIhc {
+    pub sections: Vec<Section>,
+}
+
+impl CarIhc {
+    /// `n` sections Greenwood-spaced between f_lo and f_hi (descending
+    /// base -> apex, as sound travels in the cochlea).
+    pub fn new(n: usize, f_lo: f64, f_hi: f64, fs: f64) -> CarIhc {
+        let mut centers = greenwood::centers(n, f_lo, f_hi);
+        centers.reverse(); // base (high f) first
+        CarIhc {
+            sections: centers
+                .iter()
+                .map(|&fc| Section::new(fc, 4.0, fs, (fc / 8.0).clamp(40.0, 400.0)))
+                .collect(),
+        }
+    }
+
+    /// The paper-comparable default: 30 sections over the 16 kHz band.
+    pub fn paper_default() -> CarIhc {
+        CarIhc::new(30, 125.0, 7_000.0, 16_000.0)
+    }
+
+    pub fn reset(&mut self) {
+        self.sections.iter_mut().for_each(Section::reset);
+    }
+
+    /// Per-section accumulated IHC output over a clip (fresh state):
+    /// the 30-dim feature vector for the baseline classifiers.
+    pub fn features(&mut self, clip: &[f32]) -> Vec<f32> {
+        self.reset();
+        let n = self.sections.len();
+        let mut acc = vec![0.0f64; n];
+        for &x in clip {
+            let mut sig = f64::from(x);
+            for (s, a) in self.sections.iter_mut().zip(acc.iter_mut()) {
+                let (y, ihc) = s.step(sig);
+                *a += ihc;
+                sig = y; // cascade: each section feeds the next
+            }
+        }
+        acc.into_iter().map(|a| a as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::chirp;
+
+    #[test]
+    fn section_is_stable() {
+        let mut s = Section::new(1000.0, 4.0, 16_000.0, 100.0);
+        let mut peak: f64 = 0.0;
+        for i in 0..16_000 {
+            let x = if i == 0 { 1.0 } else { 0.0 };
+            let (y, _) = s.step(x);
+            peak = peak.max(y.abs());
+        }
+        // impulse response decays: late samples tiny
+        let (late, _) = s.step(0.0);
+        assert!(late.abs() < 1e-6 * peak.max(1.0), "late {late} peak {peak}");
+    }
+
+    #[test]
+    fn section_resonates_at_pole() {
+        let fs = 16_000.0;
+        let mut gain_at = |f: f64| {
+            let mut s = Section::new(1000.0, 4.0, fs, 100.0);
+            let xs = chirp::tone(f, 8_000, fs, 1.0);
+            let mut acc = 0.0f64;
+            for (i, &x) in xs.iter().enumerate() {
+                let (y, _) = s.step(f64::from(x));
+                if i > 2000 {
+                    acc += y * y;
+                }
+            }
+            acc.sqrt()
+        };
+        let on = gain_at(1000.0);
+        let off_low = gain_at(150.0);
+        let off_high = gain_at(5000.0);
+        assert!(on > 2.0 * off_low, "on {on} off_low {off_low}");
+        assert!(on > 2.0 * off_high, "on {on} off_high {off_high}");
+    }
+
+    #[test]
+    fn ihc_output_nonnegative() {
+        let mut car = CarIhc::paper_default();
+        let clip = chirp::linear_chirp(100.0, 7000.0, 8192, 16_000.0);
+        let phi = car.features(&clip);
+        assert_eq!(phi.len(), 30);
+        assert!(phi.iter().all(|&x| x >= 0.0));
+        assert!(phi.iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn tonotopy_low_tone_excites_apex() {
+        let mut car = CarIhc::paper_default();
+        let low = car.features(&chirp::tone(200.0, 8192, 16_000.0, 0.5));
+        let high = car.features(&chirp::tone(5000.0, 8192, 16_000.0, 0.5));
+        let argmax = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        // sections are base(high-f)-first: low tones peak later sections
+        assert!(
+            argmax(&low) > argmax(&high),
+            "low argmax {} high argmax {}",
+            argmax(&low),
+            argmax(&high)
+        );
+    }
+
+    #[test]
+    fn features_deterministic_after_reset() {
+        let mut car = CarIhc::paper_default();
+        let clip = chirp::tone(900.0, 4096, 16_000.0, 0.5);
+        let a = car.features(&clip);
+        let b = car.features(&clip);
+        assert_eq!(a, b);
+    }
+}

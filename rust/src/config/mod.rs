@@ -1,0 +1,211 @@
+//! Typed configuration: build-time constants from artifacts/manifest.json
+//! (single source of truth = python/compile/config.py) plus runtime
+//! settings. The runtime refuses to start if the manifest disagrees with
+//! the band plan it was asked to run.
+
+use crate::dsp::multirate::BandPlan;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Constants the AOT artifacts were lowered with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConstants {
+    pub sample_rate: usize,
+    pub frame_len: usize,
+    pub n_octaves: usize,
+    pub filters_per_octave: usize,
+    pub n_filters: usize,
+    pub bp_taps: usize,
+    pub lp_taps: usize,
+    pub gamma_f_default: f32,
+    pub gamma_1_default: f32,
+    pub gamma_n: f32,
+    pub train_batch: usize,
+    pub clip_frames: usize,
+    pub clip_len: usize,
+}
+
+impl ModelConstants {
+    pub fn from_manifest(j: &Json) -> Result<ModelConstants> {
+        let c = j.get("constants");
+        let need = |k: &str| -> Result<usize> {
+            c.get(k)
+                .as_usize()
+                .with_context(|| format!("manifest missing constant '{k}'"))
+        };
+        let needf = |k: &str| -> Result<f32> {
+            c.get(k)
+                .as_f64()
+                .map(|x| x as f32)
+                .with_context(|| format!("manifest missing constant '{k}'"))
+        };
+        Ok(ModelConstants {
+            sample_rate: need("sample_rate")?,
+            frame_len: need("frame_len")?,
+            n_octaves: need("n_octaves")?,
+            filters_per_octave: need("filters_per_octave")?,
+            n_filters: need("n_filters")?,
+            bp_taps: need("bp_taps")?,
+            lp_taps: need("lp_taps")?,
+            gamma_f_default: needf("gamma_f_default")?,
+            gamma_1_default: needf("gamma_1_default")?,
+            gamma_n: needf("gamma_n")?,
+            train_batch: need("train_batch")?,
+            clip_frames: need("clip_frames")?,
+            clip_len: need("clip_len")?,
+        })
+    }
+
+    /// The band plan these constants describe.
+    pub fn band_plan(&self) -> BandPlan {
+        let mut plan = BandPlan::paper_default();
+        plan.sample_rate = self.sample_rate as f64;
+        plan.n_octaves = self.n_octaves;
+        plan.filters_per_octave = self.filters_per_octave;
+        plan.bp_taps = self.bp_taps;
+        plan.lp_taps = self.lp_taps;
+        plan
+    }
+
+    /// Validate internal consistency (shapes the HLO was traced with).
+    pub fn validate(&self) -> Result<()> {
+        if self.n_filters != self.n_octaves * self.filters_per_octave {
+            bail!(
+                "manifest inconsistent: n_filters {} != {} octaves x {}",
+                self.n_filters,
+                self.n_octaves,
+                self.filters_per_octave
+            );
+        }
+        if self.frame_len % (1 << (self.n_octaves - 1)) != 0 {
+            bail!(
+                "frame_len {} not divisible by 2^{}",
+                self.frame_len,
+                self.n_octaves - 1
+            );
+        }
+        if self.clip_len != self.clip_frames * self.frame_len {
+            bail!("clip_len inconsistent");
+        }
+        Ok(())
+    }
+}
+
+/// Runtime application config (paths, gammas, seeds) with CLI overrides.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    pub artifacts_dir: PathBuf,
+    pub results_dir: PathBuf,
+    pub seed: u64,
+    pub gamma_f: f32,
+    pub gamma_1: f32,
+    pub threads: usize,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            seed: 42,
+            gamma_f: 1.0,
+            gamma_1: 4.0,
+            threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+        }
+    }
+}
+
+impl AppConfig {
+    pub fn from_args(args: &crate::util::cli::Args) -> AppConfig {
+        let mut cfg = AppConfig::default();
+        if let Some(d) = args.get("artifacts") {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(d) = args.get("results") {
+            cfg.results_dir = PathBuf::from(d);
+        }
+        cfg.seed = args.get_u64("seed", cfg.seed);
+        cfg.gamma_f = args.get_f64("gamma-f", f64::from(cfg.gamma_f)) as f32;
+        cfg.gamma_1 = args.get_f64("gamma-1", f64::from(cfg.gamma_1)) as f32;
+        cfg.threads = args.get_usize("threads", cfg.threads);
+        cfg
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.artifacts_dir.join("manifest.json")
+    }
+}
+
+/// Load and validate the manifest constants from an artifacts directory.
+pub fn load_manifest(dir: &Path) -> Result<(Json, ModelConstants)> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if j.get("format").as_str() != Some("hlo-text/1") {
+        bail!("unknown manifest format {:?}", j.get("format"));
+    }
+    let consts = ModelConstants::from_manifest(&j)?;
+    consts.validate()?;
+    Ok((j, consts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Json {
+        Json::parse(
+            r#"{"format":"hlo-text/1","constants":{
+                "sample_rate":16000,"frame_len":2048,"n_octaves":6,
+                "filters_per_octave":5,"n_filters":30,"bp_taps":16,
+                "lp_taps":6,"gamma_f_default":1.0,"gamma_1_default":4.0,
+                "gamma_n":1.0,"train_batch":64,"clip_frames":8,
+                "clip_len":16384},"artifacts":{}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_constants() {
+        let c = ModelConstants::from_manifest(&fake_manifest()).unwrap();
+        assert_eq!(c.n_filters, 30);
+        assert_eq!(c.clip_len, 16384);
+        c.validate().unwrap();
+        let plan = c.band_plan();
+        assert_eq!(plan.n_filters(), 30);
+    }
+
+    #[test]
+    fn validation_catches_mismatch() {
+        let mut c = ModelConstants::from_manifest(&fake_manifest()).unwrap();
+        c.n_filters = 29;
+        assert!(c.validate().is_err());
+        let mut c2 = ModelConstants::from_manifest(&fake_manifest()).unwrap();
+        c2.frame_len = 100;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn app_config_overrides() {
+        let args = crate::util::cli::Args::parse(
+            ["x", "--seed", "9", "--gamma-f", "0.5", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = AppConfig::from_args(&args);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.threads, 2);
+        assert!((cfg.gamma_f - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let (_, c) = load_manifest(&dir).unwrap();
+            assert_eq!(c.n_filters, 30);
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Dynamic batching policy: decide, each dispatch tick, whether to run
+//! the wide `mp_frame_features_b8` artifact (padding unused lanes) or
+//! per-stream `b1` calls.
+//!
+//! The b8 artifact costs roughly what 8 b1 calls cost in FLOPs but only
+//! one dispatch, so it wins whenever enough lanes are occupied; padding
+//! lanes burn compute, so it loses when nearly empty. The crossover is a
+//! policy knob measured by `benches/bench_filterbank` and tuned in
+//! EXPERIMENTS.md §Perf.
+
+/// Batch formation decision for one tick.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BatchPlan {
+    /// Run the 8-lane artifact on these streams (len <= 8; rest padded).
+    Wide(Vec<u64>),
+    /// Run b1 sequentially on these streams.
+    Narrow(Vec<u64>),
+    Idle,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherPolicy {
+    /// minimum occupied lanes to prefer the wide path
+    pub wide_threshold: usize,
+}
+
+impl Default for BatcherPolicy {
+    fn default() -> Self {
+        // MEASURED (bench_filterbank, EXPERIMENTS.md §Perf): on this
+        // CPU the b8 artifact costs ~25x a b1 dispatch (858 ms vs
+        // 34 ms/frame) because XLA CPU does not parallelise the fused
+        // MP Newton loops across lanes — so wide batching only saves
+        // dispatch overhead (~us) while multiplying compute. Default is
+        // therefore narrow-always (threshold 9 disables the wide path);
+        // on accelerators where lanes are data-parallel, set ~5.
+        BatcherPolicy { wide_threshold: 9 }
+    }
+}
+
+impl BatcherPolicy {
+    pub fn plan(&self, ready: &[u64]) -> BatchPlan {
+        if ready.is_empty() {
+            BatchPlan::Idle
+        } else if ready.len() >= self.wide_threshold {
+            BatchPlan::Wide(ready.iter().take(8).copied().collect())
+        } else {
+            BatchPlan::Narrow(ready.to_vec())
+        }
+    }
+}
+
+/// Occupancy accounting for the §Perf report.
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    /// histogram over occupied lanes per wide dispatch (index 0 unused)
+    pub wide_occupancy: [u64; 9],
+    pub narrow_dispatches: u64,
+    pub wide_dispatches: u64,
+    pub frames_processed: u64,
+}
+
+impl BatchStats {
+    pub fn record_wide(&mut self, occupied: usize) {
+        self.wide_occupancy[occupied.min(8)] += 1;
+        self.wide_dispatches += 1;
+        self.frames_processed += occupied as u64;
+    }
+
+    pub fn record_narrow(&mut self, n: usize) {
+        self.narrow_dispatches += n as u64;
+        self.frames_processed += n as u64;
+    }
+
+    pub fn mean_wide_occupancy(&self) -> f64 {
+        if self.wide_dispatches == 0 {
+            return 0.0;
+        }
+        let sum: u64 = self
+            .wide_occupancy
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| k as u64 * c)
+            .sum();
+        sum as f64 / self.wide_dispatches as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_when_empty() {
+        assert_eq!(BatcherPolicy::default().plan(&[]), BatchPlan::Idle);
+    }
+
+    #[test]
+    fn narrow_below_threshold() {
+        let p = BatcherPolicy { wide_threshold: 5 };
+        assert_eq!(p.plan(&[1, 2]), BatchPlan::Narrow(vec![1, 2]));
+        assert_eq!(p.plan(&[1, 2, 3, 4]), BatchPlan::Narrow(vec![1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn wide_at_threshold_caps_at_8() {
+        let p = BatcherPolicy { wide_threshold: 5 };
+        assert_eq!(
+            p.plan(&[1, 2, 3, 4, 5]),
+            BatchPlan::Wide(vec![1, 2, 3, 4, 5])
+        );
+        let many: Vec<u64> = (0..12).collect();
+        match p.plan(&many) {
+            BatchPlan::Wide(v) => assert_eq!(v, (0..8).collect::<Vec<u64>>()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_occupancy() {
+        let mut s = BatchStats::default();
+        s.record_wide(8);
+        s.record_wide(6);
+        s.record_narrow(3);
+        assert_eq!(s.frames_processed, 17);
+        assert!((s.mean_wide_occupancy() - 7.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,100 @@
+//! Serving metrics: latency, throughput, accuracy, batching efficiency.
+
+use super::batcher::BatchStats;
+use crate::util::stats::LatencyHist;
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub clips_classified: u64,
+    pub clips_correct: u64,
+    pub frames_dropped: u64,
+    pub clips_aborted: u64,
+    pub wall_time: Duration,
+    pub audio_seconds: f64,
+    pub latency: LatencyHist,
+    pub batch: BatchStats,
+}
+
+impl ServeReport {
+    pub fn accuracy(&self) -> f64 {
+        if self.clips_classified == 0 {
+            0.0
+        } else {
+            self.clips_correct as f64 / self.clips_classified as f64
+        }
+    }
+
+    /// Processed audio seconds per wall second ("x real time").
+    pub fn realtime_factor(&self) -> f64 {
+        let w = self.wall_time.as_secs_f64();
+        if w <= 0.0 {
+            0.0
+        } else {
+            self.audio_seconds / w
+        }
+    }
+
+    pub fn clips_per_second(&self) -> f64 {
+        let w = self.wall_time.as_secs_f64();
+        if w <= 0.0 {
+            0.0
+        } else {
+            self.clips_classified as f64 / w
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "clips={} acc={:.1}% aborted={} dropped_frames={}\n\
+             wall={:.2}s audio={:.1}s realtime_factor={:.2}x clips/s={:.2}\n\
+             latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms max={:.1}ms\n\
+             batching: wide={} (mean occupancy {:.2}) narrow={} frames={}",
+            self.clips_classified,
+            100.0 * self.accuracy(),
+            self.clips_aborted,
+            self.frames_dropped,
+            self.wall_time.as_secs_f64(),
+            self.audio_seconds,
+            self.realtime_factor(),
+            self.clips_per_second(),
+            self.latency.mean_us() / 1e3,
+            self.latency.percentile_us(50.0) / 1e3,
+            self.latency.percentile_us(95.0) / 1e3,
+            self.latency.max_us() / 1e3,
+            self.batch.wide_dispatches,
+            self.batch.mean_wide_occupancy(),
+            self.batch.narrow_dispatches,
+            self.batch.frames_processed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_rates() {
+        let mut r = ServeReport {
+            clips_classified: 50,
+            clips_correct: 40,
+            wall_time: Duration::from_secs(10),
+            audio_seconds: 50.0,
+            ..Default::default()
+        };
+        r.latency.record_us(5_000.0);
+        assert!((r.accuracy() - 0.8).abs() < 1e-9);
+        assert!((r.realtime_factor() - 5.0).abs() < 1e-9);
+        assert!((r.clips_per_second() - 5.0).abs() < 1e-9);
+        assert!(r.render().contains("acc=80.0%"));
+    }
+
+    #[test]
+    fn empty_report_safe() {
+        let r = ServeReport::default();
+        assert_eq!(r.accuracy(), 0.0);
+        assert_eq!(r.realtime_factor(), 0.0);
+        let _ = r.render();
+    }
+}

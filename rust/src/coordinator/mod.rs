@@ -1,0 +1,48 @@
+//! L3 coordinator: the streaming acoustic-classification serving runtime.
+//!
+//! This is the paper's system layer recast as a serving problem: many
+//! remote sensor streams (wildlife monitors) continuously produce audio;
+//! the node must classify every clip with bounded latency on one compute
+//! lane. The coordinator owns:
+//!
+//! * per-stream state management (filter delay lines + Phi accumulators —
+//!   the "KV-cache" of this system) — [`state`],
+//! * a dynamic batcher that packs up to 8 concurrent streams into one
+//!   PJRT dispatch of the `mp_frame_features_b8` artifact — [`batcher`],
+//! * the single-threaded PJRT dispatch loop fed by producer threads over
+//!   bounded channels (PjRtLoadedExecutable is not Send) — [`server`],
+//! * serving metrics (latency histograms, batch occupancy, drops) —
+//!   [`metrics`].
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod state;
+
+use std::time::Instant;
+
+/// One frame of audio from one stream, timestamped at generation.
+#[derive(Clone, Debug)]
+pub struct FrameTask {
+    pub stream: u64,
+    /// clip sequence number within the stream
+    pub clip_seq: u64,
+    /// frame index within the clip
+    pub frame_idx: usize,
+    pub data: Vec<f32>,
+    pub label: usize,
+    pub t_gen: Instant,
+}
+
+/// A classified clip.
+#[derive(Clone, Debug)]
+pub struct ClassifyResult {
+    pub stream: u64,
+    pub clip_seq: u64,
+    pub label: usize,
+    pub predicted: usize,
+    /// per-head p = p+ - p- (paper eq. 6)
+    pub p: Vec<f32>,
+    /// generation -> classification latency
+    pub latency: std::time::Duration,
+}

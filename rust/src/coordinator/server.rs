@@ -1,0 +1,389 @@
+//! The serving loop: producer threads simulate remote sensor streams;
+//! the dispatcher thread owns the PJRT engine (executables are not Send)
+//! and drains frames through the dynamic batcher into the wide/narrow
+//! frame-features artifacts, running the inference artifact at clip
+//! boundaries.
+
+use super::batcher::{BatchPlan, BatcherPolicy, BatchStats};
+use super::metrics::ServeReport;
+use super::state::StateStore;
+use super::{ClassifyResult, FrameTask};
+use crate::datasets::esc10;
+use crate::runtime::engine::{ModelEngine, StreamState};
+use crate::train::TrainedModel;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub n_streams: usize,
+    pub clips_per_stream: usize,
+    pub seed: u64,
+    /// per-stream frame buffer before drops (backpressure bound)
+    pub queue_capacity: usize,
+    pub policy: BatcherPolicy,
+    /// pace producers at real audio rate (128 ms per frame) instead of
+    /// as-fast-as-possible
+    pub realtime: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            n_streams: 8,
+            clips_per_stream: 4,
+            seed: 42,
+            queue_capacity: 32,
+            policy: BatcherPolicy::default(),
+            realtime: false,
+        }
+    }
+}
+
+/// Run the serving simulation on the synthetic ESC-10 workload; returns
+/// the aggregate report and every per-clip result.
+pub fn serve(
+    engine: &mut ModelEngine,
+    model: &TrainedModel,
+    cfg: &ServeConfig,
+) -> Result<(ServeReport, Vec<ClassifyResult>)> {
+    let frame_len = engine.frame_len();
+    let clip_frames = engine.clip_frames();
+    let clip_len = frame_len * clip_frames;
+    let n_classes = model.classes.len();
+    let (tx, rx) = mpsc::sync_channel::<FrameTask>(cfg.n_streams * 4);
+
+    // ---- producers: one thread simulating all sensor streams
+    let producer = {
+        let cfg = cfg.clone();
+        std::thread::spawn(move || {
+            let frame_dur = Duration::from_secs_f64(frame_len as f64 / 16_000.0);
+            for clip_seq in 0..cfg.clips_per_stream as u64 {
+                // synthesise this round's clip per stream
+                let clips: Vec<(usize, Vec<f32>)> = (0..cfg.n_streams)
+                    .map(|s| {
+                        let class = s % n_classes;
+                        let c = esc10::synth_clip(cfg.seed, class, clip_seq ^ (s as u64) << 8);
+                        (class, c.samples[..clip_len].to_vec())
+                    })
+                    .collect();
+                for f in 0..clip_frames {
+                    let t_tick = Instant::now();
+                    for (s, (label, samples)) in clips.iter().enumerate() {
+                        let task = FrameTask {
+                            stream: s as u64,
+                            clip_seq,
+                            frame_idx: f,
+                            data: samples[f * frame_len..(f + 1) * frame_len].to_vec(),
+                            label: *label,
+                            t_gen: Instant::now(),
+                        };
+                        if tx.send(task).is_err() {
+                            return;
+                        }
+                    }
+                    if cfg.realtime {
+                        let spent = t_tick.elapsed();
+                        if spent < frame_dur {
+                            std::thread::sleep(frame_dur - spent);
+                        }
+                    }
+                }
+            }
+        })
+    };
+
+    // ---- dispatcher: single PJRT lane
+    let mut store = StateStore::new(engine.zero_state(), engine.n_filters(), cfg.queue_capacity);
+    let mut stats = BatchStats::default();
+    let mut report = ServeReport::default();
+    let mut results = Vec::new();
+    let t0 = Instant::now();
+    let mut producers_done = false;
+
+    loop {
+        // drain the channel without blocking; block briefly only if idle
+        loop {
+            match rx.try_recv() {
+                Ok(task) => {
+                    if !store.push(task) {
+                        report.frames_dropped += 1;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    producers_done = true;
+                    break;
+                }
+            }
+        }
+        let ready = store.ready_streams(8);
+        if ready.is_empty() {
+            if producers_done {
+                break;
+            }
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(task) => {
+                    if !store.push(task) {
+                        report.frames_dropped += 1;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => producers_done = true,
+            }
+            continue;
+        }
+
+        match cfg.policy.plan(&ready) {
+            BatchPlan::Wide(ids) => {
+                let occupied = ids.len();
+                // pop one in-order frame per lane (resync on clip gaps)
+                let mut lanes: Vec<(u64, FrameTask)> = Vec::with_capacity(8);
+                for &id in &ids {
+                    if let Some(task) = pop_in_order(&mut store, id, &mut report) {
+                        lanes.push((id, task));
+                    }
+                }
+                if lanes.is_empty() {
+                    continue;
+                }
+                // assemble 8 lanes: real ones first, padding after
+                let mut states: Vec<StreamState> = lanes
+                    .iter()
+                    .map(|(id, _)| store.entry(*id).state.clone())
+                    .collect();
+                let zeros = vec![0.0f32; frame_len];
+                while states.len() < 8 {
+                    states.push(store.zero_state().clone());
+                }
+                let frames: Vec<&[f32]> = lanes
+                    .iter()
+                    .map(|(_, t)| t.data.as_slice())
+                    .chain(std::iter::repeat(zeros.as_slice()))
+                    .take(8)
+                    .collect();
+                let phis = engine.mp_frame_features_b8(&mut states, &frames)?;
+                stats.record_wide(lanes.len().max(occupied.min(8)));
+                for (i, (id, task)) in lanes.iter().enumerate() {
+                    apply_frame(
+                        engine, &mut store, model, *id, task, &states[i], &phis[i],
+                        clip_frames, &mut report, &mut results,
+                    )?;
+                }
+            }
+            BatchPlan::Narrow(ids) => {
+                let mut n = 0;
+                for id in ids {
+                    if let Some(task) = pop_in_order(&mut store, id, &mut report) {
+                        let mut state = store.entry(id).state.clone();
+                        let phi = engine.mp_frame_features(&mut state, &task.data)?;
+                        apply_frame(
+                            engine, &mut store, model, id, &task, &state, &phi,
+                            clip_frames, &mut report, &mut results,
+                        )?;
+                        n += 1;
+                    }
+                }
+                stats.record_narrow(n);
+            }
+            BatchPlan::Idle => {}
+        }
+    }
+    producer.join().ok();
+
+    report.wall_time = t0.elapsed();
+    report.audio_seconds =
+        stats.frames_processed as f64 * frame_len as f64 / 16_000.0;
+    report.batch = stats;
+    Ok((report, results))
+}
+
+/// Pop the next frame for a stream, skipping stale frames from aborted
+/// clips and resyncing at the next clip boundary.
+fn pop_in_order(
+    store: &mut StateStore,
+    id: u64,
+    report: &mut ServeReport,
+) -> Option<FrameTask> {
+    loop {
+        let task = store.pop_frame(id)?;
+        let zero = store.zero_state().clone();
+        let e = store.entry(id);
+        if task.clip_seq == e.clip_seq && task.frame_idx == e.frames_done {
+            return Some(task);
+        }
+        if task.frame_idx == 0 && task.clip_seq > e.clip_seq {
+            // a frame was lost somewhere: abort the stale clip, resync
+            if e.frames_done > 0 {
+                report.clips_aborted += 1;
+            }
+            e.finish_clip(&zero);
+            e.clip_seq = task.clip_seq;
+            return Some(task);
+        }
+        // stale mid-clip frame: discard and keep looking
+        report.frames_dropped += 1;
+    }
+}
+
+/// Fold one processed frame into its stream; classify at clip end.
+#[allow(clippy::too_many_arguments)]
+fn apply_frame(
+    engine: &mut ModelEngine,
+    store: &mut StateStore,
+    model: &TrainedModel,
+    id: u64,
+    task: &FrameTask,
+    new_state: &StreamState,
+    phi: &[f32],
+    clip_frames: usize,
+    report: &mut ServeReport,
+    results: &mut Vec<ClassifyResult>,
+) -> Result<()> {
+    let zero = store.zero_state().clone();
+    let acc_done;
+    {
+        let e = store.entry(id);
+        e.state = new_state.clone();
+        if e.clip_t0.is_none() {
+            e.clip_t0 = Some(task.t_gen);
+        }
+        e.label = task.label;
+        for (a, p) in e.acc.iter_mut().zip(phi) {
+            *a += p;
+        }
+        e.frames_done += 1;
+        acc_done = e.frames_done >= clip_frames;
+    }
+    if acc_done {
+        let (acc, label, clip_seq) = {
+            let e = store.entry(id);
+            (e.acc.clone(), e.label, e.clip_seq)
+        };
+        let (p, _, _) = engine.inference(&model.params, &model.std, &acc, model.gamma_1)?;
+        let predicted = p
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map_or(0, |(i, _)| i);
+        let latency = task.t_gen.elapsed();
+        report.clips_classified += 1;
+        if predicted == label {
+            report.clips_correct += 1;
+        }
+        report.latency.record(latency);
+        results.push(ClassifyResult {
+            stream: id,
+            clip_seq,
+            label,
+            predicted,
+            p,
+            latency,
+        });
+        let e = store.entry(id);
+        e.finish_clip(&zero);
+        e.clip_seq += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mp::machine::{Params, Standardizer};
+    use std::path::PathBuf;
+
+    fn engine() -> Option<ModelEngine> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| ModelEngine::open(&dir, 1.0).unwrap())
+    }
+
+    fn dummy_model(heads: usize, p: usize) -> TrainedModel {
+        let mut rng = crate::util::prng::Pcg32::new(3);
+        TrainedModel {
+            classes: (0..heads).map(|c| format!("c{c}")).collect(),
+            params: Params {
+                wp: (0..heads).map(|_| rng.normal_vec(p)).collect(),
+                wm: (0..heads).map(|_| rng.normal_vec(p)).collect(),
+                bp: vec![0.0; heads],
+                bm: vec![0.0; heads],
+            },
+            std: Standardizer {
+                mu: vec![50.0; p],
+                sigma: vec![20.0; p],
+            },
+            gamma_f: 1.0,
+            gamma_1: 4.0,
+        }
+    }
+
+    #[test]
+    fn serve_completes_all_clips_and_preserves_stream_math() {
+        let Some(mut eng) = engine() else { return };
+        let model = dummy_model(10, eng.n_filters());
+        let cfg = ServeConfig {
+            n_streams: 6,
+            clips_per_stream: 2,
+            seed: 7,
+            ..Default::default()
+        };
+        let (report, results) = serve(&mut eng, &model, &cfg).unwrap();
+        assert_eq!(report.clips_classified, 12, "{}", report.render());
+        assert_eq!(results.len(), 12);
+        assert_eq!(report.clips_aborted, 0);
+        assert_eq!(report.frames_dropped, 0);
+        // every stream produced exactly clips_per_stream results, in order
+        for s in 0..6u64 {
+            let seqs: Vec<u64> = results
+                .iter()
+                .filter(|r| r.stream == s)
+                .map(|r| r.clip_seq)
+                .collect();
+            assert_eq!(seqs, vec![0, 1], "stream {s}");
+        }
+        // cross-check one clip against the offline feature path: the
+        // served pipeline must be numerically identical to clip_features
+        let r0 = &results[0];
+        let clip = esc10::synth_clip(7, (r0.stream as usize) % 10, r0.clip_seq ^ (r0.stream) << 8);
+        let phi = eng
+            .clip_features(&clip.samples[..eng.frame_len() * eng.clip_frames()])
+            .unwrap();
+        let (p, _, _) = eng
+            .inference(&model.params, &model.std, &phi, model.gamma_1)
+            .unwrap();
+        for (a, b) in p.iter().zip(&r0.p) {
+            assert!((a - b).abs() < 1e-4, "served {b} offline {a}");
+        }
+    }
+
+    #[test]
+    fn narrow_policy_used_for_few_streams() {
+        let Some(mut eng) = engine() else { return };
+        let model = dummy_model(10, eng.n_filters());
+        let cfg = ServeConfig {
+            n_streams: 2,
+            clips_per_stream: 1,
+            ..Default::default()
+        };
+        let (report, _) = serve(&mut eng, &model, &cfg).unwrap();
+        assert_eq!(report.batch.wide_dispatches, 0);
+        assert!(report.batch.narrow_dispatches > 0);
+    }
+
+    #[test]
+    fn wide_policy_used_when_enabled() {
+        let Some(mut eng) = engine() else { return };
+        let model = dummy_model(10, eng.n_filters());
+        let mut cfg = ServeConfig {
+            n_streams: 8,
+            clips_per_stream: 1,
+            ..Default::default()
+        };
+        cfg.policy.wide_threshold = 5; // accelerator-style policy
+        let (report, _) = serve(&mut eng, &model, &cfg).unwrap();
+        assert!(report.batch.wide_dispatches > 0, "{}", report.render());
+    }
+}

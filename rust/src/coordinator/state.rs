@@ -1,0 +1,190 @@
+//! Per-stream serving state: filter delay lines, Phi accumulators and the
+//! in-order frame queue. This is the coordinator's state-management
+//! substrate — the analogue of a KV-cache manager in an LLM server.
+
+use super::FrameTask;
+use crate::runtime::engine::StreamState;
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+/// Everything the server tracks for one live stream.
+#[derive(Debug)]
+pub struct StreamEntry {
+    pub state: StreamState,
+    /// Phi accumulator (paper eq. 11), reset at clip boundaries.
+    pub acc: Vec<f32>,
+    pub frames_done: usize,
+    pub clip_seq: u64,
+    pub label: usize,
+    /// generation timestamp of the current clip's first frame
+    pub clip_t0: Option<Instant>,
+    /// pending frames, in order (bounded; see [`StateStore::push`])
+    pub queue: VecDeque<FrameTask>,
+    pub dropped: u64,
+}
+
+impl StreamEntry {
+    fn new(state: StreamState, n_filters: usize) -> StreamEntry {
+        StreamEntry {
+            state,
+            acc: vec![0.0; n_filters],
+            frames_done: 0,
+            clip_seq: 0,
+            label: 0,
+            clip_t0: None,
+            queue: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Reset for the next clip (state is also zeroed: clips are
+    /// independent utterances).
+    pub fn finish_clip(&mut self, zero: &StreamState) {
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.frames_done = 0;
+        self.clip_t0 = None;
+        self.state = zero.clone();
+    }
+}
+
+/// All live streams + the ready-queue the batcher draws from.
+pub struct StateStore {
+    streams: HashMap<u64, StreamEntry>,
+    zero: StreamState,
+    n_filters: usize,
+    /// max frames buffered per stream before we drop (backpressure)
+    pub queue_capacity: usize,
+}
+
+impl StateStore {
+    pub fn new(zero: StreamState, n_filters: usize, queue_capacity: usize) -> StateStore {
+        StateStore {
+            streams: HashMap::new(),
+            zero,
+            n_filters,
+            queue_capacity,
+        }
+    }
+
+    pub fn entry(&mut self, stream: u64) -> &mut StreamEntry {
+        self.streams
+            .entry(stream)
+            .or_insert_with(|| StreamEntry::new(self.zero.clone(), self.n_filters))
+    }
+
+    pub fn get(&self, stream: u64) -> Option<&StreamEntry> {
+        self.streams.get(&stream)
+    }
+
+    pub fn zero_state(&self) -> &StreamState {
+        &self.zero
+    }
+
+    /// Enqueue a frame; returns false (and counts a drop) if the
+    /// stream's buffer is full — the backpressure policy drops the
+    /// *newest* frame so in-flight clips still complete. A dropped frame
+    /// invalidates its clip; the server skips the remainder.
+    pub fn push(&mut self, task: FrameTask) -> bool {
+        let cap = self.queue_capacity;
+        let e = self.entry(task.stream);
+        if e.queue.len() >= cap {
+            e.dropped += 1;
+            return false;
+        }
+        e.queue.push_back(task);
+        true
+    }
+
+    /// Streams that currently have at least one pending frame, ordered by
+    /// the age of their oldest pending frame (oldest first, so the
+    /// batcher is deadline-fair).
+    pub fn ready_streams(&self, max: usize) -> Vec<u64> {
+        let mut ready: Vec<(Instant, u64)> = self
+            .streams
+            .iter()
+            .filter_map(|(&id, e)| e.queue.front().map(|f| (f.t_gen, id)))
+            .collect();
+        ready.sort();
+        ready.into_iter().take(max).map(|(_, id)| id).collect()
+    }
+
+    pub fn pending_total(&self) -> usize {
+        self.streams.values().map(|e| e.queue.len()).sum()
+    }
+
+    pub fn dropped_total(&self) -> u64 {
+        self.streams.values().map(|e| e.dropped).sum()
+    }
+
+    pub fn pop_frame(&mut self, stream: u64) -> Option<FrameTask> {
+        self.streams.get_mut(&stream)?.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn task(stream: u64, frame_idx: usize) -> FrameTask {
+        FrameTask {
+            stream,
+            clip_seq: 0,
+            frame_idx,
+            data: vec![0.0; 4],
+            label: 0,
+            t_gen: Instant::now(),
+        }
+    }
+
+    fn store() -> StateStore {
+        StateStore::new(StreamState::zero(3, 4, 3), 6, 3)
+    }
+
+    #[test]
+    fn push_pop_in_order() {
+        let mut s = store();
+        for i in 0..3 {
+            assert!(s.push(task(1, i)));
+        }
+        for i in 0..3 {
+            assert_eq!(s.pop_frame(1).unwrap().frame_idx, i);
+        }
+        assert!(s.pop_frame(1).is_none());
+    }
+
+    #[test]
+    fn capacity_drops_and_counts() {
+        let mut s = store();
+        for i in 0..5 {
+            s.push(task(1, i));
+        }
+        assert_eq!(s.entry(1).queue.len(), 3);
+        assert_eq!(s.dropped_total(), 2);
+    }
+
+    #[test]
+    fn ready_streams_oldest_first() {
+        let mut s = store();
+        s.push(task(5, 0));
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        s.push(task(9, 0));
+        let ready = s.ready_streams(8);
+        assert_eq!(ready, vec![5, 9]);
+        assert_eq!(s.ready_streams(1), vec![5]);
+    }
+
+    #[test]
+    fn finish_clip_resets() {
+        let mut s = store();
+        let zero = s.zero_state().clone();
+        let e = s.entry(1);
+        e.acc[0] = 5.0;
+        e.frames_done = 8;
+        e.state.bp[0] = 1.0;
+        e.finish_clip(&zero);
+        assert_eq!(e.acc[0], 0.0);
+        assert_eq!(e.frames_done, 0);
+        assert_eq!(e.state.bp[0], 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Synthetic FSDD stand-in: two formant-synthesised "speakers" speaking
+//! digits 0-9, with the paper's Table IV per-speaker counts
+//! (Theo 761/254, Nicolas 889/297). The classification task is speaker
+//! identification, so the speakers differ in f0, formant scaling and
+//! spectral tilt — while each clip's digit (the nuisance variable) draws
+//! a different formant trajectory.
+
+use super::{normalize_rms, Clip, Dataset};
+use crate::util::prng::Pcg32;
+use std::f64::consts::PI;
+
+pub const SAMPLE_RATE: f64 = 16_000.0;
+pub const CLIP_LEN: usize = 16_384;
+
+/// (name, f0 Hz, formant scale, tilt, train, test)
+pub const SPEAKERS: [(&str, f64, f64, f64, usize, usize); 2] = [
+    ("theo", 118.0, 0.96, 0.9, 761, 254),
+    ("nicolas", 172.0, 1.12, 0.6, 889, 297),
+];
+
+/// Per-digit formant trajectories: a sequence of (F1, F2, rel-duration)
+/// "phoneme" targets, loosely vowel-like so digits differ from each other.
+fn digit_segments(digit: usize) -> Vec<(f64, f64, f64)> {
+    match digit {
+        0 => vec![(350.0, 800.0, 0.5), (500.0, 1400.0, 0.5)], // "ze-ro"
+        1 => vec![(400.0, 2000.0, 1.0)],                      // "one"
+        2 => vec![(500.0, 1500.0, 0.4), (700.0, 1200.0, 0.6)],
+        3 => vec![(450.0, 2300.0, 1.0)],
+        4 => vec![(650.0, 1000.0, 0.6), (400.0, 1900.0, 0.4)],
+        5 => vec![(600.0, 1700.0, 0.5), (350.0, 900.0, 0.5)],
+        6 => vec![(420.0, 2100.0, 0.5), (550.0, 1300.0, 0.5)],
+        7 => vec![(550.0, 1800.0, 0.33), (450.0, 1100.0, 0.33), (600.0, 1500.0, 0.34)],
+        8 => vec![(700.0, 1400.0, 1.0)],
+        9 => vec![(480.0, 2200.0, 0.5), (620.0, 950.0, 0.5)],
+        _ => panic!("digit {digit} out of range"),
+    }
+}
+
+/// Synthesise one spoken digit for a speaker.
+pub fn synth_clip(seed: u64, speaker: usize, index: u64) -> Clip {
+    let (_, f0_base, fscale, tilt, _, _) = SPEAKERS[speaker];
+    let id = (speaker as u64) << 32 | index;
+    let mut rng = Pcg32::new(seed ^ (0xf5dd_0000_0000 + id));
+    let digit = (index % 10) as usize;
+    let segs = digit_segments(digit);
+
+    // per-utterance prosody variation
+    let f0 = f0_base * rng.range(0.92, 1.08);
+    let fs_jit = fscale * rng.range(0.96, 1.04);
+    let speak_len = (CLIP_LEN as f64 * rng.range(0.55, 0.85)) as usize;
+    let start = rng.below((CLIP_LEN - speak_len) as u32) as usize;
+
+    let n_harm = 28;
+    let mut out = vec![0.0f32; CLIP_LEN];
+    let mut phase = vec![0.0f64; n_harm];
+    let hphase: Vec<f64> = (0..n_harm).map(|_| rng.range(0.0, 2.0 * PI)).collect();
+
+    // cumulative segment boundaries
+    let total: f64 = segs.iter().map(|s| s.2).sum();
+    for i in 0..speak_len {
+        let x = i as f64 / speak_len as f64;
+        // find active segment + linear formant interpolation across it
+        let mut acc = 0.0;
+        let mut f1 = segs[0].0;
+        let mut f2 = segs[0].1;
+        for (si, s) in segs.iter().enumerate() {
+            let w = s.2 / total;
+            if x < acc + w || si == segs.len() - 1 {
+                let loc = ((x - acc) / w).clamp(0.0, 1.0);
+                let (n1, n2) = if si + 1 < segs.len() {
+                    (segs[si + 1].0, segs[si + 1].1)
+                } else {
+                    (s.0, s.1)
+                };
+                f1 = (s.0 + loc.powi(3) * (n1 - s.0)) * fs_jit;
+                f2 = (s.1 + loc.powi(3) * (n2 - s.1)) * fs_jit;
+                break;
+            }
+            acc += w;
+        }
+        // slight f0 declination over the utterance
+        let f_now = f0 * (1.05 - 0.1 * x);
+        let mut s = 0.0;
+        for (h, ph) in phase.iter_mut().enumerate() {
+            let fh = f_now * (h + 1) as f64;
+            if fh > 7_500.0 {
+                break;
+            }
+            *ph += 2.0 * PI * fh / SAMPLE_RATE;
+            let d1 = (fh - f1) / 130.0;
+            let d2 = (fh - f2) / 180.0;
+            let g = 1.0 / (1.0 + d1 * d1) + 0.7 / (1.0 + d2 * d2) + 0.04;
+            // speaker spectral tilt: -tilt dB/octave-ish rolloff
+            let roll = (fh / f0).powf(-tilt * 0.5);
+            s += g * roll * (*ph + hphase[h]).sin();
+        }
+        // utterance envelope + jitter (shimmer)
+        let env = (x * PI).sin().powf(0.5) * rng.range(0.93, 1.07);
+        out[start + i] = (s * env) as f32;
+    }
+    // aspiration noise
+    for x in out.iter_mut() {
+        *x += (rng.normal() * 0.01) as f32;
+    }
+    let mut samples = out;
+    normalize_rms(&mut samples, 0.2);
+    Clip {
+        samples,
+        label: speaker,
+        id,
+    }
+}
+
+/// Build the dataset with Table IV counts (scaled by `scale`).
+pub fn build(seed: u64, scale: f64) -> Dataset {
+    let mut ds = Dataset {
+        name: "fsdd-synth".into(),
+        classes: SPEAKERS.iter().map(|s| s.0.to_string()).collect(),
+        ..Default::default()
+    };
+    for (sp, &(_, _, _, _, n_train, n_test)) in SPEAKERS.iter().enumerate() {
+        let tr = ((n_train as f64 * scale).round() as usize).max(4);
+        let te = ((n_test as f64 * scale).round() as usize).max(2);
+        for i in 0..tr {
+            ds.train.push(synth_clip(seed, sp, i as u64));
+        }
+        for i in 0..te {
+            ds.test.push(synth_clip(seed, sp, (100_000 + i) as u64));
+        }
+    }
+    let mut rng = Pcg32::new(seed ^ 0xf5dd);
+    rng.shuffle(&mut ds.train);
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_shape_and_energy() {
+        for sp in 0..2 {
+            let c = synth_clip(3, sp, 7);
+            assert_eq!(c.samples.len(), CLIP_LEN);
+            let e: f64 = c.samples.iter().map(|&x| f64::from(x).powi(2)).sum();
+            assert!(e > 1.0, "speaker {sp} too quiet");
+        }
+    }
+
+    #[test]
+    fn deterministic_and_distinct() {
+        assert_eq!(synth_clip(3, 0, 1).samples, synth_clip(3, 0, 1).samples);
+        assert_ne!(synth_clip(3, 0, 1).samples, synth_clip(3, 1, 1).samples);
+        assert_ne!(synth_clip(3, 0, 1).samples, synth_clip(3, 0, 2).samples);
+    }
+
+    #[test]
+    fn speakers_differ_in_pitch_content() {
+        // autocorrelation peak lag should differ between speakers
+        let lag_of = |sp: usize| -> usize {
+            let c = synth_clip(9, sp, 3);
+            let xs = &c.samples;
+            let lo = (SAMPLE_RATE / 260.0) as usize;
+            let hi = (SAMPLE_RATE / 80.0) as usize;
+            let mut best = (lo, f64::MIN);
+            for lag in lo..hi {
+                let mut r = 0.0;
+                for i in 0..(xs.len() - lag) {
+                    r += f64::from(xs[i]) * f64::from(xs[i + lag]);
+                }
+                if r > best.1 {
+                    best = (lag, r);
+                }
+            }
+            best.0
+        };
+        let theo = lag_of(0); // ~16000/118 = 136
+        let nico = lag_of(1); // ~16000/172 = 93
+        assert!(theo > nico, "theo lag {theo} nicolas lag {nico}");
+    }
+
+    #[test]
+    fn counts_match_paper() {
+        let tr: usize = SPEAKERS.iter().map(|s| s.4).sum();
+        let te: usize = SPEAKERS.iter().map(|s| s.5).sum();
+        assert_eq!(tr, 1650);
+        assert_eq!(te, 551);
+        let ds = build(1, 0.01);
+        assert_eq!(ds.classes, vec!["theo", "nicolas"]);
+        assert_eq!(ds.train.iter().filter(|c| c.label == 0).count(), 8);
+    }
+}

@@ -1,0 +1,84 @@
+//! Test signals: linear chirps and tones (paper Figs. 4 and 6 use a
+//! chirp with increasing frequency sampled at 16 kHz).
+
+use std::f64::consts::PI;
+
+/// Linear chirp from f0 to f1 Hz over n samples at `fs` Hz, amplitude 1.
+pub fn linear_chirp(f0: f64, f1: f64, n: usize, fs: f64) -> Vec<f32> {
+    let dur = n as f64 / fs;
+    let k = (f1 - f0) / dur;
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / fs;
+            (2.0 * PI * (f0 * t + 0.5 * k * t * t)).sin() as f32
+        })
+        .collect()
+}
+
+/// Instantaneous frequency of the same chirp at sample i.
+pub fn chirp_freq_at(f0: f64, f1: f64, n: usize, fs: f64, i: usize) -> f64 {
+    let dur = n as f64 / fs;
+    let k = (f1 - f0) / dur;
+    f0 + k * (i as f64 / fs)
+}
+
+/// Pure tone at f Hz.
+pub fn tone(f: f64, n: usize, fs: f64, amplitude: f64) -> Vec<f32> {
+    (0..n)
+        .map(|i| (amplitude * (2.0 * PI * f * i as f64 / fs).sin()) as f32)
+        .collect()
+}
+
+/// Sliding-window RMS envelope with window w (output length == input).
+pub fn rms_envelope(xs: &[f32], w: usize) -> Vec<f32> {
+    assert!(w >= 1);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0.0f64;
+    let mut q: std::collections::VecDeque<f64> = std::collections::VecDeque::new();
+    for &x in xs {
+        let e = f64::from(x) * f64::from(x);
+        acc += e;
+        q.push_back(e);
+        if q.len() > w {
+            acc -= q.pop_front().unwrap();
+        }
+        out.push((acc / q.len() as f64).sqrt() as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chirp_bounds_and_length() {
+        let c = linear_chirp(0.0, 8000.0, 16000, 16000.0);
+        assert_eq!(c.len(), 16000);
+        assert!(c.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn chirp_instantaneous_frequency_endpoints() {
+        assert!((chirp_freq_at(100.0, 900.0, 1000, 1000.0, 0) - 100.0).abs() < 1e-9);
+        assert!((chirp_freq_at(100.0, 900.0, 1000, 1000.0, 1000) - 900.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tone_rms() {
+        let t = tone(440.0, 16000, 16000.0, 1.0);
+        let env = rms_envelope(&t, 512);
+        // RMS of a unit sine is 1/sqrt(2)
+        let tail = f64::from(env[8000]);
+        assert!((tail - std::f64::consts::FRAC_1_SQRT_2).abs() < 0.01, "{tail}");
+    }
+
+    #[test]
+    fn envelope_tracks_amplitude_steps() {
+        let mut xs = tone(100.0, 2000, 8000.0, 0.1);
+        xs.extend(tone(100.0, 2000, 8000.0, 1.0));
+        let env = rms_envelope(&xs, 128);
+        assert!(env[1500] < 0.2);
+        assert!(env[3500] > 0.5);
+    }
+}

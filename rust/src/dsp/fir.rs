@@ -1,0 +1,223 @@
+//! FIR filter design (windowed sinc) and direct-form streaming filtering.
+//!
+//! These are the *conventional* (multiply-accumulate) filters: the float
+//! baseline of the paper's Fig. 4 and the "floating point" columns of
+//! Tables III/IV. The multiplierless MP versions of the same filters live
+//! in `crate::mp` (float semantics) and `crate::fixed` (hardware model).
+
+use super::window::Window;
+use std::f64::consts::PI;
+
+fn sinc(x: f64) -> f64 {
+    if x.abs() < 1e-12 {
+        1.0
+    } else {
+        (PI * x).sin() / (PI * x)
+    }
+}
+
+/// Windowed-sinc low pass. `fc` is the cutoff in cycles/sample (0, 0.5);
+/// DC gain is normalised to exactly 1.
+pub fn lowpass(fc: f64, taps: usize, window: Window) -> Vec<f64> {
+    assert!(fc > 0.0 && fc < 0.5, "fc = {fc} out of (0, 0.5)");
+    assert!(taps >= 2);
+    let w = window.coeffs(taps);
+    let c = (taps - 1) as f64 / 2.0;
+    let mut h: Vec<f64> = (0..taps)
+        .map(|k| 2.0 * fc * sinc(2.0 * fc * (k as f64 - c)) * w[k])
+        .collect();
+    let dc: f64 = h.iter().sum();
+    for x in &mut h {
+        *x /= dc;
+    }
+    h
+}
+
+/// Windowed-sinc band pass for the band [f1, f2] (cycles/sample).
+/// Peak gain at the centre frequency is normalised to 1.
+pub fn bandpass(f1: f64, f2: f64, taps: usize, window: Window) -> Vec<f64> {
+    assert!(f1 > 0.0 && f2 < 0.5 && f1 < f2, "bad band [{f1}, {f2}]");
+    let w = window.coeffs(taps);
+    let c = (taps - 1) as f64 / 2.0;
+    let mut h: Vec<f64> = (0..taps)
+        .map(|k| {
+            let t = k as f64 - c;
+            (2.0 * f2 * sinc(2.0 * f2 * t) - 2.0 * f1 * sinc(2.0 * f1 * t)) * w[k]
+        })
+        .collect();
+    let fc = 0.5 * (f1 + f2);
+    let gain = magnitude_at(&h, fc).max(1e-12);
+    for x in &mut h {
+        *x /= gain;
+    }
+    h
+}
+
+/// |H(f)| at frequency f (cycles/sample) by direct evaluation.
+pub fn magnitude_at(h: &[f64], f: f64) -> f64 {
+    let (mut re, mut im) = (0.0f64, 0.0f64);
+    for (k, &hk) in h.iter().enumerate() {
+        let ang = -2.0 * PI * f * k as f64;
+        re += hk * ang.cos();
+        im += hk * ang.sin();
+    }
+    (re * re + im * im).sqrt()
+}
+
+/// Magnitude response sampled at `n` frequencies in (0, 0.5).
+pub fn magnitude_response(h: &[f64], n: usize) -> Vec<(f64, f64)> {
+    (1..=n)
+        .map(|i| {
+            let f = 0.5 * i as f64 / (n + 1) as f64;
+            (f, magnitude_at(h, f))
+        })
+        .collect()
+}
+
+/// Direct-form streaming FIR with an explicit delay line — the float
+/// counterpart of the HLO frame-features state carry, used by Fig 4 and
+/// the conventional feature extractor.
+#[derive(Clone, Debug)]
+pub struct FirFilter {
+    h: Vec<f64>,
+    /// delay[0] = x[n-1], delay[1] = x[n-2], ...
+    delay: Vec<f64>,
+}
+
+impl FirFilter {
+    pub fn new(h: Vec<f64>) -> FirFilter {
+        let n = h.len();
+        FirFilter {
+            h,
+            delay: vec![0.0; n.saturating_sub(1)],
+        }
+    }
+
+    pub fn taps(&self) -> usize {
+        self.h.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.delay.iter_mut().for_each(|d| *d = 0.0);
+    }
+
+    /// One sample in, one sample out.
+    pub fn step(&mut self, x: f64) -> f64 {
+        let mut acc = self.h[0] * x;
+        for (k, &d) in self.delay.iter().enumerate() {
+            acc += self.h[k + 1] * d;
+        }
+        // shift the delay line (newest first)
+        for k in (1..self.delay.len()).rev() {
+            self.delay[k] = self.delay[k - 1];
+        }
+        if !self.delay.is_empty() {
+            self.delay[0] = x;
+        }
+        acc
+    }
+
+    /// Filter a whole block (streaming: state persists across calls).
+    pub fn process(&mut self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.step(f64::from(x)) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn lowpass_dc_gain_one_and_stopband() {
+        let h = lowpass(0.1, 63, Window::Hamming);
+        assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(magnitude_at(&h, 0.001) > 0.99);
+        assert!(magnitude_at(&h, 0.3) < 0.01, "stopband leak");
+    }
+
+    #[test]
+    fn bandpass_center_gain_one_and_rejection() {
+        let h = bandpass(0.1, 0.2, 101, Window::Hamming);
+        assert!((magnitude_at(&h, 0.15) - 1.0).abs() < 1e-9);
+        assert!(magnitude_at(&h, 0.01) < 0.01);
+        assert!(magnitude_at(&h, 0.45) < 0.01);
+    }
+
+    #[test]
+    fn bandpass_low_order_still_selective() {
+        // the paper's order-15 (16-tap) band filters: passband > stopband
+        let h = bandpass(0.25, 0.3, 16, Window::Hamming);
+        let pass = magnitude_at(&h, 0.275);
+        let stop = magnitude_at(&h, 0.05);
+        assert!(pass > 3.0 * stop, "pass {pass} stop {stop}");
+    }
+
+    #[test]
+    fn fir_filter_impulse_response_is_h() {
+        let h = vec![0.5, -0.25, 0.125];
+        let mut f = FirFilter::new(h.clone());
+        let mut x = vec![1.0f32, 0.0, 0.0, 0.0];
+        let y = f.process(&mut x);
+        for (k, &hk) in h.iter().enumerate() {
+            assert!((f64::from(y[k]) - hk).abs() < 1e-6);
+        }
+        assert!(f64::from(y[3]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fir_streaming_equals_batch() {
+        check("fir-streaming", 25, |g| {
+            let taps = g.usize(2, 12);
+            let t = g.usize(8, 64);
+            let h: Vec<f64> = (0..taps).map(|_| g.f64(-1.0, 1.0)).collect();
+            let xs: Vec<f32> = g.signal(t, 1.0);
+            let mut whole = FirFilter::new(h.clone());
+            let yw = whole.process(&xs);
+            let mut chunked = FirFilter::new(h);
+            let mut yc = Vec::new();
+            let mid = t / 2;
+            yc.extend(chunked.process(&xs[..mid]));
+            yc.extend(chunked.process(&xs[mid..]));
+            for (a, b) in yw.iter().zip(&yc) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn fir_linearity() {
+        check("fir-linearity", 15, |g| {
+            let h: Vec<f64> = (0..8).map(|_| g.f64(-1.0, 1.0)).collect();
+            let xs = g.signal(32, 1.0);
+            let a = g.f32(0.5, 2.0);
+            let mut f1 = FirFilter::new(h.clone());
+            let mut f2 = FirFilter::new(h);
+            let y1 = f1.process(&xs);
+            let scaled: Vec<f32> = xs.iter().map(|&x| a * x).collect();
+            let y2 = f2.process(&scaled);
+            for (p, q) in y1.iter().zip(&y2) {
+                assert!((a * p - q).abs() < 1e-3, "{} vs {}", a * p, q);
+            }
+        });
+    }
+
+    #[test]
+    fn tone_through_bandpass() {
+        // a tone inside the band passes, outside is attenuated
+        let h = bandpass(0.1, 0.2, 64, Window::Hamming);
+        let tone = |f: f64| -> f64 {
+            let mut filt = FirFilter::new(h.clone());
+            let xs: Vec<f32> = (0..512)
+                .map(|n| (2.0 * PI * f * n as f64).sin() as f32)
+                .collect();
+            let ys = filt.process(&xs);
+            ys[128..]
+                .iter()
+                .map(|&y| f64::from(y) * f64::from(y))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(tone(0.15) > 5.0 * tone(0.35));
+    }
+}

@@ -1,0 +1,79 @@
+//! Greenwood cochlear frequency-position function [45].
+//!
+//! f(x) = A (10^(a x) - k) maps normalised cochlear place x in [0, 1]
+//! (apex -> base) to frequency. The paper spaces its filter-bank centre
+//! frequencies on this map ("resonators with center frequencies based on
+//! the Greenwood function").
+
+/// Human cochlea constants (Greenwood 1990).
+pub const A: f64 = 165.4;
+pub const ALPHA: f64 = 2.1;
+pub const K: f64 = 0.88;
+
+/// Frequency (Hz) at normalised place x in [0, 1].
+pub fn place_to_freq(x: f64) -> f64 {
+    A * (10f64.powf(ALPHA * x) - K)
+}
+
+/// Inverse map: normalised place for frequency f (Hz).
+pub fn freq_to_place(f: f64) -> f64 {
+    ((f / A + K).log10()) / ALPHA
+}
+
+/// `n` centre frequencies Greenwood-spaced (uniform on the place axis)
+/// between f_lo and f_hi inclusive, ascending.
+pub fn centers(n: usize, f_lo: f64, f_hi: f64) -> Vec<f64> {
+    assert!(n >= 1 && f_lo > 0.0 && f_hi > f_lo);
+    let x_lo = freq_to_place(f_lo);
+    let x_hi = freq_to_place(f_hi);
+    (0..n)
+        .map(|i| {
+            let t = if n == 1 {
+                0.5
+            } else {
+                i as f64 / (n - 1) as f64
+            };
+            place_to_freq(x_lo + t * (x_hi - x_lo))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        for f in [100.0, 440.0, 1000.0, 4000.0, 7800.0] {
+            let x = freq_to_place(f);
+            assert!((place_to_freq(x) - f).abs() / f < 1e-10);
+        }
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        let cs = centers(30, 125.0, 7800.0);
+        assert_eq!(cs.len(), 30);
+        for w in cs.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!((cs[0] - 125.0).abs() < 1e-6);
+        assert!((cs[29] - 7800.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn denser_at_low_frequencies() {
+        // Greenwood spacing is roughly log: low-frequency gaps are smaller
+        let cs = centers(10, 125.0, 7800.0);
+        assert!(cs[1] - cs[0] < cs[9] - cs[8]);
+    }
+
+    #[test]
+    fn known_values() {
+        // x = 0 -> A (1 - k) = 165.4 * 0.12 = 19.85 Hz (cochlear apex)
+        assert!((place_to_freq(0.0) - 19.848).abs() < 1e-2);
+        // x = 1 -> ~20.7 kHz (base)
+        let base = place_to_freq(1.0);
+        assert!(base > 20_000.0 && base < 21_000.0, "{base}");
+    }
+}

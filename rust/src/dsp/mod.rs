@@ -1,0 +1,8 @@
+//! Signal-processing substrate: FIR design (windowed sinc), the Greenwood
+//! cochlear map, the paper's multirate octave band plan, and test signals.
+
+pub mod chirp;
+pub mod fir;
+pub mod greenwood;
+pub mod multirate;
+pub mod window;

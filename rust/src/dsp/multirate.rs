@@ -1,0 +1,380 @@
+//! Multirate octave band plan (paper §III-C, Fig. 3, following the
+//! CAR-lite multi-rate frequency model [28]).
+//!
+//! The spectrum is split into `n_octaves` octaves; octave `o` runs at the
+//! decimated rate fs / 2^o and hosts `filters_per_octave` band-pass
+//! filters covering the top octave [rate/4, rate/2] of its local rate.
+//! Each octave transition applies an anti-aliasing low pass (cutoff 1/4)
+//! followed by a factor-2 decimation. Because every octave sees the same
+//! *normalised* band, a fixed low filter order (the paper's 15 /
+//! 16 taps) suffices for every band — that is exactly the Fig. 4 story.
+
+use super::fir::{self, FirFilter};
+use super::greenwood;
+use super::window::Window;
+
+/// How centre frequencies are placed inside each octave band.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Spacing {
+    /// Equally spaced edges inside the octave (paper: "cutoff frequencies
+    /// is equally spaced within the octaves").
+    Uniform,
+    /// Uniform on the Greenwood cochlear place axis inside the octave.
+    Greenwood,
+}
+
+/// One band of the plan.
+#[derive(Clone, Debug)]
+pub struct Band {
+    /// Global index p (0-based; paper's Phi_{p+1}).
+    pub p: usize,
+    pub octave: usize,
+    /// Local sampling rate of this band's octave (Hz).
+    pub local_rate: f64,
+    /// Band edges in Hz (global, physical).
+    pub f1_hz: f64,
+    pub f2_hz: f64,
+    pub center_hz: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct BandPlan {
+    pub sample_rate: f64,
+    pub n_octaves: usize,
+    pub filters_per_octave: usize,
+    pub bp_taps: usize,
+    pub lp_taps: usize,
+    pub spacing: Spacing,
+    pub window: Window,
+}
+
+impl BandPlan {
+    /// The paper's configuration: 16 kHz, 6 octaves x 5 filters,
+    /// 16-tap band pass (order 15), 6-tap low pass.
+    pub fn paper_default() -> BandPlan {
+        BandPlan {
+            sample_rate: 16_000.0,
+            n_octaves: 6,
+            filters_per_octave: 5,
+            bp_taps: 16,
+            lp_taps: 6,
+            spacing: Spacing::Uniform,
+            window: Window::Hamming,
+        }
+    }
+
+    pub fn n_filters(&self) -> usize {
+        self.n_octaves * self.filters_per_octave
+    }
+
+    pub fn octave_rate(&self, o: usize) -> f64 {
+        self.sample_rate / f64::from(1u32 << o)
+    }
+
+    /// All bands, octave-major (octave 0 = highest frequencies first,
+    /// matching the paper's descending cut-off arrangement).
+    pub fn bands(&self) -> Vec<Band> {
+        let mut out = Vec::with_capacity(self.n_filters());
+        for o in 0..self.n_octaves {
+            let rate = self.octave_rate(o);
+            let (lo, hi) = (rate / 4.0, rate / 2.0);
+            let edges = self.octave_edges(lo, hi);
+            for i in 0..self.filters_per_octave {
+                let (f1, f2) = (edges[i], edges[i + 1]);
+                out.push(Band {
+                    p: o * self.filters_per_octave + i,
+                    octave: o,
+                    local_rate: rate,
+                    f1_hz: f1,
+                    f2_hz: f2,
+                    center_hz: 0.5 * (f1 + f2),
+                });
+            }
+        }
+        out
+    }
+
+    fn octave_edges(&self, lo: f64, hi: f64) -> Vec<f64> {
+        let f = self.filters_per_octave;
+        match self.spacing {
+            Spacing::Uniform => (0..=f)
+                .map(|i| lo + (hi - lo) * i as f64 / f as f64)
+                .collect(),
+            Spacing::Greenwood => {
+                let xl = greenwood::freq_to_place(lo);
+                let xh = greenwood::freq_to_place(hi);
+                (0..=f)
+                    .map(|i| greenwood::place_to_freq(xl + (xh - xl) * i as f64 / f as f64))
+                    .collect()
+            }
+        }
+    }
+
+    /// Band-pass coefficients per band, designed at each band's *local*
+    /// rate with the fixed low order (`bp_taps`). Layout: [octave][filter].
+    pub fn bp_coeffs(&self) -> Vec<Vec<Vec<f64>>> {
+        let bands = self.bands();
+        (0..self.n_octaves)
+            .map(|o| {
+                bands
+                    .iter()
+                    .filter(|b| b.octave == o)
+                    .map(|b| {
+                        let rate = b.local_rate;
+                        let f1 = (b.f1_hz / rate).max(0.01);
+                        let f2 = (b.f2_hz / rate).min(0.497);
+                        fir::bandpass(f1, f2, self.bp_taps, self.window)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Anti-aliasing low-pass per octave transition (n_octaves - 1 of
+    /// them), cutoff 1/4 of the local rate (the next octave's Nyquist) —
+    /// any lower and the top band of the next octave is attenuated.
+    pub fn lp_coeffs(&self) -> Vec<Vec<f64>> {
+        (0..self.n_octaves - 1)
+            .map(|_| fir::lowpass(0.25, self.lp_taps, self.window))
+            .collect()
+    }
+
+    /// Flattened f32 coefficient tensors in the HLO layout
+    /// (bp: [O, F, bp_taps] row-major; lp: [O-1, lp_taps]).
+    pub fn coeff_tensors(&self) -> (Vec<f32>, Vec<f32>) {
+        let bp: Vec<f32> = self
+            .bp_coeffs()
+            .iter()
+            .flatten()
+            .flatten()
+            .map(|&x| x as f32)
+            .collect();
+        let lp: Vec<f32> = self
+            .lp_coeffs()
+            .iter()
+            .flatten()
+            .map(|&x| x as f32)
+            .collect();
+        assert_eq!(bp.len(), self.n_octaves * self.filters_per_octave * self.bp_taps);
+        assert_eq!(lp.len(), (self.n_octaves - 1) * self.lp_taps);
+        (bp, lp)
+    }
+
+    /// FIR orders a *non-multirate* (direct, full-rate) design needs for
+    /// the same bands — the paper's Fig. 4(a): order 15 at the top octave,
+    /// doubling per octave, clamped at 200 ("filter order ranges from 15
+    /// to 200").
+    pub fn direct_orders(&self) -> Vec<usize> {
+        (0..self.n_octaves)
+            .map(|o| ((self.bp_taps - 1) << o).min(200))
+            .collect()
+    }
+
+    /// Direct full-rate band-pass design per band (Fig. 4a comparator).
+    pub fn direct_bp_coeffs(&self) -> Vec<Vec<f64>> {
+        let orders = self.direct_orders();
+        self.bands()
+            .iter()
+            .map(|b| {
+                let f1 = (b.f1_hz / self.sample_rate).max(0.002);
+                let f2 = (b.f2_hz / self.sample_rate).min(0.497);
+                fir::bandpass(f1, f2, orders[b.octave] + 1, self.window)
+            })
+            .collect()
+    }
+}
+
+/// Streaming float multirate filter bank (the conventional-MAC reference
+/// path used by Fig. 4b and the float feature extractor).
+pub struct MultirateFirBank {
+    plan: BandPlan,
+    bp: Vec<Vec<FirFilter>>, // [octave][filter]
+    lp: Vec<FirFilter>,      // [octave transition]
+    /// decimation phase per transition (keep every 2nd sample)
+    phase: Vec<bool>,
+}
+
+impl MultirateFirBank {
+    pub fn new(plan: &BandPlan) -> MultirateFirBank {
+        let bp = plan
+            .bp_coeffs()
+            .into_iter()
+            .map(|oct| oct.into_iter().map(FirFilter::new).collect())
+            .collect();
+        let lp = plan
+            .lp_coeffs()
+            .into_iter()
+            .map(FirFilter::new)
+            .collect();
+        MultirateFirBank {
+            plan: plan.clone(),
+            bp,
+            lp,
+            phase: vec![false; plan.n_octaves - 1],
+        }
+    }
+
+    pub fn plan(&self) -> &BandPlan {
+        &self.plan
+    }
+
+    pub fn reset(&mut self) {
+        self.bp.iter_mut().flatten().for_each(FirFilter::reset);
+        self.lp.iter_mut().for_each(FirFilter::reset);
+        self.phase.iter_mut().for_each(|p| *p = false);
+    }
+
+    /// Process a block; returns per-band output blocks (octave o's block
+    /// is len/2^o samples long — its local rate).
+    pub fn process(&mut self, xs: &[f32]) -> Vec<Vec<f32>> {
+        let n_oct = self.plan.n_octaves;
+        let f = self.plan.filters_per_octave;
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); n_oct * f];
+        let mut sig = xs.to_vec();
+        for o in 0..n_oct {
+            for (i, filt) in self.bp[o].iter_mut().enumerate() {
+                outs[o * f + i] = filt.process(&sig);
+            }
+            if o < n_oct - 1 {
+                let low = self.lp[o].process(&sig);
+                let mut dec = Vec::with_capacity(low.len() / 2 + 1);
+                for &v in &low {
+                    if !self.phase[o] {
+                        dec.push(v);
+                    }
+                    self.phase[o] = !self.phase[o];
+                }
+                sig = dec;
+            }
+        }
+        outs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::chirp;
+
+    #[test]
+    fn paper_plan_shape() {
+        let plan = BandPlan::paper_default();
+        let bands = plan.bands();
+        assert_eq!(bands.len(), 30);
+        // octave 0 covers [4k, 8k] at 16 kHz
+        assert!((bands[0].f1_hz - 4000.0).abs() < 1e-9);
+        assert!((bands[4].f2_hz - 8000.0).abs() < 1e-9);
+        // last octave at 500 Hz covers [125, 250]
+        let last = &bands[29];
+        assert!((last.local_rate - 500.0).abs() < 1e-9);
+        assert!((last.f2_hz - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bands_cover_contiguously_within_octave() {
+        let plan = BandPlan::paper_default();
+        for w in plan.bands().chunks(5) {
+            for pair in w.windows(2) {
+                assert!((pair[0].f2_hz - pair[1].f1_hz).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn greenwood_spacing_monotone() {
+        let mut plan = BandPlan::paper_default();
+        plan.spacing = Spacing::Greenwood;
+        let bands = plan.bands();
+        for w in bands.chunks(5) {
+            for pair in w.windows(2) {
+                assert!(pair[1].center_hz > pair[0].center_hz);
+            }
+        }
+    }
+
+    #[test]
+    fn coeff_tensor_shapes() {
+        let plan = BandPlan::paper_default();
+        let (bp, lp) = plan.coeff_tensors();
+        assert_eq!(bp.len(), 6 * 5 * 16);
+        assert_eq!(lp.len(), 5 * 6);
+    }
+
+    #[test]
+    fn direct_orders_match_paper_range() {
+        let plan = BandPlan::paper_default();
+        let orders = plan.direct_orders();
+        assert_eq!(orders[0], 15);
+        assert_eq!(*orders.last().unwrap(), 200);
+        assert!(orders.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn tone_lands_in_its_band() {
+        // a tone at each band centre produces max energy in (or within
+        // half an octave of) that band. The order-15 filters of the paper
+        // are shallow, so the check is frequency-aware: index adjacency
+        // is meaningless across octave boundaries (p=4's frequency
+        // neighbour is p=0 of the previous octave block).
+        let plan = BandPlan::paper_default();
+        let mut bank = MultirateFirBank::new(&plan);
+        let bands = plan.bands();
+        for &p in &[0usize, 7, 14, 22, 29] {
+            bank.reset();
+            let f = bands[p].center_hz;
+            let sig = chirp::tone(f, 16_384, plan.sample_rate, 1.0);
+            let outs = bank.process(&sig);
+            let energy: Vec<f64> = outs
+                .iter()
+                .map(|ys| {
+                    let skip = ys.len() / 4;
+                    ys[skip..].iter().map(|&y| f64::from(y).powi(2)).sum::<f64>()
+                        / (ys.len() - skip).max(1) as f64
+                })
+                .collect();
+            let best = energy
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let ratio = (bands[best].center_hz / f).log2().abs();
+            assert!(
+                ratio <= 0.55,
+                "tone {f:.0} Hz p={p} best={best} ({:.0} Hz) energies={energy:?}",
+                bands[best].center_hz
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_chunks_equal_whole() {
+        let plan = BandPlan::paper_default();
+        let sig = chirp::linear_chirp(50.0, 7900.0, 4096, plan.sample_rate);
+        let mut whole = MultirateFirBank::new(&plan);
+        let yw = whole.process(&sig);
+        let mut chunked = MultirateFirBank::new(&plan);
+        let mut yc: Vec<Vec<f32>> = vec![Vec::new(); 30];
+        for chunk in sig.chunks(512) {
+            for (acc, part) in yc.iter_mut().zip(chunked.process(chunk)) {
+                acc.extend(part);
+            }
+        }
+        for (a, b) in yw.iter().zip(&yc) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn decimated_lengths() {
+        let plan = BandPlan::paper_default();
+        let mut bank = MultirateFirBank::new(&plan);
+        let outs = bank.process(&vec![0.0f32; 2048]);
+        for o in 0..6 {
+            assert_eq!(outs[o * 5].len(), 2048 >> o);
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Window functions for windowed-sinc FIR design.
+
+use std::f64::consts::PI;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Window {
+    Rect,
+    Hamming,
+    Hann,
+    Blackman,
+}
+
+impl Window {
+    /// w[k] for k in 0..taps.
+    pub fn coeffs(self, taps: usize) -> Vec<f64> {
+        assert!(taps >= 1);
+        let n = (taps - 1) as f64;
+        (0..taps)
+            .map(|k| {
+                if taps == 1 {
+                    return 1.0;
+                }
+                let x = k as f64 / n;
+                match self {
+                    Window::Rect => 1.0,
+                    Window::Hamming => 0.54 - 0.46 * (2.0 * PI * x).cos(),
+                    Window::Hann => 0.5 - 0.5 * (2.0 * PI * x).cos(),
+                    Window::Blackman => {
+                        0.42 - 0.5 * (2.0 * PI * x).cos() + 0.08 * (4.0 * PI * x).cos()
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric() {
+        for w in [Window::Hamming, Window::Hann, Window::Blackman] {
+            let c = w.coeffs(16);
+            for k in 0..8 {
+                assert!((c[k] - c[15 - k]).abs() < 1e-12, "{w:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn endpoints() {
+        let hm = Window::Hamming.coeffs(11);
+        assert!((hm[0] - 0.08).abs() < 1e-12);
+        assert!((hm[5] - 1.0).abs() < 1e-12); // peak at centre
+        let hn = Window::Hann.coeffs(11);
+        assert!(hn[0].abs() < 1e-12);
+        let bk = Window::Blackman.coeffs(11);
+        assert!(bk[0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn rect_is_ones() {
+        assert!(Window::Rect.coeffs(5).iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn single_tap() {
+        assert_eq!(Window::Hamming.coeffs(1), vec![1.0]);
+    }
+}

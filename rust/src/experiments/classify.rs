@@ -1,0 +1,382 @@
+//! Tables III / IV harness: per-class one-vs-all accuracy of the four
+//! systems the paper compares —
+//!   * Normal SVM (floating point) on conventional multirate FIR features,
+//!   * CAR-IHC SVM (floating point) on the IIR cascade features,
+//!   * MP in-filter compute, floating point (HLO path, trained via the
+//!     AOT train-step artifact),
+//!   * MP in-filter compute, W-bit fixed point (hardware model).
+//!
+//! Following the paper, each class is a *balanced* binary task
+//! ("the data is balanced and randomly arranged"): positives of the
+//! class vs an equal number of sampled negatives.
+
+use crate::carihc::CarIhc;
+use crate::datasets::{Clip, Dataset};
+use crate::features;
+use crate::fixed::{FixedConfig, FixedPipeline};
+use crate::mp::machine::{Params, Standardizer};
+use crate::runtime::engine::ModelEngine;
+use crate::svm::{self, Kernel, SmoConfig};
+use crate::train::{train_heads, TrainConfig};
+use crate::util::par::par_map;
+use crate::util::prng::Pcg32;
+use crate::util::table::Table;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct ClassifyConfig {
+    pub seed: u64,
+    pub threads: usize,
+    pub fixed_bits: u32,
+    pub train_cfg: TrainConfig,
+    pub svm: SmoConfig,
+    pub gamma_f: f32,
+}
+
+impl Default for ClassifyConfig {
+    fn default() -> Self {
+        ClassifyConfig {
+            seed: 42,
+            threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            fixed_bits: 8,
+            train_cfg: TrainConfig::default(),
+            svm: SmoConfig::default(),
+            gamma_f: 1.0,
+        }
+    }
+}
+
+/// One Table III/IV row.
+#[derive(Clone, Debug)]
+pub struct ClassRow {
+    pub class: String,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub svs: usize,
+    pub svm_train: f64,
+    pub svm_test: f64,
+    pub car_train: f64,
+    pub car_test: f64,
+    pub mp_train: f64,
+    pub mp_test: f64,
+    pub fx_train: f64,
+    pub fx_test: f64,
+}
+
+/// All per-clip features the four systems need, extracted once.
+pub struct FeatureBank {
+    pub mp_train: Vec<Vec<f32>>,
+    pub mp_test: Vec<Vec<f32>>,
+    pub fir_train: Vec<Vec<f32>>,
+    pub fir_test: Vec<Vec<f32>>,
+    pub car_train: Vec<Vec<f32>>,
+    pub car_test: Vec<Vec<f32>>,
+    /// fixed-point accumulators at the configured width
+    pub fx_train: Vec<Vec<i64>>,
+    pub fx_test: Vec<Vec<i64>>,
+}
+
+pub fn extract_features(
+    engine: &mut ModelEngine,
+    ds: &Dataset,
+    cfg: &ClassifyConfig,
+) -> Result<FeatureBank> {
+    let plan = engine.plan.clone();
+    let clip_len = engine.frame_len() * engine.clip_frames();
+    let trimmed = |clips: &[Clip]| -> Vec<Vec<f32>> {
+        clips.iter().map(|c| c.samples[..clip_len].to_vec()).collect()
+    };
+    let train_samps = trimmed(&ds.train);
+    let test_samps = trimmed(&ds.test);
+
+    crate::log_info!("features: MP (HLO, batched) over {} clips", train_samps.len() + test_samps.len());
+    let mp_train =
+        engine.clip_features_many(&train_samps.iter().map(Vec::as_slice).collect::<Vec<_>>())?;
+    let mp_test =
+        engine.clip_features_many(&test_samps.iter().map(Vec::as_slice).collect::<Vec<_>>())?;
+
+    crate::log_info!("features: conventional FIR (rust, {} threads)", cfg.threads);
+    let fir_train = par_map(&train_samps, cfg.threads, |c| features::fir_features(&plan, c));
+    let fir_test = par_map(&test_samps, cfg.threads, |c| features::fir_features(&plan, c));
+
+    crate::log_info!("features: CAR-IHC cascade");
+    let car = |c: &Vec<f32>| CarIhc::paper_default().features(c);
+    let car_train = par_map(&train_samps, cfg.threads, car);
+    let car_test = par_map(&test_samps, cfg.threads, car);
+
+    crate::log_info!("features: {}-bit fixed-point MP pipeline", cfg.fixed_bits);
+    // accumulators only depend on coefficients/gamma, not on the head
+    // params, so one dummy-calibrated pipeline serves every class
+    let dummy = FixedPipeline::build(
+        &plan,
+        cfg.gamma_f,
+        4.0,
+        &Params::zeros(2, plan.n_filters()),
+        &Standardizer {
+            mu: vec![0.0; plan.n_filters()],
+            sigma: vec![1.0; plan.n_filters()],
+        },
+        &mp_train,
+        FixedConfig::with_bits(cfg.fixed_bits),
+    );
+    let fx_train = par_map(&train_samps, cfg.threads, |c| dummy.accumulate(c));
+    let fx_test = par_map(&test_samps, cfg.threads, |c| dummy.accumulate(c));
+
+    Ok(FeatureBank {
+        mp_train,
+        mp_test,
+        fir_train,
+        fir_test,
+        car_train,
+        car_test,
+        fx_train,
+        fx_test,
+    })
+}
+
+/// Balanced binary index sets for class c.
+fn balanced_indices(
+    clips: &[Clip],
+    class: usize,
+    rng: &mut Pcg32,
+) -> (Vec<usize>, Vec<bool>) {
+    let pos: Vec<usize> = clips
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.label == class)
+        .map(|(i, _)| i)
+        .collect();
+    let neg_pool: Vec<usize> = clips
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.label != class)
+        .map(|(i, _)| i)
+        .collect();
+    let n = pos.len().min(neg_pool.len());
+    let negs = rng.sample_indices(neg_pool.len(), n);
+    let mut idx: Vec<usize> = pos.iter().take(n).copied().collect();
+    let mut labels = vec![true; idx.len()];
+    idx.extend(negs.iter().map(|&j| neg_pool[j]));
+    labels.extend(std::iter::repeat(false).take(n));
+    // shuffle jointly
+    let mut order: Vec<usize> = (0..idx.len()).collect();
+    rng.shuffle(&mut order);
+    (
+        order.iter().map(|&i| idx[i]).collect(),
+        order.iter().map(|&i| labels[i]).collect(),
+    )
+}
+
+fn gather<T: Clone>(rows: &[T], idx: &[usize]) -> Vec<T> {
+    idx.iter().map(|&i| rows[i].clone()).collect()
+}
+
+/// SVM system accuracy on a balanced task over given feature rows.
+fn svm_system(
+    train_x: &[Vec<f32>],
+    train_y: &[bool],
+    test_x: &[Vec<f32>],
+    test_y: &[bool],
+    cfg: &SmoConfig,
+    seed: u64,
+) -> (f64, f64, usize) {
+    let std = Standardizer::fit(train_x);
+    let tr = std.apply_all(train_x);
+    let te = std.apply_all(test_x);
+    let kernel = Kernel::rbf_median_heuristic(&tr, seed);
+    let model = svm::train(&tr, train_y, kernel, cfg);
+    (
+        model.accuracy(&tr, train_y),
+        model.accuracy(&te, test_y),
+        model.n_sv(),
+    )
+}
+
+/// Run the full table over a dataset (Table III: esc10, Table IV: fsdd).
+pub fn run_table(
+    engine: &mut ModelEngine,
+    ds: &Dataset,
+    bank: &FeatureBank,
+    cfg: &ClassifyConfig,
+) -> Result<(Table, Vec<ClassRow>)> {
+    let mut rows = Vec::new();
+    for (c, class_name) in ds.classes.iter().enumerate() {
+        let mut rng = Pcg32::substream(cfg.seed, c as u64);
+        let (tr_idx, tr_y) = balanced_indices(&ds.train, c, &mut rng);
+        let (te_idx, te_y) = balanced_indices(&ds.test, c, &mut rng);
+
+        // --- Normal SVM on conventional FIR features
+        let (svm_tr, svm_te, svs) = svm_system(
+            &gather(&bank.fir_train, &tr_idx),
+            &tr_y,
+            &gather(&bank.fir_test, &te_idx),
+            &te_y,
+            &cfg.svm,
+            cfg.seed ^ c as u64,
+        );
+
+        // --- CAR-IHC SVM
+        let (car_tr, car_te, _) = svm_system(
+            &gather(&bank.car_train, &tr_idx),
+            &tr_y,
+            &gather(&bank.car_test, &te_idx),
+            &te_y,
+            &cfg.svm,
+            cfg.seed ^ (c as u64) << 8,
+        );
+
+        // --- MP in-filter compute (float, HLO train + eval)
+        let mp_tr_x = gather(&bank.mp_train, &tr_idx);
+        let mp_te_x = gather(&bank.mp_test, &te_idx);
+        let std = Standardizer::fit(&mp_tr_x);
+        let k_tr = std.apply_all(&mp_tr_x);
+        let k_te = std.apply_all(&mp_te_x);
+        let targets: Vec<Vec<f32>> = tr_y
+            .iter()
+            .map(|&p| if p { vec![1.0, 0.0] } else { vec![0.0, 1.0] })
+            .collect();
+        let mut tc = cfg.train_cfg;
+        tc.seed = cfg.seed ^ (c as u64) << 16;
+        let (params, _losses) = train_heads(engine, &k_tr, &targets, 2, &tc)?;
+        let mut acc_mp = |k: &[Vec<f32>], y: &[bool]| -> Result<f64> {
+            let m = engine.eval_margins(&params, k, tc.gamma_end)?;
+            Ok(m.iter()
+                .zip(y)
+                .filter(|(m, &p)| (m[0] > m[1]) == p)
+                .count() as f64
+                / y.len().max(1) as f64)
+        };
+        let mp_tr = acc_mp(&k_tr, &tr_y)?;
+        let mp_te = acc_mp(&k_te, &te_y)?;
+
+        // --- MP fixed point (W-bit hardware model) on cached accumulators
+        let pipe = FixedPipeline::build(
+            &engine.plan,
+            cfg.gamma_f,
+            tc.gamma_end,
+            &params,
+            &std,
+            &mp_tr_x,
+            FixedConfig::with_bits(cfg.fixed_bits),
+        );
+        let acc_fx = |accs: &[Vec<i64>], idx: &[usize], y: &[bool]| -> f64 {
+            idx.iter()
+                .zip(y)
+                .filter(|(&i, &p)| {
+                    let k = pipe.standardize(&accs[i]);
+                    let m = pipe.infer(&k);
+                    (m[0] > m[1]) == p
+                })
+                .count() as f64
+                / y.len().max(1) as f64
+        };
+        let fx_tr = acc_fx(&bank.fx_train, &tr_idx, &tr_y);
+        let fx_te = acc_fx(&bank.fx_test, &te_idx, &te_y);
+
+        crate::log_info!(
+            "{class_name}: svm {:.0}/{:.0} car {:.0}/{:.0} mp {:.0}/{:.0} fx {:.0}/{:.0} (svs {svs})",
+            100.0 * svm_tr, 100.0 * svm_te, 100.0 * car_tr, 100.0 * car_te,
+            100.0 * mp_tr, 100.0 * mp_te, 100.0 * fx_tr, 100.0 * fx_te
+        );
+        rows.push(ClassRow {
+            class: class_name.clone(),
+            n_train: tr_y.len(),
+            n_test: te_y.len(),
+            svs,
+            svm_train: svm_tr,
+            svm_test: svm_te,
+            car_train: car_tr,
+            car_test: car_te,
+            mp_train: mp_tr,
+            mp_test: mp_te,
+            fx_train: fx_tr,
+            fx_test: fx_te,
+        });
+    }
+
+    let title = format!(
+        "{}: per-class accuracy (%) — SVM fp / CAR-IHC fp / MP fp / MP {}-bit",
+        ds.name, cfg.fixed_bits
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "class", "n(tr/te)", "SVs", "svm_tr", "svm_te", "car_tr", "car_te",
+            "mp_tr", "mp_te", "fx_tr", "fx_te",
+        ],
+    );
+    let pct = |x: f64| format!("{:.0}", 100.0 * x);
+    for r in &rows {
+        t.row(vec![
+            r.class.clone(),
+            format!("{}/{}", r.n_train, r.n_test),
+            r.svs.to_string(),
+            pct(r.svm_train),
+            pct(r.svm_test),
+            pct(r.car_train),
+            pct(r.car_test),
+            pct(r.mp_train),
+            pct(r.mp_test),
+            pct(r.fx_train),
+            pct(r.fx_test),
+        ]);
+    }
+    // mean row
+    let mean = |f: fn(&ClassRow) -> f64| {
+        let v: Vec<f64> = rows.iter().map(f).collect();
+        crate::util::stats::mean(&v)
+    };
+    t.row(vec![
+        "MEAN".into(),
+        "-".into(),
+        format!("{:.0}", mean(|r| r.svs as f64)),
+        pct(mean(|r| r.svm_train)),
+        pct(mean(|r| r.svm_test)),
+        pct(mean(|r| r.car_train)),
+        pct(mean(|r| r.car_test)),
+        pct(mean(|r| r.mp_train)),
+        pct(mean(|r| r.mp_test)),
+        pct(mean(|r| r.fx_train)),
+        pct(mean(|r| r.fx_test)),
+    ]);
+    Ok((t, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::esc10;
+
+    #[test]
+    fn balanced_indices_are_balanced_and_shuffled() {
+        let ds = esc10::build(3, 0.05);
+        let mut rng = Pcg32::new(1);
+        let (idx, y) = balanced_indices(&ds.train, 2, &mut rng);
+        let pos = y.iter().filter(|&&p| p).count();
+        assert_eq!(pos * 2, y.len());
+        for (&i, &p) in idx.iter().zip(&y) {
+            assert_eq!(ds.train[i].label == 2, p);
+        }
+        // shuffled: not all positives first
+        let first_half_pos = y[..y.len() / 2].iter().filter(|&&p| p).count();
+        assert!(first_half_pos < y.len() / 2);
+    }
+
+    #[test]
+    fn svm_system_on_separable_features() {
+        let mut rng = Pcg32::new(5);
+        let mk = |pos: bool, rng: &mut Pcg32| -> Vec<f32> {
+            (0..6)
+                .map(|_| (rng.normal() * 0.5 + if pos { 2.0 } else { -2.0 }) as f32)
+                .collect()
+        };
+        let train_x: Vec<Vec<f32>> = (0..60).map(|i| mk(i % 2 == 0, &mut rng)).collect();
+        let train_y: Vec<bool> = (0..60).map(|i| i % 2 == 0).collect();
+        let test_x: Vec<Vec<f32>> = (0..30).map(|i| mk(i % 2 == 0, &mut rng)).collect();
+        let test_y: Vec<bool> = (0..30).map(|i| i % 2 == 0).collect();
+        let (tr, te, svs) =
+            svm_system(&train_x, &train_y, &test_x, &test_y, &SmoConfig::default(), 1);
+        assert!(tr > 0.95 && te > 0.9, "tr {tr} te {te}");
+        assert!(svs > 0 && svs < 60);
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §6).
+//!
+//! * [`figures`] — Fig. 4 (multirate vs direct FIR gain response),
+//!   Fig. 6 (MP filter-bank response + distortion metric),
+//!   Fig. 8 (accuracy vs bit width).
+//! * [`tables12`] — Table I (FPGA resources) and Table II (related work).
+//! * [`classify`] — Tables III (ESC-10) and IV (FSDD): the four-system
+//!   accuracy comparison.
+
+pub mod classify;
+pub mod figures;
+pub mod tables12;

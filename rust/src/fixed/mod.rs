@@ -1,0 +1,13 @@
+//! Bit-exact fixed-point hardware behavioural model (paper §IV, Fig. 8).
+//!
+//! Everything in this module computes with additions, subtractions,
+//! comparisons and arithmetic shifts only — the primitives the paper's
+//! multiplierless FPGA datapath provides. `fpga::` layers cycle timing
+//! and resource costs on top of these semantics.
+
+pub mod mp_int;
+pub mod pipeline;
+pub mod q;
+
+pub use pipeline::{FixedConfig, FixedPipeline};
+pub use q::QFormat;

@@ -1,0 +1,186 @@
+//! Integer Margin Propagation — the multiplierless hardware algorithm.
+//!
+//! This is the datapath the FPGA's MP modules implement ([27], Gu [40]):
+//! only additions, subtractions, comparisons and arithmetic shifts.
+//! The Newton division by the active count is replaced by a right shift
+//! by ceil(log2(count)); because the shifted step never exceeds the exact
+//! Newton step, the iterate stays on the f(z) >= 0 side and converges
+//! monotonically, one LSB of overshoot at most (we force a +1 step when
+//! the shift underflows to zero so progress is guaranteed).
+
+/// ceil(log2(n)) for n >= 1 — a priority encoder in hardware.
+pub fn clog2(n: u32) -> u32 {
+    debug_assert!(n >= 1);
+    32 - (n - 1).leading_zeros()
+}
+
+/// floor(log2(n)) for n >= 1.
+pub fn flog2(n: u32) -> u32 {
+    debug_assert!(n >= 1);
+    31 - n.leading_zeros()
+}
+
+/// z = MP(xs, gamma) over i64 fixed-point values (shared format).
+/// `iters` bounds the loop (hardware runs a fixed schedule); returns on
+/// early convergence (resid <= 0 can only be reached at the solution).
+pub fn mp_int(xs: &[i64], gamma: i64, iters: usize) -> i64 {
+    debug_assert!(!xs.is_empty());
+    debug_assert!(gamma >= 0);
+    let n = xs.len() as u32;
+    // Safe start left of the root: z0 = min(xs) - 1 - (gamma >> flog2(n)).
+    // f(z0) = sum(x - z0) - gamma >= n + n*floor(gamma/2^flog2) - gamma
+    //       >= n + (gamma - n) - gamma = 0, since 2^flog2(n) <= n.
+    // (A plain (sum-gamma) >> clog2(n) start is WRONG for sum < gamma:
+    // shifting a negative value by clog2 divides by 2^ceil > n, which
+    // moves the start toward zero — to the right of the root.)
+    let min = xs.iter().copied().min().unwrap();
+    let mut z = min - 1 - (gamma >> flog2(n));
+    for _ in 0..iters {
+        let mut resid = -gamma;
+        let mut count = 0u32;
+        for &x in xs {
+            let d = x - z;
+            if d > 0 {
+                resid += d;
+                count += 1;
+            }
+        }
+        if resid <= 0 {
+            break;
+        }
+        let step = resid >> clog2(count.max(1));
+        z += step.max(1); // guarantee progress at LSB granularity
+    }
+    z
+}
+
+/// Default iteration budget: the shift step halves the residual at least
+/// geometrically, so ~(bits + clog2(n)) iterations reach LSB precision
+/// (empirically <= 14 on 20k random cases; the margin is cheap since the
+/// loop early-exits at resid <= 0).
+pub fn default_iters(n: usize, bits: u32) -> usize {
+    (bits + clog2(n as u32) + 8) as usize
+}
+
+/// Integer MP FIR step (paper eq. 9) on quantised window + coefficients:
+/// builds [h + w, -h - w] and [h - w, -h + w] rows and differences the
+/// two MP outputs. `scratch` must be 2 * h.len() long.
+pub fn mp_fir_step(
+    h: &[i64],
+    window: &[i64], // window[k] = x[n-k], same length as h
+    gamma: i64,
+    iters: usize,
+    scratch: &mut [i64],
+) -> i64 {
+    let m = h.len();
+    debug_assert_eq!(window.len(), m);
+    debug_assert_eq!(scratch.len(), 2 * m);
+    for k in 0..m {
+        scratch[k] = h[k] + window[k];
+        scratch[m + k] = -h[k] - window[k];
+    }
+    let zp = mp_int(scratch, gamma, iters);
+    for k in 0..m {
+        scratch[k] = h[k] - window[k];
+        scratch[m + k] = -h[k] + window[k];
+    }
+    let zm = mp_int(scratch, gamma, iters);
+    zp - zm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::q::QFormat;
+    use crate::mp;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn clog2_values() {
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(3), 2);
+        assert_eq!(clog2(32), 5);
+        assert_eq!(clog2(33), 6);
+    }
+
+    #[test]
+    fn matches_float_mp_within_lsbs() {
+        check("mpint-vs-float", 80, |g| {
+            let n = g.usize(2, 64);
+            let q = QFormat::new(16, 10);
+            let xs_f = g.signal(n, 2.0);
+            let gamma_f = g.f32(0.05, 8.0);
+            let xs_q: Vec<i64> = xs_f.iter().map(|&x| q.quantize_f32(x)).collect();
+            let gamma_q = q.quantize_f32(gamma_f);
+            let z_q = mp_int(&xs_q, gamma_q, default_iters(n, 16));
+            let z_f = mp::mp(&xs_f, gamma_f);
+            let err = (q.dequantize(z_q) - f64::from(z_f)).abs();
+            // quantisation of inputs alone contributes ~lsb; allow a few
+            assert!(err < 6.0 * q.lsb(), "err {err} lsb {}", q.lsb());
+        });
+    }
+
+    #[test]
+    fn residual_nonnegative_small() {
+        // the iterate approaches from the left: resid >= ~-LSB*n
+        check("mpint-residual", 60, |g| {
+            let n = g.usize(2, 32);
+            let xs: Vec<i64> = (0..n).map(|_| g.int(-4096, 4096)).collect();
+            let gamma = g.int(1, 2048);
+            let z = mp_int(&xs, gamma, default_iters(n, 16));
+            let resid: i64 = xs.iter().map(|&x| (x - z).max(0)).sum::<i64>() - gamma;
+            assert!(resid <= 0, "overshoot should stop: resid {resid}");
+            assert!(resid >= -(n as i64) * 2, "undershoot too far: {resid}");
+        });
+    }
+
+    #[test]
+    fn exact_on_simple_cases() {
+        // all equal: z = x - gamma/n exactly when divisible
+        let xs = vec![1000i64; 8];
+        let z = mp_int(&xs, 800, 32);
+        assert!((z - 900).abs() <= 1, "z {z}");
+    }
+
+    #[test]
+    fn gamma_zero_close_to_max() {
+        let xs = vec![5i64, 100, -3, 42];
+        // gamma = 0 is degenerate for the shift algorithm (resid -> 0 only
+        // at max); allow a couple of LSBs
+        let z = mp_int(&xs, 0, 64);
+        assert!((z - 100).abs() <= 2, "z {z}");
+    }
+
+    #[test]
+    fn fir_step_antisymmetry() {
+        check("mpint-fir-antisym", 30, |g| {
+            let m = g.usize(2, 16);
+            let h: Vec<i64> = (0..m).map(|_| g.int(-500, 500)).collect();
+            let w: Vec<i64> = (0..m).map(|_| g.int(-500, 500)).collect();
+            let wneg: Vec<i64> = w.iter().map(|&x| -x).collect();
+            let mut s1 = vec![0i64; 2 * m];
+            let mut s2 = vec![0i64; 2 * m];
+            let y1 = mp_fir_step(&h, &w, 128, 32, &mut s1);
+            let y2 = mp_fir_step(&h, &wneg, 128, 32, &mut s2);
+            assert!((y1 + y2).abs() <= 2, "{y1} vs {y2}");
+        });
+    }
+
+    #[test]
+    fn fir_step_zero_window_zero_output() {
+        let h = vec![100i64, -50, 25];
+        let w = vec![0i64; 3];
+        let mut s = vec![0i64; 6];
+        let y = mp_fir_step(&h, &w, 64, 32, &mut s);
+        assert!(y.abs() <= 1, "y {y}");
+    }
+
+    #[test]
+    fn wide_accumulation_no_overflow() {
+        // 10-bit values, 64-wide rows: i64 path must not wrap
+        let xs = vec![511i64; 64];
+        let z = mp_int(&xs, 1, 64);
+        assert!(z <= 511 && z > 500);
+    }
+}

@@ -1,0 +1,409 @@
+//! The complete W-bit quantised inference pipeline — the behavioural
+//! model of the paper's FPGA datapath (Fig. 7), parameterised by bit
+//! width for the Fig. 8 sweep.
+//!
+//! Stages (all multiplierless: add/sub/compare/shift only):
+//!   1. input samples quantised to W bits,
+//!   2. MP band-pass / low-pass filtering via `mp_int` (shift-Newton),
+//!      stage outputs saturated back to the W-bit datapath format,
+//!   3. HWR + wide accumulation over the clip (RegBank5/6 analogue),
+//!   4. kernel = upper W bits of the accumulator (paper: "the upper 10
+//!      bits of the kernel function are used for inference engine"),
+//!   5. standardisation with mu subtraction and a 3-term CSD shift-add
+//!      scale for 1/sigma (multiplierless; see q::CsdScale),
+//!   6. integer MP inference engine (eqs. 3-7) on W-bit weights.
+
+use super::mp_int::{self, clog2};
+use super::q::{CsdScale, QFormat};
+use crate::dsp::multirate::BandPlan;
+use crate::mp::machine::{Params, Standardizer};
+
+#[derive(Clone, Copy, Debug)]
+pub struct FixedConfig {
+    /// Datapath width W in bits (paper: 8-10).
+    pub bits: u32,
+    /// MP iteration budget per evaluation (hardware runs a fixed loop).
+    pub mp_iters: usize,
+    /// CSD terms for the standardisation scale.
+    pub csd_terms: usize,
+}
+
+impl FixedConfig {
+    pub fn with_bits(bits: u32) -> FixedConfig {
+        FixedConfig {
+            bits,
+            mp_iters: mp_int::default_iters(32, bits),
+            csd_terms: 3,
+        }
+    }
+}
+
+/// Frozen, calibrated fixed-point pipeline (immutable after build; safe
+/// to share across threads for batched evaluation).
+pub struct FixedPipeline {
+    pub cfg: FixedConfig,
+    plan: BandPlan,
+    /// shared sample/coefficient/filter-output format
+    dp_fmt: QFormat,
+    bp_q: Vec<Vec<Vec<i64>>>, // [octave][filter][tap]
+    lp_q: Vec<Vec<i64>>,      // [transition][tap]
+    gamma_f_q: i64,
+    /// per-band accumulator right-shift to form the W-bit kernel.
+    /// Per-band (not global): octave o accumulates over 2^o fewer
+    /// samples, so a single global shift would squash the low octaves
+    /// to a couple of bits — in hardware this is a per-band barrel
+    /// shift setting calibrated at training time.
+    acc_shift: Vec<u32>,
+    mu_q: Vec<i64>,          // in post-shift kernel domain, per band
+    inv_sigma: Vec<CsdScale>,
+    /// standardised-feature / weight / bias / gamma_1 format
+    k_fmt: QFormat,
+    wp_q: Vec<Vec<i64>>,
+    wm_q: Vec<Vec<i64>>,
+    bp_bias_q: Vec<i64>,
+    bm_bias_q: Vec<i64>,
+    gamma_1_q: i64,
+}
+
+impl FixedPipeline {
+    /// Calibrate and freeze the pipeline from float-trained parameters.
+    ///
+    /// `train_phi` are float *raw* (unstandardised) training features used
+    /// to pick the accumulator shift, exactly like a hardware designer
+    /// sizing RegBank5/6 from training data.
+    pub fn build(
+        plan: &BandPlan,
+        gamma_f: f32,
+        gamma_1: f32,
+        params: &Params,
+        std: &Standardizer,
+        train_phi: &[Vec<f32>],
+        cfg: FixedConfig,
+    ) -> FixedPipeline {
+        let w = cfg.bits;
+        // ---- datapath format: samples in [-1,1], coeffs up to max|h|
+        let bp_f = plan.bp_coeffs();
+        let lp_f = plan.lp_coeffs();
+        let coeff_max = bp_f
+            .iter()
+            .flatten()
+            .flatten()
+            .chain(lp_f.iter().flatten())
+            .fold(0.0f64, |a, &b| a.max(b.abs()));
+        let dp_fmt = QFormat::calibrate(w, coeff_max.max(1.0));
+        let bp_q = bp_f
+            .iter()
+            .map(|oct| {
+                oct.iter()
+                    .map(|h| h.iter().map(|&x| dp_fmt.quantize(x)).collect())
+                    .collect()
+            })
+            .collect();
+        let lp_q = lp_f
+            .iter()
+            .map(|h| h.iter().map(|&x| dp_fmt.quantize(x)).collect())
+            .collect();
+        let gamma_f_q = dp_fmt.quantize_f32(gamma_f).max(1);
+
+        // ---- per-band accumulator shift: size each band's kernel
+        // register from its own training-feature range (RegBank5/6
+        // read-out barrel-shift settings, learned at training time)
+        let n_bands = plan.n_filters();
+        let mut acc_shift = Vec::with_capacity(n_bands);
+        for p in 0..n_bands {
+            let max_acc_f = train_phi
+                .iter()
+                .map(|row| f64::from(row[p]).abs())
+                .fold(1e-9f64, f64::max);
+            let max_acc_q = max_acc_f * 2f64.powi(dp_fmt.frac);
+            let need_bits = clog2((max_acc_q as u32).max(1) + 1);
+            acc_shift.push(need_bits.saturating_sub(w - 1));
+        }
+
+        // ---- standardisation in the per-band shifted kernel domain
+        let k_fmt = QFormat::calibrate(w, 4.0); // standardised feats ~N(0,1)
+        let mut mu_q = Vec::with_capacity(n_bands);
+        let mut inv_sigma = Vec::with_capacity(n_bands);
+        for p in 0..n_bands {
+            let acc_to_shifted =
+                2f64.powi(dp_fmt.frac) / 2f64.powi(acc_shift[p] as i32);
+            mu_q.push((f64::from(std.mu[p]) * acc_to_shifted).round() as i64);
+            let c = 2f64.powi(k_fmt.frac)
+                / (f64::from(std.sigma[p]).max(1e-6) * acc_to_shifted);
+            inv_sigma.push(CsdScale::approximate(c, cfg.csd_terms));
+        }
+
+        // ---- inference parameters
+        let q = |rows: &Vec<Vec<f32>>| -> Vec<Vec<i64>> {
+            rows.iter().map(|r| k_fmt.quantize_vec(r)).collect()
+        };
+        FixedPipeline {
+            cfg,
+            plan: plan.clone(),
+            dp_fmt,
+            bp_q,
+            lp_q,
+            gamma_f_q,
+            acc_shift,
+            mu_q,
+            inv_sigma,
+            k_fmt,
+            wp_q: q(&params.wp),
+            wm_q: q(&params.wm),
+            bp_bias_q: k_fmt.quantize_vec(&params.bp),
+            bm_bias_q: k_fmt.quantize_vec(&params.bm),
+            gamma_1_q: k_fmt.quantize_f32(gamma_1).max(1),
+        }
+    }
+
+    pub fn datapath_format(&self) -> QFormat {
+        self.dp_fmt
+    }
+
+    pub fn feature_format(&self) -> QFormat {
+        self.k_fmt
+    }
+
+    /// Integer MP filter-bank features: raw accumulators per band.
+    pub fn accumulate(&self, clip: &[f32]) -> Vec<i64> {
+        let n_oct = self.plan.n_octaves;
+        let f = self.plan.filters_per_octave;
+        let bt = self.plan.bp_taps;
+        let lt = self.plan.lp_taps;
+        let iters = self.cfg.mp_iters;
+        let mut acc = vec![0i64; n_oct * f];
+        let mut sig: Vec<i64> = clip.iter().map(|&x| self.dp_fmt.quantize_f32(x)).collect();
+        let mut scratch = vec![0i64; 2 * bt.max(lt)];
+        let mut window = vec![0i64; bt.max(lt)];
+        for o in 0..n_oct {
+            // band-pass bank: all filters share the input window
+            for (i, h) in self.bp_q[o].iter().enumerate() {
+                window.iter_mut().for_each(|x| *x = 0);
+                for t in 0..sig.len() {
+                    // shift window (newest first)
+                    for k in (1..bt).rev() {
+                        window[k] = window[k - 1];
+                    }
+                    window[0] = sig[t];
+                    let y = mp_int::mp_fir_step(
+                        h,
+                        &window[..bt],
+                        self.gamma_f_q,
+                        iters,
+                        &mut scratch[..2 * bt],
+                    );
+                    let y = self.dp_fmt.saturate(y); // W-bit register write
+                    if y > 0 {
+                        acc[o * f + i] += y; // HWR + accumulate
+                    }
+                }
+            }
+            if o < n_oct - 1 {
+                // anti-alias low pass + decimate by 2
+                let h = &self.lp_q[o];
+                window.iter_mut().for_each(|x| *x = 0);
+                let mut dec = Vec::with_capacity(sig.len() / 2 + 1);
+                for (t, &x) in sig.iter().enumerate() {
+                    for k in (1..lt).rev() {
+                        window[k] = window[k - 1];
+                    }
+                    window[0] = x;
+                    let y = mp_int::mp_fir_step(
+                        h,
+                        &window[..lt],
+                        self.gamma_f_q,
+                        iters,
+                        &mut scratch[..2 * lt],
+                    );
+                    if t % 2 == 0 {
+                        dec.push(self.dp_fmt.saturate(y));
+                    }
+                }
+                sig = dec;
+            }
+        }
+        acc
+    }
+
+    /// Kernel register read-out + standardisation: W-bit feature vector.
+    pub fn standardize(&self, acc: &[i64]) -> Vec<i64> {
+        acc.iter()
+            .enumerate()
+            .map(|(p, &a)| {
+                let k_raw = a >> self.acc_shift[p]; // upper W bits, per band
+                let centred = k_raw - self.mu_q[p];
+                self.k_fmt.saturate(self.inv_sigma[p].apply(centred))
+            })
+            .collect()
+    }
+
+    /// Integer inference engine: per-head margin (z+ - z-) in k_fmt LSBs.
+    pub fn infer(&self, k_q: &[i64]) -> Vec<i64> {
+        let p_len = k_q.len();
+        let mut row = vec![0i64; 2 * p_len + 1];
+        (0..self.wp_q.len())
+            .map(|c| {
+                for i in 0..p_len {
+                    row[i] = self.wp_q[c][i] + k_q[i];
+                    row[p_len + i] = self.wm_q[c][i] - k_q[i];
+                }
+                row[2 * p_len] = self.bp_bias_q[c];
+                let zp = mp_int::mp_int(&row, self.gamma_1_q, self.cfg.mp_iters * 2);
+                for i in 0..p_len {
+                    row[i] = self.wp_q[c][i] - k_q[i];
+                    row[p_len + i] = self.wm_q[c][i] + k_q[i];
+                }
+                row[2 * p_len] = self.bm_bias_q[c];
+                let zm = mp_int::mp_int(&row, self.gamma_1_q, self.cfg.mp_iters * 2);
+                zp - zm
+            })
+            .collect()
+    }
+
+    /// End-to-end W-bit classification: float clip in, per-head margins
+    /// (dequantised to float for reporting) out.
+    pub fn classify(&self, clip: &[f32]) -> Vec<f32> {
+        let acc = self.accumulate(clip);
+        let k = self.standardize(&acc);
+        self.infer(&k)
+            .into_iter()
+            .map(|m| self.k_fmt.dequantize(m) as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::chirp;
+    use crate::mp::filter::MpMultirateBank;
+    use crate::util::prng::Pcg32;
+
+    fn small_plan() -> BandPlan {
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = 3;
+        plan
+    }
+
+    fn toy_setup(bits: u32) -> (BandPlan, FixedPipeline, Standardizer, Params) {
+        let plan = small_plan();
+        let mut rng = Pcg32::new(7);
+        let feats = plan.n_filters();
+        let params = Params {
+            wp: (0..2).map(|_| rng.normal_vec(feats)).collect(),
+            wm: (0..2).map(|_| rng.normal_vec(feats)).collect(),
+            bp: vec![0.1, -0.2],
+            bm: vec![-0.1, 0.2],
+        };
+        // fit standardizer on float MP features of a few random clips
+        let mut bank = MpMultirateBank::new(&plan, 1.0);
+        let phis: Vec<Vec<f32>> = (0..6)
+            .map(|i| {
+                bank.reset();
+                let clip: Vec<f32> = Pcg32::new(100 + i).normal_vec(2048)
+                    .iter()
+                    .map(|x| 0.3 * x)
+                    .collect();
+                bank.features(&clip)
+            })
+            .collect();
+        let std = Standardizer::fit(&phis);
+        let pipe = FixedPipeline::build(
+            &plan,
+            1.0,
+            4.0,
+            &params,
+            &std,
+            &phis,
+            FixedConfig::with_bits(bits),
+        );
+        (plan, pipe, std, params)
+    }
+
+    #[test]
+    fn accumulators_nonnegative() {
+        let (_, pipe, _, _) = toy_setup(10);
+        let clip = chirp::tone(2500.0, 2048, 16_000.0, 0.7);
+        let acc = pipe.accumulate(&clip);
+        assert_eq!(acc.len(), 15);
+        assert!(acc.iter().all(|&a| a >= 0));
+        assert!(acc.iter().any(|&a| a > 0));
+    }
+
+    #[test]
+    fn fixed_features_track_float_features() {
+        // 12-bit pipeline features must correlate strongly with float MP
+        let (plan, pipe, _, _) = toy_setup(12);
+        let clip = chirp::linear_chirp(200.0, 7000.0, 4096, plan.sample_rate);
+        let acc = pipe.accumulate(&clip);
+        let mut bank = MpMultirateBank::new(&plan, 1.0);
+        let phi_f = bank.features(&clip);
+        let fmt = pipe.datapath_format();
+        let acc_f: Vec<f64> = acc.iter().map(|&a| fmt.dequantize(a)).collect();
+        // cosine similarity
+        let dot: f64 = acc_f
+            .iter()
+            .zip(&phi_f)
+            .map(|(&a, &b)| a * f64::from(b))
+            .sum();
+        let na: f64 = acc_f.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let nb: f64 = phi_f.iter().map(|&b| f64::from(b) * f64::from(b)).sum::<f64>().sqrt();
+        let cos = dot / (na * nb).max(1e-12);
+        assert!(cos > 0.98, "cosine {cos}\nint {acc_f:?}\nfloat {phi_f:?}");
+    }
+
+    #[test]
+    fn standardize_produces_bounded_features() {
+        let (_, pipe, _, _) = toy_setup(10);
+        let clip = chirp::tone(1000.0, 2048, 16_000.0, 0.5);
+        let k = pipe.standardize(&pipe.accumulate(&clip));
+        let fmt = pipe.feature_format();
+        assert!(k.iter().all(|&v| v >= fmt.min_q() && v <= fmt.max_q()));
+    }
+
+    #[test]
+    fn classify_is_deterministic() {
+        let (_, pipe, _, _) = toy_setup(8);
+        let clip = chirp::tone(3000.0, 2048, 16_000.0, 0.6);
+        assert_eq!(pipe.classify(&clip), pipe.classify(&clip));
+    }
+
+    #[test]
+    fn higher_bits_closer_to_float_features() {
+        // standardised features from the 12-bit pipeline track the float
+        // MP pipeline much better than the 4-bit ones do (the Fig. 8
+        // mechanism), averaged over a handful of clips — per-clip margin
+        // errors are not monotone in bit width, but feature fidelity is.
+        let (plan, pipe12, std, _) = toy_setup(12);
+        let (_, pipe4, _, _) = toy_setup(4);
+        let mut bank = MpMultirateBank::new(&plan, 1.0);
+        let (mut err12, mut err4) = (0.0f64, 0.0f64);
+        for i in 0..4 {
+            // in-distribution clips: same family AND length as the
+            // standardizer's calibration clips (Phi accumulates over the
+            // clip, so features scale with clip length — real deployments
+            // always use the fixed CLIP_LEN)
+            let clip: Vec<f32> = Pcg32::new(500 + i)
+                .normal_vec(2048)
+                .iter()
+                .map(|x| 0.3 * x)
+                .collect();
+            bank.reset();
+            let k_float = std.apply(&bank.features(&clip));
+            let e = |pipe: &FixedPipeline| -> f64 {
+                let k_q = pipe.standardize(&pipe.accumulate(&clip));
+                let fmt = pipe.feature_format();
+                k_q.iter()
+                    .zip(&k_float)
+                    .map(|(&q, &f)| (fmt.dequantize(q) - f64::from(f)).powi(2))
+                    .sum::<f64>()
+            };
+            err12 += e(&pipe12);
+            err4 += e(&pipe4);
+        }
+        assert!(
+            err12 < 0.5 * err4,
+            "12-bit err {err12} not clearly below 4-bit err {err4}"
+        );
+    }
+}

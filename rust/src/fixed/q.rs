@@ -1,0 +1,232 @@
+//! Fixed-point Q-format arithmetic for the hardware behavioural model.
+//!
+//! The paper deploys at 8-bit fixed point (datapath 10 bits on the FPGA)
+//! and Fig. 8 sweeps the bit width. Values are stored as i64 with an
+//! explicit format (total bits + fraction bits); quantisation points
+//! (inputs, coefficients, weights, stage outputs) round-to-nearest and
+//! saturate to the W-bit two's-complement range, exactly like the
+//! hardware registers they model.
+
+/// A W-bit two's-complement fixed-point format with `frac` fraction bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    pub bits: u32,
+    pub frac: i32,
+}
+
+impl QFormat {
+    pub fn new(bits: u32, frac: i32) -> QFormat {
+        assert!((2..=32).contains(&bits), "bits {bits}");
+        QFormat { bits, frac }
+    }
+
+    /// Format that covers [-max_abs, max_abs] with W bits: picks the
+    /// largest `frac` whose integer range still holds max_abs.
+    pub fn calibrate(bits: u32, max_abs: f64) -> QFormat {
+        assert!(max_abs.is_finite());
+        let ma = max_abs.max(1e-9);
+        // need 2^(bits-1-frac) > ma  =>  frac < bits-1 - log2(ma)
+        let frac = (f64::from(bits) - 1.0 - ma.log2()).floor() as i32;
+        QFormat { bits, frac }
+    }
+
+    pub fn max_q(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    pub fn min_q(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Least significant bit as a real value.
+    pub fn lsb(&self) -> f64 {
+        2f64.powi(-self.frac)
+    }
+
+    /// Round-to-nearest quantisation with saturation.
+    pub fn quantize(&self, x: f64) -> i64 {
+        let scaled = x * 2f64.powi(self.frac);
+        let q = scaled.round() as i64;
+        q.clamp(self.min_q(), self.max_q())
+    }
+
+    pub fn quantize_f32(&self, x: f32) -> i64 {
+        self.quantize(f64::from(x))
+    }
+
+    pub fn dequantize(&self, q: i64) -> f64 {
+        q as f64 * 2f64.powi(-self.frac)
+    }
+
+    pub fn quantize_vec(&self, xs: &[f32]) -> Vec<i64> {
+        xs.iter().map(|&x| self.quantize_f32(x)).collect()
+    }
+
+    pub fn dequantize_vec(&self, qs: &[i64]) -> Vec<f32> {
+        qs.iter().map(|&q| self.dequantize(q) as f32).collect()
+    }
+
+    /// Saturate an already-scaled integer into this format's range (the
+    /// register-write behaviour at datapath stage boundaries).
+    pub fn saturate(&self, q: i64) -> i64 {
+        q.clamp(self.min_q(), self.max_q())
+    }
+
+    /// Re-scale a value from format `from` into this format using only
+    /// arithmetic shifts (round-half-up on right shifts) — what the FPGA
+    /// does between stages of differing precision.
+    pub fn rescale_from(&self, q: i64, from: QFormat) -> i64 {
+        let d = self.frac - from.frac;
+        let v = if d >= 0 {
+            q << d
+        } else {
+            let sh = -d;
+            // round to nearest: add half lsb before the arithmetic shift
+            (q + (1i64 << (sh - 1))) >> sh
+        };
+        self.saturate(v)
+    }
+}
+
+/// Canonic-signed-digit approximation of multiplication by a constant:
+/// x * c ~= sum_i sign_i * (x >> shift_i) — shifts and adds only.
+/// Used for the standardisation scale 1/sigma (the only place the
+/// pipeline would otherwise need a real multiplier; the paper cites CSD
+/// [33] as the standard multiplierless technique).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsdScale {
+    /// (right-shift amount, negative?) terms; shift may be negative
+    /// meaning a left shift.
+    pub terms: Vec<(i32, bool)>,
+}
+
+impl CsdScale {
+    /// Greedy CSD with up to `n_terms` signed power-of-two terms.
+    pub fn approximate(c: f64, n_terms: usize) -> CsdScale {
+        let mut terms = Vec::new();
+        let mut resid = c;
+        for _ in 0..n_terms {
+            if resid == 0.0 || resid.abs() < 1e-12 {
+                break;
+            }
+            let e = resid.abs().log2().round() as i32;
+            let neg = resid < 0.0;
+            terms.push((-e, neg)); // store as right-shift amount
+            let val = if neg { -(2f64.powi(e)) } else { 2f64.powi(e) };
+            resid -= val;
+        }
+        CsdScale { terms }
+    }
+
+    /// Apply to a fixed-point value (shifts + adds only).
+    pub fn apply(&self, x: i64) -> i64 {
+        let mut acc = 0i64;
+        for &(sh, neg) in &self.terms {
+            let t = if sh >= 0 {
+                // round-to-nearest right shift
+                if sh == 0 {
+                    x
+                } else {
+                    (x + (1i64 << (sh - 1))) >> sh
+                }
+            } else {
+                x << (-sh)
+            };
+            acc += if neg { -t } else { t };
+        }
+        acc
+    }
+
+    /// The real value this CSD encodes.
+    pub fn value(&self) -> f64 {
+        self.terms
+            .iter()
+            .map(|&(sh, neg)| {
+                let v = 2f64.powi(-sh);
+                if neg {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn quantize_roundtrip_within_lsb() {
+        check("q-roundtrip", 60, |g| {
+            let bits = g.usize(4, 16) as u32;
+            let q = QFormat::calibrate(bits, 1.0);
+            let x = g.f64(-0.99, 0.99);
+            let err = (q.dequantize(q.quantize(x)) - x).abs();
+            assert!(err <= 0.5 * q.lsb() + 1e-12, "err {err} lsb {}", q.lsb());
+        });
+    }
+
+    #[test]
+    fn saturation() {
+        let q = QFormat::new(8, 7); // [-1, 1)
+        assert_eq!(q.quantize(5.0), 127);
+        assert_eq!(q.quantize(-5.0), -128);
+        assert_eq!(q.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn calibrate_covers_range() {
+        check("q-calibrate", 40, |g| {
+            let bits = g.usize(4, 16) as u32;
+            let ma = g.f64(0.01, 1000.0);
+            let q = QFormat::calibrate(bits, ma);
+            // max_abs must be representable (not saturated away entirely)
+            let recon = q.dequantize(q.quantize(ma));
+            assert!(recon > 0.4 * ma, "ma {ma} recon {recon} fmt {q:?}");
+            assert!(recon <= ma * 1.01 + q.lsb());
+        });
+    }
+
+    #[test]
+    fn rescale_between_formats() {
+        let a = QFormat::new(16, 12);
+        let b = QFormat::new(8, 4);
+        let x = 1.625f64;
+        let qa = a.quantize(x);
+        let qb = b.rescale_from(qa, a);
+        assert!((b.dequantize(qb) - x).abs() <= 0.5 * b.lsb());
+        // widening preserves the value exactly
+        let back = a.rescale_from(qb, b);
+        assert!((a.dequantize(back) - x).abs() <= 0.5 * b.lsb());
+    }
+
+    #[test]
+    fn csd_three_terms_accurate() {
+        check("csd-accuracy", 60, |g| {
+            let c = g.f64(0.02, 50.0);
+            let csd = CsdScale::approximate(c, 3);
+            let rel = (csd.value() - c).abs() / c;
+            assert!(rel < 0.07, "c {c} got {} rel {rel}", csd.value());
+        });
+    }
+
+    #[test]
+    fn csd_apply_matches_value() {
+        let c = 0.3123;
+        let csd = CsdScale::approximate(c, 3);
+        let x = 1i64 << 16;
+        let y = csd.apply(x);
+        let expect = csd.value() * x as f64;
+        assert!((y as f64 - expect).abs() < 4.0, "{y} vs {expect}");
+    }
+
+    #[test]
+    fn csd_negative_constant() {
+        let csd = CsdScale::approximate(-0.75, 3);
+        assert!((csd.value() + 0.75).abs() < 1e-9);
+        assert_eq!(csd.apply(64), -48);
+    }
+}

@@ -1,0 +1,18 @@
+//! FPGA implementation model (paper §IV, Fig. 7, Tables I & II).
+//!
+//! Two halves:
+//! * [`sim`] — a cycle-level simulator of the Fig. 7 datapath: three
+//!   time-multiplexed MP modules (MP0: anti-alias LP filters; MP1:
+//!   octave-1 BP bank; MP2: decimated-octave BP banks) fed by the
+//!   16 kHz sample clock with 3125 cycles between samples at 50 MHz,
+//!   plus the MP3-5 inference engine at clip boundaries. Verifies
+//!   schedulability (queues bounded, deadlines met) and reports
+//!   utilisation — the timing claims behind Table I.
+//! * [`resources`] — a per-primitive LUT/FF cost model of the same
+//!   architecture (adders, comparators, shifters, register banks,
+//!   LUT-ROMs), which regenerates Table I and the Table II comparison,
+//!   including the multiplier-cost argument (Baugh-Wooley LUT
+//!   equivalents) the paper uses against [6].
+
+pub mod resources;
+pub mod sim;

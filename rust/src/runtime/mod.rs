@@ -1,0 +1,302 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once per process,
+//! execute from the rust hot path.
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//!
+//! `PjRtLoadedExecutable` is not Send/Sync (raw C pointers), so a
+//! [`Runtime`] is owned by one dispatcher thread; the coordinator feeds
+//! it through channels (see coordinator::server).
+
+pub mod engine;
+
+use crate::config::ModelConstants;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape/arity metadata for one artifact, from manifest.json.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    fn from_json(name: &str, j: &Json) -> Result<ArtifactMeta> {
+        Ok(ArtifactMeta {
+            name: name.to_string(),
+            file: j
+                .get("file")
+                .as_str()
+                .context("artifact missing 'file'")?
+                .to_string(),
+            inputs: j
+                .get("inputs")
+                .as_shape_list()
+                .context("artifact missing 'inputs'")?,
+            outputs: j
+                .get("outputs")
+                .as_shape_list()
+                .context("artifact missing 'outputs'")?,
+        })
+    }
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if shape.len() == 1 && shape[0] == data.len() {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+/// Scalar f32 literal (shape f32[]).
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::from(x)
+}
+
+/// Flatten a literal back to Vec<f32>.
+pub fn to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+/// The process-wide PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub constants: ModelConstants,
+    artifacts: HashMap<String, ArtifactMeta>,
+    cache: HashMap<String, Loaded>,
+    /// executions per artifact (telemetry)
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory, parse + validate the manifest and
+    /// start a PJRT CPU client. Compilation is lazy (first call).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let (manifest, constants) = crate::config::load_manifest(dir)?;
+        let mut artifacts = HashMap::new();
+        for (name, meta) in manifest
+            .get("artifacts")
+            .as_obj()
+            .context("manifest missing 'artifacts'")?
+        {
+            artifacts.insert(name.clone(), ArtifactMeta::from_json(name, meta)?);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        crate::log_info!(
+            "runtime: platform={} devices={} artifacts={} dir={}",
+            client.platform_name(),
+            client.device_count(),
+            artifacts.len(),
+            dir.display()
+        );
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            constants,
+            artifacts,
+            cache: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))
+    }
+
+    /// Compile (cached) the named artifact.
+    pub fn ensure_loaded(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.meta(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        crate::log_info!(
+            "runtime: compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache.insert(name.to_string(), Loaded { exe, meta });
+        Ok(())
+    }
+
+    /// Execute an artifact on already-built literals; returns the
+    /// flattened output tuple. Input arity and element counts are
+    /// validated against the manifest.
+    pub fn call_literals(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_loaded(name)?;
+        let loaded = self.cache.get(name).unwrap();
+        if inputs.len() != loaded.meta.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                loaded.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (l, shape)) in inputs.iter().zip(&loaded.meta.inputs).enumerate() {
+            let have = l.element_count();
+            if have != numel(shape) {
+                bail!(
+                    "artifact {name} input {i}: expected {:?} ({} elems), literal has {}",
+                    shape,
+                    numel(shape),
+                    have
+                );
+            }
+        }
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+        if parts.len() != loaded.meta.outputs.len() {
+            bail!(
+                "artifact {name}: manifest says {} outputs, got {}",
+                loaded.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Convenience: flat-f32 inputs (with shapes from the manifest) ->
+    /// flat-f32 outputs.
+    pub fn call(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let meta = self.meta(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&meta.inputs)
+            .map(|(data, shape)| {
+                if shape.is_empty() {
+                    anyhow::ensure!(data.len() == 1, "scalar input needs 1 element");
+                    Ok(lit_scalar(data[0]))
+                } else {
+                    lit(data, shape)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let outs = self.call_literals(name, &lits)?;
+        outs.iter().map(to_vec).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn lit_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let l = lit(&data, &[3, 4]).unwrap();
+        assert_eq!(to_vec(&l).unwrap(), data);
+        let s = lit_scalar(2.5);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn mp_op_artifact_matches_rust_mp() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::open(&artifacts_dir()).unwrap();
+        let mut rng = crate::util::prng::Pcg32::new(3);
+        let x: Vec<f32> = rng.normal_vec(256 * 32);
+        let gamma = 1.7f32;
+        let out = rt.call("mp_op", &[x.clone(), vec![gamma]]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 256);
+        for (row, &z_hlo) in out[0].iter().enumerate() {
+            let z_ref = crate::mp::mp(&x[row * 32..(row + 1) * 32], gamma);
+            assert!(
+                (z_hlo - z_ref).abs() < 1e-4,
+                "row {row}: hlo {z_hlo} rust {z_ref}"
+            );
+        }
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = Runtime::open(&artifacts_dir()).unwrap();
+        // wrong arity
+        assert!(rt.call("mp_op", &[vec![0.0; 256 * 32]]).is_err());
+        // wrong element count
+        assert!(rt.call("mp_op", &[vec![0.0; 10], vec![1.0]]).is_err());
+        // unknown artifact
+        assert!(rt.call("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn exec_counts_accumulate() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = Runtime::open(&artifacts_dir()).unwrap();
+        let x = vec![0.0f32; 256 * 32];
+        rt.call("mp_op", &[x.clone(), vec![1.0]]).unwrap();
+        rt.call("mp_op", &[x, vec![1.0]]).unwrap();
+        assert_eq!(rt.exec_counts.get("mp_op"), Some(&2));
+    }
+}

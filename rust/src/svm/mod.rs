@@ -1,0 +1,335 @@
+//! Support Vector Machine baseline (paper Table III "Normal SVM,
+//! Floating Point") — C-SVM trained with Platt's SMO, from scratch
+//! (the paper uses MATLAB `fitcsvm`; see DESIGN.md §4).
+
+use crate::util::prng::Pcg32;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    Linear,
+    /// K(a,b) = exp(-gamma * ||a-b||^2)
+    Rbf { gamma: f64 },
+}
+
+impl Kernel {
+    pub fn eval(&self, a: &[f32], b: &[f32]) -> f64 {
+        match *self {
+            Kernel::Linear => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| f64::from(x) * f64::from(y))
+                .sum(),
+            Kernel::Rbf { gamma } => {
+                let d2: f64 = a
+                    .iter()
+                    .zip(b)
+                    .map(|(&x, &y)| {
+                        let d = f64::from(x) - f64::from(y);
+                        d * d
+                    })
+                    .sum();
+                (-gamma * d2).exp()
+            }
+        }
+    }
+
+    /// Median-distance heuristic for the RBF gamma.
+    pub fn rbf_median_heuristic(rows: &[Vec<f32>], seed: u64) -> Kernel {
+        let mut rng = Pcg32::new(seed);
+        let n = rows.len();
+        let mut d2s = Vec::new();
+        for _ in 0..200.min(n * n) {
+            let i = rng.below(n as u32) as usize;
+            let j = rng.below(n as u32) as usize;
+            if i == j {
+                continue;
+            }
+            let d2: f64 = rows[i]
+                .iter()
+                .zip(&rows[j])
+                .map(|(&x, &y)| (f64::from(x) - f64::from(y)).powi(2))
+                .sum();
+            d2s.push(d2);
+        }
+        let med = crate::util::stats::median(&d2s).max(1e-9);
+        Kernel::Rbf { gamma: 1.0 / med }
+    }
+}
+
+/// Trained binary SVM: only the support vectors are kept.
+#[derive(Clone, Debug)]
+pub struct SvmModel {
+    pub kernel: Kernel,
+    pub support: Vec<Vec<f32>>,
+    /// alpha_i * y_i per support vector
+    pub coef: Vec<f64>,
+    pub b: f64,
+}
+
+impl SvmModel {
+    pub fn n_sv(&self) -> usize {
+        self.support.len()
+    }
+
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        self.support
+            .iter()
+            .zip(&self.coef)
+            .map(|(sv, &c)| c * self.kernel.eval(sv, x))
+            .sum::<f64>()
+            + self.b
+    }
+
+    pub fn predict(&self, x: &[f32]) -> bool {
+        self.decision(x) > 0.0
+    }
+
+    pub fn accuracy(&self, xs: &[Vec<f32>], ys: &[bool]) -> f64 {
+        let correct = xs
+            .iter()
+            .zip(ys)
+            .filter(|(x, &y)| self.predict(x) == y)
+            .count();
+        correct as f64 / xs.len().max(1) as f64
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SmoConfig {
+    pub c: f64,
+    pub tol: f64,
+    pub max_passes: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for SmoConfig {
+    fn default() -> Self {
+        SmoConfig {
+            c: 10.0,
+            tol: 1e-3,
+            max_passes: 5,
+            max_iters: 20_000,
+            seed: 7,
+        }
+    }
+}
+
+/// Platt's simplified SMO. `ys` are class labels as booleans.
+/// The full kernel matrix is cached (training sets here are <= ~2000)
+/// along with the error cache so each pass is O(n^2) not O(n^3).
+pub fn train(xs: &[Vec<f32>], ys: &[bool], kernel: Kernel, cfg: &SmoConfig) -> SvmModel {
+    let n = xs.len();
+    assert!(n >= 2, "need at least 2 training points");
+    assert_eq!(ys.len(), n);
+    let y: Vec<f64> = ys.iter().map(|&b| if b { 1.0 } else { -1.0 }).collect();
+
+    // kernel cache (n x n, f32 to halve memory)
+    let mut kmat = vec![0f32; n * n];
+    for i in 0..n {
+        for j in i..n {
+            let v = kernel.eval(&xs[i], &xs[j]) as f32;
+            kmat[i * n + j] = v;
+            kmat[j * n + i] = v;
+        }
+    }
+    let k = |i: usize, j: usize| f64::from(kmat[i * n + j]);
+
+    let mut alpha = vec![0.0f64; n];
+    let mut b = 0.0f64;
+    // error cache: e[i] = f(x_i) - y_i, updated incrementally
+    let mut e: Vec<f64> = (0..n).map(|i| -y[i]).collect();
+
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut passes = 0;
+    let mut iters = 0;
+    while passes < cfg.max_passes && iters < cfg.max_iters {
+        let mut changed = 0;
+        for i in 0..n {
+            iters += 1;
+            let ei = e[i];
+            let violates = (y[i] * ei < -cfg.tol && alpha[i] < cfg.c)
+                || (y[i] * ei > cfg.tol && alpha[i] > 0.0);
+            if !violates {
+                continue;
+            }
+            // second-choice heuristic: j maximising |ei - ej|, with a
+            // random fallback to escape ties
+            let mut j = {
+                let mut best = usize::MAX;
+                let mut best_gap = -1.0;
+                for (cand, &ecand) in e.iter().enumerate() {
+                    if cand != i && (ecand - ei).abs() > best_gap {
+                        best_gap = (ecand - ei).abs();
+                        best = cand;
+                    }
+                }
+                best
+            };
+            if j == usize::MAX || rng.below(8) == 0 {
+                j = rng.below(n as u32 - 1) as usize;
+                if j >= i {
+                    j += 1;
+                }
+            }
+            let ej = e[j];
+            let (ai_old, aj_old) = (alpha[i], alpha[j]);
+            let (lo, hi) = if (y[i] - y[j]).abs() > 1e-12 {
+                (
+                    (alpha[j] - alpha[i]).max(0.0),
+                    (cfg.c + alpha[j] - alpha[i]).min(cfg.c),
+                )
+            } else {
+                (
+                    (alpha[i] + alpha[j] - cfg.c).max(0.0),
+                    (alpha[i] + alpha[j]).min(cfg.c),
+                )
+            };
+            if hi - lo < 1e-12 {
+                continue;
+            }
+            let eta = 2.0 * k(i, j) - k(i, i) - k(j, j);
+            if eta >= -1e-12 {
+                continue;
+            }
+            let mut aj = aj_old - y[j] * (ei - ej) / eta;
+            aj = aj.clamp(lo, hi);
+            if (aj - aj_old).abs() < 1e-7 {
+                continue;
+            }
+            let ai = ai_old + y[i] * y[j] * (aj_old - aj);
+            alpha[i] = ai;
+            alpha[j] = aj;
+            let b_old = b;
+            let b1 = b - ei
+                - y[i] * (ai - ai_old) * k(i, i)
+                - y[j] * (aj - aj_old) * k(i, j);
+            let b2 = b - ej
+                - y[i] * (ai - ai_old) * k(i, j)
+                - y[j] * (aj - aj_old) * k(j, j);
+            b = if ai > 0.0 && ai < cfg.c {
+                b1
+            } else if aj > 0.0 && aj < cfg.c {
+                b2
+            } else {
+                0.5 * (b1 + b2)
+            };
+            // incremental error-cache update
+            let di = y[i] * (ai - ai_old);
+            let dj = y[j] * (aj - aj_old);
+            let db = b - b_old;
+            for (t, et) in e.iter_mut().enumerate() {
+                *et += di * k(i, t) + dj * k(j, t) + db;
+            }
+            changed += 1;
+        }
+        passes = if changed == 0 { passes + 1 } else { 0 };
+    }
+
+    let mut support = Vec::new();
+    let mut coef = Vec::new();
+    for i in 0..n {
+        if alpha[i] > 1e-8 {
+            support.push(xs[i].clone());
+            coef.push(alpha[i] * y[i]);
+        }
+    }
+    SvmModel {
+        kernel,
+        support,
+        coef,
+        b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(seed: u64, n: usize, sep: f64) -> (Vec<Vec<f32>>, Vec<bool>) {
+        let mut rng = Pcg32::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n {
+            let pos = i % 2 == 0;
+            let c = if pos { sep } else { -sep };
+            xs.push(vec![(c + rng.normal()) as f32, (c + rng.normal()) as f32]);
+            ys.push(pos);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn linear_separable_blobs() {
+        let (xs, ys) = blobs(1, 120, 2.5);
+        let m = train(&xs, &ys, Kernel::Linear, &SmoConfig::default());
+        assert!(m.accuracy(&xs, &ys) > 0.95, "acc {}", m.accuracy(&xs, &ys));
+        // margin SVs only: far fewer than n
+        assert!(m.n_sv() < 70, "n_sv {}", m.n_sv());
+    }
+
+    #[test]
+    fn rbf_solves_xor() {
+        let mut rng = Pcg32::new(3);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..160 {
+            let a = rng.normal() as f32;
+            let b = rng.normal() as f32;
+            xs.push(vec![a, b]);
+            ys.push((a > 0.0) ^ (b > 0.0));
+        }
+        let lin = train(&xs, &ys, Kernel::Linear, &SmoConfig::default());
+        let rbf = train(&xs, &ys, Kernel::Rbf { gamma: 1.0 }, &SmoConfig::default());
+        assert!(rbf.accuracy(&xs, &ys) > 0.9, "rbf {}", rbf.accuracy(&xs, &ys));
+        assert!(rbf.accuracy(&xs, &ys) > lin.accuracy(&xs, &ys) + 0.2);
+    }
+
+    #[test]
+    fn generalises_to_test_split() {
+        let (xs, ys) = blobs(5, 200, 2.0);
+        let (xt, yt) = blobs(99, 100, 2.0);
+        let m = train(&xs, &ys, Kernel::Rbf { gamma: 0.5 }, &SmoConfig::default());
+        assert!(m.accuracy(&xt, &yt) > 0.9, "test acc {}", m.accuracy(&xt, &yt));
+    }
+
+    #[test]
+    fn rbf_kernel_properties() {
+        let k = Kernel::Rbf { gamma: 0.7 };
+        let a = vec![1.0f32, 2.0];
+        let b = vec![0.5f32, -1.0];
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((k.eval(&a, &b) - k.eval(&b, &a)).abs() < 1e-12);
+        assert!(k.eval(&a, &b) < 1.0 && k.eval(&a, &b) > 0.0);
+    }
+
+    #[test]
+    fn median_heuristic_reasonable() {
+        let (xs, _) = blobs(7, 100, 1.0);
+        match Kernel::rbf_median_heuristic(&xs, 1) {
+            Kernel::Rbf { gamma } => assert!(gamma > 0.01 && gamma < 10.0, "gamma {gamma}"),
+            Kernel::Linear => panic!("expected rbf"),
+        }
+    }
+
+    #[test]
+    fn decision_is_continuous_score() {
+        let (xs, ys) = blobs(9, 80, 2.0);
+        let m = train(&xs, &ys, Kernel::Linear, &SmoConfig::default());
+        let pos_mean: f64 = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(_, &y)| y)
+            .map(|(x, _)| m.decision(x))
+            .sum::<f64>()
+            / 40.0;
+        let neg_mean: f64 = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(_, &y)| !y)
+            .map(|(x, _)| m.decision(x))
+            .sum::<f64>()
+            / 40.0;
+        assert!(pos_mean > 0.5 && neg_mean < -0.5);
+    }
+}

@@ -1,0 +1,317 @@
+//! Training driver: MP-aware SGD with gamma annealing, executed entirely
+//! through the AOT `mp_train_step_*` artifacts (jax.grad through the MP
+//! custom_vjp — python authored the graph once; rust drives every step).
+//!
+//! Also defines [`TrainedModel`], the serialisable bundle (weights +
+//! standardiser + gammas) the coordinator serves and the fixed-point
+//! pipeline quantises.
+
+use crate::mp::machine::{Params, Standardizer};
+use crate::runtime::engine::ModelEngine;
+use crate::util::json::Json;
+use crate::util::prng::Pcg32;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A trained, deployable model.
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    pub classes: Vec<String>,
+    pub params: Params,
+    pub std: Standardizer,
+    pub gamma_f: f32,
+    pub gamma_1: f32,
+}
+
+impl TrainedModel {
+    pub fn to_json(&self) -> Json {
+        let rows = |m: &Vec<Vec<f32>>| {
+            Json::Arr(m.iter().map(|r| Json::from_f32s(r)).collect())
+        };
+        Json::obj(vec![
+            ("classes", Json::Arr(self.classes.iter().map(|c| Json::Str(c.clone())).collect())),
+            ("wp", rows(&self.params.wp)),
+            ("wm", rows(&self.params.wm)),
+            ("bp", Json::from_f32s(&self.params.bp)),
+            ("bm", Json::from_f32s(&self.params.bm)),
+            ("mu", Json::from_f32s(&self.std.mu)),
+            ("sigma", Json::from_f32s(&self.std.sigma)),
+            ("gamma_f", Json::Num(f64::from(self.gamma_f))),
+            ("gamma_1", Json::Num(f64::from(self.gamma_1))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainedModel> {
+        let vecf = |j: &Json| -> Result<Vec<f32>> {
+            Ok(j.as_arr()
+                .context("expected array")?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                .collect())
+        };
+        let rows = |j: &Json| -> Result<Vec<Vec<f32>>> {
+            j.as_arr()
+                .context("expected array of rows")?
+                .iter()
+                .map(vecf)
+                .collect()
+        };
+        Ok(TrainedModel {
+            classes: j
+                .get("classes")
+                .as_arr()
+                .context("classes")?
+                .iter()
+                .map(|c| c.as_str().unwrap_or("?").to_string())
+                .collect(),
+            params: Params {
+                wp: rows(j.get("wp"))?,
+                wm: rows(j.get("wm"))?,
+                bp: vecf(j.get("bp"))?,
+                bm: vecf(j.get("bm"))?,
+            },
+            std: Standardizer {
+                mu: vecf(j.get("mu"))?,
+                sigma: vecf(j.get("sigma"))?,
+            },
+            gamma_f: j.get("gamma_f").as_f64().context("gamma_f")? as f32,
+            gamma_1: j.get("gamma_1").as_f64().context("gamma_1")? as f32,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TrainedModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        TrainedModel::from_json(&j)
+    }
+}
+
+/// Hyper-parameters of the annealed SGD run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    /// gamma_1 annealing schedule: gamma(e) = end + (start-end)*decay^e
+    pub gamma_start: f32,
+    pub gamma_end: f32,
+    pub gamma_decay: f32,
+    pub seed: u64,
+    pub init_scale: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 40,
+            lr: 0.15,
+            gamma_start: 10.0,
+            gamma_end: 4.0,
+            gamma_decay: 0.9,
+            seed: 1,
+            init_scale: 0.05,
+        }
+    }
+}
+
+/// Annealed gamma for epoch e.
+pub fn gamma_at(cfg: &TrainConfig, epoch: usize) -> f32 {
+    cfg.gamma_end + (cfg.gamma_start - cfg.gamma_end) * cfg.gamma_decay.powi(epoch as i32)
+}
+
+/// Train `heads`-way one-vs-all parameters on standardised features.
+/// `targets[i]` has one {0,1} entry per head. Returns (params, per-step
+/// loss curve). All steps run through the AOT train-step artifact.
+pub fn train_heads(
+    engine: &mut ModelEngine,
+    k_rows: &[Vec<f32>],
+    targets: &[Vec<f32>],
+    heads: usize,
+    cfg: &TrainConfig,
+) -> Result<(Params, Vec<f32>)> {
+    assert_eq!(k_rows.len(), targets.len());
+    let p = engine.n_filters();
+    let b = engine.rt.constants.train_batch;
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut params = Params::zeros(heads, p);
+    for row in params.wp.iter_mut().chain(params.wm.iter_mut()) {
+        for w in row.iter_mut() {
+            *w = cfg.init_scale * rng.normal() as f32;
+        }
+    }
+    let mut order: Vec<usize> = (0..k_rows.len()).collect();
+    let mut losses = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let gamma = gamma_at(cfg, epoch);
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(b) {
+            // assemble a full batch (wrap around for the remainder)
+            let mut k = Vec::with_capacity(b * p);
+            let mut y = Vec::with_capacity(b * heads);
+            for i in 0..b {
+                let idx = chunk[i % chunk.len()];
+                k.extend_from_slice(&k_rows[idx]);
+                y.extend_from_slice(&targets[idx]);
+            }
+            let loss = engine.train_step(&mut params, &k, &y, cfg.lr, gamma)?;
+            losses.push(loss);
+        }
+    }
+    Ok((params, losses))
+}
+
+/// Multiclass convenience: fit the standardiser, build one-vs-all
+/// targets from labels and train a `classes.len()`-head model.
+pub fn train_model(
+    engine: &mut ModelEngine,
+    raw_phi: &[Vec<f32>],
+    labels: &[usize],
+    classes: &[String],
+    gamma_f: f32,
+    cfg: &TrainConfig,
+) -> Result<(TrainedModel, Vec<f32>)> {
+    let heads = classes.len();
+    let std = Standardizer::fit(raw_phi);
+    let k_rows = std.apply_all(raw_phi);
+    let targets: Vec<Vec<f32>> = labels
+        .iter()
+        .map(|&l| (0..heads).map(|c| if c == l { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let (params, losses) = train_heads(engine, &k_rows, &targets, heads, cfg)?;
+    Ok((
+        TrainedModel {
+            classes: classes.to_vec(),
+            params,
+            std,
+            gamma_f,
+            gamma_1: cfg.gamma_end,
+        },
+        losses,
+    ))
+}
+
+/// Multiclass accuracy (argmax over heads) via the batched eval artifact.
+pub fn evaluate(
+    engine: &mut ModelEngine,
+    model: &TrainedModel,
+    raw_phi: &[Vec<f32>],
+    labels: &[usize],
+) -> Result<f64> {
+    let k_rows = model.std.apply_all(raw_phi);
+    let margins = engine.eval_margins(&model.params, &k_rows, model.gamma_1)?;
+    let correct = margins
+        .iter()
+        .zip(labels)
+        .filter(|(m, &l)| {
+            let pred = m
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            pred == l
+        })
+        .count();
+    Ok(correct as f64 / labels.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = TrainedModel {
+            classes: vec!["a".into(), "b".into()],
+            params: Params {
+                wp: vec![vec![0.5, -1.5], vec![0.0, 2.0]],
+                wm: vec![vec![1.0, 0.0], vec![-0.25, 0.125]],
+                bp: vec![0.1, 0.2],
+                bm: vec![-0.1, -0.2],
+            },
+            std: Standardizer {
+                mu: vec![10.0, 20.0],
+                sigma: vec![1.0, 2.0],
+            },
+            gamma_f: 1.0,
+            gamma_1: 4.0,
+        };
+        let j = m.to_json();
+        let back = TrainedModel::from_json(&j).unwrap();
+        assert_eq!(back.params, m.params);
+        assert_eq!(back.classes, m.classes);
+        assert_eq!(back.std.mu, m.std.mu);
+    }
+
+    #[test]
+    fn model_save_load_file() {
+        let m = TrainedModel {
+            classes: vec!["x".into()],
+            params: Params::zeros(1, 3),
+            std: Standardizer {
+                mu: vec![0.0; 3],
+                sigma: vec![1.0; 3],
+            },
+            gamma_f: 0.5,
+            gamma_1: 2.0,
+        };
+        let path = std::env::temp_dir().join("infilter_model_test.json");
+        m.save(&path).unwrap();
+        let back = TrainedModel::load(&path).unwrap();
+        assert_eq!(back.params, m.params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gamma_annealing_monotone_decreasing_to_end() {
+        let cfg = TrainConfig::default();
+        let g0 = gamma_at(&cfg, 0);
+        let g5 = gamma_at(&cfg, 5);
+        let g100 = gamma_at(&cfg, 100);
+        assert!(g0 > g5 && g5 > g100);
+        assert!((g100 - cfg.gamma_end).abs() < 1e-3);
+        assert!((g0 - cfg.gamma_start).abs() < 1e-6);
+    }
+
+    #[test]
+    fn e2e_training_on_artifacts_separates_classes() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let mut eng = ModelEngine::open(&dir, 1.0).unwrap();
+        let p = eng.n_filters();
+        let mut rng = Pcg32::new(9);
+        // two synthetic feature clusters
+        let mut phi = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..120 {
+            let pos = i % 2 == 0;
+            let row: Vec<f32> = (0..p)
+                .map(|j| {
+                    let base = if pos { 40.0 + j as f64 } else { 80.0 - j as f64 };
+                    (base + 6.0 * rng.normal()) as f32
+                })
+                .collect();
+            phi.push(row);
+            labels.push(usize::from(!pos));
+        }
+        let classes = vec!["pos".to_string(), "neg".to_string()];
+        let cfg = TrainConfig {
+            epochs: 15,
+            ..TrainConfig::default()
+        };
+        let (model, losses) = train_model(&mut eng, &phi, &labels, &classes, 1.0, &cfg).unwrap();
+        assert!(losses.last().unwrap() < &losses[0]);
+        let acc = evaluate(&mut eng, &model, &phi, &labels).unwrap();
+        assert!(acc > 0.9, "train accuracy {acc}");
+    }
+}

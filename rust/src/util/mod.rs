@@ -1,0 +1,11 @@
+//! Std-only infrastructure: the offline environment has no serde / clap /
+//! rand / proptest, so the equivalents live here (see DESIGN.md §4).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod par;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;

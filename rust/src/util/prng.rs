@@ -1,0 +1,232 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline environment ships no `rand` crate, so this module provides
+//! the generators the rest of the system needs: a PCG32 core (O'Neill's
+//! `pcg32_xsh_rr`), SplitMix64 seeding, uniform/normal sampling, and
+//! shuffling. Everything downstream (dataset synthesis, SMO, property
+//! tests) is seeded explicitly so every experiment in EXPERIMENTS.md is
+//! bit-reproducible.
+
+/// PCG32 (XSH-RR variant): 64-bit state, 32-bit output, period 2^64.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed via SplitMix64 so that nearby integer seeds give uncorrelated
+    /// streams (a raw PCG seed of 0 vs 1 differs in one bit; SplitMix
+    /// diffuses it).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: sm.next() | 1,
+        };
+        rng.state = sm.next();
+        rng.next_u32();
+        rng
+    }
+
+    /// Independent sub-stream `i` of this generator's seed.
+    pub fn substream(seed: u64, i: u64) -> Self {
+        Self::new(seed ^ (0x9e3779b97f4a7c15u64.wrapping_mul(i + 1)))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        f64::from(self.next_u32()) * (1.0 / 4294967296.0)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u32();
+            let m = u64::from(x) * u64::from(n);
+            let l = m as u32;
+            if l >= n.wrapping_neg() % n {
+                return (m >> 32) as u32;
+            }
+            if l >= l.wrapping_sub(n) % n {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller (no caching: simple + deterministic).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Vector of standard normals as f32 (the dataset/feature dtype).
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+
+    /// Vector of uniforms in [lo, hi) as f32.
+    pub fn uniform_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..n).map(|_| self.range(lo, hi) as f32).collect()
+    }
+}
+
+/// SplitMix64 — used for seeding and for cheap one-shot hashes.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_with_sane_mean() {
+        let mut rng = Pcg32::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Pcg32::new(9);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(13);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg32::new(17);
+        let idx = rng.sample_indices(100, 30);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 30);
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn substreams_uncorrelated() {
+        let mut a = Pcg32::substream(5, 0);
+        let mut b = Pcg32::substream(5, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert_eq!(same, 0);
+    }
+}

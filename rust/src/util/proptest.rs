@@ -1,0 +1,145 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |g| { ... })` runs a closure over `cases` random
+//! generators seeded deterministically from the test name; on failure it
+//! reports the failing case's seed so the case can be replayed with
+//! `Gen::replay(seed)` in a focused unit test.
+
+use super::prng::{Pcg32, SplitMix64};
+
+/// Per-case value generator handed to property bodies.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn replay(seed: u64) -> Gen {
+        Gen {
+            rng: Pcg32::new(seed),
+            seed,
+        }
+    }
+
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u32) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f32(&mut self, lo: f64, hi: f64) -> f32 {
+        self.rng.range(lo, hi) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Vector of normals with the given scale — the workhorse input for
+    /// numeric properties; occasionally salts in adversarial values
+    /// (zeros, ties, large magnitudes) which plain normal sampling would
+    /// almost never produce.
+    pub fn signal(&mut self, n: usize, scale: f64) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..n)
+            .map(|_| (self.rng.normal() * scale) as f32)
+            .collect();
+        if n >= 2 && self.rng.below(4) == 0 {
+            // adversarial salt: duplicate an element (tie) and zero another
+            let i = self.rng.below(n as u32) as usize;
+            let j = self.rng.below(n as u32) as usize;
+            v[i] = v[j];
+            let k = self.rng.below(n as u32) as usize;
+            v[k] = 0.0;
+        }
+        v
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics (failing the enclosing
+/// #[test]) with the case seed on the first failure.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u32, mut body: F) {
+    let mut h = SplitMix64::new(0xb10c_ab1e);
+    for b in name.bytes() {
+        h.next();
+        h = SplitMix64::new(h.next() ^ u64::from(b));
+    }
+    let base = h.next();
+    for case in 0..cases {
+        let seed = base ^ (u64::from(case).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut g = Gen::replay(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut g)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 Gen::replay({seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("abs-nonneg", 50, |g| {
+            let x = g.f64(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::replay(42);
+        for _ in 0..100 {
+            let v = g.int(-3, 3);
+            assert!((-3..=3).contains(&v));
+            let u = g.usize(1, 5);
+            assert!((1..=5).contains(&u));
+            let f = g.f64(0.5, 2.0);
+            assert!((0.5..2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn check_reports_failures() {
+        check("always-fails", 3, |g| {
+            let x = g.f64(1.0, 2.0);
+            assert!(x < 0.0, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn signal_salting_produces_zeros_sometimes() {
+        let mut zeros = 0;
+        for case in 0..40 {
+            let mut g = Gen::replay(case);
+            let v = g.signal(16, 1.0);
+            if v.contains(&0.0) {
+                zeros += 1;
+            }
+        }
+        assert!(zeros > 0);
+    }
+}

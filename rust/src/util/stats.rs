@@ -1,0 +1,195 @@
+//! Small statistics helpers shared by benches, metrics and experiments.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (Bessel-corrected), matching the paper's
+/// eq. 12 sigma definition (1/(M-1) under the root).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile with linear interpolation; q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Simple fixed-bucket latency histogram (microseconds), log-spaced.
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    buckets: Vec<u64>,
+    bounds_us: Vec<f64>,
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        // 1us .. ~100s, 5 buckets per decade
+        let mut bounds = Vec::new();
+        let mut b = 1.0f64;
+        while b < 1.0e8 {
+            bounds.push(b);
+            b *= 10f64.powf(0.2);
+        }
+        LatencyHist {
+            buckets: vec![0; bounds.len() + 1],
+            bounds_us: bounds,
+            count: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, dur: std::time::Duration) {
+        self.record_us(dur.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let idx = self
+            .bounds_us
+            .partition_point(|&b| b < us)
+            .min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate percentile from bucket upper bounds.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.bounds_us.get(i).copied().unwrap_or(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        // sample std of this classic set is ~2.138
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert!((median(&xs) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&xs, 90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[3.0]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn hist_percentiles_monotone() {
+        let mut h = LatencyHist::new();
+        for i in 1..=1000 {
+            h.record_us(f64::from(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_us(50.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p99);
+        assert!(p50 > 300.0 && p50 < 700.0, "p50 {p50}");
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn hist_merge() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record_us(10.0);
+        b.record_us(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max_us() >= 1000.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! ASCII table / CSV rendering for the experiment harness — every paper
+//! table and figure is emitted both as an aligned console table and as a
+//! CSV under results/ for EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String| {
+            for wi in &w {
+                let _ = write!(out, "+{}", "-".repeat(wi + 2));
+            }
+            let _ = writeln!(out, "+");
+        };
+        let emit = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let pad = w[i] - c.chars().count();
+                let _ = write!(out, "| {}{} ", c, " ".repeat(pad));
+            }
+            let _ = writeln!(out, "|");
+        };
+        line(&mut out);
+        emit(&mut out, &self.header);
+        line(&mut out);
+        for r in &self.rows {
+            emit(&mut out, r);
+        }
+        line(&mut out);
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Render an ASCII line plot (rows of `series` share the x axis) — used
+/// for the figure harnesses so gain responses are eyeballable in the
+/// terminal next to the CSV dump.
+pub fn ascii_plot(title: &str, xs: &[f64], series: &[(&str, Vec<f64>)], height: usize) -> String {
+    let width = 72usize.min(xs.len().max(2));
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (ymax - ymin).max(1e-12);
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for col in 0..width {
+            let idx = col * (ys.len() - 1) / (width - 1).max(1);
+            let yn = (ys[idx] - ymin) / span;
+            let row = ((1.0 - yn) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("-- {title} --\n");
+    for (r, row) in grid.iter().enumerate() {
+        let yval = ymax - span * r as f64 / (height - 1) as f64;
+        let _ = writeln!(out, "{yval:>10.3} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(
+        out,
+        "{:>10} +{}",
+        "",
+        "-".repeat(width)
+    );
+    let _ = writeln!(
+        out,
+        "{:>10}  x: {:.1} .. {:.1}   {}",
+        "",
+        xs.first().copied().unwrap_or(0.0),
+        xs.last().copied().unwrap_or(0.0),
+        series
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| format!("[{}]={}", marks[i % marks.len()], n))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["class", "train", "test"]);
+        t.row(vec!["dog".into(), "91".into(), "94".into()]);
+        t.row(vec!["sea_waves".into(), "88".into(), "88".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| sea_waves |"));
+        // all data lines same width
+        let lens: Vec<usize> = s
+            .lines()
+            .skip(1)
+            .map(|l| l.chars().count())
+            .collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("c", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_mismatch_panics() {
+        let mut t = Table::new("bad", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn plot_smoke() {
+        let xs: Vec<f64> = (0..50).map(f64::from).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x / 8.0).sin()).collect();
+        let s = ascii_plot("sine", &xs, &[("sin", ys)], 10);
+        assert!(s.contains("sine"));
+        assert!(s.lines().count() >= 12);
+    }
+}

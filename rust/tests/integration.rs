@@ -1,0 +1,178 @@
+//! Cross-module integration tests over the real AOT artifacts: the
+//! full train -> save -> load -> serve -> classify loop, figure/table
+//! harness smoke runs, and float/fixed/HLO cross-validation.
+//!
+//! All tests no-op gracefully when artifacts/ has not been built
+//! (`make artifacts`), so `cargo test` works in a fresh checkout.
+
+use infilter::coordinator::server::{serve, ServeConfig};
+use infilter::datasets::esc10;
+use infilter::experiments::{classify, figures, tables12};
+use infilter::mp::machine::Standardizer;
+use infilter::runtime::engine::ModelEngine;
+use infilter::train::{evaluate, train_model, TrainConfig, TrainedModel};
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn full_loop_train_save_load_serve() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = ModelEngine::open(&dir, 1.0).unwrap();
+    let clip_len = eng.frame_len() * eng.clip_frames();
+
+    // train a small multiclass model
+    let ds = esc10::build(5, 0.04);
+    let samps: Vec<&[f32]> = ds.train.iter().map(|c| &c.samples[..clip_len]).collect();
+    let phi = eng.clip_features_many(&samps).unwrap();
+    let labels: Vec<usize> = ds.train.iter().map(|c| c.label).collect();
+    // at this tiny scale each epoch is one SGD step; give the 10-way
+    // model enough steps to clear chance level
+    let cfg = TrainConfig {
+        epochs: 80,
+        lr: 0.3,
+        ..TrainConfig::default()
+    };
+    let (model, losses) =
+        train_model(&mut eng, &phi, &labels, &ds.classes, 1.0, &cfg).unwrap();
+    assert!(losses.last().unwrap() <= &losses[0]);
+
+    // save -> load roundtrip
+    let path = std::env::temp_dir().join("infilter_it_model.json");
+    model.save(&path).unwrap();
+    let loaded = TrainedModel::load(&path).unwrap();
+    assert_eq!(loaded.params, model.params);
+    std::fs::remove_file(&path).ok();
+
+    // serve with the loaded model: all clips classified, stream math
+    // identical to the offline path (checked inside server tests too)
+    let scfg = ServeConfig {
+        n_streams: 4,
+        clips_per_stream: 1,
+        seed: 3,
+        ..Default::default()
+    };
+    let (report, results) = serve(&mut eng, &loaded, &scfg).unwrap();
+    assert_eq!(report.clips_classified, 4);
+    assert_eq!(results.len(), 4);
+
+    // evaluation path still works post-roundtrip
+    let acc = evaluate(&mut eng, &loaded, &phi, &labels).unwrap();
+    assert!(acc > 0.25, "sanity: clearly better than 10% chance, got {acc}");
+}
+
+#[test]
+fn hlo_float_rust_float_and_fixed_agree_on_ranking() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = ModelEngine::open(&dir, 1.0).unwrap();
+    let clip_len = eng.frame_len() * eng.clip_frames();
+    // one clip, three feature paths
+    let clip = esc10::synth_clip(9, 2, 0); // sea_waves: low-band heavy
+    let samples = &clip.samples[..clip_len];
+    let hlo = eng.clip_features(samples).unwrap();
+    let rust = infilter::features::mp_features(&eng.plan, 1.0, samples);
+    // HLO and rust float match closely
+    for (i, (a, b)) in hlo.iter().zip(&rust).enumerate() {
+        assert!(
+            (a - b).abs() / b.abs().max(1.0) < 5e-3,
+            "band {i}: {a} vs {b}"
+        );
+    }
+    // fixed 10-bit accumulators correlate strongly with float
+    let pipe = infilter::fixed::FixedPipeline::build(
+        &eng.plan,
+        1.0,
+        4.0,
+        &infilter::mp::machine::Params::zeros(2, 30),
+        &Standardizer {
+            mu: vec![0.0; 30],
+            sigma: vec![1.0; 30],
+        },
+        &[hlo.clone()],
+        infilter::fixed::FixedConfig::with_bits(10),
+    );
+    let acc = pipe.accumulate(samples);
+    let fmt = pipe.datapath_format();
+    let dot: f64 = acc
+        .iter()
+        .zip(&hlo)
+        .map(|(&q, &f)| fmt.dequantize(q) * f64::from(f))
+        .sum();
+    let na: f64 = acc.iter().map(|&q| fmt.dequantize(q).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = hlo.iter().map(|&f| f64::from(f).powi(2)).sum::<f64>().sqrt();
+    assert!(dot / (na * nb) > 0.98, "cos {}", dot / (na * nb));
+}
+
+#[test]
+fn table3_harness_smoke() {
+    let Some(dir) = artifacts() else { return };
+    let mut eng = ModelEngine::open(&dir, 1.0).unwrap();
+    let ds = esc10::build(7, 0.03);
+    let ccfg = classify::ClassifyConfig {
+        seed: 7,
+        threads: 8,
+        train_cfg: TrainConfig {
+            epochs: 8,
+            ..TrainConfig::default()
+        },
+        ..Default::default()
+    };
+    let bank = classify::extract_features(&mut eng, &ds, &ccfg).unwrap();
+    let (t, rows) = classify::run_table(&mut eng, &ds, &bank, &ccfg).unwrap();
+    assert_eq!(rows.len(), 10);
+    assert_eq!(t.rows.len(), 11); // 10 classes + MEAN
+    for r in &rows {
+        for acc in [
+            r.svm_train, r.svm_test, r.car_train, r.car_test,
+            r.mp_train, r.mp_test, r.fx_train, r.fx_test,
+        ] {
+            assert!((0.0..=1.0).contains(&acc), "{r:?}");
+        }
+        assert!(r.svs > 0);
+    }
+}
+
+#[test]
+fn figure_harnesses_produce_csvs() {
+    let plan = infilter::dsp::multirate::BandPlan::paper_default();
+    let (ta, _) = figures::fig4a(&plan, 4096);
+    let (tb, _) = figures::fig4b(&plan, 4096);
+    let (tc, _, corr) = figures::fig6(&plan, 1.0, 4096);
+    assert_eq!(ta.rows.len(), tb.rows.len());
+    assert_eq!(tc.header.len(), 31);
+    assert_eq!(corr.len(), 30);
+    // CSV serialisation round-trips through the table writer
+    let csv = ta.to_csv();
+    assert!(csv.lines().count() > 100);
+}
+
+#[test]
+fn table12_consistent_with_fpga_model() {
+    let (t1, detail1) = tables12::table1();
+    let (t2, _) = tables12::table2();
+    // Table II "this work (model)" row must quote the same numbers as
+    // Table I
+    let ff_t1: String = t1.rows[4][1].clone();
+    let lut_t1: String = t1.rows[5][1].clone();
+    let ours = t2.rows.last().unwrap();
+    assert_eq!(ours[4], ff_t1);
+    assert_eq!(ours[5], lut_t1);
+    assert!(detail1.contains("schedulable=true"));
+}
+
+#[test]
+fn cli_binary_usage_and_fpga_sim() {
+    // run the actual binary: usage text + the fpga-sim subcommand
+    let bin = env!("CARGO_BIN_EXE_infilter");
+    let out = std::process::Command::new(bin).output().unwrap();
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+    let out = std::process::Command::new(bin)
+        .arg("fpga-sim")
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("schedulable=true"), "{text}");
+}
