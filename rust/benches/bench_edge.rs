@@ -1,0 +1,62 @@
+//! Edge-ingest benches: the multiplierless gate's per-sample cost (the
+//! number that must be negligible next to the MP bank for gating to pay
+//! off), ring/session bookkeeping, the token bucket, and the pure-rust
+//! CPU backend's frame step that the fleet classifies through.
+
+use infilter::bench_util::Bench;
+use infilter::dsp::multirate::BandPlan;
+use infilter::edge::ring::FrameRing;
+use infilter::edge::session::{EdgeSession, SessionConfig, AMBIENT_LABEL};
+use infilter::edge::uplink::TokenBucket;
+use infilter::edge::vad::{EnergyGate, GateConfig};
+use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+use infilter::util::prng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("bench_edge");
+    let mut rng = Pcg32::new(2);
+
+    // gate: quantised 2048-sample frame through the integer path
+    let frame_f: Vec<f32> = (0..2048).map(|_| (rng.normal() * 0.02) as f32).collect();
+    let mut gate = EnergyGate::new(GateConfig::default());
+    let frame_q = gate.quantize(&frame_f);
+    b.run_with_throughput("edge/gate_push_frame/2048", Some((2048.0, "samples")), || {
+        gate.push_frame(&frame_q)
+    });
+    b.run_with_throughput("edge/gate_quantize/2048", Some((2048.0, "samples")), || {
+        gate.quantize(&frame_f)
+    });
+
+    // ring: push + lookback snapshot
+    let mut ring = FrameRing::new(4, 2048);
+    b.run("edge/ring_push/2048", || ring.push(&frame_f));
+    ring.push(&frame_f);
+    b.run("edge/ring_last_n/2", || ring.last_n(2).len());
+
+    // session: ambient frame end to end (gate + ring, no emission)
+    let mut session = EdgeSession::new(SessionConfig::new(0, 2048, 8));
+    let mut out = Vec::new();
+    b.run_with_throughput("edge/session_ambient_frame/2048", Some((2048.0, "samples")), || {
+        out.clear();
+        session.push_frame(&frame_f, AMBIENT_LABEL, &mut out);
+        out.len()
+    });
+
+    // uplink token bucket
+    let mut bucket = TokenBucket::new(4096.0, 16_384.0);
+    b.run("edge/token_bucket_tick_take", || {
+        bucket.tick(0.128);
+        bucket.try_take(32.0)
+    });
+
+    // the CPU backend's MP frame step (what a triggered frame costs)
+    let plan = BandPlan::paper_default();
+    let eng = CpuEngine::new(&plan, 1.0);
+    let mut state = eng.zero_state();
+    let loud: Vec<f32> = (0..2048).map(|_| (rng.normal() * 0.2) as f32).collect();
+    b.run_with_throughput("edge/cpu_mp_frame/2048", Some((2048.0, "samples")), || {
+        eng.frame_features(&mut state, &loud)
+    });
+
+    b.finish();
+}

@@ -137,6 +137,71 @@ impl AppConfig {
     }
 }
 
+/// Knobs of the edge ingest subsystem (gate, duty cycle, uplink, fleet
+/// shape), kept as plain numbers here so the config layer stays a leaf;
+/// `edge::fleet::FleetConfig::from_edge` turns them into module configs.
+#[derive(Clone, Debug)]
+pub struct EdgeConfig {
+    pub n_streams: usize,
+    pub seconds_per_stream: f64,
+    pub events_per_stream: usize,
+    /// ambient background level (RMS, full scale 1.0)
+    pub ambient_rms: f64,
+    /// gain applied to embedded event clips
+    pub event_gain: f64,
+    pub duty_awake: u32,
+    pub duty_sleep: u32,
+    pub pre_trigger_frames: usize,
+    pub gate_margin_shift: u32,
+    pub gate_hangover: u32,
+    pub uplink_bytes_per_sec: f64,
+    pub uplink_burst_bytes: f64,
+    pub upload_clips: bool,
+}
+
+impl Default for EdgeConfig {
+    fn default() -> Self {
+        EdgeConfig {
+            n_streams: 200,
+            // long enough that the post-warmup event window comfortably
+            // fits an event per stream at the paper's clip geometry
+            seconds_per_stream: 8.0,
+            events_per_stream: 1,
+            ambient_rms: 0.02,
+            event_gain: 1.0,
+            duty_awake: 28,
+            duty_sleep: 4,
+            pre_trigger_frames: 2,
+            gate_margin_shift: 1,
+            gate_hangover: 1,
+            uplink_bytes_per_sec: 4096.0,
+            uplink_burst_bytes: 16_384.0,
+            upload_clips: false,
+        }
+    }
+}
+
+impl EdgeConfig {
+    pub fn from_args(args: &crate::util::cli::Args) -> EdgeConfig {
+        let d = EdgeConfig::default();
+        EdgeConfig {
+            n_streams: args.get_usize("streams", d.n_streams),
+            seconds_per_stream: args.get_f64("seconds", d.seconds_per_stream),
+            events_per_stream: args.get_usize("events", d.events_per_stream),
+            ambient_rms: args.get_f64("ambient", d.ambient_rms),
+            event_gain: args.get_f64("event-gain", d.event_gain),
+            duty_awake: args.get_u64("duty-awake", u64::from(d.duty_awake)) as u32,
+            duty_sleep: args.get_u64("duty-sleep", u64::from(d.duty_sleep)) as u32,
+            pre_trigger_frames: args.get_usize("pre-trigger", d.pre_trigger_frames),
+            gate_margin_shift: args.get_u64("gate-margin", u64::from(d.gate_margin_shift)) as u32,
+            gate_hangover: args.get_u64("hangover", u64::from(d.gate_hangover)) as u32,
+            uplink_bytes_per_sec: args.get_f64("uplink-bps", d.uplink_bytes_per_sec),
+            uplink_burst_bytes: args.get_f64("uplink-burst", d.uplink_burst_bytes),
+            upload_clips: args.flag("upload-clips"),
+        }
+    }
+}
+
 /// Load and validate the manifest constants from an artifacts directory.
 pub fn load_manifest(dir: &Path) -> Result<(Json, ModelConstants)> {
     let path = dir.join("manifest.json");
@@ -198,6 +263,20 @@ mod tests {
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.threads, 2);
         assert!((cfg.gamma_f - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn edge_config_overrides() {
+        let args = crate::util::cli::Args::parse(
+            ["edge-fleet", "--streams", "50", "--duty-sleep", "8", "--upload-clips"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let e = EdgeConfig::from_args(&args);
+        assert_eq!(e.n_streams, 50);
+        assert_eq!(e.duty_sleep, 8);
+        assert!(e.upload_clips);
+        assert_eq!(e.events_per_stream, EdgeConfig::default().events_per_stream);
     }
 
     #[test]

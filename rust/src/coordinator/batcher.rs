@@ -116,6 +116,37 @@ mod tests {
     }
 
     #[test]
+    fn single_stream_goes_narrow_under_default_policy() {
+        // the measured default (wide_threshold 9) must never pick the
+        // wide path, even at full readiness
+        let p = BatcherPolicy::default();
+        assert_eq!(p.plan(&[42]), BatchPlan::Narrow(vec![42]));
+        let eight: Vec<u64> = (0..8).collect();
+        assert_eq!(p.plan(&eight), BatchPlan::Narrow(eight.clone()));
+    }
+
+    #[test]
+    fn threshold_one_prefers_wide_even_for_one_stream() {
+        let p = BatcherPolicy { wide_threshold: 1 };
+        assert_eq!(p.plan(&[7]), BatchPlan::Wide(vec![7]));
+    }
+
+    #[test]
+    fn overflowing_ready_set_is_capped_at_eight_lanes() {
+        // capacity overflow: far more ready streams than lanes — the plan
+        // must take exactly the 8 oldest (ready order) and no more
+        let p = BatcherPolicy { wide_threshold: 2 };
+        let many: Vec<u64> = (0..100).collect();
+        match p.plan(&many) {
+            BatchPlan::Wide(v) => {
+                assert_eq!(v.len(), 8);
+                assert_eq!(v, (0..8).collect::<Vec<u64>>());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn stats_occupancy() {
         let mut s = BatchStats::default();
         s.record_wide(8);

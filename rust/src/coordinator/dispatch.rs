@@ -1,0 +1,319 @@
+//! The dispatch core: per-stream state + dynamic batching + clip-end
+//! classification, factored out of the channel-fed serving loop so any
+//! producer can drive it — [`server::serve`]'s thread/channel front end
+//! and the virtual-time edge fleet simulator ([`crate::edge::fleet`])
+//! both pump the same [`Dispatcher`].
+//!
+//! [`server::serve`]: super::server::serve
+
+use super::batcher::{BatchPlan, BatcherPolicy, BatchStats};
+use super::metrics::ServeReport;
+use super::state::StateStore;
+use super::{ClassifyResult, FrameTask};
+use crate::runtime::backend::InferenceBackend;
+use crate::runtime::engine::StreamState;
+use crate::train::TrainedModel;
+use anyhow::Result;
+
+/// Owns everything between "frame arrived" and "clip classified".
+pub struct Dispatcher {
+    store: StateStore,
+    frame_len: usize,
+    clip_frames: usize,
+    pub stats: BatchStats,
+    pub report: ServeReport,
+    pub results: Vec<ClassifyResult>,
+}
+
+impl Dispatcher {
+    pub fn new<B: InferenceBackend>(backend: &B, queue_capacity: usize) -> Dispatcher {
+        Dispatcher {
+            store: StateStore::new(backend.zero_state(), backend.n_filters(), queue_capacity),
+            frame_len: backend.frame_len(),
+            clip_frames: backend.clip_frames(),
+            stats: BatchStats::default(),
+            report: ServeReport::default(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Enqueue one frame; returns false (and counts the drop) when the
+    /// stream's buffer is full.
+    pub fn push(&mut self, task: FrameTask) -> bool {
+        if self.store.push(task) {
+            true
+        } else {
+            self.report.frames_dropped += 1;
+            false
+        }
+    }
+
+    /// Frames currently buffered across all streams.
+    pub fn pending(&self) -> usize {
+        self.store.pending_total()
+    }
+
+    /// One batching tick: plan over the ready streams, run the wide or
+    /// narrow path, classify any clips that completed. Returns the number
+    /// of frames processed (0 = idle).
+    pub fn tick<B: InferenceBackend>(
+        &mut self,
+        backend: &mut B,
+        model: &TrainedModel,
+        policy: &BatcherPolicy,
+    ) -> Result<usize> {
+        let ready = self.store.ready_streams(8);
+        match policy.plan(&ready) {
+            BatchPlan::Idle => Ok(0),
+            BatchPlan::Wide(ids) => {
+                // pop one in-order frame per lane (resync on clip gaps)
+                let mut lanes: Vec<(u64, FrameTask)> = Vec::with_capacity(8);
+                for &id in &ids {
+                    if let Some(task) = self.pop_in_order(id) {
+                        lanes.push((id, task));
+                    }
+                }
+                if lanes.is_empty() {
+                    return Ok(0);
+                }
+                // assemble 8 lanes: real ones first, padding after
+                let mut states: Vec<StreamState> = lanes
+                    .iter()
+                    .map(|(id, _)| self.store.entry(*id).state.clone())
+                    .collect();
+                let zeros = vec![0.0f32; self.frame_len];
+                while states.len() < 8 {
+                    states.push(self.store.zero_state().clone());
+                }
+                let frames: Vec<&[f32]> = lanes
+                    .iter()
+                    .map(|(_, t)| t.data.as_slice())
+                    .chain(std::iter::repeat(zeros.as_slice()))
+                    .take(8)
+                    .collect();
+                let phis = backend.mp_frame_features_b8(&mut states, &frames)?;
+                self.stats.record_wide(lanes.len());
+                for (i, (id, task)) in lanes.iter().enumerate() {
+                    self.apply_frame(backend, model, *id, task, &states[i], &phis[i])?;
+                }
+                Ok(lanes.len())
+            }
+            BatchPlan::Narrow(ids) => {
+                let mut n = 0;
+                for id in ids {
+                    if let Some(task) = self.pop_in_order(id) {
+                        let mut state = self.store.entry(id).state.clone();
+                        let phi = backend.mp_frame_features(&mut state, &task.data)?;
+                        self.apply_frame(backend, model, id, &task, &state, &phi)?;
+                        n += 1;
+                    }
+                }
+                self.stats.record_narrow(n);
+                Ok(n)
+            }
+        }
+    }
+
+    /// Tick until no stream has a pending frame. Guarded on `pending()`
+    /// rather than a tick's processed count: a tick can legitimately
+    /// process 0 frames (stale-only queues) while later streams still
+    /// hold work, and every tick over a non-empty store pops at least
+    /// one frame, so this terminates.
+    pub fn drain<B: InferenceBackend>(
+        &mut self,
+        backend: &mut B,
+        model: &TrainedModel,
+        policy: &BatcherPolicy,
+    ) -> Result<()> {
+        while self.pending() > 0 {
+            self.tick(backend, model, policy)?;
+        }
+        Ok(())
+    }
+
+    /// Finalise batching stats into the report and hand everything back.
+    pub fn into_parts(mut self) -> (ServeReport, Vec<ClassifyResult>) {
+        self.report.audio_seconds =
+            self.stats.frames_processed as f64 * self.frame_len as f64 / 16_000.0;
+        self.report.batch = self.stats;
+        (self.report, self.results)
+    }
+
+    /// Pop the next frame for a stream, skipping stale frames from
+    /// aborted clips and resyncing at the next clip boundary.
+    fn pop_in_order(&mut self, id: u64) -> Option<FrameTask> {
+        loop {
+            let task = self.store.pop_frame(id)?;
+            {
+                let e = self.store.entry(id);
+                if task.clip_seq == e.clip_seq && task.frame_idx == e.frames_done {
+                    return Some(task);
+                }
+                if !(task.frame_idx == 0 && task.clip_seq > e.clip_seq) {
+                    // stale mid-clip frame: discard and keep looking
+                    self.report.frames_dropped += 1;
+                    continue;
+                }
+                if e.frames_done > 0 {
+                    self.report.clips_aborted += 1;
+                }
+            }
+            // a frame was lost somewhere: abort the stale clip and resync
+            // (rare path, so the zero-state clone lives here, off the
+            // per-frame fast path)
+            let zero = self.store.zero_state().clone();
+            let e = self.store.entry(id);
+            e.finish_clip(&zero);
+            e.clip_seq = task.clip_seq;
+            return Some(task);
+        }
+    }
+
+    /// Fold one processed frame into its stream; classify at clip end.
+    fn apply_frame<B: InferenceBackend>(
+        &mut self,
+        backend: &mut B,
+        model: &TrainedModel,
+        id: u64,
+        task: &FrameTask,
+        new_state: &StreamState,
+        phi: &[f32],
+    ) -> Result<()> {
+        let acc_done;
+        {
+            let e = self.store.entry(id);
+            e.state = new_state.clone();
+            if e.clip_t0.is_none() {
+                e.clip_t0 = Some(task.t_gen);
+            }
+            e.label = task.label;
+            for (a, p) in e.acc.iter_mut().zip(phi) {
+                *a += p;
+            }
+            e.frames_done += 1;
+            acc_done = e.frames_done >= self.clip_frames;
+        }
+        if acc_done {
+            let (acc, label, clip_seq) = {
+                let e = self.store.entry(id);
+                (e.acc.clone(), e.label, e.clip_seq)
+            };
+            let (p, _, _) = backend.inference(&model.params, &model.std, &acc, model.gamma_1)?;
+            let predicted = p
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map_or(0, |(i, _)| i);
+            let latency = task.t_gen.elapsed();
+            self.report.clips_classified += 1;
+            if predicted == label {
+                self.report.clips_correct += 1;
+            }
+            self.report.latency.record(latency);
+            self.results.push(ClassifyResult {
+                stream: id,
+                clip_seq,
+                label,
+                predicted,
+                p,
+                latency,
+            });
+            let zero = self.store.zero_state().clone();
+            let e = self.store.entry(id);
+            e.finish_clip(&zero);
+            e.clip_seq += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::multirate::BandPlan;
+    use crate::mp::machine::{Params, Standardizer};
+    use crate::runtime::backend::CpuEngine;
+    use crate::util::prng::Pcg32;
+    use std::time::Instant;
+
+    fn engine() -> CpuEngine {
+        // tiny frames keep the test fast: 64-sample frames, 2 per clip
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = 2;
+        CpuEngine::with_clip(&plan, 1.0, 64, 2)
+    }
+
+    fn model(heads: usize, p: usize) -> TrainedModel {
+        let mut rng = Pcg32::new(5);
+        TrainedModel {
+            classes: (0..heads).map(|c| format!("c{c}")).collect(),
+            params: Params {
+                wp: (0..heads).map(|_| rng.normal_vec(p)).collect(),
+                wm: (0..heads).map(|_| rng.normal_vec(p)).collect(),
+                bp: vec![0.0; heads],
+                bm: vec![0.0; heads],
+            },
+            std: Standardizer {
+                mu: vec![0.0; p],
+                sigma: vec![1.0; p],
+            },
+            gamma_f: 1.0,
+            gamma_1: 4.0,
+        }
+    }
+
+    fn task(stream: u64, clip_seq: u64, frame_idx: usize, n: usize) -> FrameTask {
+        FrameTask {
+            stream,
+            clip_seq,
+            frame_idx,
+            data: vec![0.01; n],
+            label: 0,
+            t_gen: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn clips_complete_through_cpu_backend() {
+        let mut eng = engine();
+        let m = model(3, eng.n_filters());
+        let mut d = Dispatcher::new(&eng, 8);
+        for s in 0..2u64 {
+            for f in 0..2 {
+                assert!(d.push(task(s, 0, f, 64)));
+            }
+        }
+        d.drain(&mut eng, &m, &BatcherPolicy::default()).unwrap();
+        let (report, results) = d.into_parts();
+        assert_eq!(report.clips_classified, 2);
+        assert_eq!(results.len(), 2);
+        assert_eq!(report.clips_aborted, 0);
+    }
+
+    #[test]
+    fn lost_frame_aborts_clip_and_resyncs() {
+        let mut eng = engine();
+        let m = model(2, eng.n_filters());
+        let mut d = Dispatcher::new(&eng, 8);
+        // clip 0 loses its second frame; clip 1 arrives complete
+        d.push(task(0, 0, 0, 64));
+        d.push(task(0, 1, 0, 64));
+        d.push(task(0, 1, 1, 64));
+        d.drain(&mut eng, &m, &BatcherPolicy::default()).unwrap();
+        let (report, results) = d.into_parts();
+        assert_eq!(report.clips_aborted, 1);
+        assert_eq!(report.clips_classified, 1);
+        assert_eq!(results[0].clip_seq, 1);
+    }
+
+    #[test]
+    fn backpressure_drops_are_counted() {
+        let eng = engine();
+        let mut d = Dispatcher::new(&eng, 2);
+        assert!(d.push(task(7, 0, 0, 64)));
+        assert!(d.push(task(7, 0, 1, 64)));
+        assert!(!d.push(task(7, 1, 0, 64)));
+        assert_eq!(d.report.frames_dropped, 1);
+        assert_eq!(d.pending(), 2);
+    }
+}

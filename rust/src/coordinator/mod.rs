@@ -9,12 +9,15 @@
 //!   the "KV-cache" of this system) — [`state`],
 //! * a dynamic batcher that packs up to 8 concurrent streams into one
 //!   PJRT dispatch of the `mp_frame_features_b8` artifact — [`batcher`],
+//! * the backend-agnostic dispatch core (frame in, classified clip out)
+//!   shared by the channel-fed server and the edge fleet — [`dispatch`],
 //! * the single-threaded PJRT dispatch loop fed by producer threads over
 //!   bounded channels (PjRtLoadedExecutable is not Send) — [`server`],
 //! * serving metrics (latency histograms, batch occupancy, drops) —
 //!   [`metrics`].
 
 pub mod batcher;
+pub mod dispatch;
 pub mod metrics;
 pub mod server;
 pub mod state;

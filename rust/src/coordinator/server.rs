@@ -4,12 +4,12 @@
 //! frame-features artifacts, running the inference artifact at clip
 //! boundaries.
 
-use super::batcher::{BatchPlan, BatcherPolicy, BatchStats};
+use super::batcher::BatcherPolicy;
+use super::dispatch::Dispatcher;
 use super::metrics::ServeReport;
-use super::state::StateStore;
 use super::{ClassifyResult, FrameTask};
 use crate::datasets::esc10;
-use crate::runtime::engine::{ModelEngine, StreamState};
+use crate::runtime::backend::InferenceBackend;
 use crate::train::TrainedModel;
 use anyhow::Result;
 use std::sync::mpsc;
@@ -42,9 +42,11 @@ impl Default for ServeConfig {
 }
 
 /// Run the serving simulation on the synthetic ESC-10 workload; returns
-/// the aggregate report and every per-clip result.
-pub fn serve(
-    engine: &mut ModelEngine,
+/// the aggregate report and every per-clip result. Generic over the
+/// inference backend: the PJRT [`crate::runtime::engine::ModelEngine`]
+/// or the pure-rust [`crate::runtime::backend::CpuEngine`].
+pub fn serve<B: InferenceBackend>(
+    engine: &mut B,
     model: &TrainedModel,
     cfg: &ServeConfig,
 ) -> Result<(ServeReport, Vec<ClassifyResult>)> {
@@ -60,11 +62,14 @@ pub fn serve(
         std::thread::spawn(move || {
             let frame_dur = Duration::from_secs_f64(frame_len as f64 / 16_000.0);
             for clip_seq in 0..cfg.clips_per_stream as u64 {
-                // synthesise this round's clip per stream
+                // synthesise this round's clip per stream; the clip index
+                // mixes the stream id into the high bits so streams never
+                // share clips (`<<` binds tighter than `^` — parenthesised
+                // so the intent does not rest on precedence)
                 let clips: Vec<(usize, Vec<f32>)> = (0..cfg.n_streams)
                     .map(|s| {
                         let class = s % n_classes;
-                        let c = esc10::synth_clip(cfg.seed, class, clip_seq ^ (s as u64) << 8);
+                        let c = esc10::synth_clip(cfg.seed, class, clip_seq ^ ((s as u64) << 8));
                         (class, c.samples[..clip_len].to_vec())
                     })
                     .collect();
@@ -94,11 +99,8 @@ pub fn serve(
         })
     };
 
-    // ---- dispatcher: single PJRT lane
-    let mut store = StateStore::new(engine.zero_state(), engine.n_filters(), cfg.queue_capacity);
-    let mut stats = BatchStats::default();
-    let mut report = ServeReport::default();
-    let mut results = Vec::new();
+    // ---- dispatcher: single compute lane pumping the shared core
+    let mut d = Dispatcher::new(engine, cfg.queue_capacity);
     let t0 = Instant::now();
     let mut producers_done = false;
 
@@ -107,9 +109,7 @@ pub fn serve(
         loop {
             match rx.try_recv() {
                 Ok(task) => {
-                    if !store.push(task) {
-                        report.frames_dropped += 1;
-                    }
+                    d.push(task);
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -118,180 +118,37 @@ pub fn serve(
                 }
             }
         }
-        let ready = store.ready_streams(8);
-        if ready.is_empty() {
+        if d.tick(engine, model, &cfg.policy)? == 0 {
             if producers_done {
-                break;
+                // a tick can process 0 frames while later streams still
+                // hold work (e.g. the oldest queues were stale-only), so
+                // only stop once every queue is empty
+                if d.pending() == 0 {
+                    break;
+                }
+                continue;
             }
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(task) => {
-                    if !store.push(task) {
-                        report.frames_dropped += 1;
-                    }
+                    d.push(task);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => producers_done = true,
             }
-            continue;
-        }
-
-        match cfg.policy.plan(&ready) {
-            BatchPlan::Wide(ids) => {
-                let occupied = ids.len();
-                // pop one in-order frame per lane (resync on clip gaps)
-                let mut lanes: Vec<(u64, FrameTask)> = Vec::with_capacity(8);
-                for &id in &ids {
-                    if let Some(task) = pop_in_order(&mut store, id, &mut report) {
-                        lanes.push((id, task));
-                    }
-                }
-                if lanes.is_empty() {
-                    continue;
-                }
-                // assemble 8 lanes: real ones first, padding after
-                let mut states: Vec<StreamState> = lanes
-                    .iter()
-                    .map(|(id, _)| store.entry(*id).state.clone())
-                    .collect();
-                let zeros = vec![0.0f32; frame_len];
-                while states.len() < 8 {
-                    states.push(store.zero_state().clone());
-                }
-                let frames: Vec<&[f32]> = lanes
-                    .iter()
-                    .map(|(_, t)| t.data.as_slice())
-                    .chain(std::iter::repeat(zeros.as_slice()))
-                    .take(8)
-                    .collect();
-                let phis = engine.mp_frame_features_b8(&mut states, &frames)?;
-                stats.record_wide(lanes.len().max(occupied.min(8)));
-                for (i, (id, task)) in lanes.iter().enumerate() {
-                    apply_frame(
-                        engine, &mut store, model, *id, task, &states[i], &phis[i],
-                        clip_frames, &mut report, &mut results,
-                    )?;
-                }
-            }
-            BatchPlan::Narrow(ids) => {
-                let mut n = 0;
-                for id in ids {
-                    if let Some(task) = pop_in_order(&mut store, id, &mut report) {
-                        let mut state = store.entry(id).state.clone();
-                        let phi = engine.mp_frame_features(&mut state, &task.data)?;
-                        apply_frame(
-                            engine, &mut store, model, id, &task, &state, &phi,
-                            clip_frames, &mut report, &mut results,
-                        )?;
-                        n += 1;
-                    }
-                }
-                stats.record_narrow(n);
-            }
-            BatchPlan::Idle => {}
         }
     }
     producer.join().ok();
 
+    let (mut report, results) = d.into_parts();
     report.wall_time = t0.elapsed();
-    report.audio_seconds =
-        stats.frames_processed as f64 * frame_len as f64 / 16_000.0;
-    report.batch = stats;
     Ok((report, results))
-}
-
-/// Pop the next frame for a stream, skipping stale frames from aborted
-/// clips and resyncing at the next clip boundary.
-fn pop_in_order(
-    store: &mut StateStore,
-    id: u64,
-    report: &mut ServeReport,
-) -> Option<FrameTask> {
-    loop {
-        let task = store.pop_frame(id)?;
-        let zero = store.zero_state().clone();
-        let e = store.entry(id);
-        if task.clip_seq == e.clip_seq && task.frame_idx == e.frames_done {
-            return Some(task);
-        }
-        if task.frame_idx == 0 && task.clip_seq > e.clip_seq {
-            // a frame was lost somewhere: abort the stale clip, resync
-            if e.frames_done > 0 {
-                report.clips_aborted += 1;
-            }
-            e.finish_clip(&zero);
-            e.clip_seq = task.clip_seq;
-            return Some(task);
-        }
-        // stale mid-clip frame: discard and keep looking
-        report.frames_dropped += 1;
-    }
-}
-
-/// Fold one processed frame into its stream; classify at clip end.
-#[allow(clippy::too_many_arguments)]
-fn apply_frame(
-    engine: &mut ModelEngine,
-    store: &mut StateStore,
-    model: &TrainedModel,
-    id: u64,
-    task: &FrameTask,
-    new_state: &StreamState,
-    phi: &[f32],
-    clip_frames: usize,
-    report: &mut ServeReport,
-    results: &mut Vec<ClassifyResult>,
-) -> Result<()> {
-    let zero = store.zero_state().clone();
-    let acc_done;
-    {
-        let e = store.entry(id);
-        e.state = new_state.clone();
-        if e.clip_t0.is_none() {
-            e.clip_t0 = Some(task.t_gen);
-        }
-        e.label = task.label;
-        for (a, p) in e.acc.iter_mut().zip(phi) {
-            *a += p;
-        }
-        e.frames_done += 1;
-        acc_done = e.frames_done >= clip_frames;
-    }
-    if acc_done {
-        let (acc, label, clip_seq) = {
-            let e = store.entry(id);
-            (e.acc.clone(), e.label, e.clip_seq)
-        };
-        let (p, _, _) = engine.inference(&model.params, &model.std, &acc, model.gamma_1)?;
-        let predicted = p
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map_or(0, |(i, _)| i);
-        let latency = task.t_gen.elapsed();
-        report.clips_classified += 1;
-        if predicted == label {
-            report.clips_correct += 1;
-        }
-        report.latency.record(latency);
-        results.push(ClassifyResult {
-            stream: id,
-            clip_seq,
-            label,
-            predicted,
-            p,
-            latency,
-        });
-        let e = store.entry(id);
-        e.finish_clip(&zero);
-        e.clip_seq += 1;
-    }
-    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mp::machine::{Params, Standardizer};
+    use crate::runtime::engine::ModelEngine;
     use std::path::PathBuf;
 
     fn engine() -> Option<ModelEngine> {
@@ -347,7 +204,7 @@ mod tests {
         // cross-check one clip against the offline feature path: the
         // served pipeline must be numerically identical to clip_features
         let r0 = &results[0];
-        let clip = esc10::synth_clip(7, (r0.stream as usize) % 10, r0.clip_seq ^ (r0.stream) << 8);
+        let clip = esc10::synth_clip(7, (r0.stream as usize) % 10, r0.clip_seq ^ (r0.stream << 8));
         let phi = eng
             .clip_features(&clip.samples[..eng.frame_len() * eng.clip_frames()])
             .unwrap();
@@ -385,5 +242,25 @@ mod tests {
         cfg.policy.wide_threshold = 5; // accelerator-style policy
         let (report, _) = serve(&mut eng, &model, &cfg).unwrap();
         assert!(report.batch.wide_dispatches > 0, "{}", report.render());
+    }
+
+    #[test]
+    fn serve_runs_on_the_cpu_backend_without_artifacts() {
+        // the same serving loop, no PJRT required: a reduced band plan
+        // keeps the pure-rust MP bank fast enough for a unit test
+        let mut plan = crate::dsp::multirate::BandPlan::paper_default();
+        plan.n_octaves = 2;
+        let mut eng = crate::runtime::backend::CpuEngine::with_clip(&plan, 1.0, 512, 2);
+        let model = dummy_model(10, eng.n_filters());
+        let cfg = ServeConfig {
+            n_streams: 3,
+            clips_per_stream: 2,
+            seed: 11,
+            ..Default::default()
+        };
+        let (report, results) = serve(&mut eng, &model, &cfg).unwrap();
+        assert_eq!(report.clips_classified, 6, "{}", report.render());
+        assert_eq!(results.len(), 6);
+        assert_eq!(report.clips_aborted, 0);
     }
 }

@@ -1,0 +1,595 @@
+//! Fleet-scale ingest simulation: hundreds of duty-cycled sensor streams
+//! of continuous synthetic ambient audio with sparse embedded ESC-10
+//! events, pushed through gate → session → coordinator → uplink in
+//! virtual time, with ground truth retained so the report can score
+//! event recall, false-trigger rate and the uplink bytes-saved ratio.
+
+use super::session::{DutyCycle, EdgeSession, SessionConfig, SessionState, AMBIENT_LABEL};
+use super::uplink::{Uplink, UplinkConfig, UplinkStats};
+use super::vad::GateConfig;
+use crate::config::EdgeConfig;
+use crate::coordinator::batcher::BatcherPolicy;
+use crate::coordinator::dispatch::Dispatcher;
+use crate::coordinator::{ClassifyResult, FrameTask};
+use crate::datasets::esc10;
+use crate::runtime::backend::InferenceBackend;
+use crate::train::TrainedModel;
+use crate::util::prng::Pcg32;
+use crate::util::table::Table;
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Full fleet shape. Use [`FleetConfig::from_edge`] for the CLI path.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub n_streams: usize,
+    /// frames of virtual time per stream
+    pub ticks: u64,
+    pub events_per_stream: usize,
+    /// force every embedded event to one ESC-10 class (None = random)
+    pub event_class: Option<usize>,
+    pub seed: u64,
+    pub ambient_rms: f64,
+    pub event_gain: f64,
+    pub frame_len: usize,
+    pub clip_frames: usize,
+    pub pre_trigger_frames: usize,
+    pub duty_awake: u32,
+    pub duty_sleep: u32,
+    pub gate: GateConfig,
+    pub uplink: UplinkConfig,
+    pub policy: BatcherPolicy,
+    pub queue_capacity: usize,
+    pub sample_rate: f64,
+}
+
+impl FleetConfig {
+    /// Instantiate for a backend's clip geometry from the CLI-level
+    /// [`EdgeConfig`]. The gate's floor time constant is derived from
+    /// `frame_len` so it always spans ~8 frames — it must cover several
+    /// frames or the within-frame floor adaptation chases an event
+    /// before the frame-boundary decision sees it. CLI-reachable values
+    /// are clamped into their valid ranges rather than asserted on.
+    pub fn from_edge(
+        e: &EdgeConfig,
+        seed: u64,
+        frame_len: usize,
+        clip_frames: usize,
+    ) -> FleetConfig {
+        // 2048-sample frames -> shift 14 (~16k samples); 256 -> shift 11
+        let slow_shift = (frame_len * 8).next_power_of_two().trailing_zeros().min(20);
+        let margin_shift = e.gate_margin_shift.min(6);
+        let gate = GateConfig {
+            slow_shift,
+            warmup_frames: 12, // ~1.5 floor time constants, any frame_len
+            margin_shift,
+            hangover_frames: e.gate_hangover,
+            release_shift: margin_shift + 1,
+            ..GateConfig::default()
+        };
+        let sample_rate = 16_000.0;
+        let ticks = ((e.seconds_per_stream * sample_rate / frame_len as f64).ceil() as u64).max(1);
+        // a clip-upload message must fit the bucket or it is permanently
+        // unsendable; grow the burst to hold at least one
+        let clip_msg = (frame_len * clip_frames * 2 + 64) as f64;
+        let burst = if e.upload_clips {
+            e.uplink_burst_bytes.max(clip_msg)
+        } else {
+            e.uplink_burst_bytes
+        };
+        FleetConfig {
+            n_streams: e.n_streams,
+            ticks,
+            events_per_stream: e.events_per_stream,
+            event_class: None,
+            seed,
+            ambient_rms: e.ambient_rms,
+            event_gain: e.event_gain,
+            frame_len,
+            clip_frames,
+            pre_trigger_frames: e.pre_trigger_frames.min(clip_frames.saturating_sub(1)),
+            duty_awake: e.duty_awake,
+            duty_sleep: e.duty_sleep,
+            gate,
+            uplink: UplinkConfig {
+                bytes_per_sec: e.uplink_bytes_per_sec,
+                burst_bytes: burst,
+                upload_clips: e.upload_clips,
+                ..UplinkConfig::default()
+            },
+            policy: BatcherPolicy::default(),
+            queue_capacity: 32,
+            sample_rate,
+        }
+    }
+}
+
+/// One embedded event the simulator knows the truth about.
+#[derive(Clone, Copy, Debug)]
+pub struct GroundTruthEvent {
+    pub stream: u64,
+    pub class: usize,
+    /// frame window [start, end)
+    pub start: u64,
+    pub end: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct PlannedEvent {
+    class: usize,
+    start: u64,
+    clip_index: u64,
+}
+
+/// A sensor stream: ambient noise generator + planned events + session.
+struct SensorStream {
+    session: EdgeSession,
+    ambient_rng: Pcg32,
+    events: Vec<PlannedEvent>,
+    next_event: usize,
+    /// synthesised samples of the currently overlapping event
+    active: Option<Vec<f32>>,
+}
+
+impl SensorStream {
+    /// Synthesise this stream's frame at `tick`; returns the audio and
+    /// the ground-truth label of any overlapping event.
+    fn next_frame(&mut self, tick: u64, cfg: &FleetConfig) -> (Vec<f32>, usize) {
+        // retire events whose window has passed (possibly while asleep)
+        while self.next_event < self.events.len()
+            && tick >= self.events[self.next_event].start + cfg.clip_frames as u64
+        {
+            self.next_event += 1;
+            self.active = None;
+        }
+        let mut frame: Vec<f32> = (0..cfg.frame_len)
+            .map(|_| (self.ambient_rng.normal() * cfg.ambient_rms) as f32)
+            .collect();
+        let mut label = AMBIENT_LABEL;
+        if let Some(ev) = self.events.get(self.next_event).copied() {
+            if tick >= ev.start {
+                let samples = self.active.get_or_insert_with(|| {
+                    esc10::synth_clip(cfg.seed, ev.class, ev.clip_index).samples
+                });
+                let off = (tick - ev.start) as usize * cfg.frame_len;
+                let end = (off + cfg.frame_len).min(samples.len());
+                if off < end {
+                    let gain = cfg.event_gain as f32;
+                    for (f, &s) in frame.iter_mut().zip(&samples[off..end]) {
+                        *f += gain * s;
+                    }
+                    label = ev.class;
+                }
+            }
+        }
+        (frame, label)
+    }
+}
+
+/// Aggregate fleet report.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub streams: usize,
+    pub ticks: u64,
+    /// captured (awake) audio seconds across the fleet
+    pub audio_seconds: f64,
+    /// awake fraction actually realised by the duty schedule
+    pub duty_factor: f64,
+    /// fraction of awake frames the gate kept on the edge
+    pub gated_off_fraction: f64,
+    pub trigger_onsets: u64,
+    pub clips_classified: u64,
+    pub clips_aborted: u64,
+    pub frames_dropped: u64,
+    /// onsets that got a shorter pre-trigger lookback than configured
+    pub lookback_truncated: u64,
+    pub gate_resets: u64,
+    pub events_total: usize,
+    pub events_recalled: usize,
+    pub false_triggers: u64,
+    /// classification accuracy over clips matched to a ground-truth event
+    pub matched_total: u64,
+    pub matched_correct: u64,
+    pub uplink: UplinkStats,
+    pub bytes_saved_ratio: f64,
+    pub wall: Duration,
+}
+
+impl FleetReport {
+    pub fn recall(&self) -> f64 {
+        if self.events_total == 0 {
+            0.0
+        } else {
+            self.events_recalled as f64 / self.events_total as f64
+        }
+    }
+
+    /// False triggers per captured stream-hour.
+    pub fn false_trigger_rate(&self) -> f64 {
+        let hours = self.audio_seconds / 3600.0;
+        if hours <= 0.0 {
+            0.0
+        } else {
+            self.false_triggers as f64 / hours
+        }
+    }
+
+    pub fn matched_accuracy(&self) -> f64 {
+        if self.matched_total == 0 {
+            0.0
+        } else {
+            self.matched_correct as f64 / self.matched_total as f64
+        }
+    }
+
+    pub fn realtime_factor(&self) -> f64 {
+        let w = self.wall.as_secs_f64();
+        if w <= 0.0 {
+            0.0
+        } else {
+            self.audio_seconds / w
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "fleet: {} streams x {} frames | captured audio {:.1}s \
+             (duty {:.0}%) | wall {:.2}s ({:.1}x realtime)\n\
+             gate: {:.1}% of awake frames held on the edge | onsets={} \
+             lookback_truncated={} gate_resets={}\n\
+             events: {}/{} recalled ({:.1}%) | false triggers={} \
+             ({:.2}/stream-hour)\n\
+             classify: clips={} aborted={} dropped_frames={} | matched \
+             accuracy {:.1}% ({}/{})\n\
+             uplink: sent {} msgs / {} B (dropped {}) vs raw {} B | \
+             bytes-saved {:.0}x",
+            self.streams,
+            self.ticks,
+            self.audio_seconds,
+            100.0 * self.duty_factor,
+            self.wall.as_secs_f64(),
+            self.realtime_factor(),
+            100.0 * self.gated_off_fraction,
+            self.trigger_onsets,
+            self.lookback_truncated,
+            self.gate_resets,
+            self.events_recalled,
+            self.events_total,
+            100.0 * self.recall(),
+            self.false_triggers,
+            self.false_trigger_rate(),
+            self.clips_classified,
+            self.clips_aborted,
+            self.frames_dropped,
+            100.0 * self.matched_accuracy(),
+            self.matched_correct,
+            self.matched_total,
+            self.uplink.msgs_sent,
+            self.uplink.bytes_sent,
+            self.uplink.msgs_dropped,
+            self.uplink.raw_bytes_captured,
+            self.bytes_saved_ratio,
+        )
+    }
+
+    /// Key/value table for the CSV dump.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new("edge fleet report", &["metric", "value"]);
+        let mut kv = |k: &str, v: String| {
+            t.row(vec![k.to_string(), v]);
+        };
+        kv("streams", self.streams.to_string());
+        kv("ticks", self.ticks.to_string());
+        kv("audio_seconds", format!("{:.2}", self.audio_seconds));
+        kv("duty_factor", format!("{:.4}", self.duty_factor));
+        kv("gated_off_fraction", format!("{:.4}", self.gated_off_fraction));
+        kv("trigger_onsets", self.trigger_onsets.to_string());
+        kv("events_total", self.events_total.to_string());
+        kv("events_recalled", self.events_recalled.to_string());
+        kv("recall", format!("{:.4}", self.recall()));
+        kv("false_triggers", self.false_triggers.to_string());
+        kv("false_triggers_per_hour", format!("{:.3}", self.false_trigger_rate()));
+        kv("clips_classified", self.clips_classified.to_string());
+        kv("clips_aborted", self.clips_aborted.to_string());
+        kv("frames_dropped", self.frames_dropped.to_string());
+        kv("matched_accuracy", format!("{:.4}", self.matched_accuracy()));
+        kv("uplink_msgs_sent", self.uplink.msgs_sent.to_string());
+        kv("uplink_bytes_sent", self.uplink.bytes_sent.to_string());
+        kv("uplink_msgs_dropped", self.uplink.msgs_dropped.to_string());
+        kv("raw_bytes_captured", self.uplink.raw_bytes_captured.to_string());
+        kv("bytes_saved_ratio", format!("{:.1}", self.bytes_saved_ratio));
+        kv("wall_seconds", format!("{:.3}", self.wall.as_secs_f64()));
+        t
+    }
+}
+
+/// Plan this stream's events inside the usable window, one per chunk so
+/// events never merge. Returns fewer events when the window is too small.
+fn plan_events(cfg: &FleetConfig, rng: &mut Pcg32, stream: u64) -> Vec<PlannedEvent> {
+    // gate warmup elapses on *awake* frames only, so the exclusion
+    // window at the start must be scaled from awake frames to wall ticks
+    let period = u64::from((cfg.duty_awake + cfg.duty_sleep).max(1));
+    let awake = u64::from(cfg.duty_awake.max(1));
+    let warmup_wall = (u64::from(cfg.gate.warmup_frames) * period).div_ceil(awake);
+    let min_start = warmup_wall + cfg.pre_trigger_frames as u64 + 2;
+    let guard = cfg.clip_frames as u64 + 4; // event + drain/settle gap
+    let Some(span) = (cfg.ticks.saturating_sub(min_start)).checked_sub(guard) else {
+        return Vec::new();
+    };
+    if cfg.events_per_stream == 0 {
+        return Vec::new();
+    }
+    let chunk = span / cfg.events_per_stream as u64;
+    let mut out = Vec::new();
+    for e in 0..cfg.events_per_stream as u64 {
+        if chunk < guard {
+            break; // window too small for more events
+        }
+        let lo = min_start + e * chunk;
+        let hi = lo + chunk - guard;
+        let start = lo + u64::from(rng.below((hi - lo + 1) as u32));
+        let class = match cfg.event_class {
+            Some(c) => c,
+            None => rng.below(10) as usize,
+        };
+        out.push(PlannedEvent {
+            class,
+            start,
+            // clip indices disjoint from train (0..) and test (10_000..)
+            clip_index: 20_000 + stream * 64 + e,
+        });
+    }
+    out
+}
+
+/// Drive the whole fleet through the shared dispatcher in virtual time.
+pub fn run_fleet<B: InferenceBackend>(
+    backend: &mut B,
+    model: &TrainedModel,
+    cfg: &FleetConfig,
+) -> Result<(FleetReport, Vec<ClassifyResult>)> {
+    ensure!(
+        backend.frame_len() == cfg.frame_len && backend.clip_frames() == cfg.clip_frames,
+        "backend clip geometry ({}/{}) does not match the fleet config ({}/{})",
+        backend.frame_len(),
+        backend.clip_frames(),
+        cfg.frame_len,
+        cfg.clip_frames
+    );
+    let period = (cfg.duty_awake + cfg.duty_sleep).max(1);
+    let mut ground_truth: Vec<GroundTruthEvent> = Vec::new();
+    let mut streams: Vec<SensorStream> = (0..cfg.n_streams)
+        .map(|id| {
+            let mut ev_rng = Pcg32::substream(cfg.seed ^ 0xeef1, id as u64);
+            let events = plan_events(cfg, &mut ev_rng, id as u64);
+            for ev in &events {
+                ground_truth.push(GroundTruthEvent {
+                    stream: id as u64,
+                    class: ev.class,
+                    start: ev.start,
+                    end: ev.start + cfg.clip_frames as u64,
+                });
+            }
+            let mut scfg = SessionConfig::new(id as u64, cfg.frame_len, cfg.clip_frames);
+            scfg.pre_trigger_frames = cfg.pre_trigger_frames;
+            scfg.gate = cfg.gate;
+            scfg.duty = DutyCycle {
+                awake_frames: cfg.duty_awake.max(1),
+                sleep_frames: cfg.duty_sleep,
+                phase: (id as u32).wrapping_mul(7) % period,
+            };
+            SensorStream {
+                session: EdgeSession::new(scfg),
+                ambient_rng: Pcg32::substream(cfg.seed, id as u64),
+                events,
+                next_event: 0,
+                active: None,
+            }
+        })
+        .collect();
+
+    let frame_dur = cfg.frame_len as f64 / cfg.sample_rate;
+    let clip_samples = cfg.frame_len * cfg.clip_frames;
+    let mut dispatcher = Dispatcher::new(backend, cfg.queue_capacity);
+    let mut uplink = Uplink::new(cfg.uplink);
+    // (stream, clip_seq) -> onset tick, for ground-truth matching
+    let mut onsets: Vec<(u64, u64, u64)> = Vec::new();
+    let mut tasks: Vec<FrameTask> = Vec::new();
+    let t0 = Instant::now();
+
+    for tick in 0..cfg.ticks {
+        uplink.tick(frame_dur);
+        for s in streams.iter_mut() {
+            // a sensor mid-capture stays awake to finish its clip
+            // (splicing audio from across a sleep gap would hand the
+            // classifier a discontinuous clip); only Idle sensors sleep
+            if !s.session.awake(tick) && s.session.state() == SessionState::Idle {
+                s.session.note_asleep();
+                continue;
+            }
+            let (frame, label) = s.next_frame(tick, cfg);
+            uplink.record_raw(frame.len());
+            tasks.clear();
+            s.session.push_frame(&frame, label, &mut tasks);
+            for t in tasks.drain(..) {
+                if t.frame_idx == 0 {
+                    onsets.push((t.stream, t.clip_seq, tick));
+                }
+                dispatcher.push(t);
+            }
+        }
+        // classify everything that became ready within this virtual tick
+        let before = dispatcher.results.len();
+        dispatcher.drain(backend, model, &cfg.policy)?;
+        for _ in before..dispatcher.results.len() {
+            uplink.send_event(clip_samples);
+        }
+    }
+    let wall = t0.elapsed();
+
+    // ---- ground-truth matching
+    let pre = cfg.pre_trigger_frames as u64;
+    let mut recalled = vec![false; ground_truth.len()];
+    let mut false_triggers = 0u64;
+    let mut onset_match: HashMap<(u64, u64), Option<usize>> = HashMap::new();
+    for &(stream, clip_seq, tick) in &onsets {
+        let w0 = tick.saturating_sub(pre);
+        let w1 = w0 + cfg.clip_frames as u64;
+        let hit = ground_truth
+            .iter()
+            .position(|gt| gt.stream == stream && w0 < gt.end && gt.start < w1);
+        match hit {
+            Some(i) => recalled[i] = true,
+            None => false_triggers += 1,
+        }
+        onset_match.insert((stream, clip_seq), hit);
+    }
+    let (mut matched_total, mut matched_correct) = (0u64, 0u64);
+    for r in &dispatcher.results {
+        if let Some(Some(gt)) = onset_match.get(&(r.stream, r.clip_seq)) {
+            matched_total += 1;
+            if r.predicted == ground_truth[*gt].class {
+                matched_correct += 1;
+            }
+        }
+    }
+
+    // ---- aggregate session counters
+    let mut frames_seen = 0u64;
+    let mut frames_asleep = 0u64;
+    let mut gated_off = 0u64;
+    let mut onset_count = 0u64;
+    let mut lookback_truncated = 0u64;
+    let mut gate_resets = 0u64;
+    for s in &streams {
+        frames_seen += s.session.stats.frames_seen;
+        frames_asleep += s.session.stats.frames_asleep;
+        gated_off += s.session.stats.frames_gated_off;
+        onset_count += s.session.stats.trigger_onsets;
+        lookback_truncated += s.session.stats.lookback_truncated;
+        gate_resets += s.session.stats.gate_resets;
+    }
+
+    let (serve_report, results) = dispatcher.into_parts();
+    let report = FleetReport {
+        streams: cfg.n_streams,
+        ticks: cfg.ticks,
+        audio_seconds: frames_seen as f64 * frame_dur,
+        duty_factor: frames_seen as f64 / (frames_seen + frames_asleep).max(1) as f64,
+        gated_off_fraction: gated_off as f64 / frames_seen.max(1) as f64,
+        trigger_onsets: onset_count,
+        clips_classified: serve_report.clips_classified,
+        clips_aborted: serve_report.clips_aborted,
+        frames_dropped: serve_report.frames_dropped,
+        lookback_truncated,
+        gate_resets,
+        events_total: ground_truth.len(),
+        events_recalled: recalled.iter().filter(|&&r| r).count(),
+        false_triggers,
+        matched_total,
+        matched_correct,
+        uplink: uplink.stats,
+        bytes_saved_ratio: uplink.bytes_saved_ratio(),
+        wall,
+    };
+    Ok((report, results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::multirate::BandPlan;
+    use crate::mp::machine::{Params, Standardizer};
+    use crate::runtime::backend::CpuEngine;
+
+    fn tiny_backend() -> CpuEngine {
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = 2;
+        CpuEngine::with_clip(&plan, 1.0, 256, 4)
+    }
+
+    fn dummy_model(p: usize) -> TrainedModel {
+        let mut rng = Pcg32::new(9);
+        TrainedModel {
+            classes: (0..10).map(|c| format!("c{c}")).collect(),
+            params: Params {
+                wp: (0..10).map(|_| rng.normal_vec(p)).collect(),
+                wm: (0..10).map(|_| rng.normal_vec(p)).collect(),
+                bp: vec![0.0; 10],
+                bm: vec![0.0; 10],
+            },
+            std: Standardizer {
+                mu: vec![5.0; p],
+                sigma: vec![5.0; p],
+            },
+            gamma_f: 1.0,
+            gamma_1: 4.0,
+        }
+    }
+
+    fn tiny_config() -> FleetConfig {
+        FleetConfig {
+            n_streams: 3,
+            ticks: 100,
+            events_per_stream: 1,
+            event_class: Some(3), // crying_baby: dense, gate-friendly
+            seed: 42,
+            ambient_rms: 0.02,
+            event_gain: 1.0,
+            frame_len: 256,
+            clip_frames: 4,
+            pre_trigger_frames: 1,
+            duty_awake: 1,
+            duty_sleep: 0,
+            gate: GateConfig::default(),
+            uplink: UplinkConfig::default(),
+            policy: BatcherPolicy::default(),
+            queue_capacity: 64,
+            sample_rate: 16_000.0,
+        }
+    }
+
+    #[test]
+    fn fleet_detects_embedded_events_and_saves_bandwidth() {
+        let mut eng = tiny_backend();
+        let model = dummy_model(eng.n_filters());
+        let cfg = tiny_config();
+        let (report, results) = run_fleet(&mut eng, &model, &cfg).unwrap();
+        assert_eq!(report.events_total, 3, "{}", report.render());
+        assert!(report.events_recalled >= 2, "{}", report.render());
+        assert!(report.false_triggers <= 2, "{}", report.render());
+        assert_eq!(report.clips_classified as usize, results.len());
+        assert!(report.clips_classified >= report.events_recalled as u64);
+        assert!(report.gated_off_fraction > 0.5, "{}", report.render());
+        assert!(report.bytes_saved_ratio > 10.0, "{}", report.render());
+        assert_eq!(report.uplink.msgs_sent, report.clips_classified);
+        // report renders and tabulates without panicking
+        assert!(report.render().contains("bytes-saved"));
+        assert_eq!(report.table().rows.len(), 21);
+    }
+
+    #[test]
+    fn duty_cycling_reduces_captured_audio() {
+        let mut eng = tiny_backend();
+        let model = dummy_model(eng.n_filters());
+        let mut cfg = tiny_config();
+        cfg.duty_awake = 3;
+        cfg.duty_sleep = 1;
+        let (report, _) = run_fleet(&mut eng, &model, &cfg).unwrap();
+        assert!(
+            (report.duty_factor - 0.75).abs() < 0.05,
+            "duty factor {}",
+            report.duty_factor
+        );
+        assert!(report.audio_seconds < 3.0 * 100.0 * 256.0 / 16_000.0);
+    }
+
+    #[test]
+    fn empty_window_plans_no_events() {
+        let mut cfg = tiny_config();
+        cfg.ticks = 10; // smaller than warmup + guard
+        let mut rng = Pcg32::new(1);
+        assert!(plan_events(&cfg, &mut rng, 0).is_empty());
+    }
+}

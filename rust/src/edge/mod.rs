@@ -1,0 +1,33 @@
+//! Edge ingest subsystem: the continuous-audio front end that stands
+//! between raw sensors and the serving coordinator (paper Fig. 1's
+//! remote wildlife monitor, made concrete).
+//!
+//! The coordinator consumes clip-aligned [`FrameTask`]s; real sensors
+//! produce never-ending audio on a bandwidth-starved uplink. This module
+//! closes that gap with the same design discipline as the paper's
+//! datapath — the detection gate is built purely from add/subtract/
+//! shift/compare over [`crate::fixed::q`] types, so it is as
+//! FPGA-honest as the MP kernel it guards:
+//!
+//! * [`vad`] — multiplierless event gate (shift-EMA envelopes, hysteresis
+//!   comparator, hangover counter),
+//! * [`ring`] — fixed-capacity frame ring giving the gate pre-trigger
+//!   lookback,
+//! * [`session`] — per-sensor lifecycle (Idle → Triggered → Draining),
+//!   duty-cycle accounting and clip assembly,
+//! * [`uplink`] — token-bucket bandwidth budget modelling the remote
+//!   link, with the bytes-saved-vs-raw-streaming accounting,
+//! * [`fleet`] — the fleet simulator: hundreds of duty-cycled streams
+//!   with ground-truth embedded events, driven through the coordinator's
+//!   [`Dispatcher`] and scored for recall / false triggers / bandwidth.
+//!
+//! [`FrameTask`]: crate::coordinator::FrameTask
+//! [`Dispatcher`]: crate::coordinator::dispatch::Dispatcher
+
+pub mod fleet;
+pub mod ring;
+pub mod session;
+pub mod uplink;
+pub mod vad;
+
+pub use session::AMBIENT_LABEL;

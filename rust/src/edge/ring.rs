@@ -1,0 +1,153 @@
+//! Fixed-capacity frame ring with pre-trigger lookback.
+//!
+//! The gate decides an event started only *after* hearing it, so the
+//! session must be able to emit the frames from just before the onset.
+//! This ring keeps the last `capacity` gated-off frames in pre-allocated
+//! slots (single-producer single-consumer friendly: plain index
+//! arithmetic, no allocation after construction) and counts every
+//! overwrite, which is the session's lookback-overrun metric.
+
+/// Ring of equally sized audio frames, newest overwrites oldest.
+#[derive(Clone, Debug)]
+pub struct FrameRing {
+    slots: Vec<Vec<f32>>,
+    frame_len: usize,
+    /// next slot to write
+    head: usize,
+    /// number of valid slots (saturates at capacity)
+    len: usize,
+    /// frames displaced before ever being read out
+    overwritten: u64,
+}
+
+impl FrameRing {
+    pub fn new(capacity: usize, frame_len: usize) -> FrameRing {
+        assert!(capacity >= 1, "ring needs at least one slot");
+        FrameRing {
+            slots: vec![vec![0.0; frame_len]; capacity],
+            frame_len,
+            head: 0,
+            len: 0,
+            overwritten: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Frames displaced by later pushes without being read.
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten
+    }
+
+    /// Copy a frame into the ring, displacing the oldest when full.
+    pub fn push(&mut self, frame: &[f32]) {
+        assert_eq!(frame.len(), self.frame_len, "frame length mismatch");
+        let cap = self.slots.len();
+        if self.len == cap {
+            self.overwritten += 1;
+        } else {
+            self.len += 1;
+        }
+        self.slots[self.head].copy_from_slice(frame);
+        self.head = (self.head + 1) % cap;
+    }
+
+    /// The newest `n` frames in chronological order (fewer if the ring
+    /// holds fewer).
+    pub fn last_n(&self, n: usize) -> Vec<&[f32]> {
+        let take = n.min(self.len);
+        let cap = self.slots.len();
+        (0..take)
+            .map(|i| {
+                // i = 0 is the oldest of the `take` newest
+                let idx = (self.head + cap - take + i) % cap;
+                self.slots[idx].as_slice()
+            })
+            .collect()
+    }
+
+    /// Forget everything (keeps the overwrite counter).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(v: f32) -> Vec<f32> {
+        vec![v; 4]
+    }
+
+    #[test]
+    fn fills_then_wraps_in_order() {
+        let mut r = FrameRing::new(3, 4);
+        assert!(r.is_empty());
+        for v in 0..5 {
+            r.push(&frame(v as f32));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.overwritten(), 2);
+        let last = r.last_n(3);
+        assert_eq!(last[0][0], 2.0);
+        assert_eq!(last[1][0], 3.0);
+        assert_eq!(last[2][0], 4.0);
+    }
+
+    #[test]
+    fn last_n_partial_and_oversized() {
+        let mut r = FrameRing::new(4, 4);
+        r.push(&frame(7.0));
+        r.push(&frame(8.0));
+        let two = r.last_n(8);
+        assert_eq!(two.len(), 2);
+        assert_eq!(two[0][0], 7.0);
+        assert_eq!(two[1][0], 8.0);
+        let one = r.last_n(1);
+        assert_eq!(one[0][0], 8.0);
+        assert!(r.last_n(0).is_empty());
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_counters() {
+        let mut r = FrameRing::new(2, 4);
+        r.push(&frame(1.0));
+        r.push(&frame(2.0));
+        r.push(&frame(3.0));
+        assert_eq!(r.overwritten(), 1);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.overwritten(), 1);
+        r.push(&frame(9.0));
+        assert_eq!(r.last_n(2).len(), 1);
+        assert_eq!(r.last_n(1)[0][0], 9.0);
+    }
+
+    #[test]
+    fn single_slot_ring() {
+        let mut r = FrameRing::new(1, 4);
+        r.push(&frame(1.0));
+        r.push(&frame(2.0));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.last_n(1)[0][0], 2.0);
+        assert_eq!(r.overwritten(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "frame length mismatch")]
+    fn wrong_frame_length_panics() {
+        let mut r = FrameRing::new(2, 4);
+        r.push(&[0.0; 3]);
+    }
+}

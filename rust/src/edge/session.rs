@@ -1,0 +1,418 @@
+//! Per-sensor session lifecycle: turns a never-ending gated audio stream
+//! into the clip-aligned [`FrameTask`]s the coordinator consumes.
+//!
+//! State machine:
+//!
+//! ```text
+//!           gate onset                    clip_frames emitted
+//!   Idle ----------------> Triggered -------------------------+
+//!    ^   (emit pre-trigger               |                    |
+//!    |    lookback + live frames)        | gate already shut  v
+//!    +-----------------------------------+              Draining
+//!    ^                                                        |
+//!    +------------------- gate shut --------------------------+
+//! ```
+//!
+//! * **Idle** — ambient audio flows into the lookback ring only; nothing
+//!   reaches the coordinator (this is the compute + bandwidth saving).
+//! * **Triggered** — a clip is being assembled: the pre-trigger frames
+//!   from the ring, then live frames, exactly `clip_frames` in total so
+//!   the coordinator's accumulator semantics are untouched.
+//! * **Draining** — the clip is full but the gate is still open; frames
+//!   are counted and discarded so one long event yields one clip instead
+//!   of retriggering on its own tail. A watchdog resets a gate that is
+//!   stuck open (e.g. a floor poisoned by a cold-start transient).
+//!
+//! Duty cycling is owned here too: an asleep sensor produces nothing,
+//! and the session accounts awake/asleep frames for the duty report.
+
+use super::ring::FrameRing;
+use super::vad::{EnergyGate, GateConfig};
+use crate::coordinator::FrameTask;
+use std::time::Instant;
+
+/// Label carried by frames of clips that do not overlap any ground-truth
+/// event (fleet bookkeeping; never a valid class index).
+pub const AMBIENT_LABEL: usize = usize::MAX;
+
+/// Periodic sleep schedule in frame ticks.
+#[derive(Clone, Copy, Debug)]
+pub struct DutyCycle {
+    pub awake_frames: u32,
+    pub sleep_frames: u32,
+    /// schedule offset, so a fleet's sensors stagger their wakeups
+    pub phase: u32,
+}
+
+impl DutyCycle {
+    pub fn always_on() -> DutyCycle {
+        DutyCycle {
+            awake_frames: 1,
+            sleep_frames: 0,
+            phase: 0,
+        }
+    }
+
+    pub fn period(&self) -> u32 {
+        (self.awake_frames + self.sleep_frames).max(1)
+    }
+
+    pub fn awake_at(&self, tick: u64) -> bool {
+        if self.sleep_frames == 0 {
+            return true;
+        }
+        ((tick + u64::from(self.phase)) % u64::from(self.period()))
+            < u64::from(self.awake_frames)
+    }
+
+    /// Fraction of ticks the sensor is awake.
+    pub fn factor(&self) -> f64 {
+        f64::from(self.awake_frames.max(1)) / f64::from(self.period())
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionState {
+    Idle,
+    Triggered,
+    Draining,
+}
+
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub stream: u64,
+    pub frame_len: usize,
+    pub clip_frames: usize,
+    /// lookback frames emitted before the onset frame (< clip_frames)
+    pub pre_trigger_frames: usize,
+    pub gate: GateConfig,
+    pub duty: DutyCycle,
+    /// frames the gate may stay open post-clip before it is reset
+    pub max_drain_frames: u32,
+}
+
+impl SessionConfig {
+    pub fn new(stream: u64, frame_len: usize, clip_frames: usize) -> SessionConfig {
+        SessionConfig {
+            stream,
+            frame_len,
+            clip_frames,
+            pre_trigger_frames: 2,
+            gate: GateConfig::default(),
+            duty: DutyCycle::always_on(),
+            max_drain_frames: 32,
+        }
+    }
+}
+
+/// Counters the fleet report aggregates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    pub frames_seen: u64,
+    pub frames_asleep: u64,
+    /// awake frames the gate kept away from the coordinator
+    pub frames_gated_off: u64,
+    pub frames_drained: u64,
+    pub trigger_onsets: u64,
+    pub clips_emitted: u64,
+    pub gate_resets: u64,
+    /// onsets whose pre-trigger lookback was shorter than configured
+    /// (not enough history in the ring yet)
+    pub lookback_truncated: u64,
+}
+
+/// One sensor stream's ingest front end.
+pub struct EdgeSession {
+    cfg: SessionConfig,
+    gate: EnergyGate,
+    ring: FrameRing,
+    state: SessionState,
+    clip_seq: u64,
+    frames_into_clip: usize,
+    /// sticky ground-truth label for the clip being assembled: once any
+    /// emitted frame overlaps an event, the whole clip reports that
+    /// class (the dispatcher keeps the last frame's label, so trailing
+    /// post-event frames must not relabel the clip ambient)
+    clip_label: usize,
+    drained_this_event: u32,
+    pub stats: SessionStats,
+}
+
+impl EdgeSession {
+    pub fn new(cfg: SessionConfig) -> EdgeSession {
+        assert!(
+            cfg.pre_trigger_frames < cfg.clip_frames,
+            "pre-trigger lookback must leave room for live frames"
+        );
+        let gate = EnergyGate::new(cfg.gate);
+        let ring = FrameRing::new(cfg.pre_trigger_frames.max(1), cfg.frame_len);
+        EdgeSession {
+            cfg,
+            gate,
+            ring,
+            state: SessionState::Idle,
+            clip_seq: 0,
+            frames_into_clip: 0,
+            clip_label: AMBIENT_LABEL,
+            drained_this_event: 0,
+            stats: SessionStats::default(),
+        }
+    }
+
+    pub fn state(&self) -> SessionState {
+        self.state
+    }
+
+    pub fn stream(&self) -> u64 {
+        self.cfg.stream
+    }
+
+    pub fn clip_seq(&self) -> u64 {
+        self.clip_seq
+    }
+
+    /// Lookback frames displaced unread (ring overruns).
+    pub fn ring_overruns(&self) -> u64 {
+        self.ring.overwritten()
+    }
+
+    pub fn awake(&self, tick: u64) -> bool {
+        self.cfg.duty.awake_at(tick)
+    }
+
+    /// Account one asleep tick (the caller skips synthesis entirely).
+    pub fn note_asleep(&mut self) {
+        self.stats.frames_asleep += 1;
+    }
+
+    /// Feed one awake frame; any clip frames it releases are appended to
+    /// `out` (pre-trigger lookback first, in order). `label` tags the
+    /// emitted frames for evaluation ([`AMBIENT_LABEL`] when no event is
+    /// known to be present).
+    pub fn push_frame(&mut self, frame: &[f32], label: usize, out: &mut Vec<FrameTask>) {
+        assert_eq!(frame.len(), self.cfg.frame_len, "frame length mismatch");
+        self.stats.frames_seen += 1;
+        let q = self.gate.quantize(frame);
+        let g = self.gate.push_frame(&q);
+        match self.state {
+            SessionState::Idle => {
+                if g.open {
+                    self.state = SessionState::Triggered;
+                    self.stats.trigger_onsets += 1;
+                    self.frames_into_clip = 0;
+                    let lookback: Vec<Vec<f32>> = self
+                        .ring
+                        .last_n(self.cfg.pre_trigger_frames)
+                        .into_iter()
+                        .map(<[f32]>::to_vec)
+                        .collect();
+                    if lookback.len() < self.cfg.pre_trigger_frames {
+                        self.stats.lookback_truncated += 1;
+                    }
+                    for lb in &lookback {
+                        self.emit(lb, label, out);
+                    }
+                    self.ring.clear();
+                    self.emit(frame, label, out);
+                    self.after_emit();
+                } else {
+                    self.ring.push(frame);
+                    self.stats.frames_gated_off += 1;
+                }
+            }
+            SessionState::Triggered => {
+                self.emit(frame, label, out);
+                self.after_emit();
+            }
+            SessionState::Draining => {
+                self.stats.frames_drained += 1;
+                self.drained_this_event += 1;
+                self.ring.push(frame);
+                if !g.open {
+                    self.state = SessionState::Idle;
+                } else if self.drained_this_event >= self.cfg.max_drain_frames {
+                    // watchdog: a gate latched open starves the stream
+                    self.gate.reset();
+                    self.stats.gate_resets += 1;
+                    self.state = SessionState::Idle;
+                }
+            }
+        }
+    }
+
+    fn emit(&mut self, frame: &[f32], label: usize, out: &mut Vec<FrameTask>) {
+        if label != AMBIENT_LABEL {
+            self.clip_label = label;
+        }
+        out.push(FrameTask {
+            stream: self.cfg.stream,
+            clip_seq: self.clip_seq,
+            frame_idx: self.frames_into_clip,
+            data: frame.to_vec(),
+            label: self.clip_label,
+            t_gen: Instant::now(),
+        });
+        self.frames_into_clip += 1;
+    }
+
+    /// Close the clip when it is full; decide where the event goes next.
+    fn after_emit(&mut self) {
+        if self.frames_into_clip >= self.cfg.clip_frames {
+            self.clip_seq += 1;
+            self.frames_into_clip = 0;
+            self.clip_label = AMBIENT_LABEL;
+            self.stats.clips_emitted += 1;
+            self.drained_this_event = 0;
+            self.ring.clear();
+            self.state = if self.gate.is_open() {
+                SessionState::Draining
+            } else {
+                SessionState::Idle
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FRAME: usize = 256;
+
+    fn config(stream: u64) -> SessionConfig {
+        let mut cfg = SessionConfig::new(stream, FRAME, 4);
+        cfg.pre_trigger_frames = 2;
+        cfg
+    }
+
+    fn ambient(i: u64) -> Vec<f32> {
+        let mut rng = crate::util::prng::Pcg32::new(0xa3b1 ^ i);
+        (0..FRAME).map(|_| (rng.normal() as f32) * 0.02).collect()
+    }
+
+    fn burst() -> Vec<f32> {
+        (0..FRAME)
+            .map(|i| if i % 2 == 0 { 0.5 } else { -0.5 })
+            .collect()
+    }
+
+    fn settle(s: &mut EdgeSession, out: &mut Vec<FrameTask>, n: u64) {
+        for i in 0..n {
+            s.push_frame(&ambient(i), AMBIENT_LABEL, out);
+        }
+        assert!(out.is_empty(), "ambient audio must stay on the edge");
+        assert_eq!(s.state(), SessionState::Idle);
+    }
+
+    #[test]
+    fn event_emits_one_full_clip_with_lookback() {
+        let mut s = EdgeSession::new(config(3));
+        let mut out = Vec::new();
+        settle(&mut s, &mut out, 30);
+        // 6 loud frames: onset + clip assembly + drain
+        for _ in 0..6 {
+            s.push_frame(&burst(), 2, &mut out);
+        }
+        assert_eq!(out.len(), 4, "exactly one clip of clip_frames tasks");
+        for (i, t) in out.iter().enumerate() {
+            assert_eq!(t.stream, 3);
+            assert_eq!(t.clip_seq, 0);
+            assert_eq!(t.frame_idx, i);
+            assert_eq!(t.label, 2);
+            assert_eq!(t.data.len(), FRAME);
+        }
+        // first two tasks are the pre-trigger ambient lookback (quiet),
+        // the rest are the loud live frames
+        let rms = |d: &[f32]| d.iter().map(|&x| x * x).sum::<f32>() / d.len() as f32;
+        assert!(rms(&out[0].data) < 0.01);
+        assert!(rms(&out[2].data) > 0.1);
+        assert_eq!(s.stats.clips_emitted, 1);
+        assert_eq!(s.stats.trigger_onsets, 1);
+        // long event: the tail drains instead of retriggering
+        assert_eq!(s.state(), SessionState::Draining);
+        assert!(s.stats.frames_drained > 0);
+    }
+
+    #[test]
+    fn gate_closure_returns_to_idle_and_next_event_gets_next_clip_seq() {
+        let mut s = EdgeSession::new(config(0));
+        let mut out = Vec::new();
+        settle(&mut s, &mut out, 30);
+        for _ in 0..5 {
+            s.push_frame(&burst(), 1, &mut out);
+        }
+        out.clear();
+        // quiet again: drain ends within a few frames (hangover + release)
+        for i in 0..6 {
+            s.push_frame(&ambient(100 + i), AMBIENT_LABEL, &mut out);
+        }
+        assert_eq!(s.state(), SessionState::Idle);
+        assert!(out.is_empty());
+        // second event
+        for _ in 0..5 {
+            s.push_frame(&burst(), 7, &mut out);
+        }
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|t| t.clip_seq == 1));
+        assert_eq!(s.stats.clips_emitted, 2);
+    }
+
+    #[test]
+    fn short_history_yields_shorter_lookback_not_a_stall() {
+        // onset right after warmup: only one frame in the ring — the clip
+        // starts with a 1-frame lookback instead of two and still fills
+        let mut cfg = config(9);
+        cfg.gate.warmup_frames = 1;
+        let mut s = EdgeSession::new(cfg);
+        let mut out = Vec::new();
+        s.push_frame(&ambient(0), AMBIENT_LABEL, &mut out); // warmup + 1 ring frame
+        assert!(out.is_empty());
+        for _ in 0..8 {
+            s.push_frame(&burst(), 5, &mut out);
+        }
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].frame_idx, 0);
+        let rms = |d: &[f32]| d.iter().map(|&x| x * x).sum::<f32>() / d.len() as f32;
+        assert!(rms(&out[0].data) < 0.01, "first task is the ambient lookback");
+        assert!(rms(&out[1].data) > 0.1, "second task is already the event");
+        assert_eq!(s.stats.clips_emitted, 1);
+        assert_eq!(s.stats.lookback_truncated, 1);
+    }
+
+    #[test]
+    fn duty_cycle_schedule_and_factor() {
+        let d = DutyCycle {
+            awake_frames: 3,
+            sleep_frames: 1,
+            phase: 0,
+        };
+        let pattern: Vec<bool> = (0..8).map(|t| d.awake_at(t)).collect();
+        assert_eq!(
+            pattern,
+            vec![true, true, true, false, true, true, true, false]
+        );
+        assert!((d.factor() - 0.75).abs() < 1e-12);
+        assert!(DutyCycle::always_on().awake_at(12345));
+        let shifted = DutyCycle {
+            awake_frames: 3,
+            sleep_frames: 1,
+            phase: 1,
+        };
+        assert!(!shifted.awake_at(2));
+    }
+
+    #[test]
+    fn watchdog_resets_a_latched_gate() {
+        let mut cfg = config(1);
+        cfg.max_drain_frames = 3;
+        let mut s = EdgeSession::new(cfg);
+        let mut out = Vec::new();
+        settle(&mut s, &mut out, 30);
+        // a very long event: clip, then the drain watchdog fires
+        for _ in 0..12 {
+            s.push_frame(&burst(), 0, &mut out);
+        }
+        assert!(s.stats.gate_resets >= 1);
+        assert_eq!(out.len(), 4, "still exactly one clip");
+    }
+}

@@ -1,0 +1,388 @@
+//! Multiplierless event-activity gate — the detection front end that
+//! decides, frame by frame, whether continuous sensor audio contains an
+//! acoustic event worth classifying.
+//!
+//! The gate is built from exactly the primitives the paper's FPGA
+//! datapath provides (§IV): additions, subtractions, comparisons and
+//! arithmetic shifts over [`QFormat`] fixed-point values. There is no
+//! multiply anywhere on the per-sample path:
+//!
+//! * rectified level `a = |x_q|` (negate-on-sign, no squaring),
+//! * a fast envelope via a shift-based exponential average; the
+//!   accumulator keeps `shift` extra fraction bits
+//!   (`acc += a - (acc >> shift)`) so truncation cannot stall the
+//!   integrator — the classic fixed-point leaky-integrator form,
+//! * a noise floor via a slower EMA that only adapts while the gate is
+//!   shut (so events do not poison the floor),
+//! * a hysteresis comparator whose margins are shifts of the floor
+//!   (`floor >> margin_shift` = a power-of-two relative threshold),
+//! * a hangover counter that keeps the gate open for a few frames after
+//!   the level falls back, bridging intra-event pauses,
+//! * a warmup counter that suppresses triggering until the floor EMA has
+//!   had time to converge after power-on (cold-start protection).
+//!
+//! Quantisation (the ADC model) happens once at [`EnergyGate::quantize`];
+//! everything after is `i64` arithmetic, which the unit tests pin down by
+//! showing the decision is a function of the quantised values only.
+
+use crate::fixed::q::QFormat;
+
+/// Gate tuning. All thresholds are expressed as shifts so the hardware
+/// realisation needs no multiplier.
+#[derive(Clone, Copy, Debug)]
+pub struct GateConfig {
+    /// input quantisation (ADC): 12-bit signed covering [-1, 1)
+    pub fmt: QFormat,
+    /// fast-envelope EMA shift (2^n samples time constant)
+    pub fast_shift: u32,
+    /// noise-floor EMA shift (much slower than `fast_shift`)
+    pub slow_shift: u32,
+    /// trigger margin: open when `fast > slow + (slow >> margin_shift) + floor`
+    pub margin_shift: u32,
+    /// release margin (a weaker condition: `release_shift > margin_shift`)
+    pub release_shift: u32,
+    /// absolute floor in LSBs, so dead-silent inputs cannot trigger
+    pub floor_lsb: i64,
+    /// frames the gate stays open after the release condition fails
+    pub hangover_frames: u32,
+    /// frames after power-on during which the gate cannot trigger while
+    /// the noise floor converges
+    pub warmup_frames: u32,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig {
+            fmt: QFormat::new(12, 11),
+            fast_shift: 5,    // ~32 samples (2 ms at 16 kHz)
+            slow_shift: 11,   // ~2048 samples (128 ms)
+            margin_shift: 1,  // trigger at floor + 50 %
+            release_shift: 2, // release below floor + 25 %
+            floor_lsb: 8,
+            hangover_frames: 1,
+            // warmup is counted in frames, so pick it for the shortest
+            // frames in use (256 samples): 24 frames = 3 floor time
+            // constants; long-frame callers (2048 samples) override down
+            warmup_frames: 24,
+        }
+    }
+}
+
+/// Per-frame gate verdict.
+#[derive(Clone, Copy, Debug)]
+pub struct GateFrame {
+    /// gate state after this frame
+    pub open: bool,
+    /// this frame opened the gate (detection onset)
+    pub onset: bool,
+    /// this frame closed the gate
+    pub offset: bool,
+    /// fast envelope at frame end (input LSBs)
+    pub fast: i64,
+    /// noise floor at frame end (input LSBs)
+    pub slow: i64,
+}
+
+/// The streaming gate. One per sensor stream; a few registers of state.
+#[derive(Clone, Debug)]
+pub struct EnergyGate {
+    cfg: GateConfig,
+    /// fast EMA accumulator, `fast_shift` extra fraction bits
+    acc_fast: i64,
+    /// floor EMA accumulator, `slow_shift` extra fraction bits
+    acc_slow: i64,
+    open: bool,
+    hangover: u32,
+    warmup: u32,
+}
+
+impl EnergyGate {
+    pub fn new(cfg: GateConfig) -> EnergyGate {
+        assert!(
+            cfg.release_shift > cfg.margin_shift,
+            "hysteresis needs release margin < trigger margin"
+        );
+        EnergyGate {
+            cfg,
+            acc_fast: 0,
+            acc_slow: 0,
+            open: false,
+            hangover: 0,
+            warmup: cfg.warmup_frames,
+        }
+    }
+
+    pub fn config(&self) -> &GateConfig {
+        &self.cfg
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.open
+    }
+
+    /// Fast envelope in input LSBs.
+    pub fn fast(&self) -> i64 {
+        self.acc_fast >> self.cfg.fast_shift
+    }
+
+    /// Noise floor in input LSBs.
+    pub fn slow(&self) -> i64 {
+        self.acc_slow >> self.cfg.slow_shift
+    }
+
+    /// ADC model: quantise a float frame into gate LSBs. This is the only
+    /// place floats appear; the returned values feed the integer path.
+    pub fn quantize(&self, frame: &[f32]) -> Vec<i64> {
+        self.cfg.fmt.quantize_vec(frame)
+    }
+
+    /// Advance the envelopes over one quantised frame and evaluate the
+    /// hysteresis comparator at the frame boundary. Integer-only.
+    pub fn push_frame(&mut self, frame_q: &[i64]) -> GateFrame {
+        let was_open = self.open;
+        for &q in frame_q {
+            // |x|: negate-on-sign, no multiply
+            let a = if q < 0 { -q } else { q };
+            self.acc_fast += a - (self.acc_fast >> self.cfg.fast_shift);
+            if !self.open {
+                self.acc_slow += a - (self.acc_slow >> self.cfg.slow_shift);
+            }
+        }
+        let fast = self.fast();
+        let slow = self.slow();
+        let trigger = fast > slow + (slow >> self.cfg.margin_shift) + self.cfg.floor_lsb;
+        let sustain = fast > slow + (slow >> self.cfg.release_shift) + self.cfg.floor_lsb;
+        if self.warmup > 0 {
+            self.warmup -= 1;
+        } else if self.open {
+            if sustain {
+                self.hangover = self.cfg.hangover_frames;
+            } else if self.hangover > 0 {
+                self.hangover -= 1;
+            } else {
+                self.open = false;
+            }
+        } else if trigger {
+            self.open = true;
+            self.hangover = self.cfg.hangover_frames;
+        }
+        GateFrame {
+            open: self.open,
+            onset: self.open && !was_open,
+            offset: was_open && !self.open,
+            fast,
+            slow,
+        }
+    }
+
+    /// Back to power-on state (warmup included).
+    pub fn reset(&mut self) {
+        self.acc_fast = 0;
+        self.acc_slow = 0;
+        self.open = false;
+        self.hangover = 0;
+        self.warmup = self.cfg.warmup_frames;
+    }
+
+    /// Test/experiment hook: a gate with a fully converged floor at
+    /// `level` LSBs, warmup already elapsed.
+    pub fn with_converged_floor(cfg: GateConfig, level: i64, open: bool) -> EnergyGate {
+        EnergyGate {
+            cfg,
+            acc_fast: level << cfg.fast_shift,
+            acc_slow: level << cfg.slow_shift,
+            open,
+            hangover: if open { cfg.hangover_frames } else { 0 },
+            warmup: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    const FRAME: usize = 256;
+
+    /// Deterministic ambient: a ±amp square wave, so the rectified level
+    /// is exactly `round(amp / lsb)` and the EMAs converge exactly.
+    fn square(gate: &EnergyGate, amp: f32) -> Vec<i64> {
+        let frame: Vec<f32> = (0..FRAME)
+            .map(|i| if i % 2 == 0 { amp } else { -amp })
+            .collect();
+        gate.quantize(&frame)
+    }
+
+    fn noise(gate: &EnergyGate, amp: f32, seed: u64) -> Vec<i64> {
+        let mut rng = crate::util::prng::Pcg32::new(seed);
+        let frame: Vec<f32> = (0..FRAME).map(|_| (rng.normal() as f32) * amp).collect();
+        gate.quantize(&frame)
+    }
+
+    /// Settle the floor on deterministic ambient, then return the gate.
+    fn settled(amp: f32) -> EnergyGate {
+        let mut g = EnergyGate::new(GateConfig::default());
+        let q = square(&g, amp);
+        for _ in 0..64 {
+            g.push_frame(&q);
+        }
+        assert!(!g.is_open(), "gate must not open on steady ambient");
+        g
+    }
+
+    #[test]
+    fn settling_converges_exactly_on_dc_level() {
+        let g = settled(0.02);
+        let a = g.config().fmt.quantize(0.02);
+        assert_eq!(g.fast(), a);
+        assert_eq!(g.slow(), a);
+    }
+
+    #[test]
+    fn triggers_on_burst_and_releases_after_hangover() {
+        let mut g = settled(0.02);
+        let f = g.push_frame(&square(&g, 0.4));
+        assert!(f.open && f.onset, "{f:?}");
+        // back to ambient: sustain fails, hangover (1 frame) then close
+        let f1 = g.push_frame(&noise(&g, 0.02, 99));
+        assert!(f1.open && !f1.onset, "hangover keeps the gate open: {f1:?}");
+        let f2 = g.push_frame(&noise(&g, 0.02, 100));
+        assert!(!f2.open && f2.offset, "{f2:?}");
+    }
+
+    #[test]
+    fn silence_never_triggers() {
+        let mut g = EnergyGate::new(GateConfig::default());
+        let zeros = [0i64; FRAME];
+        for _ in 0..50 {
+            let f = g.push_frame(&zeros);
+            assert!(!f.open);
+        }
+    }
+
+    #[test]
+    fn cold_start_on_ambient_does_not_latch_open() {
+        // without warmup, the first frames would compare a converged fast
+        // envelope against a still-rising floor and latch the gate open
+        check("vad-cold-start", 20, |gen| {
+            let amp = gen.f64(0.01, 0.08) as f32;
+            let mut g = EnergyGate::new(GateConfig::default());
+            for i in 0..48 {
+                g.push_frame(&noise(&g, amp, 500 + i));
+            }
+            assert!(!g.is_open(), "latched open on ambient amp {amp}");
+        });
+    }
+
+    #[test]
+    fn decision_depends_only_on_quantised_values() {
+        // sub-LSB float perturbations are invisible after the ADC: the
+        // integer path cannot distinguish them (no hidden float state)
+        let g0 = EnergyGate::new(GateConfig::default());
+        let lsb = g0.config().fmt.lsb() as f32;
+        let mut a = EnergyGate::new(GateConfig::default());
+        let mut b = EnergyGate::new(GateConfig::default());
+        let mut rng = crate::util::prng::Pcg32::new(3);
+        for _ in 0..30 {
+            let frame: Vec<f32> = (0..FRAME).map(|_| (rng.normal() as f32) * 0.1).collect();
+            let qa = a.quantize(&frame);
+            // re-quantise a sub-LSB perturbation away from any midpoint
+            let perturbed: Vec<f32> = frame
+                .iter()
+                .map(|&x| {
+                    let q = g0.config().fmt.quantize_f32(x);
+                    g0.config().fmt.dequantize(q) as f32 + 0.2 * lsb
+                })
+                .collect();
+            let qb = b.quantize(&perturbed);
+            assert_eq!(qa, qb, "quantisation must absorb sub-LSB noise");
+            let fa = a.push_frame(&qa);
+            let fb = b.push_frame(&qb);
+            assert_eq!(fa.open, fb.open);
+            assert_eq!(fa.fast, fb.fast);
+            assert_eq!(fa.slow, fb.slow);
+        }
+    }
+
+    #[test]
+    fn hysteresis_band_sustains_but_never_triggers() {
+        // a level strictly between the release and trigger thresholds
+        // must sustain an open gate yet never open a closed one
+        check("vad-hysteresis", 40, |gen| {
+            let cfg = GateConfig::default();
+            let floor = gen.int(20, 400);
+            let trigger_at = floor + (floor >> cfg.margin_shift) + cfg.floor_lsb;
+            let release_at = floor + (floor >> cfg.release_shift) + cfg.floor_lsb;
+            let mid = (release_at + trigger_at) / 2 + 1;
+            if mid >= trigger_at {
+                return; // thresholds too close at this floor to separate
+            }
+            let frame = [mid; FRAME];
+            // closed gate: the floor drifts up toward mid, which only
+            // raises the trigger threshold — must stay closed
+            let mut closed = EnergyGate::with_converged_floor(cfg, floor, false);
+            for _ in 0..6 {
+                assert!(
+                    !closed.push_frame(&frame).open,
+                    "triggered inside the hysteresis band (floor {floor})"
+                );
+            }
+            // open gate: the floor is frozen, the same level sustains
+            let mut open = EnergyGate::with_converged_floor(cfg, floor, true);
+            for _ in 0..6 {
+                assert!(
+                    open.push_frame(&frame).open,
+                    "released inside the hysteresis band (floor {floor})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn hangover_counts_full_frames() {
+        let cfg = GateConfig {
+            hangover_frames: 3,
+            ..GateConfig::default()
+        };
+        let mut g = EnergyGate::with_converged_floor(cfg, 40, false);
+        let f = g.push_frame(&[400i64; FRAME]);
+        assert!(f.open && f.onset);
+        let quiet = [40i64; FRAME];
+        let mut open_frames = 0;
+        for _ in 0..10 {
+            if g.push_frame(&quiet).open {
+                open_frames += 1;
+            } else {
+                break;
+            }
+        }
+        assert_eq!(open_frames, 3, "hangover must hold exactly 3 frames");
+    }
+
+    #[test]
+    fn floor_tracks_a_moderately_raised_ambient() {
+        // +20 % ambient sits under the +50 % trigger margin: the floor
+        // follows and the gate never opens
+        let mut g = EnergyGate::with_converged_floor(GateConfig::default(), 20, false);
+        let frame = [24i64; FRAME];
+        for _ in 0..40 {
+            assert!(!g.push_frame(&frame).open);
+        }
+        assert!(g.slow() >= 23, "floor failed to track: {}", g.slow());
+        assert_eq!(g.fast(), 24);
+    }
+
+    #[test]
+    fn reset_restores_warmup() {
+        let mut g = settled(0.02);
+        g.push_frame(&square(&g, 0.4));
+        assert!(g.is_open());
+        g.reset();
+        assert!(!g.is_open());
+        assert_eq!(g.fast(), 0);
+        // first post-reset frames cannot trigger (warmup)
+        let f = g.push_frame(&square(&g, 0.4));
+        assert!(!f.open);
+    }
+}

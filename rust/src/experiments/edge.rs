@@ -1,0 +1,187 @@
+//! Edge-subsystem experiments: the gate's operating curve and the
+//! uplink bytes-saved table — the evidence that in-filter classification
+//! at the sensor is what makes the remote-monitor scenario viable.
+
+use crate::datasets::esc10;
+use crate::edge::session::{DutyCycle, EdgeSession, SessionConfig, AMBIENT_LABEL};
+use crate::edge::uplink::{Uplink, UplinkConfig};
+use crate::edge::vad::{EnergyGate, GateConfig};
+use crate::util::prng::Pcg32;
+use crate::util::table::Table;
+
+const FRAME: usize = 256;
+const SAMPLE_RATE: f64 = 16_000.0;
+
+/// Sweep the gate's trigger margin (a power-of-two shift of the noise
+/// floor) over streams with events of varying gain: recall vs.
+/// false-onset rate — the gate's ROC.
+pub fn gate_roc(seed: u64) -> Table {
+    const TICKS: u64 = 140;
+    const EV_FRAMES: u64 = 8;
+    const STREAMS: usize = 40;
+    let dense_classes = [3usize, 6, 7]; // crying_baby, helicopter, chainsaw
+    let mut t = Table::new(
+        "edge gate ROC (trigger-margin sweep)",
+        &["margin_shift", "margin", "recall", "false_per_hour", "onsets"],
+    );
+    for shift in 0..=4u32 {
+        let mut detected = 0usize;
+        let mut false_onsets = 0u64;
+        let mut onsets_total = 0u64;
+        let mut audio_s = 0.0f64;
+        for sid in 0..STREAMS {
+            let mut rng = Pcg32::substream(seed ^ 0x10c, sid as u64);
+            let ambient = rng.range(0.01, 0.03);
+            let gain = rng.range(0.08, 0.6) as f32;
+            let class = dense_classes[rng.below(dense_classes.len() as u32) as usize];
+            let start = 40 + u64::from(rng.below(60));
+            let clip = esc10::synth_clip(seed ^ 0x5ca1e, class, 30_000 + sid as u64);
+            let cfg = GateConfig {
+                margin_shift: shift,
+                release_shift: shift + 1,
+                ..GateConfig::default()
+            };
+            let mut gate = EnergyGate::new(cfg);
+            let mut hit = false;
+            for tick in 0..TICKS {
+                let mut frame: Vec<f32> = (0..FRAME)
+                    .map(|_| (rng.normal() * ambient) as f32)
+                    .collect();
+                if tick >= start && tick < start + EV_FRAMES {
+                    let off = (tick - start) as usize * FRAME;
+                    for (f, &s) in frame.iter_mut().zip(&clip.samples[off..off + FRAME]) {
+                        *f += gain * s;
+                    }
+                }
+                let q = gate.quantize(&frame);
+                let g = gate.push_frame(&q);
+                if g.onset {
+                    onsets_total += 1;
+                    if tick + 2 >= start && tick < start + EV_FRAMES + 2 {
+                        hit = true;
+                    } else {
+                        false_onsets += 1;
+                    }
+                }
+            }
+            if hit {
+                detected += 1;
+            }
+            audio_s += TICKS as f64 * FRAME as f64 / SAMPLE_RATE;
+        }
+        t.row(vec![
+            shift.to_string(),
+            format!("1/{}", 1u32 << shift),
+            format!("{:.3}", detected as f64 / STREAMS as f64),
+            format!("{:.2}", false_onsets as f64 / (audio_s / 3600.0)),
+            onsets_total.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Duty cycle x payload policy -> uplink bytes vs. streaming raw audio.
+/// The link itself is left unconstrained here so the table isolates the
+/// accounting (the fleet simulator applies the real token bucket).
+pub fn bytes_saved_table(seed: u64) -> Table {
+    const TICKS: u64 = 160;
+    const CLIP_FRAMES: usize = 8;
+    const STREAMS: usize = 20;
+    let mut t = Table::new(
+        "edge uplink bytes-saved (duty x payload sweep)",
+        &["duty", "payload", "captured_kB", "sent_B", "clips", "bytes_saved"],
+    );
+    for &(awake, sleep) in &[(1u32, 0u32), (7, 1), (3, 1), (1, 1)] {
+        for &upload in &[false, true] {
+            let mut uplink = Uplink::new(UplinkConfig {
+                upload_clips: upload,
+                bytes_per_sec: 1e9, // unconstrained: accounting only
+                burst_bytes: 1e12,
+                ..UplinkConfig::default()
+            });
+            let mut clips = 0u64;
+            for sid in 0..STREAMS {
+                let mut rng = Pcg32::substream(seed ^ 0xb17e5, sid as u64);
+                let start = 40 + u64::from(rng.below(100));
+                let clip = esc10::synth_clip(seed ^ 0xb17e5, 6, 31_000 + sid as u64);
+                let mut scfg = SessionConfig::new(sid as u64, FRAME, CLIP_FRAMES);
+                scfg.duty = DutyCycle {
+                    awake_frames: awake,
+                    sleep_frames: sleep,
+                    phase: sid as u32 % (awake + sleep).max(1),
+                };
+                let mut session = EdgeSession::new(scfg);
+                let mut tasks = Vec::new();
+                for tick in 0..TICKS {
+                    if !session.awake(tick) {
+                        session.note_asleep();
+                        continue;
+                    }
+                    let mut frame: Vec<f32> = (0..FRAME)
+                        .map(|_| (rng.normal() * 0.02) as f32)
+                        .collect();
+                    if tick >= start && tick < start + CLIP_FRAMES as u64 {
+                        let off = (tick - start) as usize * FRAME;
+                        for (f, &s) in frame.iter_mut().zip(&clip.samples[off..off + FRAME]) {
+                            *f += 0.8 * s;
+                        }
+                    }
+                    uplink.record_raw(frame.len());
+                    tasks.clear();
+                    session.push_frame(&frame, AMBIENT_LABEL, &mut tasks);
+                    for task in tasks.drain(..) {
+                        if task.frame_idx == 0 {
+                            clips += 1;
+                            uplink.send_event(FRAME * CLIP_FRAMES);
+                        }
+                    }
+                }
+            }
+            let duty = f64::from(awake) / f64::from(awake + sleep);
+            t.row(vec![
+                format!("{:.0}%", 100.0 * duty),
+                if upload { "msg+clip" } else { "msg" }.to_string(),
+                format!("{:.1}", uplink.stats.raw_bytes_captured as f64 / 1024.0),
+                uplink.stats.bytes_sent.to_string(),
+                clips.to_string(),
+                format!("{:.0}x", uplink.bytes_saved_ratio()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roc_sweep_has_a_usable_operating_point() {
+        let t = gate_roc(7);
+        assert_eq!(t.rows.len(), 5);
+        let recalls: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        let false_rates: Vec<f64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(recalls.iter().all(|&r| (0.0..=1.0).contains(&r)));
+        // the mid sweep point (the fleet default) catches most events
+        assert!(recalls[1] > 0.4, "recalls {recalls:?}");
+        // higher sensitivity pays in false onsets
+        assert!(
+            false_rates[4] >= false_rates[0],
+            "false rates {false_rates:?}"
+        );
+    }
+
+    #[test]
+    fn bytes_saved_always_beats_raw_streaming() {
+        let t = bytes_saved_table(11);
+        assert_eq!(t.rows.len(), 8);
+        for r in &t.rows {
+            let ratio: f64 = r[5].trim_end_matches('x').parse().unwrap();
+            assert!(ratio > 1.0, "row {r:?}");
+        }
+        // message-only payload saves far more than clip upload
+        let msg: f64 = t.rows[0][5].trim_end_matches('x').parse().unwrap();
+        let clip: f64 = t.rows[1][5].trim_end_matches('x').parse().unwrap();
+        assert!(msg > clip, "msg {msg} clip {clip}");
+    }
+}

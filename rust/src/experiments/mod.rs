@@ -6,7 +6,10 @@
 //! * [`tables12`] — Table I (FPGA resources) and Table II (related work).
 //! * [`classify`] — Tables III (ESC-10) and IV (FSDD): the four-system
 //!   accuracy comparison.
+//! * [`edge`] — gate ROC and uplink bytes-saved tables for the edge
+//!   ingest subsystem (the Fig. 1 deployment story, quantified).
 
 pub mod classify;
+pub mod edge;
 pub mod figures;
 pub mod tables12;

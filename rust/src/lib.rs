@@ -9,10 +9,11 @@
 //! * **L1** — Pallas MP kernel (python/compile/kernels/mp.py), AOT-lowered,
 //! * **L2** — JAX multirate filter-bank + kernel-machine graph
 //!   (python/compile/model.py), exported as HLO-text artifacts,
-//! * **L3** — this crate: the streaming coordinator ([`coordinator`]),
-//!   PJRT runtime ([`runtime`]), every substrate the paper's evaluation
-//!   needs ([`dsp`], [`mp`], [`fixed`], [`datasets`], [`svm`], [`carihc`],
-//!   [`fpga`]) and the experiment harness ([`experiments`]).
+//! * **L3** — this crate: the continuous-ingest edge front end ([`edge`]),
+//!   the streaming coordinator ([`coordinator`]), PJRT runtime
+//!   ([`runtime`]), every substrate the paper's evaluation needs ([`dsp`],
+//!   [`mp`], [`fixed`], [`datasets`], [`svm`], [`carihc`], [`fpga`]) and
+//!   the experiment harness ([`experiments`]).
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! HLO once, and the rust binary is self-contained afterwards.
@@ -23,6 +24,7 @@ pub mod config;
 pub mod coordinator;
 pub mod datasets;
 pub mod dsp;
+pub mod edge;
 pub mod experiments;
 pub mod features;
 pub mod fixed;
@@ -32,3 +34,4 @@ pub mod runtime;
 pub mod svm;
 pub mod train;
 pub mod util;
+pub mod xla;

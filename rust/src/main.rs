@@ -7,19 +7,29 @@
 //!   tables   --table1|--table2|--table3|--table4|--all [--scale S]
 //!   train    --dataset esc10|fsdd [--scale S] [--out model.json]
 //!   serve    --streams N --clips K [--realtime] [--model model.json]
+//!   edge-fleet  --streams N [--seconds S] [--events K] [--duty-awake A]
+//!               [--duty-sleep B] [--uplink-bps N] [--uplink-burst N]
+//!               [--upload-clips] [--ambient X] [--event-gain X]
+//!               [--gate-margin SHIFT] [--hangover F] [--pre-trigger F]
+//!   edge-roc                          gate ROC + bytes-saved tables
 //!   fpga-sim
 //!
 //! Common options: --artifacts DIR  --results DIR  --seed N  --threads N
 //!                 --gamma-f X  --gamma-1 X  --log debug|info|warn
 
 use anyhow::{bail, Context, Result};
-use infilter::config::AppConfig;
+use infilter::config::{AppConfig, EdgeConfig};
 use infilter::coordinator::server::{serve, ServeConfig};
 use infilter::datasets::{esc10, fsdd, Dataset};
-use infilter::experiments::{classify, figures, tables12};
+use infilter::edge::fleet::{run_fleet, FleetConfig};
+use infilter::edge::AMBIENT_LABEL;
+use infilter::experiments::{classify, edge as edge_tables, figures, tables12};
 use infilter::mp::machine::Standardizer;
+use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::runtime::engine::ModelEngine;
-use infilter::train::{train_heads, train_model, TrainConfig, TrainedModel};
+use infilter::train::{
+    evaluate_cpu, train_heads, train_model, train_model_cpu, TrainConfig, TrainedModel,
+};
 use infilter::util::cli::Args;
 use infilter::util::prng::Pcg32;
 use infilter::util::table::Table;
@@ -36,6 +46,13 @@ USAGE: infilter <subcommand> [options]
   tables    --all | --table1 --table2 --table3 --table4  [--scale S]
   train     --dataset esc10|fsdd [--scale S] [--out results/model.json]
   serve     [--streams N] [--clips K] [--realtime] [--model PATH]
+  edge-fleet  continuous-ingest fleet simulation (no artifacts needed)
+            [--streams N] [--seconds S] [--events K] [--duty-awake A]
+            [--duty-sleep B] [--uplink-bps N] [--uplink-burst N]
+            [--upload-clips] [--ambient X] [--event-gain X]
+            [--gate-margin SHIFT] [--hangover F] [--pre-trigger F]
+            [--model PATH] [--scale S] [--epochs E]
+  edge-roc  gate ROC + uplink bytes-saved tables
   fpga-sim  cycle-level Fig. 7 schedule simulation
 
 common: --artifacts DIR --results DIR --seed N --threads N
@@ -62,6 +79,8 @@ fn run(args: &Args) -> Result<()> {
         Some("tables") => cmd_tables(&cfg, args),
         Some("train") => cmd_train(&cfg, args),
         Some("serve") => cmd_serve(&cfg, args),
+        Some("edge-fleet") => cmd_edge_fleet(&cfg, args),
+        Some("edge-roc") => cmd_edge_roc(&cfg),
         Some("fpga-sim") => cmd_fpga_sim(),
         _ => {
             println!("{USAGE}");
@@ -331,6 +350,89 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
     );
     let (report, _results) = serve(&mut eng, &model, &scfg)?;
     println!("{}", report.render());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// edge ingest
+// ---------------------------------------------------------------------
+
+/// Train (or load) an on-node model entirely on the CPU backend, so the
+/// edge fleet runs without AOT artifacts.
+fn edge_model(cfg: &AppConfig, args: &Args, eng: &CpuEngine) -> Result<TrainedModel> {
+    if let Some(path) = args.get("model") {
+        return TrainedModel::load(Path::new(path));
+    }
+    let scale = args.get_f64("scale", 0.05);
+    log_info!("no --model given: CPU-training a quick on-node model (scale {scale})");
+    let ds = esc10::build(cfg.seed, scale);
+    let clip_len = eng.frame_len() * eng.clip_frames();
+    let samps: Vec<&[f32]> = ds.train.iter().map(|c| &c.samples[..clip_len]).collect();
+    let phi = eng.clip_features_many(&samps, cfg.threads);
+    let labels: Vec<usize> = ds.train.iter().map(|c| c.label).collect();
+    let tc = TrainConfig {
+        epochs: args.get_usize("epochs", 30),
+        seed: cfg.seed,
+        ..TrainConfig::default()
+    };
+    let (model, losses) = train_model_cpu(&phi, &labels, &ds.classes, cfg.gamma_f, &tc);
+    let acc = evaluate_cpu(&model, &phi, &labels);
+    log_info!(
+        "on-node model: train accuracy {:.1}% (loss {:.4} -> {:.4})",
+        100.0 * acc,
+        losses.first().copied().unwrap_or(0.0),
+        losses.last().copied().unwrap_or(0.0)
+    );
+    Ok(model)
+}
+
+fn cmd_edge_fleet(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let plan = infilter::dsp::multirate::BandPlan::paper_default();
+    let mut eng = CpuEngine::new(&plan, cfg.gamma_f);
+    let model = edge_model(cfg, args, &eng)?;
+    let edge = EdgeConfig::from_args(args);
+    let fcfg = FleetConfig::from_edge(&edge, cfg.seed, eng.frame_len(), eng.clip_frames());
+    log_info!(
+        "edge fleet: {} streams x {} frames ({:.1}s audio each), {} events/stream, \
+         duty {}/{} awake/sleep, uplink {:.0} B/s",
+        fcfg.n_streams,
+        fcfg.ticks,
+        fcfg.ticks as f64 * fcfg.frame_len as f64 / fcfg.sample_rate,
+        fcfg.events_per_stream,
+        fcfg.duty_awake,
+        fcfg.duty_sleep,
+        fcfg.uplink.bytes_per_sec
+    );
+    let (report, results) = run_fleet(&mut eng, &model, &fcfg)?;
+    println!("{}", report.render());
+    write_csv(cfg, "edge_fleet.csv", &report.table())?;
+    println!("\nuplink payload sample (stream, clip, detected class):");
+    for r in results.iter().take(10) {
+        let truth = if r.label == AMBIENT_LABEL {
+            "ambient".to_string()
+        } else {
+            // a loaded model may not cover every synthetic event class
+            model
+                .classes
+                .get(r.label)
+                .cloned()
+                .unwrap_or_else(|| format!("class{}", r.label))
+        };
+        println!(
+            "  sensor{:03} clip{} -> {} (truth: {}) p={:+.2}",
+            r.stream, r.clip_seq, model.classes[r.predicted], truth, r.p[r.predicted]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_edge_roc(cfg: &AppConfig) -> Result<()> {
+    let roc = edge_tables::gate_roc(cfg.seed);
+    println!("{}", roc.render());
+    write_csv(cfg, "edge_roc.csv", &roc)?;
+    let saved = edge_tables::bytes_saved_table(cfg.seed);
+    println!("{}", saved.render());
+    write_csv(cfg, "edge_bytes_saved.csv", &saved)?;
     Ok(())
 }
 

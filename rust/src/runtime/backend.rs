@@ -1,0 +1,432 @@
+//! Inference backends: the capability trait the coordinator dispatches
+//! through, implemented by the PJRT-backed [`ModelEngine`] and by a
+//! pure-rust [`CpuEngine`].
+//!
+//! The coordinator, the edge fleet simulator and the examples are all
+//! generic over [`InferenceBackend`], so the same serving loop runs
+//! against the AOT HLO artifacts when `artifacts/` exists and against
+//! the CPU mirror (the float MP bank from [`crate::mp::filter`] plus the
+//! kernel-machine head from [`crate::mp::machine`]) when it does not —
+//! the "CPU fallback path of the coordinator" promised in [`crate::mp`].
+
+use super::engine::{ModelEngine, StreamState};
+use crate::dsp::multirate::BandPlan;
+use crate::mp;
+use crate::mp::machine::{decide, Params, Standardizer};
+use anyhow::{ensure, Result};
+
+/// Everything the serving/dispatch layer needs from a model backend.
+pub trait InferenceBackend {
+    fn frame_len(&self) -> usize;
+    fn clip_frames(&self) -> usize;
+    fn n_filters(&self) -> usize;
+    fn zero_state(&self) -> StreamState;
+
+    /// One MP frame step: updates `state` in place, returns the frame's
+    /// partial Phi (accumulated per clip by the caller).
+    fn mp_frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Result<Vec<f32>>;
+
+    /// Batched (B=8) frame step; `states`/`frames` must have exactly 8
+    /// entries (pad with dummies).
+    fn mp_frame_features_b8(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Clip-level inference on an accumulated Phi: returns (p, z+, z-)
+    /// per head (standardisation inside).
+    fn inference(
+        &mut self,
+        params: &Params,
+        std: &Standardizer,
+        phi: &[f32],
+        gamma_1: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+}
+
+impl InferenceBackend for ModelEngine {
+    fn frame_len(&self) -> usize {
+        ModelEngine::frame_len(self)
+    }
+
+    fn clip_frames(&self) -> usize {
+        ModelEngine::clip_frames(self)
+    }
+
+    fn n_filters(&self) -> usize {
+        ModelEngine::n_filters(self)
+    }
+
+    fn zero_state(&self) -> StreamState {
+        ModelEngine::zero_state(self)
+    }
+
+    fn mp_frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Result<Vec<f32>> {
+        ModelEngine::mp_frame_features(self, state, frame)
+    }
+
+    fn mp_frame_features_b8(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        ModelEngine::mp_frame_features_b8(self, states, frames)
+    }
+
+    fn inference(
+        &mut self,
+        params: &Params,
+        std: &Standardizer,
+        phi: &[f32],
+        gamma_1: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        ModelEngine::inference(self, params, std, phi, gamma_1)
+    }
+}
+
+/// Pure-rust inference backend: the streaming MP multirate bank (paper
+/// eq. 9 over the Fig. 3 octave cascade) computed sample by sample with
+/// the delay lines externalised into [`StreamState`], so per-stream
+/// state management (the coordinator's "KV cache") works identically to
+/// the HLO path.
+#[derive(Clone, Debug)]
+pub struct CpuEngine {
+    pub plan: BandPlan,
+    pub gamma_f: f32,
+    frame_len: usize,
+    clip_frames: usize,
+    /// band-pass coefficients, `[octave][filter][tap]`
+    bp: Vec<Vec<Vec<f32>>>,
+    /// anti-alias low-pass coefficients, `[octave transition][tap]`
+    lp: Vec<Vec<f32>>,
+}
+
+impl CpuEngine {
+    /// Paper clip geometry: 2048-sample frames, 8 frames per clip.
+    pub fn new(plan: &BandPlan, gamma_f: f32) -> CpuEngine {
+        CpuEngine::with_clip(plan, gamma_f, 2048, 8)
+    }
+
+    pub fn with_clip(
+        plan: &BandPlan,
+        gamma_f: f32,
+        frame_len: usize,
+        clip_frames: usize,
+    ) -> CpuEngine {
+        assert!(
+            frame_len % (1 << (plan.n_octaves - 1)) == 0,
+            "frame_len {frame_len} not divisible by 2^{}",
+            plan.n_octaves - 1
+        );
+        assert!(
+            (frame_len >> (plan.n_octaves - 1)) >= plan.bp_taps - 1,
+            "deepest octave frame shorter than the band-pass delay line"
+        );
+        let bp = plan
+            .bp_coeffs()
+            .into_iter()
+            .map(|oct| {
+                oct.into_iter()
+                    .map(|h| h.into_iter().map(|x| x as f32).collect())
+                    .collect()
+            })
+            .collect();
+        let lp = plan
+            .lp_coeffs()
+            .into_iter()
+            .map(|h| h.into_iter().map(|x| x as f32).collect())
+            .collect();
+        CpuEngine {
+            plan: plan.clone(),
+            gamma_f,
+            frame_len,
+            clip_frames,
+            bp,
+            lp,
+        }
+    }
+
+    /// One frame through the octave cascade. `state` carries the shared
+    /// per-octave band-pass delay line (all filters of an octave see the
+    /// same input, so one delay line serves the whole octave) and the
+    /// low-pass delay per transition; both use the HLO state layout.
+    pub fn frame_features(&self, state: &mut StreamState, frame: &[f32]) -> Vec<f32> {
+        assert_eq!(frame.len(), self.frame_len, "frame length mismatch");
+        let n_oct = self.plan.n_octaves;
+        let f_per = self.plan.filters_per_octave;
+        let bp_taps = self.plan.bp_taps;
+        let lp_taps = self.plan.lp_taps;
+        let bp_d = bp_taps - 1;
+        let lp_d = lp_taps - 1;
+        let mut phi = vec![0.0f32; n_oct * f_per];
+        let mut sig = frame.to_vec();
+        let mut window = vec![0.0f32; bp_taps.max(lp_taps)];
+        let mut plus = vec![0.0f32; 2 * bp_taps.max(lp_taps)];
+        let mut minus = vec![0.0f32; 2 * bp_taps.max(lp_taps)];
+        for o in 0..n_oct {
+            {
+                let delay = &state.bp[o * bp_d..(o + 1) * bp_d];
+                for n in 0..sig.len() {
+                    fill_window(&mut window[..bp_taps], &sig, delay, n);
+                    for (i, h) in self.bp[o].iter().enumerate() {
+                        let y = mp_fir_eval(
+                            h,
+                            &window[..bp_taps],
+                            self.gamma_f,
+                            &mut plus,
+                            &mut minus,
+                        );
+                        if y > 0.0 {
+                            phi[o * f_per + i] += y;
+                        }
+                    }
+                }
+            }
+            save_delay(&mut state.bp[o * bp_d..(o + 1) * bp_d], &sig);
+            if o < n_oct - 1 {
+                let mut low = vec![0.0f32; sig.len()];
+                {
+                    let delay = &state.lp[o * lp_d..(o + 1) * lp_d];
+                    for (n, y) in low.iter_mut().enumerate() {
+                        fill_window(&mut window[..lp_taps], &sig, delay, n);
+                        *y = mp_fir_eval(
+                            &self.lp[o],
+                            &window[..lp_taps],
+                            self.gamma_f,
+                            &mut plus,
+                            &mut minus,
+                        );
+                    }
+                }
+                save_delay(&mut state.lp[o * lp_d..(o + 1) * lp_d], &sig);
+                sig = low.into_iter().step_by(2).collect();
+            }
+        }
+        phi
+    }
+
+    /// Full-clip features (fresh state, frames accumulated) — the
+    /// offline / training-time feature path, mirror of
+    /// `ModelEngine::clip_features`.
+    pub fn clip_features(&self, clip: &[f32]) -> Vec<f32> {
+        assert!(
+            clip.len() % self.frame_len == 0,
+            "clip length {} % {} != 0",
+            clip.len(),
+            self.frame_len
+        );
+        let mut state = InferenceBackend::zero_state(self);
+        let mut acc = vec![0.0f32; InferenceBackend::n_filters(self)];
+        for frame in clip.chunks(self.frame_len) {
+            let phi = self.frame_features(&mut state, frame);
+            for (a, p) in acc.iter_mut().zip(&phi) {
+                *a += p;
+            }
+        }
+        acc
+    }
+
+    /// Clip features over many clips, in parallel (order preserving).
+    pub fn clip_features_many(&self, clips: &[&[f32]], threads: usize) -> Vec<Vec<f32>> {
+        crate::util::par::par_map(clips, threads, |c| self.clip_features(c))
+    }
+}
+
+/// Build `window[k] = x[n-k]`, reaching into `delay` (previous frame's
+/// tail, newest first: `delay[j] = x[-1-j]`) for `n < k`.
+fn fill_window(window: &mut [f32], sig: &[f32], delay: &[f32], n: usize) {
+    window[0] = sig[n];
+    for k in 1..window.len() {
+        window[k] = if n >= k { sig[n - k] } else { delay[k - n - 1] };
+    }
+}
+
+/// Persist the newest `delay.len()` samples of `sig` (newest first).
+fn save_delay(delay: &mut [f32], sig: &[f32]) {
+    let len = sig.len();
+    for (j, d) in delay.iter_mut().enumerate() {
+        *d = sig[len - 1 - j];
+    }
+}
+
+/// MP FIR output for one sample (paper eq. 9):
+/// `MP([h + w, -h - w]) - MP([h - w, -h + w])` — the multiplierless
+/// approximation of the inner product `h . w`.
+fn mp_fir_eval(h: &[f32], w: &[f32], gamma: f32, plus: &mut [f32], minus: &mut [f32]) -> f32 {
+    let m = h.len();
+    for k in 0..m {
+        plus[k] = h[k] + w[k];
+        plus[m + k] = -h[k] - w[k];
+        minus[k] = h[k] - w[k];
+        minus[m + k] = -h[k] + w[k];
+    }
+    mp::mp(&plus[..2 * m], gamma) - mp::mp(&minus[..2 * m], gamma)
+}
+
+impl InferenceBackend for CpuEngine {
+    fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    fn clip_frames(&self) -> usize {
+        self.clip_frames
+    }
+
+    fn n_filters(&self) -> usize {
+        self.plan.n_filters()
+    }
+
+    fn zero_state(&self) -> StreamState {
+        StreamState::zero(self.plan.n_octaves, self.plan.bp_taps, self.plan.lp_taps)
+    }
+
+    fn mp_frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Result<Vec<f32>> {
+        ensure!(frame.len() == self.frame_len, "frame length mismatch");
+        Ok(self.frame_features(state, frame))
+    }
+
+    fn mp_frame_features_b8(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            states.len() == 8 && frames.len() == 8,
+            "b8 path needs exactly 8 lanes"
+        );
+        let mut out = Vec::with_capacity(8);
+        for (s, f) in states.iter_mut().zip(frames) {
+            out.push(self.frame_features(s, f));
+        }
+        Ok(out)
+    }
+
+    fn inference(
+        &mut self,
+        params: &Params,
+        std: &Standardizer,
+        phi: &[f32],
+        gamma_1: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let k = std.apply(phi);
+        let ds = decide(params, &k, gamma_1);
+        Ok((
+            ds.iter().map(|d| d.p).collect(),
+            ds.iter().map(|d| d.z_plus).collect(),
+            ds.iter().map(|d| d.z_minus).collect(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::esc10;
+    use crate::features;
+    use crate::util::prng::Pcg32;
+
+    fn small_engine() -> CpuEngine {
+        CpuEngine::new(&BandPlan::paper_default(), 1.0)
+    }
+
+    #[test]
+    fn streaming_frames_match_batch_bank() {
+        // two frames through the streaming state must equal the one-shot
+        // MpMultirateBank features over the concatenated clip
+        let eng = small_engine();
+        let clip = &esc10::synth_clip(3, 6, 1).samples[..2 * 2048];
+        let mut state = InferenceBackend::zero_state(&eng);
+        let mut acc = vec![0.0f32; 30];
+        for frame in clip.chunks(2048) {
+            let phi = eng.frame_features(&mut state, frame);
+            for (a, p) in acc.iter_mut().zip(&phi) {
+                *a += p;
+            }
+        }
+        let whole = features::mp_features(&eng.plan, 1.0, clip);
+        for (i, (a, b)) in acc.iter().zip(&whole).enumerate() {
+            let denom = b.abs().max(1.0);
+            assert!((a - b).abs() / denom < 2e-3, "band {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn clip_features_equals_manual_accumulation() {
+        let eng = small_engine();
+        let clip = &esc10::synth_clip(5, 2, 0).samples[..2 * 2048];
+        let via_clip = eng.clip_features(clip);
+        let mut state = InferenceBackend::zero_state(&eng);
+        let mut acc = vec![0.0f32; 30];
+        for frame in clip.chunks(2048) {
+            let phi = eng.frame_features(&mut state, frame);
+            for (a, p) in acc.iter_mut().zip(&phi) {
+                *a += p;
+            }
+        }
+        assert_eq!(via_clip, acc);
+    }
+
+    /// Reduced plan + short frames: keeps debug-mode tests quick.
+    fn fast_engine() -> CpuEngine {
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = 2;
+        CpuEngine::with_clip(&plan, 1.0, 512, 2)
+    }
+
+    #[test]
+    fn b8_matches_b1() {
+        let mut eng = fast_engine();
+        let clips: Vec<Vec<f32>> = (0..8)
+            .map(|i| crate::dsp::chirp::tone(250.0 * (i + 1) as f64, 512, 16_000.0, 0.5))
+            .collect();
+        let mut states: Vec<StreamState> = (0..8)
+            .map(|_| InferenceBackend::zero_state(&eng))
+            .collect();
+        let frames: Vec<&[f32]> = clips.iter().map(Vec::as_slice).collect();
+        let phis8 = eng.mp_frame_features_b8(&mut states, &frames).unwrap();
+        for i in 0..8 {
+            let mut st = InferenceBackend::zero_state(&eng);
+            let phi1 = eng.mp_frame_features(&mut st, &clips[i]).unwrap();
+            assert_eq!(phis8[i], phi1, "lane {i}");
+            assert_eq!(states[i], st, "lane {i} state");
+        }
+    }
+
+    #[test]
+    fn inference_matches_rust_machine() {
+        let mut eng = fast_engine();
+        let mut rng = Pcg32::new(7);
+        let p = 10;
+        let params = Params {
+            wp: (0..4).map(|_| rng.normal_vec(p)).collect(),
+            wm: (0..4).map(|_| rng.normal_vec(p)).collect(),
+            bp: rng.normal_vec(4),
+            bm: rng.normal_vec(4),
+        };
+        let std = Standardizer {
+            mu: vec![10.0; p],
+            sigma: vec![4.0; p],
+        };
+        let phi: Vec<f32> = rng.uniform_vec(p, 0.0, 50.0);
+        let (pv, zp, zm) = eng.inference(&params, &std, &phi, 4.0).unwrap();
+        let k = std.apply(&phi);
+        for (c, d) in decide(&params, &k, 4.0).iter().enumerate() {
+            assert_eq!(pv[c], d.p);
+            assert_eq!(zp[c], d.z_plus);
+            assert_eq!(zm[c], d.z_minus);
+        }
+    }
+
+    #[test]
+    fn parallel_clip_features_match_serial() {
+        let eng = fast_engine();
+        let clips: Vec<Vec<f32>> = (0..3)
+            .map(|i| esc10::synth_clip(2, i, i as u64).samples[..1024].to_vec())
+            .collect();
+        let refs: Vec<&[f32]> = clips.iter().map(Vec::as_slice).collect();
+        let par = eng.clip_features_many(&refs, 3);
+        let ser = eng.clip_features_many(&refs, 1);
+        assert_eq!(par, ser);
+    }
+}

@@ -9,10 +9,15 @@
 //! [`Runtime`] is owned by one dispatcher thread; the coordinator feeds
 //! it through channels (see coordinator::server).
 
+pub mod backend;
 pub mod engine;
 
 use crate::config::ModelConstants;
 use crate::util::json::Json;
+// The offline environment ships no `xla` crate; `crate::xla` is a
+// behavioural shim with the same API (delete this import to link the
+// real crate instead).
+use crate::xla;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -6,7 +6,8 @@
 //! standardiser + gammas) the coordinator serves and the fixed-point
 //! pipeline quantises.
 
-use crate::mp::machine::{Params, Standardizer};
+use crate::mp::machine::{decide, Params, Standardizer};
+use crate::mp::{mp, mp_grad};
 use crate::runtime::engine::ModelEngine;
 use crate::util::json::Json;
 use crate::util::prng::Pcg32;
@@ -198,6 +199,122 @@ pub fn train_model(
     ))
 }
 
+/// One SGD step on head `c` for one sample (`k` standardised features,
+/// target `t` in {-1, +1}); returns the sample's squared loss. The
+/// sub-gradients flow through both MP evaluations (eqs. 3-4), the
+/// normalisation MP (eq. 5) and the rectified difference (eqs. 6-7),
+/// using the analytic [`mp_grad`].
+fn sgd_step_head(params: &mut Params, c: usize, k: &[f32], t: f32, gamma_1: f32, lr: f32) -> f32 {
+    let p_len = k.len();
+    let mut a = Vec::with_capacity(2 * p_len + 1);
+    let mut b = Vec::with_capacity(2 * p_len + 1);
+    for i in 0..p_len {
+        a.push(params.wp[c][i] + k[i]);
+        b.push(params.wp[c][i] - k[i]);
+    }
+    for i in 0..p_len {
+        a.push(params.wm[c][i] - k[i]);
+        b.push(params.wm[c][i] + k[i]);
+    }
+    a.push(params.bp[c]);
+    b.push(params.bm[c]);
+    let z_plus = mp(&a, gamma_1);
+    let z_minus = mp(&b, gamma_1);
+    let (ga, _) = mp_grad(&a, gamma_1);
+    let (gb, _) = mp_grad(&b, gamma_1);
+    // normalisation (eq. 5, gamma_n = 1) and its gradient
+    let pair = [z_plus, z_minus];
+    let z = mp(&pair, 1.0);
+    let (h, _) = mp_grad(&pair, 1.0);
+    let pp = (z_plus - z).max(0.0);
+    let pm = (z_minus - z).max(0.0);
+    let p_val = pp - pm;
+    let u = f32::from(u8::from(z_plus > z));
+    let v = f32::from(u8::from(z_minus > z));
+    let dp_dzp = u * (1.0 - h[0]) + v * h[0];
+    let dp_dzm = -u * h[1] - v * (1.0 - h[1]);
+    let g = 2.0 * (p_val - t);
+    let gp = g * dp_dzp;
+    let gm = g * dp_dzm;
+    for i in 0..p_len {
+        params.wp[c][i] -= lr * (gp * ga[i] + gm * gb[i]);
+        params.wm[c][i] -= lr * (gp * ga[p_len + i] + gm * gb[p_len + i]);
+    }
+    params.bp[c] -= lr * gp * ga[2 * p_len];
+    params.bm[c] -= lr * gm * gb[2 * p_len];
+    (p_val - t) * (p_val - t)
+}
+
+/// Multiclass training entirely on the CPU: per-sample SGD through the
+/// float MP machine with analytic sub-gradients — the no-PJRT mirror of
+/// [`train_model`], used by the edge fleet and any artifact-free build.
+/// Returns the model plus the per-epoch mean loss curve.
+pub fn train_model_cpu(
+    raw_phi: &[Vec<f32>],
+    labels: &[usize],
+    classes: &[String],
+    gamma_f: f32,
+    cfg: &TrainConfig,
+) -> (TrainedModel, Vec<f32>) {
+    assert_eq!(raw_phi.len(), labels.len());
+    let heads = classes.len();
+    let p = raw_phi.first().map_or(0, Vec::len);
+    let std = Standardizer::fit(raw_phi);
+    let k_rows = std.apply_all(raw_phi);
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut params = Params::zeros(heads, p);
+    for row in params.wp.iter_mut().chain(params.wm.iter_mut()) {
+        for w in row.iter_mut() {
+            *w = cfg.init_scale * rng.normal() as f32;
+        }
+    }
+    let mut order: Vec<usize> = (0..k_rows.len()).collect();
+    let mut losses = Vec::with_capacity(cfg.epochs);
+    for epoch in 0..cfg.epochs {
+        let gamma = gamma_at(cfg, epoch);
+        rng.shuffle(&mut order);
+        let mut loss_sum = 0.0f64;
+        let mut n = 0usize;
+        for &idx in &order {
+            for c in 0..heads {
+                let t = if labels[idx] == c { 1.0 } else { -1.0 };
+                let l = sgd_step_head(&mut params, c, &k_rows[idx], t, gamma, cfg.lr);
+                loss_sum += f64::from(l);
+                n += 1;
+            }
+        }
+        losses.push((loss_sum / n.max(1) as f64) as f32);
+    }
+    (
+        TrainedModel {
+            classes: classes.to_vec(),
+            params,
+            std,
+            gamma_f,
+            gamma_1: cfg.gamma_end,
+        },
+        losses,
+    )
+}
+
+/// Multiclass accuracy via the rust MP machine (no artifacts needed).
+pub fn evaluate_cpu(model: &TrainedModel, raw_phi: &[Vec<f32>], labels: &[usize]) -> f64 {
+    let mut correct = 0usize;
+    for (phi, &l) in raw_phi.iter().zip(labels) {
+        let k = model.std.apply(phi);
+        let ds = decide(&model.params, &k, model.gamma_1);
+        let pred = ds
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.p.partial_cmp(&y.1.p).unwrap())
+            .map_or(0, |(i, _)| i);
+        if pred == l {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len().max(1) as f64
+}
+
 /// Multiclass accuracy (argmax over heads) via the batched eval artifact.
 pub fn evaluate(
     engine: &mut ModelEngine,
@@ -279,6 +396,87 @@ mod tests {
         assert!(g0 > g5 && g5 > g100);
         assert!((g100 - cfg.gamma_end).abs() < 1e-3);
         assert!((g0 - cfg.gamma_start).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cpu_training_separates_toy_clusters() {
+        let mut rng = Pcg32::new(9);
+        let p = 12;
+        let mut phi = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..80 {
+            let pos = i % 2 == 0;
+            let row: Vec<f32> = (0..p)
+                .map(|j| {
+                    let base = if pos { 40.0 + j as f64 } else { 80.0 - j as f64 };
+                    (base + 6.0 * rng.normal()) as f32
+                })
+                .collect();
+            phi.push(row);
+            labels.push(usize::from(!pos));
+        }
+        let classes = vec!["pos".to_string(), "neg".to_string()];
+        let cfg = TrainConfig {
+            epochs: 40,
+            lr: 0.3,
+            seed: 4,
+            ..TrainConfig::default()
+        };
+        let (model, losses) = train_model_cpu(&phi, &labels, &classes, 1.0, &cfg);
+        assert!(losses.last().unwrap() < &losses[0], "losses {losses:?}");
+        let acc = evaluate_cpu(&model, &phi, &labels);
+        assert!(acc > 0.7, "cpu train accuracy {acc}");
+    }
+
+    #[test]
+    fn cpu_step_forward_pass_matches_decide_head() {
+        // the trainer re-assembles the eq. 3-7 operands; pin its forward
+        // pass to the inference path so the two can never drift apart
+        let mut rng = Pcg32::new(33);
+        let p = 10;
+        let mut params = Params::zeros(3, p);
+        for row in params.wp.iter_mut().chain(params.wm.iter_mut()) {
+            for w in row.iter_mut() {
+                *w = rng.normal() as f32;
+            }
+        }
+        params.bp = rng.normal_vec(3);
+        params.bm = rng.normal_vec(3);
+        let k = rng.normal_vec(p);
+        for &gamma in &[2.0f32, 4.0, 8.0] {
+            let ds = decide(&params, &k, gamma);
+            for (c, d) in ds.iter().enumerate() {
+                // lr = 0: pure forward pass, returns (p - t)^2
+                let loss = sgd_step_head(&mut params, c, &k, 1.0, gamma, 0.0);
+                let expect = (d.p - 1.0) * (d.p - 1.0);
+                assert!(
+                    (loss - expect).abs() < 1e-5,
+                    "head {c} gamma {gamma}: loss {loss} expect {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_gradient_direction_reduces_single_sample_loss() {
+        // one SGD step on one sample must not increase that sample's loss
+        let mut rng = Pcg32::new(21);
+        let p = 8;
+        let mut params = Params::zeros(2, p);
+        for row in params.wp.iter_mut().chain(params.wm.iter_mut()) {
+            for w in row.iter_mut() {
+                *w = 0.1 * rng.normal() as f32;
+            }
+        }
+        let k: Vec<f32> = rng.normal_vec(p);
+        for &t in &[1.0f32, -1.0] {
+            let before = sgd_step_head(&mut params, 0, &k, t, 4.0, 0.05);
+            let after = sgd_step_head(&mut params, 0, &k, t, 4.0, 0.0);
+            assert!(
+                after <= before + 1e-5,
+                "loss went {before} -> {after} for target {t}"
+            );
+        }
     }
 
     #[test]

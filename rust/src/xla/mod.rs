@@ -1,0 +1,207 @@
+//! Behavioural stand-in for the `xla` (xla-rs) crate surface that
+//! [`crate::runtime`] uses (DESIGN.md §4 substitution table).
+//!
+//! The offline build environment ships no PJRT plugin, so this module
+//! provides two things:
+//!
+//! * a fully functional host [`Literal`] (flat f32 storage + dims) — the
+//!   runtime's marshalling helpers and their tests run against it,
+//! * PJRT client / executable types whose constructors report that the
+//!   backend is unavailable, so [`crate::runtime::Runtime::open`] fails
+//!   with a clear error instead of linking against a missing plugin.
+//!
+//! Every artifact-dependent test and code path already guards on
+//! `artifacts/manifest.json` existing, so the system degrades to the
+//! pure-rust backends ([`crate::runtime::backend::CpuEngine`], [`crate::mp`],
+//! [`crate::fixed`]) when PJRT is absent. Swapping this module for the
+//! real crate is a one-line change in `runtime/mod.rs`.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (formatted with `{:?}` by the
+/// runtime, convertible into `anyhow::Error` via `?`).
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what} requires the PJRT backend, which is not available in this \
+         offline build (see DESIGN.md §4); pure-rust backends remain usable"
+    )))
+}
+
+/// Element types a [`Literal`] can be viewed as. Only f32 is needed by
+/// this system (all artifact tensors are f32).
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// Host tensor: flat f32 data plus dimensions (empty dims = scalar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        self.data
+            .first()
+            .map(|&x| T::from_f32(x))
+            .ok_or_else(|| Error("empty literal".to_string()))
+    }
+
+    /// Destructure a tuple literal. Host literals built through this shim
+    /// are never tuples; only executable outputs are, and those need the
+    /// real backend.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable("tuple literals")
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(x: f32) -> Literal {
+        Literal {
+            data: vec![x],
+            dims: Vec::new(),
+        }
+    }
+}
+
+/// Parsed HLO module (real backend only).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("parsing HLO text")
+    }
+}
+
+/// A computation wrapping a parsed HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer handle (real backend only).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("fetching device buffers")
+    }
+}
+
+/// Compiled executable handle (real backend only).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("executing artifacts")
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] reports unavailability, which
+/// `Runtime::open` surfaces as a normal error.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("the PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("compiling artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let l = Literal::vec1(&data);
+        assert_eq!(l.element_count(), 6);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), data);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let s = Literal::from(1.5f32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn pjrt_unavailable_is_an_error_not_a_panic() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("PJRT"), "{msg}");
+    }
+}
