@@ -1,0 +1,108 @@
+//! Dispatch-layer benches: single-lane `Pipeline` push→tick→classify
+//! cost, and sharded throughput at 1/2/4 lanes over the same synthetic
+//! multi-stream workload (JSONL via `bench_util`, like every bench).
+//!
+//! The sharded cases measure a full run each — spawn lanes, route the
+//! whole workload, barrier, merge — so the number includes thread and
+//! channel overhead, which is exactly the crossover the `--shards` flag
+//! trades against.
+
+use infilter::bench_util::Bench;
+use infilter::coordinator::{FrameTask, Lane, PipelineBuilder, ShardedPipeline};
+use infilter::dsp::multirate::BandPlan;
+use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+use infilter::train::TrainedModel;
+use infilter::util::prng::Pcg32;
+use std::time::Instant;
+
+const FRAME_LEN: usize = 256;
+const CLIP_FRAMES: usize = 4;
+const N_STREAMS: u64 = 16;
+const CLIPS_PER_STREAM: u64 = 2;
+
+fn engine() -> CpuEngine {
+    // reduced plan keeps a full fleet run inside a bench sample
+    let mut plan = BandPlan::paper_default();
+    plan.n_octaves = 3;
+    CpuEngine::with_clip(&plan, 1.0, FRAME_LEN, CLIP_FRAMES)
+}
+
+fn model(p: usize) -> TrainedModel {
+    TrainedModel::synthetic(9, 10, p, 5.0, 5.0)
+}
+
+/// Deterministic multi-stream workload, rebuilt per run.
+fn workload() -> Vec<FrameTask> {
+    let mut out = Vec::new();
+    for s in 0..N_STREAMS {
+        let mut rng = Pcg32::substream(17, s);
+        for clip in 0..CLIPS_PER_STREAM {
+            for f in 0..CLIP_FRAMES {
+                out.push(FrameTask {
+                    stream: s,
+                    clip_seq: clip,
+                    frame_idx: f,
+                    data: (0..FRAME_LEN).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                    label: (s % 10) as usize,
+                    t_gen: Instant::now(),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let mut b = Bench::new("bench_dispatch");
+    let total_clips = (N_STREAMS * CLIPS_PER_STREAM) as u64;
+    // engine construction (filter-bank coefficients) and workload
+    // synthesis stay outside the timed closures — the measured region
+    // is push → dispatch → classify (+ lane spawn for the sharded
+    // cases, which is part of what --shards trades against)
+    let eng = engine();
+    let m = model(eng.n_filters());
+    let tasks = workload();
+
+    // single owned lane, synchronous
+    {
+        let (eng, m, tasks) = (eng.clone(), m.clone(), tasks.clone());
+        b.run_with_throughput(
+            "dispatch/pipeline_1lane",
+            Some((total_clips as f64, "clips")),
+            || {
+                let mut lane = PipelineBuilder::new(eng.clone(), m.clone())
+                    .queue_capacity(64)
+                    .build();
+                for t in tasks.clone() {
+                    lane.push(t);
+                }
+                lane.drain().unwrap();
+                let (report, _) = lane.finish();
+                assert_eq!(report.clips_classified, total_clips);
+                report.clips_classified
+            },
+        );
+    }
+
+    // sharded: 1 / 2 / 4 worker lanes over the identical workload
+    for shards in [1usize, 2, 4] {
+        let (eng, m, tasks) = (eng.clone(), m.clone(), tasks.clone());
+        let name = format!("dispatch/sharded_{shards}lane");
+        b.run_with_throughput(&name, Some((total_clips as f64, "clips")), || {
+            let eng = eng.clone();
+            let mut lane = ShardedPipeline::builder(shards, move |_| Ok(eng.clone()), m.clone())
+                .queue_capacity(64)
+                .build()
+                .unwrap();
+            for t in tasks.clone() {
+                Lane::push(&mut lane, t);
+            }
+            Lane::drain(&mut lane).unwrap();
+            let (report, _) = Lane::finish(lane).unwrap();
+            assert_eq!(report.clips_classified, total_clips);
+            report.clips_classified
+        });
+    }
+
+    b.finish();
+}

@@ -4,13 +4,16 @@
 //! CPU backend's frame step that the fleet classifies through.
 
 use infilter::bench_util::Bench;
+use infilter::coordinator::{ClassifyResult, FrameTask, PipelineBuilder};
 use infilter::dsp::multirate::BandPlan;
 use infilter::edge::ring::FrameRing;
 use infilter::edge::session::{EdgeSession, SessionConfig, AMBIENT_LABEL};
 use infilter::edge::uplink::TokenBucket;
 use infilter::edge::vad::{EnergyGate, GateConfig};
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+use infilter::train::TrainedModel;
 use infilter::util::prng::Pcg32;
+use std::time::Instant;
 
 fn main() {
     let mut b = Bench::new("bench_edge");
@@ -56,6 +59,39 @@ fn main() {
     let loud: Vec<f32> = (0..2048).map(|_| (rng.normal() * 0.2) as f32).collect();
     b.run_with_throughput("edge/cpu_mp_frame/2048", Some((2048.0, "samples")), || {
         eng.frame_features(&mut state, &loud)
+    });
+
+    // one triggered clip end to end through an owned compute lane
+    // (push → tick → clip-end inference), the unit of work the fleet
+    // hands the coordinator per detection. The lane lives across
+    // iterations (results streamed, not collected) so the measured
+    // region excludes pipeline construction; clip_seq increments per
+    // iteration to satisfy the in-order clip protocol.
+    let mut plan_small = BandPlan::paper_default();
+    plan_small.n_octaves = 3;
+    let small = CpuEngine::with_clip(&plan_small, 1.0, 256, 4);
+    let model = TrainedModel::synthetic(5, 10, small.n_filters(), 5.0, 5.0);
+    let clip: Vec<f32> = (0..256 * 4).map(|_| (rng.normal() * 0.2) as f32).collect();
+    let mut lane = PipelineBuilder::new(small, model)
+        .queue_capacity(8)
+        .sink(Box::new(|_: &ClassifyResult| {}))
+        .collect_results(false)
+        .build();
+    let mut clip_seq = 0u64;
+    b.run_with_throughput("edge/pipeline_clip/256x4", Some((1024.0, "samples")), || {
+        for (f, frame) in clip.chunks(256).enumerate() {
+            lane.push(FrameTask {
+                stream: 0,
+                clip_seq,
+                frame_idx: f,
+                data: frame.to_vec(),
+                label: 0,
+                t_gen: Instant::now(),
+            });
+        }
+        clip_seq += 1;
+        lane.drain().unwrap();
+        lane.report().clips_classified
     });
 
     b.finish();

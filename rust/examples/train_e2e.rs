@@ -109,11 +109,7 @@ fn main() -> Result<()> {
     );
     let acc_of = |clips: &[infilter::datasets::Clip], labels: &[usize]| -> f64 {
         let preds = par_map(clips, threads, |c| {
-            let m = pipe.classify(&c.samples[..clip_len]);
-            m.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map_or(0, |(i, _)| i)
+            infilter::util::stats::argmax(&pipe.classify(&c.samples[..clip_len]))
         });
         preds
             .iter()

@@ -7,15 +7,18 @@
 //! event reports cross the token-bucket-limited uplink.
 //!
 //!     cargo run --release --example wildlife_monitor -- \
-//!         [--streams N] [--seconds S] [--events K] [--scale S]
+//!         [--streams N] [--shards N] [--seconds S] [--events K] [--scale S]
 //!
 //! Runs entirely on the pure-rust CPU backend: no AOT artifacts needed.
+//! With `--shards N` the fleet classifies on N compute lanes (one
+//! CpuEngine each, stream-hash routed) and the report shows the
+//! per-lane frame counts.
 
 use anyhow::Result;
 use infilter::config::EdgeConfig;
 use infilter::datasets::esc10;
 use infilter::dsp::multirate::BandPlan;
-use infilter::edge::fleet::{run_fleet, FleetConfig};
+use infilter::edge::fleet::{fleet_lane, run_fleet, FleetConfig};
 use infilter::edge::AMBIENT_LABEL;
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::train::{evaluate_cpu, train_model_cpu, TrainConfig};
@@ -25,7 +28,7 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     infilter::util::logging::set_level_from_str(args.get_or("log", "info"));
     let plan = BandPlan::paper_default();
-    let mut eng = CpuEngine::new(&plan, 1.0);
+    let eng = CpuEngine::new(&plan, 1.0);
     let clip_len = eng.frame_len() * eng.clip_frames();
 
     // train the on-node model (pure CPU: MP features + sub-gradient SGD)
@@ -49,16 +52,26 @@ fn main() -> Result<()> {
     if args.get("streams").is_none() {
         edge.n_streams = 12; // example-sized fleet by default
     }
-    let fleet = FleetConfig::from_edge(&edge, 23, eng.frame_len(), eng.clip_frames());
+    let fleet = FleetConfig::from_edge(
+        &edge,
+        23,
+        eng.frame_len(),
+        eng.clip_frames(),
+        eng.sample_rate(),
+    );
     println!(
-        "monitoring {} sensors x {:.1}s, {} embedded events each, duty {}/{} ...",
+        "monitoring {} sensors x {:.1}s, {} embedded events each, duty {}/{}, \
+         {} compute lane(s) ...",
         fleet.n_streams,
         fleet.ticks as f64 * fleet.frame_len as f64 / fleet.sample_rate,
         fleet.events_per_stream,
         fleet.duty_awake,
-        fleet.duty_sleep
+        fleet.duty_sleep,
+        fleet.shards
     );
-    let (report, results) = run_fleet(&mut eng, &model, &fleet)?;
+    // the serving side is one owned compute lane — or N sharded ones
+    let lane = fleet_lane(&fleet, model.clone(), move |_| Ok(eng.clone()))?;
+    let (report, results) = run_fleet(lane, &fleet)?;
     println!("\n=== edge fleet report ===\n{}", report.render());
 
     // the data that actually crossed the uplink
@@ -69,13 +82,13 @@ fn main() -> Result<()> {
         } else if r.predicted == r.label {
             "ok".to_string()
         } else {
-            format!("MISS, was {}", model.classes[r.label])
+            format!("MISS, was {}", model.class_name(r.label))
         };
         println!(
             "  sensor{:02} clip{} -> {} ({}) p={:+.2}",
             r.stream,
             r.clip_seq,
-            model.classes[r.predicted],
+            model.class_name(r.predicted),
             verdict,
             r.p[r.predicted]
         );

@@ -197,13 +197,7 @@ mod tests {
         let mut car = CarIhc::paper_default();
         let low = car.features(&chirp::tone(200.0, 8192, 16_000.0, 0.5));
         let high = car.features(&chirp::tone(5000.0, 8192, 16_000.0, 0.5));
-        let argmax = |v: &[f32]| {
-            v.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0
-        };
+        let argmax = crate::util::stats::argmax::<f32>;
         // sections are base(high-f)-first: low tones peak later sections
         assert!(
             argmax(&low) > argmax(&high),

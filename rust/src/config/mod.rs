@@ -157,6 +157,9 @@ pub struct EdgeConfig {
     pub uplink_bytes_per_sec: f64,
     pub uplink_burst_bytes: f64,
     pub upload_clips: bool,
+    /// classifier compute lanes (1 = single pipeline, N>1 = sharded
+    /// dispatch across N worker threads, one backend each)
+    pub shards: usize,
 }
 
 impl Default for EdgeConfig {
@@ -177,6 +180,7 @@ impl Default for EdgeConfig {
             uplink_bytes_per_sec: 4096.0,
             uplink_burst_bytes: 16_384.0,
             upload_clips: false,
+            shards: 1,
         }
     }
 }
@@ -198,6 +202,7 @@ impl EdgeConfig {
             uplink_bytes_per_sec: args.get_f64("uplink-bps", d.uplink_bytes_per_sec),
             uplink_burst_bytes: args.get_f64("uplink-burst", d.uplink_burst_bytes),
             upload_clips: args.flag("upload-clips"),
+            shards: args.get_usize("shards", d.shards).max(1),
         }
     }
 }
@@ -277,6 +282,19 @@ mod tests {
         assert_eq!(e.duty_sleep, 8);
         assert!(e.upload_clips);
         assert_eq!(e.events_per_stream, EdgeConfig::default().events_per_stream);
+        assert_eq!(e.shards, 1);
+    }
+
+    #[test]
+    fn edge_config_shards_parse_and_clamp() {
+        let args = crate::util::cli::Args::parse(
+            ["edge-fleet", "--shards", "4"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(EdgeConfig::from_args(&args).shards, 4);
+        let zero = crate::util::cli::Args::parse(
+            ["edge-fleet", "--shards", "0"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(EdgeConfig::from_args(&zero).shards, 1, "clamped to 1");
     }
 
     #[test]

@@ -71,6 +71,16 @@ impl BatchStats {
         self.frames_processed += n as u64;
     }
 
+    /// Fold another lane's stats into this one (multi-lane report merge).
+    pub fn merge(&mut self, other: &BatchStats) {
+        for (a, b) in self.wide_occupancy.iter_mut().zip(&other.wide_occupancy) {
+            *a += b;
+        }
+        self.narrow_dispatches += other.narrow_dispatches;
+        self.wide_dispatches += other.wide_dispatches;
+        self.frames_processed += other.frames_processed;
+    }
+
     pub fn mean_wide_occupancy(&self) -> f64 {
         if self.wide_dispatches == 0 {
             return 0.0;
@@ -154,5 +164,21 @@ mod tests {
         s.record_narrow(3);
         assert_eq!(s.frames_processed, 17);
         assert!((s.mean_wide_occupancy() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_merge_sums_fieldwise() {
+        let mut a = BatchStats::default();
+        a.record_wide(8);
+        a.record_narrow(2);
+        let mut b = BatchStats::default();
+        b.record_wide(8);
+        b.record_wide(4);
+        a.merge(&b);
+        assert_eq!(a.wide_dispatches, 3);
+        assert_eq!(a.narrow_dispatches, 2);
+        assert_eq!(a.frames_processed, 22);
+        assert_eq!(a.wide_occupancy[8], 2);
+        assert_eq!(a.wide_occupancy[4], 1);
     }
 }

@@ -1,8 +1,11 @@
-//! The dispatch core: per-stream state + dynamic batching + clip-end
-//! classification, factored out of the channel-fed serving loop so any
-//! producer can drive it — [`server::serve`]'s thread/channel front end
-//! and the virtual-time edge fleet simulator ([`crate::edge::fleet`])
-//! both pump the same [`Dispatcher`].
+//! The owned compute lane: [`Pipeline`] binds backend + model + batching
+//! policy at construction (via [`PipelineBuilder`]) and exposes the whole
+//! "frame arrived" → "clip classified" path as `push` / `tick` / `drain`
+//! / `finish` — no per-call generics, no re-threaded borrows. Every
+//! entry point drives the same type: [`server::serve`]'s channel-fed
+//! loop, the virtual-time edge fleet ([`crate::edge::fleet`]), examples
+//! and benches. [`super::shard::ShardedPipeline`] stacks N of these on
+//! worker threads behind the same [`Lane`] interface.
 //!
 //! [`server::serve`]: super::server::serve
 
@@ -13,28 +16,147 @@ use super::{ClassifyResult, FrameTask};
 use crate::runtime::backend::InferenceBackend;
 use crate::runtime::engine::StreamState;
 use crate::train::TrainedModel;
+use crate::util::stats::argmax;
 use anyhow::Result;
+use std::sync::Arc;
 
-/// Owns everything between "frame arrived" and "clip classified".
-pub struct Dispatcher {
-    store: StateStore,
-    frame_len: usize,
-    clip_frames: usize,
-    pub stats: BatchStats,
-    pub report: ServeReport,
-    pub results: Vec<ClassifyResult>,
+/// Streaming consumer of classified clips. A pipeline calls this the
+/// moment a clip completes, before the result lands in the collected
+/// vector — callers that want online behaviour (uplink messages, live
+/// dashboards, cross-thread forwarding) plug one in via
+/// [`PipelineBuilder::sink`] instead of waiting for `finish()`.
+pub trait ClassifySink: Send {
+    fn on_result(&mut self, r: &ClassifyResult);
 }
 
-impl Dispatcher {
-    pub fn new<B: InferenceBackend>(backend: &B, queue_capacity: usize) -> Dispatcher {
-        Dispatcher {
-            store: StateStore::new(backend.zero_state(), backend.n_filters(), queue_capacity),
-            frame_len: backend.frame_len(),
-            clip_frames: backend.clip_frames(),
+/// Any `FnMut(&ClassifyResult)` closure is a sink.
+impl<F: FnMut(&ClassifyResult) + Send> ClassifySink for F {
+    fn on_result(&mut self, r: &ClassifyResult) {
+        self(r)
+    }
+}
+
+/// The surface shared by the single-lane [`Pipeline`] and the
+/// multi-lane [`super::shard::ShardedPipeline`]: generic drivers (the
+/// serve loop, the edge fleet) accept `impl Lane` and stay agnostic to
+/// how many threads do the work.
+pub trait Lane {
+    /// Enqueue one frame. Returns false when the frame was dropped
+    /// immediately (single-lane backpressure); sharded lanes absorb the
+    /// frame into a channel and account drops in their lane reports.
+    fn push(&mut self, task: FrameTask) -> bool;
+    /// Opportunistic progress: process some buffered work if any is due.
+    /// Returns the number of frames advanced (0 = idle). Sharded lanes
+    /// make progress autonomously and use this to pump back results.
+    fn service(&mut self) -> Result<usize>;
+    /// Block until every frame pushed so far has been processed.
+    fn drain(&mut self) -> Result<()>;
+    /// Clips classified so far (monotonic; exact after a `drain`).
+    fn clips_classified(&self) -> u64;
+    fn frame_len(&self) -> usize;
+    fn clip_frames(&self) -> usize;
+    fn sample_rate(&self) -> f64;
+    /// Tear down and hand back the merged report plus every collected
+    /// result (empty when collection was disabled in favour of a sink).
+    fn finish(self) -> Result<(ServeReport, Vec<ClassifyResult>)>;
+}
+
+/// Builder for [`Pipeline`]: backend + model are mandatory, everything
+/// else defaults sensibly.
+pub struct PipelineBuilder<B: InferenceBackend> {
+    backend: B,
+    model: Arc<TrainedModel>,
+    policy: BatcherPolicy,
+    queue_capacity: usize,
+    sink: Option<Box<dyn ClassifySink>>,
+    collect: bool,
+}
+
+impl<B: InferenceBackend> PipelineBuilder<B> {
+    pub fn new(backend: B, model: impl Into<Arc<TrainedModel>>) -> PipelineBuilder<B> {
+        PipelineBuilder {
+            backend,
+            model: model.into(),
+            policy: BatcherPolicy::default(),
+            queue_capacity: 32,
+            sink: None,
+            collect: true,
+        }
+    }
+
+    pub fn policy(mut self, policy: BatcherPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Per-stream frame buffer before drops (backpressure bound).
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity;
+        self
+    }
+
+    /// Stream results out as they are produced (in addition to — or,
+    /// with [`collect_results(false)`](Self::collect_results), instead
+    /// of — the vector returned by `finish()`).
+    pub fn sink(mut self, sink: Box<dyn ClassifySink>) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Whether `finish()` returns the accumulated results (default
+    /// true). Lanes that forward through a [`sink`](Self::sink) turn
+    /// this off so results are not held twice.
+    pub fn collect_results(mut self, collect: bool) -> Self {
+        self.collect = collect;
+        self
+    }
+
+    pub fn build(self) -> Pipeline<B> {
+        let frame_len = self.backend.frame_len();
+        let clip_frames = self.backend.clip_frames();
+        let sample_rate = self.backend.sample_rate();
+        let store = StateStore::new(
+            self.backend.zero_state(),
+            self.backend.n_filters(),
+            self.queue_capacity,
+        );
+        Pipeline {
+            backend: self.backend,
+            model: self.model,
+            policy: self.policy,
+            store,
+            frame_len,
+            clip_frames,
+            sample_rate,
             stats: BatchStats::default(),
             report: ServeReport::default(),
             results: Vec::new(),
+            sink: self.sink,
+            collect: self.collect,
         }
+    }
+}
+
+/// One owned compute lane: backend, model, policy, per-stream state and
+/// metrics, bound together for the lane's whole lifetime.
+pub struct Pipeline<B: InferenceBackend> {
+    backend: B,
+    model: Arc<TrainedModel>,
+    policy: BatcherPolicy,
+    store: StateStore,
+    frame_len: usize,
+    clip_frames: usize,
+    sample_rate: f64,
+    stats: BatchStats,
+    report: ServeReport,
+    results: Vec<ClassifyResult>,
+    sink: Option<Box<dyn ClassifySink>>,
+    collect: bool,
+}
+
+impl<B: InferenceBackend> Pipeline<B> {
+    pub fn builder(backend: B, model: impl Into<Arc<TrainedModel>>) -> PipelineBuilder<B> {
+        PipelineBuilder::new(backend, model)
     }
 
     /// Enqueue one frame; returns false (and counts the drop) when the
@@ -53,17 +175,22 @@ impl Dispatcher {
         self.store.pending_total()
     }
 
+    /// Live view of the running counters (final numbers come from
+    /// [`finish`](Self::finish)).
+    pub fn report(&self) -> &ServeReport {
+        &self.report
+    }
+
+    pub fn model(&self) -> &TrainedModel {
+        &self.model
+    }
+
     /// One batching tick: plan over the ready streams, run the wide or
     /// narrow path, classify any clips that completed. Returns the number
     /// of frames processed (0 = idle).
-    pub fn tick<B: InferenceBackend>(
-        &mut self,
-        backend: &mut B,
-        model: &TrainedModel,
-        policy: &BatcherPolicy,
-    ) -> Result<usize> {
+    pub fn tick(&mut self) -> Result<usize> {
         let ready = self.store.ready_streams(8);
-        match policy.plan(&ready) {
+        match self.policy.plan(&ready) {
             BatchPlan::Idle => Ok(0),
             BatchPlan::Wide(ids) => {
                 // pop one in-order frame per lane (resync on clip gaps)
@@ -91,10 +218,10 @@ impl Dispatcher {
                     .chain(std::iter::repeat(zeros.as_slice()))
                     .take(8)
                     .collect();
-                let phis = backend.mp_frame_features_b8(&mut states, &frames)?;
+                let phis = self.backend.mp_frame_features_b8(&mut states, &frames)?;
                 self.stats.record_wide(lanes.len());
                 for (i, (id, task)) in lanes.iter().enumerate() {
-                    self.apply_frame(backend, model, *id, task, &states[i], &phis[i])?;
+                    self.apply_frame(*id, task, &states[i], &phis[i])?;
                 }
                 Ok(lanes.len())
             }
@@ -103,8 +230,8 @@ impl Dispatcher {
                 for id in ids {
                     if let Some(task) = self.pop_in_order(id) {
                         let mut state = self.store.entry(id).state.clone();
-                        let phi = backend.mp_frame_features(&mut state, &task.data)?;
-                        self.apply_frame(backend, model, id, &task, &state, &phi)?;
+                        let phi = self.backend.mp_frame_features(&mut state, &task.data)?;
+                        self.apply_frame(id, &task, &state, &phi)?;
                         n += 1;
                     }
                 }
@@ -119,22 +246,17 @@ impl Dispatcher {
     /// process 0 frames (stale-only queues) while later streams still
     /// hold work, and every tick over a non-empty store pops at least
     /// one frame, so this terminates.
-    pub fn drain<B: InferenceBackend>(
-        &mut self,
-        backend: &mut B,
-        model: &TrainedModel,
-        policy: &BatcherPolicy,
-    ) -> Result<()> {
+    pub fn drain(&mut self) -> Result<()> {
         while self.pending() > 0 {
-            self.tick(backend, model, policy)?;
+            self.tick()?;
         }
         Ok(())
     }
 
     /// Finalise batching stats into the report and hand everything back.
-    pub fn into_parts(mut self) -> (ServeReport, Vec<ClassifyResult>) {
+    pub fn finish(mut self) -> (ServeReport, Vec<ClassifyResult>) {
         self.report.audio_seconds =
-            self.stats.frames_processed as f64 * self.frame_len as f64 / 16_000.0;
+            self.stats.frames_processed as f64 * self.frame_len as f64 / self.sample_rate;
         self.report.batch = self.stats;
         (self.report, self.results)
     }
@@ -170,10 +292,8 @@ impl Dispatcher {
     }
 
     /// Fold one processed frame into its stream; classify at clip end.
-    fn apply_frame<B: InferenceBackend>(
+    fn apply_frame(
         &mut self,
-        backend: &mut B,
-        model: &TrainedModel,
         id: u64,
         task: &FrameTask,
         new_state: &StreamState,
@@ -198,26 +318,30 @@ impl Dispatcher {
                 let e = self.store.entry(id);
                 (e.acc.clone(), e.label, e.clip_seq)
             };
-            let (p, _, _) = backend.inference(&model.params, &model.std, &acc, model.gamma_1)?;
-            let predicted = p
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map_or(0, |(i, _)| i);
+            let (p, _, _) =
+                self.backend
+                    .inference(&self.model.params, &self.model.std, &acc, self.model.gamma_1)?;
+            let predicted = argmax(&p);
             let latency = task.t_gen.elapsed();
             self.report.clips_classified += 1;
             if predicted == label {
                 self.report.clips_correct += 1;
             }
             self.report.latency.record(latency);
-            self.results.push(ClassifyResult {
+            let result = ClassifyResult {
                 stream: id,
                 clip_seq,
                 label,
                 predicted,
                 p,
                 latency,
-            });
+            };
+            if let Some(sink) = self.sink.as_mut() {
+                sink.on_result(&result);
+            }
+            if self.collect {
+                self.results.push(result);
+            }
             let zero = self.store.zero_state().clone();
             let e = self.store.entry(id);
             e.finish_clip(&zero);
@@ -227,13 +351,47 @@ impl Dispatcher {
     }
 }
 
+impl<B: InferenceBackend> Lane for Pipeline<B> {
+    fn push(&mut self, task: FrameTask) -> bool {
+        Pipeline::push(self, task)
+    }
+
+    fn service(&mut self) -> Result<usize> {
+        self.tick()
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        Pipeline::drain(self)
+    }
+
+    fn clips_classified(&self) -> u64 {
+        self.report.clips_classified
+    }
+
+    fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    fn clip_frames(&self) -> usize {
+        self.clip_frames
+    }
+
+    fn sample_rate(&self) -> f64 {
+        self.sample_rate
+    }
+
+    fn finish(self) -> Result<(ServeReport, Vec<ClassifyResult>)> {
+        Ok(Pipeline::finish(self))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dsp::multirate::BandPlan;
-    use crate::mp::machine::{Params, Standardizer};
     use crate::runtime::backend::CpuEngine;
     use crate::util::prng::Pcg32;
+    use std::sync::mpsc;
     use std::time::Instant;
 
     fn engine() -> CpuEngine {
@@ -244,22 +402,7 @@ mod tests {
     }
 
     fn model(heads: usize, p: usize) -> TrainedModel {
-        let mut rng = Pcg32::new(5);
-        TrainedModel {
-            classes: (0..heads).map(|c| format!("c{c}")).collect(),
-            params: Params {
-                wp: (0..heads).map(|_| rng.normal_vec(p)).collect(),
-                wm: (0..heads).map(|_| rng.normal_vec(p)).collect(),
-                bp: vec![0.0; heads],
-                bm: vec![0.0; heads],
-            },
-            std: Standardizer {
-                mu: vec![0.0; p],
-                sigma: vec![1.0; p],
-            },
-            gamma_f: 1.0,
-            gamma_1: 4.0,
-        }
+        TrainedModel::synthetic(5, heads, p, 0.0, 1.0)
     }
 
     fn task(stream: u64, clip_seq: u64, frame_idx: usize, n: usize) -> FrameTask {
@@ -275,16 +418,16 @@ mod tests {
 
     #[test]
     fn clips_complete_through_cpu_backend() {
-        let mut eng = engine();
+        let eng = engine();
         let m = model(3, eng.n_filters());
-        let mut d = Dispatcher::new(&eng, 8);
+        let mut pipe = PipelineBuilder::new(eng, m).queue_capacity(8).build();
         for s in 0..2u64 {
             for f in 0..2 {
-                assert!(d.push(task(s, 0, f, 64)));
+                assert!(pipe.push(task(s, 0, f, 64)));
             }
         }
-        d.drain(&mut eng, &m, &BatcherPolicy::default()).unwrap();
-        let (report, results) = d.into_parts();
+        pipe.drain().unwrap();
+        let (report, results) = pipe.finish();
         assert_eq!(report.clips_classified, 2);
         assert_eq!(results.len(), 2);
         assert_eq!(report.clips_aborted, 0);
@@ -292,15 +435,15 @@ mod tests {
 
     #[test]
     fn lost_frame_aborts_clip_and_resyncs() {
-        let mut eng = engine();
+        let eng = engine();
         let m = model(2, eng.n_filters());
-        let mut d = Dispatcher::new(&eng, 8);
+        let mut pipe = PipelineBuilder::new(eng, m).queue_capacity(8).build();
         // clip 0 loses its second frame; clip 1 arrives complete
-        d.push(task(0, 0, 0, 64));
-        d.push(task(0, 1, 0, 64));
-        d.push(task(0, 1, 1, 64));
-        d.drain(&mut eng, &m, &BatcherPolicy::default()).unwrap();
-        let (report, results) = d.into_parts();
+        pipe.push(task(0, 0, 0, 64));
+        pipe.push(task(0, 1, 0, 64));
+        pipe.push(task(0, 1, 1, 64));
+        pipe.drain().unwrap();
+        let (report, results) = pipe.finish();
         assert_eq!(report.clips_aborted, 1);
         assert_eq!(report.clips_classified, 1);
         assert_eq!(results[0].clip_seq, 1);
@@ -309,11 +452,85 @@ mod tests {
     #[test]
     fn backpressure_drops_are_counted() {
         let eng = engine();
-        let mut d = Dispatcher::new(&eng, 2);
-        assert!(d.push(task(7, 0, 0, 64)));
-        assert!(d.push(task(7, 0, 1, 64)));
-        assert!(!d.push(task(7, 1, 0, 64)));
-        assert_eq!(d.report.frames_dropped, 1);
-        assert_eq!(d.pending(), 2);
+        let m = model(2, eng.n_filters());
+        let mut pipe = PipelineBuilder::new(eng, m).queue_capacity(2).build();
+        assert!(pipe.push(task(7, 0, 0, 64)));
+        assert!(pipe.push(task(7, 0, 1, 64)));
+        assert!(!pipe.push(task(7, 1, 0, 64)));
+        assert_eq!(pipe.report().frames_dropped, 1);
+        assert_eq!(pipe.pending(), 2);
+    }
+
+    #[test]
+    fn sink_streams_results_without_collection() {
+        let eng = engine();
+        let m = model(3, eng.n_filters());
+        let (tx, rx) = mpsc::channel::<ClassifyResult>();
+        let mut pipe = PipelineBuilder::new(eng, m)
+            .queue_capacity(8)
+            .sink(Box::new(move |r: &ClassifyResult| {
+                let _ = tx.send(r.clone());
+            }))
+            .collect_results(false)
+            .build();
+        for f in 0..2 {
+            pipe.push(task(4, 0, f, 64));
+        }
+        pipe.drain().unwrap();
+        let streamed: Vec<ClassifyResult> = rx.try_iter().collect();
+        assert_eq!(streamed.len(), 1);
+        assert_eq!(streamed[0].stream, 4);
+        let (report, collected) = pipe.finish();
+        assert_eq!(report.clips_classified, 1);
+        assert!(collected.is_empty(), "collection disabled");
+    }
+
+    #[test]
+    fn wide_and_narrow_paths_are_bit_identical() {
+        // identical frames through wide-always vs narrow-always policies
+        // on the CPU backend must give bit-identical ClassifyResults
+        let frames_of = |wide_threshold: usize| {
+            let eng = engine();
+            let m = model(3, eng.n_filters());
+            let mut pipe = PipelineBuilder::new(eng, m)
+                .policy(BatcherPolicy { wide_threshold })
+                .queue_capacity(16)
+                .build();
+            let mut rng = Pcg32::new(77);
+            for s in 0..4u64 {
+                for clip in 0..2u64 {
+                    for f in 0..2usize {
+                        // same seed + same iteration order in both runs
+                        // ⇒ identical audio under either policy
+                        let data: Vec<f32> =
+                            (0..64).map(|_| (rng.normal() * 0.1) as f32).collect();
+                        pipe.push(FrameTask {
+                            stream: s,
+                            clip_seq: clip,
+                            frame_idx: f,
+                            data,
+                            label: (s % 3) as usize,
+                            t_gen: Instant::now(),
+                        });
+                    }
+                }
+            }
+            pipe.drain().unwrap();
+            let (report, mut results) = pipe.finish();
+            results.sort_by_key(|r| (r.stream, r.clip_seq));
+            (report, results)
+        };
+        let (wide_report, wide) = frames_of(1); // wide path always
+        let (narrow_report, narrow) = frames_of(9); // narrow path always
+        assert!(wide_report.batch.wide_dispatches > 0);
+        assert_eq!(narrow_report.batch.wide_dispatches, 0);
+        assert_eq!(wide.len(), narrow.len());
+        assert_eq!(wide.len(), 8);
+        for (a, b) in wide.iter().zip(&narrow) {
+            assert_eq!(a.stream, b.stream);
+            assert_eq!(a.clip_seq, b.clip_seq);
+            assert_eq!(a.predicted, b.predicted);
+            assert_eq!(a.p, b.p, "stream {} clip {}", a.stream, a.clip_seq);
+        }
     }
 }

@@ -4,6 +4,31 @@ use super::batcher::BatchStats;
 use crate::util::stats::LatencyHist;
 use std::time::Duration;
 
+/// Per-lane slice of a merged multi-lane report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneStats {
+    pub lane: usize,
+    pub frames: u64,
+    pub clips: u64,
+    pub frames_dropped: u64,
+}
+
+/// The shared "lanes: [...]" suffix line both the serve and the fleet
+/// reports append when a run was sharded (empty input renders nothing).
+pub fn render_lanes(lanes: &[LaneStats]) -> String {
+    if lanes.is_empty() {
+        return String::new();
+    }
+    let mut s = String::from("\nlanes:");
+    for l in lanes {
+        s.push_str(&format!(
+            " [{} frames={} clips={} dropped={}]",
+            l.lane, l.frames, l.clips, l.frames_dropped
+        ));
+    }
+    s
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     pub clips_classified: u64,
@@ -14,9 +39,37 @@ pub struct ServeReport {
     pub audio_seconds: f64,
     pub latency: LatencyHist,
     pub batch: BatchStats,
+    /// Per-lane breakdown when this report was merged from a
+    /// [`ShardedPipeline`](super::shard::ShardedPipeline); empty for a
+    /// single-lane run.
+    pub per_lane: Vec<LaneStats>,
 }
 
 impl ServeReport {
+    /// Merge per-lane reports into one fleet-wide report with a
+    /// per-lane breakdown: counters sum, latency histograms merge,
+    /// wall time is the slowest lane (they ran concurrently).
+    pub fn merge<I: IntoIterator<Item = ServeReport>>(lanes: I) -> ServeReport {
+        let mut out = ServeReport::default();
+        for (i, r) in lanes.into_iter().enumerate() {
+            out.clips_classified += r.clips_classified;
+            out.clips_correct += r.clips_correct;
+            out.frames_dropped += r.frames_dropped;
+            out.clips_aborted += r.clips_aborted;
+            out.wall_time = out.wall_time.max(r.wall_time);
+            out.audio_seconds += r.audio_seconds;
+            out.latency.merge(&r.latency);
+            out.batch.merge(&r.batch);
+            out.per_lane.push(LaneStats {
+                lane: i,
+                frames: r.batch.frames_processed,
+                clips: r.clips_classified,
+                frames_dropped: r.frames_dropped,
+            });
+        }
+        out
+    }
+
     pub fn accuracy(&self) -> f64 {
         if self.clips_classified == 0 {
             0.0
@@ -45,7 +98,7 @@ impl ServeReport {
     }
 
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "clips={} acc={:.1}% aborted={} dropped_frames={}\n\
              wall={:.2}s audio={:.1}s realtime_factor={:.2}x clips/s={:.2}\n\
              latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms max={:.1}ms\n\
@@ -66,7 +119,9 @@ impl ServeReport {
             self.batch.mean_wide_occupancy(),
             self.batch.narrow_dispatches,
             self.batch.frames_processed,
-        )
+        );
+        s.push_str(&render_lanes(&self.per_lane));
+        s
     }
 }
 
@@ -88,6 +143,41 @@ mod tests {
         assert!((r.realtime_factor() - 5.0).abs() < 1e-9);
         assert!((r.clips_per_second() - 5.0).abs() < 1e-9);
         assert!(r.render().contains("acc=80.0%"));
+    }
+
+    #[test]
+    fn merge_sums_counts_and_keeps_lane_breakdown() {
+        let mut a = ServeReport {
+            clips_classified: 4,
+            clips_correct: 3,
+            frames_dropped: 1,
+            wall_time: Duration::from_secs(2),
+            audio_seconds: 8.0,
+            ..Default::default()
+        };
+        a.batch.record_narrow(32);
+        a.latency.record_us(1_000.0);
+        let mut b = ServeReport {
+            clips_classified: 6,
+            clips_correct: 6,
+            wall_time: Duration::from_secs(3),
+            audio_seconds: 12.0,
+            ..Default::default()
+        };
+        b.batch.record_wide(6);
+        b.latency.record_us(9_000.0);
+        let m = ServeReport::merge([a, b]);
+        assert_eq!(m.clips_classified, 10);
+        assert_eq!(m.clips_correct, 9);
+        assert_eq!(m.frames_dropped, 1);
+        assert_eq!(m.wall_time, Duration::from_secs(3)); // slowest lane
+        assert!((m.audio_seconds - 20.0).abs() < 1e-9);
+        assert_eq!(m.latency.count(), 2);
+        assert_eq!(m.batch.frames_processed, 38);
+        assert_eq!(m.per_lane.len(), 2);
+        assert_eq!(m.per_lane[0].frames, 32);
+        assert_eq!(m.per_lane[1].clips, 6);
+        assert!(m.render().contains("lanes:"), "{}", m.render());
     }
 
     #[test]

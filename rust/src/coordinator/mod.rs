@@ -9,18 +9,27 @@
 //!   the "KV-cache" of this system) — [`state`],
 //! * a dynamic batcher that packs up to 8 concurrent streams into one
 //!   PJRT dispatch of the `mp_frame_features_b8` artifact — [`batcher`],
-//! * the backend-agnostic dispatch core (frame in, classified clip out)
-//!   shared by the channel-fed server and the edge fleet — [`dispatch`],
-//! * the single-threaded PJRT dispatch loop fed by producer threads over
-//!   bounded channels (PjRtLoadedExecutable is not Send) — [`server`],
-//! * serving metrics (latency histograms, batch occupancy, drops) —
-//!   [`metrics`].
+//! * the owned compute lane ([`Pipeline`], built by [`PipelineBuilder`]):
+//!   backend + model + policy bound at construction, frame in, classified
+//!   clip out, results streamed through a pluggable [`ClassifySink`] —
+//!   [`dispatch`],
+//! * multi-lane scale-out ([`ShardedPipeline`]): N lanes, each owning its
+//!   own backend on its own worker thread, stream-hash routing, merged
+//!   reports with a per-lane breakdown — [`shard`],
+//! * the channel-fed serving loop driving either lane shape behind the
+//!   shared [`Lane`] interface — [`server`],
+//! * serving metrics (latency histograms, batch occupancy, drops,
+//!   [`metrics::ServeReport::merge`]) — [`metrics`].
 
 pub mod batcher;
 pub mod dispatch;
 pub mod metrics;
 pub mod server;
+pub mod shard;
 pub mod state;
+
+pub use dispatch::{ClassifySink, Lane, Pipeline, PipelineBuilder};
+pub use shard::{AnyLane, ShardedPipeline, ShardedPipelineBuilder};
 
 use std::time::Instant;
 

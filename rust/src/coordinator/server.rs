@@ -1,17 +1,20 @@
 //! The serving loop: producer threads simulate remote sensor streams;
-//! the dispatcher thread owns the PJRT engine (executables are not Send)
-//! and drains frames through the dynamic batcher into the wide/narrow
-//! frame-features artifacts, running the inference artifact at clip
-//! boundaries.
+//! the driver thread feeds an owned compute lane — a single [`Pipeline`]
+//! (which may wrap a non-Send PJRT engine) or a [`ShardedPipeline`] with
+//! N worker lanes — through the shared [`Lane`] interface.
+//!
+//! [`Pipeline`]: super::Pipeline
+//! [`ShardedPipeline`]: super::ShardedPipeline
 
 use super::batcher::BatcherPolicy;
-use super::dispatch::Dispatcher;
+use super::dispatch::{Lane, PipelineBuilder};
 use super::metrics::ServeReport;
+use super::shard::ShardedPipeline;
 use super::{ClassifyResult, FrameTask};
 use crate::datasets::esc10;
 use crate::runtime::backend::InferenceBackend;
 use crate::train::TrainedModel;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -23,9 +26,10 @@ pub struct ServeConfig {
     /// per-stream frame buffer before drops (backpressure bound)
     pub queue_capacity: usize,
     pub policy: BatcherPolicy,
-    /// pace producers at real audio rate (128 ms per frame) instead of
-    /// as-fast-as-possible
+    /// pace producers at real audio rate instead of as-fast-as-possible
     pub realtime: bool,
+    /// compute lanes; 1 = single synchronous pipeline, >1 = sharded
+    pub shards: usize,
 }
 
 impl Default for ServeConfig {
@@ -37,30 +41,71 @@ impl Default for ServeConfig {
             queue_capacity: 32,
             policy: BatcherPolicy::default(),
             realtime: false,
+            shards: 1,
         }
     }
 }
 
-/// Run the serving simulation on the synthetic ESC-10 workload; returns
-/// the aggregate report and every per-clip result. Generic over the
-/// inference backend: the PJRT [`crate::runtime::engine::ModelEngine`]
-/// or the pure-rust [`crate::runtime::backend::CpuEngine`].
+/// Run the serving simulation on a single-lane [`Pipeline`] built from
+/// `backend` (pass `&mut engine` to keep ownership; the blanket
+/// `InferenceBackend for &mut B` impl covers it). Returns the aggregate
+/// report and every per-clip result.
 pub fn serve<B: InferenceBackend>(
-    engine: &mut B,
+    backend: B,
     model: &TrainedModel,
     cfg: &ServeConfig,
 ) -> Result<(ServeReport, Vec<ClassifyResult>)> {
-    let frame_len = engine.frame_len();
-    let clip_frames = engine.clip_frames();
+    ensure!(
+        cfg.shards <= 1,
+        "ServeConfig.shards = {} but serve() runs a single lane; \
+         use serve_sharded with a backend factory",
+        cfg.shards
+    );
+    let lane = PipelineBuilder::new(backend, model.clone())
+        .policy(cfg.policy)
+        .queue_capacity(cfg.queue_capacity)
+        .build();
+    serve_on(lane, model.classes.len(), cfg)
+}
+
+/// Run the serving simulation on [`cfg.shards`](ServeConfig::shards)
+/// lanes, each owning a backend built by `factory(lane)` *on the lane's
+/// worker thread* (so non-Send backends shard too).
+pub fn serve_sharded<B, F>(
+    factory: F,
+    model: &TrainedModel,
+    cfg: &ServeConfig,
+) -> Result<(ServeReport, Vec<ClassifyResult>)>
+where
+    B: InferenceBackend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    let lane = ShardedPipeline::builder(cfg.shards, factory, model.clone())
+        .policy(cfg.policy)
+        .queue_capacity(cfg.queue_capacity)
+        .build()?;
+    serve_on(lane, model.classes.len(), cfg)
+}
+
+/// The driver shared by both lane shapes: producers over a bounded
+/// channel, opportunistic `service()` between receives, a final
+/// `drain()` barrier, `finish()` for the merged report.
+pub fn serve_on<L: Lane>(
+    mut lane: L,
+    n_classes: usize,
+    cfg: &ServeConfig,
+) -> Result<(ServeReport, Vec<ClassifyResult>)> {
+    let frame_len = lane.frame_len();
+    let clip_frames = lane.clip_frames();
+    let sample_rate = lane.sample_rate();
     let clip_len = frame_len * clip_frames;
-    let n_classes = model.classes.len();
     let (tx, rx) = mpsc::sync_channel::<FrameTask>(cfg.n_streams * 4);
 
     // ---- producers: one thread simulating all sensor streams
     let producer = {
         let cfg = cfg.clone();
         std::thread::spawn(move || {
-            let frame_dur = Duration::from_secs_f64(frame_len as f64 / 16_000.0);
+            let frame_dur = Duration::from_secs_f64(frame_len as f64 / sample_rate);
             for clip_seq in 0..cfg.clips_per_stream as u64 {
                 // synthesise this round's clip per stream; the clip index
                 // mixes the stream id into the high bits so streams never
@@ -99,17 +144,14 @@ pub fn serve<B: InferenceBackend>(
         })
     };
 
-    // ---- dispatcher: single compute lane pumping the shared core
-    let mut d = Dispatcher::new(engine, cfg.queue_capacity);
     let t0 = Instant::now();
     let mut producers_done = false;
-
     loop {
         // drain the channel without blocking; block briefly only if idle
         loop {
             match rx.try_recv() {
                 Ok(task) => {
-                    d.push(task);
+                    lane.push(task);
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -118,28 +160,25 @@ pub fn serve<B: InferenceBackend>(
                 }
             }
         }
-        if d.tick(engine, model, &cfg.policy)? == 0 {
+        if lane.service()? == 0 {
             if producers_done {
-                // a tick can process 0 frames while later streams still
-                // hold work (e.g. the oldest queues were stale-only), so
-                // only stop once every queue is empty
-                if d.pending() == 0 {
-                    break;
-                }
-                continue;
+                break;
             }
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(task) => {
-                    d.push(task);
+                    lane.push(task);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => producers_done = true,
             }
         }
     }
+    // a service() round can report idle while stale-only queues still
+    // hold frames; the drain barrier settles everything
+    lane.drain()?;
     producer.join().ok();
 
-    let (mut report, results) = d.into_parts();
+    let (mut report, results) = lane.finish()?;
     report.wall_time = t0.elapsed();
     Ok((report, results))
 }
@@ -147,7 +186,6 @@ pub fn serve<B: InferenceBackend>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mp::machine::{Params, Standardizer};
     use crate::runtime::engine::ModelEngine;
     use std::path::PathBuf;
 
@@ -159,22 +197,7 @@ mod tests {
     }
 
     fn dummy_model(heads: usize, p: usize) -> TrainedModel {
-        let mut rng = crate::util::prng::Pcg32::new(3);
-        TrainedModel {
-            classes: (0..heads).map(|c| format!("c{c}")).collect(),
-            params: Params {
-                wp: (0..heads).map(|_| rng.normal_vec(p)).collect(),
-                wm: (0..heads).map(|_| rng.normal_vec(p)).collect(),
-                bp: vec![0.0; heads],
-                bm: vec![0.0; heads],
-            },
-            std: Standardizer {
-                mu: vec![50.0; p],
-                sigma: vec![20.0; p],
-            },
-            gamma_f: 1.0,
-            gamma_1: 4.0,
-        }
+        TrainedModel::synthetic(3, heads, p, 50.0, 20.0)
     }
 
     #[test]
@@ -244,13 +267,18 @@ mod tests {
         assert!(report.batch.wide_dispatches > 0, "{}", report.render());
     }
 
-    #[test]
-    fn serve_runs_on_the_cpu_backend_without_artifacts() {
-        // the same serving loop, no PJRT required: a reduced band plan
-        // keeps the pure-rust MP bank fast enough for a unit test
+    fn cpu_engine() -> crate::runtime::backend::CpuEngine {
+        // a reduced band plan keeps the pure-rust MP bank fast enough
+        // for a unit test
         let mut plan = crate::dsp::multirate::BandPlan::paper_default();
         plan.n_octaves = 2;
-        let mut eng = crate::runtime::backend::CpuEngine::with_clip(&plan, 1.0, 512, 2);
+        crate::runtime::backend::CpuEngine::with_clip(&plan, 1.0, 512, 2)
+    }
+
+    #[test]
+    fn serve_runs_on_the_cpu_backend_without_artifacts() {
+        // the same serving loop, no PJRT required
+        let mut eng = cpu_engine();
         let model = dummy_model(10, eng.n_filters());
         let cfg = ServeConfig {
             n_streams: 3,
@@ -262,5 +290,35 @@ mod tests {
         assert_eq!(report.clips_classified, 6, "{}", report.render());
         assert_eq!(results.len(), 6);
         assert_eq!(report.clips_aborted, 0);
+    }
+
+    #[test]
+    fn sharded_serve_matches_single_lane_totals() {
+        let model = dummy_model(10, cpu_engine().n_filters());
+        let cfg = ServeConfig {
+            n_streams: 6,
+            clips_per_stream: 2,
+            seed: 13,
+            ..Default::default()
+        };
+        let (single, mut rs) = serve(cpu_engine(), &model, &cfg).unwrap();
+        let sharded_cfg = ServeConfig { shards: 3, ..cfg };
+        let (merged, mut rm) =
+            serve_sharded(|_| Ok(cpu_engine()), &model, &sharded_cfg).unwrap();
+        assert_eq!(merged.clips_classified, 12, "{}", merged.render());
+        assert_eq!(merged.clips_classified, single.clips_classified);
+        assert_eq!(merged.batch.frames_processed, single.batch.frames_processed);
+        assert_eq!(merged.per_lane.len(), 3);
+        assert_eq!(
+            merged.per_lane.iter().map(|l| l.frames).sum::<u64>(),
+            merged.batch.frames_processed
+        );
+        // identical clips classified with identical outputs
+        rs.sort_by_key(|r| (r.stream, r.clip_seq));
+        rm.sort_by_key(|r| (r.stream, r.clip_seq));
+        for (a, b) in rs.iter().zip(&rm) {
+            assert_eq!((a.stream, a.clip_seq), (b.stream, b.clip_seq));
+            assert_eq!(a.p, b.p);
+        }
     }
 }

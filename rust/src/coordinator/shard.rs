@@ -1,0 +1,666 @@
+//! Multi-lane scale-out: [`ShardedPipeline`] runs N [`Pipeline`] lanes,
+//! each owning its own backend instance on its own worker thread, with
+//! stream-hash routing of frames to lanes and report merging
+//! ([`ServeReport::merge`]) at teardown.
+//!
+//! Backends are constructed *inside* each worker by a caller-supplied
+//! factory, so even non-`Send` backends (the PJRT `ModelEngine` — its
+//! loaded executables cannot cross threads) shard cleanly: each lane
+//! opens its own engine and never shares it. The factory itself must be
+//! `Send + Sync` (it is called once per worker thread).
+//!
+//! Frames route by a Fibonacci hash of the stream id, so one stream's
+//! frames always land on one lane — per-stream in-order processing and
+//! the clip-resync protocol keep working unchanged, and a sharded run
+//! classifies exactly the same clips as a single lane would.
+
+use super::dispatch::{ClassifySink, Lane, Pipeline, PipelineBuilder};
+use super::metrics::ServeReport;
+use super::{batcher::BatcherPolicy, ClassifyResult, FrameTask};
+use crate::runtime::backend::InferenceBackend;
+use crate::train::TrainedModel;
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Commands the router sends a lane worker. Teardown is signalled by
+/// dropping the command sender, not by a message.
+enum LaneCmd {
+    Task(FrameTask),
+    /// Process everything received so far, then ack.
+    Barrier(mpsc::Sender<()>),
+}
+
+/// Clip geometry a worker reports back once its backend is built.
+struct LaneReady {
+    frame_len: usize,
+    clip_frames: usize,
+    sample_rate: f64,
+}
+
+/// N owned compute lanes behind the single-lane [`Lane`] interface.
+pub struct ShardedPipeline {
+    cmds: Vec<mpsc::SyncSender<LaneCmd>>,
+    results_rx: mpsc::Receiver<ClassifyResult>,
+    done_rx: mpsc::Receiver<(usize, Result<ServeReport>)>,
+    workers: Vec<JoinHandle<()>>,
+    results: Vec<ClassifyResult>,
+    /// results seen by the owner (still counted when `collect` is off)
+    classified: u64,
+    sink: Option<Box<dyn ClassifySink>>,
+    collect: bool,
+    frame_len: usize,
+    clip_frames: usize,
+    sample_rate: f64,
+    t0: Instant,
+}
+
+/// Builder mirroring [`PipelineBuilder`] for the sharded case.
+pub struct ShardedPipelineBuilder<B, F>
+where
+    B: InferenceBackend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    shards: usize,
+    factory: F,
+    model: Arc<TrainedModel>,
+    policy: BatcherPolicy,
+    queue_capacity: usize,
+    channel_depth: usize,
+    sink: Option<Box<dyn ClassifySink>>,
+    collect: bool,
+    /// `B` only appears in `F`'s bound; anchor it (fn-pointer form so
+    /// the builder's auto traits do not depend on `B`)
+    _backend: std::marker::PhantomData<fn() -> B>,
+}
+
+impl<B, F> ShardedPipelineBuilder<B, F>
+where
+    B: InferenceBackend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    /// `factory(lane)` is invoked on each worker thread to build that
+    /// lane's backend.
+    pub fn new(shards: usize, factory: F, model: impl Into<Arc<TrainedModel>>) -> Self {
+        ShardedPipelineBuilder {
+            shards: shards.max(1),
+            factory,
+            model: model.into(),
+            policy: BatcherPolicy::default(),
+            queue_capacity: 32,
+            channel_depth: 256,
+            sink: None,
+            collect: true,
+            _backend: std::marker::PhantomData,
+        }
+    }
+
+    pub fn policy(mut self, policy: BatcherPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity;
+        self
+    }
+
+    /// Bounded depth of each lane's command channel (router-side
+    /// backpressure before the lane's own per-stream queues).
+    pub fn channel_depth(mut self, depth: usize) -> Self {
+        self.channel_depth = depth.max(1);
+        self
+    }
+
+    /// Stream merged results out as the owner thread pumps them (during
+    /// [`Lane::drain`] / [`Lane::service`] / `finish`).
+    pub fn sink(mut self, sink: Box<dyn ClassifySink>) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    pub fn collect_results(mut self, collect: bool) -> Self {
+        self.collect = collect;
+        self
+    }
+
+    /// Spawn the worker threads and wait for every lane's backend to
+    /// come up (fails fast if any factory call fails).
+    pub fn build(self) -> Result<ShardedPipeline> {
+        ShardedPipeline::spawn(self)
+    }
+}
+
+impl ShardedPipeline {
+    pub fn builder<B, F>(
+        shards: usize,
+        factory: F,
+        model: impl Into<Arc<TrainedModel>>,
+    ) -> ShardedPipelineBuilder<B, F>
+    where
+        B: InferenceBackend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        ShardedPipelineBuilder::new(shards, factory, model)
+    }
+
+    fn spawn<B, F>(b: ShardedPipelineBuilder<B, F>) -> Result<ShardedPipeline>
+    where
+        B: InferenceBackend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let factory = Arc::new(b.factory);
+        let (results_tx, results_rx) = mpsc::channel::<ClassifyResult>();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, Result<ServeReport>)>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<LaneReady>>();
+        let mut cmds = Vec::with_capacity(b.shards);
+        let mut workers = Vec::with_capacity(b.shards);
+        for lane in 0..b.shards {
+            let (cmd_tx, cmd_rx) = mpsc::sync_channel::<LaneCmd>(b.channel_depth);
+            cmds.push(cmd_tx);
+            let factory = Arc::clone(&factory);
+            let model = Arc::clone(&b.model);
+            let policy = b.policy;
+            let queue_capacity = b.queue_capacity;
+            let results_tx = results_tx.clone();
+            let done_tx = done_tx.clone();
+            let ready_tx = ready_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("lane-{lane}"))
+                    .spawn(move || {
+                        let report = run_worker(
+                            lane,
+                            factory.as_ref(),
+                            model,
+                            policy,
+                            queue_capacity,
+                            cmd_rx,
+                            results_tx,
+                            ready_tx,
+                        );
+                        let _ = done_tx.send((lane, report));
+                    })
+                    .context("spawning lane worker")?,
+            );
+        }
+        // keep only the workers' clones alive so results_rx/done_rx
+        // disconnect when the last lane exits
+        drop(results_tx);
+        drop(done_tx);
+        drop(ready_tx);
+
+        // handshake: every lane reports its geometry (or its startup
+        // error) before the router accepts frames
+        let mut geom: Option<LaneReady> = None;
+        for _ in 0..b.shards {
+            let ready = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("lane worker died before reporting ready"))??;
+            if let Some(g) = &geom {
+                if g.frame_len != ready.frame_len
+                    || g.clip_frames != ready.clip_frames
+                    || (g.sample_rate - ready.sample_rate).abs() > 1e-6
+                {
+                    // teardown happens in Drop of cmds/workers below
+                    bail!(
+                        "lane backends disagree on clip geometry: {}/{} @ {} Hz \
+                         vs {}/{} @ {} Hz",
+                        g.frame_len,
+                        g.clip_frames,
+                        g.sample_rate,
+                        ready.frame_len,
+                        ready.clip_frames,
+                        ready.sample_rate
+                    );
+                }
+            } else {
+                geom = Some(ready);
+            }
+        }
+        let geom = geom.expect("shards >= 1");
+        Ok(ShardedPipeline {
+            cmds,
+            results_rx,
+            done_rx,
+            workers,
+            results: Vec::new(),
+            classified: 0,
+            sink: b.sink,
+            collect: b.collect,
+            frame_len: geom.frame_len,
+            clip_frames: geom.clip_frames,
+            sample_rate: geom.sample_rate,
+            t0: Instant::now(),
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cmds.len()
+    }
+
+    /// Which lane a stream routes to: Fibonacci multiplicative hash so
+    /// adjacent stream ids spread across lanes.
+    pub fn route(&self, stream: u64) -> usize {
+        let h = stream.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+        (h as usize) % self.cmds.len()
+    }
+
+    /// Move results that arrived from the lanes into the owner-side
+    /// buffer (invoking the sink per result). Returns how many arrived.
+    fn pump_results(&mut self) -> usize {
+        let mut n = 0;
+        while let Ok(r) = self.results_rx.try_recv() {
+            self.take_result(r);
+            n += 1;
+        }
+        n
+    }
+
+    fn take_result(&mut self, r: ClassifyResult) {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.on_result(&r);
+        }
+        if self.collect {
+            self.results.push(r);
+        }
+        self.classified += 1;
+    }
+
+    /// A lane died mid-run: surface the worker's own error (already
+    /// queued on `done_rx`) rather than a generic "worker died", so the
+    /// operator sees the root cause (which backend call failed).
+    /// `lane == usize::MAX` means the dead lane's index is unknown.
+    fn lane_death_cause(&self, lane: usize) -> anyhow::Error {
+        while let Ok((l, report)) = self.done_rx.try_recv() {
+            if let Err(e) = report {
+                return e.context(format!("lane {l} worker failed"));
+            }
+        }
+        if lane == usize::MAX {
+            anyhow!("a lane worker died during drain")
+        } else {
+            anyhow!("lane {lane} worker died; its frames are lost")
+        }
+    }
+}
+
+impl Lane for ShardedPipeline {
+    /// Route one frame to its lane. Blocks briefly if the lane's command
+    /// channel is full (router backpressure); per-stream queue overflow
+    /// inside the lane is dropped and counted there, so this returns
+    /// true unless the lane is gone.
+    fn push(&mut self, task: FrameTask) -> bool {
+        let lane = self.route(task.stream);
+        self.cmds[lane].send(LaneCmd::Task(task)).is_ok()
+    }
+
+    fn service(&mut self) -> Result<usize> {
+        // lanes progress autonomously; the owner's contribution is
+        // draining the results channel
+        self.pump_results();
+        Ok(0)
+    }
+
+    /// Barrier over every lane: each lane finishes everything received
+    /// before the barrier, then acks; afterwards all results are pumped.
+    /// A dead lane (worker exited on a backend error) fails the barrier
+    /// instead of being skipped, so lane failures surface at the next
+    /// drain rather than silently losing that lane's share of the work.
+    fn drain(&mut self) -> Result<()> {
+        let (ack_tx, ack_rx) = mpsc::channel::<()>();
+        for (lane, cmd) in self.cmds.iter().enumerate() {
+            if cmd.send(LaneCmd::Barrier(ack_tx.clone())).is_err() {
+                return Err(self.lane_death_cause(lane));
+            }
+        }
+        drop(ack_tx);
+        for _ in 0..self.cmds.len() {
+            if ack_rx.recv().is_err() {
+                return Err(self.lane_death_cause(usize::MAX));
+            }
+        }
+        self.pump_results();
+        Ok(())
+    }
+
+    fn clips_classified(&self) -> u64 {
+        self.classified
+    }
+
+    fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    fn clip_frames(&self) -> usize {
+        self.clip_frames
+    }
+
+    fn sample_rate(&self) -> f64 {
+        self.sample_rate
+    }
+
+    /// Close the command channels, join every worker, merge the lane
+    /// reports (per-lane breakdown included) and return all results.
+    fn finish(mut self) -> Result<(ServeReport, Vec<ClassifyResult>)> {
+        let n = self.cmds.len();
+        self.cmds.clear(); // disconnect: workers drain and exit
+        // results_rx disconnects once every worker drops its sender
+        while let Ok(r) = self.results_rx.recv() {
+            self.take_result(r);
+        }
+        let mut lane_reports: Vec<(usize, Result<ServeReport>)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let done = self
+                .done_rx
+                .recv()
+                .map_err(|_| anyhow!("lane worker died without reporting"))?;
+            lane_reports.push(done);
+        }
+        for w in self.workers.drain(..) {
+            if w.join().is_err() {
+                bail!("lane worker panicked");
+            }
+        }
+        lane_reports.sort_by_key(|(lane, _)| *lane);
+        let mut reports = Vec::with_capacity(n);
+        for (lane, r) in lane_reports {
+            reports.push(r.with_context(|| format!("lane {lane} failed"))?);
+        }
+        let mut merged = ServeReport::merge(reports);
+        merged.wall_time = self.t0.elapsed();
+        Ok((merged, std::mem::take(&mut self.results)))
+    }
+}
+
+/// Either lane shape behind one concrete type, so callers that pick the
+/// lane count at runtime (`--shards N`) stay branch-free after
+/// construction. Build via [`crate::edge::fleet::fleet_lane`] or match
+/// the variants directly.
+pub enum AnyLane<B: InferenceBackend> {
+    Single(Pipeline<B>),
+    Sharded(ShardedPipeline),
+}
+
+impl<B: InferenceBackend + 'static> Lane for AnyLane<B> {
+    fn push(&mut self, task: FrameTask) -> bool {
+        match self {
+            AnyLane::Single(p) => p.push(task),
+            AnyLane::Sharded(s) => Lane::push(s, task),
+        }
+    }
+
+    fn service(&mut self) -> Result<usize> {
+        match self {
+            AnyLane::Single(p) => p.tick(),
+            AnyLane::Sharded(s) => Lane::service(s),
+        }
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        match self {
+            AnyLane::Single(p) => p.drain(),
+            AnyLane::Sharded(s) => Lane::drain(s),
+        }
+    }
+
+    fn clips_classified(&self) -> u64 {
+        match self {
+            AnyLane::Single(p) => Lane::clips_classified(p),
+            AnyLane::Sharded(s) => Lane::clips_classified(s),
+        }
+    }
+
+    fn frame_len(&self) -> usize {
+        match self {
+            AnyLane::Single(p) => Lane::frame_len(p),
+            AnyLane::Sharded(s) => Lane::frame_len(s),
+        }
+    }
+
+    fn clip_frames(&self) -> usize {
+        match self {
+            AnyLane::Single(p) => Lane::clip_frames(p),
+            AnyLane::Sharded(s) => Lane::clip_frames(s),
+        }
+    }
+
+    fn sample_rate(&self) -> f64 {
+        match self {
+            AnyLane::Single(p) => Lane::sample_rate(p),
+            AnyLane::Sharded(s) => Lane::sample_rate(s),
+        }
+    }
+
+    fn finish(self) -> Result<(ServeReport, Vec<ClassifyResult>)> {
+        match self {
+            AnyLane::Single(p) => Ok(p.finish()),
+            AnyLane::Sharded(s) => Lane::finish(s),
+        }
+    }
+}
+
+/// A lane worker: build the backend, run an owned [`Pipeline`], pump
+/// commands until the router hangs up, then hand back the lane report.
+/// Results stream out through the pipeline's sink as they are produced.
+#[allow(clippy::too_many_arguments)]
+fn run_worker<B, F>(
+    lane: usize,
+    factory: &F,
+    model: Arc<TrainedModel>,
+    policy: BatcherPolicy,
+    queue_capacity: usize,
+    cmd_rx: mpsc::Receiver<LaneCmd>,
+    results_tx: mpsc::Sender<ClassifyResult>,
+    ready_tx: mpsc::Sender<Result<LaneReady>>,
+) -> Result<ServeReport>
+where
+    B: InferenceBackend + 'static,
+    F: Fn(usize) -> Result<B>,
+{
+    let backend = match factory(lane) {
+        Ok(b) => b,
+        Err(e) => {
+            let msg = format!("lane {lane} backend factory failed: {e:#}");
+            let _ = ready_tx.send(Err(anyhow!("{msg}")));
+            bail!("{msg}");
+        }
+    };
+    let mut pipe = PipelineBuilder::new(backend, model)
+        .policy(policy)
+        .queue_capacity(queue_capacity)
+        .sink(Box::new(move |r: &ClassifyResult| {
+            let _ = results_tx.send(r.clone());
+        }))
+        .collect_results(false)
+        .build();
+    let _ = ready_tx.send(Ok(LaneReady {
+        frame_len: Lane::frame_len(&pipe),
+        clip_frames: Lane::clip_frames(&pipe),
+        sample_rate: Lane::sample_rate(&pipe),
+    }));
+    drop(ready_tx);
+
+    let handle = |pipe: &mut Pipeline<B>, cmd: LaneCmd| -> Result<()> {
+        match cmd {
+            LaneCmd::Task(t) => {
+                pipe.push(t);
+                Ok(())
+            }
+            LaneCmd::Barrier(ack) => {
+                pipe.drain()?;
+                let _ = ack.send(());
+                Ok(())
+            }
+        }
+    };
+    loop {
+        // soak up everything queued without blocking, then make progress
+        loop {
+            match cmd_rx.try_recv() {
+                Ok(cmd) => handle(&mut pipe, cmd)?,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    pipe.drain()?;
+                    let (report, _) = pipe.finish();
+                    return Ok(report);
+                }
+            }
+        }
+        if pipe.tick()? == 0 && pipe.pending() == 0 {
+            // idle: block until the router has something for us
+            match cmd_rx.recv() {
+                Ok(cmd) => handle(&mut pipe, cmd)?,
+                Err(_) => {
+                    pipe.drain()?;
+                    let (report, _) = pipe.finish();
+                    return Ok(report);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Pipeline;
+    use crate::dsp::multirate::BandPlan;
+    use crate::runtime::backend::CpuEngine;
+    use crate::util::prng::Pcg32;
+
+    fn engine() -> CpuEngine {
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = 2;
+        CpuEngine::with_clip(&plan, 1.0, 64, 2)
+    }
+
+    fn model(heads: usize, p: usize) -> TrainedModel {
+        TrainedModel::synthetic(5, heads, p, 0.0, 1.0)
+    }
+
+    /// Deterministic workload: `n_streams` streams x `clips` clips of
+    /// 2-frame audio, same for every invocation.
+    fn workload(n_streams: u64, clips: u64) -> Vec<FrameTask> {
+        let mut out = Vec::new();
+        for s in 0..n_streams {
+            let mut rng = Pcg32::substream(31, s);
+            for clip in 0..clips {
+                for f in 0..2usize {
+                    out.push(FrameTask {
+                        stream: s,
+                        clip_seq: clip,
+                        frame_idx: f,
+                        data: (0..64).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                        label: (s % 3) as usize,
+                        t_gen: Instant::now(),
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sharded_matches_single_lane() {
+        let m = model(3, engine().n_filters());
+        // single lane, synchronous
+        let mut single = PipelineBuilder::new(engine(), m.clone())
+            .queue_capacity(64)
+            .build();
+        for t in workload(6, 2) {
+            assert!(Pipeline::push(&mut single, t));
+        }
+        Pipeline::drain(&mut single).unwrap();
+        let (single_report, mut single_results) = Pipeline::finish(single);
+
+        // three lanes, threaded
+        let mut sharded = ShardedPipeline::builder(3, |_| Ok(engine()), m)
+            .queue_capacity(64)
+            .build()
+            .unwrap();
+        for t in workload(6, 2) {
+            assert!(Lane::push(&mut sharded, t));
+        }
+        Lane::drain(&mut sharded).unwrap();
+        let (merged, mut sharded_results) = Lane::finish(sharded).unwrap();
+
+        // same clips classified, bit-identical outputs
+        single_results.sort_by_key(|r| (r.stream, r.clip_seq));
+        sharded_results.sort_by_key(|r| (r.stream, r.clip_seq));
+        assert_eq!(single_results.len(), 12);
+        assert_eq!(single_results.len(), sharded_results.len());
+        for (a, b) in single_results.iter().zip(&sharded_results) {
+            assert_eq!((a.stream, a.clip_seq), (b.stream, b.clip_seq));
+            assert_eq!(a.predicted, b.predicted);
+            assert_eq!(a.p, b.p, "stream {} clip {}", a.stream, a.clip_seq);
+        }
+        // reports merge to the same totals, with a per-lane breakdown
+        assert_eq!(merged.clips_classified, single_report.clips_classified);
+        assert_eq!(merged.clips_correct, single_report.clips_correct);
+        assert_eq!(
+            merged.batch.frames_processed,
+            single_report.batch.frames_processed
+        );
+        assert_eq!(merged.per_lane.len(), 3);
+        assert_eq!(
+            merged.per_lane.iter().map(|l| l.frames).sum::<u64>(),
+            merged.batch.frames_processed
+        );
+        assert!(merged.render().contains("lanes:"));
+    }
+
+    #[test]
+    fn barrier_makes_results_visible() {
+        let m = model(3, engine().n_filters());
+        let mut sharded = ShardedPipeline::builder(2, |_| Ok(engine()), m)
+            .queue_capacity(16)
+            .build()
+            .unwrap();
+        for t in workload(4, 1) {
+            Lane::push(&mut sharded, t);
+        }
+        assert_eq!(Lane::clips_classified(&sharded), 0); // nothing pumped yet
+        Lane::drain(&mut sharded).unwrap();
+        assert_eq!(Lane::clips_classified(&sharded), 4);
+        let (report, results) = Lane::finish(sharded).unwrap();
+        assert_eq!(results.len(), 4);
+        assert_eq!(report.clips_classified, 4);
+    }
+
+    #[test]
+    fn factory_failure_surfaces_at_build() {
+        let m = model(3, engine().n_filters());
+        let err = ShardedPipeline::builder(
+            2,
+            |lane| {
+                if lane == 1 {
+                    anyhow::bail!("no backend for you")
+                } else {
+                    Ok(engine())
+                }
+            },
+            m,
+        )
+        .build();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn routing_is_stable_and_covers_lanes() {
+        let m = model(3, engine().n_filters());
+        let sharded = ShardedPipeline::builder(4, |_| Ok(engine()), m)
+            .build()
+            .unwrap();
+        let mut seen = [false; 4];
+        for s in 0..64u64 {
+            let l = sharded.route(s);
+            assert_eq!(l, sharded.route(s)); // stable
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "64 streams must hit all 4 lanes");
+        Lane::finish(sharded).unwrap();
+    }
+}

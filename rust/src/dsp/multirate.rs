@@ -332,12 +332,7 @@ mod tests {
                         / (ys.len() - skip).max(1) as f64
                 })
                 .collect();
-            let best = energy
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
+            let best = crate::util::stats::argmax(&energy);
             let ratio = (bands[best].center_hz / f).log2().abs();
             assert!(
                 ratio <= 0.55,

@@ -9,7 +9,9 @@ use super::uplink::{Uplink, UplinkConfig, UplinkStats};
 use super::vad::GateConfig;
 use crate::config::EdgeConfig;
 use crate::coordinator::batcher::BatcherPolicy;
-use crate::coordinator::dispatch::Dispatcher;
+use crate::coordinator::dispatch::{Lane, PipelineBuilder};
+use crate::coordinator::metrics::{render_lanes, LaneStats};
+use crate::coordinator::shard::{AnyLane, ShardedPipeline};
 use crate::coordinator::{ClassifyResult, FrameTask};
 use crate::datasets::esc10;
 use crate::runtime::backend::InferenceBackend;
@@ -42,6 +44,8 @@ pub struct FleetConfig {
     pub policy: BatcherPolicy,
     pub queue_capacity: usize,
     pub sample_rate: f64,
+    /// compute lanes; 1 = single synchronous pipeline, >1 = sharded
+    pub shards: usize,
 }
 
 impl FleetConfig {
@@ -56,6 +60,7 @@ impl FleetConfig {
         seed: u64,
         frame_len: usize,
         clip_frames: usize,
+        sample_rate: f64,
     ) -> FleetConfig {
         // 2048-sample frames -> shift 14 (~16k samples); 256 -> shift 11
         let slow_shift = (frame_len * 8).next_power_of_two().trailing_zeros().min(20);
@@ -68,7 +73,6 @@ impl FleetConfig {
             release_shift: margin_shift + 1,
             ..GateConfig::default()
         };
-        let sample_rate = 16_000.0;
         let ticks = ((e.seconds_per_stream * sample_rate / frame_len as f64).ceil() as u64).max(1);
         // a clip-upload message must fit the bucket or it is permanently
         // unsendable; grow the burst to hold at least one
@@ -101,6 +105,7 @@ impl FleetConfig {
             policy: BatcherPolicy::default(),
             queue_capacity: 32,
             sample_rate,
+            shards: e.shards,
         }
     }
 }
@@ -194,6 +199,10 @@ pub struct FleetReport {
     pub uplink: UplinkStats,
     pub bytes_saved_ratio: f64,
     pub wall: Duration,
+    /// per-lane breakdown when the fleet classified through a
+    /// [`ShardedPipeline`](crate::coordinator::ShardedPipeline); empty
+    /// for a single-lane run
+    pub per_lane: Vec<LaneStats>,
 }
 
 impl FleetReport {
@@ -233,7 +242,7 @@ impl FleetReport {
     }
 
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "fleet: {} streams x {} frames | captured audio {:.1}s \
              (duty {:.0}%) | wall {:.2}s ({:.1}x realtime)\n\
              gate: {:.1}% of awake frames held on the edge | onsets={} \
@@ -270,7 +279,9 @@ impl FleetReport {
             self.uplink.msgs_dropped,
             self.uplink.raw_bytes_captured,
             self.bytes_saved_ratio,
-        )
+        );
+        s.push_str(&render_lanes(&self.per_lane));
+        s
     }
 
     /// Key/value table for the CSV dump.
@@ -343,19 +354,58 @@ fn plan_events(cfg: &FleetConfig, rng: &mut Pcg32, stream: u64) -> Vec<PlannedEv
     out
 }
 
-/// Drive the whole fleet through the shared dispatcher in virtual time.
-pub fn run_fleet<B: InferenceBackend>(
-    backend: &mut B,
-    model: &TrainedModel,
+/// Build the compute lane a [`FleetConfig`] asks for: a single
+/// synchronous [`Pipeline`](crate::coordinator::Pipeline) when
+/// `cfg.shards == 1` (the factory runs once on the caller's thread), a
+/// [`ShardedPipeline`] otherwise (the factory runs once per worker
+/// thread). Shared by the CLI and the wildlife_monitor example.
+pub fn fleet_lane<B, F>(
+    cfg: &FleetConfig,
+    model: TrainedModel,
+    factory: F,
+) -> Result<AnyLane<B>>
+where
+    B: InferenceBackend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    if cfg.shards > 1 {
+        Ok(AnyLane::Sharded(
+            ShardedPipeline::builder(cfg.shards, factory, model)
+                .policy(cfg.policy)
+                .queue_capacity(cfg.queue_capacity)
+                .build()?,
+        ))
+    } else {
+        Ok(AnyLane::Single(
+            PipelineBuilder::new(factory(0)?, model)
+                .policy(cfg.policy)
+                .queue_capacity(cfg.queue_capacity)
+                .build(),
+        ))
+    }
+}
+
+/// Drive the whole fleet through an owned compute lane in virtual time.
+/// `lane` is any [`Lane`] — typically [`fleet_lane`]'s result, or a
+/// hand-built [`Pipeline`](crate::coordinator::Pipeline) /
+/// [`ShardedPipeline`] with the fleet's `policy` / `queue_capacity`.
+pub fn run_fleet<L: Lane>(
+    mut lane: L,
     cfg: &FleetConfig,
 ) -> Result<(FleetReport, Vec<ClassifyResult>)> {
     ensure!(
-        backend.frame_len() == cfg.frame_len && backend.clip_frames() == cfg.clip_frames,
-        "backend clip geometry ({}/{}) does not match the fleet config ({}/{})",
-        backend.frame_len(),
-        backend.clip_frames(),
+        lane.frame_len() == cfg.frame_len && lane.clip_frames() == cfg.clip_frames,
+        "lane clip geometry ({}/{}) does not match the fleet config ({}/{})",
+        lane.frame_len(),
+        lane.clip_frames(),
         cfg.frame_len,
         cfg.clip_frames
+    );
+    ensure!(
+        (lane.sample_rate() - cfg.sample_rate).abs() < 1e-6,
+        "lane sample rate ({} Hz) does not match the fleet config ({} Hz)",
+        lane.sample_rate(),
+        cfg.sample_rate
     );
     let period = (cfg.duty_awake + cfg.duty_sleep).max(1);
     let mut ground_truth: Vec<GroundTruthEvent> = Vec::new();
@@ -391,7 +441,6 @@ pub fn run_fleet<B: InferenceBackend>(
 
     let frame_dur = cfg.frame_len as f64 / cfg.sample_rate;
     let clip_samples = cfg.frame_len * cfg.clip_frames;
-    let mut dispatcher = Dispatcher::new(backend, cfg.queue_capacity);
     let mut uplink = Uplink::new(cfg.uplink);
     // (stream, clip_seq) -> onset tick, for ground-truth matching
     let mut onsets: Vec<(u64, u64, u64)> = Vec::new();
@@ -416,17 +465,18 @@ pub fn run_fleet<B: InferenceBackend>(
                 if t.frame_idx == 0 {
                     onsets.push((t.stream, t.clip_seq, tick));
                 }
-                dispatcher.push(t);
+                lane.push(t);
             }
         }
         // classify everything that became ready within this virtual tick
-        let before = dispatcher.results.len();
-        dispatcher.drain(backend, model, &cfg.policy)?;
-        for _ in before..dispatcher.results.len() {
+        let before = lane.clips_classified();
+        lane.drain()?;
+        for _ in before..lane.clips_classified() {
             uplink.send_event(clip_samples);
         }
     }
     let wall = t0.elapsed();
+    let (serve_report, results) = lane.finish()?;
 
     // ---- ground-truth matching
     let pre = cfg.pre_trigger_frames as u64;
@@ -446,7 +496,7 @@ pub fn run_fleet<B: InferenceBackend>(
         onset_match.insert((stream, clip_seq), hit);
     }
     let (mut matched_total, mut matched_correct) = (0u64, 0u64);
-    for r in &dispatcher.results {
+    for r in &results {
         if let Some(Some(gt)) = onset_match.get(&(r.stream, r.clip_seq)) {
             matched_total += 1;
             if r.predicted == ground_truth[*gt].class {
@@ -471,7 +521,6 @@ pub fn run_fleet<B: InferenceBackend>(
         gate_resets += s.session.stats.gate_resets;
     }
 
-    let (serve_report, results) = dispatcher.into_parts();
     let report = FleetReport {
         streams: cfg.n_streams,
         ticks: cfg.ticks,
@@ -492,6 +541,7 @@ pub fn run_fleet<B: InferenceBackend>(
         uplink: uplink.stats,
         bytes_saved_ratio: uplink.bytes_saved_ratio(),
         wall,
+        per_lane: serve_report.per_lane,
     };
     Ok((report, results))
 }
@@ -500,7 +550,6 @@ pub fn run_fleet<B: InferenceBackend>(
 mod tests {
     use super::*;
     use crate::dsp::multirate::BandPlan;
-    use crate::mp::machine::{Params, Standardizer};
     use crate::runtime::backend::CpuEngine;
 
     fn tiny_backend() -> CpuEngine {
@@ -509,23 +558,16 @@ mod tests {
         CpuEngine::with_clip(&plan, 1.0, 256, 4)
     }
 
+    /// Single-lane pipeline over the tiny backend, fleet-configured.
+    fn tiny_lane(model: &TrainedModel, cfg: &FleetConfig) -> impl Lane {
+        PipelineBuilder::new(tiny_backend(), model.clone())
+            .policy(cfg.policy)
+            .queue_capacity(cfg.queue_capacity)
+            .build()
+    }
+
     fn dummy_model(p: usize) -> TrainedModel {
-        let mut rng = Pcg32::new(9);
-        TrainedModel {
-            classes: (0..10).map(|c| format!("c{c}")).collect(),
-            params: Params {
-                wp: (0..10).map(|_| rng.normal_vec(p)).collect(),
-                wm: (0..10).map(|_| rng.normal_vec(p)).collect(),
-                bp: vec![0.0; 10],
-                bm: vec![0.0; 10],
-            },
-            std: Standardizer {
-                mu: vec![5.0; p],
-                sigma: vec![5.0; p],
-            },
-            gamma_f: 1.0,
-            gamma_1: 4.0,
-        }
+        TrainedModel::synthetic(9, 10, p, 5.0, 5.0)
     }
 
     fn tiny_config() -> FleetConfig {
@@ -547,15 +589,15 @@ mod tests {
             policy: BatcherPolicy::default(),
             queue_capacity: 64,
             sample_rate: 16_000.0,
+            shards: 1,
         }
     }
 
     #[test]
     fn fleet_detects_embedded_events_and_saves_bandwidth() {
-        let mut eng = tiny_backend();
-        let model = dummy_model(eng.n_filters());
+        let model = dummy_model(tiny_backend().n_filters());
         let cfg = tiny_config();
-        let (report, results) = run_fleet(&mut eng, &model, &cfg).unwrap();
+        let (report, results) = run_fleet(tiny_lane(&model, &cfg), &cfg).unwrap();
         assert_eq!(report.events_total, 3, "{}", report.render());
         assert!(report.events_recalled >= 2, "{}", report.render());
         assert!(report.false_triggers <= 2, "{}", report.render());
@@ -570,13 +612,42 @@ mod tests {
     }
 
     #[test]
+    fn sharded_fleet_matches_single_lane() {
+        let model = dummy_model(tiny_backend().n_filters());
+        let cfg = tiny_config();
+        let (single_report, mut rs) = run_fleet(tiny_lane(&model, &cfg), &cfg).unwrap();
+        let mut cfg2 = tiny_config();
+        cfg2.shards = 2;
+        let sharded = fleet_lane(&cfg2, model, |_| Ok(tiny_backend())).unwrap();
+        let (merged_report, mut rm) = run_fleet(sharded, &cfg2).unwrap();
+        // same clips classified with the same outputs, reports merge to
+        // the same totals, and the lane breakdown is present
+        rs.sort_by_key(|r| (r.stream, r.clip_seq));
+        rm.sort_by_key(|r| (r.stream, r.clip_seq));
+        assert_eq!(rs.len(), rm.len());
+        for (a, b) in rs.iter().zip(&rm) {
+            assert_eq!((a.stream, a.clip_seq), (b.stream, b.clip_seq));
+            assert_eq!(a.predicted, b.predicted);
+            assert_eq!(a.p, b.p);
+        }
+        assert_eq!(
+            merged_report.clips_classified,
+            single_report.clips_classified
+        );
+        assert_eq!(merged_report.trigger_onsets, single_report.trigger_onsets);
+        assert_eq!(merged_report.events_recalled, single_report.events_recalled);
+        assert_eq!(merged_report.per_lane.len(), 2);
+        assert!(single_report.per_lane.is_empty());
+        assert!(merged_report.render().contains("lanes:"));
+    }
+
+    #[test]
     fn duty_cycling_reduces_captured_audio() {
-        let mut eng = tiny_backend();
-        let model = dummy_model(eng.n_filters());
+        let model = dummy_model(tiny_backend().n_filters());
         let mut cfg = tiny_config();
         cfg.duty_awake = 3;
         cfg.duty_sleep = 1;
-        let (report, _) = run_fleet(&mut eng, &model, &cfg).unwrap();
+        let (report, _) = run_fleet(tiny_lane(&model, &cfg), &cfg).unwrap();
         assert!(
             (report.duty_factor - 0.75).abs() < 0.05,
             "duty factor {}",

@@ -18,11 +18,13 @@
 //! * [`uplink`] — token-bucket bandwidth budget modelling the remote
 //!   link, with the bytes-saved-vs-raw-streaming accounting,
 //! * [`fleet`] — the fleet simulator: hundreds of duty-cycled streams
-//!   with ground-truth embedded events, driven through the coordinator's
-//!   [`Dispatcher`] and scored for recall / false triggers / bandwidth.
+//!   with ground-truth embedded events, driven through an owned
+//!   coordinator [`Pipeline`] (or a multi-lane [`ShardedPipeline`]) and
+//!   scored for recall / false triggers / bandwidth.
 //!
 //! [`FrameTask`]: crate::coordinator::FrameTask
-//! [`Dispatcher`]: crate::coordinator::dispatch::Dispatcher
+//! [`Pipeline`]: crate::coordinator::Pipeline
+//! [`ShardedPipeline`]: crate::coordinator::ShardedPipeline
 
 pub mod fleet;
 pub mod ring;

@@ -58,14 +58,7 @@ mod tests {
     use super::*;
     use crate::datasets::esc10;
     use crate::dsp::chirp;
-
-    fn argmax(v: &[f32]) -> usize {
-        v.iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0
-    }
+    use crate::util::stats::argmax;
 
     /// frequency distance in octaves between two bands of the plan
     fn band_dist(plan: &BandPlan, a: usize, b: usize) -> f64 {

@@ -6,11 +6,13 @@
 //!   figures  --fig4|--fig6|--fig8|--all [--scale S]
 //!   tables   --table1|--table2|--table3|--table4|--all [--scale S]
 //!   train    --dataset esc10|fsdd [--scale S] [--out model.json]
-//!   serve    --streams N --clips K [--realtime] [--model model.json]
-//!   edge-fleet  --streams N [--seconds S] [--events K] [--duty-awake A]
-//!               [--duty-sleep B] [--uplink-bps N] [--uplink-burst N]
-//!               [--upload-clips] [--ambient X] [--event-gain X]
-//!               [--gate-margin SHIFT] [--hangover F] [--pre-trigger F]
+//!   serve    --streams N --clips K [--shards N] [--realtime]
+//!            [--model model.json]
+//!   edge-fleet  --streams N [--shards N] [--seconds S] [--events K]
+//!               [--duty-awake A] [--duty-sleep B] [--uplink-bps N]
+//!               [--uplink-burst N] [--upload-clips] [--ambient X]
+//!               [--event-gain X] [--gate-margin SHIFT] [--hangover F]
+//!               [--pre-trigger F]
 //!   edge-roc                          gate ROC + bytes-saved tables
 //!   fpga-sim
 //!
@@ -19,9 +21,9 @@
 
 use anyhow::{bail, Context, Result};
 use infilter::config::{AppConfig, EdgeConfig};
-use infilter::coordinator::server::{serve, ServeConfig};
+use infilter::coordinator::server::{serve, serve_sharded, ServeConfig};
 use infilter::datasets::{esc10, fsdd, Dataset};
-use infilter::edge::fleet::{run_fleet, FleetConfig};
+use infilter::edge::fleet::{fleet_lane, run_fleet, FleetConfig};
 use infilter::edge::AMBIENT_LABEL;
 use infilter::experiments::{classify, edge as edge_tables, figures, tables12};
 use infilter::mp::machine::Standardizer;
@@ -45,13 +47,17 @@ USAGE: infilter <subcommand> [options]
   figures   --all | --fig4 --fig6 --fig8   [--scale S]
   tables    --all | --table1 --table2 --table3 --table4  [--scale S]
   train     --dataset esc10|fsdd [--scale S] [--out results/model.json]
-  serve     [--streams N] [--clips K] [--realtime] [--model PATH]
+  serve     [--streams N] [--clips K] [--shards N] [--realtime]
+            [--model PATH]
   edge-fleet  continuous-ingest fleet simulation (no artifacts needed)
-            [--streams N] [--seconds S] [--events K] [--duty-awake A]
-            [--duty-sleep B] [--uplink-bps N] [--uplink-burst N]
-            [--upload-clips] [--ambient X] [--event-gain X]
-            [--gate-margin SHIFT] [--hangover F] [--pre-trigger F]
-            [--model PATH] [--scale S] [--epochs E]
+            [--streams N] [--shards N] [--seconds S] [--events K]
+            [--duty-awake A] [--duty-sleep B] [--uplink-bps N]
+            [--uplink-burst N] [--upload-clips] [--ambient X]
+            [--event-gain X] [--gate-margin SHIFT] [--hangover F]
+            [--pre-trigger F] [--model PATH] [--scale S] [--epochs E]
+
+  --shards N runs N compute lanes (one backend each, stream-hash
+  routed) and prints a merged report with per-lane frame counts.
   edge-roc  gate ROC + uplink bytes-saved tables
   fpga-sim  cycle-level Fig. 7 schedule simulation
 
@@ -339,16 +345,27 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
         clips_per_stream: args.get_usize("clips", 4),
         seed: cfg.seed,
         realtime: args.flag("realtime"),
+        shards: args.get_usize("shards", 1).max(1),
         ..Default::default()
     };
     scfg.policy.wide_threshold = args.get_usize("wide-threshold", scfg.policy.wide_threshold);
     log_info!(
-        "serving {} streams x {} clips (realtime={})",
+        "serving {} streams x {} clips (realtime={}, shards={})",
         scfg.n_streams,
         scfg.clips_per_stream,
-        scfg.realtime
+        scfg.realtime,
+        scfg.shards
     );
-    let (report, _results) = serve(&mut eng, &model, &scfg)?;
+    let (report, _results) = if scfg.shards > 1 {
+        // each lane opens its own engine on its own worker thread (the
+        // PJRT executables are not Send, so they cannot be moved there)
+        drop(eng);
+        let dir = cfg.artifacts_dir.clone();
+        let gamma_f = cfg.gamma_f;
+        serve_sharded(move |_| ModelEngine::open(&dir, gamma_f), &model, &scfg)?
+    } else {
+        serve(&mut eng, &model, &scfg)?
+    };
     println!("{}", report.render());
     Ok(())
 }
@@ -388,22 +405,30 @@ fn edge_model(cfg: &AppConfig, args: &Args, eng: &CpuEngine) -> Result<TrainedMo
 
 fn cmd_edge_fleet(cfg: &AppConfig, args: &Args) -> Result<()> {
     let plan = infilter::dsp::multirate::BandPlan::paper_default();
-    let mut eng = CpuEngine::new(&plan, cfg.gamma_f);
+    let eng = CpuEngine::new(&plan, cfg.gamma_f);
     let model = edge_model(cfg, args, &eng)?;
     let edge = EdgeConfig::from_args(args);
-    let fcfg = FleetConfig::from_edge(&edge, cfg.seed, eng.frame_len(), eng.clip_frames());
+    let fcfg = FleetConfig::from_edge(
+        &edge,
+        cfg.seed,
+        eng.frame_len(),
+        eng.clip_frames(),
+        eng.sample_rate(),
+    );
     log_info!(
         "edge fleet: {} streams x {} frames ({:.1}s audio each), {} events/stream, \
-         duty {}/{} awake/sleep, uplink {:.0} B/s",
+         duty {}/{} awake/sleep, uplink {:.0} B/s, {} compute lane(s)",
         fcfg.n_streams,
         fcfg.ticks,
         fcfg.ticks as f64 * fcfg.frame_len as f64 / fcfg.sample_rate,
         fcfg.events_per_stream,
         fcfg.duty_awake,
         fcfg.duty_sleep,
-        fcfg.uplink.bytes_per_sec
+        fcfg.uplink.bytes_per_sec,
+        fcfg.shards
     );
-    let (report, results) = run_fleet(&mut eng, &model, &fcfg)?;
+    let lane = fleet_lane(&fcfg, model.clone(), move |_| Ok(eng.clone()))?;
+    let (report, results) = run_fleet(lane, &fcfg)?;
     println!("{}", report.render());
     write_csv(cfg, "edge_fleet.csv", &report.table())?;
     println!("\nuplink payload sample (stream, clip, detected class):");
@@ -411,16 +436,15 @@ fn cmd_edge_fleet(cfg: &AppConfig, args: &Args) -> Result<()> {
         let truth = if r.label == AMBIENT_LABEL {
             "ambient".to_string()
         } else {
-            // a loaded model may not cover every synthetic event class
-            model
-                .classes
-                .get(r.label)
-                .cloned()
-                .unwrap_or_else(|| format!("class{}", r.label))
+            model.class_name(r.label)
         };
         println!(
             "  sensor{:03} clip{} -> {} (truth: {}) p={:+.2}",
-            r.stream, r.clip_seq, model.classes[r.predicted], truth, r.p[r.predicted]
+            r.stream,
+            r.clip_seq,
+            model.class_name(r.predicted),
+            truth,
+            r.p[r.predicted]
         );
     }
     Ok(())

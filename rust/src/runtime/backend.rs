@@ -20,6 +20,10 @@ pub trait InferenceBackend {
     fn frame_len(&self) -> usize;
     fn clip_frames(&self) -> usize;
     fn n_filters(&self) -> usize;
+    /// Audio sample rate the filter bank was designed for, in Hz. The
+    /// serving path derives frame pacing and audio-seconds accounting
+    /// from this instead of assuming 16 kHz.
+    fn sample_rate(&self) -> f64;
     fn zero_state(&self) -> StreamState;
 
     /// One MP frame step: updates `state` in place, returns the frame's
@@ -45,6 +49,54 @@ pub trait InferenceBackend {
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
 }
 
+/// Forwarding impl so callers can lend a backend to an owned
+/// [`Pipeline`](crate::coordinator::Pipeline) without giving it up —
+/// `PipelineBuilder::new(&mut engine, ...)` works wherever the engine
+/// must outlive one serve run (benches, repeated simulations).
+impl<B: InferenceBackend> InferenceBackend for &mut B {
+    fn frame_len(&self) -> usize {
+        (**self).frame_len()
+    }
+
+    fn clip_frames(&self) -> usize {
+        (**self).clip_frames()
+    }
+
+    fn n_filters(&self) -> usize {
+        (**self).n_filters()
+    }
+
+    fn sample_rate(&self) -> f64 {
+        (**self).sample_rate()
+    }
+
+    fn zero_state(&self) -> StreamState {
+        (**self).zero_state()
+    }
+
+    fn mp_frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Result<Vec<f32>> {
+        (**self).mp_frame_features(state, frame)
+    }
+
+    fn mp_frame_features_b8(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        (**self).mp_frame_features_b8(states, frames)
+    }
+
+    fn inference(
+        &mut self,
+        params: &Params,
+        std: &Standardizer,
+        phi: &[f32],
+        gamma_1: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        (**self).inference(params, std, phi, gamma_1)
+    }
+}
+
 impl InferenceBackend for ModelEngine {
     fn frame_len(&self) -> usize {
         ModelEngine::frame_len(self)
@@ -56,6 +108,10 @@ impl InferenceBackend for ModelEngine {
 
     fn n_filters(&self) -> usize {
         ModelEngine::n_filters(self)
+    }
+
+    fn sample_rate(&self) -> f64 {
+        self.rt.constants.sample_rate as f64
     }
 
     fn zero_state(&self) -> StreamState {
@@ -271,6 +327,10 @@ impl InferenceBackend for CpuEngine {
 
     fn clip_frames(&self) -> usize {
         self.clip_frames
+    }
+
+    fn sample_rate(&self) -> f64 {
+        self.plan.sample_rate
     }
 
     fn n_filters(&self) -> usize {

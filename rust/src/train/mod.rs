@@ -25,6 +25,40 @@ pub struct TrainedModel {
 }
 
 impl TrainedModel {
+    /// Human-readable class name with a generic fallback: serving paths
+    /// may see label/prediction indices beyond the trained head count
+    /// (e.g. a loaded model that does not cover every synthetic event
+    /// class), and must not panic rendering them.
+    pub fn class_name(&self, idx: usize) -> String {
+        self.classes
+            .get(idx)
+            .cloned()
+            .unwrap_or_else(|| format!("class{idx}"))
+    }
+
+    /// Seeded random model of the right shape — not trained on
+    /// anything. The shared fixture for coordinator/edge tests and the
+    /// dispatch benches, which exercise serving mechanics (batching,
+    /// sharding, routing) where only the shapes and determinism matter.
+    pub fn synthetic(seed: u64, heads: usize, p: usize, mu: f32, sigma: f32) -> TrainedModel {
+        let mut rng = Pcg32::new(seed);
+        TrainedModel {
+            classes: (0..heads).map(|c| format!("c{c}")).collect(),
+            params: Params {
+                wp: (0..heads).map(|_| rng.normal_vec(p)).collect(),
+                wm: (0..heads).map(|_| rng.normal_vec(p)).collect(),
+                bp: vec![0.0; heads],
+                bm: vec![0.0; heads],
+            },
+            std: Standardizer {
+                mu: vec![mu; p],
+                sigma: vec![sigma; p],
+            },
+            gamma_f: 1.0,
+            gamma_1: 4.0,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let rows = |m: &Vec<Vec<f32>>| {
             Json::Arr(m.iter().map(|r| Json::from_f32s(r)).collect())
@@ -327,15 +361,7 @@ pub fn evaluate(
     let correct = margins
         .iter()
         .zip(labels)
-        .filter(|(m, &l)| {
-            let pred = m
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            pred == l
-        })
+        .filter(|(m, &l)| crate::util::stats::argmax(m) == l)
         .count();
     Ok(correct as f64 / labels.len().max(1) as f64)
 }

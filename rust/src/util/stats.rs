@@ -47,6 +47,37 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// A float type with IEEE-754 `totalOrder` comparison. Sealed to the
+/// two primitive float widths; exists so [`argmax`] has one generic
+/// implementation instead of per-width copies.
+pub trait TotalOrd: Copy {
+    fn total_order(&self, other: &Self) -> std::cmp::Ordering;
+}
+
+impl TotalOrd for f32 {
+    fn total_order(&self, other: &Self) -> std::cmp::Ordering {
+        self.total_cmp(other)
+    }
+}
+
+impl TotalOrd for f64 {
+    fn total_order(&self, other: &Self) -> std::cmp::Ordering {
+        self.total_cmp(other)
+    }
+}
+
+/// Index of the largest element under the IEEE total order (never
+/// panics: NaN sorts above +inf instead of poisoning a `partial_cmp`
+/// unwrap). Ties resolve to the last maximal index, matching the
+/// `Iterator::max_by` convention the call sites previously used.
+/// Returns 0 for an empty slice.
+pub fn argmax<T: TotalOrd>(xs: &[T]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_order(b.1))
+        .map_or(0, |(i, _)| i)
+}
+
 /// Simple fixed-bucket latency histogram (microseconds), log-spaced.
 #[derive(Clone, Debug)]
 pub struct LatencyHist {
@@ -159,6 +190,19 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
         assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
         assert!((percentile(&xs, 90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn argmax_total_order() {
+        assert_eq!(argmax(&[1.0f32, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[1.0f64, 5.0, 5.0]), 2); // last max wins
+        assert_eq!(argmax::<f32>(&[]), 0);
+        // NaN-safe means no panic; under the IEEE total order a
+        // (positive) NaN sorts above +inf, so a NaN lane *wins* —
+        // callers that must treat NaN as invalid should filter first
+        let with_nan = [0.5f32, f32::NAN, 2.0];
+        assert_eq!(argmax(&with_nan), 1);
+        assert_eq!(argmax(&[3.0f32, 1.0, 2.0]), 0);
     }
 
     #[test]
