@@ -8,7 +8,7 @@
 //! trades against.
 
 use infilter::bench_util::Bench;
-use infilter::coordinator::{FrameTask, Lane, PipelineBuilder, ShardedPipeline};
+use infilter::coordinator::{BatcherPolicy, FrameTask, Lane, PipelineBuilder, ShardedPipeline};
 use infilter::dsp::multirate::BandPlan;
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::train::TrainedModel;
@@ -79,6 +79,31 @@ fn main() {
                 lane.drain().unwrap();
                 let (report, _) = lane.finish();
                 assert_eq!(report.clips_classified, total_clips);
+                report.clips_classified
+            },
+        );
+    }
+
+    // single lane again, wide-always: the same workload through the
+    // true-b8 interleaved kernel (16 streams ready -> full lanes); the
+    // narrow-vs-wide ratio here is the CPU batching crossover
+    {
+        let (eng, m, tasks) = (eng.clone(), m.clone(), tasks.clone());
+        b.run_with_throughput(
+            "dispatch/pipeline_1lane_wide8",
+            Some((total_clips as f64, "clips")),
+            || {
+                let mut lane = PipelineBuilder::new(eng.clone(), m.clone())
+                    .policy(BatcherPolicy { wide_threshold: 1 })
+                    .queue_capacity(64)
+                    .build();
+                for t in tasks.clone() {
+                    lane.push(t);
+                }
+                lane.drain().unwrap();
+                let (report, _) = lane.finish();
+                assert_eq!(report.clips_classified, total_clips);
+                assert!(report.batch.wide_dispatches > 0);
                 report.clips_classified
             },
         );

@@ -54,7 +54,7 @@ fn main() {
 
     // the CPU backend's MP frame step (what a triggered frame costs)
     let plan = BandPlan::paper_default();
-    let eng = CpuEngine::new(&plan, 1.0);
+    let mut eng = CpuEngine::new(&plan, 1.0);
     let mut state = eng.zero_state();
     let loud: Vec<f32> = (0..2048).map(|_| (rng.normal() * 0.2) as f32).collect();
     b.run_with_throughput("edge/cpu_mp_frame/2048", Some((2048.0, "samples")), || {

@@ -1,12 +1,21 @@
-//! Frame-feature path benches: the coordinator hot path (HLO b1 vs b8 —
-//! the dynamic-batcher crossover), the rust float MP bank, the
-//! conventional FIR bank and the direct high-order bank (Fig. 4 cost
+//! Frame-feature path benches: the coordinator hot path (the shared MP
+//! kernel in b1 and true-b8 form, the verbatim sort-based reference it
+//! replaced, HLO b1 vs b8 when artifacts exist), the rust float MP bank,
+//! the conventional FIR bank and the direct high-order bank (Fig. 4 cost
 //! story).
+//!
+//! Run with `-- --json` to record the trajectory in
+//! `BENCH_filterbank.json` (see bench_util): the acceptance ratio of the
+//! kernel PR is `bank/rust_mp_kernel/frame2048` vs
+//! `bank/rust_mp_exact_sort/frame2048`, and `bank/rust_mp_kernel_b8`'s
+//! audio_s/s must beat the b1 case's (its iteration already covers 8x
+//! the audio, so higher audio_s/s = faster than 8 sequential b1 calls).
 
 use infilter::bench_util::Bench;
 use infilter::dsp::multirate::{BandPlan, MultirateFirBank};
 use infilter::features;
 use infilter::mp::filter::MpMultirateBank;
+use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::runtime::engine::ModelEngine;
 use infilter::util::prng::Pcg32;
 use std::path::Path;
@@ -16,26 +25,61 @@ fn main() {
     let plan = BandPlan::paper_default();
     let mut rng = Pcg32::new(2);
     let frame: Vec<f32> = rng.normal_vec(2048).iter().map(|x| 0.3 * x).collect();
+    let audio_s = 2048.0 / plan.sample_rate; // 128 ms per frame
 
-    // rust banks, one 2048-sample frame (128 ms of audio)
+    // rust banks, one 2048-sample frame
     let mut fir = MultirateFirBank::new(&plan);
-    b.run_with_throughput("bank/rust_fir_multirate/frame2048", Some((0.128, "audio_s")), || {
+    b.run_with_throughput("bank/rust_fir_multirate/frame2048", Some((audio_s, "audio_s")), || {
         fir.process(&frame)
     });
     let mut mp = MpMultirateBank::new(&plan, 1.0);
-    b.run_with_throughput("bank/rust_mp_float/frame2048", Some((0.128, "audio_s")), || {
+    b.run_with_throughput("bank/rust_mp_float/frame2048", Some((audio_s, "audio_s")), || {
         mp.process(&frame)
     });
     b.run("bank/rust_direct_orders15to200/frame2048", || {
         features::direct_features(&plan, &frame)
     });
 
+    // the serving hot path: shared block kernel (new) vs the verbatim
+    // sort-based reference it replaced (old) — the PR 3 headline ratio
+    let mut eng = CpuEngine::new(&plan, 1.0);
+    let p = eng.n_filters();
+    let mut state = eng.zero_state();
+    let mut phi = vec![0.0f32; p];
+    b.run_with_throughput("bank/rust_mp_kernel/frame2048", Some((audio_s, "audio_s")), || {
+        eng.mp_frame_features_into(&mut state, &frame, &mut phi).unwrap()
+    });
+    let eng_ref = CpuEngine::new(&plan, 1.0);
+    let mut state_ref = eng_ref.zero_state();
+    b.run_with_throughput(
+        "bank/rust_mp_exact_sort/frame2048",
+        Some((audio_s, "audio_s")),
+        || eng_ref.frame_features_exact(&mut state_ref, &frame),
+    );
+
+    // true b8: 8 streams through one interleaved cascade; beating
+    // 8x the b1 number is the batching win
+    let frames8: Vec<Vec<f32>> = (0..8)
+        .map(|_| rng.normal_vec(2048).iter().map(|x| 0.3 * x).collect())
+        .collect();
+    let refs8: Vec<&[f32]> = frames8.iter().map(Vec::as_slice).collect();
+    let mut states8: Vec<_> = (0..8).map(|_| eng.zero_state()).collect();
+    let mut phi8 = vec![0.0f32; 8 * p];
+    b.run_with_throughput(
+        "bank/rust_mp_kernel_b8/8x_frame2048",
+        Some((8.0 * audio_s, "audio_s")),
+        || {
+            eng.mp_frame_features_b8_into(&mut states8, &refs8, &mut phi8)
+                .unwrap()
+        },
+    );
+
     // HLO paths
     if Path::new("artifacts/manifest.json").exists() {
         let mut eng = ModelEngine::open(Path::new("artifacts"), 1.0).unwrap();
         let mut st = eng.zero_state();
         eng.mp_frame_features(&mut st, &frame).unwrap(); // warm compile
-        b.run_with_throughput("bank/hlo_b1/frame2048", Some((0.128, "audio_s")), || {
+        b.run_with_throughput("bank/hlo_b1/frame2048", Some((audio_s, "audio_s")), || {
             eng.mp_frame_features(&mut st, &frame).unwrap()
         });
         let mut states: Vec<_> = (0..8).map(|_| eng.zero_state()).collect();
@@ -43,13 +87,13 @@ fn main() {
         eng.mp_frame_features_b8(&mut states, &frames).unwrap();
         b.run_with_throughput(
             "bank/hlo_b8/8x_frame2048",
-            Some((8.0 * 0.128, "audio_s")),
+            Some((8.0 * audio_s, "audio_s")),
             || eng.mp_frame_features_b8(&mut states, &frames).unwrap(),
         );
         // conventional-FIR HLO baseline
         let mut st2 = eng.zero_state();
         eng.fir_frame_features(&mut st2, &frame).unwrap();
-        b.run_with_throughput("bank/hlo_fir_b1/frame2048", Some((0.128, "audio_s")), || {
+        b.run_with_throughput("bank/hlo_fir_b1/frame2048", Some((audio_s, "audio_s")), || {
             eng.fir_frame_features(&mut st2, &frame).unwrap()
         });
     }

@@ -6,6 +6,7 @@
 use infilter::bench_util::Bench;
 use infilter::fixed::mp_int;
 use infilter::mp;
+use infilter::mp::kernel;
 use infilter::util::prng::Pcg32;
 
 fn main() {
@@ -28,7 +29,27 @@ fn main() {
         });
     }
 
-    // eq. 9 filter step (2 MP evals over 2M)
+    // the shared kernel's antisymmetric evaluator vs the exact sort over
+    // the same virtual 2m row — the per-evaluation old-vs-new unit cost
+    for m in [6usize, 16, 32] {
+        let a = rng.normal_vec(m);
+        b.run(&format!("mp/kernel_sym_newton/m{m}"), || {
+            kernel::mp_sym(&a, 1.5, kernel::DEFAULT_NEWTON_ITERS)
+        });
+        let full: Vec<f32> = a.iter().copied().chain(a.iter().map(|&v| -v)).collect();
+        b.run(&format!("mp/exact_sort_sym/m{m}"), || mp::mp(&full, 1.5));
+    }
+
+    // eq. 9 filter step in every implementation (2 MP evals over 2M)
+    let hf = rng.normal_vec(16);
+    let wf = rng.normal_vec(16);
+    let mut row = vec![0.0f32; 16];
+    b.run("mp/kernel_fir_step/taps16", || {
+        kernel::mp_fir_step(&hf, wf[0], &wf[1..], 1.0, kernel::DEFAULT_NEWTON_ITERS, &mut row)
+    });
+    b.run("mp/exact_fir_eval/taps16", || {
+        kernel::mp_fir_eval_exact(&hf, &wf, 1.0)
+    });
     let h: Vec<i64> = rng.normal_vec(16).iter().map(|&x| (x * 256.0) as i64).collect();
     let w: Vec<i64> = rng.normal_vec(16).iter().map(|&x| (x * 256.0) as i64).collect();
     let mut scratch = vec![0i64; 32];

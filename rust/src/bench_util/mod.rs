@@ -130,7 +130,48 @@ impl Bench {
         });
     }
 
+    /// The whole suite as one JSON document — the bench-trajectory
+    /// record (`BENCH_<suite>.json`) future PRs diff against. Throughput
+    /// cases carry their rate (e.g. audio_s/s = real-time factor).
+    pub fn to_json(&self) -> Json {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("median_ns", Json::Num(r.median_ns)),
+                    ("p95_ns", Json::Num(r.p95_ns)),
+                    ("mad_ns", Json::Num(r.mad_ns)),
+                    ("iters", Json::Num(r.iters as f64)),
+                ];
+                if let Some((rate, unit)) = r.throughput {
+                    fields.push((
+                        "throughput",
+                        Json::obj(vec![
+                            ("rate", Json::Num(rate)),
+                            ("unit", Json::Str(unit.to_string())),
+                        ]),
+                    ));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            (
+                "quick",
+                Json::Bool(std::env::var("INFILTER_BENCH_QUICK").is_ok()),
+            ),
+            ("cases", Json::Arr(cases)),
+        ])
+    }
+
     /// Print the footer and append JSONL records to results/bench.jsonl.
+    /// With `--json` on the bench command line (`cargo bench --bench X
+    /// -- --json`) or `INFILTER_BENCH_JSON=1`, additionally write the
+    /// whole suite to `BENCH_<suite>.json` in the working directory (the
+    /// package root under cargo) for the tracked bench trajectory.
     pub fn finish(&self) {
         let path = std::path::Path::new("results").join("bench.jsonl");
         if let Some(dir) = path.parent() {
@@ -153,6 +194,18 @@ impl Bench {
         if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
             let _ = f.write_all(lines.as_bytes());
         }
+        if std::env::args().any(|a| a == "--json") || std::env::var("INFILTER_BENCH_JSON").is_ok() {
+            let name = self
+                .suite
+                .strip_prefix("bench_")
+                .unwrap_or(&self.suite)
+                .to_string();
+            let out = format!("BENCH_{name}.json");
+            match std::fs::write(&out, self.to_json().to_string_pretty()) {
+                Ok(()) => println!("[{}] wrote {out}", self.suite),
+                Err(e) => eprintln!("[{}] failed to write {out}: {e}", self.suite),
+            }
+        }
         println!("[{}] {} cases", self.suite, self.results.len());
     }
 }
@@ -160,6 +213,25 @@ impl Bench {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_document_records_cases_and_throughput() {
+        std::env::set_var("INFILTER_BENCH_QUICK", "1");
+        let mut b = Bench::new("bench_selftest");
+        let xs: Vec<f64> = (0..100).map(f64::from).collect();
+        b.run_with_throughput("sum100", Some((100.0, "items")), || {
+            xs.iter().sum::<f64>()
+        });
+        let j = b.to_json();
+        assert_eq!(j.get("suite").as_str(), Some("bench_selftest"));
+        let cases = j.get("cases").as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").as_str(), Some("sum100"));
+        assert!(cases[0].get("median_ns").as_f64().unwrap() > 0.0);
+        let thr = cases[0].get("throughput");
+        assert_eq!(thr.get("unit").as_str(), Some("items"));
+        assert!(thr.get("rate").as_f64().unwrap() > 0.0);
+    }
 
     #[test]
     fn measures_something_sane() {

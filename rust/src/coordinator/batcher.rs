@@ -32,7 +32,12 @@ impl Default for BatcherPolicy {
         // MP Newton loops across lanes — so wide batching only saves
         // dispatch overhead (~us) while multiplying compute. Default is
         // therefore narrow-always (threshold 9 disables the wide path);
-        // on accelerators where lanes are data-parallel, set ~5.
+        // on accelerators where lanes are data-parallel, set ~5. The
+        // pure-rust `CpuEngine` now runs a genuinely interleaved b8
+        // kernel (`mp::kernel::mp_sym8`, bit-identical to 8x b1) whose
+        // crossover `bench_dispatch`'s `pipeline_1lane_wide8` case
+        // measures — CPU deployments that see >= ~6 concurrent ready
+        // streams should lower the threshold accordingly.
         BatcherPolicy { wide_threshold: 9 }
     }
 }

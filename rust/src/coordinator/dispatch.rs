@@ -115,11 +115,8 @@ impl<B: InferenceBackend> PipelineBuilder<B> {
         let frame_len = self.backend.frame_len();
         let clip_frames = self.backend.clip_frames();
         let sample_rate = self.backend.sample_rate();
-        let store = StateStore::new(
-            self.backend.zero_state(),
-            self.backend.n_filters(),
-            self.queue_capacity,
-        );
+        let n_filters = self.backend.n_filters();
+        let store = StateStore::new(self.backend.zero_state(), n_filters, self.queue_capacity);
         Pipeline {
             backend: self.backend,
             model: self.model,
@@ -128,11 +125,16 @@ impl<B: InferenceBackend> PipelineBuilder<B> {
             frame_len,
             clip_frames,
             sample_rate,
+            n_filters,
             stats: BatchStats::default(),
             report: ServeReport::default(),
             results: Vec::new(),
             sink: self.sink,
             collect: self.collect,
+            phi_buf: vec![0.0; 8 * n_filters],
+            states_buf: Vec::new(),
+            lane_buf: Vec::new(),
+            zero_frame: vec![0.0; frame_len],
         }
     }
 }
@@ -147,11 +149,26 @@ pub struct Pipeline<B: InferenceBackend> {
     frame_len: usize,
     clip_frames: usize,
     sample_rate: f64,
+    n_filters: usize,
     stats: BatchStats,
     report: ServeReport,
     results: Vec<ClassifyResult>,
     sink: Option<Box<dyn ClassifySink>>,
     collect: bool,
+    /// per-tick Phi output, reused (stream-major, 8 * n_filters)
+    phi_buf: Vec<f32>,
+    /// per-tick working copies of stream states, reused
+    states_buf: Vec<StreamState>,
+    /// per-tick (stream, frame) batch assembly, reused
+    lane_buf: Vec<(u64, FrameTask)>,
+    /// silence for padding unoccupied wide lanes, built once
+    zero_frame: Vec<f32>,
+}
+
+/// Copy one stream state into a same-shape buffer without allocating.
+fn copy_state(dst: &mut StreamState, src: &StreamState) {
+    dst.bp.copy_from_slice(&src.bp);
+    dst.lp.copy_from_slice(&src.lp);
 }
 
 impl<B: InferenceBackend> Pipeline<B> {
@@ -188,54 +205,89 @@ impl<B: InferenceBackend> Pipeline<B> {
     /// One batching tick: plan over the ready streams, run the wide or
     /// narrow path, classify any clips that completed. Returns the number
     /// of frames processed (0 = idle).
+    ///
+    /// Both paths drive the backend through the `_into` trait surface
+    /// with pipeline-owned, tick-reused buffers (Phi output, working
+    /// state copies, batch assembly, silence padding), so the
+    /// steady-state frame loop performs no heap allocation on the
+    /// `CpuEngine` kernel.
     pub fn tick(&mut self) -> Result<usize> {
         let ready = self.store.ready_streams(8);
         match self.policy.plan(&ready) {
             BatchPlan::Idle => Ok(0),
             BatchPlan::Wide(ids) => {
                 // pop one in-order frame per lane (resync on clip gaps)
-                let mut lanes: Vec<(u64, FrameTask)> = Vec::with_capacity(8);
+                let mut lanes = std::mem::take(&mut self.lane_buf);
+                lanes.clear();
                 for &id in &ids {
                     if let Some(task) = self.pop_in_order(id) {
                         lanes.push((id, task));
                     }
                 }
                 if lanes.is_empty() {
+                    self.lane_buf = lanes;
                     return Ok(0);
                 }
-                // assemble 8 lanes: real ones first, padding after
-                let mut states: Vec<StreamState> = lanes
-                    .iter()
-                    .map(|(id, _)| self.store.entry(*id).state.clone())
-                    .collect();
-                let zeros = vec![0.0f32; self.frame_len];
-                while states.len() < 8 {
-                    states.push(self.store.zero_state().clone());
+                let p = self.n_filters;
+                // assemble 8 lanes: real ones first, silence padding after
+                let mut states = std::mem::take(&mut self.states_buf);
+                for (i, (id, _)) in lanes.iter().enumerate() {
+                    let src = &self.store.entry(*id).state;
+                    if i < states.len() {
+                        copy_state(&mut states[i], src);
+                    } else {
+                        states.push(src.clone());
+                    }
                 }
-                let frames: Vec<&[f32]> = lanes
-                    .iter()
-                    .map(|(_, t)| t.data.as_slice())
-                    .chain(std::iter::repeat(zeros.as_slice()))
-                    .take(8)
-                    .collect();
-                let phis = self.backend.mp_frame_features_b8(&mut states, &frames)?;
+                for i in lanes.len()..8 {
+                    if i < states.len() {
+                        states[i].bp.iter_mut().for_each(|v| *v = 0.0);
+                        states[i].lp.iter_mut().for_each(|v| *v = 0.0);
+                    } else {
+                        states.push(self.store.zero_state().clone());
+                    }
+                }
+                let mut phi = std::mem::take(&mut self.phi_buf);
+                {
+                    let frames: [&[f32]; 8] = std::array::from_fn(|i| {
+                        lanes
+                            .get(i)
+                            .map_or(self.zero_frame.as_slice(), |(_, t)| t.data.as_slice())
+                    });
+                    self.backend
+                        .mp_frame_features_b8_into(&mut states, &frames, &mut phi[..8 * p])?;
+                }
                 self.stats.record_wide(lanes.len());
                 for (i, (id, task)) in lanes.iter().enumerate() {
-                    self.apply_frame(*id, task, &states[i], &phis[i])?;
+                    self.apply_frame(*id, task, &states[i], &phi[i * p..(i + 1) * p])?;
                 }
-                Ok(lanes.len())
+                let n = lanes.len();
+                self.lane_buf = lanes;
+                self.states_buf = states;
+                self.phi_buf = phi;
+                Ok(n)
             }
             BatchPlan::Narrow(ids) => {
+                let p = self.n_filters;
+                let mut states = std::mem::take(&mut self.states_buf);
+                let mut phi = std::mem::take(&mut self.phi_buf);
                 let mut n = 0;
                 for id in ids {
                     if let Some(task) = self.pop_in_order(id) {
-                        let mut state = self.store.entry(id).state.clone();
-                        let phi = self.backend.mp_frame_features(&mut state, &task.data)?;
-                        self.apply_frame(id, &task, &state, &phi)?;
+                        if states.is_empty() {
+                            states.push(self.store.entry(id).state.clone());
+                        } else {
+                            copy_state(&mut states[0], &self.store.entry(id).state);
+                        }
+                        self.backend
+                            .mp_frame_features_into(&mut states[0], &task.data, &mut phi[..p])?;
+                        self.apply_frame(id, &task, &states[0], &phi[..p])?;
                         n += 1;
                     }
                 }
                 self.stats.record_narrow(n);
+                self.states_buf = states;
+                self.phi_buf = phi;
                 Ok(n)
             }
         }
@@ -281,11 +333,8 @@ impl<B: InferenceBackend> Pipeline<B> {
                 }
             }
             // a frame was lost somewhere: abort the stale clip and resync
-            // (rare path, so the zero-state clone lives here, off the
-            // per-frame fast path)
-            let zero = self.store.zero_state().clone();
+            self.store.reset_clip(id);
             let e = self.store.entry(id);
-            e.finish_clip(&zero);
             e.clip_seq = task.clip_seq;
             return Some(task);
         }
@@ -302,7 +351,7 @@ impl<B: InferenceBackend> Pipeline<B> {
         let acc_done;
         {
             let e = self.store.entry(id);
-            e.state = new_state.clone();
+            copy_state(&mut e.state, new_state);
             if e.clip_t0.is_none() {
                 e.clip_t0 = Some(task.t_gen);
             }
@@ -342,10 +391,8 @@ impl<B: InferenceBackend> Pipeline<B> {
             if self.collect {
                 self.results.push(result);
             }
-            let zero = self.store.zero_state().clone();
-            let e = self.store.entry(id);
-            e.finish_clip(&zero);
-            e.clip_seq += 1;
+            self.store.reset_clip(id);
+            self.store.entry(id).clip_seq += 1;
         }
         Ok(())
     }

@@ -28,6 +28,7 @@ pub mod server;
 pub mod shard;
 pub mod state;
 
+pub use batcher::BatcherPolicy;
 pub use dispatch::{ClassifySink, Lane, Pipeline, PipelineBuilder};
 pub use shard::{AnyLane, ShardedPipeline, ShardedPipelineBuilder};
 

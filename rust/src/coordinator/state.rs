@@ -38,12 +38,14 @@ impl StreamEntry {
     }
 
     /// Reset for the next clip (state is also zeroed: clips are
-    /// independent utterances).
+    /// independent utterances). Copies in place — `zero` must have this
+    /// entry's dimensions — so the per-clip reset allocates nothing.
     pub fn finish_clip(&mut self, zero: &StreamState) {
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         self.frames_done = 0;
         self.clip_t0 = None;
-        self.state = zero.clone();
+        self.state.bp.copy_from_slice(&zero.bp);
+        self.state.lp.copy_from_slice(&zero.lp);
     }
 }
 
@@ -119,6 +121,16 @@ impl StateStore {
     pub fn pop_frame(&mut self, stream: u64) -> Option<FrameTask> {
         self.streams.get_mut(&stream)?.queue.pop_front()
     }
+
+    /// [`StreamEntry::finish_clip`] without the caller having to borrow
+    /// the zero state separately: the store lends its own template
+    /// (disjoint field), keeping the per-clip reset allocation-free.
+    pub fn reset_clip(&mut self, stream: u64) {
+        let zero = &self.zero;
+        if let Some(e) = self.streams.get_mut(&stream) {
+            e.finish_clip(zero);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +184,24 @@ mod tests {
         let ready = s.ready_streams(8);
         assert_eq!(ready, vec![5, 9]);
         assert_eq!(s.ready_streams(1), vec![5]);
+    }
+
+    #[test]
+    fn reset_clip_is_allocation_free_finish_clip() {
+        let mut s = store();
+        {
+            let e = s.entry(3);
+            e.acc[1] = 2.0;
+            e.frames_done = 4;
+            e.state.lp[0] = 9.0;
+            e.clip_t0 = Some(Instant::now());
+        }
+        s.reset_clip(3);
+        let e = s.entry(3);
+        assert_eq!(e.acc[1], 0.0);
+        assert_eq!(e.frames_done, 0);
+        assert_eq!(e.state.lp[0], 0.0);
+        assert!(e.clip_t0.is_none());
     }
 
     #[test]

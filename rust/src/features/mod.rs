@@ -5,7 +5,10 @@
 //!   SVM floating point" inputs, Fig. 4b),
 //! * direct full-rate high-order FIR bank (Fig. 4a comparator),
 //! * float MP bank (`crate::mp::filter`) — the CPU mirror of the HLO
-//!   `mp_frame_features` artifact the coordinator runs.
+//!   `mp_frame_features` artifact the coordinator runs. Its per-sample
+//!   MP-FIR step is the shared `crate::mp::kernel` core, the same code
+//!   `CpuEngine` block-processes, so training-time features and the
+//!   serving path agree by construction.
 
 use crate::dsp::fir::FirFilter;
 use crate::dsp::multirate::{BandPlan, MultirateFirBank};

@@ -2,9 +2,14 @@
 //!
 //! y(n) = MP([h+ + x+, h- + x-], gf) - MP([h+ + x-, h- + x+], gf)
 //! with h+ = h, h- = -h, x+ = x, x- = -x over the M-tap window — the
-//! multiplierless approximation of the FIR inner product.
+//! multiplierless approximation of the FIR inner product. The per-sample
+//! evaluation runs on the shared [`super::kernel`] core (antisymmetric
+//! Newton MP, one operand buffer, no sort/allocation), the same code
+//! path `CpuEngine::frame_features` block-processes — so the streaming
+//! bank and the serving engine produce bit-identical per-sample outputs
+//! (clip-level Phi differs only by float summation grouping).
 
-use super::mp;
+use super::kernel;
 use crate::dsp::multirate::BandPlan;
 
 /// Streaming MP FIR filter with an explicit delay line.
@@ -12,11 +17,13 @@ use crate::dsp::multirate::BandPlan;
 pub struct MpFirFilter {
     h: Vec<f32>,
     gamma_f: f32,
+    /// Newton trip budget per MP evaluation
+    iters: usize,
     /// delay[0] = x[n-1], ...
     delay: Vec<f32>,
-    /// scratch rows reused across samples (no allocation in the hot loop)
-    plus: Vec<f32>,
-    minus: Vec<f32>,
+    /// single operand row reused across samples and signs (no
+    /// allocation in the hot loop)
+    row: Vec<f32>,
 }
 
 impl MpFirFilter {
@@ -25,9 +32,9 @@ impl MpFirFilter {
         MpFirFilter {
             h,
             gamma_f,
+            iters: kernel::DEFAULT_NEWTON_ITERS,
             delay: vec![0.0; m.saturating_sub(1)],
-            plus: vec![0.0; 2 * m],
-            minus: vec![0.0; 2 * m],
+            row: vec![0.0; m],
         }
     }
 
@@ -36,26 +43,15 @@ impl MpFirFilter {
     }
 
     pub fn step(&mut self, x: f32) -> f32 {
-        let m = self.h.len();
-        // window w[k] = x[n-k]
-        self.plus[0] = self.h[0] + x;
-        self.plus[m] = -self.h[0] - x;
-        self.minus[0] = self.h[0] - x;
-        self.minus[m] = -self.h[0] + x;
-        for k in 1..m {
-            let w = self.delay[k - 1];
-            self.plus[k] = self.h[k] + w;
-            self.plus[m + k] = -self.h[k] - w;
-            self.minus[k] = self.h[k] - w;
-            self.minus[m + k] = -self.h[k] + w;
-        }
+        let y =
+            kernel::mp_fir_step(&self.h, x, &self.delay, self.gamma_f, self.iters, &mut self.row);
         for k in (1..self.delay.len()).rev() {
             self.delay[k] = self.delay[k - 1];
         }
         if !self.delay.is_empty() {
             self.delay[0] = x;
         }
-        mp(&self.plus, self.gamma_f) - mp(&self.minus, self.gamma_f)
+        y
     }
 
     pub fn process(&mut self, xs: &[f32]) -> Vec<f32> {
@@ -184,6 +180,33 @@ mod tests {
             yc.extend(chunked.process(&xs[17..]));
             for (a, b) in yw.iter().zip(&yc) {
                 assert!((a - b).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn step_tracks_exact_sort_eval() {
+        // the kernel-backed streaming step stays within the Newton
+        // tolerance of the verbatim eq. 9 sort evaluation, sample by
+        // sample over a running delay line
+        check("mpfir-vs-exact", 30, |g| {
+            let m = g.usize(2, 16);
+            let h: Vec<f32> = (0..m).map(|_| g.f32(-0.5, 0.5)).collect();
+            let xs = g.signal(24, 0.5);
+            let mut f = MpFirFilter::new(h.clone(), 1.0);
+            let mut delay = vec![0.0f32; m - 1];
+            for &x in &xs {
+                let fast = f.step(x);
+                let mut w = vec![x];
+                w.extend_from_slice(&delay);
+                let exact = kernel::mp_fir_eval_exact(&h, &w, 1.0);
+                assert!((fast - exact).abs() < 4e-3, "{fast} vs {exact}");
+                for k in (1..delay.len()).rev() {
+                    delay[k] = delay[k - 1];
+                }
+                if !delay.is_empty() {
+                    delay[0] = x;
+                }
             }
         });
     }

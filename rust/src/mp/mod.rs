@@ -8,6 +8,7 @@
 //!   * generating expectations for the fixed-point hardware model.
 
 pub mod filter;
+pub mod kernel;
 pub mod machine;
 
 /// Exact z = MP(xs, gamma): unique solution of sum_i [xs_i - z]_+ = gamma.
@@ -18,7 +19,9 @@ pub fn mp(xs: &[f32], gamma: f32) -> f32 {
     debug_assert!(!xs.is_empty());
     debug_assert!(gamma >= 0.0, "MP needs gamma >= 0, got {gamma}");
     let mut s: Vec<f32> = xs.to_vec();
-    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // NaN-safe descending order (same fix as util::stats::argmax): a NaN
+    // input yields a NaN result instead of a comparator panic
+    s.sort_by(|a, b| b.total_cmp(a));
     let mut cum = 0.0f64;
     let mut best = f64::from(s[0]) - f64::from(gamma); // k = 1 fallback
     for (k0, &v) in s.iter().enumerate() {
@@ -32,15 +35,34 @@ pub fn mp(xs: &[f32], gamma: f32) -> f32 {
     best as f32
 }
 
-/// Newton-iteration MP — the same fixed-trip-count algorithm the Pallas
-/// kernel runs (and that the FPGA's counter/comparator loop implements);
-/// kept for bit-for-bit comparisons with the L1 kernel. `iters = n`
-/// guarantees exact convergence.
+/// Newton-iteration MP — the same algorithm the Pallas kernel runs (and
+/// that the FPGA's counter/comparator loop implements); kept for
+/// bit-for-bit comparisons with the L1 kernel. `iters = n` guarantees
+/// exact convergence. Early-exits like [`crate::fixed::mp_int`] — see
+/// [`mp_newton_steps`].
 pub fn mp_newton(xs: &[f32], gamma: f32, iters: usize) -> f32 {
+    mp_newton_steps(xs, gamma, iters).0
+}
+
+/// [`mp_newton`] plus the number of Newton trips actually taken.
+///
+/// The start `z0 = (sum - gamma)/n` satisfies `f(z0) >= 0` (Jensen on
+/// the hinge sum), so in exact arithmetic the iterate approaches the
+/// root from the left and `resid` stays non-negative. Two early exits
+/// mirror `mp_int`'s convergence break:
+///
+/// * `resid == 0` — at the root; every further trip adds a signed zero.
+/// * the update no longer moves `z` — a float fixpoint; every further
+///   trip recomputes exactly this state.
+///
+/// Both leave the result identical (up to the sign of a zero) to
+/// running the full `iters` budget, which
+/// `newton_early_exit_matches_full_budget` pins.
+pub fn mp_newton_steps(xs: &[f32], gamma: f32, iters: usize) -> (f32, usize) {
     let n = xs.len() as f32;
     let sum: f32 = xs.iter().sum();
     let mut z = (sum - gamma) / n;
-    for _ in 0..iters {
+    for t in 0..iters {
         let mut resid = -gamma;
         let mut count = 0u32;
         for &x in xs {
@@ -50,9 +72,16 @@ pub fn mp_newton(xs: &[f32], gamma: f32, iters: usize) -> f32 {
                 count += 1;
             }
         }
-        z += resid / (count.max(1) as f32);
+        if resid == 0.0 {
+            return (z, t);
+        }
+        let zn = z + resid / (count.max(1) as f32);
+        if zn == z {
+            return (z, t + 1);
+        }
+        z = zn;
     }
-    z
+    (z, iters)
 }
 
 /// Analytic sub-gradient of MP w.r.t. inputs: 1[x_i > z] / k.
@@ -149,6 +178,92 @@ mod tests {
             let z8 = mp_newton(&xs, gamma, 8);
             assert!((mp(&xs, gamma) - z8).abs() < 2e-3);
         });
+    }
+
+    #[test]
+    fn newton_early_exit_matches_full_budget() {
+        // replicate the pre-exit loop (fixed trip count, no breaks) and
+        // pin equality — both breaks only ever fire in states the full
+        // loop could not leave anyway
+        check("mp-newton-early-exit", 80, |g| {
+            let n = g.usize(1, 48);
+            let scale = g.f64(0.1, 4.0);
+            let xs = g.signal(n, scale);
+            let gamma = g.f32(0.0, 8.0);
+            let budget = 64usize;
+            let nf = xs.len() as f32;
+            let mut z = (xs.iter().sum::<f32>() - gamma) / nf;
+            for _ in 0..budget {
+                let mut resid = -gamma;
+                let mut count = 0u32;
+                for &x in &xs {
+                    let d = x - z;
+                    if d > 0.0 {
+                        resid += d;
+                        count += 1;
+                    }
+                }
+                z += resid / count.max(1) as f32;
+            }
+            let (ze, trips) = mp_newton_steps(&xs, gamma, budget);
+            assert!(trips <= budget);
+            assert!(ze == z, "early {ze} full {z}");
+        });
+    }
+
+    #[test]
+    fn newton_early_exit_cuts_trip_counts() {
+        // constructed cases where every Newton operation is exact in
+        // f32, so the residual hits literal zero and the loop returns
+        // long before the budget — the trip counter proves it
+        let budget = 64usize;
+
+        // all-equal over a power-of-two width: converged at the start
+        let (z, trips) = mp_newton_steps(&[2.5f32; 8], 4.0, budget);
+        assert_eq!(trips, 0, "resid==0 exit did not fire");
+        assert_eq!(z, 2.0);
+        assert_eq!(z, mp(&[2.5f32; 8], 4.0));
+
+        // one active element after a single support-shrinking trip
+        let xs = [4.0f32, 0.0, 0.0, 0.0];
+        let (z, trips) = mp_newton_steps(&xs, 2.0, budget);
+        assert_eq!(trips, 1);
+        assert_eq!(z, 2.0);
+        assert_eq!(z, mp(&xs, 2.0));
+
+        // gamma = 0 with every element equal: z = max immediately
+        let (z, trips) = mp_newton_steps(&[1.5f32; 4], 0.0, budget);
+        assert_eq!(trips, 0);
+        assert_eq!(z, 1.5);
+    }
+
+    #[test]
+    fn newton_edge_cases_match_exact() {
+        // gamma = 0 (z = max), ties, all-negative rows, 1-element rows —
+        // with iters = n the iteration converges exactly
+        let cases: &[(&[f32], f32)] = &[
+            (&[1.0, -2.0, 3.0, 0.5], 0.0),
+            (&[2.5, 2.5, 2.5, 2.5], 3.0),
+            (&[-1.0, -4.0, -0.25, -8.0], 1.5),
+            (&[-7.5], 2.0),
+            (&[0.0, 0.0, 0.0], 0.75),
+        ];
+        for &(xs, gamma) in cases {
+            let exact = mp(xs, gamma);
+            let newton = mp_newton(xs, gamma, xs.len().max(8));
+            assert!(
+                (exact - newton).abs() < 1e-4,
+                "xs {xs:?} gamma {gamma}: exact {exact} newton {newton}"
+            );
+        }
+    }
+
+    #[test]
+    fn nan_input_yields_nan_not_panic() {
+        // total_cmp sort: a NaN row must flow through as NaN instead of
+        // panicking inside the comparator
+        let z = mp(&[1.0, f32::NAN, -2.0], 0.5);
+        assert!(z.is_nan());
     }
 
     #[test]

@@ -5,13 +5,14 @@
 //! The coordinator, the edge fleet simulator and the examples are all
 //! generic over [`InferenceBackend`], so the same serving loop runs
 //! against the AOT HLO artifacts when `artifacts/` exists and against
-//! the CPU mirror (the float MP bank from [`crate::mp::filter`] plus the
-//! kernel-machine head from [`crate::mp::machine`]) when it does not —
-//! the "CPU fallback path of the coordinator" promised in [`crate::mp`].
+//! the CPU mirror (the shared MP filter-bank kernel from
+//! [`crate::mp::kernel`] plus the kernel-machine head from
+//! [`crate::mp::machine`]) when it does not — the "CPU fallback path of
+//! the coordinator" promised in [`crate::mp`].
 
 use super::engine::{ModelEngine, StreamState};
 use crate::dsp::multirate::BandPlan;
-use crate::mp;
+use crate::mp::kernel::{FilterBankKernel, FrameScratch};
 use crate::mp::machine::{decide, Params, Standardizer};
 use anyhow::{ensure, Result};
 
@@ -30,6 +31,25 @@ pub trait InferenceBackend {
     /// partial Phi (accumulated per clip by the caller).
     fn mp_frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Result<Vec<f32>>;
 
+    /// Allocation-free variant of [`mp_frame_features`]: writes the
+    /// frame's partial Phi into `phi_out` (`n_filters()` long). Backends
+    /// with internal scratch override this so the steady-state serving
+    /// path performs no heap allocation; the default delegates to the
+    /// allocating method.
+    ///
+    /// [`mp_frame_features`]: InferenceBackend::mp_frame_features
+    fn mp_frame_features_into(
+        &mut self,
+        state: &mut StreamState,
+        frame: &[f32],
+        phi_out: &mut [f32],
+    ) -> Result<()> {
+        let phi = self.mp_frame_features(state, frame)?;
+        ensure!(phi.len() == phi_out.len(), "phi length mismatch");
+        phi_out.copy_from_slice(&phi);
+        Ok(())
+    }
+
     /// Batched (B=8) frame step; `states`/`frames` must have exactly 8
     /// entries (pad with dummies).
     fn mp_frame_features_b8(
@@ -37,6 +57,30 @@ pub trait InferenceBackend {
         states: &mut [StreamState],
         frames: &[&[f32]],
     ) -> Result<Vec<Vec<f32>>>;
+
+    /// Allocation-free batched frame step: `phi_out` is stream-major,
+    /// `8 * n_filters()` long (`phi_out[s * P + p]`). Same override
+    /// contract as [`mp_frame_features_into`].
+    ///
+    /// [`mp_frame_features_into`]: InferenceBackend::mp_frame_features_into
+    fn mp_frame_features_b8_into(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+        phi_out: &mut [f32],
+    ) -> Result<()> {
+        // validate before running: a batched step mutates all 8 states,
+        // so failing afterwards would leave them a frame ahead of the
+        // (discarded) Phi
+        let p = self.n_filters();
+        ensure!(phi_out.len() == 8 * p, "phi length mismatch");
+        let phis = self.mp_frame_features_b8(states, frames)?;
+        for (i, phi) in phis.iter().enumerate() {
+            ensure!(phi.len() == p, "phi length mismatch");
+            phi_out[i * p..(i + 1) * p].copy_from_slice(phi);
+        }
+        Ok(())
+    }
 
     /// Clip-level inference on an accumulated Phi: returns (p, z+, z-)
     /// per head (standardisation inside).
@@ -78,12 +122,30 @@ impl<B: InferenceBackend> InferenceBackend for &mut B {
         (**self).mp_frame_features(state, frame)
     }
 
+    fn mp_frame_features_into(
+        &mut self,
+        state: &mut StreamState,
+        frame: &[f32],
+        phi_out: &mut [f32],
+    ) -> Result<()> {
+        (**self).mp_frame_features_into(state, frame, phi_out)
+    }
+
     fn mp_frame_features_b8(
         &mut self,
         states: &mut [StreamState],
         frames: &[&[f32]],
     ) -> Result<Vec<Vec<f32>>> {
         (**self).mp_frame_features_b8(states, frames)
+    }
+
+    fn mp_frame_features_b8_into(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+        phi_out: &mut [f32],
+    ) -> Result<()> {
+        (**self).mp_frame_features_b8_into(states, frames, phi_out)
     }
 
     fn inference(
@@ -141,21 +203,21 @@ impl InferenceBackend for ModelEngine {
     }
 }
 
-/// Pure-rust inference backend: the streaming MP multirate bank (paper
-/// eq. 9 over the Fig. 3 octave cascade) computed sample by sample with
-/// the delay lines externalised into [`StreamState`], so per-stream
-/// state management (the coordinator's "KV cache") works identically to
-/// the HLO path.
+/// Pure-rust inference backend over the shared block-processed MP
+/// filter-bank kernel ([`crate::mp::kernel`], DESIGN.md §9): paper
+/// eq. 9 over the Fig. 3 octave cascade with the delay lines
+/// externalised into [`StreamState`], so per-stream state management
+/// (the coordinator's "KV cache") works identically to the HLO path.
+/// The engine owns a [`FrameScratch`], so the `&mut self` trait paths
+/// process frames with zero steady-state heap allocations.
 #[derive(Clone, Debug)]
 pub struct CpuEngine {
     pub plan: BandPlan,
     pub gamma_f: f32,
     frame_len: usize,
     clip_frames: usize,
-    /// band-pass coefficients, `[octave][filter][tap]`
-    bp: Vec<Vec<Vec<f32>>>,
-    /// anti-alias low-pass coefficients, `[octave transition][tap]`
-    lp: Vec<Vec<f32>>,
+    kernel: FilterBankKernel,
+    scratch: FrameScratch,
 }
 
 impl CpuEngine {
@@ -179,92 +241,49 @@ impl CpuEngine {
             (frame_len >> (plan.n_octaves - 1)) >= plan.bp_taps - 1,
             "deepest octave frame shorter than the band-pass delay line"
         );
-        let bp = plan
-            .bp_coeffs()
-            .into_iter()
-            .map(|oct| {
-                oct.into_iter()
-                    .map(|h| h.into_iter().map(|x| x as f32).collect())
-                    .collect()
-            })
-            .collect();
-        let lp = plan
-            .lp_coeffs()
-            .into_iter()
-            .map(|h| h.into_iter().map(|x| x as f32).collect())
-            .collect();
         CpuEngine {
             plan: plan.clone(),
             gamma_f,
             frame_len,
             clip_frames,
-            bp,
-            lp,
+            kernel: FilterBankKernel::new(plan, gamma_f),
+            scratch: FrameScratch::new(),
         }
     }
 
-    /// One frame through the octave cascade. `state` carries the shared
-    /// per-octave band-pass delay line (all filters of an octave see the
-    /// same input, so one delay line serves the whole octave) and the
-    /// low-pass delay per transition; both use the HLO state layout.
-    pub fn frame_features(&self, state: &mut StreamState, frame: &[f32]) -> Vec<f32> {
+    /// The shared filter-bank core this engine runs on.
+    pub fn kernel(&self) -> &FilterBankKernel {
+        &self.kernel
+    }
+
+    /// One frame through the octave cascade on the fast block kernel.
+    /// `state` carries the shared per-octave band-pass delay line (all
+    /// filters of an octave see the same input, so one delay line serves
+    /// the whole octave) and the low-pass delay per transition; both use
+    /// the HLO state layout.
+    pub fn frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Vec<f32> {
         assert_eq!(frame.len(), self.frame_len, "frame length mismatch");
-        let n_oct = self.plan.n_octaves;
-        let f_per = self.plan.filters_per_octave;
-        let bp_taps = self.plan.bp_taps;
-        let lp_taps = self.plan.lp_taps;
-        let bp_d = bp_taps - 1;
-        let lp_d = lp_taps - 1;
-        let mut phi = vec![0.0f32; n_oct * f_per];
-        let mut sig = frame.to_vec();
-        let mut window = vec![0.0f32; bp_taps.max(lp_taps)];
-        let mut plus = vec![0.0f32; 2 * bp_taps.max(lp_taps)];
-        let mut minus = vec![0.0f32; 2 * bp_taps.max(lp_taps)];
-        for o in 0..n_oct {
-            {
-                let delay = &state.bp[o * bp_d..(o + 1) * bp_d];
-                for n in 0..sig.len() {
-                    fill_window(&mut window[..bp_taps], &sig, delay, n);
-                    for (i, h) in self.bp[o].iter().enumerate() {
-                        let y = mp_fir_eval(
-                            h,
-                            &window[..bp_taps],
-                            self.gamma_f,
-                            &mut plus,
-                            &mut minus,
-                        );
-                        if y > 0.0 {
-                            phi[o * f_per + i] += y;
-                        }
-                    }
-                }
-            }
-            save_delay(&mut state.bp[o * bp_d..(o + 1) * bp_d], &sig);
-            if o < n_oct - 1 {
-                let mut low = vec![0.0f32; sig.len()];
-                {
-                    let delay = &state.lp[o * lp_d..(o + 1) * lp_d];
-                    for (n, y) in low.iter_mut().enumerate() {
-                        fill_window(&mut window[..lp_taps], &sig, delay, n);
-                        *y = mp_fir_eval(
-                            &self.lp[o],
-                            &window[..lp_taps],
-                            self.gamma_f,
-                            &mut plus,
-                            &mut minus,
-                        );
-                    }
-                }
-                save_delay(&mut state.lp[o * lp_d..(o + 1) * lp_d], &sig);
-                sig = low.into_iter().step_by(2).collect();
-            }
-        }
+        let mut phi = vec![0.0f32; self.plan.n_filters()];
+        self.kernel
+            .process_frame(&mut self.scratch, state, frame, &mut phi);
+        phi
+    }
+
+    /// The pre-kernel sort-based frame step, kept verbatim as the exact
+    /// reference: pins [`frame_features`](Self::frame_features) in the
+    /// parity suite and provides the old path of the bench trajectory.
+    pub fn frame_features_exact(&self, state: &mut StreamState, frame: &[f32]) -> Vec<f32> {
+        assert_eq!(frame.len(), self.frame_len, "frame length mismatch");
+        let mut phi = vec![0.0f32; self.plan.n_filters()];
+        self.kernel.process_frame_exact(state, frame, &mut phi);
         phi
     }
 
     /// Full-clip features (fresh state, frames accumulated) — the
     /// offline / training-time feature path, mirror of
-    /// `ModelEngine::clip_features`.
+    /// `ModelEngine::clip_features`. Shared-`&self` so batch extraction
+    /// can fan one engine out across threads; each call brings its own
+    /// scratch (one grow, amortised over the clip's frames).
     pub fn clip_features(&self, clip: &[f32]) -> Vec<f32> {
         assert!(
             clip.len() % self.frame_len == 0,
@@ -272,12 +291,16 @@ impl CpuEngine {
             clip.len(),
             self.frame_len
         );
+        let mut scratch = FrameScratch::new();
         let mut state = InferenceBackend::zero_state(self);
-        let mut acc = vec![0.0f32; InferenceBackend::n_filters(self)];
+        let p = InferenceBackend::n_filters(self);
+        let mut acc = vec![0.0f32; p];
+        let mut phi = vec![0.0f32; p];
         for frame in clip.chunks(self.frame_len) {
-            let phi = self.frame_features(&mut state, frame);
-            for (a, p) in acc.iter_mut().zip(&phi) {
-                *a += p;
+            self.kernel
+                .process_frame(&mut scratch, &mut state, frame, &mut phi);
+            for (a, v) in acc.iter_mut().zip(&phi) {
+                *a += v;
             }
         }
         acc
@@ -287,37 +310,6 @@ impl CpuEngine {
     pub fn clip_features_many(&self, clips: &[&[f32]], threads: usize) -> Vec<Vec<f32>> {
         crate::util::par::par_map(clips, threads, |c| self.clip_features(c))
     }
-}
-
-/// Build `window[k] = x[n-k]`, reaching into `delay` (previous frame's
-/// tail, newest first: `delay[j] = x[-1-j]`) for `n < k`.
-fn fill_window(window: &mut [f32], sig: &[f32], delay: &[f32], n: usize) {
-    window[0] = sig[n];
-    for k in 1..window.len() {
-        window[k] = if n >= k { sig[n - k] } else { delay[k - n - 1] };
-    }
-}
-
-/// Persist the newest `delay.len()` samples of `sig` (newest first).
-fn save_delay(delay: &mut [f32], sig: &[f32]) {
-    let len = sig.len();
-    for (j, d) in delay.iter_mut().enumerate() {
-        *d = sig[len - 1 - j];
-    }
-}
-
-/// MP FIR output for one sample (paper eq. 9):
-/// `MP([h + w, -h - w]) - MP([h - w, -h + w])` — the multiplierless
-/// approximation of the inner product `h . w`.
-fn mp_fir_eval(h: &[f32], w: &[f32], gamma: f32, plus: &mut [f32], minus: &mut [f32]) -> f32 {
-    let m = h.len();
-    for k in 0..m {
-        plus[k] = h[k] + w[k];
-        plus[m + k] = -h[k] - w[k];
-        minus[k] = h[k] - w[k];
-        minus[m + k] = -h[k] + w[k];
-    }
-    mp::mp(&plus[..2 * m], gamma) - mp::mp(&minus[..2 * m], gamma)
 }
 
 impl InferenceBackend for CpuEngine {
@@ -346,20 +338,51 @@ impl InferenceBackend for CpuEngine {
         Ok(self.frame_features(state, frame))
     }
 
+    fn mp_frame_features_into(
+        &mut self,
+        state: &mut StreamState,
+        frame: &[f32],
+        phi_out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(frame.len() == self.frame_len, "frame length mismatch");
+        ensure!(phi_out.len() == self.plan.n_filters(), "phi length mismatch");
+        self.kernel
+            .process_frame(&mut self.scratch, state, frame, phi_out);
+        Ok(())
+    }
+
     fn mp_frame_features_b8(
         &mut self,
         states: &mut [StreamState],
         frames: &[&[f32]],
     ) -> Result<Vec<Vec<f32>>> {
+        let p = self.plan.n_filters();
+        let mut flat = vec![0.0f32; 8 * p];
+        self.mp_frame_features_b8_into(states, frames, &mut flat)?;
+        Ok(flat.chunks(p).map(<[f32]>::to_vec).collect())
+    }
+
+    fn mp_frame_features_b8_into(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+        phi_out: &mut [f32],
+    ) -> Result<()> {
         ensure!(
             states.len() == 8 && frames.len() == 8,
             "b8 path needs exactly 8 lanes"
         );
-        let mut out = Vec::with_capacity(8);
-        for (s, f) in states.iter_mut().zip(frames) {
-            out.push(self.frame_features(s, f));
-        }
-        Ok(out)
+        ensure!(
+            frames.iter().all(|f| f.len() == self.frame_len),
+            "frame length mismatch"
+        );
+        ensure!(
+            phi_out.len() == 8 * self.plan.n_filters(),
+            "phi length mismatch"
+        );
+        self.kernel
+            .process_frame_b8(&mut self.scratch, states, frames, phi_out);
+        Ok(())
     }
 
     fn inference(
@@ -394,7 +417,7 @@ mod tests {
     fn streaming_frames_match_batch_bank() {
         // two frames through the streaming state must equal the one-shot
         // MpMultirateBank features over the concatenated clip
-        let eng = small_engine();
+        let mut eng = small_engine();
         let clip = &esc10::synth_clip(3, 6, 1).samples[..2 * 2048];
         let mut state = InferenceBackend::zero_state(&eng);
         let mut acc = vec![0.0f32; 30];
@@ -412,8 +435,30 @@ mod tests {
     }
 
     #[test]
+    fn fast_kernel_matches_exact_reference() {
+        // the golden old-vs-new equivalence at engine level: the block
+        // kernel vs the verbatim pre-kernel sort loop, streaming state
+        let mut eng = small_engine();
+        let clip = &esc10::synth_clip(4, 3, 2).samples[..2 * 2048];
+        let mut st_new = InferenceBackend::zero_state(&eng);
+        let mut st_old = InferenceBackend::zero_state(&eng);
+        for (f, frame) in clip.chunks(2048).enumerate() {
+            let phi_new = eng.frame_features(&mut st_new, frame);
+            let phi_old = eng.frame_features_exact(&mut st_old, frame);
+            for (i, (a, b)) in phi_new.iter().zip(&phi_old).enumerate() {
+                let denom = b.abs().max(1.0);
+                assert!(
+                    (a - b).abs() / denom < 5e-3,
+                    "frame {f} band {i}: new {a} old {b}"
+                );
+            }
+            assert_eq!(st_new, st_old, "frame {f} state");
+        }
+    }
+
+    #[test]
     fn clip_features_equals_manual_accumulation() {
-        let eng = small_engine();
+        let mut eng = small_engine();
         let clip = &esc10::synth_clip(5, 2, 0).samples[..2 * 2048];
         let via_clip = eng.clip_features(clip);
         let mut state = InferenceBackend::zero_state(&eng);
@@ -451,6 +496,42 @@ mod tests {
             assert_eq!(phis8[i], phi1, "lane {i}");
             assert_eq!(states[i], st, "lane {i} state");
         }
+    }
+
+    #[test]
+    fn b8_into_flat_layout_matches_vec_api() {
+        let mut eng = fast_engine();
+        let p = InferenceBackend::n_filters(&eng);
+        let clips: Vec<Vec<f32>> = (0..8)
+            .map(|i| crate::dsp::chirp::tone(300.0 * (i + 1) as f64, 512, 16_000.0, 0.4))
+            .collect();
+        let frames: Vec<&[f32]> = clips.iter().map(Vec::as_slice).collect();
+        let mut states_a: Vec<StreamState> = (0..8)
+            .map(|_| InferenceBackend::zero_state(&eng))
+            .collect();
+        let mut states_b = states_a.clone();
+        let mut flat = vec![0.0f32; 8 * p];
+        eng.mp_frame_features_b8_into(&mut states_a, &frames, &mut flat)
+            .unwrap();
+        let phis = eng.mp_frame_features_b8(&mut states_b, &frames).unwrap();
+        for s in 0..8 {
+            assert_eq!(flat[s * p..(s + 1) * p], phis[s][..], "lane {s}");
+            assert_eq!(states_a[s], states_b[s], "lane {s} state");
+        }
+    }
+
+    #[test]
+    fn into_path_matches_allocating_path() {
+        let mut eng = fast_engine();
+        let frame = crate::dsp::chirp::tone(800.0, 512, 16_000.0, 0.5);
+        let mut st_a = InferenceBackend::zero_state(&eng);
+        let mut st_b = InferenceBackend::zero_state(&eng);
+        let mut phi_a = vec![0.0f32; InferenceBackend::n_filters(&eng)];
+        eng.mp_frame_features_into(&mut st_a, &frame, &mut phi_a)
+            .unwrap();
+        let phi_b = eng.mp_frame_features(&mut st_b, &frame).unwrap();
+        assert_eq!(phi_a, phi_b);
+        assert_eq!(st_a, st_b);
     }
 
     #[test]

@@ -136,6 +136,27 @@ fn table3_harness_smoke() {
 }
 
 #[test]
+fn cpu_kernel_matches_exact_reference_no_artifacts() {
+    // PR 3 acceptance, artifact-free: the shared block kernel the
+    // serving path runs (mp::kernel) against the verbatim sort-based
+    // reference, on the full paper plan with streaming state
+    use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+    let plan = infilter::dsp::multirate::BandPlan::paper_default();
+    let mut eng = CpuEngine::new(&plan, 1.0);
+    let clip = esc10::synth_clip(2, 4, 9);
+    let frame = &clip.samples[..2048];
+    let mut st_new = eng.zero_state();
+    let mut st_old = eng.zero_state();
+    let phi_new = eng.mp_frame_features(&mut st_new, frame).unwrap();
+    let phi_old = eng.frame_features_exact(&mut st_old, frame);
+    assert_eq!(st_new, st_old, "delay-line state must carry identically");
+    for (i, (a, b)) in phi_new.iter().zip(&phi_old).enumerate() {
+        let denom = b.abs().max(1.0);
+        assert!((a - b).abs() / denom < 5e-3, "band {i}: new {a} old {b}");
+    }
+}
+
+#[test]
 fn figure_harnesses_produce_csvs() {
     let plan = infilter::dsp::multirate::BandPlan::paper_default();
     let (ta, _) = figures::fig4a(&plan, 4096);
