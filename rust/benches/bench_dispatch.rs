@@ -8,11 +8,16 @@
 //! trades against.
 
 use infilter::bench_util::Bench;
-use infilter::coordinator::{BatcherPolicy, FrameTask, Lane, PipelineBuilder, ShardedPipeline};
+use infilter::coordinator::{
+    BatcherPolicy, FrameTask, Lane, PipelineBuilder, ShardedPipeline,
+};
 use infilter::dsp::multirate::BandPlan;
+use infilter::net::node::pipeline_factory;
+use infilter::net::{serve_node, NodeConfig, RemoteConfig, RemoteLane};
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::train::TrainedModel;
 use infilter::util::prng::Pcg32;
+use std::net::TcpListener;
 use std::time::Instant;
 
 const FRAME_LEN: usize = 256;
@@ -104,6 +109,42 @@ fn main() {
                 let (report, _) = lane.finish();
                 assert_eq!(report.clips_classified, total_clips);
                 assert!(report.batch.wide_dispatches > 0);
+                report.clips_classified
+            },
+        );
+    }
+
+    // the same workload through a loopback TCP node: connect + credit
+    // flow + frame serialisation + drain barrier + report — the whole
+    // cross-process tax relative to pipeline_1lane, tracked from day one
+    {
+        let (eng, m, tasks) = (eng.clone(), m.clone(), tasks.clone());
+        let fp = m.fingerprint();
+        b.run_with_throughput(
+            "dispatch/remote_1node",
+            Some((total_clips as f64, "clips")),
+            || {
+                let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap().to_string();
+                let (eng, m) = (eng.clone(), m.clone());
+                let node = std::thread::spawn(move || {
+                    serve_node(
+                        listener,
+                        pipeline_factory(eng, m, 64),
+                        fp,
+                        NodeConfig::default(),
+                        Some(1),
+                    )
+                    .unwrap();
+                });
+                let mut lane = RemoteLane::connect(&addr, fp, RemoteConfig::default()).unwrap();
+                for t in tasks.clone() {
+                    assert!(lane.push(t));
+                }
+                lane.drain().unwrap();
+                let (report, _) = lane.finish().unwrap();
+                node.join().unwrap();
+                assert_eq!(report.clips_classified, total_clips);
                 report.clips_classified
             },
         );

@@ -1,0 +1,113 @@
+//! `infilter-node` — a cross-process classification worker: hosts a
+//! local compute lane (single pipeline or `--shards N` sharded) behind
+//! a TCP listener and serves gateways speaking the `infilter` wire
+//! protocol (`serve --connect`, `edge-fleet --connect`; DESIGN.md §10).
+//!
+//! The node and its gateways must hold the same model. Either pass the
+//! same `--model model.json` to both, or let both sides default to the
+//! deterministic quick CPU model with the same `--seed`/`--scale`/
+//! `--epochs` — the handshake's model fingerprint enforces agreement
+//! and rejects mismatched peers before any audio is shipped.
+
+use anyhow::{Context, Result};
+use infilter::coordinator::dispatch::{ClassifySink, PipelineBuilder};
+use infilter::coordinator::shard::{AnyLane, ShardedPipeline};
+use infilter::coordinator::ClassifyResult;
+use infilter::net::{serve_node, NodeConfig};
+use infilter::runtime::backend::CpuEngine;
+use infilter::train::{quick_cpu_model, TrainedModel};
+use infilter::util::cli::Args;
+use std::net::TcpListener;
+use std::path::Path;
+
+const USAGE: &str = "\
+infilter-node — remote classification worker for `serve --connect`
+
+USAGE: infilter-node [options]
+
+  --listen ADDR   bind address (default 127.0.0.1:7171; use :0 for an
+                  ephemeral port, printed at startup)
+  --shards N      compute lanes inside this node (default 1)
+  --credits N     in-flight frame window per gateway (default 256)
+  --queue N       per-stream frame buffer inside the lane (default 32)
+  --model PATH    serve this model (must match the gateway's)
+  --seed N --scale S --epochs E
+                  quick-model training knobs when no --model is given
+                  (defaults 42 / 0.05 / 30 — the gateway defaults)
+  --gamma-f X     filter-bank gamma (default 1.0)
+  --threads N     feature-extraction threads for the quick model
+  --max-conns N   serve N sessions then exit (tests/benches)
+  --log LEVEL     debug|info|warn";
+
+fn main() {
+    let args = Args::from_env();
+    infilter::util::logging::set_level_from_str(args.get_or("log", "info"));
+    if args.flag("help") {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let gamma_f = args.get_f64("gamma-f", 1.0) as f32;
+    let threads = args.get_usize(
+        "threads",
+        std::thread::available_parallelism().map_or(4, |n| n.get()),
+    );
+    let model = match args.get("model") {
+        Some(path) => TrainedModel::load(Path::new(path))?,
+        None => quick_cpu_model(
+            seed,
+            args.get_f64("scale", 0.05),
+            args.get_usize("epochs", 30),
+            gamma_f,
+            threads,
+        ),
+    };
+    let fingerprint = model.fingerprint();
+
+    let shards = args.get_usize("shards", 1).max(1);
+    let queue = args.get_usize("queue", 32);
+    let cfg = NodeConfig {
+        credits: args.get_usize("credits", 256).min(u32::MAX as usize) as u32,
+    };
+    let max_conns = args.get("max-conns").map(|_| args.get_usize("max-conns", 1));
+
+    let listen = args.get_or("listen", "127.0.0.1:7171");
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding node listener on {listen}"))?;
+
+    // one engine template, cloned per connection (and per lane when
+    // sharded) — CpuEngine clones are cheap and fully independent
+    let plan = infilter::dsp::multirate::BandPlan::paper_default();
+    let engine = CpuEngine::new(&plan, gamma_f);
+    let factory = move |tx: std::sync::mpsc::Sender<ClassifyResult>| -> Result<AnyLane<CpuEngine>> {
+        let sink: Box<dyn ClassifySink> = Box::new(move |r: &ClassifyResult| {
+            let _ = tx.send(r.clone());
+        });
+        if shards > 1 {
+            let eng = engine.clone();
+            Ok(AnyLane::Sharded(
+                ShardedPipeline::builder(shards, move |_| Ok(eng.clone()), model.clone())
+                    .queue_capacity(queue)
+                    .sink(sink)
+                    .collect_results(false)
+                    .build()?,
+            ))
+        } else {
+            Ok(AnyLane::Single(
+                PipelineBuilder::new(engine.clone(), model.clone())
+                    .queue_capacity(queue)
+                    .sink(sink)
+                    .collect_results(false)
+                    .build(),
+            ))
+        }
+    };
+    serve_node(listener, factory, fingerprint, cfg, max_conns)
+}

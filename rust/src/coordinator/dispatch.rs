@@ -17,8 +17,9 @@ use crate::runtime::backend::InferenceBackend;
 use crate::runtime::engine::StreamState;
 use crate::train::TrainedModel;
 use crate::util::stats::argmax;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Streaming consumer of classified clips. A pipeline calls this the
 /// moment a clip completes, before the result lands in the collected
@@ -46,11 +47,27 @@ pub trait Lane {
     /// frame into a channel and account drops in their lane reports.
     fn push(&mut self, task: FrameTask) -> bool;
     /// Opportunistic progress: process some buffered work if any is due.
-    /// Returns the number of frames advanced (0 = idle). Sharded lanes
-    /// make progress autonomously and use this to pump back results.
+    /// Returns a progress count (0 = idle): frames advanced for a
+    /// synchronous lane; results pumped back for lanes that compute
+    /// autonomously (sharded workers, remote nodes).
     fn service(&mut self) -> Result<usize>;
     /// Block until every frame pushed so far has been processed.
     fn drain(&mut self) -> Result<()>;
+    /// Classify incomplete tail clips by zero-padding their missing
+    /// frames (after draining the queues), matching the fixed-pipeline
+    /// convention that a short capture is evaluated against silence
+    /// rather than held forever. Returns the number of clips flushed.
+    /// This is an *end-of-stream* operation — callers that drain
+    /// mid-capture (the edge fleet's per-tick barrier) must not use it,
+    /// or clips still being recorded would classify early. Every lane
+    /// shape honours the same contract (a [`RemoteLane`] forwards the
+    /// request to its node over the wire); the default no-op covers
+    /// lanes with nothing to pad.
+    ///
+    /// [`RemoteLane`]: crate::net::lane::RemoteLane
+    fn flush_tails(&mut self) -> Result<u64> {
+        Ok(0)
+    }
     /// Clips classified so far (monotonic; exact after a `drain`).
     fn clips_classified(&self) -> u64;
     fn frame_len(&self) -> usize;
@@ -297,12 +314,71 @@ impl<B: InferenceBackend> Pipeline<B> {
     /// rather than a tick's processed count: a tick can legitimately
     /// process 0 frames (stale-only queues) while later streams still
     /// hold work, and every tick over a non-empty store pops at least
-    /// one frame, so this terminates.
+    /// one frame, so this terminates. A tick that neither processes nor
+    /// pops anything while frames are still pending would spin forever —
+    /// that invariant violation is converted into an error instead of a
+    /// livelock, so a wire-level drain barrier waiting on this lane
+    /// always comes back.
     pub fn drain(&mut self) -> Result<()> {
-        while self.pending() > 0 {
-            self.tick()?;
+        loop {
+            let before = self.pending();
+            if before == 0 {
+                return Ok(());
+            }
+            let n = self.tick()?;
+            if n == 0 && self.pending() == before {
+                bail!(
+                    "pipeline drain stalled: {before} frames pending but no \
+                     stream can make progress"
+                );
+            }
         }
-        Ok(())
+    }
+
+    /// Zero-pad and classify clips stranded mid-accumulation: after the
+    /// queues drain, any stream with `0 < frames_done < clip_frames` can
+    /// never complete on its own (its remaining frames are not coming),
+    /// so the missing tail is filled with silence and the clip
+    /// classified — the same convention the fixed-point pipeline applies
+    /// to short captures. Counted in [`ServeReport::clips_padded`].
+    /// Returns the number of clips flushed. End-of-stream only; see
+    /// [`Lane::flush_tails`].
+    pub fn flush_tails(&mut self) -> Result<u64> {
+        self.drain()?;
+        let mut flushed = 0u64;
+        let mut first = true;
+        loop {
+            let tails = self.store.partial_tails(self.clip_frames);
+            if tails.is_empty() {
+                break;
+            }
+            if first {
+                // a stream has at most one in-flight clip, and no new
+                // tails can appear while we pad, so the first round
+                // already names every clip this call will flush
+                flushed = tails.len() as u64;
+                first = false;
+            }
+            for (stream, clip_seq, frames_done, label) in tails {
+                // fill up to queue capacity per round; deeper deficits
+                // drain and come around again
+                let n = (self.clip_frames - frames_done).min(self.store.queue_capacity.max(1));
+                for k in 0..n {
+                    let pushed = self.store.push(FrameTask {
+                        stream,
+                        clip_seq,
+                        frame_idx: frames_done + k,
+                        data: self.zero_frame.clone(),
+                        label,
+                        t_gen: Instant::now(),
+                    });
+                    debug_assert!(pushed, "tail padding within queue capacity");
+                }
+            }
+            self.drain()?;
+        }
+        self.report.clips_padded += flushed;
+        Ok(flushed)
     }
 
     /// Finalise batching stats into the report and hand everything back.
@@ -409,6 +485,10 @@ impl<B: InferenceBackend> Lane for Pipeline<B> {
 
     fn drain(&mut self) -> Result<()> {
         Pipeline::drain(self)
+    }
+
+    fn flush_tails(&mut self) -> Result<u64> {
+        Pipeline::flush_tails(self)
     }
 
     fn clips_classified(&self) -> u64 {
@@ -530,6 +610,98 @@ mod tests {
         let (report, collected) = pipe.finish();
         assert_eq!(report.clips_classified, 1);
         assert!(collected.is_empty(), "collection disabled");
+    }
+
+    #[test]
+    fn drain_leaves_partial_tail_and_flush_tails_pads_it() {
+        // a stream that stops mid-clip (1 of 2 frames): drain must not
+        // spin or classify it; flush_tails zero-pads and classifies
+        let eng = engine();
+        let m = model(3, eng.n_filters());
+        let mut pipe = PipelineBuilder::new(eng, m).queue_capacity(8).build();
+        pipe.push(task(2, 0, 0, 64));
+        pipe.drain().unwrap();
+        assert_eq!(pipe.report().clips_classified, 0, "clip incomplete");
+        assert_eq!(pipe.pending(), 0);
+        let flushed = pipe.flush_tails().unwrap();
+        assert_eq!(flushed, 1);
+        let (report, results) = pipe.finish();
+        assert_eq!(report.clips_classified, 1);
+        assert_eq!(report.clips_padded, 1);
+        assert_eq!(results.len(), 1);
+        assert_eq!((results[0].stream, results[0].clip_seq), (2, 0));
+    }
+
+    #[test]
+    fn flush_tails_matches_explicit_zero_frames() {
+        let mk = || {
+            let eng = engine();
+            let m = model(3, eng.n_filters());
+            PipelineBuilder::new(eng, m).queue_capacity(8).build()
+        };
+        let data: Vec<f32> = (0..64).map(|i| (i as f32 * 0.001).sin()).collect();
+        let frame = FrameTask {
+            stream: 4,
+            clip_seq: 0,
+            frame_idx: 0,
+            data: data.clone(),
+            label: 1,
+            t_gen: Instant::now(),
+        };
+        // flushed: one real frame, tail padded
+        let mut flushed = mk();
+        flushed.push(frame.clone());
+        flushed.flush_tails().unwrap();
+        let (_, fr) = flushed.finish();
+        // explicit: the same real frame plus a hand-made zero frame
+        let mut explicit = mk();
+        explicit.push(frame);
+        explicit.push(FrameTask {
+            stream: 4,
+            clip_seq: 0,
+            frame_idx: 1,
+            data: vec![0.0; 64],
+            label: 1,
+            t_gen: Instant::now(),
+        });
+        explicit.drain().unwrap();
+        let (_, er) = explicit.finish();
+        assert_eq!(fr.len(), 1);
+        assert_eq!(er.len(), 1);
+        assert_eq!(fr[0].predicted, er[0].predicted);
+        assert_eq!(fr[0].p, er[0].p, "padded tail must be bit-identical");
+    }
+
+    #[test]
+    fn flush_tails_is_noop_on_complete_clips() {
+        let eng = engine();
+        let m = model(3, eng.n_filters());
+        let mut pipe = PipelineBuilder::new(eng, m).queue_capacity(8).build();
+        for f in 0..2 {
+            pipe.push(task(0, 0, f, 64));
+        }
+        assert_eq!(pipe.flush_tails().unwrap(), 0);
+        let (report, _) = pipe.finish();
+        assert_eq!(report.clips_classified, 1);
+        assert_eq!(report.clips_padded, 0);
+    }
+
+    #[test]
+    fn flush_tails_pads_deficits_deeper_than_queue_capacity() {
+        // clip_frames 4 with queue capacity 2: the 3-frame deficit needs
+        // two padding rounds
+        let mut plan = crate::dsp::multirate::BandPlan::paper_default();
+        plan.n_octaves = 2;
+        let eng = CpuEngine::with_clip(&plan, 1.0, 64, 4);
+        let m = model(3, eng.n_filters());
+        let mut pipe = PipelineBuilder::new(eng, m).queue_capacity(2).build();
+        pipe.push(task(1, 0, 0, 64));
+        pipe.drain().unwrap();
+        assert_eq!(pipe.flush_tails().unwrap(), 1);
+        let (report, results) = pipe.finish();
+        assert_eq!(report.clips_classified, 1);
+        assert_eq!(report.clips_padded, 1);
+        assert_eq!(results.len(), 1);
     }
 
     #[test]

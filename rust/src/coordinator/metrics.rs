@@ -35,6 +35,9 @@ pub struct ServeReport {
     pub clips_correct: u64,
     pub frames_dropped: u64,
     pub clips_aborted: u64,
+    /// clips whose missing tail frames were zero-padded at flush time
+    /// (see [`Pipeline::flush_tails`](super::Pipeline::flush_tails))
+    pub clips_padded: u64,
     pub wall_time: Duration,
     pub audio_seconds: f64,
     pub latency: LatencyHist,
@@ -50,12 +53,20 @@ impl ServeReport {
     /// per-lane breakdown: counters sum, latency histograms merge,
     /// wall time is the slowest lane (they ran concurrently).
     pub fn merge<I: IntoIterator<Item = ServeReport>>(lanes: I) -> ServeReport {
+        ServeReport::merge_indexed(lanes.into_iter().enumerate())
+    }
+
+    /// [`merge`](Self::merge) with caller-supplied lane indices, for
+    /// merges over a *subset* of lanes (e.g. the survivors of a lane
+    /// death) where renumbering would misattribute the breakdown.
+    pub fn merge_indexed<I: IntoIterator<Item = (usize, ServeReport)>>(lanes: I) -> ServeReport {
         let mut out = ServeReport::default();
-        for (i, r) in lanes.into_iter().enumerate() {
+        for (i, r) in lanes {
             out.clips_classified += r.clips_classified;
             out.clips_correct += r.clips_correct;
             out.frames_dropped += r.frames_dropped;
             out.clips_aborted += r.clips_aborted;
+            out.clips_padded += r.clips_padded;
             out.wall_time = out.wall_time.max(r.wall_time);
             out.audio_seconds += r.audio_seconds;
             out.latency.merge(&r.latency);
@@ -99,13 +110,14 @@ impl ServeReport {
 
     pub fn render(&self) -> String {
         let mut s = format!(
-            "clips={} acc={:.1}% aborted={} dropped_frames={}\n\
+            "clips={} acc={:.1}% aborted={} padded={} dropped_frames={}\n\
              wall={:.2}s audio={:.1}s realtime_factor={:.2}x clips/s={:.2}\n\
              latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms max={:.1}ms\n\
              batching: wide={} (mean occupancy {:.2}) narrow={} frames={}",
             self.clips_classified,
             100.0 * self.accuracy(),
             self.clips_aborted,
+            self.clips_padded,
             self.frames_dropped,
             self.wall_time.as_secs_f64(),
             self.audio_seconds,
@@ -178,6 +190,28 @@ mod tests {
         assert_eq!(m.per_lane[0].frames, 32);
         assert_eq!(m.per_lane[1].clips, 6);
         assert!(m.render().contains("lanes:"), "{}", m.render());
+    }
+
+    #[test]
+    fn merge_indexed_keeps_caller_lane_ids() {
+        // merging a survivor subset (lanes 0, 2, 3 of a 4-lane run) must
+        // keep the original lane ids in the breakdown
+        let mut reports = Vec::new();
+        for lane in [0usize, 2, 3] {
+            let mut r = ServeReport {
+                clips_classified: lane as u64 + 1,
+                ..Default::default()
+            };
+            r.batch.record_narrow(10 * (lane + 1));
+            reports.push((lane, r));
+        }
+        let m = ServeReport::merge_indexed(reports);
+        assert_eq!(m.clips_classified, 1 + 3 + 4);
+        assert_eq!(m.per_lane.len(), 3);
+        let ids: Vec<usize> = m.per_lane.iter().map(|l| l.lane).collect();
+        assert_eq!(ids, vec![0, 2, 3]);
+        assert_eq!(m.per_lane[1].frames, 30);
+        assert_eq!(m.batch.frames_processed, 10 + 30 + 40);
     }
 
     #[test]

@@ -23,7 +23,18 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Which lane a stream routes to: Fibonacci multiplicative hash so
+/// adjacent stream ids spread across lanes. Shared by the in-process
+/// [`ShardedPipeline`] and the cross-process
+/// [`RemotePool`](crate::net::lane::RemotePool), so re-pointing a
+/// deployment from local lanes to remote nodes preserves the
+/// stream-to-lane mapping.
+pub fn route_stream(stream: u64, lanes: usize) -> usize {
+    let h = stream.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+    (h as usize) % lanes.max(1)
+}
 
 /// Commands the router sends a lane worker. Teardown is signalled by
 /// dropping the command sender, not by a message.
@@ -31,6 +42,8 @@ enum LaneCmd {
     Task(FrameTask),
     /// Process everything received so far, then ack.
     Barrier(mpsc::Sender<()>),
+    /// Drain, zero-pad stranded tail clips, ack with the flush count.
+    FlushTails(mpsc::Sender<u64>),
 }
 
 /// Clip geometry a worker reports back once its backend is built.
@@ -46,6 +59,13 @@ pub struct ShardedPipeline {
     results_rx: mpsc::Receiver<ClassifyResult>,
     done_rx: mpsc::Receiver<(usize, Result<ServeReport>)>,
     workers: Vec<JoinHandle<()>>,
+    /// lane reports consumed off `done_rx` while hunting a death cause —
+    /// folded back into the final merge so surviving lanes' stats are
+    /// not lost to the diagnosis
+    early_reports: Vec<(usize, ServeReport)>,
+    /// lanes whose failure has already been returned to the caller (so
+    /// `finish` can merge the survivors instead of failing twice)
+    surfaced_failures: Vec<usize>,
     results: Vec<ClassifyResult>,
     /// results seen by the owner (still counted when `collect` is off)
     classified: u64,
@@ -226,6 +246,8 @@ impl ShardedPipeline {
             results_rx,
             done_rx,
             workers,
+            early_reports: Vec::new(),
+            surfaced_failures: Vec::new(),
             results: Vec::new(),
             classified: 0,
             sink: b.sink,
@@ -241,11 +263,9 @@ impl ShardedPipeline {
         self.cmds.len()
     }
 
-    /// Which lane a stream routes to: Fibonacci multiplicative hash so
-    /// adjacent stream ids spread across lanes.
+    /// Which lane a stream routes to ([`route_stream`]).
     pub fn route(&self, stream: u64) -> usize {
-        let h = stream.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
-        (h as usize) % self.cmds.len()
+        route_stream(stream, self.cmds.len())
     }
 
     /// Move results that arrived from the lanes into the owner-side
@@ -269,14 +289,35 @@ impl ShardedPipeline {
         self.classified += 1;
     }
 
-    /// A lane died mid-run: surface the worker's own error (already
-    /// queued on `done_rx`) rather than a generic "worker died", so the
-    /// operator sees the root cause (which backend call failed).
-    /// `lane == usize::MAX` means the dead lane's index is unknown.
-    fn lane_death_cause(&self, lane: usize) -> anyhow::Error {
-        while let Ok((l, report)) = self.done_rx.try_recv() {
-            if let Err(e) = report {
-                return e.context(format!("lane {l} worker failed"));
+    /// A lane died mid-run: surface the worker's own error (queued, or
+    /// about to be queued, on `done_rx`) rather than a generic "worker
+    /// died", so the operator sees the root cause (which backend call
+    /// failed). Any `Ok(report)` consumed on the way — a lane that
+    /// finished cleanly while another was dying — is stashed in
+    /// `early_reports` and folded into the final merge by
+    /// [`Lane::finish`], so surviving lanes' stats are not discarded
+    /// with the diagnosis. `lane == usize::MAX` means the dead lane's
+    /// index is unknown.
+    fn lane_death_cause(&mut self, lane: usize) -> anyhow::Error {
+        // a death already reported to the caller has no fresh message
+        // coming — answer immediately instead of waiting out the race
+        // window below
+        if lane != usize::MAX && self.surfaced_failures.contains(&lane) {
+            return anyhow!("lane {lane} worker died earlier; its frames are lost");
+        }
+        // the worker sends its error just before exiting; a failed
+        // `send`/ack proves a death happened, so a short blocking wait
+        // is safe and closes the exit-vs-report race
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.done_rx.recv_timeout(left) {
+                Ok((l, Ok(report))) => self.early_reports.push((l, report)),
+                Ok((l, Err(e))) => {
+                    self.surfaced_failures.push(l);
+                    return e.context(format!("lane {l} worker failed"));
+                }
+                Err(_) => break,
             }
         }
         if lane == usize::MAX {
@@ -299,9 +340,9 @@ impl Lane for ShardedPipeline {
 
     fn service(&mut self) -> Result<usize> {
         // lanes progress autonomously; the owner's contribution is
-        // draining the results channel
-        self.pump_results();
-        Ok(0)
+        // draining the results channel — the count lets pollers
+        // distinguish "results flowing" from "genuinely idle"
+        Ok(self.pump_results())
     }
 
     /// Barrier over every lane: each lane finishes everything received
@@ -311,8 +352,8 @@ impl Lane for ShardedPipeline {
     /// drain rather than silently losing that lane's share of the work.
     fn drain(&mut self) -> Result<()> {
         let (ack_tx, ack_rx) = mpsc::channel::<()>();
-        for (lane, cmd) in self.cmds.iter().enumerate() {
-            if cmd.send(LaneCmd::Barrier(ack_tx.clone())).is_err() {
+        for lane in 0..self.cmds.len() {
+            if self.cmds[lane].send(LaneCmd::Barrier(ack_tx.clone())).is_err() {
                 return Err(self.lane_death_cause(lane));
             }
         }
@@ -324,6 +365,31 @@ impl Lane for ShardedPipeline {
         }
         self.pump_results();
         Ok(())
+    }
+
+    /// [`Pipeline::flush_tails`] on every lane, behind the same barrier
+    /// protocol as [`drain`](Lane::drain). Returns the total number of
+    /// zero-padded clips across lanes.
+    fn flush_tails(&mut self) -> Result<u64> {
+        let (ack_tx, ack_rx) = mpsc::channel::<u64>();
+        for lane in 0..self.cmds.len() {
+            if self.cmds[lane]
+                .send(LaneCmd::FlushTails(ack_tx.clone()))
+                .is_err()
+            {
+                return Err(self.lane_death_cause(lane));
+            }
+        }
+        drop(ack_tx);
+        let mut flushed = 0u64;
+        for _ in 0..self.cmds.len() {
+            match ack_rx.recv() {
+                Ok(n) => flushed += n,
+                Err(_) => return Err(self.lane_death_cause(usize::MAX)),
+            }
+        }
+        self.pump_results();
+        Ok(flushed)
     }
 
     fn clips_classified(&self) -> u64 {
@@ -344,20 +410,31 @@ impl Lane for ShardedPipeline {
 
     /// Close the command channels, join every worker, merge the lane
     /// reports (per-lane breakdown included) and return all results.
+    ///
+    /// Lane reports already consumed while diagnosing a lane death
+    /// (`early_reports`) are folded back in, and a failure that was
+    /// *already surfaced* to the caller (the error a previous `drain`
+    /// returned) does not fail `finish` again — the merge then covers
+    /// the surviving lanes, keyed by their original lane ids, so one
+    /// dead lane does not erase everyone else's stats. A failure nobody
+    /// has seen yet still errors here.
     fn finish(mut self) -> Result<(ServeReport, Vec<ClassifyResult>)> {
-        let n = self.cmds.len();
+        let n = self.cmds.len(); // total lanes (dead ones keep their slot)
         self.cmds.clear(); // disconnect: workers drain and exit
         // results_rx disconnects once every worker drops its sender
         while let Ok(r) = self.results_rx.recv() {
             self.take_result(r);
         }
-        let mut lane_reports: Vec<(usize, Result<ServeReport>)> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let done = self
-                .done_rx
-                .recv()
-                .map_err(|_| anyhow!("lane worker died without reporting"))?;
-            lane_reports.push(done);
+        let mut lane_reports: Vec<(usize, ServeReport)> = std::mem::take(&mut self.early_reports);
+        let surfaced = std::mem::take(&mut self.surfaced_failures);
+        while lane_reports.len() + surfaced.len() < n {
+            match self.done_rx.recv() {
+                Ok((lane, Ok(report))) => lane_reports.push((lane, report)),
+                Ok((lane, Err(e))) => {
+                    return Err(e.context(format!("lane {lane} failed")));
+                }
+                Err(_) => bail!("lane worker died without reporting"),
+            }
         }
         for w in self.workers.drain(..) {
             if w.join().is_err() {
@@ -365,11 +442,7 @@ impl Lane for ShardedPipeline {
             }
         }
         lane_reports.sort_by_key(|(lane, _)| *lane);
-        let mut reports = Vec::with_capacity(n);
-        for (lane, r) in lane_reports {
-            reports.push(r.with_context(|| format!("lane {lane} failed"))?);
-        }
-        let mut merged = ServeReport::merge(reports);
+        let mut merged = ServeReport::merge_indexed(lane_reports);
         merged.wall_time = self.t0.elapsed();
         Ok((merged, std::mem::take(&mut self.results)))
     }
@@ -403,6 +476,13 @@ impl<B: InferenceBackend + 'static> Lane for AnyLane<B> {
         match self {
             AnyLane::Single(p) => p.drain(),
             AnyLane::Sharded(s) => Lane::drain(s),
+        }
+    }
+
+    fn flush_tails(&mut self) -> Result<u64> {
+        match self {
+            AnyLane::Single(p) => p.flush_tails(),
+            AnyLane::Sharded(s) => Lane::flush_tails(s),
         }
     }
 
@@ -492,6 +572,11 @@ where
             LaneCmd::Barrier(ack) => {
                 pipe.drain()?;
                 let _ = ack.send(());
+                Ok(())
+            }
+            LaneCmd::FlushTails(ack) => {
+                let n = pipe.flush_tails()?;
+                let _ = ack.send(n);
                 Ok(())
             }
         }
@@ -646,6 +731,154 @@ mod tests {
         )
         .build();
         assert!(err.is_err());
+    }
+
+    /// CpuEngine wrapper whose frame path fails on demand — induces a
+    /// mid-run lane death without touching the real backend.
+    struct FailingBackend {
+        inner: CpuEngine,
+        fail: bool,
+    }
+
+    impl crate::runtime::backend::InferenceBackend for FailingBackend {
+        fn frame_len(&self) -> usize {
+            self.inner.frame_len()
+        }
+
+        fn clip_frames(&self) -> usize {
+            self.inner.clip_frames()
+        }
+
+        fn n_filters(&self) -> usize {
+            self.inner.n_filters()
+        }
+
+        fn sample_rate(&self) -> f64 {
+            self.inner.sample_rate()
+        }
+
+        fn zero_state(&self) -> crate::runtime::engine::StreamState {
+            self.inner.zero_state()
+        }
+
+        fn mp_frame_features(
+            &mut self,
+            state: &mut crate::runtime::engine::StreamState,
+            frame: &[f32],
+        ) -> Result<Vec<f32>> {
+            anyhow::ensure!(!self.fail, "induced backend failure");
+            self.inner.mp_frame_features(state, frame)
+        }
+
+        fn mp_frame_features_b8(
+            &mut self,
+            states: &mut [crate::runtime::engine::StreamState],
+            frames: &[&[f32]],
+        ) -> Result<Vec<Vec<f32>>> {
+            anyhow::ensure!(!self.fail, "induced backend failure");
+            self.inner.mp_frame_features_b8(states, frames)
+        }
+
+        fn inference(
+            &mut self,
+            params: &crate::mp::machine::Params,
+            std: &crate::mp::machine::Standardizer,
+            phi: &[f32],
+            gamma_1: f32,
+        ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            self.inner.inference(params, std, phi, gamma_1)
+        }
+    }
+
+    #[test]
+    fn lane_death_keeps_surviving_lanes_stats() {
+        // 4 lanes, lane 1's backend fails on its first frame: drain must
+        // surface the root cause, and finish must still merge the other
+        // three lanes' reports under their original lane ids
+        let m = model(3, engine().n_filters());
+        let mut sharded = ShardedPipeline::builder(
+            4,
+            |lane| {
+                Ok(FailingBackend {
+                    inner: engine(),
+                    fail: lane == 1,
+                })
+            },
+            m,
+        )
+        .queue_capacity(64)
+        .build()
+        .unwrap();
+        let tasks = workload(16, 1);
+        let surviving_clips: u64 = (0..16u64).filter(|&s| sharded.route(s) != 1).count() as u64;
+        let dead_clips = 16 - surviving_clips;
+        assert!(dead_clips > 0, "workload must hit lane 1");
+        for t in tasks {
+            Lane::push(&mut sharded, t);
+        }
+        let err = Lane::drain(&mut sharded).expect_err("dead lane must fail the barrier");
+        assert!(
+            format!("{err:#}").contains("induced backend failure"),
+            "root cause surfaced: {err:#}"
+        );
+        let (merged, results) = Lane::finish(sharded).expect("finish merges the survivors");
+        assert_eq!(merged.clips_classified, surviving_clips);
+        assert_eq!(results.len(), surviving_clips as usize);
+        assert_eq!(merged.per_lane.len(), 3);
+        let ids: Vec<usize> = merged.per_lane.iter().map(|l| l.lane).collect();
+        assert_eq!(ids, vec![0, 2, 3], "survivors keep their lane ids");
+        assert_eq!(
+            merged.per_lane.iter().map(|l| l.frames).sum::<u64>(),
+            merged.batch.frames_processed
+        );
+        assert!(merged.per_lane.iter().all(|l| l.frames > 0));
+    }
+
+    #[test]
+    fn unsurfaced_lane_failure_still_fails_finish() {
+        // finish without an intervening drain: the failure has not been
+        // seen by anyone, so finish must report it
+        let m = model(3, engine().n_filters());
+        let mut sharded = ShardedPipeline::builder(
+            2,
+            |lane| {
+                Ok(FailingBackend {
+                    inner: engine(),
+                    fail: lane == 0,
+                })
+            },
+            m,
+        )
+        .build()
+        .unwrap();
+        for t in workload(8, 1) {
+            Lane::push(&mut sharded, t);
+        }
+        let err = Lane::finish(sharded).expect_err("unseen failure fails finish");
+        assert!(format!("{err:#}").contains("induced backend failure"));
+    }
+
+    #[test]
+    fn sharded_flush_tails_pads_all_lanes() {
+        let m = model(3, engine().n_filters());
+        let mut sharded = ShardedPipeline::builder(2, |_| Ok(engine()), m)
+            .queue_capacity(16)
+            .build()
+            .unwrap();
+        // 4 streams, each stops after 1 of its 2 clip frames
+        for t in workload(4, 1) {
+            if t.frame_idx == 0 {
+                Lane::push(&mut sharded, t);
+            }
+        }
+        Lane::drain(&mut sharded).unwrap();
+        assert_eq!(Lane::clips_classified(&sharded), 0);
+        assert_eq!(Lane::flush_tails(&mut sharded).unwrap(), 4);
+        assert_eq!(Lane::clips_classified(&sharded), 4);
+        let (report, results) = Lane::finish(sharded).unwrap();
+        assert_eq!(report.clips_classified, 4);
+        assert_eq!(report.clips_padded, 4);
+        assert_eq!(results.len(), 4);
     }
 
     #[test]

@@ -122,6 +122,21 @@ impl StateStore {
         self.streams.get_mut(&stream)?.queue.pop_front()
     }
 
+    /// Streams whose current clip has accumulated frames but cannot
+    /// complete from queued work: `0 < frames_done < clip_frames` with
+    /// an empty queue. Returns `(stream, clip_seq, frames_done, label)`
+    /// sorted by stream id so tail flushing is deterministic.
+    pub fn partial_tails(&self, clip_frames: usize) -> Vec<(u64, u64, usize, usize)> {
+        let mut tails: Vec<(u64, u64, usize, usize)> = self
+            .streams
+            .iter()
+            .filter(|(_, e)| e.queue.is_empty() && e.frames_done > 0 && e.frames_done < clip_frames)
+            .map(|(&id, e)| (id, e.clip_seq, e.frames_done, e.label))
+            .collect();
+        tails.sort_unstable();
+        tails
+    }
+
     /// [`StreamEntry::finish_clip`] without the caller having to borrow
     /// the zero state separately: the store lends its own template
     /// (disjoint field), keeping the per-clip reset allocation-free.
@@ -202,6 +217,30 @@ mod tests {
         assert_eq!(e.frames_done, 0);
         assert_eq!(e.state.lp[0], 0.0);
         assert!(e.clip_t0.is_none());
+    }
+
+    #[test]
+    fn partial_tails_lists_incomplete_unqueued_clips_only() {
+        let mut s = store();
+        // stream 1: partial clip (2 of 4 frames done), nothing queued
+        {
+            let e = s.entry(1);
+            e.frames_done = 2;
+            e.clip_seq = 7;
+            e.label = 3;
+        }
+        // stream 2: partial but still has queued work — not a tail
+        {
+            let e = s.entry(2);
+            e.frames_done = 1;
+        }
+        s.push(task(2, 1));
+        // stream 3: clip boundary (nothing accumulated) — not a tail
+        s.entry(3);
+        assert_eq!(s.partial_tails(4), vec![(1, 7, 2, 3)]);
+        // a complete clip is not a tail either
+        s.entry(1).frames_done = 4;
+        assert!(s.partial_tails(4).is_empty());
     }
 
     #[test]

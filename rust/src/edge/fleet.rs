@@ -251,8 +251,8 @@ impl FleetReport {
              ({:.2}/stream-hour)\n\
              classify: clips={} aborted={} dropped_frames={} | matched \
              accuracy {:.1}% ({}/{})\n\
-             uplink: sent {} msgs / {} B (dropped {}) vs raw {} B | \
-             bytes-saved {:.0}x",
+             uplink: sent {} msgs / {} B (dropped {} oversized {}) vs \
+             raw {} B | bytes-saved {:.0}x",
             self.streams,
             self.ticks,
             self.audio_seconds,
@@ -277,6 +277,7 @@ impl FleetReport {
             self.uplink.msgs_sent,
             self.uplink.bytes_sent,
             self.uplink.msgs_dropped,
+            self.uplink.msgs_oversized,
             self.uplink.raw_bytes_captured,
             self.bytes_saved_ratio,
         );
@@ -308,6 +309,7 @@ impl FleetReport {
         kv("uplink_msgs_sent", self.uplink.msgs_sent.to_string());
         kv("uplink_bytes_sent", self.uplink.bytes_sent.to_string());
         kv("uplink_msgs_dropped", self.uplink.msgs_dropped.to_string());
+        kv("uplink_msgs_oversized", self.uplink.msgs_oversized.to_string());
         kv("raw_bytes_captured", self.uplink.raw_bytes_captured.to_string());
         kv("bytes_saved_ratio", format!("{:.1}", self.bytes_saved_ratio));
         kv("wall_seconds", format!("{:.3}", self.wall.as_secs_f64()));
@@ -407,6 +409,9 @@ pub fn run_fleet<L: Lane>(
         lane.sample_rate(),
         cfg.sample_rate
     );
+    // fail at config time rather than silently black-holing every clip
+    // report against a burst that can never hold one
+    cfg.uplink.validate(cfg.frame_len * cfg.clip_frames)?;
     let period = (cfg.duty_awake + cfg.duty_sleep).max(1);
     let mut ground_truth: Vec<GroundTruthEvent> = Vec::new();
     let mut streams: Vec<SensorStream> = (0..cfg.n_streams)
@@ -608,7 +613,7 @@ mod tests {
         assert_eq!(report.uplink.msgs_sent, report.clips_classified);
         // report renders and tabulates without panicking
         assert!(report.render().contains("bytes-saved"));
-        assert_eq!(report.table().rows.len(), 21);
+        assert_eq!(report.table().rows.len(), 22);
     }
 
     #[test]

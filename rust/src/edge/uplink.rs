@@ -31,6 +31,41 @@ impl Default for UplinkConfig {
     }
 }
 
+impl UplinkConfig {
+    /// The largest single message this config can produce: one event
+    /// report, plus the clip audio when clip upload is on.
+    pub fn max_msg_bytes(&self, clip_samples: usize) -> usize {
+        let mut bytes = self.event_msg_bytes;
+        if self.upload_clips {
+            bytes += clip_samples * self.bytes_per_sample;
+        }
+        bytes
+    }
+
+    /// Config-time guard against permanently unsendable messages: a
+    /// token bucket can never accumulate more than `burst_bytes`, so any
+    /// message larger than the burst would be dropped forever no matter
+    /// how idle the link is. Callers that know their clip geometry
+    /// (e.g. [`run_fleet`](crate::edge::fleet::run_fleet)) validate up
+    /// front instead of discovering the black hole in the drop stats.
+    pub fn validate(&self, clip_samples: usize) -> anyhow::Result<()> {
+        let max = self.max_msg_bytes(clip_samples);
+        anyhow::ensure!(
+            max as f64 <= self.burst_bytes,
+            "uplink burst ({} B) cannot hold the largest message ({} B{}); \
+             raise burst_bytes or disable clip upload",
+            self.burst_bytes,
+            max,
+            if self.upload_clips {
+                " with clip upload on"
+            } else {
+                ""
+            }
+        );
+        Ok(())
+    }
+}
+
 /// Classic token bucket in simulated time (the fleet advances it one
 /// frame-duration per tick).
 #[derive(Clone, Debug)]
@@ -53,6 +88,11 @@ impl TokenBucket {
         self.tokens
     }
 
+    /// Bucket depth: the hard ceiling on any single take.
+    pub fn burst(&self) -> f64 {
+        self.burst
+    }
+
     /// Refill for `dt` seconds of simulated time.
     pub fn tick(&mut self, dt: f64) {
         self.tokens = (self.tokens + self.rate * dt).min(self.burst);
@@ -72,7 +112,12 @@ impl TokenBucket {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct UplinkStats {
     pub msgs_sent: u64,
+    /// budget drops: the bucket will refill and later messages can pass
     pub msgs_dropped: u64,
+    /// messages larger than the bucket's burst — these can *never* be
+    /// sent under this config, which is a sizing bug, not congestion,
+    /// and is accounted separately so it cannot hide among budget drops
+    pub msgs_oversized: u64,
     pub bytes_sent: u64,
     pub bytes_dropped: u64,
     /// what streaming every captured sample raw would have cost
@@ -111,11 +156,17 @@ impl Uplink {
     }
 
     /// Try to send one event report (optionally with its clip audio).
-    /// Returns false when the budget rejects it.
+    /// Returns false when the budget rejects it. A message larger than
+    /// the bucket's burst can never pass [`TokenBucket::try_take`]
+    /// (tokens are capped at the burst), so it is accounted as
+    /// `msgs_oversized` — a config-sizing bug — rather than blending
+    /// into the budget drops and silently black-holing every clip report.
     pub fn send_event(&mut self, clip_samples: usize) -> bool {
-        let mut bytes = self.cfg.event_msg_bytes;
-        if self.cfg.upload_clips {
-            bytes += clip_samples * self.cfg.bytes_per_sample;
+        let bytes = self.cfg.max_msg_bytes(clip_samples);
+        if bytes as f64 > self.bucket.burst() {
+            self.stats.msgs_oversized += 1;
+            self.stats.bytes_dropped += bytes as u64;
+            return false;
         }
         if self.bucket.try_take(bytes as f64) {
             self.stats.msgs_sent += 1;
@@ -178,6 +229,55 @@ mod tests {
         let mut u = Uplink::new(cfg);
         assert!(u.send_event(1000));
         assert_eq!(u.stats.bytes_sent, 32 + 2000);
+    }
+
+    #[test]
+    fn oversized_message_counts_as_oversized_not_dropped() {
+        // a clip report bigger than the burst can never pass try_take no
+        // matter how long the bucket refills — it must be accounted as a
+        // sizing bug, while plain event reports keep flowing
+        let cfg = UplinkConfig {
+            bytes_per_sec: 1e9,
+            burst_bytes: 256.0,
+            event_msg_bytes: 32,
+            upload_clips: true,
+            bytes_per_sample: 2,
+        };
+        let mut u = Uplink::new(cfg);
+        // 1000-sample clip -> 32 + 2000 B > 256 B burst: oversized forever
+        for _ in 0..3 {
+            u.tick(10.0); // plenty of refill time changes nothing
+            assert!(!u.send_event(1000));
+        }
+        assert_eq!(u.stats.msgs_oversized, 3);
+        assert_eq!(u.stats.msgs_dropped, 0, "not a budget drop");
+        assert_eq!(u.stats.msgs_sent, 0);
+        // a bare event report (32 B, no clip) still fits the same bucket
+        let mut small = Uplink::new(UplinkConfig {
+            upload_clips: false,
+            ..cfg
+        });
+        assert!(small.send_event(1000));
+        assert_eq!(small.stats.msgs_oversized, 0);
+    }
+
+    #[test]
+    fn validate_rejects_unsendable_configs_at_config_time() {
+        let cfg = UplinkConfig {
+            burst_bytes: 256.0,
+            upload_clips: true,
+            ..UplinkConfig::default()
+        };
+        let err = cfg.validate(1000).unwrap_err();
+        assert!(format!("{err:#}").contains("burst"), "{err:#}");
+        // same geometry with a burst grown to hold one clip message: ok
+        let ok = UplinkConfig {
+            burst_bytes: cfg.max_msg_bytes(1000) as f64,
+            ..cfg
+        };
+        ok.validate(1000).unwrap();
+        // clip upload off: the clip size is irrelevant
+        UplinkConfig::default().validate(1_000_000).unwrap();
     }
 
     #[test]

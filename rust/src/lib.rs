@@ -10,10 +10,11 @@
 //! * **L2** — JAX multirate filter-bank + kernel-machine graph
 //!   (python/compile/model.py), exported as HLO-text artifacts,
 //! * **L3** — this crate: the continuous-ingest edge front end ([`edge`]),
-//!   the streaming coordinator ([`coordinator`]), PJRT runtime
-//!   ([`runtime`]), every substrate the paper's evaluation needs ([`dsp`],
-//!   [`mp`], [`fixed`], [`datasets`], [`svm`], [`carihc`], [`fpga`]) and
-//!   the experiment harness ([`experiments`]).
+//!   the streaming coordinator ([`coordinator`]), cross-process serving
+//!   over TCP ([`net`]), PJRT runtime ([`runtime`]), every substrate the
+//!   paper's evaluation needs ([`dsp`], [`mp`], [`fixed`], [`datasets`],
+//!   [`svm`], [`carihc`], [`fpga`]) and the experiment harness
+//!   ([`experiments`]).
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! HLO once, and the rust binary is self-contained afterwards.
@@ -30,6 +31,7 @@ pub mod features;
 pub mod fixed;
 pub mod fpga;
 pub mod mp;
+pub mod net;
 pub mod runtime;
 pub mod svm;
 pub mod train;

@@ -7,12 +7,12 @@
 //!   tables   --table1|--table2|--table3|--table4|--all [--scale S]
 //!   train    --dataset esc10|fsdd [--scale S] [--out model.json]
 //!   serve    --streams N --clips K [--shards N] [--realtime]
-//!            [--model model.json]
+//!            [--model model.json] [--connect host:port,...]
 //!   edge-fleet  --streams N [--shards N] [--seconds S] [--events K]
 //!               [--duty-awake A] [--duty-sleep B] [--uplink-bps N]
 //!               [--uplink-burst N] [--upload-clips] [--ambient X]
 //!               [--event-gain X] [--gate-margin SHIFT] [--hangover F]
-//!               [--pre-trigger F]
+//!               [--pre-trigger F] [--connect host:port,...]
 //!   edge-roc                          gate ROC + bytes-saved tables
 //!   fpga-sim
 //!
@@ -21,16 +21,18 @@
 
 use anyhow::{bail, Context, Result};
 use infilter::config::{AppConfig, EdgeConfig};
-use infilter::coordinator::server::{serve, serve_sharded, ServeConfig};
+use infilter::coordinator::dispatch::Lane;
+use infilter::coordinator::server::{serve, serve_on, serve_sharded, ServeConfig};
 use infilter::datasets::{esc10, fsdd, Dataset};
 use infilter::edge::fleet::{fleet_lane, run_fleet, FleetConfig};
 use infilter::edge::AMBIENT_LABEL;
 use infilter::experiments::{classify, edge as edge_tables, figures, tables12};
 use infilter::mp::machine::Standardizer;
+use infilter::net::{RemoteConfig, RemotePool};
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::runtime::engine::ModelEngine;
 use infilter::train::{
-    evaluate_cpu, train_heads, train_model, train_model_cpu, TrainConfig, TrainedModel,
+    quick_cpu_model, train_heads, train_model, TrainConfig, TrainedModel,
 };
 use infilter::util::cli::Args;
 use infilter::util::prng::Pcg32;
@@ -48,16 +50,22 @@ USAGE: infilter <subcommand> [options]
   tables    --all | --table1 --table2 --table3 --table4  [--scale S]
   train     --dataset esc10|fsdd [--scale S] [--out results/model.json]
   serve     [--streams N] [--clips K] [--shards N] [--realtime]
-            [--model PATH]
+            [--model PATH] [--connect HOST:PORT[,HOST:PORT...]]
   edge-fleet  continuous-ingest fleet simulation (no artifacts needed)
             [--streams N] [--shards N] [--seconds S] [--events K]
             [--duty-awake A] [--duty-sleep B] [--uplink-bps N]
             [--uplink-burst N] [--upload-clips] [--ambient X]
             [--event-gain X] [--gate-margin SHIFT] [--hangover F]
             [--pre-trigger F] [--model PATH] [--scale S] [--epochs E]
+            [--connect HOST:PORT[,HOST:PORT...]]
 
   --shards N runs N compute lanes (one backend each, stream-hash
   routed) and prints a merged report with per-lane frame counts.
+  --connect replaces the local lanes with remote infilter-node
+  workers (same stream routing, credit-based backpressure, drain
+  barrier over the wire); start workers with `infilter-node --listen
+  HOST:PORT` holding the same --model (or the same quick-model
+  --seed/--scale/--epochs) — the handshake rejects mismatches.
   edge-roc  gate ROC + uplink bytes-saved tables
   fpga-sim  cycle-level Fig. 7 schedule simulation
 
@@ -321,7 +329,44 @@ fn cmd_train(cfg: &AppConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --connect`: the gateway owns no backend at all — streams fan
+/// out to remote `infilter-node` workers over the credit-based wire
+/// protocol, with the same Fibonacci stream routing `--shards` uses for
+/// in-process lanes. The model (for the fingerprint handshake) comes
+/// from `--model`, or from the deterministic quick CPU model both sides
+/// default to.
+fn cmd_serve_remote(cfg: &AppConfig, args: &Args, connect: &str) -> Result<()> {
+    let model = edge_model(cfg, args)?;
+    let pool = RemotePool::connect(
+        &split_addrs(connect),
+        model.fingerprint(),
+        RemoteConfig::default(),
+    )?;
+    let scfg = ServeConfig {
+        n_streams: args.get_usize("streams", 8),
+        clips_per_stream: args.get_usize("clips", 4),
+        seed: cfg.seed,
+        realtime: args.flag("realtime"),
+        ..Default::default()
+    };
+    log_info!(
+        "serving {} streams x {} clips across {} remote node(s) at {} \
+         (realtime={})",
+        scfg.n_streams,
+        scfg.clips_per_stream,
+        pool.nodes(),
+        connect,
+        scfg.realtime
+    );
+    let (report, _results) = serve_on(pool, model.classes.len(), &scfg)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
 fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
+    if let Some(connect) = args.get("connect") {
+        return cmd_serve_remote(cfg, args, connect);
+    }
     let mut eng = engine(cfg)?;
     let model = match args.get("model") {
         Some(path) => TrainedModel::load(Path::new(path))?,
@@ -375,49 +420,39 @@ fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
 // ---------------------------------------------------------------------
 
 /// Train (or load) an on-node model entirely on the CPU backend, so the
-/// edge fleet runs without AOT artifacts.
-fn edge_model(cfg: &AppConfig, args: &Args, eng: &CpuEngine) -> Result<TrainedModel> {
+/// edge fleet and the remote-gateway paths run without AOT artifacts.
+/// The quick model is bit-deterministic in its knobs, so a gateway and
+/// an `infilter-node` that both default here end up with the same model
+/// fingerprint (see [`quick_cpu_model`]).
+fn edge_model(cfg: &AppConfig, args: &Args) -> Result<TrainedModel> {
     if let Some(path) = args.get("model") {
         return TrainedModel::load(Path::new(path));
     }
     let scale = args.get_f64("scale", 0.05);
-    log_info!("no --model given: CPU-training a quick on-node model (scale {scale})");
-    let ds = esc10::build(cfg.seed, scale);
-    let clip_len = eng.frame_len() * eng.clip_frames();
-    let samps: Vec<&[f32]> = ds.train.iter().map(|c| &c.samples[..clip_len]).collect();
-    let phi = eng.clip_features_many(&samps, cfg.threads);
-    let labels: Vec<usize> = ds.train.iter().map(|c| c.label).collect();
-    let tc = TrainConfig {
-        epochs: args.get_usize("epochs", 30),
-        seed: cfg.seed,
-        ..TrainConfig::default()
-    };
-    let (model, losses) = train_model_cpu(&phi, &labels, &ds.classes, cfg.gamma_f, &tc);
-    let acc = evaluate_cpu(&model, &phi, &labels);
-    log_info!(
-        "on-node model: train accuracy {:.1}% (loss {:.4} -> {:.4})",
-        100.0 * acc,
-        losses.first().copied().unwrap_or(0.0),
-        losses.last().copied().unwrap_or(0.0)
-    );
-    Ok(model)
+    log_info!("no --model given: CPU-training the quick on-node model (scale {scale})");
+    Ok(quick_cpu_model(
+        cfg.seed,
+        scale,
+        args.get_usize("epochs", 30),
+        cfg.gamma_f,
+        cfg.threads,
+    ))
 }
 
-fn cmd_edge_fleet(cfg: &AppConfig, args: &Args) -> Result<()> {
-    let plan = infilter::dsp::multirate::BandPlan::paper_default();
-    let eng = CpuEngine::new(&plan, cfg.gamma_f);
-    let model = edge_model(cfg, args, &eng)?;
-    let edge = EdgeConfig::from_args(args);
-    let fcfg = FleetConfig::from_edge(
-        &edge,
-        cfg.seed,
-        eng.frame_len(),
-        eng.clip_frames(),
-        eng.sample_rate(),
-    );
+/// `--connect host:port[,host:port...]` -> node addresses.
+fn split_addrs(connect: &str) -> Vec<String> {
+    connect
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+fn log_fleet(fcfg: &FleetConfig, lanes: &str) {
     log_info!(
         "edge fleet: {} streams x {} frames ({:.1}s audio each), {} events/stream, \
-         duty {}/{} awake/sleep, uplink {:.0} B/s, {} compute lane(s)",
+         duty {}/{} awake/sleep, uplink {:.0} B/s, {lanes}",
         fcfg.n_streams,
         fcfg.ticks,
         fcfg.ticks as f64 * fcfg.frame_len as f64 / fcfg.sample_rate,
@@ -425,10 +460,44 @@ fn cmd_edge_fleet(cfg: &AppConfig, args: &Args) -> Result<()> {
         fcfg.duty_awake,
         fcfg.duty_sleep,
         fcfg.uplink.bytes_per_sec,
-        fcfg.shards
     );
-    let lane = fleet_lane(&fcfg, model.clone(), move |_| Ok(eng.clone()))?;
-    let (report, results) = run_fleet(lane, &fcfg)?;
+}
+
+fn cmd_edge_fleet(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let model = edge_model(cfg, args)?;
+    let edge = EdgeConfig::from_args(args);
+    // with --connect the classification lane lives in remote
+    // infilter-node processes and the fleet adopts the nodes' clip
+    // geometry from the handshake; otherwise it is the local CPU engine
+    let (report, results) = if let Some(connect) = args.get("connect") {
+        let pool = RemotePool::connect(
+            &split_addrs(connect),
+            model.fingerprint(),
+            RemoteConfig::default(),
+        )?;
+        let fcfg = FleetConfig::from_edge(
+            &edge,
+            cfg.seed,
+            pool.frame_len(),
+            pool.clip_frames(),
+            pool.sample_rate(),
+        );
+        log_fleet(&fcfg, &format!("{} remote node(s)", pool.nodes()));
+        run_fleet(pool, &fcfg)?
+    } else {
+        let plan = infilter::dsp::multirate::BandPlan::paper_default();
+        let eng = CpuEngine::new(&plan, cfg.gamma_f);
+        let fcfg = FleetConfig::from_edge(
+            &edge,
+            cfg.seed,
+            eng.frame_len(),
+            eng.clip_frames(),
+            eng.sample_rate(),
+        );
+        log_fleet(&fcfg, &format!("{} compute lane(s)", fcfg.shards));
+        let lane = fleet_lane(&fcfg, model.clone(), move |_| Ok(eng.clone()))?;
+        run_fleet(lane, &fcfg)?
+    };
     println!("{}", report.render());
     write_csv(cfg, "edge_fleet.csv", &report.table())?;
     println!("\nuplink payload sample (stream, clip, detected class):");

@@ -1,0 +1,682 @@
+//! The gateway side of cross-process serving: [`RemoteLane`] drives one
+//! `infilter-node` over TCP behind the same [`Lane`] interface every
+//! in-process pipeline implements, and [`RemotePool`] fans streams
+//! across several nodes with the same Fibonacci routing the
+//! [`ShardedPipeline`](crate::coordinator::ShardedPipeline) uses for
+//! in-process lanes.
+//!
+//! Backpressure is credit-based: the node's `Welcome` grants a window
+//! of in-flight frames; each `push` spends one credit and the node
+//! returns credits as it consumes frames. When credits run out the
+//! gateway queues locally up to a bound, then *blocks* — a slow node
+//! throttles its gateway instead of ballooning its memory.
+
+use super::proto::{read_msg, write_msg, Handshake, Msg, WireReport, WireResult, VERSION};
+use crate::coordinator::dispatch::{ClassifySink, Lane};
+use crate::coordinator::metrics::ServeReport;
+use crate::coordinator::shard::route_stream;
+use crate::coordinator::{ClassifyResult, FrameTask};
+use crate::util::stats::LatencyHist;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufWriter, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Gateway-side knobs. The defaults suit a LAN loopback pair; raise
+/// `io_timeout` for long-haul links.
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteConfig {
+    /// frames queued locally once the credit window is exhausted before
+    /// `push` blocks (the gateway's memory bound per node)
+    pub max_queue: usize,
+    /// how long a blocking wait (credits, drain ack, final report) may
+    /// go without any event from the node before the lane declares it
+    /// unresponsive
+    pub io_timeout: Duration,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            max_queue: 1024,
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What the reader thread forwards off the socket.
+enum Event {
+    Result(WireResult),
+    Credit(u32),
+    DrainAck(u64),
+    FlushAck(u64, u64),
+    Report(WireReport),
+    /// reader exited: `None` = clean EOF, `Some` = transport/protocol error
+    Closed(Option<String>),
+}
+
+/// One TCP connection to an `infilter-node`, as a [`Lane`].
+pub struct RemoteLane {
+    writer: BufWriter<TcpStream>,
+    scratch: Vec<u8>,
+    events: mpsc::Receiver<Event>,
+    reader: Option<JoinHandle<()>>,
+    peer: String,
+    shake: Handshake,
+    cfg: RemoteConfig,
+    /// frames the node still allows in flight
+    credits: u32,
+    /// local overflow once credits run out (bounded by `cfg.max_queue`)
+    queue: VecDeque<FrameTask>,
+    /// (stream, clip_seq) -> generation time of the clip's first frame,
+    /// for gateway-side end-to-end latency
+    clip_t0: HashMap<(u64, u64), Instant>,
+    latency: LatencyHist,
+    results_classified: u64,
+    frames_dropped: u64,
+    /// monotonic token shared by the drain and flush-tails barriers
+    drain_token: u64,
+    last_ack: Option<u64>,
+    last_flush_ack: Option<(u64, u64)>,
+    node_report: Option<WireReport>,
+    /// set once the reader saw EOF/error; `None` while the link is up
+    closed: Option<Option<String>>,
+    sink: Option<Box<dyn ClassifySink>>,
+    collect: bool,
+    collected: Vec<ClassifyResult>,
+}
+
+impl RemoteLane {
+    /// Connect and handshake, pinning only the model fingerprint (the
+    /// lane adopts the node's clip geometry — the normal gateway case,
+    /// which has no local backend to disagree with).
+    pub fn connect(addr: &str, model_fingerprint: u64, cfg: RemoteConfig) -> Result<RemoteLane> {
+        RemoteLane::connect_expect(addr, Handshake::wildcard(model_fingerprint), cfg)
+    }
+
+    /// Connect with a fully pinned [`Handshake`] (zero fields wildcard):
+    /// the node must match or the connection fails fast.
+    pub fn connect_expect(addr: &str, hello: Handshake, cfg: RemoteConfig) -> Result<RemoteLane> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to node {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let mut scratch = Vec::new();
+        let mut writer = BufWriter::new(stream.try_clone().context("cloning node stream")?);
+        write_msg(&mut writer, &Msg::Hello(hello), &mut scratch)?;
+        writer.flush()?;
+        // the welcome is read synchronously, before the reader thread
+        // owns the receive side — connect() either yields a working lane
+        // or a specific error, bounded by io_timeout (a node that is
+        // busy with another session, or hung, must not block forever)
+        let mut rstream = stream;
+        rstream
+            .set_read_timeout(Some(cfg.io_timeout))
+            .context("setting the handshake timeout")?;
+        let (shake, credits) = match read_msg(&mut rstream, &mut scratch)
+            .with_context(|| format!("reading handshake from {addr} (is the node busy?)"))?
+        {
+            Some(Msg::Welcome { shake, credits }) => (shake, credits),
+            Some(Msg::Reject { reason }) => bail!("node {addr} rejected the session: {reason}"),
+            Some(other) => bail!("node {addr} sent {other:?} instead of a handshake"),
+            None => bail!("node {addr} closed during the handshake"),
+        };
+        ensure!(
+            shake.version == VERSION,
+            "node {addr} speaks protocol v{} (gateway v{VERSION})",
+            shake.version
+        );
+        ensure!(
+            shake.model_fingerprint == hello.model_fingerprint,
+            "node {addr} serves a different model ({:016x} vs {:016x})",
+            shake.model_fingerprint,
+            hello.model_fingerprint
+        );
+        ensure!(
+            shake.frame_len > 0 && shake.clip_frames > 0 && credits > 0,
+            "node {addr} sent a degenerate welcome (frame_len {}, \
+             clip_frames {}, credits {credits})",
+            shake.frame_len,
+            shake.clip_frames
+        );
+        // session reads are event-driven with their own recv_timeout
+        // bound; the socket itself goes back to blocking
+        rstream
+            .set_read_timeout(None)
+            .context("clearing the handshake timeout")?;
+        let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+        let reader = std::thread::Builder::new()
+            .name(format!("remote-rx-{addr}"))
+            .spawn(move || {
+                let mut scratch = Vec::new();
+                loop {
+                    let ev = match read_msg(&mut rstream, &mut scratch) {
+                        Ok(Some(Msg::Result(r))) => Event::Result(r),
+                        Ok(Some(Msg::Credit { n })) => Event::Credit(n),
+                        Ok(Some(Msg::DrainAck { token })) => Event::DrainAck(token),
+                        Ok(Some(Msg::FlushAck { token, flushed })) => {
+                            Event::FlushAck(token, flushed)
+                        }
+                        Ok(Some(Msg::Report(r))) => Event::Report(r),
+                        Ok(Some(other)) => {
+                            let _ = ev_tx.send(Event::Closed(Some(format!(
+                                "unexpected message from node: {other:?}"
+                            ))));
+                            return;
+                        }
+                        Ok(None) => {
+                            let _ = ev_tx.send(Event::Closed(None));
+                            return;
+                        }
+                        Err(e) => {
+                            let _ = ev_tx.send(Event::Closed(Some(format!("{e:#}"))));
+                            return;
+                        }
+                    };
+                    if ev_tx.send(ev).is_err() {
+                        return; // lane dropped; stop reading
+                    }
+                }
+            })
+            .context("spawning remote reader")?;
+        Ok(RemoteLane {
+            writer,
+            scratch,
+            events: ev_rx,
+            reader: Some(reader),
+            peer: addr.to_string(),
+            shake,
+            cfg,
+            credits,
+            queue: VecDeque::new(),
+            clip_t0: HashMap::new(),
+            latency: LatencyHist::new(),
+            results_classified: 0,
+            frames_dropped: 0,
+            drain_token: 0,
+            last_ack: None,
+            last_flush_ack: None,
+            node_report: None,
+            closed: None,
+            sink: None,
+            collect: true,
+            collected: Vec::new(),
+        })
+    }
+
+    /// Stream results through `sink` as they arrive from the node.
+    pub fn with_sink(mut self, sink: Box<dyn ClassifySink>) -> RemoteLane {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Whether `finish()` returns the accumulated results (default true).
+    pub fn collect_results(mut self, collect: bool) -> RemoteLane {
+        self.collect = collect;
+        self
+    }
+
+    /// The geometry the node announced at the handshake.
+    pub fn handshake(&self) -> &Handshake {
+        &self.shake
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    fn link_dead(&self) -> bool {
+        self.closed.is_some()
+    }
+
+    fn handle_event(&mut self, ev: Event) -> usize {
+        match ev {
+            Event::Result(r) => {
+                let latency = self
+                    .clip_t0
+                    .remove(&(r.stream, r.clip_seq))
+                    .map(|t0| t0.elapsed())
+                    .unwrap_or_default();
+                self.latency.record(latency);
+                let result = ClassifyResult {
+                    stream: r.stream,
+                    clip_seq: r.clip_seq,
+                    label: r.label as usize,
+                    predicted: r.predicted as usize,
+                    p: r.p,
+                    latency,
+                };
+                if let Some(sink) = self.sink.as_mut() {
+                    sink.on_result(&result);
+                }
+                if self.collect {
+                    self.collected.push(result);
+                }
+                self.results_classified += 1;
+                1
+            }
+            Event::Credit(n) => {
+                self.credits = self.credits.saturating_add(n);
+                0
+            }
+            Event::DrainAck(token) => {
+                self.last_ack = Some(token);
+                0
+            }
+            Event::FlushAck(token, flushed) => {
+                self.last_flush_ack = Some((token, flushed));
+                0
+            }
+            Event::Report(r) => {
+                self.node_report = Some(r);
+                0
+            }
+            Event::Closed(cause) => {
+                self.closed = Some(cause);
+                0
+            }
+        }
+    }
+
+    /// Drain every event already delivered, without blocking. Returns
+    /// the number of results among them.
+    fn pump(&mut self) -> usize {
+        let mut results = 0;
+        while let Ok(ev) = self.events.try_recv() {
+            results += self.handle_event(ev);
+        }
+        results
+    }
+
+    /// Block for the next event (credit, result, ack...). Errors if the
+    /// node goes `io_timeout` without a peep or the link is down.
+    fn wait_event(&mut self) -> Result<usize> {
+        if let Some(cause) = &self.closed {
+            return Err(self.closed_error(cause.clone()));
+        }
+        match self.events.recv_timeout(self.cfg.io_timeout) {
+            Ok(ev) => {
+                let n = self.handle_event(ev);
+                if let Some(cause) = &self.closed {
+                    return Err(self.closed_error(cause.clone()));
+                }
+                Ok(n)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => bail!(
+                "node {} unresponsive for {:?}",
+                self.peer,
+                self.cfg.io_timeout
+            ),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("reader thread for node {} died", self.peer)
+            }
+        }
+    }
+
+    fn closed_error(&self, cause: Option<String>) -> anyhow::Error {
+        match cause {
+            Some(c) => anyhow!("connection to node {} failed: {c}", self.peer),
+            None => anyhow!("node {} hung up mid-session", self.peer),
+        }
+    }
+
+    /// Send queued frames while the credit window allows. On a write
+    /// error the link is broken, so the frame consumed by the failed
+    /// write *and* everything still queued are counted dropped at once —
+    /// retrying a dead socket would only misreport frames as in flight.
+    fn flush_queue(&mut self) -> Result<()> {
+        let mut wrote = false;
+        while self.credits > 0 {
+            let Some(task) = self.queue.pop_front() else { break };
+            if task.frame_idx == 0 {
+                self.clip_t0.insert((task.stream, task.clip_seq), task.t_gen);
+            }
+            let sent = write_msg(
+                &mut self.writer,
+                &Msg::Frame {
+                    stream: task.stream,
+                    clip_seq: task.clip_seq,
+                    frame_idx: task.frame_idx as u32,
+                    label: task.label as u32,
+                    samples: task.data,
+                },
+                &mut self.scratch,
+            );
+            if let Err(e) = sent {
+                self.frames_dropped += 1 + self.queue.len() as u64;
+                self.queue.clear();
+                return Err(e.context(format!("sending frame to node {}", self.peer)));
+            }
+            self.credits -= 1;
+            wrote = true;
+        }
+        if wrote {
+            self.writer
+                .flush()
+                .with_context(|| format!("flushing frames to node {}", self.peer))?;
+        }
+        Ok(())
+    }
+
+    /// Push everything still queued, blocking on credit grants.
+    fn flush_queue_blocking(&mut self) -> Result<()> {
+        loop {
+            self.pump();
+            self.flush_queue()?;
+            if self.queue.is_empty() {
+                return Ok(());
+            }
+            self.wait_event()?;
+        }
+    }
+
+    fn send_ctl(&mut self, msg: &Msg) -> Result<()> {
+        write_msg(&mut self.writer, msg, &mut self.scratch)
+            .with_context(|| format!("sending control message to node {}", self.peer))?;
+        self.writer
+            .flush()
+            .with_context(|| format!("flushing control message to node {}", self.peer))?;
+        Ok(())
+    }
+
+    /// First half of the drain barrier: flush the local queue and put
+    /// the drain token on the wire. Returns the token to await — split
+    /// from [`await_drain`](Self::await_drain) so a [`RemotePool`] can
+    /// start every node's barrier before waiting on any of them.
+    fn send_drain(&mut self) -> Result<u64> {
+        self.flush_queue_blocking()?;
+        self.drain_token += 1;
+        let token = self.drain_token;
+        self.send_ctl(&Msg::Drain { token })?;
+        Ok(token)
+    }
+
+    fn await_drain(&mut self, token: u64) -> Result<()> {
+        while self.last_ack != Some(token) {
+            self.wait_event()?;
+        }
+        Ok(())
+    }
+
+    /// First half of the flush-tails barrier (see [`send_drain`]).
+    ///
+    /// [`send_drain`]: Self::send_drain
+    fn send_flush(&mut self) -> Result<u64> {
+        self.flush_queue_blocking()?;
+        self.drain_token += 1;
+        let token = self.drain_token;
+        self.send_ctl(&Msg::FlushTails { token })?;
+        Ok(token)
+    }
+
+    fn await_flush(&mut self, token: u64) -> Result<u64> {
+        loop {
+            if let Some((t, flushed)) = self.last_flush_ack {
+                if t == token {
+                    return Ok(flushed);
+                }
+            }
+            self.wait_event()?;
+        }
+    }
+
+    /// Barrier: everything pushed so far is classified and its results
+    /// have been delivered to this lane when this returns.
+    fn drain_inner(&mut self) -> Result<()> {
+        let token = self.send_drain()?;
+        self.await_drain(token)
+    }
+}
+
+impl Drop for RemoteLane {
+    fn drop(&mut self) {
+        // unblock the reader so its thread exits with the socket
+        if let Ok(s) = self.writer.get_ref().try_clone() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+impl Lane for RemoteLane {
+    /// Queue one frame toward the node. Returns false (a drop) only
+    /// when the link is gone or the node stalled past `io_timeout` with
+    /// the local queue full — backpressure otherwise blocks here, per
+    /// the credit contract.
+    fn push(&mut self, task: FrameTask) -> bool {
+        self.pump();
+        if self.link_dead() {
+            self.frames_dropped += 1;
+            return false;
+        }
+        self.queue.push_back(task);
+        // a flush error empties the queue and accounts every loss,
+        // ours included, so the error branches just report the drop
+        if self.flush_queue().is_err() {
+            return false;
+        }
+        while self.queue.len() > self.cfg.max_queue {
+            // out of credits and over the local bound: block on the node
+            if self.wait_event().is_err() {
+                if self.link_dead() {
+                    // node died while we were credit-blocked: nothing
+                    // queued can ever be delivered — account it all now
+                    // (flush_queue will not run again with 0 credits)
+                    self.frames_dropped += self.queue.len() as u64;
+                    self.queue.clear();
+                } else {
+                    // timeout with the link still up: shed the newest
+                    // frame (ours) only — an alive-but-slow node keeps
+                    // the older queue
+                    self.queue.pop_back();
+                    self.frames_dropped += 1;
+                }
+                return false;
+            }
+            if self.flush_queue().is_err() {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn service(&mut self) -> Result<usize> {
+        let n = self.pump();
+        self.flush_queue()?;
+        Ok(n)
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        self.drain_inner()
+    }
+
+    /// [`Lane::flush_tails`] over the wire: the node drains, zero-pads
+    /// its stranded partial tail clips, streams their results and acks
+    /// with the count — requested explicitly here, exactly like a local
+    /// caller, so remote sessions never pad clips a local run would
+    /// not.
+    fn flush_tails(&mut self) -> Result<u64> {
+        let token = self.send_flush()?;
+        self.await_flush(token)
+    }
+
+    fn clips_classified(&self) -> u64 {
+        self.results_classified
+    }
+
+    fn frame_len(&self) -> usize {
+        self.shake.frame_len as usize
+    }
+
+    fn clip_frames(&self) -> usize {
+        self.shake.clip_frames as usize
+    }
+
+    fn sample_rate(&self) -> f64 {
+        self.shake.sample_rate
+    }
+
+    /// Full barrier, then half-close: the node sends its final report
+    /// and closes. The returned report is the node's counters with the
+    /// *gateway's* end-to-end latency histogram and local drop count
+    /// folded in. (Tail padding is a separate, explicit
+    /// [`flush_tails`](Lane::flush_tails) call, not part of teardown.)
+    fn finish(mut self) -> Result<(ServeReport, Vec<ClassifyResult>)> {
+        self.drain_inner()?;
+        self.writer.flush()?;
+        self.writer
+            .get_ref()
+            .shutdown(Shutdown::Write)
+            .with_context(|| format!("half-closing node {}", self.peer))?;
+        // collect tail results + the final report until the node closes
+        loop {
+            if self.closed.is_some() {
+                break;
+            }
+            match self.events.recv_timeout(self.cfg.io_timeout) {
+                Ok(ev) => {
+                    self.handle_event(ev);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => bail!(
+                    "node {} did not close within {:?} of the shutdown",
+                    self.peer,
+                    self.cfg.io_timeout
+                ),
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if let Some(Some(cause)) = &self.closed {
+            bail!("connection to node {} failed at teardown: {cause}", self.peer);
+        }
+        let wire = self
+            .node_report
+            .take()
+            .ok_or_else(|| anyhow!("node {} closed without a final report", self.peer))?;
+        let mut report = wire.into_report();
+        report.latency = std::mem::take(&mut self.latency);
+        report.frames_dropped += self.frames_dropped;
+        Ok((report, std::mem::take(&mut self.collected)))
+    }
+}
+
+/// `serve --connect a:1,b:2,...`: N [`RemoteLane`]s with the same
+/// stream-hash fan-out as the in-process [`ShardedPipeline`]
+/// (`route_stream`), merged reporting included. All nodes must announce
+/// the same clip geometry and model fingerprint.
+///
+/// [`ShardedPipeline`]: crate::coordinator::ShardedPipeline
+pub struct RemotePool {
+    lanes: Vec<RemoteLane>,
+}
+
+impl RemotePool {
+    pub fn connect(
+        addrs: &[String],
+        model_fingerprint: u64,
+        cfg: RemoteConfig,
+    ) -> Result<RemotePool> {
+        ensure!(!addrs.is_empty(), "no node addresses given");
+        let mut lanes: Vec<RemoteLane> = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let lane = match lanes.first() {
+                // later nodes must match the geometry the first announced
+                Some(first) => RemoteLane::connect_expect(addr, *first.handshake(), cfg)?,
+                None => RemoteLane::connect(addr, model_fingerprint, cfg)?,
+            };
+            lanes.push(lane);
+        }
+        Ok(RemotePool { lanes })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Which node a stream lands on (the shared Fibonacci hash).
+    pub fn route(&self, stream: u64) -> usize {
+        route_stream(stream, self.lanes.len())
+    }
+}
+
+impl Lane for RemotePool {
+    fn push(&mut self, task: FrameTask) -> bool {
+        let lane = self.route(task.stream);
+        self.lanes[lane].push(task)
+    }
+
+    fn service(&mut self) -> Result<usize> {
+        let mut n = 0;
+        for lane in &mut self.lanes {
+            n += lane.service()?;
+        }
+        Ok(n)
+    }
+
+    /// Concurrent barrier: every node's drain token goes on the wire
+    /// before any ack is awaited, so the pool pays max(node drain time)
+    /// plus one round trip — not the sum of sequential barriers.
+    fn drain(&mut self) -> Result<()> {
+        let mut tokens = Vec::with_capacity(self.lanes.len());
+        for lane in &mut self.lanes {
+            tokens.push(lane.send_drain()?);
+        }
+        for (lane, token) in self.lanes.iter_mut().zip(tokens) {
+            lane.await_drain(token)?;
+        }
+        Ok(())
+    }
+
+    /// Same concurrent-barrier shape as [`drain`](Lane::drain): every
+    /// node pads and classifies its tails in parallel.
+    fn flush_tails(&mut self) -> Result<u64> {
+        let mut tokens = Vec::with_capacity(self.lanes.len());
+        for lane in &mut self.lanes {
+            tokens.push(lane.send_flush()?);
+        }
+        let mut flushed = 0;
+        for (lane, token) in self.lanes.iter_mut().zip(tokens) {
+            flushed += lane.await_flush(token)?;
+        }
+        Ok(flushed)
+    }
+
+    fn clips_classified(&self) -> u64 {
+        self.lanes.iter().map(|l| l.clips_classified()).sum()
+    }
+
+    fn frame_len(&self) -> usize {
+        self.lanes[0].frame_len()
+    }
+
+    fn clip_frames(&self) -> usize {
+        self.lanes[0].clip_frames()
+    }
+
+    fn sample_rate(&self) -> f64 {
+        self.lanes[0].sample_rate()
+    }
+
+    /// Finish every node and merge their reports under their pool
+    /// indices (nested per-node lane breakdowns are flattened by the
+    /// merge's per-lane summary).
+    fn finish(self) -> Result<(ServeReport, Vec<ClassifyResult>)> {
+        let mut reports = Vec::with_capacity(self.lanes.len());
+        let mut results = Vec::new();
+        for (i, lane) in self.lanes.into_iter().enumerate() {
+            let peer = lane.peer().to_string();
+            let (mut r, mut rs) = lane
+                .finish()
+                .with_context(|| format!("finishing node {peer}"))?;
+            // the pool's breakdown is per *node*; drop the node's own
+            // per-lane rows so the merge does not mix the two levels
+            r.per_lane.clear();
+            reports.push((i, r));
+            results.append(&mut rs);
+        }
+        Ok((ServeReport::merge_indexed(reports), results))
+    }
+}

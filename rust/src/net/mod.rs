@@ -1,0 +1,35 @@
+//! Cross-process scale-out (DESIGN.md §10): the serving pipeline split
+//! over a socket. A gateway process runs a [`lane::RemoteLane`] (or a
+//! multi-node [`lane::RemotePool`]) behind the exact [`Lane`] interface
+//! the in-process pipelines implement, and each `infilter-node` worker
+//! process hosts a local [`Pipeline`] / [`ShardedPipeline`] behind a
+//! TCP listener ([`node::serve_node`]).
+//!
+//! Three properties the wire layer guarantees:
+//!
+//! * **Fail-fast identity** — a versioned handshake carries the clip
+//!   geometry and the model fingerprint; mismatched processes are
+//!   rejected before any frame is shipped ([`proto::Handshake`]).
+//! * **Credit-based backpressure** — the node grants a bounded window
+//!   of in-flight frames; a slow node throttles the gateway instead of
+//!   being OOMed by it.
+//! * **Wire-level drain barrier** — the gateway's `drain()` returns
+//!   only after the node acks that its pipeline is empty, with every
+//!   pre-barrier result already delivered (same contract as the
+//!   in-process barrier drain).
+//!
+//! Classification parity is bit-exact: the node runs the same backend
+//! on the same frames, so a loopback `RemoteLane` produces identical
+//! `ClassifyResult`s to an in-process pipeline (tested in
+//! `tests/net_loopback.rs`).
+//!
+//! [`Lane`]: crate::coordinator::Lane
+//! [`Pipeline`]: crate::coordinator::Pipeline
+//! [`ShardedPipeline`]: crate::coordinator::ShardedPipeline
+
+pub mod lane;
+pub mod node;
+pub mod proto;
+
+pub use lane::{RemoteConfig, RemoteLane, RemotePool};
+pub use node::{serve_node, NodeConfig};

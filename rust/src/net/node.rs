@@ -1,0 +1,628 @@
+//! The worker side of cross-process serving: host any [`Lane`] (a
+//! single [`Pipeline`] or a `--shards N` [`ShardedPipeline`]) behind a
+//! TCP listener speaking the [`proto`](super::proto) wire protocol.
+//! `infilter-node` (src/bin) is a thin CLI over [`serve_node`].
+//!
+//! Connections are handled sequentially, one compute lane per
+//! connection (built fresh by the factory, so stream state never leaks
+//! across sessions); parallelism comes from sharding *inside* the lane
+//! and from running multiple node processes behind a gateway
+//! [`RemotePool`](super::lane::RemotePool).
+//!
+//! [`Pipeline`]: crate::coordinator::Pipeline
+//! [`ShardedPipeline`]: crate::coordinator::ShardedPipeline
+
+use super::proto::{read_msg, write_msg, Handshake, Msg, WireReport, WireResult, VERSION};
+use crate::coordinator::dispatch::{ClassifySink, Lane, Pipeline, PipelineBuilder};
+use crate::coordinator::{ClassifyResult, FrameTask};
+use crate::runtime::backend::InferenceBackend;
+use crate::train::TrainedModel;
+use crate::{log_info, log_warn};
+use anyhow::{bail, Context, Result};
+use std::io::{BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Node-side knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeConfig {
+    /// in-flight frame window granted to the gateway at the handshake —
+    /// the node's memory bound for socket + queue buffering
+    pub credits: u32,
+    /// how long an accepted connection may sit silent before its Hello;
+    /// a port scanner or half-open socket would otherwise wedge the
+    /// sequential accept loop forever. Cleared after the handshake (an
+    /// idle mid-session gateway is legal).
+    pub handshake_timeout: Duration,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig {
+            credits: 256,
+            handshake_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Messages the connection's reader thread forwards to the compute loop.
+enum NodeEvent {
+    Frame(FrameTask),
+    Drain(u64),
+    FlushTails(u64),
+    /// gateway half-closed: no more frames are coming
+    Eof,
+    ReadError(String),
+}
+
+/// The common [`serve_node`] factory: a fresh single-lane [`Pipeline`]
+/// over a clone of `backend` per connection, its sink wired to the
+/// connection's result channel. Shards-inside-the-node or exotic lanes
+/// write their own factory (see `src/bin/infilter_node.rs`).
+pub fn pipeline_factory<B>(
+    backend: B,
+    model: TrainedModel,
+    queue_capacity: usize,
+) -> impl Fn(mpsc::Sender<ClassifyResult>) -> Result<Pipeline<B>>
+where
+    B: InferenceBackend + Clone,
+{
+    move |tx: mpsc::Sender<ClassifyResult>| {
+        let sink: Box<dyn ClassifySink> = Box::new(move |r: &ClassifyResult| {
+            let _ = tx.send(r.clone());
+        });
+        Ok(PipelineBuilder::new(backend.clone(), model.clone())
+            .queue_capacity(queue_capacity)
+            .sink(sink)
+            .collect_results(false)
+            .build())
+    }
+}
+
+/// Accept connections and serve each with a fresh compute lane from
+/// `factory` (which receives the per-connection result sender to
+/// install as the lane's sink — build with `collect_results(false)` so
+/// results are not buffered twice). `fingerprint` is the hosted model's
+/// [`fingerprint`](crate::train::TrainedModel::fingerprint); a gateway
+/// holding a different model is rejected at the handshake.
+///
+/// `max_conns` bounds how many connections are served before returning
+/// (`None` = serve forever) — tests and benches bind port 0, serve one
+/// connection, and join. A connection-level error is logged and the
+/// node moves on to the next connection; only accept/factory errors
+/// abort the server.
+pub fn serve_node<L, F>(
+    listener: TcpListener,
+    factory: F,
+    fingerprint: u64,
+    cfg: NodeConfig,
+    max_conns: Option<usize>,
+) -> Result<()>
+where
+    L: Lane,
+    F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L>,
+{
+    let local = listener.local_addr().context("node listener address")?;
+    log_info!("infilter-node listening on {local} (model {fingerprint:016x})");
+    let mut served = 0usize;
+    for conn in listener.incoming() {
+        let stream = conn.context("accepting connection")?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into());
+        let (results_tx, results_rx) = mpsc::channel::<ClassifyResult>();
+        let lane = factory(results_tx).context("building the connection's compute lane")?;
+        log_info!("node: session from {peer}");
+        match handle_conn(stream, lane, results_rx, fingerprint, &cfg) {
+            Ok(stats) => log_info!(
+                "node: session from {peer} done — {} frames in, {} clips out ({} padded)",
+                stats.frames_in,
+                stats.clips_out,
+                stats.clips_padded
+            ),
+            Err(e) => log_warn!("node: session from {peer} failed: {e:#}"),
+        }
+        served += 1;
+        if Some(served) == max_conns {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// What one session moved, for the node's own log line.
+struct ConnStats {
+    frames_in: u64,
+    clips_out: u64,
+    clips_padded: u64,
+}
+
+/// Drive one gateway session over one compute lane: handshake, then the
+/// frame/credit/drain/flush loop until the gateway half-closes, then a
+/// final drain + report.
+fn handle_conn<L: Lane>(
+    stream: TcpStream,
+    mut lane: L,
+    results_rx: mpsc::Receiver<ClassifyResult>,
+    fingerprint: u64,
+    cfg: &NodeConfig,
+) -> Result<ConnStats> {
+    stream.set_nodelay(true).ok();
+    let mut scratch = Vec::new();
+    let mut rstream = stream.try_clone().context("cloning session stream")?;
+    let mut writer = BufWriter::new(stream);
+
+    // ---- handshake (bounded: a silent connection must not wedge the
+    // accept loop; the timeout is lifted once the session is real)
+    rstream
+        .set_read_timeout(Some(cfg.handshake_timeout))
+        .context("setting the handshake timeout")?;
+    let shake = Handshake {
+        version: VERSION,
+        sample_rate: lane.sample_rate(),
+        frame_len: lane.frame_len() as u32,
+        clip_frames: lane.clip_frames() as u32,
+        n_filters: 0, // not observable through the Lane trait; geometry
+        // is pinned by frame_len/clip_frames/sample_rate + fingerprint
+        model_fingerprint: fingerprint,
+    };
+    let hello = match read_msg(&mut rstream, &mut scratch).context("reading hello")? {
+        Some(Msg::Hello(h)) => h,
+        Some(other) => bail!("expected Hello, got {other:?}"),
+        None => bail!("gateway closed before the handshake"),
+    };
+    // n_filters is the one field the node cannot introspect; accept the
+    // gateway's pin verbatim rather than comparing against 0
+    let mut check = shake;
+    check.n_filters = hello.n_filters;
+    if let Err(e) = check.accepts(&hello) {
+        write_msg(
+            &mut writer,
+            &Msg::Reject {
+                reason: format!("{e:#}"),
+            },
+            &mut scratch,
+        )?;
+        writer.flush()?;
+        bail!("handshake rejected: {e:#}");
+    }
+    rstream
+        .set_read_timeout(None)
+        .context("clearing the handshake timeout")?;
+    let credits = cfg.credits.max(1);
+    write_msg(
+        &mut writer,
+        &Msg::Welcome {
+            shake,
+            credits,
+        },
+        &mut scratch,
+    )?;
+    writer.flush()?;
+
+    // ---- reader thread: socket -> bounded channel (the bound plus the
+    // credit window caps what a misbehaving gateway can buffer here)
+    let (ev_tx, ev_rx) = mpsc::sync_channel::<NodeEvent>(credits as usize * 2 + 8);
+    let reader = std::thread::Builder::new()
+        .name("node-rx".into())
+        .spawn(move || {
+            let mut scratch = Vec::new();
+            loop {
+                let ev = match read_msg(&mut rstream, &mut scratch) {
+                    Ok(Some(Msg::Frame {
+                        stream,
+                        clip_seq,
+                        frame_idx,
+                        label,
+                        samples,
+                    })) => NodeEvent::Frame(FrameTask {
+                        stream,
+                        clip_seq,
+                        frame_idx: frame_idx as usize,
+                        data: samples,
+                        label: label as usize,
+                        t_gen: Instant::now(),
+                    }),
+                    Ok(Some(Msg::Drain { token })) => NodeEvent::Drain(token),
+                    Ok(Some(Msg::FlushTails { token })) => NodeEvent::FlushTails(token),
+                    Ok(Some(other)) => {
+                        let _ = ev_tx.send(NodeEvent::ReadError(format!(
+                            "unexpected message from gateway: {other:?}"
+                        )));
+                        return;
+                    }
+                    Ok(None) => {
+                        let _ = ev_tx.send(NodeEvent::Eof);
+                        return;
+                    }
+                    Err(e) => {
+                        let _ = ev_tx.send(NodeEvent::ReadError(format!("{e:#}")));
+                        return;
+                    }
+                };
+                if ev_tx.send(ev).is_err() {
+                    return; // compute loop gone
+                }
+            }
+        })
+        .context("spawning node reader")?;
+
+    // ---- compute loop
+    let mut frames_in = 0u64;
+    let mut pending_credits = 0u32;
+    let mut clips_out = 0u64;
+    let mut eof = false;
+    'session: loop {
+        // intake: control events greedily, but at most ONE frame per
+        // service round — frame intake can then never outrun compute,
+        // the lane's per-stream queues stay shallow (no healthy-link
+        // drops the local path would not have), and once the bounded
+        // reader channel fills, TCP backpressure keeps the credit
+        // window honest even when credits exceed the queue capacity
+        loop {
+            match ev_rx.try_recv() {
+                Ok(ev) => {
+                    let was_frame = matches!(ev, NodeEvent::Frame(_));
+                    if handle_event(
+                        ev,
+                        &mut lane,
+                        &results_rx,
+                        &mut writer,
+                        &mut scratch,
+                        &mut frames_in,
+                        &mut pending_credits,
+                        &mut clips_out,
+                    )? {
+                        eof = true;
+                        break 'session;
+                    }
+                    if was_frame {
+                        break;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    eof = true;
+                    break 'session;
+                }
+            }
+        }
+        let advanced = lane.service()?;
+        let wrote = write_results(&results_rx, &mut writer, &mut scratch, &mut clips_out)?
+            + flush_credits(&mut writer, &mut scratch, &mut pending_credits)?;
+        if wrote > 0 {
+            writer.flush()?;
+        }
+        if advanced == 0 && wrote == 0 {
+            // idle: wait for the gateway, but keep waking so sharded
+            // lanes' asynchronous results stream out promptly
+            match ev_rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(ev) => {
+                    if handle_event(
+                        ev,
+                        &mut lane,
+                        &results_rx,
+                        &mut writer,
+                        &mut scratch,
+                        &mut frames_in,
+                        &mut pending_credits,
+                        &mut clips_out,
+                    )? {
+                        eof = true;
+                        break 'session;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    eof = true;
+                    break 'session;
+                }
+            }
+        }
+    }
+    debug_assert!(eof);
+
+    // ---- teardown: classify everything still queued and report. Tail
+    // padding is NOT applied implicitly — the gateway requests it with
+    // FlushTails when *it* knows the stream ended, exactly like a local
+    // caller deciding to invoke Lane::flush_tails — so remote and local
+    // serving stay behaviourally identical.
+    lane.drain()?;
+    let (report, _) = lane.finish()?;
+    // the sink sender died with the lane, so this drains to Disconnected
+    while let Ok(r) = results_rx.try_recv() {
+        clips_out += 1;
+        write_msg(&mut writer, &Msg::Result(to_wire(&r)), &mut scratch)?;
+    }
+    write_msg(
+        &mut writer,
+        &Msg::Report(WireReport::from_report(&report)),
+        &mut scratch,
+    )?;
+    writer.flush()?;
+    drop(writer); // close our half; the gateway reads EOF after Report
+    reader.join().ok();
+    Ok(ConnStats {
+        frames_in,
+        clips_out,
+        clips_padded: report.clips_padded,
+    })
+}
+
+fn to_wire(r: &ClassifyResult) -> WireResult {
+    WireResult {
+        stream: r.stream,
+        clip_seq: r.clip_seq,
+        label: r.label as u32,
+        predicted: r.predicted as u32,
+        p: r.p.clone(),
+    }
+}
+
+/// Forward every result the lane's sink has produced. Returns how many
+/// were written (caller flushes).
+fn write_results(
+    results_rx: &mpsc::Receiver<ClassifyResult>,
+    writer: &mut BufWriter<TcpStream>,
+    scratch: &mut Vec<u8>,
+    clips_out: &mut u64,
+) -> Result<usize> {
+    let mut n = 0;
+    while let Ok(r) = results_rx.try_recv() {
+        write_msg(writer, &Msg::Result(to_wire(&r)), scratch)?;
+        *clips_out += 1;
+        n += 1;
+    }
+    Ok(n)
+}
+
+/// Grant accumulated credits back to the gateway. Returns 1 if a grant
+/// was written (caller flushes).
+fn flush_credits(
+    writer: &mut BufWriter<TcpStream>,
+    scratch: &mut Vec<u8>,
+    pending: &mut u32,
+) -> Result<usize> {
+    if *pending == 0 {
+        return Ok(0);
+    }
+    write_msg(writer, &Msg::Credit { n: *pending }, scratch)?;
+    *pending = 0;
+    Ok(1)
+}
+
+/// Apply one gateway event. Returns true when the session input ended
+/// (EOF). A read error aborts the session.
+#[allow(clippy::too_many_arguments)]
+fn handle_event<L: Lane>(
+    ev: NodeEvent,
+    lane: &mut L,
+    results_rx: &mpsc::Receiver<ClassifyResult>,
+    writer: &mut BufWriter<TcpStream>,
+    scratch: &mut Vec<u8>,
+    frames_in: &mut u64,
+    pending_credits: &mut u32,
+    clips_out: &mut u64,
+) -> Result<bool> {
+    match ev {
+        NodeEvent::Frame(task) => {
+            *frames_in += 1;
+            // per-stream queue overflow is dropped and accounted inside
+            // the lane's own report, mirroring the in-process path
+            lane.push(task);
+            *pending_credits += 1;
+            Ok(false)
+        }
+        NodeEvent::Drain(token) => {
+            // barrier: classify everything received before the token,
+            // stream the results, *then* ack — the gateway relies on
+            // every pre-barrier result preceding the ack on the wire
+            lane.drain()?;
+            write_results(results_rx, writer, scratch, clips_out)?;
+            flush_credits(writer, scratch, pending_credits)?;
+            write_msg(writer, &Msg::DrainAck { token }, scratch)?;
+            writer.flush()?;
+            Ok(false)
+        }
+        NodeEvent::FlushTails(token) => {
+            // the gateway's end-of-stream request: zero-pad stranded
+            // partial tail clips and stream their results before the
+            // ack (same ordering contract as the drain barrier)
+            let flushed = lane.flush_tails()?;
+            write_results(results_rx, writer, scratch, clips_out)?;
+            flush_credits(writer, scratch, pending_credits)?;
+            write_msg(writer, &Msg::FlushAck { token, flushed }, scratch)?;
+            writer.flush()?;
+            Ok(false)
+        }
+        NodeEvent::Eof => Ok(true),
+        NodeEvent::ReadError(e) => bail!("gateway connection failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::multirate::BandPlan;
+    use crate::net::lane::{RemoteConfig, RemoteLane};
+    use crate::runtime::backend::CpuEngine;
+    use crate::util::prng::Pcg32;
+
+    fn engine() -> CpuEngine {
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = 2;
+        CpuEngine::with_clip(&plan, 1.0, 64, 2)
+    }
+
+    fn model() -> TrainedModel {
+        TrainedModel::synthetic(5, 3, engine().n_filters(), 0.0, 1.0)
+    }
+
+    /// Spawn a node hosting a single-lane pipeline for `conns` sessions;
+    /// returns the address to connect to.
+    fn spawn_node(m: TrainedModel, credits: u32, conns: usize) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let fp = m.fingerprint();
+        std::thread::spawn(move || {
+            serve_node(
+                listener,
+                pipeline_factory(engine(), m, 64),
+                fp,
+                NodeConfig { credits },
+                Some(conns),
+            )
+            .unwrap();
+        });
+        addr
+    }
+
+    fn tasks(n_streams: u64, clips: u64) -> Vec<FrameTask> {
+        let mut out = Vec::new();
+        for s in 0..n_streams {
+            let mut rng = Pcg32::substream(23, s);
+            for clip in 0..clips {
+                for f in 0..2usize {
+                    out.push(FrameTask {
+                        stream: s,
+                        clip_seq: clip,
+                        frame_idx: f,
+                        data: (0..64).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                        label: (s % 3) as usize,
+                        t_gen: Instant::now(),
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn loopback_session_classifies_and_reports() {
+        let m = model();
+        let addr = spawn_node(m.clone(), 8, 1);
+        let mut lane =
+            RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+        assert_eq!(lane.frame_len(), 64);
+        assert_eq!(lane.clip_frames(), 2);
+        assert_eq!(lane.sample_rate(), 16_000.0);
+        for t in tasks(4, 2) {
+            assert!(lane.push(t));
+        }
+        lane.drain().unwrap();
+        // the drain barrier means every result is already here
+        assert_eq!(lane.clips_classified(), 8);
+        let (report, results) = lane.finish().unwrap();
+        assert_eq!(report.clips_classified, 8);
+        assert_eq!(results.len(), 8);
+        assert_eq!(report.batch.frames_processed, 16);
+        assert_eq!(report.clips_padded, 0);
+        assert_eq!(report.latency.count(), 8, "gateway-side latency recorded");
+    }
+
+    #[test]
+    fn fingerprint_mismatch_fails_fast() {
+        let m = model();
+        let addr = spawn_node(m.clone(), 8, 1);
+        let err = RemoteLane::connect(&addr, m.fingerprint() ^ 1, RemoteConfig::default())
+            .expect_err("wrong model must be rejected");
+        assert!(
+            format!("{err:#}").contains("fingerprint"),
+            "reject reason names the cause: {err:#}"
+        );
+    }
+
+    #[test]
+    fn geometry_pin_mismatch_fails_fast() {
+        let m = model();
+        let addr = spawn_node(m.clone(), 8, 1);
+        let mut hello = Handshake::wildcard(m.fingerprint());
+        hello.frame_len = 4096; // node runs 64
+        let err = RemoteLane::connect_expect(&addr, hello, RemoteConfig::default())
+            .expect_err("geometry mismatch must be rejected");
+        assert!(format!("{err:#}").contains("frame_len"), "{err:#}");
+    }
+
+    #[test]
+    fn credit_window_backpressure_still_delivers_everything() {
+        // a 2-frame credit window with a tiny local queue: pushes must
+        // block on credit grants, not drop, and all clips still classify
+        let m = model();
+        let addr = spawn_node(m.clone(), 2, 1);
+        let cfg = RemoteConfig {
+            max_queue: 1,
+            io_timeout: Duration::from_secs(10),
+        };
+        let mut lane = RemoteLane::connect(&addr, m.fingerprint(), cfg).unwrap();
+        for t in tasks(6, 2) {
+            assert!(lane.push(t), "backpressure must block, not drop");
+        }
+        lane.drain().unwrap();
+        assert_eq!(lane.clips_classified(), 12);
+        let (report, _) = lane.finish().unwrap();
+        assert_eq!(report.clips_classified, 12);
+        assert_eq!(report.frames_dropped, 0);
+    }
+
+    #[test]
+    fn flush_tails_pads_stranded_clips_over_the_wire() {
+        let m = model();
+        let addr = spawn_node(m.clone(), 8, 1);
+        let mut lane =
+            RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+        // stream 0: complete clip; stream 1: only 1 of 2 frames
+        for t in tasks(2, 1) {
+            if t.stream == 1 && t.frame_idx == 1 {
+                continue;
+            }
+            lane.push(t);
+        }
+        // finishing WITHOUT a flush must not pad — remote matches local
+        // drain semantics exactly; the explicit request pads the tail
+        lane.drain().unwrap();
+        assert_eq!(lane.clips_classified(), 1, "partial clip not classified");
+        assert_eq!(lane.flush_tails().unwrap(), 1);
+        assert_eq!(lane.clips_classified(), 2, "flush result precedes the ack");
+        let (report, results) = lane.finish().unwrap();
+        assert_eq!(report.clips_classified, 2);
+        assert_eq!(report.clips_padded, 1);
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().any(|r| r.stream == 1));
+    }
+
+    #[test]
+    fn finish_without_flush_leaves_tails_unclassified() {
+        let m = model();
+        let addr = spawn_node(m.clone(), 8, 1);
+        let mut lane =
+            RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+        for t in tasks(1, 1) {
+            if t.frame_idx == 0 {
+                lane.push(t);
+            }
+        }
+        let (report, results) = lane.finish().unwrap();
+        assert_eq!(report.clips_classified, 0, "no implicit padding at EOF");
+        assert_eq!(report.clips_padded, 0);
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn node_serves_consecutive_sessions_with_fresh_state() {
+        let m = model();
+        let addr = spawn_node(m.clone(), 8, 2);
+        for _ in 0..2 {
+            let mut lane =
+                RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+            for t in tasks(2, 1) {
+                lane.push(t);
+            }
+            lane.drain().unwrap();
+            let (report, _) = lane.finish().unwrap();
+            // a fresh lane per connection: counts do not accumulate
+            assert_eq!(report.clips_classified, 2);
+        }
+    }
+}

@@ -1,0 +1,789 @@
+//! The length-prefixed binary wire protocol between a gateway
+//! ([`RemoteLane`](super::lane::RemoteLane)) and an `infilter-node`
+//! worker (DESIGN.md §10).
+//!
+//! Framing: every message is `[u32 LE payload length][payload]`, where
+//! the payload starts with one type byte. All integers are little
+//! endian; audio samples and scores are f32 bit patterns. A length
+//! above [`MAX_MSG_BYTES`] (or below 1) fails decoding immediately, so
+//! a corrupt or misaligned peer errors out instead of allocating
+//! gigabytes.
+//!
+//! Session shape:
+//!
+//! ```text
+//! gateway                              node
+//!   Hello{version, geometry, fp} ──▶
+//!                                 ◀── Welcome{geometry, fp, credits}
+//!                                      (or Reject{reason} + close)
+//!   Frame ×N  (bounded by credits) ─▶
+//!                                 ◀── Credit{n}   (as frames are consumed)
+//!                                 ◀── Result ×M   (as clips classify)
+//!   Drain{token} ─────────────────▶
+//!                                 ◀── Result ×K, then DrainAck{token}
+//!   FlushTails{token} (optional) ─▶
+//!                                 ◀── Result ×tails, FlushAck{token}
+//!   [shutdown(Write)] ────────────▶
+//!                                 ◀── Report, close
+//! ```
+
+use crate::coordinator::metrics::{LaneStats, ServeReport};
+use anyhow::{bail, ensure, Result};
+use std::io::{Read, Write};
+
+/// Protocol magic, first field of both handshake messages ("IFLT").
+pub const MAGIC: u32 = 0x4946_4C54;
+/// Protocol version; bumped on any wire-incompatible change.
+pub const VERSION: u16 = 1;
+/// Hard ceiling on one message's payload (64 MiB ≫ any real frame).
+pub const MAX_MSG_BYTES: usize = 1 << 26;
+
+const T_HELLO: u8 = 1;
+const T_WELCOME: u8 = 2;
+const T_REJECT: u8 = 3;
+const T_FRAME: u8 = 4;
+const T_RESULT: u8 = 5;
+const T_CREDIT: u8 = 6;
+const T_DRAIN: u8 = 7;
+const T_DRAIN_ACK: u8 = 8;
+const T_REPORT: u8 = 9;
+const T_FLUSH_TAILS: u8 = 10;
+const T_FLUSH_ACK: u8 = 11;
+
+/// The geometry + identity block both handshake messages carry. A zero
+/// field in the gateway's [`Msg::Hello`] is a wildcard ("adopt the
+/// node's value"); the fingerprint is never a wildcard — a model
+/// mismatch between the processes would classify silently wrong, so it
+/// always fails fast.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Handshake {
+    pub version: u16,
+    pub sample_rate: f64,
+    pub frame_len: u32,
+    pub clip_frames: u32,
+    pub n_filters: u32,
+    pub model_fingerprint: u64,
+}
+
+impl Handshake {
+    /// Gateway-side wildcard hello: pin only the model identity.
+    pub fn wildcard(model_fingerprint: u64) -> Handshake {
+        Handshake {
+            version: VERSION,
+            sample_rate: 0.0,
+            frame_len: 0,
+            clip_frames: 0,
+            n_filters: 0,
+            model_fingerprint,
+        }
+    }
+
+    /// Check a gateway hello against this node-side handshake (the
+    /// node's real geometry). Zero fields in `hello` are wildcards.
+    pub fn accepts(&self, hello: &Handshake) -> Result<()> {
+        ensure!(
+            hello.version == self.version,
+            "protocol version mismatch: gateway v{} vs node v{}",
+            hello.version,
+            self.version
+        );
+        ensure!(
+            hello.model_fingerprint == self.model_fingerprint,
+            "model fingerprint mismatch: gateway {:016x} vs node {:016x} \
+             (the processes hold different models)",
+            hello.model_fingerprint,
+            self.model_fingerprint
+        );
+        let geom = |name: &str, want: u64, have: u64| -> Result<()> {
+            ensure!(
+                want == 0 || want == have,
+                "{name} mismatch: gateway expects {want}, node runs {have}"
+            );
+            Ok(())
+        };
+        geom("frame_len", u64::from(hello.frame_len), u64::from(self.frame_len))?;
+        geom(
+            "clip_frames",
+            u64::from(hello.clip_frames),
+            u64::from(self.clip_frames),
+        )?;
+        geom("n_filters", u64::from(hello.n_filters), u64::from(self.n_filters))?;
+        ensure!(
+            hello.sample_rate == 0.0 || (hello.sample_rate - self.sample_rate).abs() < 1e-6,
+            "sample_rate mismatch: gateway expects {} Hz, node runs {} Hz",
+            hello.sample_rate,
+            self.sample_rate
+        );
+        Ok(())
+    }
+}
+
+/// One classified clip on the wire (latency is measured gateway-side
+/// from its own clip start, so it is not carried here).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResult {
+    pub stream: u64,
+    pub clip_seq: u64,
+    pub label: u32,
+    pub predicted: u32,
+    pub p: Vec<f32>,
+}
+
+/// Per-lane slice of a [`WireReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireLaneStats {
+    pub lane: u32,
+    pub frames: u64,
+    pub clips: u64,
+    pub frames_dropped: u64,
+}
+
+/// The node's final [`ServeReport`], minus the parts that do not
+/// survive a process boundary (latency is re-measured at the gateway;
+/// wall time is the gateway's session).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireReport {
+    pub clips_classified: u64,
+    pub clips_correct: u64,
+    pub clips_aborted: u64,
+    pub clips_padded: u64,
+    pub frames_dropped: u64,
+    pub wide_occupancy: [u64; 9],
+    pub wide_dispatches: u64,
+    pub narrow_dispatches: u64,
+    pub frames_processed: u64,
+    pub audio_seconds: f64,
+    pub lanes: Vec<WireLaneStats>,
+}
+
+impl WireReport {
+    pub fn from_report(r: &ServeReport) -> WireReport {
+        WireReport {
+            clips_classified: r.clips_classified,
+            clips_correct: r.clips_correct,
+            clips_aborted: r.clips_aborted,
+            clips_padded: r.clips_padded,
+            frames_dropped: r.frames_dropped,
+            wide_occupancy: r.batch.wide_occupancy,
+            wide_dispatches: r.batch.wide_dispatches,
+            narrow_dispatches: r.batch.narrow_dispatches,
+            frames_processed: r.batch.frames_processed,
+            audio_seconds: r.audio_seconds,
+            lanes: r
+                .per_lane
+                .iter()
+                .map(|l| WireLaneStats {
+                    lane: l.lane as u32,
+                    frames: l.frames,
+                    clips: l.clips,
+                    frames_dropped: l.frames_dropped,
+                })
+                .collect(),
+        }
+    }
+
+    /// Rehydrate into a [`ServeReport`] (latency/wall left default for
+    /// the gateway to fill from its own measurements).
+    pub fn into_report(self) -> ServeReport {
+        let mut out = ServeReport {
+            clips_classified: self.clips_classified,
+            clips_correct: self.clips_correct,
+            clips_aborted: self.clips_aborted,
+            clips_padded: self.clips_padded,
+            frames_dropped: self.frames_dropped,
+            audio_seconds: self.audio_seconds,
+            ..ServeReport::default()
+        };
+        out.batch.wide_occupancy = self.wide_occupancy;
+        out.batch.wide_dispatches = self.wide_dispatches;
+        out.batch.narrow_dispatches = self.narrow_dispatches;
+        out.batch.frames_processed = self.frames_processed;
+        out.per_lane = self
+            .lanes
+            .into_iter()
+            .map(|l| LaneStats {
+                lane: l.lane as usize,
+                frames: l.frames,
+                clips: l.clips,
+                frames_dropped: l.frames_dropped,
+            })
+            .collect();
+        out
+    }
+}
+
+/// Every message either endpoint can put on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// gateway → node: open a session (wildcardable geometry).
+    Hello(Handshake),
+    /// node → gateway: session accepted; `credits` frames may be in
+    /// flight before the gateway must wait for [`Msg::Credit`] grants.
+    Welcome { shake: Handshake, credits: u32 },
+    /// node → gateway: handshake refused (then the node closes).
+    Reject { reason: String },
+    /// gateway → node: one audio frame of one stream.
+    Frame {
+        stream: u64,
+        clip_seq: u64,
+        frame_idx: u32,
+        label: u32,
+        samples: Vec<f32>,
+    },
+    /// node → gateway: one classified clip.
+    Result(WireResult),
+    /// node → gateway: `n` more frames may be sent (frames consumed).
+    Credit { n: u32 },
+    /// gateway → node: barrier request — classify everything received
+    /// before this token, stream the results, then ack.
+    Drain { token: u64 },
+    /// node → gateway: the pipeline is empty up to `token`; every
+    /// result for pre-barrier frames precedes this on the wire.
+    DrainAck { token: u64 },
+    /// gateway → node: [`Lane::flush_tails`] over the wire — drain,
+    /// zero-pad stranded partial tail clips, stream their results,
+    /// then ack. Explicitly requested (end-of-stream only), never
+    /// applied implicitly, so remote semantics match the local trait.
+    ///
+    /// [`Lane::flush_tails`]: crate::coordinator::Lane::flush_tails
+    FlushTails { token: u64 },
+    /// node → gateway: `flushed` clips were zero-padded for `token`;
+    /// their results precede this on the wire.
+    FlushAck { token: u64, flushed: u64 },
+    /// node → gateway: final merged report, sent after the gateway
+    /// half-closes.
+    Report(WireReport),
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(out, vs.len() as u32);
+    for &v in vs {
+        put_f32(out, v);
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_shake(out: &mut Vec<u8>, h: &Handshake) {
+    put_u32(out, MAGIC);
+    put_u16(out, h.version);
+    put_f64(out, h.sample_rate);
+    put_u32(out, h.frame_len);
+    put_u32(out, h.clip_frames);
+    put_u32(out, h.n_filters);
+    put_u64(out, h.model_fingerprint);
+}
+
+/// Bounds-checked little-endian cursor over one received payload.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated wire message: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // bound against the *received* payload before allocating, so a
+        // corrupt length cannot reserve memory it never fills
+        ensure!(
+            self.pos + n * 4 <= self.buf.len(),
+            "f32 vector longer than its message ({n})"
+        );
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_MSG_BYTES, "string too long ({n})");
+        Ok(String::from_utf8_lossy(self.bytes(n)?).into_owned())
+    }
+
+    fn shake(&mut self) -> Result<Handshake> {
+        let magic = self.u32()?;
+        ensure!(
+            magic == MAGIC,
+            "bad handshake magic {magic:#x} (not an infilter endpoint?)"
+        );
+        Ok(Handshake {
+            version: self.u16()?,
+            sample_rate: self.f64()?,
+            frame_len: self.u32()?,
+            clip_frames: self.u32()?,
+            n_filters: self.u32()?,
+            model_fingerprint: self.u64()?,
+        })
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "trailing garbage in wire message: {} of {} bytes consumed",
+            self.pos,
+            self.buf.len()
+        );
+        Ok(())
+    }
+}
+
+impl Msg {
+    /// Append the payload (type byte first) to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::Hello(h) => {
+                out.push(T_HELLO);
+                put_shake(out, h);
+            }
+            Msg::Welcome { shake, credits } => {
+                out.push(T_WELCOME);
+                put_shake(out, shake);
+                put_u32(out, *credits);
+            }
+            Msg::Reject { reason } => {
+                out.push(T_REJECT);
+                put_str(out, reason);
+            }
+            Msg::Frame {
+                stream,
+                clip_seq,
+                frame_idx,
+                label,
+                samples,
+            } => {
+                out.push(T_FRAME);
+                put_u64(out, *stream);
+                put_u64(out, *clip_seq);
+                put_u32(out, *frame_idx);
+                put_u32(out, *label);
+                put_f32s(out, samples);
+            }
+            Msg::Result(r) => {
+                out.push(T_RESULT);
+                put_u64(out, r.stream);
+                put_u64(out, r.clip_seq);
+                put_u32(out, r.label);
+                put_u32(out, r.predicted);
+                put_f32s(out, &r.p);
+            }
+            Msg::Credit { n } => {
+                out.push(T_CREDIT);
+                put_u32(out, *n);
+            }
+            Msg::Drain { token } => {
+                out.push(T_DRAIN);
+                put_u64(out, *token);
+            }
+            Msg::DrainAck { token } => {
+                out.push(T_DRAIN_ACK);
+                put_u64(out, *token);
+            }
+            Msg::FlushTails { token } => {
+                out.push(T_FLUSH_TAILS);
+                put_u64(out, *token);
+            }
+            Msg::FlushAck { token, flushed } => {
+                out.push(T_FLUSH_ACK);
+                put_u64(out, *token);
+                put_u64(out, *flushed);
+            }
+            Msg::Report(r) => {
+                out.push(T_REPORT);
+                put_u64(out, r.clips_classified);
+                put_u64(out, r.clips_correct);
+                put_u64(out, r.clips_aborted);
+                put_u64(out, r.clips_padded);
+                put_u64(out, r.frames_dropped);
+                for b in r.wide_occupancy {
+                    put_u64(out, b);
+                }
+                put_u64(out, r.wide_dispatches);
+                put_u64(out, r.narrow_dispatches);
+                put_u64(out, r.frames_processed);
+                put_f64(out, r.audio_seconds);
+                put_u32(out, r.lanes.len() as u32);
+                for l in &r.lanes {
+                    put_u32(out, l.lane);
+                    put_u64(out, l.frames);
+                    put_u64(out, l.clips);
+                    put_u64(out, l.frames_dropped);
+                }
+            }
+        }
+    }
+
+    /// Decode one payload (as framed by [`read_msg`]).
+    pub fn decode(payload: &[u8]) -> Result<Msg> {
+        let mut d = Dec::new(payload);
+        let msg = match d.u8()? {
+            T_HELLO => Msg::Hello(d.shake()?),
+            T_WELCOME => Msg::Welcome {
+                shake: d.shake()?,
+                credits: d.u32()?,
+            },
+            T_REJECT => Msg::Reject { reason: d.str()? },
+            T_FRAME => Msg::Frame {
+                stream: d.u64()?,
+                clip_seq: d.u64()?,
+                frame_idx: d.u32()?,
+                label: d.u32()?,
+                samples: d.f32s()?,
+            },
+            T_RESULT => Msg::Result(WireResult {
+                stream: d.u64()?,
+                clip_seq: d.u64()?,
+                label: d.u32()?,
+                predicted: d.u32()?,
+                p: d.f32s()?,
+            }),
+            T_CREDIT => Msg::Credit { n: d.u32()? },
+            T_DRAIN => Msg::Drain { token: d.u64()? },
+            T_DRAIN_ACK => Msg::DrainAck { token: d.u64()? },
+            T_FLUSH_TAILS => Msg::FlushTails { token: d.u64()? },
+            T_FLUSH_ACK => Msg::FlushAck {
+                token: d.u64()?,
+                flushed: d.u64()?,
+            },
+            T_REPORT => {
+                let clips_classified = d.u64()?;
+                let clips_correct = d.u64()?;
+                let clips_aborted = d.u64()?;
+                let clips_padded = d.u64()?;
+                let frames_dropped = d.u64()?;
+                let mut wide_occupancy = [0u64; 9];
+                for b in wide_occupancy.iter_mut() {
+                    *b = d.u64()?;
+                }
+                let wide_dispatches = d.u64()?;
+                let narrow_dispatches = d.u64()?;
+                let frames_processed = d.u64()?;
+                let audio_seconds = d.f64()?;
+                let n_lanes = d.u32()? as usize;
+                ensure!(n_lanes <= 65_536, "implausible lane count {n_lanes}");
+                let mut lanes = Vec::with_capacity(n_lanes);
+                for _ in 0..n_lanes {
+                    lanes.push(WireLaneStats {
+                        lane: d.u32()?,
+                        frames: d.u64()?,
+                        clips: d.u64()?,
+                        frames_dropped: d.u64()?,
+                    });
+                }
+                Msg::Report(WireReport {
+                    clips_classified,
+                    clips_correct,
+                    clips_aborted,
+                    clips_padded,
+                    frames_dropped,
+                    wide_occupancy,
+                    wide_dispatches,
+                    narrow_dispatches,
+                    frames_processed,
+                    audio_seconds,
+                    lanes,
+                })
+            }
+            t => bail!("unknown wire message type {t}"),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// framed IO
+// ---------------------------------------------------------------------
+
+/// Write one framed message; `scratch` is reused across calls so the
+/// steady-state frame path does not allocate per message.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg, scratch: &mut Vec<u8>) -> Result<()> {
+    scratch.clear();
+    msg.encode(scratch);
+    ensure!(
+        scratch.len() <= MAX_MSG_BYTES,
+        "outgoing message too large ({} B)",
+        scratch.len()
+    );
+    w.write_all(&(scratch.len() as u32).to_le_bytes())?;
+    w.write_all(scratch)?;
+    Ok(())
+}
+
+/// Read one framed message. Returns `Ok(None)` on a clean EOF at a
+/// message boundary; EOF mid-message is an error.
+pub fn read_msg<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Option<Msg>> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut len4[got..])?;
+        if n == 0 {
+            ensure!(got == 0, "connection closed mid-message ({got}/4 header bytes)");
+            return Ok(None);
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    ensure!(
+        (1..=MAX_MSG_BYTES).contains(&len),
+        "corrupt wire frame: payload length {len}"
+    );
+    scratch.resize(len, 0);
+    r.read_exact(scratch)?;
+    Msg::decode(scratch).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut wire = Vec::new();
+        let mut scratch = Vec::new();
+        write_msg(&mut wire, msg, &mut scratch).unwrap();
+        let mut r = Cursor::new(wire);
+        let back = read_msg(&mut r, &mut scratch).unwrap().unwrap();
+        // and the stream is now at a clean EOF
+        assert!(read_msg(&mut r, &mut scratch).unwrap().is_none());
+        back
+    }
+
+    fn sample_shake() -> Handshake {
+        Handshake {
+            version: VERSION,
+            sample_rate: 16_000.0,
+            frame_len: 2048,
+            clip_frames: 8,
+            n_filters: 30,
+            model_fingerprint: 0xdead_beef_cafe_f00d,
+        }
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        let msgs = vec![
+            Msg::Hello(sample_shake()),
+            Msg::Hello(Handshake::wildcard(42)),
+            Msg::Welcome {
+                shake: sample_shake(),
+                credits: 256,
+            },
+            Msg::Reject {
+                reason: "model fingerprint mismatch".into(),
+            },
+            Msg::Frame {
+                stream: 7,
+                clip_seq: 3,
+                frame_idx: 2,
+                label: 5,
+                samples: vec![0.25, -1.5, 0.0, f32::MIN_POSITIVE],
+            },
+            Msg::Result(WireResult {
+                stream: 7,
+                clip_seq: 3,
+                label: 5,
+                predicted: 1,
+                p: vec![-0.5, 0.75],
+            }),
+            Msg::Credit { n: 17 },
+            Msg::Drain { token: 99 },
+            Msg::DrainAck { token: 99 },
+            Msg::FlushTails { token: 100 },
+            Msg::FlushAck {
+                token: 100,
+                flushed: 3,
+            },
+            Msg::Report(WireReport {
+                clips_classified: 10,
+                clips_correct: 8,
+                clips_aborted: 1,
+                clips_padded: 2,
+                frames_dropped: 3,
+                wide_occupancy: [0, 1, 2, 3, 4, 5, 6, 7, 8],
+                wide_dispatches: 36,
+                narrow_dispatches: 4,
+                frames_processed: 40,
+                audio_seconds: 5.12,
+                lanes: vec![
+                    WireLaneStats {
+                        lane: 0,
+                        frames: 30,
+                        clips: 7,
+                        frames_dropped: 0,
+                    },
+                    WireLaneStats {
+                        lane: 2,
+                        frames: 10,
+                        clips: 3,
+                        frames_dropped: 3,
+                    },
+                ],
+            }),
+        ];
+        for m in msgs {
+            assert_eq!(roundtrip(&m), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn report_conversion_preserves_serve_report_counters() {
+        let mut r = ServeReport {
+            clips_classified: 12,
+            clips_correct: 9,
+            clips_aborted: 1,
+            clips_padded: 2,
+            frames_dropped: 4,
+            audio_seconds: 3.5,
+            ..ServeReport::default()
+        };
+        r.batch.record_wide(8);
+        r.batch.record_narrow(5);
+        r.per_lane.push(LaneStats {
+            lane: 3,
+            frames: 13,
+            clips: 12,
+            frames_dropped: 4,
+        });
+        let back = WireReport::from_report(&r).into_report();
+        assert_eq!(back.clips_classified, r.clips_classified);
+        assert_eq!(back.clips_correct, r.clips_correct);
+        assert_eq!(back.clips_aborted, r.clips_aborted);
+        assert_eq!(back.clips_padded, r.clips_padded);
+        assert_eq!(back.frames_dropped, r.frames_dropped);
+        assert_eq!(back.audio_seconds, r.audio_seconds);
+        assert_eq!(back.batch.frames_processed, r.batch.frames_processed);
+        assert_eq!(back.batch.wide_occupancy, r.batch.wide_occupancy);
+        assert_eq!(back.per_lane.len(), 1);
+        assert_eq!(back.per_lane[0].lane, 3);
+        assert_eq!(back.per_lane[0].frames, 13);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_error() {
+        let mut wire = Vec::new();
+        let mut scratch = Vec::new();
+        write_msg(&mut wire, &Msg::Credit { n: 5 }, &mut scratch).unwrap();
+        // cut the payload short: mid-message EOF must error, not hang
+        let cut = wire.len() - 2;
+        assert!(read_msg(&mut Cursor::new(&wire[..cut]), &mut scratch).is_err());
+        // header claims an absurd length
+        let huge = (MAX_MSG_BYTES as u32 + 1).to_le_bytes().to_vec();
+        assert!(read_msg(&mut Cursor::new(huge), &mut scratch).is_err());
+        // zero-length payload is also corrupt (no type byte)
+        let zero = 0u32.to_le_bytes().to_vec();
+        assert!(read_msg(&mut Cursor::new(zero), &mut scratch).is_err());
+        // unknown type byte
+        let mut unk = 1u32.to_le_bytes().to_vec();
+        unk.push(0xEE);
+        assert!(read_msg(&mut Cursor::new(unk), &mut scratch).is_err());
+        // trailing garbage after a valid message body
+        let mut msg = Vec::new();
+        Msg::Credit { n: 5 }.encode(&mut msg);
+        msg.push(0x00);
+        let mut framed = (msg.len() as u32).to_le_bytes().to_vec();
+        framed.extend_from_slice(&msg);
+        assert!(read_msg(&mut Cursor::new(framed), &mut scratch).is_err());
+    }
+
+    #[test]
+    fn handshake_accepts_and_rejects() {
+        let node = sample_shake();
+        // exact match and wildcard both pass
+        node.accepts(&node).unwrap();
+        node.accepts(&Handshake::wildcard(node.model_fingerprint))
+            .unwrap();
+        // fingerprint is never wildcarded
+        let err = node
+            .accepts(&Handshake::wildcard(1))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"));
+        // pinned geometry must match
+        let mut wrong = node;
+        wrong.frame_len = 1024;
+        assert!(node.accepts(&wrong).is_err());
+        let mut wrong_sr = node;
+        wrong_sr.sample_rate = 8_000.0;
+        assert!(node.accepts(&wrong_sr).is_err());
+        let mut wrong_v = node;
+        wrong_v.version = VERSION + 1;
+        assert!(node.accepts(&wrong_v).is_err());
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut payload = Vec::new();
+        Msg::Hello(sample_shake()).encode(&mut payload);
+        payload[1] ^= 0xFF; // corrupt the magic (byte 0 is the type)
+        let err = Msg::decode(&payload).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"));
+    }
+}

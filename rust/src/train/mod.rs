@@ -128,6 +128,92 @@ impl TrainedModel {
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
         TrainedModel::from_json(&j)
     }
+
+    /// Order-sensitive FNV-1a hash over the model's canonical byte
+    /// serialisation (class names, weight/bias/standardiser f32 bits,
+    /// gammas). Two processes holding bit-identical models — a gateway
+    /// and the [`infilter-node`](crate::net) it connects to — agree on
+    /// this value, so the wire handshake can reject a model mismatch
+    /// before any frame is shipped.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat(&(self.classes.len() as u64).to_le_bytes());
+        for c in &self.classes {
+            eat(&(c.len() as u64).to_le_bytes());
+            eat(c.as_bytes());
+        }
+        for m in [&self.params.wp, &self.params.wm] {
+            eat(&(m.len() as u64).to_le_bytes());
+            for row in m {
+                eat(&(row.len() as u64).to_le_bytes());
+                for w in row {
+                    eat(&w.to_bits().to_le_bytes());
+                }
+            }
+        }
+        for v in [&self.params.bp, &self.params.bm, &self.std.mu, &self.std.sigma] {
+            eat(&(v.len() as u64).to_le_bytes());
+            for w in v {
+                eat(&w.to_bits().to_le_bytes());
+            }
+        }
+        eat(&self.gamma_f.to_bits().to_le_bytes());
+        eat(&self.gamma_1.to_bits().to_le_bytes());
+        h
+    }
+}
+
+/// Deterministic quick model trained entirely on the CPU backend (paper
+/// clip geometry, small synthetic ESC-10 subset): the default on-node
+/// model for `edge-fleet` and the `infilter-node` / `serve --connect`
+/// pair. Training is bit-deterministic in `seed`/`scale`/`epochs` (the
+/// parallel feature extraction is order-preserving and per-clip
+/// independent), so a gateway and a node that run this with the same
+/// arguments hold identical models and identical
+/// [`TrainedModel::fingerprint`]s without sharing a file.
+pub fn quick_cpu_model(
+    seed: u64,
+    scale: f64,
+    epochs: usize,
+    gamma_f: f32,
+    threads: usize,
+) -> TrainedModel {
+    let eng = crate::runtime::backend::CpuEngine::new(
+        &crate::dsp::multirate::BandPlan::paper_default(),
+        gamma_f,
+    );
+    let ds = crate::datasets::esc10::build(seed, scale);
+    let clip_len = {
+        use crate::runtime::backend::InferenceBackend;
+        eng.frame_len() * eng.clip_frames()
+    };
+    let samps: Vec<&[f32]> = ds.train.iter().map(|c| &c.samples[..clip_len]).collect();
+    let phi = eng.clip_features_many(&samps, threads);
+    let labels: Vec<usize> = ds.train.iter().map(|c| c.label).collect();
+    let tc = TrainConfig {
+        epochs,
+        seed,
+        ..TrainConfig::default()
+    };
+    let (model, losses) = train_model_cpu(&phi, &labels, &ds.classes, gamma_f, &tc);
+    let acc = evaluate_cpu(&model, &phi, &labels);
+    crate::log_info!(
+        "quick CPU model (seed {seed}, scale {scale}): train accuracy {:.1}% \
+         (loss {:.4} -> {:.4}, fingerprint {:016x})",
+        100.0 * acc,
+        losses.first().copied().unwrap_or(0.0),
+        losses.last().copied().unwrap_or(0.0),
+        model.fingerprint()
+    );
+    model
 }
 
 /// Hyper-parameters of the annealed SGD run.
@@ -392,6 +478,30 @@ mod tests {
         assert_eq!(back.params, m.params);
         assert_eq!(back.classes, m.classes);
         assert_eq!(back.std.mu, m.std.mu);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_weight_sensitive() {
+        let m = TrainedModel::synthetic(9, 3, 4, 5.0, 2.0);
+        let same = TrainedModel::synthetic(9, 3, 4, 5.0, 2.0);
+        assert_eq!(m.fingerprint(), same.fingerprint());
+        // a single-bit weight change must move the fingerprint
+        let mut tweaked = m.clone();
+        tweaked.params.wp[0][0] += 1e-6;
+        assert_ne!(m.fingerprint(), tweaked.fingerprint());
+        // so must a renamed class and a different gamma
+        let mut renamed = m.clone();
+        renamed.classes[0] = "other".into();
+        assert_ne!(m.fingerprint(), renamed.fingerprint());
+        let mut regamma = m.clone();
+        regamma.gamma_1 += 0.5;
+        assert_ne!(m.fingerprint(), regamma.fingerprint());
+        // the json save/load roundtrip preserves it (exact f32 emission)
+        let path = std::env::temp_dir().join("infilter_fp_roundtrip.json");
+        m.save(&path).unwrap();
+        let back = TrainedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(m.fingerprint(), back.fingerprint());
     }
 
     #[test]

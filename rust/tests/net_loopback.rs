@@ -1,0 +1,222 @@
+//! Cross-process serving, tier-1 safe: everything runs over loopback
+//! TCP on ephemeral ports (bind 127.0.0.1:0), no external network, no
+//! artifacts. The core acceptance test is remote-vs-local parity — the
+//! same synthetic clip set classified through an in-process `Pipeline`,
+//! a `ShardedPipeline`, and a `RemoteLane` + in-process `infilter-node`
+//! must produce bit-identical `ClassifyResult`s on the CPU backend.
+
+use infilter::coordinator::dispatch::{Lane, PipelineBuilder};
+use infilter::coordinator::shard::ShardedPipeline;
+use infilter::coordinator::{ClassifyResult, FrameTask};
+use infilter::dsp::multirate::BandPlan;
+use infilter::net::node::pipeline_factory;
+use infilter::net::{serve_node, NodeConfig, RemoteConfig, RemoteLane, RemotePool};
+use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+use infilter::train::TrainedModel;
+use infilter::util::prng::Pcg32;
+use std::net::TcpListener;
+use std::time::Instant;
+
+fn engine() -> CpuEngine {
+    // tiny geometry keeps the whole matrix fast in debug builds
+    let mut plan = BandPlan::paper_default();
+    plan.n_octaves = 2;
+    CpuEngine::with_clip(&plan, 1.0, 64, 2)
+}
+
+fn model() -> TrainedModel {
+    TrainedModel::synthetic(11, 4, engine().n_filters(), 0.0, 1.0)
+}
+
+/// Deterministic multi-stream workload, identical per invocation.
+fn workload(n_streams: u64, clips: u64) -> Vec<FrameTask> {
+    let mut out = Vec::new();
+    for s in 0..n_streams {
+        let mut rng = Pcg32::substream(41, s);
+        for clip in 0..clips {
+            for f in 0..2usize {
+                out.push(FrameTask {
+                    stream: s,
+                    clip_seq: clip,
+                    frame_idx: f,
+                    data: (0..64).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                    label: (s % 4) as usize,
+                    t_gen: Instant::now(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Spawn an in-process node serving `conns` sessions over a single-lane
+/// pipeline; returns (address, join handle).
+fn spawn_node(
+    m: TrainedModel,
+    conns: usize,
+    credits: u32,
+) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("loopback bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let fp = m.fingerprint();
+    let handle = std::thread::spawn(move || {
+        serve_node(
+            listener,
+            pipeline_factory(engine(), m, 64),
+            fp,
+            NodeConfig { credits },
+            Some(conns),
+        )
+        .expect("node serving");
+    });
+    (addr, handle)
+}
+
+fn sorted(mut rs: Vec<ClassifyResult>) -> Vec<ClassifyResult> {
+    rs.sort_by_key(|r| (r.stream, r.clip_seq));
+    rs
+}
+
+#[test]
+fn remote_matches_local_and_sharded_bit_exactly() {
+    let m = model();
+
+    // in-process single lane
+    let mut local = PipelineBuilder::new(engine(), m.clone())
+        .queue_capacity(64)
+        .build();
+    for t in workload(6, 2) {
+        assert!(Lane::push(&mut local, t));
+    }
+    Lane::drain(&mut local).unwrap();
+    let (local_report, local_results) = Lane::finish(local).unwrap();
+    let local_results = sorted(local_results);
+    assert_eq!(local_results.len(), 12);
+
+    // in-process sharded (3 lanes)
+    let mut sharded = ShardedPipeline::builder(3, |_| Ok(engine()), m.clone())
+        .queue_capacity(64)
+        .build()
+        .unwrap();
+    for t in workload(6, 2) {
+        assert!(Lane::push(&mut sharded, t));
+    }
+    Lane::drain(&mut sharded).unwrap();
+    let (_, sharded_results) = Lane::finish(sharded).unwrap();
+    let sharded_results = sorted(sharded_results);
+
+    // cross-process: RemoteLane -> loopback node
+    let (addr, node) = spawn_node(m.clone(), 1, 32);
+    let mut remote = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+    assert_eq!(remote.frame_len(), 64);
+    assert_eq!(remote.clip_frames(), 2);
+    for t in workload(6, 2) {
+        assert!(remote.push(t));
+    }
+    remote.drain().unwrap();
+    let (remote_report, remote_results) = remote.finish().unwrap();
+    node.join().unwrap();
+    let remote_results = sorted(remote_results);
+
+    // identical clip sets, bit-identical classifications
+    assert_eq!(local_results.len(), sharded_results.len());
+    assert_eq!(local_results.len(), remote_results.len());
+    for ((a, b), c) in local_results
+        .iter()
+        .zip(&sharded_results)
+        .zip(&remote_results)
+    {
+        assert_eq!((a.stream, a.clip_seq), (b.stream, b.clip_seq));
+        assert_eq!((a.stream, a.clip_seq), (c.stream, c.clip_seq));
+        assert_eq!(a.predicted, b.predicted);
+        assert_eq!(a.predicted, c.predicted, "stream {} clip {}", a.stream, a.clip_seq);
+        assert_eq!(a.p, b.p);
+        assert_eq!(
+            a.p, c.p,
+            "remote scores must be bit-equal (stream {} clip {})",
+            a.stream, a.clip_seq
+        );
+        assert_eq!(a.label, c.label);
+    }
+    // the node's report matches the local lane's counters
+    assert_eq!(remote_report.clips_classified, local_report.clips_classified);
+    assert_eq!(
+        remote_report.batch.frames_processed,
+        local_report.batch.frames_processed
+    );
+}
+
+#[test]
+fn gateway_drain_is_a_wire_barrier() {
+    // drain() must return only after the node has acked empty — at
+    // which point every result is already on the gateway, with no
+    // sleeps or polling needed
+    let m = model();
+    let (addr, node) = spawn_node(m.clone(), 1, 4);
+    let mut remote = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+    for round in 0..3u64 {
+        for t in workload(4, 1) {
+            let t = FrameTask {
+                clip_seq: round,
+                ..t
+            };
+            assert!(remote.push(t));
+        }
+        remote.drain().unwrap();
+        assert_eq!(
+            remote.clips_classified(),
+            4 * (round + 1),
+            "all of round {round}'s results must precede the drain ack"
+        );
+    }
+    let (report, results) = remote.finish().unwrap();
+    node.join().unwrap();
+    assert_eq!(report.clips_classified, 12);
+    assert_eq!(results.len(), 12);
+    assert_eq!(report.clips_padded, 0);
+}
+
+#[test]
+fn pool_fans_out_across_nodes_and_merges_reports() {
+    let m = model();
+    let (addr_a, node_a) = spawn_node(m.clone(), 1, 32);
+    let (addr_b, node_b) = spawn_node(m.clone(), 1, 32);
+    let mut pool = RemotePool::connect(
+        &[addr_a, addr_b],
+        m.fingerprint(),
+        RemoteConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(pool.nodes(), 2);
+    // streams must spread over both nodes (fib hash, see shard tests)
+    let hits: Vec<usize> = (0..8u64).map(|s| pool.route(s)).collect();
+    assert!(hits.contains(&0) && hits.contains(&1));
+    for t in workload(8, 1) {
+        assert!(pool.push(t));
+    }
+    Lane::drain(&mut pool).unwrap();
+    assert_eq!(pool.clips_classified(), 8);
+    let (report, results) = Lane::finish(pool).unwrap();
+    node_a.join().unwrap();
+    node_b.join().unwrap();
+    assert_eq!(report.clips_classified, 8);
+    assert_eq!(results.len(), 8);
+    assert_eq!(report.per_lane.len(), 2, "one breakdown row per node");
+    assert_eq!(
+        report.per_lane.iter().map(|l| l.clips).sum::<u64>(),
+        8
+    );
+
+    // and the pooled results equal a local run, bit for bit
+    let mut local = PipelineBuilder::new(engine(), m).queue_capacity(64).build();
+    for t in workload(8, 1) {
+        Lane::push(&mut local, t);
+    }
+    Lane::drain(&mut local).unwrap();
+    let (_, local_results) = Lane::finish(local).unwrap();
+    let (pooled, local_sorted) = (sorted(results), sorted(local_results));
+    for (a, b) in pooled.iter().zip(&local_sorted) {
+        assert_eq!((a.stream, a.clip_seq), (b.stream, b.clip_seq));
+        assert_eq!(a.p, b.p);
+    }
+}
