@@ -75,6 +75,7 @@ fn run(args: &Args) -> Result<()> {
     let queue = args.get_usize("queue", 32);
     let cfg = NodeConfig {
         credits: args.get_usize("credits", 256).min(u32::MAX as usize) as u32,
+        ..NodeConfig::default()
     };
     let max_conns = args.get("max-conns").map(|_| args.get_usize("max-conns", 1));
 

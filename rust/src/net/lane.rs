@@ -47,6 +47,22 @@ impl Default for RemoteConfig {
     }
 }
 
+/// Gateway-side start-of-clip bookkeeping for the end-to-end latency
+/// measurement.
+struct ClipT0 {
+    /// `None` once a frame of the clip was shed gateway-side: the
+    /// damaged clip may still surface as a zero-padded result at a
+    /// flush barrier, and that pseudo-classification must not record a
+    /// latency sample
+    t0: Option<Instant>,
+    /// nothing more will be sent for this clip — its last frame is on
+    /// the wire (result guaranteed to precede the next drain ack) or a
+    /// frame of it was shed gateway-side (the gapped clip is aborted
+    /// node-side without a result). Either way an entry still present
+    /// at the next drain ack can never resolve and is pruned.
+    complete: bool,
+}
+
 /// What the reader thread forwards off the socket.
 enum Event {
     Result(WireResult),
@@ -73,7 +89,7 @@ pub struct RemoteLane {
     queue: VecDeque<FrameTask>,
     /// (stream, clip_seq) -> generation time of the clip's first frame,
     /// for gateway-side end-to-end latency
-    clip_t0: HashMap<(u64, u64), Instant>,
+    clip_t0: HashMap<(u64, u64), ClipT0>,
     latency: LatencyHist,
     results_classified: u64,
     frames_dropped: u64,
@@ -234,19 +250,26 @@ impl RemoteLane {
     fn handle_event(&mut self, ev: Event) -> usize {
         match ev {
             Event::Result(r) => {
+                // a missing t0 means the clip was damaged in flight
+                // (its entry pruned at a barrier, or invalidated by a
+                // gateway-side shed) and this result is its padding —
+                // leave the histogram alone rather than recording a
+                // bogus sample
                 let latency = self
                     .clip_t0
                     .remove(&(r.stream, r.clip_seq))
-                    .map(|t0| t0.elapsed())
-                    .unwrap_or_default();
-                self.latency.record(latency);
+                    .and_then(|e| e.t0)
+                    .map(|t0| t0.elapsed());
+                if let Some(l) = latency {
+                    self.latency.record(l);
+                }
                 let result = ClassifyResult {
                     stream: r.stream,
                     clip_seq: r.clip_seq,
                     label: r.label as usize,
                     predicted: r.predicted as usize,
                     p: r.p,
-                    latency,
+                    latency: latency.unwrap_or_default(),
                 };
                 if let Some(sink) = self.sink.as_mut() {
                     sink.on_result(&result);
@@ -330,8 +353,18 @@ impl RemoteLane {
         let mut wrote = false;
         while self.credits > 0 {
             let Some(task) = self.queue.pop_front() else { break };
+            let key = (task.stream, task.clip_seq);
             if task.frame_idx == 0 {
-                self.clip_t0.insert((task.stream, task.clip_seq), task.t_gen);
+                // or_insert: a shed marker for this clip (complete=true,
+                // see `push`) must survive the first frame going out
+                let single = self.shake.clip_frames <= 1;
+                self.clip_t0
+                    .entry(key)
+                    .or_insert(ClipT0 { t0: Some(task.t_gen), complete: single });
+            } else if task.frame_idx + 1 >= self.shake.clip_frames as usize {
+                if let Some(e) = self.clip_t0.get_mut(&key) {
+                    e.complete = true;
+                }
             }
             let sent = write_msg(
                 &mut self.writer,
@@ -347,15 +380,22 @@ impl RemoteLane {
             if let Err(e) = sent {
                 self.frames_dropped += 1 + self.queue.len() as u64;
                 self.queue.clear();
+                // no result will ever arrive over the broken link
+                self.clip_t0.clear();
                 return Err(e.context(format!("sending frame to node {}", self.peer)));
             }
             self.credits -= 1;
             wrote = true;
         }
         if wrote {
-            self.writer
-                .flush()
-                .with_context(|| format!("flushing frames to node {}", self.peer))?;
+            if let Err(e) = self.writer.flush() {
+                // same dead-link accounting as a failed write: nothing
+                // still queued (or awaited in clip_t0) can be delivered
+                self.frames_dropped += self.queue.len() as u64;
+                self.queue.clear();
+                self.clip_t0.clear();
+                return Err(anyhow!(e).context(format!("flushing frames to node {}", self.peer)));
+            }
         }
         Ok(())
     }
@@ -397,6 +437,14 @@ impl RemoteLane {
         while self.last_ack != Some(token) {
             self.wait_event()?;
         }
+        // every pre-barrier result precedes the ack on the wire, so a
+        // fully-sent clip whose t0 still survives the ack was dropped
+        // node-side and can never resolve — prune it, or a long-running
+        // session leaks an entry per dropped clip. Incomplete entries
+        // stay: mid-capture drains (the edge fleet's per-tick barrier)
+        // routinely cut across clips whose remaining frames — and real
+        // latency — are still to come.
+        self.clip_t0.retain(|_, e| !e.complete);
         Ok(())
     }
 
@@ -415,6 +463,10 @@ impl RemoteLane {
         loop {
             if let Some((t, flushed)) = self.last_flush_ack {
                 if t == token {
+                    // a flush resolves everything sent so far — partial
+                    // tails included, padded results precede the ack —
+                    // so any surviving entry is dead and pruned outright
+                    self.clip_t0.clear();
                     return Ok(flushed);
                 }
             }
@@ -468,11 +520,19 @@ impl Lane for RemoteLane {
                     // (flush_queue will not run again with 0 credits)
                     self.frames_dropped += self.queue.len() as u64;
                     self.queue.clear();
+                    self.clip_t0.clear();
                 } else {
                     // timeout with the link still up: shed the newest
                     // frame (ours) only — an alive-but-slow node keeps
-                    // the older queue
-                    self.queue.pop_back();
+                    // the older queue. The gapped clip can never
+                    // classify normally, so pin its t0 entry complete —
+                    // pre-creating it when the clip's earlier frames
+                    // are themselves still queued — and the next
+                    // barrier prunes it instead of leaking it
+                    if let Some(t) = self.queue.pop_back() {
+                        self.clip_t0
+                            .insert((t.stream, t.clip_seq), ClipT0 { t0: None, complete: true });
+                    }
                     self.frames_dropped += 1;
                 }
                 return false;

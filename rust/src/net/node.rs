@@ -18,7 +18,7 @@ use crate::coordinator::{ClassifyResult, FrameTask};
 use crate::runtime::backend::InferenceBackend;
 use crate::train::TrainedModel;
 use crate::{log_info, log_warn};
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
@@ -103,6 +103,9 @@ where
     L: Lane,
     F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L>,
 {
+    if max_conns == Some(0) {
+        return Ok(());
+    }
     let local = listener.local_addr().context("node listener address")?;
     log_info!("infilter-node listening on {local} (model {fingerprint:016x})");
     let mut served = 0usize;
@@ -112,10 +115,8 @@ where
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "?".into());
-        let (results_tx, results_rx) = mpsc::channel::<ClassifyResult>();
-        let lane = factory(results_tx).context("building the connection's compute lane")?;
         log_info!("node: session from {peer}");
-        match handle_conn(stream, lane, results_rx, fingerprint, &cfg) {
+        match serve_conn(stream, &factory, fingerprint, &cfg)? {
             Ok(stats) => log_info!(
                 "node: session from {peer} done — {} frames in, {} clips out ({} padded)",
                 stats.frames_in,
@@ -125,10 +126,72 @@ where
             Err(e) => log_warn!("node: session from {peer} failed: {e:#}"),
         }
         served += 1;
-        if Some(served) == max_conns {
+        if max_conns.is_some_and(|n| served >= n) {
             break;
         }
     }
+    Ok(())
+}
+
+/// One accepted connection end to end: bounded Hello read, cheap
+/// identity precheck, and only then the compute lane + session. A
+/// silent probe (port scanner, health check) or a mismatched peer is
+/// turned away before any per-connection lane — worker threads,
+/// backend clones — is built for it.
+///
+/// The outer `Err` is server-fatal (a broken factory); handshake and
+/// session failures come back as the inner `Err`, charged to this
+/// connection only.
+fn serve_conn<L, F>(
+    stream: TcpStream,
+    factory: &F,
+    fingerprint: u64,
+    cfg: &NodeConfig,
+) -> Result<Result<ConnStats>>
+where
+    L: Lane,
+    F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L>,
+{
+    stream.set_nodelay(true).ok();
+    let mut scratch = Vec::new();
+    let mut rstream = match stream.try_clone().context("cloning session stream") {
+        Ok(s) => s,
+        Err(e) => return Ok(Err(e)),
+    };
+    let mut writer = BufWriter::new(stream);
+
+    // bounded Hello (a silent connection must not wedge the sequential
+    // accept loop; the timeout is lifted once the session is real)
+    if let Err(e) = rstream
+        .set_read_timeout(Some(cfg.handshake_timeout))
+        .context("setting the handshake timeout")
+    {
+        return Ok(Err(e));
+    }
+    let hello = match read_msg(&mut rstream, &mut scratch).context("reading hello") {
+        Ok(Some(Msg::Hello(h))) => h,
+        Ok(Some(other)) => return Ok(Err(anyhow!("expected Hello, got {other:?}"))),
+        Ok(None) => return Ok(Err(anyhow!("gateway closed before the handshake"))),
+        Err(e) => return Ok(Err(e)),
+    };
+    if let Err(e) = Handshake::wildcard(fingerprint).accepts_identity(&hello) {
+        let _ = send_reject(&mut writer, &mut scratch, format!("{e:#}"));
+        return Ok(Err(e.context("handshake rejected")));
+    }
+
+    let (results_tx, results_rx) = mpsc::channel::<ClassifyResult>();
+    let lane = factory(results_tx).context("building the connection's compute lane")?;
+    Ok(handle_conn(writer, rstream, scratch, hello, lane, results_rx, fingerprint, cfg))
+}
+
+/// Write a `Reject{reason}` and flush it before the connection drops.
+fn send_reject(
+    writer: &mut BufWriter<TcpStream>,
+    scratch: &mut Vec<u8>,
+    reason: String,
+) -> Result<()> {
+    write_msg(writer, &Msg::Reject { reason }, scratch)?;
+    writer.flush()?;
     Ok(())
 }
 
@@ -139,26 +202,21 @@ struct ConnStats {
     clips_padded: u64,
 }
 
-/// Drive one gateway session over one compute lane: handshake, then the
-/// frame/credit/drain/flush loop until the gateway half-closes, then a
-/// final drain + report.
+/// Drive one gateway session over one compute lane: the geometry half
+/// of the handshake (identity was prechecked lane-free by
+/// [`serve_conn`]), then the frame/credit/drain/flush loop until the
+/// gateway half-closes, then a final drain + report.
+#[allow(clippy::too_many_arguments)]
 fn handle_conn<L: Lane>(
-    stream: TcpStream,
+    mut writer: BufWriter<TcpStream>,
+    mut rstream: TcpStream,
+    mut scratch: Vec<u8>,
+    hello: Handshake,
     mut lane: L,
     results_rx: mpsc::Receiver<ClassifyResult>,
     fingerprint: u64,
     cfg: &NodeConfig,
 ) -> Result<ConnStats> {
-    stream.set_nodelay(true).ok();
-    let mut scratch = Vec::new();
-    let mut rstream = stream.try_clone().context("cloning session stream")?;
-    let mut writer = BufWriter::new(stream);
-
-    // ---- handshake (bounded: a silent connection must not wedge the
-    // accept loop; the timeout is lifted once the session is real)
-    rstream
-        .set_read_timeout(Some(cfg.handshake_timeout))
-        .context("setting the handshake timeout")?;
     let shake = Handshake {
         version: VERSION,
         sample_rate: lane.sample_rate(),
@@ -168,24 +226,12 @@ fn handle_conn<L: Lane>(
         // is pinned by frame_len/clip_frames/sample_rate + fingerprint
         model_fingerprint: fingerprint,
     };
-    let hello = match read_msg(&mut rstream, &mut scratch).context("reading hello")? {
-        Some(Msg::Hello(h)) => h,
-        Some(other) => bail!("expected Hello, got {other:?}"),
-        None => bail!("gateway closed before the handshake"),
-    };
     // n_filters is the one field the node cannot introspect; accept the
     // gateway's pin verbatim rather than comparing against 0
     let mut check = shake;
     check.n_filters = hello.n_filters;
     if let Err(e) = check.accepts(&hello) {
-        write_msg(
-            &mut writer,
-            &Msg::Reject {
-                reason: format!("{e:#}"),
-            },
-            &mut scratch,
-        )?;
-        writer.flush()?;
+        send_reject(&mut writer, &mut scratch, format!("{e:#}"))?;
         bail!("handshake rejected: {e:#}");
     }
     rstream
@@ -194,10 +240,7 @@ fn handle_conn<L: Lane>(
     let credits = cfg.credits.max(1);
     write_msg(
         &mut writer,
-        &Msg::Welcome {
-            shake,
-            credits,
-        },
+        &Msg::Welcome { shake, credits },
         &mut scratch,
     )?;
     writer.flush()?;
@@ -471,7 +514,7 @@ mod tests {
                 listener,
                 pipeline_factory(engine(), m, 64),
                 fp,
-                NodeConfig { credits },
+                NodeConfig { credits, ..NodeConfig::default() },
                 Some(conns),
             )
             .unwrap();
@@ -590,6 +633,32 @@ mod tests {
         assert_eq!(report.clips_padded, 1);
         assert_eq!(results.len(), 2);
         assert!(results.iter().any(|r| r.stream == 1));
+    }
+
+    #[test]
+    fn clip_spanning_a_drain_barrier_keeps_its_latency() {
+        // the edge fleet drains every virtual tick, mid-capture: a
+        // clip's t0 must survive barriers that fall between its frames,
+        // or every fleet clip's measured latency collapses to zero
+        let m = model();
+        let addr = spawn_node(m.clone(), 8, 1);
+        let mut lane =
+            RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+        let mut ts = tasks(1, 1); // one clip = frames 0 and 1
+        let second = ts.pop().unwrap();
+        let first = ts.pop().unwrap();
+        assert!(lane.push(first));
+        lane.drain().unwrap(); // barrier cuts across the open clip
+        assert_eq!(lane.clips_classified(), 0);
+        assert!(lane.push(second));
+        lane.drain().unwrap();
+        assert_eq!(lane.clips_classified(), 1);
+        let (report, _) = lane.finish().unwrap();
+        assert_eq!(report.latency.count(), 1);
+        assert!(
+            report.latency.mean_us() > 0.0,
+            "t0 was pruned by the mid-clip barrier"
+        );
     }
 
     #[test]

@@ -78,9 +78,12 @@ impl Handshake {
         }
     }
 
-    /// Check a gateway hello against this node-side handshake (the
-    /// node's real geometry). Zero fields in `hello` are wildcards.
-    pub fn accepts(&self, hello: &Handshake) -> Result<()> {
+    /// The version + model-fingerprint half of
+    /// [`accepts`](Self::accepts): everything checkable before the node
+    /// has a compute lane (and thus its real geometry), so mismatched
+    /// peers can be turned away before any per-connection resources
+    /// are built.
+    pub fn accepts_identity(&self, hello: &Handshake) -> Result<()> {
         ensure!(
             hello.version == self.version,
             "protocol version mismatch: gateway v{} vs node v{}",
@@ -94,6 +97,13 @@ impl Handshake {
             hello.model_fingerprint,
             self.model_fingerprint
         );
+        Ok(())
+    }
+
+    /// Check a gateway hello against this node-side handshake (the
+    /// node's real geometry). Zero fields in `hello` are wildcards.
+    pub fn accepts(&self, hello: &Handshake) -> Result<()> {
+        self.accepts_identity(hello)?;
         let geom = |name: &str, want: u64, have: u64| -> Result<()> {
             ensure!(
                 want == 0 || want == have,
@@ -313,8 +323,10 @@ impl<'a> Dec<'a> {
     }
 
     fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        // overflow-safe form of `pos + n <= len` (n is wire-supplied;
+        // pos <= len is a cursor invariant)
         ensure!(
-            self.pos + n <= self.buf.len(),
+            n <= self.buf.len() - self.pos,
             "truncated wire message: wanted {n} bytes at offset {}, have {}",
             self.pos,
             self.buf.len()
@@ -351,9 +363,10 @@ impl<'a> Dec<'a> {
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         // bound against the *received* payload before allocating, so a
-        // corrupt length cannot reserve memory it never fills
+        // corrupt length cannot reserve memory it never fills; the
+        // division sidesteps `n * 4` overflow on 32-bit targets
         ensure!(
-            self.pos + n * 4 <= self.buf.len(),
+            n <= (self.buf.len() - self.pos) / 4,
             "f32 vector longer than its message ({n})"
         );
         let mut out = Vec::with_capacity(n);

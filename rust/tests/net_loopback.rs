@@ -64,7 +64,7 @@ fn spawn_node(
             listener,
             pipeline_factory(engine(), m, 64),
             fp,
-            NodeConfig { credits },
+            NodeConfig { credits, ..NodeConfig::default() },
             Some(conns),
         )
         .expect("node serving");
