@@ -13,7 +13,7 @@ use infilter::coordinator::{
 };
 use infilter::dsp::multirate::BandPlan;
 use infilter::net::node::pipeline_factory;
-use infilter::net::{serve_node, NodeConfig, RemoteConfig, RemoteLane};
+use infilter::net::{serve_node, NodeConfig, RemoteConfig, RemoteLane, RemotePool};
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::train::TrainedModel;
 use infilter::util::prng::Pcg32;
@@ -144,6 +144,46 @@ fn main() {
                 lane.drain().unwrap();
                 let (report, _) = lane.finish().unwrap();
                 node.join().unwrap();
+                assert_eq!(report.clips_classified, total_clips);
+                report.clips_classified
+            },
+        );
+    }
+
+    // two loopback nodes behind a RemotePool: the fan-out tax on top of
+    // remote_1node (second connection, hash routing, concurrent drain
+    // barriers, merged reporting)
+    {
+        let (eng, m, tasks) = (eng.clone(), m.clone(), tasks.clone());
+        let fp = m.fingerprint();
+        b.run_with_throughput(
+            "dispatch/remote_2node_pool",
+            Some((total_clips as f64, "clips")),
+            || {
+                let addrs: Vec<String> = (0..2)
+                    .map(|_| {
+                        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                        let addr = listener.local_addr().unwrap().to_string();
+                        let (eng, m) = (eng.clone(), m.clone());
+                        std::thread::spawn(move || {
+                            serve_node(
+                                listener,
+                                pipeline_factory(eng, m, 64),
+                                fp,
+                                NodeConfig::default(),
+                                Some(1),
+                            )
+                            .unwrap();
+                        });
+                        addr
+                    })
+                    .collect();
+                let mut pool = RemotePool::connect(&addrs, fp, RemoteConfig::default()).unwrap();
+                for t in tasks.clone() {
+                    assert!(pool.push(t));
+                }
+                Lane::drain(&mut pool).unwrap();
+                let (report, _) = Lane::finish(pool).unwrap();
                 assert_eq!(report.clips_classified, total_clips);
                 report.clips_classified
             },

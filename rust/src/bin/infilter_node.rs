@@ -1,7 +1,9 @@
-//! `infilter-node` — a cross-process classification worker: hosts a
-//! local compute lane (single pipeline or `--shards N` sharded) behind
-//! a TCP listener and serves gateways speaking the `infilter` wire
-//! protocol (`serve --connect`, `edge-fleet --connect`; DESIGN.md §10).
+//! `infilter-node` — a cross-process classification worker: hosts
+//! local compute lanes (single pipeline or `--shards N` sharded, one
+//! fresh lane per gateway session) behind a TCP listener and serves up
+//! to `--max-sessions` gateways concurrently over the `infilter` wire
+//! protocol (`serve --connect`, `edge-fleet --connect`; spec in
+//! docs/WIRE.md, operations guide in docs/OPERATIONS.md).
 //!
 //! The node and its gateways must hold the same model. Either pass the
 //! same `--model model.json` to both, or let both sides default to the
@@ -28,6 +30,9 @@ USAGE: infilter-node [options]
   --listen ADDR   bind address (default 127.0.0.1:7171; use :0 for an
                   ephemeral port, printed at startup)
   --shards N      compute lanes inside this node (default 1)
+  --max-sessions N
+                  concurrent gateway sessions before further
+                  handshakes are rejected Busy (default 4)
   --credits N     in-flight frame window per gateway (default 256)
   --queue N       per-stream frame buffer inside the lane (default 32)
   --model PATH    serve this model (must match the gateway's)
@@ -75,6 +80,7 @@ fn run(args: &Args) -> Result<()> {
     let queue = args.get_usize("queue", 32);
     let cfg = NodeConfig {
         credits: args.get_usize("credits", 256).min(u32::MAX as usize) as u32,
+        max_sessions: args.get_usize("max-sessions", NodeConfig::default().max_sessions),
         ..NodeConfig::default()
     };
     let max_conns = args.get("max-conns").map(|_| args.get_usize("max-conns", 1));

@@ -37,21 +37,43 @@ impl<F: FnMut(&ClassifyResult) + Send> ClassifySink for F {
     }
 }
 
-/// The surface shared by the single-lane [`Pipeline`] and the
-/// multi-lane [`super::shard::ShardedPipeline`]: generic drivers (the
-/// serve loop, the edge fleet) accept `impl Lane` and stay agnostic to
-/// how many threads do the work.
+/// The surface shared by the single-lane [`Pipeline`], the multi-lane
+/// [`super::shard::ShardedPipeline`] and the cross-process
+/// [`RemoteLane`] / [`RemotePool`]: generic drivers (the serve loop,
+/// the edge fleet) accept `impl Lane` and stay agnostic to how many
+/// threads — or processes — do the work.
+///
+/// The delivery contract is **at-most-once**: a frame accepted by
+/// `push` is classified at most once, never twice, and every frame
+/// that will *not* be classified is visible in the final report's loss
+/// counters (`frames_dropped`, `clips_aborted`) rather than silently
+/// vanishing. In-process lanes only drop on queue overflow; a
+/// [`RemoteLane`] additionally accounts frames stranded by a link
+/// death (it reconnects and carries new traffic, but never replays —
+/// see `docs/WIRE.md`).
+///
+/// [`RemoteLane`]: crate::net::lane::RemoteLane
+/// [`RemotePool`]: crate::net::lane::RemotePool
 pub trait Lane {
     /// Enqueue one frame. Returns false when the frame was dropped
     /// immediately (single-lane backpressure); sharded lanes absorb the
-    /// frame into a channel and account drops in their lane reports.
+    /// frame into a channel and account drops in their lane reports. A
+    /// remote lane may *block* here — bounded by its configured
+    /// timeouts — while the node's credit window is exhausted or a dead
+    /// link is being re-established; `false` from a remote lane means
+    /// the frame was accounted as dropped, not that it may retry.
     fn push(&mut self, task: FrameTask) -> bool;
     /// Opportunistic progress: process some buffered work if any is due.
     /// Returns a progress count (0 = idle): frames advanced for a
     /// synchronous lane; results pumped back for lanes that compute
-    /// autonomously (sharded workers, remote nodes).
+    /// autonomously (sharded workers, remote nodes). Never blocks.
     fn service(&mut self) -> Result<usize>;
-    /// Block until every frame pushed so far has been processed.
+    /// Barrier: block until every frame pushed so far has been
+    /// processed and its results delivered to this lane (observable via
+    /// [`clips_classified`](Self::clips_classified) and the sink).
+    /// Frames the lane already accounted as lost are exempt — the
+    /// barrier guarantees "classified or counted", not delivery of the
+    /// undeliverable.
     fn drain(&mut self) -> Result<()>;
     /// Classify incomplete tail clips by zero-padding their missing
     /// frames (after draining the queues), matching the fixed-pipeline
@@ -70,8 +92,11 @@ pub trait Lane {
     }
     /// Clips classified so far (monotonic; exact after a `drain`).
     fn clips_classified(&self) -> u64;
+    /// Samples per frame this lane expects in every [`FrameTask`].
     fn frame_len(&self) -> usize;
+    /// Frames accumulated per classified clip.
     fn clip_frames(&self) -> usize;
+    /// Audio sample rate in Hz (drives pacing and audio-seconds).
     fn sample_rate(&self) -> f64;
     /// Tear down and hand back the merged report plus every collected
     /// result (empty when collection was disabled in favour of a sink).
@@ -90,6 +115,7 @@ pub struct PipelineBuilder<B: InferenceBackend> {
 }
 
 impl<B: InferenceBackend> PipelineBuilder<B> {
+    /// Start a builder from the two mandatory ingredients.
     pub fn new(backend: B, model: impl Into<Arc<TrainedModel>>) -> PipelineBuilder<B> {
         PipelineBuilder {
             backend,
@@ -101,6 +127,7 @@ impl<B: InferenceBackend> PipelineBuilder<B> {
         }
     }
 
+    /// Wide/narrow batching policy (defaults to [`BatcherPolicy`]'s).
     pub fn policy(mut self, policy: BatcherPolicy) -> Self {
         self.policy = policy;
         self
@@ -189,6 +216,7 @@ fn copy_state(dst: &mut StreamState, src: &StreamState) {
 }
 
 impl<B: InferenceBackend> Pipeline<B> {
+    /// Shorthand for [`PipelineBuilder::new`].
     pub fn builder(backend: B, model: impl Into<Arc<TrainedModel>>) -> PipelineBuilder<B> {
         PipelineBuilder::new(backend, model)
     }
@@ -215,6 +243,7 @@ impl<B: InferenceBackend> Pipeline<B> {
         &self.report
     }
 
+    /// The model this lane classifies with.
     pub fn model(&self) -> &TrainedModel {
         &self.model
     }

@@ -38,6 +38,13 @@ pub struct ServeReport {
     /// clips whose missing tail frames were zero-padded at flush time
     /// (see [`Pipeline::flush_tails`](super::Pipeline::flush_tails))
     pub clips_padded: u64,
+    /// times a gateway [`RemoteLane`] replaced a dead node session with
+    /// a fresh one (always 0 for in-process serving). Each reconnect
+    /// implies the at-most-once loss accounting documented in
+    /// `docs/WIRE.md` ran once.
+    ///
+    /// [`RemoteLane`]: crate::net::lane::RemoteLane
+    pub reconnects: u64,
     pub wall_time: Duration,
     pub audio_seconds: f64,
     pub latency: LatencyHist,
@@ -67,6 +74,7 @@ impl ServeReport {
             out.frames_dropped += r.frames_dropped;
             out.clips_aborted += r.clips_aborted;
             out.clips_padded += r.clips_padded;
+            out.reconnects += r.reconnects;
             out.wall_time = out.wall_time.max(r.wall_time);
             out.audio_seconds += r.audio_seconds;
             out.latency.merge(&r.latency);
@@ -132,6 +140,9 @@ impl ServeReport {
             self.batch.narrow_dispatches,
             self.batch.frames_processed,
         );
+        if self.reconnects > 0 {
+            s.push_str(&format!("\nreconnects={}", self.reconnects));
+        }
         s.push_str(&render_lanes(&self.per_lane));
         s
     }
@@ -190,6 +201,23 @@ mod tests {
         assert_eq!(m.per_lane[0].frames, 32);
         assert_eq!(m.per_lane[1].clips, 6);
         assert!(m.render().contains("lanes:"), "{}", m.render());
+    }
+
+    #[test]
+    fn reconnects_sum_on_merge_and_render_only_when_present() {
+        let quiet = ServeReport::default();
+        assert!(!quiet.render().contains("reconnects"));
+        let a = ServeReport {
+            reconnects: 2,
+            ..Default::default()
+        };
+        let b = ServeReport {
+            reconnects: 1,
+            ..Default::default()
+        };
+        let m = ServeReport::merge([a, b]);
+        assert_eq!(m.reconnects, 3);
+        assert!(m.render().contains("reconnects=3"), "{}", m.render());
     }
 
     #[test]

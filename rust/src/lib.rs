@@ -18,6 +18,15 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! HLO once, and the rust binary is self-contained afterwards.
+//!
+//! Reference documents, in reading order:
+//! * `DESIGN.md` — the architecture, section per subsystem,
+//! * `docs/WIRE.md` — the normative cross-process wire-protocol spec
+//!   (message table, handshake, credit/drain/flush state machines,
+//!   reconnect semantics, versioning policy) behind [`net`],
+//! * `docs/OPERATIONS.md` — deploying the gateway/worker topology:
+//!   `infilter-node` flags, report counters, failure modes,
+//! * `README.md` — build, CLI and benchmark walkthroughs.
 
 pub mod bench_util;
 pub mod carihc;

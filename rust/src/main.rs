@@ -66,6 +66,12 @@ USAGE: infilter <subcommand> [options]
   barrier over the wire); start workers with `infilter-node --listen
   HOST:PORT` holding the same --model (or the same quick-model
   --seed/--scale/--epochs) — the handshake rejects mismatches.
+  A dead node link reconnects with backoff and its streams re-route
+  to surviving nodes meanwhile (at-most-once, losses accounted):
+    --reconnect-attempts N   attempts per blocking call, 0 = off (4)
+    --reconnect-backoff-ms M retry spacing after the immediate first
+                             attempt, doubles to 2000 (50)
+  See docs/OPERATIONS.md for the full deployment walkthrough.
   edge-roc  gate ROC + uplink bytes-saved tables
   fpga-sim  cycle-level Fig. 7 schedule simulation
 
@@ -340,7 +346,7 @@ fn cmd_serve_remote(cfg: &AppConfig, args: &Args, connect: &str) -> Result<()> {
     let pool = RemotePool::connect(
         &split_addrs(connect),
         model.fingerprint(),
-        RemoteConfig::default(),
+        remote_config(args),
     )?;
     let scfg = ServeConfig {
         n_streams: args.get_usize("streams", 8),
@@ -439,6 +445,24 @@ fn edge_model(cfg: &AppConfig, args: &Args) -> Result<TrainedModel> {
     ))
 }
 
+/// Gateway-side wire knobs from the CLI: `--reconnect-attempts N`
+/// (0 disables failover) and `--reconnect-backoff-ms M` on top of the
+/// [`RemoteConfig`] defaults.
+fn remote_config(args: &Args) -> RemoteConfig {
+    let d = RemoteConfig::default();
+    RemoteConfig {
+        reconnect_attempts: args.get_usize(
+            "reconnect-attempts",
+            d.reconnect_attempts as usize,
+        ) as u32,
+        reconnect_backoff: std::time::Duration::from_millis(args.get_u64(
+            "reconnect-backoff-ms",
+            d.reconnect_backoff.as_millis() as u64,
+        )),
+        ..d
+    }
+}
+
 /// `--connect host:port[,host:port...]` -> node addresses.
 fn split_addrs(connect: &str) -> Vec<String> {
     connect
@@ -473,7 +497,7 @@ fn cmd_edge_fleet(cfg: &AppConfig, args: &Args) -> Result<()> {
         let pool = RemotePool::connect(
             &split_addrs(connect),
             model.fingerprint(),
-            RemoteConfig::default(),
+            remote_config(args),
         )?;
         let fcfg = FleetConfig::from_edge(
             &edge,

@@ -10,23 +10,41 @@
 //! returns credits as it consumes frames. When credits run out the
 //! gateway queues locally up to a bound, then *blocks* — a slow node
 //! throttles its gateway instead of ballooning its memory.
+//!
+//! Links are **self-healing, at-most-once**: when a node connection
+//! dies, the lane accounts everything unresolved (queued frames as
+//! [`ServeReport::frames_dropped`], clips awaiting results as
+//! [`ServeReport::clips_aborted`]), then re-connects with exponential
+//! backoff and re-runs the full handshake — fingerprint and geometry
+//! re-validated — before carrying *new* traffic. Nothing is ever
+//! replayed: a frame that may have reached the dead session is counted
+//! lost, never sent twice (see `docs/WIRE.md` §Reconnect). While one
+//! node of a [`RemotePool`] is down, its streams re-route to surviving
+//! nodes along the rendezvous ring of the shared
+//! [`route_stream`](crate::coordinator::shard::route_stream) hash, and
+//! return to their home node at the next clip boundary after it comes
+//! back.
 
-use super::proto::{read_msg, write_msg, Handshake, Msg, WireReport, WireResult, VERSION};
+use super::proto::{
+    read_msg, write_msg, Handshake, Msg, RejectCode, WireReport, WireResult, VERSION,
+};
 use crate::coordinator::dispatch::{ClassifySink, Lane};
 use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::shard::route_stream;
 use crate::coordinator::{ClassifyResult, FrameTask};
 use crate::util::stats::LatencyHist;
+use crate::{log_info, log_warn};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufWriter, Write};
-use std::net::{Shutdown, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Gateway-side knobs. The defaults suit a LAN loopback pair; raise
-/// `io_timeout` for long-haul links.
+/// `io_timeout` for long-haul links, and set `reconnect_attempts` to 0
+/// to restore the pre-failover "a dead link stays dead" behaviour.
 #[derive(Clone, Copy, Debug)]
 pub struct RemoteConfig {
     /// frames queued locally once the credit window is exhausted before
@@ -34,8 +52,26 @@ pub struct RemoteConfig {
     pub max_queue: usize,
     /// how long a blocking wait (credits, drain ack, final report) may
     /// go without any event from the node before the lane declares it
-    /// unresponsive
+    /// unresponsive; also bounds the *initial* connect + handshake
     pub io_timeout: Duration,
+    /// reconnect attempts one blocking call (`push`, `drain`) will make
+    /// after a link death before giving up on that call. The backoff
+    /// schedule keeps running across calls, so a node that comes back
+    /// later is still re-adopted; 0 disables reconnection entirely.
+    pub reconnect_attempts: u32,
+    /// backoff between reconnect attempts: the first attempt after a
+    /// death is immediate (a transient blip should not stall traffic),
+    /// then failures are spaced by this delay, doubling per failed
+    /// attempt up to `reconnect_max_backoff`
+    pub reconnect_backoff: Duration,
+    /// ceiling of the exponential reconnect backoff
+    pub reconnect_max_backoff: Duration,
+    /// bound on one reconnect *dial* (TCP connect + handshake read) —
+    /// deliberately much shorter than `io_timeout`, so probing a
+    /// blackholed node (packet loss, firewall drop: no RST, just
+    /// silence) costs a routing decision seconds, not the full I/O
+    /// timeout. Clamped to `io_timeout` if set larger.
+    pub reconnect_dial_timeout: Duration,
 }
 
 impl Default for RemoteConfig {
@@ -43,9 +79,32 @@ impl Default for RemoteConfig {
         RemoteConfig {
             max_queue: 1024,
             io_timeout: Duration::from_secs(30),
+            reconnect_attempts: 4,
+            reconnect_backoff: Duration::from_millis(50),
+            reconnect_max_backoff: Duration::from_secs(2),
+            reconnect_dial_timeout: Duration::from_secs(2),
         }
     }
 }
+
+/// A refused handshake, kept machine-readable so the reconnect path can
+/// tell a transient [`RejectCode::Busy`] from a permanent
+/// [`RejectCode::Incompatible`] without string matching.
+#[derive(Debug)]
+pub struct Rejected {
+    /// the node's classification of the refusal
+    pub code: RejectCode,
+    /// the node's human-readable reason
+    pub reason: String,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rejected ({:?}): {}", self.code, self.reason)
+    }
+}
+
+impl std::error::Error for Rejected {}
 
 /// Gateway-side start-of-clip bookkeeping for the end-to-end latency
 /// measurement.
@@ -74,32 +133,219 @@ enum Event {
     Closed(Option<String>),
 }
 
-/// One TCP connection to an `infilter-node`, as a [`Lane`].
-pub struct RemoteLane {
+/// One live TCP session to a node: socket, reader thread and the
+/// session-scoped credit window. Replaced wholesale on reconnect.
+struct Link {
     writer: BufWriter<TcpStream>,
-    scratch: Vec<u8>,
     events: mpsc::Receiver<Event>,
     reader: Option<JoinHandle<()>>,
-    peer: String,
-    shake: Handshake,
-    cfg: RemoteConfig,
     /// frames the node still allows in flight
     credits: u32,
+    /// the node-assigned session id from `Welcome`
+    session: u64,
+    /// set once the reader saw EOF/error; `None` while the link is up
+    closed: Option<Option<String>>,
+}
+
+impl Drop for Link {
+    fn drop(&mut self) {
+        // unblock the reader so its thread exits with the socket
+        if let Ok(s) = self.writer.get_ref().try_clone() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+/// Dial `peer`, run the handshake in `hello`, and spawn the reader
+/// thread; the connect and the handshake read are both bounded by
+/// `dial_timeout` (the initial connect passes `io_timeout`, reconnect
+/// probes the much shorter `reconnect_dial_timeout`). Fails with
+/// [`Rejected`] when the node refuses the session, so callers can
+/// classify the refusal.
+fn open_link(
+    peer: &str,
+    hello: &Handshake,
+    dial_timeout: Duration,
+) -> Result<(Link, Handshake)> {
+    let addrs: Vec<SocketAddr> = peer
+        .to_socket_addrs()
+        .with_context(|| format!("resolving node address {peer}"))?
+        .collect();
+    ensure!(!addrs.is_empty(), "node address {peer} resolved to nothing");
+    let mut stream = None;
+    let mut last = None;
+    for a in &addrs {
+        match TcpStream::connect_timeout(a, dial_timeout) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    let stream = match stream {
+        Some(s) => s,
+        None => {
+            return Err(anyhow!(last.expect("at least one address was tried"))
+                .context(format!("connecting to node {peer}")))
+        }
+    };
+    stream.set_nodelay(true).ok();
+    let mut scratch = Vec::new();
+    let mut writer = BufWriter::new(stream.try_clone().context("cloning node stream")?);
+    write_msg(&mut writer, &Msg::Hello(*hello), &mut scratch)?;
+    writer.flush()?;
+    // the welcome is read synchronously, before the reader thread owns
+    // the receive side — open_link either yields a working link or a
+    // specific error, bounded by `dial_timeout` (io_timeout on the
+    // initial connect, the short reconnect_dial_timeout on reconnect
+    // probes; a hung node must not block forever either way)
+    let mut rstream = stream;
+    rstream
+        .set_read_timeout(Some(dial_timeout))
+        .context("setting the handshake timeout")?;
+    let (shake, credits, session) = match read_msg(&mut rstream, &mut scratch)
+        .with_context(|| {
+            format!(
+                "reading handshake from {peer} (a decode error here usually \
+                 means the node speaks an older protocol version)"
+            )
+        })? {
+        Some(Msg::Welcome {
+            shake,
+            credits,
+            session,
+        }) => (shake, credits, session),
+        Some(Msg::Reject { code, reason }) => {
+            return Err(anyhow!(Rejected { code, reason }).context(format!("node {peer}")))
+        }
+        Some(other) => bail!("node {peer} sent {other:?} instead of a handshake"),
+        None => bail!("node {peer} closed during the handshake"),
+    };
+    ensure!(
+        shake.version == VERSION,
+        "node {peer} speaks protocol v{} (gateway v{VERSION})",
+        shake.version
+    );
+    ensure!(
+        shake.model_fingerprint == hello.model_fingerprint,
+        "node {peer} serves a different model ({:016x} vs {:016x})",
+        shake.model_fingerprint,
+        hello.model_fingerprint
+    );
+    ensure!(
+        shake.frame_len > 0 && shake.clip_frames > 0 && credits > 0,
+        "node {peer} sent a degenerate welcome (frame_len {}, \
+         clip_frames {}, credits {credits})",
+        shake.frame_len,
+        shake.clip_frames
+    );
+    // session reads are event-driven with their own recv_timeout bound;
+    // the socket itself goes back to blocking
+    rstream
+        .set_read_timeout(None)
+        .context("clearing the handshake timeout")?;
+    let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+    let reader = std::thread::Builder::new()
+        .name(format!("remote-rx-{peer}"))
+        .spawn(move || {
+            let mut scratch = Vec::new();
+            loop {
+                let ev = match read_msg(&mut rstream, &mut scratch) {
+                    Ok(Some(Msg::Result(r))) => Event::Result(r),
+                    Ok(Some(Msg::Credit { n })) => Event::Credit(n),
+                    Ok(Some(Msg::DrainAck { token })) => Event::DrainAck(token),
+                    Ok(Some(Msg::FlushAck { token, flushed })) => Event::FlushAck(token, flushed),
+                    Ok(Some(Msg::Report(r))) => Event::Report(r),
+                    Ok(Some(other)) => {
+                        let _ = ev_tx.send(Event::Closed(Some(format!(
+                            "unexpected message from node: {other:?}"
+                        ))));
+                        return;
+                    }
+                    Ok(None) => {
+                        let _ = ev_tx.send(Event::Closed(None));
+                        return;
+                    }
+                    Err(e) => {
+                        let _ = ev_tx.send(Event::Closed(Some(format!("{e:#}"))));
+                        return;
+                    }
+                };
+                if ev_tx.send(ev).is_err() {
+                    return; // lane dropped; stop reading
+                }
+            }
+        })
+        .context("spawning remote reader")?;
+    Ok((
+        Link {
+            writer,
+            events: ev_rx,
+            reader: Some(reader),
+            credits,
+            session,
+            closed: None,
+        },
+        shake,
+    ))
+}
+
+/// One logical connection to an `infilter-node`, as a [`Lane`]. The
+/// underlying TCP session is replaced transparently on failure (see the
+/// module docs for the at-most-once reconnect contract).
+pub struct RemoteLane {
+    peer: String,
+    /// the fully pinned hello used for every (re-)handshake: after the
+    /// first `Welcome`, geometry is no longer wildcarded, so a node
+    /// that restarts with different geometry or model is refused
+    hello: Handshake,
+    /// the geometry the first `Welcome` announced (survives link death
+    /// so `frame_len()` & co. keep answering while reconnecting)
+    shake: Handshake,
+    cfg: RemoteConfig,
+    /// `None` while the link is down
+    link: Option<Link>,
+    /// reusable encode buffer so the steady-state frame path does not
+    /// allocate per message
+    scratch: Vec<u8>,
+    /// why the last session died, for error messages
+    last_death: Option<String>,
+    /// `true` once a re-handshake was refused permanently
+    /// ([`RejectCode::retryable`] = false): stop probing a node that
+    /// can never accept us again
+    poisoned: bool,
+    /// reconnect schedule: earliest next attempt and current backoff
+    next_try: Instant,
+    backoff: Duration,
     /// local overflow once credits run out (bounded by `cfg.max_queue`)
     queue: VecDeque<FrameTask>,
     /// (stream, clip_seq) -> generation time of the clip's first frame,
     /// for gateway-side end-to-end latency
     clip_t0: HashMap<(u64, u64), ClipT0>,
+    /// stream -> clip_seq of the in-flight clip that died with a
+    /// previous session: continuation frames of such a clip are dropped
+    /// at `push` (counted) instead of reaching the fresh session, where
+    /// the tail-only partial would zero-pad into a bogus result and
+    /// double-account the clip. Cleared at the stream's next clip start.
+    dead_clips: HashMap<u64, u64>,
     latency: LatencyHist,
     results_classified: u64,
+    results_correct: u64,
     frames_dropped: u64,
+    /// clips that provably lost their chance at a result (unresolved at
+    /// a link death); folded into [`ServeReport::clips_aborted`]
+    clips_aborted: u64,
+    reconnects: u64,
     /// monotonic token shared by the drain and flush-tails barriers
+    /// (never reset: a stale ack from a dead session can't alias)
     drain_token: u64,
     last_ack: Option<u64>,
     last_flush_ack: Option<(u64, u64)>,
     node_report: Option<WireReport>,
-    /// set once the reader saw EOF/error; `None` while the link is up
-    closed: Option<Option<String>>,
     sink: Option<Box<dyn ClassifySink>>,
     collect: bool,
     collected: Vec<ClassifyResult>,
@@ -108,7 +354,8 @@ pub struct RemoteLane {
 impl RemoteLane {
     /// Connect and handshake, pinning only the model fingerprint (the
     /// lane adopts the node's clip geometry — the normal gateway case,
-    /// which has no local backend to disagree with).
+    /// which has no local backend to disagree with). The initial
+    /// connect is fail-fast; only an *established* link reconnects.
     pub fn connect(addr: &str, model_fingerprint: u64, cfg: RemoteConfig) -> Result<RemoteLane> {
         RemoteLane::connect_expect(addr, Handshake::wildcard(model_fingerprint), cfg)
     }
@@ -116,106 +363,42 @@ impl RemoteLane {
     /// Connect with a fully pinned [`Handshake`] (zero fields wildcard):
     /// the node must match or the connection fails fast.
     pub fn connect_expect(addr: &str, hello: Handshake, cfg: RemoteConfig) -> Result<RemoteLane> {
-        let stream =
-            TcpStream::connect(addr).with_context(|| format!("connecting to node {addr}"))?;
-        stream.set_nodelay(true).ok();
-        let mut scratch = Vec::new();
-        let mut writer = BufWriter::new(stream.try_clone().context("cloning node stream")?);
-        write_msg(&mut writer, &Msg::Hello(hello), &mut scratch)?;
-        writer.flush()?;
-        // the welcome is read synchronously, before the reader thread
-        // owns the receive side — connect() either yields a working lane
-        // or a specific error, bounded by io_timeout (a node that is
-        // busy with another session, or hung, must not block forever)
-        let mut rstream = stream;
-        rstream
-            .set_read_timeout(Some(cfg.io_timeout))
-            .context("setting the handshake timeout")?;
-        let (shake, credits) = match read_msg(&mut rstream, &mut scratch)
-            .with_context(|| format!("reading handshake from {addr} (is the node busy?)"))?
-        {
-            Some(Msg::Welcome { shake, credits }) => (shake, credits),
-            Some(Msg::Reject { reason }) => bail!("node {addr} rejected the session: {reason}"),
-            Some(other) => bail!("node {addr} sent {other:?} instead of a handshake"),
-            None => bail!("node {addr} closed during the handshake"),
+        let (link, shake) = open_link(addr, &hello, cfg.io_timeout)
+            .with_context(|| format!("establishing the session with node {addr}"))?;
+        // pin what the node announced: a replacement session must serve
+        // the same geometry and model or the reconnect is refused
+        let pinned = Handshake {
+            version: VERSION,
+            sample_rate: shake.sample_rate,
+            frame_len: shake.frame_len,
+            clip_frames: shake.clip_frames,
+            n_filters: hello.n_filters, // the node cannot announce its real value
+            model_fingerprint: hello.model_fingerprint,
         };
-        ensure!(
-            shake.version == VERSION,
-            "node {addr} speaks protocol v{} (gateway v{VERSION})",
-            shake.version
-        );
-        ensure!(
-            shake.model_fingerprint == hello.model_fingerprint,
-            "node {addr} serves a different model ({:016x} vs {:016x})",
-            shake.model_fingerprint,
-            hello.model_fingerprint
-        );
-        ensure!(
-            shake.frame_len > 0 && shake.clip_frames > 0 && credits > 0,
-            "node {addr} sent a degenerate welcome (frame_len {}, \
-             clip_frames {}, credits {credits})",
-            shake.frame_len,
-            shake.clip_frames
-        );
-        // session reads are event-driven with their own recv_timeout
-        // bound; the socket itself goes back to blocking
-        rstream
-            .set_read_timeout(None)
-            .context("clearing the handshake timeout")?;
-        let (ev_tx, ev_rx) = mpsc::channel::<Event>();
-        let reader = std::thread::Builder::new()
-            .name(format!("remote-rx-{addr}"))
-            .spawn(move || {
-                let mut scratch = Vec::new();
-                loop {
-                    let ev = match read_msg(&mut rstream, &mut scratch) {
-                        Ok(Some(Msg::Result(r))) => Event::Result(r),
-                        Ok(Some(Msg::Credit { n })) => Event::Credit(n),
-                        Ok(Some(Msg::DrainAck { token })) => Event::DrainAck(token),
-                        Ok(Some(Msg::FlushAck { token, flushed })) => {
-                            Event::FlushAck(token, flushed)
-                        }
-                        Ok(Some(Msg::Report(r))) => Event::Report(r),
-                        Ok(Some(other)) => {
-                            let _ = ev_tx.send(Event::Closed(Some(format!(
-                                "unexpected message from node: {other:?}"
-                            ))));
-                            return;
-                        }
-                        Ok(None) => {
-                            let _ = ev_tx.send(Event::Closed(None));
-                            return;
-                        }
-                        Err(e) => {
-                            let _ = ev_tx.send(Event::Closed(Some(format!("{e:#}"))));
-                            return;
-                        }
-                    };
-                    if ev_tx.send(ev).is_err() {
-                        return; // lane dropped; stop reading
-                    }
-                }
-            })
-            .context("spawning remote reader")?;
         Ok(RemoteLane {
-            writer,
-            scratch,
-            events: ev_rx,
-            reader: Some(reader),
             peer: addr.to_string(),
+            hello: pinned,
             shake,
             cfg,
-            credits,
+            link: Some(link),
+            scratch: Vec::new(),
+            last_death: None,
+            poisoned: false,
+            next_try: Instant::now(),
+            backoff: cfg.reconnect_backoff,
             queue: VecDeque::new(),
             clip_t0: HashMap::new(),
+            dead_clips: HashMap::new(),
             latency: LatencyHist::new(),
             results_classified: 0,
+            results_correct: 0,
             frames_dropped: 0,
+            clips_aborted: 0,
+            reconnects: 0,
             drain_token: 0,
             last_ack: None,
             last_flush_ack: None,
             node_report: None,
-            closed: None,
             sink: None,
             collect: true,
             collected: Vec::new(),
@@ -234,20 +417,61 @@ impl RemoteLane {
         self
     }
 
-    /// The geometry the node announced at the handshake.
+    /// The geometry the node announced at the first handshake.
     pub fn handshake(&self) -> &Handshake {
         &self.shake
     }
 
+    /// The node address this lane dials.
     pub fn peer(&self) -> &str {
         &self.peer
     }
 
-    fn link_dead(&self) -> bool {
-        self.closed.is_some()
+    /// The node-assigned id of the *current* session (0 while the link
+    /// is down). Changes after every reconnect; useful for correlating
+    /// gateway and node logs.
+    pub fn session_id(&self) -> u64 {
+        self.link.as_ref().map_or(0, |l| l.session)
     }
 
-    fn handle_event(&mut self, ev: Event) -> usize {
+    /// How often this lane replaced a dead session with a fresh one.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Whether the link is currently usable, without a blocking wait:
+    /// pumps pending events, folds a newly observed death, and makes at
+    /// most one (backoff-gated) reconnect attempt — the attempt's dial
+    /// is bounded by the short `reconnect_dial_timeout`, so even a
+    /// blackholed node costs a routing decision seconds at worst.
+    /// [`RemotePool`] routes around lanes that answer `false`.
+    pub fn poll_ready(&mut self) -> bool {
+        self.reap();
+        if self.link.is_some() {
+            return true;
+        }
+        if self.poisoned || self.cfg.reconnect_attempts == 0 || Instant::now() < self.next_try {
+            return false;
+        }
+        self.try_reconnect();
+        self.link.is_some()
+    }
+
+    /// Chaos/test hook: sever the current TCP session as if the network
+    /// dropped it. The next lane operation observes the death and runs
+    /// the normal at-most-once accounting + reconnect path.
+    #[doc(hidden)]
+    pub fn inject_link_failure(&mut self) {
+        if let Some(l) = self.link.as_ref() {
+            if let Ok(s) = l.writer.get_ref().try_clone() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    /// Apply one reader event to the lane. Returns 1 for a `Result`, 0
+    /// otherwise.
+    fn apply_event(&mut self, ev: Event) -> usize {
         match ev {
             Event::Result(r) => {
                 // a missing t0 means the clip was damaged in flight
@@ -262,6 +486,9 @@ impl RemoteLane {
                     .map(|t0| t0.elapsed());
                 if let Some(l) = latency {
                     self.latency.record(l);
+                }
+                if r.predicted == r.label {
+                    self.results_correct += 1;
                 }
                 let result = ClassifyResult {
                     stream: r.stream,
@@ -281,7 +508,9 @@ impl RemoteLane {
                 1
             }
             Event::Credit(n) => {
-                self.credits = self.credits.saturating_add(n);
+                if let Some(l) = self.link.as_mut() {
+                    l.credits = l.credits.saturating_add(n);
+                }
                 0
             }
             Event::DrainAck(token) => {
@@ -297,7 +526,9 @@ impl RemoteLane {
                 0
             }
             Event::Closed(cause) => {
-                self.closed = Some(cause);
+                if let Some(l) = self.link.as_mut() {
+                    l.closed = Some(cause);
+                }
                 0
             }
         }
@@ -307,67 +538,246 @@ impl RemoteLane {
     /// the number of results among them.
     fn pump(&mut self) -> usize {
         let mut results = 0;
-        while let Ok(ev) = self.events.try_recv() {
-            results += self.handle_event(ev);
+        loop {
+            let ev = match self.link.as_ref() {
+                Some(l) => match l.events.try_recv() {
+                    Ok(ev) => ev,
+                    Err(_) => break,
+                },
+                None => break,
+            };
+            results += self.apply_event(ev);
         }
         results
     }
 
-    /// Block for the next event (credit, result, ack...). Errors if the
-    /// node goes `io_timeout` without a peep or the link is down.
-    fn wait_event(&mut self) -> Result<usize> {
-        if let Some(cause) = &self.closed {
-            return Err(self.closed_error(cause.clone()));
+    /// Record that `clip_seq` of `stream` can no longer classify, so
+    /// its remaining frames are shed at `push` (monotonic per stream:
+    /// an older clip never displaces a newer entry).
+    fn mark_clip_dead(&mut self, stream: u64, clip_seq: u64) {
+        let e = self.dead_clips.entry(stream).or_insert(clip_seq);
+        *e = (*e).max(clip_seq);
+    }
+
+    /// Whether this frame continues a clip already accounted as lost.
+    fn dead_clip(&self, task: &FrameTask) -> bool {
+        self.dead_clips
+            .get(&task.stream)
+            .is_some_and(|&d| task.clip_seq <= d)
+    }
+
+    /// Pump, then fold an observed link death into the lane state.
+    /// Returns the number of results the pump delivered.
+    fn reap(&mut self) -> usize {
+        let n = self.pump();
+        if self.link.as_ref().is_some_and(|l| l.closed.is_some()) {
+            self.note_death();
         }
-        match self.events.recv_timeout(self.cfg.io_timeout) {
-            Ok(ev) => {
-                let n = self.handle_event(ev);
-                if let Some(cause) = &self.closed {
-                    return Err(self.closed_error(cause.clone()));
-                }
-                Ok(n)
+        n
+    }
+
+    /// The at-most-once reckoning for a dead session: everything that
+    /// can no longer produce an outcome is accounted *now* — queued
+    /// frames as drops, unresolved clips as aborts — and nothing is
+    /// kept for replay. A stale report from the dead session is
+    /// discarded (its counters died with the node's lane). Arms the
+    /// reconnect schedule.
+    fn note_death(&mut self) {
+        // first salvage everything the reader already delivered: results
+        // classified before the death are real and must reach the sink
+        // and the tallies, not be miscounted as aborted. The channel is
+        // fully drained here (the reader has exited or will exit on the
+        // dead socket), so only genuinely unresolved clips remain in
+        // clip_t0 below.
+        self.pump();
+        let Some(mut link) = self.link.take() else {
+            return;
+        };
+        let cause = link
+            .closed
+            .take()
+            .flatten()
+            .unwrap_or_else(|| "connection closed by the node".into());
+        drop(link); // joins the reader thread
+        // remember, per stream, the *newest* in-flight clip that died,
+        // so a later push cannot resurrect it on a replacement session
+        // (mark_clip_dead keeps the newest; collect first to end the
+        // queue/clip_t0 borrows)
+        let doomed: Vec<(u64, u64)> = self
+            .queue
+            .iter()
+            .map(|t| (t.stream, t.clip_seq))
+            .chain(self.clip_t0.keys().copied())
+            .collect();
+        for (stream, clip) in doomed {
+            self.mark_clip_dead(stream, clip);
+        }
+        let lost_frames = self.queue.len() as u64;
+        let lost_clips = self.clip_t0.len() as u64;
+        self.frames_dropped += lost_frames;
+        self.queue.clear();
+        self.clips_aborted += lost_clips;
+        self.clip_t0.clear();
+        self.node_report = None;
+        self.last_ack = None;
+        self.last_flush_ack = None;
+        log_warn!(
+            "link to node {} died ({cause}): {lost_frames} queued frames and \
+             {lost_clips} in-flight clips accounted lost (at-most-once)",
+            self.peer
+        );
+        self.last_death = Some(cause);
+        self.next_try = Instant::now();
+        self.backoff = self.cfg.reconnect_backoff;
+    }
+
+    /// One reconnect attempt (caller enforces the backoff gate): dial,
+    /// re-handshake against the pinned geometry + fingerprint, swap the
+    /// fresh session in. On failure, advances the backoff schedule; a
+    /// permanent rejection poisons the lane so it is never probed again.
+    fn try_reconnect(&mut self) {
+        let dial = self.cfg.reconnect_dial_timeout.min(self.cfg.io_timeout);
+        match open_link(&self.peer, &self.hello, dial) {
+            Ok((link, _shake)) => {
+                self.reconnects += 1;
+                log_info!(
+                    "reconnected to node {} (session #{}, reconnect #{})",
+                    self.peer,
+                    link.session,
+                    self.reconnects
+                );
+                self.link = Some(link);
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => bail!(
-                "node {} unresponsive for {:?}",
-                self.peer,
-                self.cfg.io_timeout
-            ),
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                bail!("reader thread for node {} died", self.peer)
+            Err(e) => {
+                if let Some(rej) = e.downcast_ref::<Rejected>() {
+                    if !rej.code.retryable() {
+                        self.poisoned = true;
+                        self.last_death = Some(format!("{rej}"));
+                        log_warn!(
+                            "node {} refused the re-handshake permanently: {rej}",
+                            self.peer
+                        );
+                        return;
+                    }
+                }
+                self.last_death = Some(format!("reconnect failed: {e:#}"));
+                self.next_try = Instant::now() + self.backoff;
+                self.backoff = (self.backoff * 2).min(self.cfg.reconnect_max_backoff);
             }
         }
     }
 
-    fn closed_error(&self, cause: Option<String>) -> anyhow::Error {
-        match cause {
-            Some(c) => anyhow!("connection to node {} failed: {c}", self.peer),
-            None => anyhow!("node {} hung up mid-session", self.peer),
+    /// Block until the link is usable, making up to
+    /// `cfg.reconnect_attempts` (backoff-spaced) attempts in this call.
+    /// The schedule persists across calls, so a node that comes back
+    /// later is still re-adopted by a future `push`.
+    fn ensure_link(&mut self) -> Result<()> {
+        self.reap();
+        if self.link.is_some() {
+            return Ok(());
         }
+        if !self.poisoned && self.cfg.reconnect_attempts > 0 {
+            for _ in 0..self.cfg.reconnect_attempts {
+                let now = Instant::now();
+                if now < self.next_try {
+                    std::thread::sleep(self.next_try - now);
+                }
+                self.try_reconnect();
+                if self.link.is_some() {
+                    return Ok(());
+                }
+                if self.poisoned {
+                    break;
+                }
+            }
+        }
+        bail!(
+            "node {} is down ({}) and reconnection is {}",
+            self.peer,
+            self.last_death.as_deref().unwrap_or("unknown cause"),
+            if self.poisoned {
+                "refused permanently"
+            } else if self.cfg.reconnect_attempts == 0 {
+                "disabled"
+            } else {
+                "still backing off"
+            }
+        )
+    }
+
+    /// Block for the next event (credit, result, ack...). On a link
+    /// death the at-most-once accounting runs and `self.link` is `None`
+    /// afterwards — callers distinguish death from a live-link timeout
+    /// by checking it.
+    fn wait_event(&mut self) -> Result<usize> {
+        self.reap();
+        let ev = {
+            let Some(link) = self.link.as_ref() else {
+                bail!(
+                    "link to node {} is down ({})",
+                    self.peer,
+                    self.last_death.as_deref().unwrap_or("unknown cause")
+                );
+            };
+            match link.events.recv_timeout(self.cfg.io_timeout) {
+                Ok(ev) => ev,
+                Err(mpsc::RecvTimeoutError::Timeout) => bail!(
+                    "node {} unresponsive for {:?}",
+                    self.peer,
+                    self.cfg.io_timeout
+                ),
+                Err(mpsc::RecvTimeoutError::Disconnected) => Event::Closed(Some(
+                    "reader thread died".into(),
+                )),
+            }
+        };
+        let n = self.apply_event(ev);
+        if self.link.as_ref().is_some_and(|l| l.closed.is_some()) {
+            self.note_death();
+            bail!(
+                "link to node {} died ({})",
+                self.peer,
+                self.last_death.as_deref().unwrap_or("unknown cause")
+            );
+        }
+        Ok(n)
     }
 
     /// Send queued frames while the credit window allows. On a write
-    /// error the link is broken, so the frame consumed by the failed
-    /// write *and* everything still queued are counted dropped at once —
-    /// retrying a dead socket would only misreport frames as in flight.
+    /// error the link is dead: the frame consumed by the failed write is
+    /// counted dropped here and [`note_death`](Self::note_death)
+    /// accounts everything else — retrying a dead socket would only
+    /// misreport frames as in flight.
     fn flush_queue(&mut self) -> Result<()> {
         let mut wrote = false;
-        while self.credits > 0 {
-            let Some(task) = self.queue.pop_front() else { break };
+        loop {
+            let credits = match self.link.as_ref() {
+                Some(l) => l.credits,
+                None => return Ok(()),
+            };
+            if credits == 0 {
+                break;
+            }
+            let Some(task) = self.queue.pop_front() else {
+                break;
+            };
             let key = (task.stream, task.clip_seq);
             if task.frame_idx == 0 {
                 // or_insert: a shed marker for this clip (complete=true,
                 // see `push`) must survive the first frame going out
                 let single = self.shake.clip_frames <= 1;
-                self.clip_t0
-                    .entry(key)
-                    .or_insert(ClipT0 { t0: Some(task.t_gen), complete: single });
+                self.clip_t0.entry(key).or_insert(ClipT0 {
+                    t0: Some(task.t_gen),
+                    complete: single,
+                });
             } else if task.frame_idx + 1 >= self.shake.clip_frames as usize {
                 if let Some(e) = self.clip_t0.get_mut(&key) {
                     e.complete = true;
                 }
             }
+            let link = self.link.as_mut().expect("checked above");
             let sent = write_msg(
-                &mut self.writer,
+                &mut link.writer,
                 &Msg::Frame {
                     stream: task.stream,
                     clip_seq: task.clip_seq,
@@ -377,23 +787,31 @@ impl RemoteLane {
                 },
                 &mut self.scratch,
             );
-            if let Err(e) = sent {
-                self.frames_dropped += 1 + self.queue.len() as u64;
-                self.queue.clear();
-                // no result will ever arrive over the broken link
-                self.clip_t0.clear();
-                return Err(e.context(format!("sending frame to node {}", self.peer)));
+            match sent {
+                Ok(()) => {
+                    link.credits -= 1;
+                    wrote = true;
+                }
+                Err(e) => {
+                    self.frames_dropped += 1; // the frame the write consumed
+                    if let Some(l) = self.link.as_mut() {
+                        l.closed = Some(Some(format!("send failed: {e:#}")));
+                    }
+                    self.note_death();
+                    return Err(e.context(format!("sending frame to node {}", self.peer)));
+                }
             }
-            self.credits -= 1;
-            wrote = true;
         }
         if wrote {
-            if let Err(e) = self.writer.flush() {
-                // same dead-link accounting as a failed write: nothing
-                // still queued (or awaited in clip_t0) can be delivered
-                self.frames_dropped += self.queue.len() as u64;
-                self.queue.clear();
-                self.clip_t0.clear();
+            let flushed = match self.link.as_mut() {
+                Some(l) => l.writer.flush(),
+                None => return Ok(()),
+            };
+            if let Err(e) = flushed {
+                if let Some(l) = self.link.as_mut() {
+                    l.closed = Some(Some(format!("flush failed: {e}")));
+                }
+                self.note_death();
                 return Err(anyhow!(e).context(format!("flushing frames to node {}", self.peer)));
             }
         }
@@ -413,11 +831,18 @@ impl RemoteLane {
     }
 
     fn send_ctl(&mut self, msg: &Msg) -> Result<()> {
-        write_msg(&mut self.writer, msg, &mut self.scratch)
-            .with_context(|| format!("sending control message to node {}", self.peer))?;
-        self.writer
-            .flush()
-            .with_context(|| format!("flushing control message to node {}", self.peer))?;
+        let Some(link) = self.link.as_mut() else {
+            bail!("link to node {} is down", self.peer);
+        };
+        let res = write_msg(&mut link.writer, msg, &mut self.scratch)
+            .and_then(|()| link.writer.flush().map_err(anyhow::Error::from));
+        if let Err(e) = res {
+            if let Some(l) = self.link.as_mut() {
+                l.closed = Some(Some(format!("control send failed: {e:#}")));
+            }
+            self.note_death();
+            return Err(e.context(format!("sending control message to node {}", self.peer)));
+        }
         Ok(())
     }
 
@@ -474,67 +899,151 @@ impl RemoteLane {
         }
     }
 
-    /// Barrier: everything pushed so far is classified and its results
-    /// have been delivered to this lane when this returns.
-    fn drain_inner(&mut self) -> Result<()> {
-        let token = self.send_drain()?;
-        self.await_drain(token)
+    /// The shared failover scaffold behind both wire barriers
+    /// (drain and flush-tails): (re-)establish the link, run the
+    /// `send` half then the `wait` half, and on a link death
+    /// mid-barrier retry against the replacement session (which it
+    /// reaches trivially — the dead session's work was *accounted*,
+    /// not carried over). A node that stays down yields `vacuous`
+    /// rather than an error: everything undeliverable is already in
+    /// the loss counters. Bounded against flapping nodes.
+    fn barrier_with_failover<T: Copy>(
+        &mut self,
+        what: &str,
+        vacuous: T,
+        send: fn(&mut RemoteLane) -> Result<u64>,
+        wait: fn(&mut RemoteLane, u64) -> Result<T>,
+    ) -> Result<T> {
+        for _ in 0..16 {
+            if self.ensure_link().is_err() {
+                return Ok(vacuous); // down + accounted = vacuously done
+            }
+            let token = match send(self) {
+                Ok(t) => t,
+                Err(e) => {
+                    if self.link.is_none() {
+                        continue; // died mid-barrier: retry on a fresh session
+                    }
+                    return Err(e);
+                }
+            };
+            match wait(self, token) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if self.link.is_none() {
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        bail!(
+            "node {} is flapping: 16 {what} barriers interrupted by link deaths",
+            self.peer
+        )
     }
-}
 
-impl Drop for RemoteLane {
-    fn drop(&mut self) {
-        // unblock the reader so its thread exits with the socket
-        if let Ok(s) = self.writer.get_ref().try_clone() {
-            let _ = s.shutdown(Shutdown::Both);
-        }
-        if let Some(r) = self.reader.take() {
-            let _ = r.join();
-        }
+    /// Barrier with failover: everything pushed so far has either been
+    /// classified (results delivered) or been accounted as lost by the
+    /// at-most-once reckoning when this returns.
+    fn drain_inner(&mut self) -> Result<()> {
+        self.barrier_with_failover("drain", (), RemoteLane::send_drain, RemoteLane::await_drain)
+    }
+
+    /// Gateway-side totals when the node cannot (or can no longer)
+    /// supply its final counters: everything the lane itself observed.
+    /// Batch/audio statistics are node-side only and stay zero —
+    /// `docs/OPERATIONS.md` documents this degraded shape.
+    fn fold_report(&mut self, wire: Option<WireReport>) -> ServeReport {
+        let mut report = wire.map(WireReport::into_report).unwrap_or_default();
+        // gateway counts span every session of this lane; the node's
+        // report only covers the last one, so the gateway's results
+        // tally is authoritative under reconnects (they agree exactly
+        // on a single-session run — see tests/net_loopback.rs parity)
+        report.clips_classified = self.results_classified;
+        report.clips_correct = self.results_correct;
+        report.clips_aborted += self.clips_aborted;
+        report.frames_dropped += self.frames_dropped;
+        report.reconnects = self.reconnects;
+        report.latency = std::mem::take(&mut self.latency);
+        report
     }
 }
 
 impl Lane for RemoteLane {
-    /// Queue one frame toward the node. Returns false (a drop) only
-    /// when the link is gone or the node stalled past `io_timeout` with
-    /// the local queue full — backpressure otherwise blocks here, per
-    /// the credit contract.
+    /// Queue one frame toward the node. Returns false (a drop) when the
+    /// link is gone past the reconnect budget, when the node stalled
+    /// past `io_timeout` with the local queue full, or when the frame
+    /// continues a clip that died with a previous session (already
+    /// accounted aborted — it must not resurrect half-zeroed on the
+    /// fresh session). Backpressure otherwise blocks here, per the
+    /// credit contract.
     fn push(&mut self, task: FrameTask) -> bool {
-        self.pump();
-        if self.link_dead() {
+        if task.frame_idx == 0 {
+            self.dead_clips.remove(&task.stream);
+        } else {
+            // cheap first pass of the dead-clip guard: fold any
+            // already-signalled death (reap never blocks), then shed a
+            // doomed continuation frame instantly — *before* paying
+            // ensure_link's reconnect budget for a frame that would be
+            // dropped either way. Keeps a pool's mid-clip frames for a
+            // down node from stalling traffic to healthy nodes.
+            self.reap();
+            if self.dead_clip(&task) {
+                self.frames_dropped += 1;
+                return false;
+            }
+        }
+        if self.ensure_link().is_err() {
+            self.frames_dropped += 1;
+            // the rest of this clip must not reach a later replacement
+            // session as a head-missing partial
+            self.mark_clip_dead(task.stream, task.clip_seq);
+            return false;
+        }
+        // second pass, for the race the first pass cannot see: a death
+        // first observed *inside* ensure_link (its reap → note_death)
+        // has marked this stream's in-flight clip, and the continuation
+        // frame must not slip onto the fresh session as a head-missing
+        // partial
+        if task.frame_idx > 0 && self.dead_clip(&task) {
             self.frames_dropped += 1;
             return false;
         }
         self.queue.push_back(task);
-        // a flush error empties the queue and accounts every loss,
-        // ours included, so the error branches just report the drop
+        // a send failure runs the at-most-once accounting (our frame
+        // included), so the error branches just report the drop
         if self.flush_queue().is_err() {
             return false;
         }
         while self.queue.len() > self.cfg.max_queue {
             // out of credits and over the local bound: block on the node
             if self.wait_event().is_err() {
-                if self.link_dead() {
-                    // node died while we were credit-blocked: nothing
-                    // queued can ever be delivered — account it all now
-                    // (flush_queue will not run again with 0 credits)
-                    self.frames_dropped += self.queue.len() as u64;
-                    self.queue.clear();
-                    self.clip_t0.clear();
-                } else {
-                    // timeout with the link still up: shed the newest
-                    // frame (ours) only — an alive-but-slow node keeps
-                    // the older queue. The gapped clip can never
-                    // classify normally, so pin its t0 entry complete —
-                    // pre-creating it when the clip's earlier frames
-                    // are themselves still queued — and the next
-                    // barrier prunes it instead of leaking it
-                    if let Some(t) = self.queue.pop_back() {
-                        self.clip_t0
-                            .insert((t.stream, t.clip_seq), ClipT0 { t0: None, complete: true });
-                    }
-                    self.frames_dropped += 1;
+                if self.link.is_none() {
+                    // node died while we were credit-blocked: the
+                    // at-most-once reckoning in note_death() already
+                    // accounted the queue (ours included)
+                    return false;
                 }
+                // timeout with the link still up: shed the newest frame
+                // (ours) only — an alive-but-slow node keeps the older
+                // queue. The gapped clip can never classify normally,
+                // so pin its t0 entry complete — pre-creating it when
+                // the clip's earlier frames are themselves still queued
+                // — and the next barrier prunes it instead of leaking it
+                if let Some(t) = self.queue.pop_back() {
+                    self.clip_t0.insert(
+                        (t.stream, t.clip_seq),
+                        ClipT0 {
+                            t0: None,
+                            complete: true,
+                        },
+                    );
+                    // the gapped clip can never classify: shed its
+                    // remaining frames gateway-side too
+                    self.mark_clip_dead(t.stream, t.clip_seq);
+                }
+                self.frames_dropped += 1;
                 return false;
             }
             if self.flush_queue().is_err() {
@@ -544,9 +1053,15 @@ impl Lane for RemoteLane {
         true
     }
 
+    /// Opportunistic, non-blocking progress: pump delivered results and
+    /// keep the send queue moving. A link death observed here is folded
+    /// into the failover state rather than surfaced as an error — the
+    /// next `push`/`drain` reconnects or accounts.
     fn service(&mut self) -> Result<usize> {
-        let n = self.pump();
-        self.flush_queue()?;
+        let n = self.reap();
+        if self.link.is_some() {
+            let _ = self.flush_queue();
+        }
         Ok(n)
     }
 
@@ -558,10 +1073,10 @@ impl Lane for RemoteLane {
     /// its stranded partial tail clips, streams their results and acks
     /// with the count — requested explicitly here, exactly like a local
     /// caller, so remote sessions never pad clips a local run would
-    /// not.
+    /// not. Same failover shape as [`drain`](Lane::drain): a node that
+    /// stays down yields `Ok(0)` with the losses already accounted.
     fn flush_tails(&mut self) -> Result<u64> {
-        let token = self.send_flush()?;
-        self.await_flush(token)
+        self.barrier_with_failover("flush", 0, RemoteLane::send_flush, RemoteLane::await_flush)
     }
 
     fn clips_classified(&self) -> u64 {
@@ -582,43 +1097,120 @@ impl Lane for RemoteLane {
 
     /// Full barrier, then half-close: the node sends its final report
     /// and closes. The returned report is the node's counters with the
-    /// *gateway's* end-to-end latency histogram and local drop count
-    /// folded in. (Tail padding is a separate, explicit
+    /// *gateway's* cross-session tallies folded in (end-to-end latency,
+    /// drops, aborts, reconnects). When the node is unreachable or
+    /// closes without a report, a degraded gateway-side report is
+    /// returned instead of an error, so a [`RemotePool`] merge still
+    /// accounts the lane. (Tail padding is a separate, explicit
     /// [`flush_tails`](Lane::flush_tails) call, not part of teardown.)
     fn finish(mut self) -> Result<(ServeReport, Vec<ClassifyResult>)> {
-        self.drain_inner()?;
-        self.writer.flush()?;
-        self.writer
-            .get_ref()
-            .shutdown(Shutdown::Write)
-            .with_context(|| format!("half-closing node {}", self.peer))?;
-        // collect tail results + the final report until the node closes
-        loop {
-            if self.closed.is_some() {
-                break;
+        self.reap();
+        let mut wire = None;
+        if self.link.is_some() {
+            if let Err(e) = self.drain_inner() {
+                log_warn!("finishing node {}: {e:#}", self.peer);
             }
-            match self.events.recv_timeout(self.cfg.io_timeout) {
-                Ok(ev) => {
-                    self.handle_event(ev);
+        }
+        if self.link.is_some() {
+            // half-close, then collect tail results + the final report
+            // until the node closes its side
+            let shut = self
+                .link
+                .as_mut()
+                .map(|l| {
+                    l.writer
+                        .flush()
+                        .map_err(anyhow::Error::from)
+                        .and_then(|()| {
+                            l.writer
+                                .get_ref()
+                                .shutdown(Shutdown::Write)
+                                .map_err(anyhow::Error::from)
+                        })
+                })
+                .unwrap();
+            match shut {
+                Ok(()) => loop {
+                    let ev = {
+                        let Some(link) = self.link.as_ref() else { break };
+                        match link.events.recv_timeout(self.cfg.io_timeout) {
+                            Ok(ev) => ev,
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                log_warn!(
+                                    "node {} did not close within {:?} of the shutdown; \
+                                     finishing with what it reported so far",
+                                    self.peer,
+                                    self.cfg.io_timeout
+                                );
+                                break;
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                Event::Closed(Some("reader thread died".into()))
+                            }
+                        }
+                    };
+                    self.apply_event(ev);
+                    // copy the close state out so the borrow ends
+                    let closed_clean: Option<bool> = self
+                        .link
+                        .as_ref()
+                        .and_then(|l| l.closed.as_ref().map(|c| c.is_none()));
+                    match closed_clean {
+                        // clean EOF after the final report: normal
+                        // teardown, no death accounting (incomplete
+                        // clips were deliberately left unflushed, same
+                        // as a local lane's finish)
+                        Some(true) => {
+                            wire = self.node_report.take();
+                            drop(self.link.take()); // quiet close + reader join
+                            break;
+                        }
+                        // transport error at teardown: run the normal
+                        // at-most-once reckoning
+                        Some(false) => {
+                            self.note_death();
+                            break;
+                        }
+                        None => {}
+                    }
+                },
+                Err(e) => {
+                    if let Some(l) = self.link.as_mut() {
+                        l.closed = Some(Some(format!("half-close failed: {e:#}")));
+                    }
+                    self.note_death();
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => bail!(
-                    "node {} did not close within {:?} of the shutdown",
-                    self.peer,
-                    self.cfg.io_timeout
-                ),
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        if let Some(Some(cause)) = &self.closed {
-            bail!("connection to node {} failed at teardown: {cause}", self.peer);
+        // frames still queued can only remain after a degraded exit (a
+        // clean finish drained them, a death already accounted them) —
+        // always fold them in
+        self.frames_dropped += self.queue.len() as u64;
+        self.queue.clear();
+        // a report that arrived before a slow/hung close is still good
+        // (a *death* clears node_report in note_death, so this cannot
+        // pick up a dead session's stale counters)
+        let wire = wire.or_else(|| self.node_report.take());
+        // with no final report at all, surviving clip_t0 entries are
+        // unresolved clips a wedged node will never answer — count them
+        // aborted so "classified or counted" holds. With a report in
+        // hand (clean close, or a report followed by a slow EOF) the
+        // survivors are the deliberately-unflushed partial tails, which
+        // a local finish also leaves uncounted — best-effort: a node
+        // that reports and *then* wedges mid-delivery may leave a
+        // result gap the degraded warning below does not cover.
+        if wire.is_none() {
+            self.clips_aborted += self.clip_t0.len() as u64;
         }
-        let wire = self
-            .node_report
-            .take()
-            .ok_or_else(|| anyhow!("node {} closed without a final report", self.peer))?;
-        let mut report = wire.into_report();
-        report.latency = std::mem::take(&mut self.latency);
-        report.frames_dropped += self.frames_dropped;
+        self.clip_t0.clear();
+        if wire.is_none() {
+            log_warn!(
+                "node {} supplied no final report; batch statistics for its \
+                 last session are lost (gateway counters remain exact)",
+                self.peer
+            );
+        }
+        let report = self.fold_report(wire);
         Ok((report, std::mem::take(&mut self.collected)))
     }
 }
@@ -628,12 +1220,25 @@ impl Lane for RemoteLane {
 /// (`route_stream`), merged reporting included. All nodes must announce
 /// the same clip geometry and model fingerprint.
 ///
+/// While a node is down (its lane reconnecting on its backoff
+/// schedule), its streams re-route to the next live node along the
+/// ring — rendezvous fallback on the same hash. Migration happens only
+/// at clip boundaries, in both directions, so clips are never split
+/// across nodes and never double-accounted (`docs/WIRE.md` §Reconnect
+/// spells out the contract).
+///
 /// [`ShardedPipeline`]: crate::coordinator::ShardedPipeline
 pub struct RemotePool {
     lanes: Vec<RemoteLane>,
+    /// stream -> temporary lane adopted while the stream's home node is
+    /// down; cleared at the first clip boundary after the home returns
+    overrides: HashMap<u64, usize>,
 }
 
 impl RemotePool {
+    /// Dial every node and cross-check their handshakes. Startup is
+    /// fail-fast: a node that is down *now* is a deployment error, not
+    /// a failover case.
     pub fn connect(
         addrs: &[String],
         model_fingerprint: u64,
@@ -649,22 +1254,137 @@ impl RemotePool {
             };
             lanes.push(lane);
         }
-        Ok(RemotePool { lanes })
+        Ok(RemotePool {
+            lanes,
+            overrides: HashMap::new(),
+        })
     }
 
+    /// Number of nodes behind this pool.
     pub fn nodes(&self) -> usize {
         self.lanes.len()
     }
 
-    /// Which node a stream lands on (the shared Fibonacci hash).
+    /// Which node a stream lands on when every node is live (the shared
+    /// Fibonacci hash).
     pub fn route(&self, stream: u64) -> usize {
         route_stream(stream, self.lanes.len())
+    }
+
+    /// Direct access to one node's lane (introspection and tests).
+    pub fn lane(&self, node: usize) -> &RemoteLane {
+        &self.lanes[node]
+    }
+
+    /// Mutable access to one node's lane (chaos hooks and tests).
+    pub fn lane_mut(&mut self, node: usize) -> &mut RemoteLane {
+        &mut self.lanes[node]
+    }
+
+    /// Pick the lane for one frame. Migration happens **only at clip
+    /// boundaries** — in both directions: a stream adopts a fallback
+    /// only for a clip it *starts* there, and returns home only with a
+    /// fresh clip. Mid-clip frames always follow the lane their clip
+    /// started on (even a dead one, where they are dropped and counted
+    /// by the normal at-most-once accounting) — re-routing a gapped
+    /// clip to a node that never saw its start would account the same
+    /// clip twice, once as the home's abort and once at the fallback.
+    fn pick_lane(&mut self, stream: u64, clip_start: bool) -> usize {
+        let primary = self.route(stream);
+        let n = self.lanes.len();
+        if !clip_start {
+            // mid-clip: stay with the clip's lane *unconditionally* —
+            // even a dead one. The lane's own at-most-once accounting
+            // (dead-clip guard, drop counters) absorbs the frames of a
+            // clip that died there; handing them to any other node
+            // would grow a tail-only partial that pads into a second,
+            // bogus accounting of the same clip.
+            if let Some(&o) = self.overrides.get(&stream) {
+                return o;
+            }
+            return primary;
+        }
+        // clip boundary: go home if the home answers, else adopt the
+        // next live node along the ring for this clip onward
+        self.overrides.remove(&stream);
+        if self.lanes[primary].poll_ready() {
+            return primary;
+        }
+        for k in 1..n {
+            let i = (primary + k) % n;
+            if self.lanes[i].poll_ready() {
+                self.overrides.insert(stream, i);
+                return i;
+            }
+        }
+        primary // everyone down: the home lane accounts the drop
+    }
+
+    /// The pool's concurrent-barrier scaffold, shared by
+    /// [`Lane::drain`] and [`Lane::flush_tails`]: every live lane's
+    /// `send` half goes on the wire before any `wait` half is awaited
+    /// (max-of-nodes latency, not sum). A down lane costs one cheap
+    /// backoff-gated probe: if the probe revives it, its real barrier
+    /// (`settle`) runs; otherwise the lane's losses are already
+    /// accounted and the result is `vacuous` — the barrier never
+    /// sleeps through a dead lane's whole reconnect schedule (the
+    /// edge fleet drains every tick). Live-link failures (timeout,
+    /// protocol error) still propagate.
+    fn barrier<T: Copy>(
+        &mut self,
+        vacuous: T,
+        send: fn(&mut RemoteLane) -> Result<u64>,
+        wait: fn(&mut RemoteLane, u64) -> Result<T>,
+        settle: fn(&mut RemoteLane) -> Result<T>,
+    ) -> Result<Vec<T>> {
+        let mut tokens: Vec<Option<u64>> = Vec::with_capacity(self.lanes.len());
+        for lane in &mut self.lanes {
+            if !lane.poll_ready() {
+                tokens.push(None);
+                continue;
+            }
+            match send(lane) {
+                Ok(t) => tokens.push(Some(t)),
+                Err(e) => {
+                    if lane.link.is_some() {
+                        return Err(e);
+                    }
+                    tokens.push(None); // died starting the barrier
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(self.lanes.len());
+        for (lane, token) in self.lanes.iter_mut().zip(tokens) {
+            let outcome = match token {
+                Some(t) => wait(lane, t),
+                None => {
+                    if lane.poll_ready() {
+                        settle(lane)
+                    } else {
+                        Ok(vacuous)
+                    }
+                }
+            };
+            match outcome {
+                Ok(v) => out.push(v),
+                Err(e) => {
+                    if lane.link.is_some() {
+                        return Err(e);
+                    }
+                    // died mid-await: one probe, then settle or vacuous
+                    out.push(if lane.poll_ready() { settle(lane)? } else { vacuous });
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
 impl Lane for RemotePool {
+    /// Route one frame by stream hash, falling back to the next live
+    /// node while the home node is down (see the type docs).
     fn push(&mut self, task: FrameTask) -> bool {
-        let lane = self.route(task.stream);
+        let lane = self.pick_lane(task.stream, task.frame_idx == 0);
         self.lanes[lane].push(task)
     }
 
@@ -676,32 +1396,30 @@ impl Lane for RemotePool {
         Ok(n)
     }
 
-    /// Concurrent barrier: every node's drain token goes on the wire
-    /// before any ack is awaited, so the pool pays max(node drain time)
-    /// plus one round trip — not the sum of sequential barriers.
+    /// Concurrent barrier: every live node's drain token goes on the
+    /// wire before any ack is awaited, so the pool pays max(node drain
+    /// time) plus one round trip — not the sum of sequential barriers.
+    /// Down nodes fall back to their lane's vacuous drain (their losses
+    /// are already accounted).
     fn drain(&mut self) -> Result<()> {
-        let mut tokens = Vec::with_capacity(self.lanes.len());
-        for lane in &mut self.lanes {
-            tokens.push(lane.send_drain()?);
-        }
-        for (lane, token) in self.lanes.iter_mut().zip(tokens) {
-            lane.await_drain(token)?;
-        }
-        Ok(())
+        self.barrier(
+            (),
+            RemoteLane::send_drain,
+            RemoteLane::await_drain,
+            RemoteLane::drain_inner,
+        )
+        .map(|_| ())
     }
 
     /// Same concurrent-barrier shape as [`drain`](Lane::drain): every
-    /// node pads and classifies its tails in parallel.
+    /// live node pads and classifies its tails in parallel.
     fn flush_tails(&mut self) -> Result<u64> {
-        let mut tokens = Vec::with_capacity(self.lanes.len());
-        for lane in &mut self.lanes {
-            tokens.push(lane.send_flush()?);
-        }
-        let mut flushed = 0;
-        for (lane, token) in self.lanes.iter_mut().zip(tokens) {
-            flushed += lane.await_flush(token)?;
-        }
-        Ok(flushed)
+        Ok(self
+            .barrier(0, RemoteLane::send_flush, RemoteLane::await_flush, |l| {
+                Lane::flush_tails(l)
+            })?
+            .into_iter()
+            .sum())
     }
 
     fn clips_classified(&self) -> u64 {
@@ -722,7 +1440,9 @@ impl Lane for RemotePool {
 
     /// Finish every node and merge their reports under their pool
     /// indices (nested per-node lane breakdowns are flattened by the
-    /// merge's per-lane summary).
+    /// merge's per-lane summary). A node that died and never came back
+    /// contributes its lane's degraded gateway-side report, so the
+    /// merged totals stay consistent with the delivered results.
     fn finish(self) -> Result<(ServeReport, Vec<ClassifyResult>)> {
         let mut reports = Vec::with_capacity(self.lanes.len());
         let mut results = Vec::new();

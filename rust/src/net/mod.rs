@@ -1,15 +1,21 @@
-//! Cross-process scale-out (DESIGN.md §10): the serving pipeline split
-//! over a socket. A gateway process runs a [`lane::RemoteLane`] (or a
-//! multi-node [`lane::RemotePool`]) behind the exact [`Lane`] interface
-//! the in-process pipelines implement, and each `infilter-node` worker
-//! process hosts a local [`Pipeline`] / [`ShardedPipeline`] behind a
-//! TCP listener ([`node::serve_node`]).
+//! Cross-process scale-out: the serving pipeline split over a socket.
+//! A gateway process runs a [`lane::RemoteLane`] (or a multi-node
+//! [`lane::RemotePool`]) behind the exact [`Lane`] interface the
+//! in-process pipelines implement, and each `infilter-node` worker
+//! process hosts local [`Pipeline`] / [`ShardedPipeline`] lanes behind
+//! a TCP listener ([`node::serve_node`]), one fresh lane per concurrent
+//! gateway session.
 //!
-//! Three properties the wire layer guarantees:
+//! The wire protocol itself is specified in `docs/WIRE.md` (message
+//! table, handshake, credit/drain/flush state machines, versioning);
+//! `docs/OPERATIONS.md` is the deployment walkthrough and failure-mode
+//! reference; DESIGN.md §10 is the architectural summary. Five
+//! properties the layer guarantees:
 //!
 //! * **Fail-fast identity** — a versioned handshake carries the clip
 //!   geometry and the model fingerprint; mismatched processes are
-//!   rejected before any frame is shipped ([`proto::Handshake`]).
+//!   rejected before any frame is shipped ([`proto::Handshake`],
+//!   [`proto::RejectCode::Incompatible`]).
 //! * **Credit-based backpressure** — the node grants a bounded window
 //!   of in-flight frames; a slow node throttles the gateway instead of
 //!   being OOMed by it.
@@ -17,11 +23,20 @@
 //!   only after the node acks that its pipeline is empty, with every
 //!   pre-barrier result already delivered (same contract as the
 //!   in-process barrier drain).
+//! * **Bounded admission** — a node serves up to
+//!   [`NodeConfig::max_sessions`] gateways concurrently and turns the
+//!   next one away with a retryable [`proto::RejectCode::Busy`] instead
+//!   of letting it queue blind.
+//! * **At-most-once self-healing** — a dead link accounts everything
+//!   unresolved as drops/aborts, then reconnects with backoff and a
+//!   full re-handshake; nothing is replayed, and a [`lane::RemotePool`]
+//!   re-routes the dead node's streams to survivors meanwhile.
 //!
 //! Classification parity is bit-exact: the node runs the same backend
 //! on the same frames, so a loopback `RemoteLane` produces identical
 //! `ClassifyResult`s to an in-process pipeline (tested in
-//! `tests/net_loopback.rs`).
+//! `tests/net_loopback.rs`; the failover paths in
+//! `tests/net_failover.rs`).
 //!
 //! [`Lane`]: crate::coordinator::Lane
 //! [`Pipeline`]: crate::coordinator::Pipeline
@@ -32,4 +47,5 @@ pub mod node;
 pub mod proto;
 
 pub use lane::{RemoteConfig, RemoteLane, RemotePool};
-pub use node::{serve_node, NodeConfig};
+pub use node::{serve_node, serve_node_until, NodeConfig, NodeShutdown};
+pub use proto::RejectCode;

@@ -1,40 +1,56 @@
 //! The worker side of cross-process serving: host any [`Lane`] (a
 //! single [`Pipeline`] or a `--shards N` [`ShardedPipeline`]) behind a
 //! TCP listener speaking the [`proto`](super::proto) wire protocol.
-//! `infilter-node` (src/bin) is a thin CLI over [`serve_node`].
+//! `infilter-node` (src/bin) is a thin CLI over [`serve_node`]; the
+//! wire contract is specified in `docs/WIRE.md` and the operational
+//! behaviour (failure modes, counters) in `docs/OPERATIONS.md`.
 //!
-//! Connections are handled sequentially, one compute lane per
-//! connection (built fresh by the factory, so stream state never leaks
-//! across sessions); parallelism comes from sharding *inside* the lane
-//! and from running multiple node processes behind a gateway
+//! Connections are handled **concurrently**, one thread and one fresh
+//! compute lane per accepted gateway (built by the shared factory
+//! *inside* the session thread, so non-`Send` backends keep working —
+//! the same trick [`ShardedPipeline`] uses for its workers). Admission
+//! is capped by [`NodeConfig::max_sessions`]: a gateway beyond the cap
+//! is turned away with a [`RejectCode::Busy`] over the normal handshake
+//! path instead of queueing behind the running sessions. Stream state
+//! never leaks across sessions (every connection gets its own lane);
+//! further parallelism comes from sharding *inside* each lane and from
+//! running multiple node processes behind a gateway
 //! [`RemotePool`](super::lane::RemotePool).
 //!
 //! [`Pipeline`]: crate::coordinator::Pipeline
 //! [`ShardedPipeline`]: crate::coordinator::ShardedPipeline
 
-use super::proto::{read_msg, write_msg, Handshake, Msg, WireReport, WireResult, VERSION};
+use super::proto::{
+    read_msg, write_msg, Handshake, Msg, RejectCode, WireReport, WireResult, VERSION,
+};
 use crate::coordinator::dispatch::{ClassifySink, Lane, Pipeline, PipelineBuilder};
 use crate::coordinator::{ClassifyResult, FrameTask};
 use crate::runtime::backend::InferenceBackend;
 use crate::train::TrainedModel;
 use crate::{log_info, log_warn};
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 use std::io::{BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Node-side knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct NodeConfig {
-    /// in-flight frame window granted to the gateway at the handshake —
-    /// the node's memory bound for socket + queue buffering
+    /// in-flight frame window granted to each gateway at the handshake —
+    /// the node's per-session memory bound for socket + queue buffering
     pub credits: u32,
     /// how long an accepted connection may sit silent before its Hello;
-    /// a port scanner or half-open socket would otherwise wedge the
-    /// sequential accept loop forever. Cleared after the handshake (an
-    /// idle mid-session gateway is legal).
+    /// a port scanner or half-open socket would otherwise pin one of the
+    /// admission slots forever. Cleared after the handshake (an idle
+    /// mid-session gateway is legal).
     pub handshake_timeout: Duration,
+    /// concurrent gateway sessions admitted before further handshakes
+    /// are refused with [`RejectCode::Busy`]. Each admitted session owns
+    /// a thread and a fresh compute lane, so this caps the node's
+    /// compute and memory fan-out.
+    pub max_sessions: usize,
 }
 
 impl Default for NodeConfig {
@@ -42,7 +58,35 @@ impl Default for NodeConfig {
         NodeConfig {
             credits: 256,
             handshake_timeout: Duration::from_secs(10),
+            max_sessions: 4,
         }
+    }
+}
+
+/// Cooperative stop switch for [`serve_node_until`]'s accept loop:
+/// clone it before starting the node, call [`shutdown`](Self::shutdown)
+/// from any thread, and the accept loop stops taking new connections,
+/// finishes (joins) the sessions already running, and returns. This is
+/// what makes a "serve forever" node stoppable deterministically in
+/// tests and embedders; the `infilter-node` binary simply never
+/// triggers it.
+#[derive(Clone, Debug, Default)]
+pub struct NodeShutdown(Arc<AtomicBool>);
+
+impl NodeShutdown {
+    pub fn new() -> NodeShutdown {
+        NodeShutdown::default()
+    }
+
+    /// Ask the accept loop to stop. Idempotent; takes effect within one
+    /// accept-poll interval (a few milliseconds).
+    pub fn shutdown(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether [`shutdown`](Self::shutdown) has been requested.
+    pub fn is_shutdown(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
     }
 }
 
@@ -80,18 +124,29 @@ where
     }
 }
 
-/// Accept connections and serve each with a fresh compute lane from
-/// `factory` (which receives the per-connection result sender to
-/// install as the lane's sink — build with `collect_results(false)` so
-/// results are not buffered twice). `fingerprint` is the hosted model's
+/// Accept gateway connections and serve each on its own thread with a
+/// fresh compute lane from `factory` (which receives the per-connection
+/// result sender to install as the lane's sink — build with
+/// `collect_results(false)` so results are not buffered twice).
+/// `fingerprint` is the hosted model's
 /// [`fingerprint`](crate::train::TrainedModel::fingerprint); a gateway
 /// holding a different model is rejected at the handshake.
 ///
-/// `max_conns` bounds how many connections are served before returning
-/// (`None` = serve forever) — tests and benches bind port 0, serve one
-/// connection, and join. A connection-level error is logged and the
-/// node moves on to the next connection; only accept/factory errors
-/// abort the server.
+/// `max_conns` bounds how many connections are *accepted* before the
+/// listener stops (`None` = serve forever) — tests and benches bind
+/// port 0, serve a known number of connections, and join. Whatever
+/// stops the accept loop (`max_conns` or a [`NodeShutdown`]), every
+/// already-admitted session runs to completion before this returns, so
+/// teardown is deterministic. A connection-level failure (handshake,
+/// session I/O, even a broken factory) is logged and charged to that
+/// connection only; only listener errors abort the server.
+///
+/// Thread fan-out is bounded even *before* admission: at most
+/// `max_sessions` + a fixed handshake-pool headroom connection threads
+/// exist at once — beyond that, connections wait in the TCP backlog —
+/// so a connection flood cannot spawn unbounded threads, and each
+/// pending handshake self-expires within
+/// [`NodeConfig::handshake_timeout`].
 pub fn serve_node<L, F>(
     listener: TcpListener,
     factory: F,
@@ -100,97 +155,241 @@ pub fn serve_node<L, F>(
     max_conns: Option<usize>,
 ) -> Result<()>
 where
-    L: Lane,
-    F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L>,
+    L: Lane + 'static,
+    F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L> + Send + Sync + 'static,
+{
+    serve_node_until(listener, factory, fingerprint, cfg, max_conns, NodeShutdown::new())
+}
+
+/// [`serve_node`] with an external stop switch: the accept loop also
+/// exits (after joining the running sessions) once
+/// [`NodeShutdown::shutdown`] is called.
+pub fn serve_node_until<L, F>(
+    listener: TcpListener,
+    factory: F,
+    fingerprint: u64,
+    cfg: NodeConfig,
+    max_conns: Option<usize>,
+    shutdown: NodeShutdown,
+) -> Result<()>
+where
+    L: Lane + 'static,
+    F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L> + Send + Sync + 'static,
 {
     if max_conns == Some(0) {
         return Ok(());
     }
     let local = listener.local_addr().context("node listener address")?;
-    log_info!("infilter-node listening on {local} (model {fingerprint:016x})");
-    let mut served = 0usize;
-    for conn in listener.incoming() {
-        let stream = conn.context("accepting connection")?;
-        let peer = stream
-            .peer_addr()
-            .map(|a| a.to_string())
-            .unwrap_or_else(|_| "?".into());
-        log_info!("node: session from {peer}");
-        match serve_conn(stream, &factory, fingerprint, &cfg)? {
-            Ok(stats) => log_info!(
-                "node: session from {peer} done — {} frames in, {} clips out ({} padded)",
-                stats.frames_in,
-                stats.clips_out,
-                stats.clips_padded
-            ),
-            Err(e) => log_warn!("node: session from {peer} failed: {e:#}"),
+    log_info!(
+        "infilter-node listening on {local} (model {fingerprint:016x}, \
+         max_sessions {})",
+        cfg.max_sessions
+    );
+    // non-blocking accept so the loop can observe the shutdown switch
+    // (and reap finished sessions) without a poke connection
+    listener
+        .set_nonblocking(true)
+        .context("setting the listener non-blocking")?;
+    let factory = Arc::new(factory);
+    let active = Arc::new(AtomicUsize::new(0));
+    let mut sessions: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut accepted = 0usize;
+    let mut next_session = 1u64;
+    // bound the node's thread fan-out *before* admission: admitted
+    // sessions plus a bounded pool of handshakes in flight. Beyond
+    // this, connections wait in the TCP backlog instead of each
+    // getting a thread — a connection flood (or a port-scan burst)
+    // cannot spawn unbounded threads, and every pending handshake
+    // thread self-expires within handshake_timeout.
+    let thread_cap = cfg.max_sessions.max(1) + 16;
+    let mut accept_failure: Option<anyhow::Error> = None;
+    while !shutdown.is_shutdown() {
+        sessions.retain(|h| !h.is_finished());
+        if sessions.len() >= thread_cap {
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
         }
-        served += 1;
-        if max_conns.is_some_and(|n| served >= n) {
-            break;
+        match listener.accept() {
+            Ok((stream, peer_addr)) => {
+                // the accepted socket must not inherit the listener's
+                // non-blocking mode (platform-dependent)
+                if let Err(e) = stream.set_nonblocking(false) {
+                    log_warn!("node: session setup from {peer_addr} failed: {e:#}");
+                    continue;
+                }
+                accepted += 1;
+                let session = next_session;
+                next_session += 1;
+                let peer = peer_addr.to_string();
+                let (factory, active) = (factory.clone(), active.clone());
+                let spawned = std::thread::Builder::new()
+                    .name(format!("node-session-{session}"))
+                    .spawn(move || {
+                        serve_session(stream, peer, session, &*factory, fingerprint, &cfg, &active)
+                    })
+                    .context("spawning a session thread");
+                match spawned {
+                    Ok(h) => sessions.push(h),
+                    Err(e) => log_warn!("node: {e:#}"),
+                }
+                if max_conns.is_some_and(|n| accepted >= n) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // a real listener error (e.g. fd exhaustion) stops the
+            // accept loop, but the join below still runs first — the
+            // deterministic-teardown contract holds on the error path
+            // too, so running sessions finish and report
+            Err(e) => {
+                accept_failure =
+                    Some(anyhow::Error::new(e).context("accepting connection"));
+                break;
+            }
         }
     }
-    Ok(())
+    // deterministic teardown: every admitted session finishes before the
+    // server returns (max_conns tests rely on this)
+    for h in sessions {
+        let _ = h.join();
+    }
+    match accept_failure {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
-/// One accepted connection end to end: bounded Hello read, cheap
-/// identity precheck, and only then the compute lane + session. A
-/// silent probe (port scanner, health check) or a mismatched peer is
-/// turned away before any per-connection lane — worker threads,
-/// backend clones — is built for it.
-///
-/// The outer `Err` is server-fatal (a broken factory); handshake and
-/// session failures come back as the inner `Err`, charged to this
-/// connection only.
-fn serve_conn<L, F>(
+/// One accepted connection end to end, on its own thread: bounded Hello
+/// read, cheap identity precheck, admission against
+/// [`NodeConfig::max_sessions`], and only then the compute lane +
+/// session. A silent probe
+/// (port scanner, health check), an over-cap gateway or a mismatched
+/// peer is turned away before any per-connection lane — worker threads,
+/// backend clones — is built for it. Failures are logged here and
+/// charged to this connection only.
+fn serve_session<L, F>(
     stream: TcpStream,
+    peer: String,
+    session: u64,
     factory: &F,
     fingerprint: u64,
     cfg: &NodeConfig,
-) -> Result<Result<ConnStats>>
+    active: &AtomicUsize,
+) where
+    L: Lane,
+    F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L>,
+{
+    log_info!("node: session #{session} from {peer}");
+    match serve_conn(stream, session, factory, fingerprint, cfg, active) {
+        Ok(stats) => log_info!(
+            "node: session #{session} from {peer} done — {} frames in, \
+             {} clips out ({} padded)",
+            stats.frames_in,
+            stats.clips_out,
+            stats.clips_padded
+        ),
+        Err(e) => log_warn!("node: session #{session} from {peer} failed: {e:#}"),
+    }
+}
+
+/// Decrements the live-session counter when a session ends, however it
+/// ends (normal teardown, I/O error, panic unwind).
+struct SlotGuard<'a>(&'a AtomicUsize);
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn serve_conn<L, F>(
+    stream: TcpStream,
+    session: u64,
+    factory: &F,
+    fingerprint: u64,
+    cfg: &NodeConfig,
+    active: &AtomicUsize,
+) -> Result<ConnStats>
 where
     L: Lane,
     F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L>,
 {
     stream.set_nodelay(true).ok();
     let mut scratch = Vec::new();
-    let mut rstream = match stream.try_clone().context("cloning session stream") {
-        Ok(s) => s,
-        Err(e) => return Ok(Err(e)),
-    };
+    let mut rstream = stream.try_clone().context("cloning session stream")?;
     let mut writer = BufWriter::new(stream);
 
-    // bounded Hello (a silent connection must not wedge the sequential
-    // accept loop; the timeout is lifted once the session is real)
-    if let Err(e) = rstream
+    // bounded Hello (a silent connection must not pin an admission slot;
+    // the timeout is lifted once the session is real)
+    rstream
         .set_read_timeout(Some(cfg.handshake_timeout))
-        .context("setting the handshake timeout")
-    {
-        return Ok(Err(e));
-    }
-    let hello = match read_msg(&mut rstream, &mut scratch).context("reading hello") {
-        Ok(Some(Msg::Hello(h))) => h,
-        Ok(Some(other)) => return Ok(Err(anyhow!("expected Hello, got {other:?}"))),
-        Ok(None) => return Ok(Err(anyhow!("gateway closed before the handshake"))),
-        Err(e) => return Ok(Err(e)),
+        .context("setting the handshake timeout")?;
+    let hello = match read_msg(&mut rstream, &mut scratch).context("reading hello")? {
+        Some(Msg::Hello(h)) => h,
+        Some(other) => bail!("expected Hello, got {other:?}"),
+        None => bail!("gateway closed before the handshake"),
     };
+
+    // identity precheck first — it costs nothing (hello + fingerprint
+    // only) and a mismatched peer must hear the permanent Incompatible,
+    // not a retryable Busy it would back off against forever
     if let Err(e) = Handshake::wildcard(fingerprint).accepts_identity(&hello) {
-        let _ = send_reject(&mut writer, &mut scratch, format!("{e:#}"));
-        return Ok(Err(e.context("handshake rejected")));
+        let _ = send_reject(
+            &mut writer,
+            &mut scratch,
+            RejectCode::Incompatible,
+            format!("{e:#}"),
+        );
+        return Err(e.context("handshake rejected"));
     }
+
+    // admission: take a slot or turn the gateway away with a retryable
+    // Busy — never make it queue blind behind the running sessions
+    let mut cur = active.load(Ordering::SeqCst);
+    let admitted = loop {
+        if cur >= cfg.max_sessions.max(1) {
+            break false;
+        }
+        match active.compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => break true,
+            Err(now) => cur = now,
+        }
+    };
+    if !admitted {
+        let reason = format!(
+            "busy: {} of {} sessions in use — retry after a backoff",
+            cur,
+            cfg.max_sessions.max(1)
+        );
+        let _ = send_reject(&mut writer, &mut scratch, RejectCode::Busy, reason.clone());
+        bail!("admission refused: {reason}");
+    }
+    let _slot = SlotGuard(active);
 
     let (results_tx, results_rx) = mpsc::channel::<ClassifyResult>();
-    let lane = factory(results_tx).context("building the connection's compute lane")?;
-    Ok(handle_conn(writer, rstream, scratch, hello, lane, results_rx, fingerprint, cfg))
+    let lane = match factory(results_tx).context("building the connection's compute lane") {
+        Ok(lane) => lane,
+        Err(e) => {
+            let _ = send_reject(&mut writer, &mut scratch, RejectCode::Other, format!("{e:#}"));
+            return Err(e);
+        }
+    };
+    handle_conn(
+        writer, rstream, scratch, hello, session, lane, results_rx, fingerprint, cfg,
+    )
 }
 
-/// Write a `Reject{reason}` and flush it before the connection drops.
+/// Write a `Reject{code, reason}` and flush it before the connection
+/// drops.
 fn send_reject(
     writer: &mut BufWriter<TcpStream>,
     scratch: &mut Vec<u8>,
+    code: RejectCode,
     reason: String,
 ) -> Result<()> {
-    write_msg(writer, &Msg::Reject { reason }, scratch)?;
+    write_msg(writer, &Msg::Reject { code, reason }, scratch)?;
     writer.flush()?;
     Ok(())
 }
@@ -212,6 +411,7 @@ fn handle_conn<L: Lane>(
     mut rstream: TcpStream,
     mut scratch: Vec<u8>,
     hello: Handshake,
+    session: u64,
     mut lane: L,
     results_rx: mpsc::Receiver<ClassifyResult>,
     fingerprint: u64,
@@ -231,7 +431,12 @@ fn handle_conn<L: Lane>(
     let mut check = shake;
     check.n_filters = hello.n_filters;
     if let Err(e) = check.accepts(&hello) {
-        send_reject(&mut writer, &mut scratch, format!("{e:#}"))?;
+        send_reject(
+            &mut writer,
+            &mut scratch,
+            RejectCode::Incompatible,
+            format!("{e:#}"),
+        )?;
         bail!("handshake rejected: {e:#}");
     }
     rstream
@@ -240,7 +445,11 @@ fn handle_conn<L: Lane>(
     let credits = cfg.credits.max(1);
     write_msg(
         &mut writer,
-        &Msg::Welcome { shake, credits },
+        &Msg::Welcome {
+            shake,
+            credits,
+            session,
+        },
         &mut scratch,
     )?;
     writer.flush()?;
@@ -249,7 +458,7 @@ fn handle_conn<L: Lane>(
     // credit window caps what a misbehaving gateway can buffer here)
     let (ev_tx, ev_rx) = mpsc::sync_channel::<NodeEvent>(credits as usize * 2 + 8);
     let reader = std::thread::Builder::new()
-        .name("node-rx".into())
+        .name(format!("node-rx-{session}"))
         .spawn(move || {
             let mut scratch = Vec::new();
             loop {
@@ -506,18 +715,22 @@ mod tests {
     /// Spawn a node hosting a single-lane pipeline for `conns` sessions;
     /// returns the address to connect to.
     fn spawn_node(m: TrainedModel, credits: u32, conns: usize) -> String {
+        spawn_node_cfg(
+            m,
+            NodeConfig {
+                credits,
+                ..NodeConfig::default()
+            },
+            conns,
+        )
+    }
+
+    fn spawn_node_cfg(m: TrainedModel, cfg: NodeConfig, conns: usize) -> String {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let fp = m.fingerprint();
         std::thread::spawn(move || {
-            serve_node(
-                listener,
-                pipeline_factory(engine(), m, 64),
-                fp,
-                NodeConfig { credits, ..NodeConfig::default() },
-                Some(conns),
-            )
-            .unwrap();
+            serve_node(listener, pipeline_factory(engine(), m, 64), fp, cfg, Some(conns)).unwrap();
         });
         addr
     }
@@ -551,6 +764,7 @@ mod tests {
         assert_eq!(lane.frame_len(), 64);
         assert_eq!(lane.clip_frames(), 2);
         assert_eq!(lane.sample_rate(), 16_000.0);
+        assert!(lane.session_id() > 0, "node assigned a session id");
         for t in tasks(4, 2) {
             assert!(lane.push(t));
         }
@@ -562,6 +776,7 @@ mod tests {
         assert_eq!(results.len(), 8);
         assert_eq!(report.batch.frames_processed, 16);
         assert_eq!(report.clips_padded, 0);
+        assert_eq!(report.reconnects, 0);
         assert_eq!(report.latency.count(), 8, "gateway-side latency recorded");
     }
 
@@ -589,6 +804,92 @@ mod tests {
     }
 
     #[test]
+    fn over_cap_session_is_rejected_busy() {
+        let m = model();
+        let addr = spawn_node_cfg(
+            m.clone(),
+            NodeConfig {
+                max_sessions: 1,
+                ..NodeConfig::default()
+            },
+            2,
+        );
+        // session 1 occupies the only slot for as long as it lives
+        let lane = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+        // session 2 must be turned away immediately with a Busy, not
+        // queued behind session 1 (no reconnection here: attempts = 0)
+        let cfg = RemoteConfig {
+            reconnect_attempts: 0,
+            ..RemoteConfig::default()
+        };
+        let err = RemoteLane::connect(&addr, m.fingerprint(), cfg)
+            .expect_err("an over-cap handshake must be rejected");
+        assert!(
+            format!("{err:#}").to_lowercase().contains("busy"),
+            "reject names the admission cap: {err:#}"
+        );
+        drop(lane); // frees the slot; the node exits after 2 conns
+    }
+
+    #[test]
+    fn two_gateways_are_served_concurrently() {
+        // both sessions are alive at once and both make progress: under
+        // the old sequential accept loop the second drain would deadlock
+        // until the first session finished
+        let m = model();
+        let addr = spawn_node_cfg(
+            m.clone(),
+            NodeConfig {
+                credits: 8,
+                max_sessions: 2,
+                ..NodeConfig::default()
+            },
+            2,
+        );
+        let mut a = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+        let mut b = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+        assert_ne!(a.session_id(), b.session_id(), "distinct session ids");
+        for t in tasks(2, 2) {
+            assert!(a.push(t));
+        }
+        for t in tasks(3, 2) {
+            assert!(b.push(t));
+        }
+        // drain both while both sessions are still open
+        a.drain().unwrap();
+        b.drain().unwrap();
+        assert_eq!(a.clips_classified(), 4);
+        assert_eq!(b.clips_classified(), 6);
+        let (ra, _) = a.finish().unwrap();
+        let (rb, _) = b.finish().unwrap();
+        assert_eq!(ra.clips_classified, 4);
+        assert_eq!(rb.clips_classified, 6);
+    }
+
+    #[test]
+    fn shutdown_stops_the_accept_loop() {
+        let m = model();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let fp = m.fingerprint();
+        let stop = NodeShutdown::new();
+        let stop2 = stop.clone();
+        let h = std::thread::spawn(move || {
+            serve_node_until(
+                listener,
+                pipeline_factory(engine(), m, 64),
+                fp,
+                NodeConfig::default(),
+                None, // serve "forever"
+                stop2,
+            )
+            .unwrap();
+        });
+        stop.shutdown();
+        h.join().expect("a shut-down node returns");
+        assert!(stop.is_shutdown());
+    }
+
+    #[test]
     fn credit_window_backpressure_still_delivers_everything() {
         // a 2-frame credit window with a tiny local queue: pushes must
         // block on credit grants, not drop, and all clips still classify
@@ -597,6 +898,7 @@ mod tests {
         let cfg = RemoteConfig {
             max_queue: 1,
             io_timeout: Duration::from_secs(10),
+            ..RemoteConfig::default()
         };
         let mut lane = RemoteLane::connect(&addr, m.fingerprint(), cfg).unwrap();
         for t in tasks(6, 2) {

@@ -1,6 +1,9 @@
 //! The length-prefixed binary wire protocol between a gateway
 //! ([`RemoteLane`](super::lane::RemoteLane)) and an `infilter-node`
-//! worker (DESIGN.md §10).
+//! worker. The normative specification — message table, handshake
+//! stages, credit/drain/flush state machines, reconnect semantics and
+//! the versioning policy — lives in `docs/WIRE.md`; DESIGN.md §10 is
+//! the architectural summary.
 //!
 //! Framing: every message is `[u32 LE payload length][payload]`, where
 //! the payload starts with one type byte. All integers are little
@@ -14,8 +17,9 @@
 //! ```text
 //! gateway                              node
 //!   Hello{version, geometry, fp} ──▶
-//!                                 ◀── Welcome{geometry, fp, credits}
-//!                                      (or Reject{reason} + close)
+//!                                 ◀── Welcome{geometry, fp, credits,
+//!                                             session}
+//!                                      (or Reject{code, reason} + close)
 //!   Frame ×N  (bounded by credits) ─▶
 //!                                 ◀── Credit{n}   (as frames are consumed)
 //!                                 ◀── Result ×M   (as clips classify)
@@ -33,8 +37,10 @@ use std::io::{Read, Write};
 
 /// Protocol magic, first field of both handshake messages ("IFLT").
 pub const MAGIC: u32 = 0x4946_4C54;
-/// Protocol version; bumped on any wire-incompatible change.
-pub const VERSION: u16 = 1;
+/// Protocol version; bumped on any wire-incompatible change (see the
+/// versioning policy in `docs/WIRE.md`). v2 added the session id to
+/// `Welcome` and the machine-readable reason code to `Reject`.
+pub const VERSION: u16 = 2;
 /// Hard ceiling on one message's payload (64 MiB ≫ any real frame).
 pub const MAX_MSG_BYTES: usize = 1 << 26;
 
@@ -49,6 +55,60 @@ const T_DRAIN_ACK: u8 = 8;
 const T_REPORT: u8 = 9;
 const T_FLUSH_TAILS: u8 = 10;
 const T_FLUSH_ACK: u8 = 11;
+
+/// Machine-readable class of a [`Msg::Reject`], so a gateway can
+/// decide whether retrying the handshake can ever succeed without
+/// parsing the human-readable reason string.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectCode {
+    /// The node is serving its `max_sessions` admission cap. Transient:
+    /// retrying after a backoff is expected to succeed once a session
+    /// ends ([`RemoteLane`](super::lane::RemoteLane) reconnects do).
+    Busy,
+    /// Version, model-fingerprint or clip-geometry mismatch. Permanent:
+    /// the same peer pair will never pair, so retrying is pointless.
+    Incompatible,
+    /// Reserved for a graceful-drain path: "the node is shutting down
+    /// its listener". **Not currently sent** — today's
+    /// [`NodeShutdown`](super::node::NodeShutdown) simply stops
+    /// accepting, so pending connects see a refused/queued socket, not
+    /// a Reject. Kept in the code space (and treated as non-retryable
+    /// against this node) so a future drain protocol does not need a
+    /// version bump.
+    Shutdown,
+    /// Anything else (e.g. the node failed to build a compute lane).
+    /// Treated as permanent by the reconnect path.
+    Other,
+}
+
+impl RejectCode {
+    /// Wire byte for this code.
+    pub fn to_u8(self) -> u8 {
+        match self {
+            RejectCode::Busy => 1,
+            RejectCode::Incompatible => 2,
+            RejectCode::Shutdown => 3,
+            RejectCode::Other => 0,
+        }
+    }
+
+    /// Decode a wire byte; unknown values (a newer peer's codes) fold
+    /// into [`RejectCode::Other`] rather than failing the message.
+    pub fn from_u8(b: u8) -> RejectCode {
+        match b {
+            1 => RejectCode::Busy,
+            2 => RejectCode::Incompatible,
+            3 => RejectCode::Shutdown,
+            _ => RejectCode::Other,
+        }
+    }
+
+    /// Whether a rejected handshake is worth retrying against the same
+    /// address after a backoff.
+    pub fn retryable(self) -> bool {
+        matches!(self, RejectCode::Busy)
+    }
+}
 
 /// The geometry + identity block both handshake messages carry. A zero
 /// field in the gateway's [`Msg::Hello`] is a wildcard ("adopt the
@@ -229,9 +289,18 @@ pub enum Msg {
     Hello(Handshake),
     /// node → gateway: session accepted; `credits` frames may be in
     /// flight before the gateway must wait for [`Msg::Credit`] grants.
-    Welcome { shake: Handshake, credits: u32 },
-    /// node → gateway: handshake refused (then the node closes).
-    Reject { reason: String },
+    /// `session` is the node-assigned session id, threaded through both
+    /// sides' logs so one gateway session can be matched to one node
+    /// session in a multi-tenant deployment.
+    Welcome {
+        shake: Handshake,
+        credits: u32,
+        session: u64,
+    },
+    /// node → gateway: handshake refused (then the node closes). `code`
+    /// classifies the refusal ([`RejectCode::Busy`] is the admission
+    /// cap and is retryable); `reason` is for humans and logs.
+    Reject { code: RejectCode, reason: String },
     /// gateway → node: one audio frame of one stream.
     Frame {
         stream: u64,
@@ -417,13 +486,19 @@ impl Msg {
                 out.push(T_HELLO);
                 put_shake(out, h);
             }
-            Msg::Welcome { shake, credits } => {
+            Msg::Welcome {
+                shake,
+                credits,
+                session,
+            } => {
                 out.push(T_WELCOME);
                 put_shake(out, shake);
                 put_u32(out, *credits);
+                put_u64(out, *session);
             }
-            Msg::Reject { reason } => {
+            Msg::Reject { code, reason } => {
                 out.push(T_REJECT);
+                out.push(code.to_u8());
                 put_str(out, reason);
             }
             Msg::Frame {
@@ -502,8 +577,12 @@ impl Msg {
             T_WELCOME => Msg::Welcome {
                 shake: d.shake()?,
                 credits: d.u32()?,
+                session: d.u64()?,
             },
-            T_REJECT => Msg::Reject { reason: d.str()? },
+            T_REJECT => Msg::Reject {
+                code: RejectCode::from_u8(d.u8()?),
+                reason: d.str()?,
+            },
             T_FRAME => Msg::Frame {
                 stream: d.u64()?,
                 clip_seq: d.u64()?,
@@ -649,9 +728,15 @@ mod tests {
             Msg::Welcome {
                 shake: sample_shake(),
                 credits: 256,
+                session: 17,
             },
             Msg::Reject {
+                code: RejectCode::Incompatible,
                 reason: "model fingerprint mismatch".into(),
+            },
+            Msg::Reject {
+                code: RejectCode::Busy,
+                reason: "busy: 4 of 4 sessions in use".into(),
             },
             Msg::Frame {
                 stream: 7,
@@ -789,6 +874,23 @@ mod tests {
         let mut wrong_v = node;
         wrong_v.version = VERSION + 1;
         assert!(node.accepts(&wrong_v).is_err());
+    }
+
+    #[test]
+    fn reject_codes_roundtrip_and_unknowns_fold_to_other() {
+        for code in [
+            RejectCode::Busy,
+            RejectCode::Incompatible,
+            RejectCode::Shutdown,
+            RejectCode::Other,
+        ] {
+            assert_eq!(RejectCode::from_u8(code.to_u8()), code);
+        }
+        // a byte from a future protocol revision must not fail decoding
+        assert_eq!(RejectCode::from_u8(0xEE), RejectCode::Other);
+        assert!(RejectCode::Busy.retryable());
+        assert!(!RejectCode::Incompatible.retryable());
+        assert!(!RejectCode::Other.retryable());
     }
 
     #[test]

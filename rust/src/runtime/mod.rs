@@ -71,7 +71,7 @@ pub fn lit_scalar(x: f32) -> xla::Literal {
     xla::Literal::from(x)
 }
 
-/// Flatten a literal back to Vec<f32>.
+/// Flatten a literal back to `Vec<f32>`.
 pub fn to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
     Ok(l.to_vec::<f32>()?)
 }

@@ -110,7 +110,7 @@ impl Json {
         }
     }
 
-    /// Shape-style array-of-arrays-of-numbers -> Vec<Vec<usize>>.
+    /// Shape-style array-of-arrays-of-numbers -> `Vec<Vec<usize>>`.
     pub fn as_shape_list(&self) -> Option<Vec<Vec<usize>>> {
         self.as_arr()?
             .iter()

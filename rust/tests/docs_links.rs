@@ -1,0 +1,210 @@
+//! Documentation integrity, tier-1: (1) every relative cross-reference
+//! in README.md, DESIGN.md and docs/*.md resolves — target file exists
+//! and, when an `#anchor` is given, a heading with that GitHub-style
+//! slug exists in the target; (2) docs/WIRE.md (the normative wire
+//! spec) names every message variant of `net::proto::Msg`, so the spec
+//! cannot silently fall behind the protocol. CI runs this via the
+//! normal test suite and the docs job.
+
+use std::collections::HashSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Repo root: the rust package lives one level below it.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf()
+}
+
+/// The markdown set under the cross-reference contract.
+fn doc_files() -> Vec<PathBuf> {
+    let root = repo_root();
+    let mut files = vec![root.join("README.md"), root.join("DESIGN.md")];
+    let docs = root.join("docs");
+    if let Ok(entries) = fs::read_dir(&docs) {
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.extension().is_some_and(|x| x == "md") {
+                files.push(p);
+            }
+        }
+    }
+    assert!(
+        files.iter().filter(|p| p.starts_with(&docs)).count() >= 2,
+        "docs/WIRE.md and docs/OPERATIONS.md are expected to exist"
+    );
+    files
+}
+
+/// GitHub-style heading slug: lowercase, backticks stripped, anything
+/// that is not alphanumeric/space/hyphen/underscore removed, spaces
+/// hyphenated.
+fn slug(heading: &str) -> String {
+    let mut s = String::new();
+    for c in heading.trim().chars() {
+        let c = c.to_ascii_lowercase();
+        match c {
+            '`' => {}
+            'a'..='z' | '0'..='9' | '_' | '-' => s.push(c),
+            ' ' => s.push('-'),
+            _ => {}
+        }
+    }
+    s
+}
+
+/// Every heading slug in one markdown file (fenced code blocks are
+/// excluded so a `# comment` inside ```sh does not count).
+fn heading_slugs(text: &str) -> HashSet<String> {
+    let mut slugs = HashSet::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let title = rest.trim_start_matches('#');
+            slugs.insert(slug(title));
+        }
+    }
+    slugs
+}
+
+/// Inline markdown links `[text](target)` outside fenced code blocks.
+fn links(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let bytes = line.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == b']' && i + 1 < bytes.len() && bytes[i + 1] == b'(' {
+                if let Some(end) = line[i + 2..].find(')') {
+                    out.push(line[i + 2..i + 2 + end].to_string());
+                    i += 2 + end;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+#[test]
+fn every_relative_doc_link_resolves() {
+    let mut checked = 0usize;
+    for file in doc_files() {
+        let text = fs::read_to_string(&file)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", file.display()));
+        let dir = file.parent().unwrap().to_path_buf();
+        for link in links(&text) {
+            if link.starts_with("http://") || link.starts_with("https://") {
+                continue; // external links are out of scope (offline CI)
+            }
+            let (path_part, anchor) = match link.split_once('#') {
+                Some((p, a)) => (p, Some(a.to_string())),
+                None => (link.as_str(), None),
+            };
+            let target = if path_part.is_empty() {
+                file.clone() // same-file anchor
+            } else {
+                dir.join(path_part)
+            };
+            assert!(
+                target.exists(),
+                "{}: broken link `{link}` (missing {})",
+                file.display(),
+                target.display()
+            );
+            if let Some(anchor) = anchor {
+                let ttext = fs::read_to_string(&target)
+                    .unwrap_or_else(|e| panic!("reading {}: {e}", target.display()));
+                let slugs = heading_slugs(&ttext);
+                assert!(
+                    slugs.contains(&anchor),
+                    "{}: link `{link}` names anchor `#{anchor}` but {} has \
+                     headings {slugs:?}",
+                    file.display(),
+                    target.display()
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(
+        checked >= 8,
+        "the doc set is expected to be cross-linked (found {checked} links)"
+    );
+}
+
+#[test]
+fn wire_spec_covers_every_protocol_message() {
+    let root = repo_root();
+    let proto = fs::read_to_string(root.join("rust/src/net/proto.rs")).unwrap();
+    // variants of `pub enum Msg`, parsed from the source so the list
+    // cannot drift from the real protocol
+    let body = proto
+        .split("pub enum Msg {")
+        .nth(1)
+        .expect("proto.rs defines `pub enum Msg`");
+    let body = &body[..body.find("\n}").expect("enum body ends")];
+    let mut variants = Vec::new();
+    for line in body.lines() {
+        let t = line.trim();
+        if t.starts_with("///") || t.starts_with("//") || t.is_empty() {
+            continue;
+        }
+        // a variant line starts with a capitalised identifier
+        let name: String = t
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric())
+            .collect();
+        if !name.is_empty() && name.chars().next().unwrap().is_ascii_uppercase() {
+            variants.push(name);
+        }
+    }
+    assert!(
+        variants.len() >= 11,
+        "expected the full message set, parsed {variants:?}"
+    );
+    let wire = fs::read_to_string(root.join("docs/WIRE.md")).unwrap();
+    for v in &variants {
+        assert!(
+            wire.contains(v),
+            "docs/WIRE.md does not mention protocol message `{v}` — the \
+             spec fell behind rust/src/net/proto.rs"
+        );
+    }
+    // and the spec's stated version matches the code
+    let version_line = proto
+        .lines()
+        .find(|l| l.starts_with("pub const VERSION"))
+        .expect("proto.rs declares VERSION");
+    let code_version: u32 = version_line
+        .split('=')
+        .nth(1)
+        .unwrap()
+        .trim()
+        .trim_end_matches(';')
+        .parse()
+        .expect("numeric VERSION");
+    assert!(
+        wire.contains(&format!("Protocol version: **{code_version}**")),
+        "docs/WIRE.md's stated protocol version is out of date \
+         (code is v{code_version})"
+    );
+}
