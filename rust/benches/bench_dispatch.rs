@@ -89,6 +89,32 @@ fn main() {
         );
     }
 
+    // the same single lane with the telemetry kill switch thrown: the
+    // delta against pipeline_1lane is the whole live-metrics tax on the
+    // hot path (cached handles + relaxed atomics), guarded here so an
+    // instrumentation regression shows up as a ratio, not a vibe
+    {
+        let (eng, m, tasks) = (eng.clone(), m.clone(), tasks.clone());
+        b.run_with_throughput(
+            "dispatch/pipeline_1lane_telemetry_off",
+            Some((total_clips as f64, "clips")),
+            || {
+                infilter::telemetry::set_enabled(false);
+                let mut lane = PipelineBuilder::new(eng.clone(), m.clone())
+                    .queue_capacity(64)
+                    .build();
+                for t in tasks.clone() {
+                    lane.push(t);
+                }
+                lane.drain().unwrap();
+                let (report, _) = lane.finish();
+                infilter::telemetry::set_enabled(true);
+                assert_eq!(report.clips_classified, total_clips);
+                report.clips_classified
+            },
+        );
+    }
+
     // single lane again, wide-always: the same workload through the
     // true-b8 interleaved kernel (16 streams ready -> full lanes); the
     // narrow-vs-wide ratio here is the CPU batching crossover

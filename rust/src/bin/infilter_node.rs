@@ -42,7 +42,15 @@ USAGE: infilter-node [options]
   --gamma-f X     filter-bank gamma (default 1.0)
   --threads N     feature-extraction threads for the quick model
   --max-conns N   serve N sessions then exit (tests/benches)
-  --log LEVEL     debug|info|warn";
+  --stats-listen ADDR
+                  serve live metrics as plain text over HTTP GET
+                  (e.g. 127.0.0.1:9900; use :0 for an ephemeral port,
+                  printed at startup)
+  --stats-every N emit a JSONL metrics snapshot every N seconds
+  --stats-file PATH
+                  append snapshots there instead of stderr (implies
+                  --stats-every 5 when not given)
+  --log LEVEL     debug|info|warn|error";
 
 fn main() {
     let args = Args::from_env();
@@ -116,5 +124,8 @@ fn run(args: &Args) -> Result<()> {
             ))
         }
     };
-    serve_node(listener, factory, fingerprint, cfg, max_conns)
+    let stats = infilter::telemetry::StatsRuntime::from_args(args)?;
+    let res = serve_node(listener, factory, fingerprint, cfg, max_conns);
+    stats.finish();
+    res
 }

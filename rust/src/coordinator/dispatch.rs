@@ -228,6 +228,7 @@ impl<B: InferenceBackend> Pipeline<B> {
             true
         } else {
             self.report.frames_dropped += 1;
+            crate::metric_counter!("pipeline_frames_dropped_total").inc();
             false
         }
     }
@@ -274,6 +275,7 @@ impl<B: InferenceBackend> Pipeline<B> {
                     self.lane_buf = lanes;
                     return Ok(0);
                 }
+                let t_dispatch = Instant::now();
                 let p = self.n_filters;
                 // assemble 8 lanes: real ones first, silence padding after
                 let mut states = std::mem::take(&mut self.states_buf);
@@ -311,9 +313,11 @@ impl<B: InferenceBackend> Pipeline<B> {
                 self.lane_buf = lanes;
                 self.states_buf = states;
                 self.phi_buf = phi;
+                self.note_dispatch(t_dispatch, n);
                 Ok(n)
             }
             BatchPlan::Narrow(ids) => {
+                let t_dispatch = Instant::now();
                 let p = self.n_filters;
                 let mut states = std::mem::take(&mut self.states_buf);
                 let mut phi = std::mem::take(&mut self.phi_buf);
@@ -334,9 +338,22 @@ impl<B: InferenceBackend> Pipeline<B> {
                 self.stats.record_narrow(n);
                 self.states_buf = states;
                 self.phi_buf = phi;
+                self.note_dispatch(t_dispatch, n);
                 Ok(n)
             }
         }
+    }
+
+    /// Fold one dispatch's compute time and frame count into the report
+    /// and the live registry (no-op for idle dispatches).
+    fn note_dispatch(&mut self, t0: Instant, frames: usize) {
+        if frames == 0 {
+            return;
+        }
+        let d = t0.elapsed();
+        self.report.stage_compute.record(d);
+        crate::metric_hist!("pipeline_compute_us").record_us(d.as_secs_f64() * 1e6);
+        crate::metric_counter!("pipeline_frames_total").add(frames as u64);
     }
 
     /// Tick until no stream has a pending frame. Guarded on `pending()`
@@ -419,8 +436,19 @@ impl<B: InferenceBackend> Pipeline<B> {
     }
 
     /// Pop the next frame for a stream, skipping stale frames from
-    /// aborted clips and resyncing at the next clip boundary.
+    /// aborted clips and resyncing at the next clip boundary. Records
+    /// the popped frame's queue wait (t_gen → pop) as the `queue_wait`
+    /// stage; for a node-side pipeline t_gen is stamped at frame
+    /// receipt, so the wait excludes the uplink wire hop.
     fn pop_in_order(&mut self, id: u64) -> Option<FrameTask> {
+        let task = self.pop_in_order_inner(id)?;
+        let wait = task.t_gen.elapsed();
+        self.report.stage_queue_wait.record(wait);
+        crate::metric_hist!("pipeline_queue_wait_us").record_us(wait.as_secs_f64() * 1e6);
+        Some(task)
+    }
+
+    fn pop_in_order_inner(&mut self, id: u64) -> Option<FrameTask> {
         loop {
             let task = self.store.pop_frame(id)?;
             {
@@ -431,6 +459,7 @@ impl<B: InferenceBackend> Pipeline<B> {
                 if !(task.frame_idx == 0 && task.clip_seq > e.clip_seq) {
                     // stale mid-clip frame: discard and keep looking
                     self.report.frames_dropped += 1;
+                    crate::metric_counter!("pipeline_frames_dropped_total").inc();
                     continue;
                 }
                 if e.frames_done > 0 {
@@ -478,6 +507,7 @@ impl<B: InferenceBackend> Pipeline<B> {
             let predicted = argmax(&p);
             let latency = task.t_gen.elapsed();
             self.report.clips_classified += 1;
+            crate::metric_counter!("pipeline_clips_total").inc();
             if predicted == label {
                 self.report.clips_correct += 1;
             }

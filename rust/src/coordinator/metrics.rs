@@ -29,6 +29,29 @@ pub fn render_lanes(lanes: &[LaneStats]) -> String {
     s
 }
 
+/// The per-stage latency breakdown line ("stages: ..."), skipping
+/// stages that recorded nothing (empty input renders nothing).
+pub fn render_stages(stages: &[(&str, &LatencyHist)]) -> String {
+    let mut s = String::new();
+    for (name, h) in stages {
+        if h.count() == 0 {
+            continue;
+        }
+        if s.is_empty() {
+            s.push_str("\nstages:");
+        }
+        s.push_str(&format!(
+            " [{} mean={:.1}ms p50={:.1}ms p95={:.1}ms n={}]",
+            name,
+            h.mean_us() / 1e3,
+            h.percentile_us(50.0) / 1e3,
+            h.percentile_us(95.0) / 1e3,
+            h.count(),
+        ));
+    }
+    s
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     pub clips_classified: u64,
@@ -48,6 +71,15 @@ pub struct ServeReport {
     pub wall_time: Duration,
     pub audio_seconds: f64,
     pub latency: LatencyHist,
+    /// Time frames spent queued before a worker popped them (for remote
+    /// serving this is measured node-side from frame receipt and shipped
+    /// back inside `Msg::Report`, so it excludes the uplink wire hop).
+    pub stage_queue_wait: LatencyHist,
+    /// Backend feature-extraction + inference time per dispatch.
+    pub stage_compute: LatencyHist,
+    /// Gateway-observed wire round trips (drain/flush barrier acks);
+    /// empty for in-process serving.
+    pub stage_wire: LatencyHist,
     pub batch: BatchStats,
     /// Per-lane breakdown when this report was merged from a
     /// [`ShardedPipeline`](super::shard::ShardedPipeline); empty for a
@@ -78,6 +110,9 @@ impl ServeReport {
             out.wall_time = out.wall_time.max(r.wall_time);
             out.audio_seconds += r.audio_seconds;
             out.latency.merge(&r.latency);
+            out.stage_queue_wait.merge(&r.stage_queue_wait);
+            out.stage_compute.merge(&r.stage_compute);
+            out.stage_wire.merge(&r.stage_wire);
             out.batch.merge(&r.batch);
             out.per_lane.push(LaneStats {
                 lane: i,
@@ -120,7 +155,7 @@ impl ServeReport {
         let mut s = format!(
             "clips={} acc={:.1}% aborted={} padded={} dropped_frames={}\n\
              wall={:.2}s audio={:.1}s realtime_factor={:.2}x clips/s={:.2}\n\
-             latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms max={:.1}ms\n\
+             latency: mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms\n\
              batching: wide={} (mean occupancy {:.2}) narrow={} frames={}",
             self.clips_classified,
             100.0 * self.accuracy(),
@@ -134,12 +169,18 @@ impl ServeReport {
             self.latency.mean_us() / 1e3,
             self.latency.percentile_us(50.0) / 1e3,
             self.latency.percentile_us(95.0) / 1e3,
+            self.latency.percentile_us(99.0) / 1e3,
             self.latency.max_us() / 1e3,
             self.batch.wide_dispatches,
             self.batch.mean_wide_occupancy(),
             self.batch.narrow_dispatches,
             self.batch.frames_processed,
         );
+        s.push_str(&render_stages(&[
+            ("queue_wait", &self.stage_queue_wait),
+            ("compute", &self.stage_compute),
+            ("wire", &self.stage_wire),
+        ]));
         if self.reconnects > 0 {
             s.push_str(&format!("\nreconnects={}", self.reconnects));
         }
@@ -248,5 +289,37 @@ mod tests {
         assert_eq!(r.accuracy(), 0.0);
         assert_eq!(r.realtime_factor(), 0.0);
         let _ = r.render();
+    }
+
+    #[test]
+    fn render_includes_p99_and_stage_breakdown() {
+        let mut r = ServeReport::default();
+        r.latency.record_us(2_000.0);
+        // no stage recorded anything: the stages line is omitted entirely
+        assert!(r.render().contains("p99="), "{}", r.render());
+        assert!(!r.render().contains("stages:"), "{}", r.render());
+        r.stage_queue_wait.record_us(500.0);
+        r.stage_compute.record_us(1_500.0);
+        let out = r.render();
+        assert!(out.contains("stages:"), "{out}");
+        assert!(out.contains("[queue_wait "), "{out}");
+        assert!(out.contains("[compute "), "{out}");
+        // wire stage stayed empty and must not render
+        assert!(!out.contains("[wire "), "{out}");
+    }
+
+    #[test]
+    fn merge_folds_stage_histograms() {
+        let mut a = ServeReport::default();
+        a.stage_queue_wait.record_us(100.0);
+        a.stage_wire.record_us(3_000.0);
+        let mut b = ServeReport::default();
+        b.stage_queue_wait.record_us(200.0);
+        b.stage_compute.record_us(50.0);
+        let m = ServeReport::merge([a, b]);
+        assert_eq!(m.stage_queue_wait.count(), 2);
+        assert_eq!(m.stage_compute.count(), 1);
+        assert_eq!(m.stage_wire.count(), 1);
+        assert!(m.render().contains("[wire "), "{}", m.render());
     }
 }

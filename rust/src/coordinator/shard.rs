@@ -540,6 +540,7 @@ where
     B: InferenceBackend + 'static,
     F: Fn(usize) -> Result<B>,
 {
+    crate::util::logging::set_thread_context(&format!("lane#{lane}"));
     let backend = match factory(lane) {
         Ok(b) => b,
         Err(e) => {

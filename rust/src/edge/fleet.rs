@@ -454,6 +454,7 @@ pub fn run_fleet<L: Lane>(
 
     for tick in 0..cfg.ticks {
         uplink.tick(frame_dur);
+        let mut awake_now = 0i64;
         for s in streams.iter_mut() {
             // a sensor mid-capture stays awake to finish its clip
             // (splicing audio from across a sleep gap would hand the
@@ -462,6 +463,7 @@ pub fn run_fleet<L: Lane>(
                 s.session.note_asleep();
                 continue;
             }
+            awake_now += 1;
             let (frame, label) = s.next_frame(tick, cfg);
             uplink.record_raw(frame.len());
             tasks.clear();
@@ -473,6 +475,7 @@ pub fn run_fleet<L: Lane>(
                 lane.push(t);
             }
         }
+        crate::metric_gauge!("edge_streams_awake").set(awake_now);
         // classify everything that became ready within this virtual tick
         let before = lane.clips_classified();
         lane.drain()?;

@@ -199,6 +199,7 @@ impl EdgeSession {
                 if g.open {
                     self.state = SessionState::Triggered;
                     self.stats.trigger_onsets += 1;
+                    crate::metric_counter!("edge_gate_triggers_total").inc();
                     self.frames_into_clip = 0;
                     let lookback: Vec<Vec<f32>> = self
                         .ring
@@ -234,6 +235,7 @@ impl EdgeSession {
                     // watchdog: a gate latched open starves the stream
                     self.gate.reset();
                     self.stats.gate_resets += 1;
+                    crate::metric_counter!("edge_gate_resets_total").inc();
                     self.state = SessionState::Idle;
                 }
             }

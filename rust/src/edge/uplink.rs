@@ -166,15 +166,19 @@ impl Uplink {
         if bytes as f64 > self.bucket.burst() {
             self.stats.msgs_oversized += 1;
             self.stats.bytes_dropped += bytes as u64;
+            crate::metric_counter!("edge_uplink_oversized_total").inc();
             return false;
         }
         if self.bucket.try_take(bytes as f64) {
             self.stats.msgs_sent += 1;
             self.stats.bytes_sent += bytes as u64;
+            crate::metric_counter!("edge_uplink_msgs_total").inc();
+            crate::metric_counter!("edge_uplink_bytes_total").add(bytes as u64);
             true
         } else {
             self.stats.msgs_dropped += 1;
             self.stats.bytes_dropped += bytes as u64;
+            crate::metric_counter!("edge_uplink_drops_total").inc();
             false
         }
     }

@@ -11,7 +11,8 @@
 //!   (python/compile/model.py), exported as HLO-text artifacts,
 //! * **L3** — this crate: the continuous-ingest edge front end ([`edge`]),
 //!   the streaming coordinator ([`coordinator`]), cross-process serving
-//!   over TCP ([`net`]), PJRT runtime ([`runtime`]), every substrate the
+//!   over TCP ([`net`]), live metrics ([`telemetry`]), PJRT runtime
+//!   ([`runtime`]), every substrate the
 //!   paper's evaluation needs ([`dsp`], [`mp`], [`fixed`], [`datasets`],
 //!   [`svm`], [`carihc`], [`fpga`]) and the experiment harness
 //!   ([`experiments`]).
@@ -43,6 +44,7 @@ pub mod mp;
 pub mod net;
 pub mod runtime;
 pub mod svm;
+pub mod telemetry;
 pub mod train;
 pub mod util;
 pub mod xla;

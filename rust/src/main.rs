@@ -71,6 +71,11 @@ USAGE: infilter <subcommand> [options]
     --reconnect-attempts N   attempts per blocking call, 0 = off (4)
     --reconnect-backoff-ms M retry spacing after the immediate first
                              attempt, doubles to 2000 (50)
+  serve and edge-fleet expose live telemetry (docs/OPERATIONS.md
+  §Live telemetry):
+    --stats-listen ADDR      plain-text metrics over HTTP GET
+    --stats-every N          JSONL snapshot every N seconds
+    --stats-file PATH        snapshot sink (default stderr)
   See docs/OPERATIONS.md for the full deployment walkthrough.
   edge-roc  gate ROC + uplink bytes-saved tables
   fpga-sim  cycle-level Fig. 7 schedule simulation
@@ -370,6 +375,13 @@ fn cmd_serve_remote(cfg: &AppConfig, args: &Args, connect: &str) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let stats = infilter::telemetry::StatsRuntime::from_args(args)?;
+    let res = cmd_serve_inner(cfg, args);
+    stats.finish();
+    res
+}
+
+fn cmd_serve_inner(cfg: &AppConfig, args: &Args) -> Result<()> {
     if let Some(connect) = args.get("connect") {
         return cmd_serve_remote(cfg, args, connect);
     }
@@ -488,6 +500,13 @@ fn log_fleet(fcfg: &FleetConfig, lanes: &str) {
 }
 
 fn cmd_edge_fleet(cfg: &AppConfig, args: &Args) -> Result<()> {
+    let stats = infilter::telemetry::StatsRuntime::from_args(args)?;
+    let res = cmd_edge_fleet_inner(cfg, args);
+    stats.finish();
+    res
+}
+
+fn cmd_edge_fleet_inner(cfg: &AppConfig, args: &Args) -> Result<()> {
     let model = edge_model(cfg, args)?;
     let edge = EdgeConfig::from_args(args);
     // with --connect the classification lane lives in remote

@@ -333,6 +333,11 @@ pub struct RemoteLane {
     /// double-account the clip. Cleared at the stream's next clip start.
     dead_clips: HashMap<u64, u64>,
     latency: LatencyHist,
+    /// gateway-observed barrier round trips (drain/flush send → ack),
+    /// folded into [`ServeReport::stage_wire`] at finish
+    stage_wire: LatencyHist,
+    /// when the in-flight barrier's token went on the wire
+    barrier_t0: Option<Instant>,
     results_classified: u64,
     results_correct: u64,
     frames_dropped: u64,
@@ -375,6 +380,18 @@ impl RemoteLane {
             n_filters: hello.n_filters, // the node cannot announce its real value
             model_fingerprint: hello.model_fingerprint,
         };
+        // pre-register this side's metric families so a scrape or JSONL
+        // snapshot taken before any traffic flows already names them
+        // (at zero) instead of omitting them
+        crate::metric_counter!("gateway_frames_sent_total");
+        crate::metric_counter!("gateway_frames_dropped_total");
+        crate::metric_counter!("gateway_clips_aborted_total");
+        crate::metric_counter!("gateway_credit_stalls_total");
+        crate::metric_counter!("gateway_reconnects_total");
+        crate::metric_counter!("gateway_reroutes_total");
+        crate::metric_gauge!("gateway_queue_depth");
+        crate::metric_hist!("gateway_credit_stall_us");
+        crate::metric_hist!("gateway_wire_rtt_us");
         Ok(RemoteLane {
             peer: addr.to_string(),
             hello: pinned,
@@ -390,6 +407,8 @@ impl RemoteLane {
             clip_t0: HashMap::new(),
             dead_clips: HashMap::new(),
             latency: LatencyHist::new(),
+            stage_wire: LatencyHist::new(),
+            barrier_t0: None,
             results_classified: 0,
             results_correct: 0,
             frames_dropped: 0,
@@ -551,6 +570,19 @@ impl RemoteLane {
         results
     }
 
+    /// Count gateway-side frame drops in both the lane tally and the
+    /// live registry.
+    fn note_dropped(&mut self, n: u64) {
+        self.frames_dropped += n;
+        crate::metric_counter!("gateway_frames_dropped_total").add(n);
+    }
+
+    /// Count aborted clips in both the lane tally and the live registry.
+    fn note_aborted(&mut self, n: u64) {
+        self.clips_aborted += n;
+        crate::metric_counter!("gateway_clips_aborted_total").add(n);
+    }
+
     /// Record that `clip_seq` of `stream` can no longer classify, so
     /// its remaining frames are shed at `push` (monotonic per stream:
     /// an older clip never displaces a newer entry).
@@ -614,13 +646,15 @@ impl RemoteLane {
         }
         let lost_frames = self.queue.len() as u64;
         let lost_clips = self.clip_t0.len() as u64;
-        self.frames_dropped += lost_frames;
+        self.note_dropped(lost_frames);
         self.queue.clear();
-        self.clips_aborted += lost_clips;
+        crate::metric_gauge!("gateway_queue_depth").set(0);
+        self.note_aborted(lost_clips);
         self.clip_t0.clear();
         self.node_report = None;
         self.last_ack = None;
         self.last_flush_ack = None;
+        self.barrier_t0 = None;
         log_warn!(
             "link to node {} died ({cause}): {lost_frames} queued frames and \
              {lost_clips} in-flight clips accounted lost (at-most-once)",
@@ -640,6 +674,7 @@ impl RemoteLane {
         match open_link(&self.peer, &self.hello, dial) {
             Ok((link, _shake)) => {
                 self.reconnects += 1;
+                crate::metric_counter!("gateway_reconnects_total").inc();
                 log_info!(
                     "reconnected to node {} (session #{}, reconnect #{})",
                     self.peer,
@@ -791,9 +826,10 @@ impl RemoteLane {
                 Ok(()) => {
                     link.credits -= 1;
                     wrote = true;
+                    crate::metric_counter!("gateway_frames_sent_total").inc();
                 }
                 Err(e) => {
-                    self.frames_dropped += 1; // the frame the write consumed
+                    self.note_dropped(1); // the frame the write consumed
                     if let Some(l) = self.link.as_mut() {
                         l.closed = Some(Some(format!("send failed: {e:#}")));
                     }
@@ -802,6 +838,7 @@ impl RemoteLane {
                 }
             }
         }
+        crate::metric_gauge!("gateway_queue_depth").set(self.queue.len() as i64);
         if wrote {
             let flushed = match self.link.as_mut() {
                 Some(l) => l.writer.flush(),
@@ -826,8 +863,19 @@ impl RemoteLane {
             if self.queue.is_empty() {
                 return Ok(());
             }
-            self.wait_event()?;
+            self.stalled_wait()?;
         }
+    }
+
+    /// One blocking wait on the node while frames are held back by the
+    /// exhausted credit window, counted and timed as a credit stall.
+    fn stalled_wait(&mut self) -> Result<usize> {
+        crate::metric_counter!("gateway_credit_stalls_total").inc();
+        let t0 = Instant::now();
+        let res = self.wait_event();
+        crate::metric_hist!("gateway_credit_stall_us")
+            .record_us(t0.elapsed().as_secs_f64() * 1e6);
+        res
     }
 
     fn send_ctl(&mut self, msg: &Msg) -> Result<()> {
@@ -855,13 +903,25 @@ impl RemoteLane {
         self.drain_token += 1;
         let token = self.drain_token;
         self.send_ctl(&Msg::Drain { token })?;
+        self.barrier_t0 = Some(Instant::now());
         Ok(token)
+    }
+
+    /// Record the completed barrier's send→ack round trip as the wire
+    /// stage (covers the node's remaining drain work plus both hops).
+    fn note_barrier_rtt(&mut self) {
+        if let Some(t0) = self.barrier_t0.take() {
+            let d = t0.elapsed();
+            self.stage_wire.record(d);
+            crate::metric_hist!("gateway_wire_rtt_us").record_us(d.as_secs_f64() * 1e6);
+        }
     }
 
     fn await_drain(&mut self, token: u64) -> Result<()> {
         while self.last_ack != Some(token) {
             self.wait_event()?;
         }
+        self.note_barrier_rtt();
         // every pre-barrier result precedes the ack on the wire, so a
         // fully-sent clip whose t0 still survives the ack was dropped
         // node-side and can never resolve — prune it, or a long-running
@@ -881,6 +941,7 @@ impl RemoteLane {
         self.drain_token += 1;
         let token = self.drain_token;
         self.send_ctl(&Msg::FlushTails { token })?;
+        self.barrier_t0 = Some(Instant::now());
         Ok(token)
     }
 
@@ -892,6 +953,7 @@ impl RemoteLane {
                     // tails included, padded results precede the ack —
                     // so any surviving entry is dead and pruned outright
                     self.clip_t0.clear();
+                    self.note_barrier_rtt();
                     return Ok(flushed);
                 }
             }
@@ -966,6 +1028,9 @@ impl RemoteLane {
         report.frames_dropped += self.frames_dropped;
         report.reconnects = self.reconnects;
         report.latency = std::mem::take(&mut self.latency);
+        // the node's report already carried queue-wait/compute stages;
+        // the wire stage is this side's own measurement
+        report.stage_wire = std::mem::take(&mut self.stage_wire);
         report
     }
 }
@@ -990,12 +1055,12 @@ impl Lane for RemoteLane {
             // down node from stalling traffic to healthy nodes.
             self.reap();
             if self.dead_clip(&task) {
-                self.frames_dropped += 1;
+                self.note_dropped(1);
                 return false;
             }
         }
         if self.ensure_link().is_err() {
-            self.frames_dropped += 1;
+            self.note_dropped(1);
             // the rest of this clip must not reach a later replacement
             // session as a head-missing partial
             self.mark_clip_dead(task.stream, task.clip_seq);
@@ -1007,7 +1072,7 @@ impl Lane for RemoteLane {
         // frame must not slip onto the fresh session as a head-missing
         // partial
         if task.frame_idx > 0 && self.dead_clip(&task) {
-            self.frames_dropped += 1;
+            self.note_dropped(1);
             return false;
         }
         self.queue.push_back(task);
@@ -1018,7 +1083,7 @@ impl Lane for RemoteLane {
         }
         while self.queue.len() > self.cfg.max_queue {
             // out of credits and over the local bound: block on the node
-            if self.wait_event().is_err() {
+            if self.stalled_wait().is_err() {
                 if self.link.is_none() {
                     // node died while we were credit-blocked: the
                     // at-most-once reckoning in note_death() already
@@ -1043,7 +1108,7 @@ impl Lane for RemoteLane {
                     // remaining frames gateway-side too
                     self.mark_clip_dead(t.stream, t.clip_seq);
                 }
-                self.frames_dropped += 1;
+                self.note_dropped(1);
                 return false;
             }
             if self.flush_queue().is_err() {
@@ -1185,7 +1250,7 @@ impl Lane for RemoteLane {
         // frames still queued can only remain after a degraded exit (a
         // clean finish drained them, a death already accounted them) —
         // always fold them in
-        self.frames_dropped += self.queue.len() as u64;
+        self.note_dropped(self.queue.len() as u64);
         self.queue.clear();
         // a report that arrived before a slow/hung close is still good
         // (a *death* clears node_report in note_death, so this cannot
@@ -1200,7 +1265,7 @@ impl Lane for RemoteLane {
         // that reports and *then* wedges mid-delivery may leave a
         // result gap the degraded warning below does not cover.
         if wire.is_none() {
-            self.clips_aborted += self.clip_t0.len() as u64;
+            self.note_aborted(self.clip_t0.len() as u64);
         }
         self.clip_t0.clear();
         if wire.is_none() {
@@ -1314,6 +1379,7 @@ impl RemotePool {
             let i = (primary + k) % n;
             if self.lanes[i].poll_ready() {
                 self.overrides.insert(stream, i);
+                crate::metric_counter!("gateway_reroutes_total").inc();
                 return i;
             }
         }

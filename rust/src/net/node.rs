@@ -185,6 +185,14 @@ where
          max_sessions {})",
         cfg.max_sessions
     );
+    // pre-register the node's metric families so a scrape or JSONL
+    // snapshot taken before the first session already names them at zero
+    crate::metric_gauge!("node_sessions_live");
+    crate::metric_counter!("node_sessions_total");
+    crate::metric_counter!("node_busy_rejects_total");
+    crate::metric_counter!("node_handshake_failures_total");
+    crate::metric_counter!("node_frames_total");
+    crate::metric_counter!("node_results_total");
     // non-blocking accept so the loop can observe the shutdown switch
     // (and reap finished sessions) without a poke connection
     listener
@@ -281,6 +289,7 @@ fn serve_session<L, F>(
     L: Lane,
     F: Fn(mpsc::Sender<ClassifyResult>) -> Result<L>,
 {
+    crate::util::logging::set_thread_context(&format!("s#{session}"));
     log_info!("node: session #{session} from {peer}");
     match serve_conn(stream, session, factory, fingerprint, cfg, active) {
         Ok(stats) => log_info!(
@@ -301,6 +310,7 @@ struct SlotGuard<'a>(&'a AtomicUsize);
 impl Drop for SlotGuard<'_> {
     fn drop(&mut self) {
         self.0.fetch_sub(1, Ordering::SeqCst);
+        crate::metric_gauge!("node_sessions_live").sub(1);
     }
 }
 
@@ -326,16 +336,27 @@ where
     rstream
         .set_read_timeout(Some(cfg.handshake_timeout))
         .context("setting the handshake timeout")?;
-    let hello = match read_msg(&mut rstream, &mut scratch).context("reading hello")? {
-        Some(Msg::Hello(h)) => h,
-        Some(other) => bail!("expected Hello, got {other:?}"),
-        None => bail!("gateway closed before the handshake"),
+    let hello = match read_msg(&mut rstream, &mut scratch).context("reading hello") {
+        Ok(Some(Msg::Hello(h))) => h,
+        Ok(Some(other)) => {
+            crate::metric_counter!("node_handshake_failures_total").inc();
+            bail!("expected Hello, got {other:?}")
+        }
+        Ok(None) => {
+            crate::metric_counter!("node_handshake_failures_total").inc();
+            bail!("gateway closed before the handshake")
+        }
+        Err(e) => {
+            crate::metric_counter!("node_handshake_failures_total").inc();
+            return Err(e);
+        }
     };
 
     // identity precheck first — it costs nothing (hello + fingerprint
     // only) and a mismatched peer must hear the permanent Incompatible,
     // not a retryable Busy it would back off against forever
     if let Err(e) = Handshake::wildcard(fingerprint).accepts_identity(&hello) {
+        crate::metric_counter!("node_handshake_failures_total").inc();
         let _ = send_reject(
             &mut writer,
             &mut scratch,
@@ -358,6 +379,7 @@ where
         }
     };
     if !admitted {
+        crate::metric_counter!("node_busy_rejects_total").inc();
         let reason = format!(
             "busy: {} of {} sessions in use — retry after a backoff",
             cur,
@@ -367,6 +389,8 @@ where
         bail!("admission refused: {reason}");
     }
     let _slot = SlotGuard(active);
+    crate::metric_gauge!("node_sessions_live").add(1);
+    crate::metric_counter!("node_sessions_total").inc();
 
     let (results_tx, results_rx) = mpsc::channel::<ClassifyResult>();
     let lane = match factory(results_tx).context("building the connection's compute lane") {
@@ -431,6 +455,7 @@ fn handle_conn<L: Lane>(
     let mut check = shake;
     check.n_filters = hello.n_filters;
     if let Err(e) = check.accepts(&hello) {
+        crate::metric_counter!("node_handshake_failures_total").inc();
         send_reject(
             &mut writer,
             &mut scratch,
@@ -586,6 +611,7 @@ fn handle_conn<L: Lane>(
     // the sink sender died with the lane, so this drains to Disconnected
     while let Ok(r) = results_rx.try_recv() {
         clips_out += 1;
+        crate::metric_counter!("node_results_total").inc();
         write_msg(&mut writer, &Msg::Result(to_wire(&r)), &mut scratch)?;
     }
     write_msg(
@@ -627,6 +653,7 @@ fn write_results(
         *clips_out += 1;
         n += 1;
     }
+    crate::metric_counter!("node_results_total").add(n as u64);
     Ok(n)
 }
 
@@ -661,6 +688,7 @@ fn handle_event<L: Lane>(
     match ev {
         NodeEvent::Frame(task) => {
             *frames_in += 1;
+            crate::metric_counter!("node_frames_total").inc();
             // per-stream queue overflow is dropped and accounted inside
             // the lane's own report, mirroring the in-process path
             lane.push(task);

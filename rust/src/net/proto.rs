@@ -32,6 +32,7 @@
 //! ```
 
 use crate::coordinator::metrics::{LaneStats, ServeReport};
+use crate::util::stats::LatencyHist;
 use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
 
@@ -39,8 +40,9 @@ use std::io::{Read, Write};
 pub const MAGIC: u32 = 0x4946_4C54;
 /// Protocol version; bumped on any wire-incompatible change (see the
 /// versioning policy in `docs/WIRE.md`). v2 added the session id to
-/// `Welcome` and the machine-readable reason code to `Reject`.
-pub const VERSION: u16 = 2;
+/// `Welcome` and the machine-readable reason code to `Reject`; v3
+/// added the per-stage duration histograms to `Report`.
+pub const VERSION: u16 = 3;
 /// Hard ceiling on one message's payload (64 MiB ≫ any real frame).
 pub const MAX_MSG_BYTES: usize = 1 << 26;
 
@@ -209,8 +211,12 @@ pub struct WireLaneStats {
 }
 
 /// The node's final [`ServeReport`], minus the parts that do not
-/// survive a process boundary (latency is re-measured at the gateway;
-/// wall time is the gateway's session).
+/// survive a process boundary (end-to-end latency is re-measured at the
+/// gateway; wall time is the gateway's session). Per-stage *durations*
+/// do survive — `stage_queue_wait` and `stage_compute` are node-local
+/// interval histograms, so they ship as bucket counts (v3) and merge
+/// positionally into the gateway's report. The wire stage stays
+/// gateway-side by construction.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct WireReport {
     pub clips_classified: u64,
@@ -223,6 +229,8 @@ pub struct WireReport {
     pub narrow_dispatches: u64,
     pub frames_processed: u64,
     pub audio_seconds: f64,
+    pub stage_queue_wait: LatencyHist,
+    pub stage_compute: LatencyHist,
     pub lanes: Vec<WireLaneStats>,
 }
 
@@ -239,6 +247,8 @@ impl WireReport {
             narrow_dispatches: r.batch.narrow_dispatches,
             frames_processed: r.batch.frames_processed,
             audio_seconds: r.audio_seconds,
+            stage_queue_wait: r.stage_queue_wait.clone(),
+            stage_compute: r.stage_compute.clone(),
             lanes: r
                 .per_lane
                 .iter()
@@ -262,6 +272,8 @@ impl WireReport {
             clips_padded: self.clips_padded,
             frames_dropped: self.frames_dropped,
             audio_seconds: self.audio_seconds,
+            stage_queue_wait: self.stage_queue_wait,
+            stage_compute: self.stage_compute,
             ..ServeReport::default()
         };
         out.batch.wide_occupancy = self.wide_occupancy;
@@ -370,6 +382,16 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(s.as_bytes());
 }
 
+fn put_hist(out: &mut Vec<u8>, h: &LatencyHist) {
+    let counts = h.bucket_counts();
+    put_u32(out, counts.len() as u32);
+    for &c in counts {
+        put_u64(out, c);
+    }
+    put_f64(out, h.sum_us());
+    put_f64(out, h.max_us());
+}
+
 fn put_shake(out: &mut Vec<u8>, h: &Handshake) {
     put_u32(out, MAGIC);
     put_u16(out, h.version);
@@ -449,6 +471,24 @@ impl<'a> Dec<'a> {
         let n = self.u32()? as usize;
         ensure!(n <= MAX_MSG_BYTES, "string too long ({n})");
         Ok(String::from_utf8_lossy(self.bytes(n)?).into_owned())
+    }
+
+    fn hist(&mut self) -> Result<LatencyHist> {
+        let n = self.u32()? as usize;
+        // bound against the remaining payload before allocating (each
+        // bucket count is 8 bytes); a foreign bucket layout is handled
+        // leniently by `from_parts`, a corrupt length is not
+        ensure!(
+            n <= (self.buf.len() - self.pos) / 8,
+            "histogram longer than its message ({n} buckets)"
+        );
+        let mut counts = Vec::with_capacity(n);
+        for _ in 0..n {
+            counts.push(self.u64()?);
+        }
+        let sum_us = self.f64()?;
+        let max_us = self.f64()?;
+        Ok(LatencyHist::from_parts(&counts, sum_us, max_us))
     }
 
     fn shake(&mut self) -> Result<Handshake> {
@@ -558,6 +598,8 @@ impl Msg {
                 put_u64(out, r.narrow_dispatches);
                 put_u64(out, r.frames_processed);
                 put_f64(out, r.audio_seconds);
+                put_hist(out, &r.stage_queue_wait);
+                put_hist(out, &r.stage_compute);
                 put_u32(out, r.lanes.len() as u32);
                 for l in &r.lanes {
                     put_u32(out, l.lane);
@@ -619,6 +661,8 @@ impl Msg {
                 let narrow_dispatches = d.u64()?;
                 let frames_processed = d.u64()?;
                 let audio_seconds = d.f64()?;
+                let stage_queue_wait = d.hist()?;
+                let stage_compute = d.hist()?;
                 let n_lanes = d.u32()? as usize;
                 ensure!(n_lanes <= 65_536, "implausible lane count {n_lanes}");
                 let mut lanes = Vec::with_capacity(n_lanes);
@@ -641,6 +685,8 @@ impl Msg {
                     narrow_dispatches,
                     frames_processed,
                     audio_seconds,
+                    stage_queue_wait,
+                    stage_compute,
                     lanes,
                 })
             }
@@ -771,6 +817,17 @@ mod tests {
                 narrow_dispatches: 4,
                 frames_processed: 40,
                 audio_seconds: 5.12,
+                stage_queue_wait: {
+                    let mut h = LatencyHist::new();
+                    h.record_us(120.0);
+                    h.record_us(4_500.0);
+                    h
+                },
+                stage_compute: {
+                    let mut h = LatencyHist::new();
+                    h.record_us(850.0);
+                    h
+                },
                 lanes: vec![
                     WireLaneStats {
                         lane: 0,
@@ -805,6 +862,9 @@ mod tests {
         };
         r.batch.record_wide(8);
         r.batch.record_narrow(5);
+        r.stage_queue_wait.record_us(75.0);
+        r.stage_compute.record_us(1_900.0);
+        r.stage_compute.record_us(2_100.0);
         r.per_lane.push(LaneStats {
             lane: 3,
             frames: 13,
@@ -820,6 +880,10 @@ mod tests {
         assert_eq!(back.audio_seconds, r.audio_seconds);
         assert_eq!(back.batch.frames_processed, r.batch.frames_processed);
         assert_eq!(back.batch.wide_occupancy, r.batch.wide_occupancy);
+        assert_eq!(back.stage_queue_wait, r.stage_queue_wait);
+        assert_eq!(back.stage_compute, r.stage_compute);
+        // the wire stage is gateway-owned and never shipped
+        assert_eq!(back.stage_wire.count(), 0);
         assert_eq!(back.per_lane.len(), 1);
         assert_eq!(back.per_lane[0].lane, 3);
         assert_eq!(back.per_lane[0].frames, 13);

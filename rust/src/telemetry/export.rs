@@ -1,0 +1,363 @@
+//! The two read paths out of the registry: a scrapeable plain-text
+//! HTTP endpoint and a periodic JSONL snapshot emitter.
+//!
+//! Both are deliberately tiny: the offline build ships no HTTP or
+//! serialisation crates, and a metrics exporter that can block, grow,
+//! or write to the process it observes is worse than none. The HTTP
+//! responder is one thread, read-only, connection-per-request; the
+//! emitter is one thread writing one line per interval. Neither touches
+//! the serving hot path — they read the same atomics the recorders
+//! write.
+
+use super::registry::registry;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Poll interval for the stop switches (accept loop + emitter sleep).
+const POLL: Duration = Duration::from_millis(50);
+
+// ---------------------------------------------------------------------
+// JSONL snapshots
+// ---------------------------------------------------------------------
+
+/// One snapshot line: `{"t_s": <seconds since emitter start>,
+/// "metrics": {...}}`. Public so tests and one-shot callers can build
+/// the exact line the emitter writes.
+pub fn snapshot_line(t_s: f64) -> String {
+    Json::obj(vec![
+        ("t_s", Json::Num(t_s)),
+        ("metrics", registry().snapshot_json()),
+    ])
+    .to_string()
+}
+
+/// Where the emitter writes its lines.
+#[derive(Clone, Debug)]
+pub enum SnapshotSink {
+    Stderr,
+    /// Appended to (created if missing), one JSON object per line.
+    File(PathBuf),
+}
+
+impl SnapshotSink {
+    fn write_line(&self, line: &str) {
+        match self {
+            SnapshotSink::Stderr => eprintln!("{line}"),
+            SnapshotSink::File(path) => {
+                let r = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)
+                    .and_then(|mut f| writeln!(f, "{line}"));
+                if let Err(e) = r {
+                    crate::log_warn!("stats snapshot write to {} failed: {e}", path.display());
+                }
+            }
+        }
+    }
+}
+
+/// Background thread emitting a registry snapshot every `every`.
+/// [`SnapshotEmitter::stop`] writes one final line before joining, so
+/// even a run shorter than the interval leaves a snapshot behind.
+pub struct SnapshotEmitter {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl SnapshotEmitter {
+    pub fn spawn(every: Duration, sink: SnapshotSink) -> SnapshotEmitter {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = thread::Builder::new()
+            .name("stats-emit".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                let mut next = every;
+                while !stop2.load(Ordering::Relaxed) {
+                    if t0.elapsed() >= next {
+                        sink.write_line(&snapshot_line(t0.elapsed().as_secs_f64()));
+                        next += every;
+                    }
+                    thread::sleep(POLL.min(every));
+                }
+                // final snapshot on shutdown: short runs still report
+                sink.write_line(&snapshot_line(t0.elapsed().as_secs_f64()));
+            })
+            .expect("spawn stats-emit thread");
+        SnapshotEmitter {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Emit the final snapshot and join the thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SnapshotEmitter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// HTTP GET responder (--stats-listen)
+// ---------------------------------------------------------------------
+
+/// A minimal HTTP/1.1 responder serving the Prometheus-style rendering
+/// of the global registry on every `GET`, any path. One thread,
+/// read-only, connection-per-request (`Connection: close`), no
+/// keep-alive, no routing — `curl http://ADDR/metrics` and a Prometheus
+/// scraper both work, and nothing a client sends can allocate more
+/// than the fixed header buffer.
+pub struct StatsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl StatsServer {
+    /// Bind and start serving. `addr` may use port 0; the real bound
+    /// address is [`StatsServer::addr`].
+    pub fn bind(addr: &str) -> Result<StatsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding stats listener {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("stats listener set_nonblocking")?;
+        let local = listener.local_addr().context("stats listener local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = thread::Builder::new()
+            .name("stats-http".into())
+            .spawn(move || accept_loop(&listener, &stop2))
+            .context("spawn stats-http thread")?;
+        Ok(StatsServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the serving thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, stop: &AtomicBool) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut conn, _)) => {
+                // one slow client delays the next scrape, never the
+                // serving path; timeouts bound the damage
+                let _ = answer(&mut conn);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => thread::sleep(POLL),
+            Err(_) => thread::sleep(POLL),
+        }
+    }
+}
+
+/// Read one request head, answer, close. Anything that is not a GET
+/// gets a 405; a malformed or silent client gets dropped by timeout.
+fn answer(conn: &mut TcpStream) -> std::io::Result<()> {
+    conn.set_read_timeout(Some(Duration::from_secs(2)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut head = Vec::new();
+    let mut chunk = [0u8; 1024];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 8192 {
+        let n = conn.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&chunk[..n]);
+    }
+    let first = String::from_utf8_lossy(&head);
+    let first = first.lines().next().unwrap_or("");
+    let (status, body) = if first.starts_with("GET ") {
+        ("200 OK", registry().render_prometheus())
+    } else {
+        ("405 Method Not Allowed", "stats endpoint is GET-only\n".to_string())
+    };
+    write!(
+        conn,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    conn.flush()
+}
+
+// ---------------------------------------------------------------------
+// CLI wiring shared by `infilter-node`, `serve`, `edge-fleet`
+// ---------------------------------------------------------------------
+
+/// The live-telemetry side processes started from the shared CLI
+/// flags: `--stats-listen ADDR` (HTTP endpoint), `--stats-every N`
+/// (snapshot interval, seconds) and `--stats-file PATH` (snapshot sink;
+/// implies a default 5 s interval when `--stats-every` is absent).
+/// Call [`StatsRuntime::finish`] at end of run for a final snapshot and
+/// a clean join; a killed process (the long-running node) just dies
+/// with its threads, which is fine — both paths are read-only.
+pub struct StatsRuntime {
+    emitter: Option<SnapshotEmitter>,
+    server: Option<StatsServer>,
+}
+
+impl StatsRuntime {
+    pub fn from_args(args: &Args) -> Result<StatsRuntime> {
+        let server = match args.get("stats-listen") {
+            Some(addr) => {
+                let s = StatsServer::bind(addr)?;
+                crate::log_info!("stats listening on http://{}/metrics", s.addr());
+                Some(s)
+            }
+            None => None,
+        };
+        let sink = match args.get("stats-file") {
+            Some(p) => SnapshotSink::File(PathBuf::from(p)),
+            None => SnapshotSink::Stderr,
+        };
+        let every_s = match args.get("stats-every") {
+            Some(_) => args.get_f64("stats-every", 5.0),
+            None if args.get("stats-file").is_some() => 5.0,
+            None => 0.0,
+        };
+        let emitter = if every_s > 0.0 {
+            Some(SnapshotEmitter::spawn(Duration::from_secs_f64(every_s), sink))
+        } else if args.get("stats-every").is_some() {
+            bail!("--stats-every must be a positive number of seconds");
+        } else {
+            None
+        };
+        Ok(StatsRuntime { emitter, server })
+    }
+
+    /// Final snapshot + join (emitter), stop serving (endpoint).
+    pub fn finish(self) {
+        if let Some(e) = self.emitter {
+            e.stop();
+        }
+        if let Some(s) = self.server {
+            s.stop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(addr: SocketAddr) -> String {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(conn, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn http_endpoint_serves_the_registry_and_rejects_posts() {
+        registry().counter("export_test_hits_total").add(7);
+        let server = StatsServer::bind("127.0.0.1:0").unwrap();
+        let resp = scrape(server.addr());
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("Content-Type: text/plain"));
+        assert!(resp.contains("export_test_hits_total"));
+        // body length matches the Content-Length header
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let len: usize = resp
+            .lines()
+            .find(|l| l.starts_with("Content-Length:"))
+            .unwrap()
+            .split(':')
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(body.len(), len);
+
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        write!(conn, "POST / HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+        server.stop();
+    }
+
+    #[test]
+    fn snapshot_line_is_valid_json_with_schema_keys() {
+        registry().counter("export_test_snap_total").inc();
+        let line = snapshot_line(1.25);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("t_s").as_f64(), Some(1.25));
+        assert!(j.get("metrics").as_obj().is_some());
+        assert!(j
+            .get("metrics")
+            .get("export_test_snap_total")
+            .as_f64()
+            .is_some());
+    }
+
+    #[test]
+    fn emitter_writes_parseable_jsonl_and_a_final_line() {
+        registry().counter("export_test_emit_total").add(2);
+        let path = std::env::temp_dir().join(format!(
+            "infilter_stats_test_{}_{:?}.jsonl",
+            std::process::id(),
+            thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let emitter = SnapshotEmitter::spawn(
+            Duration::from_millis(20),
+            SnapshotSink::File(path.clone()),
+        );
+        thread::sleep(Duration::from_millis(80));
+        emitter.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 2, "interval lines + final line: {text}");
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("t_s").as_f64().is_some());
+            assert!(j.get("metrics").as_obj().is_some());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

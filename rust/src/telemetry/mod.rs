@@ -1,0 +1,77 @@
+//! Live telemetry: a dependency-free global metrics registry with a
+//! scrapeable endpoint and periodic JSONL snapshots.
+//!
+//! The end-of-run [`ServeReport`](crate::coordinator::metrics::ServeReport)
+//! answers "how did the run go"; this module answers "how is the run
+//! going" — a long-lived `infilter-node` or gateway exposes its live
+//! counters without waiting for the session to end. Three pieces:
+//!
+//! * [`registry`] — the store: named atomic [`Counter`]s, [`Gauge`]s
+//!   and log-bucketed [`Hist`]ograms behind one process-global
+//!   [`Registry`]. Registration (name lookup) takes a lock once;
+//!   recording through the returned `Arc` handle is lock-free relaxed
+//!   atomics with zero allocation, cheap enough for the frame path.
+//!   The [`metric_counter!`]/[`metric_gauge!`]/[`metric_hist!`] macros
+//!   cache the handle in a per-call-site static so hot paths never
+//!   re-enter the registry. [`Hist`] shares its bucket layout with
+//!   [`util::stats::LatencyHist`](crate::util::stats::LatencyHist)
+//!   (via [`latency_bucket_bounds_us`]) so live histograms and report
+//!   histograms merge losslessly.
+//! * [`export`] — the two read paths: [`StatsServer`], a one-thread
+//!   hand-rolled HTTP GET responder serving Prometheus-style plain
+//!   text (`--stats-listen ADDR`; no HTTP library, read-only), and
+//!   [`SnapshotEmitter`], a background thread writing one JSON object
+//!   per line (`{"t_s": ..., "metrics": {...}}`) to stderr or a file
+//!   (`--stats-every N` / `--stats-file PATH`).
+//! * a global kill switch ([`set_enabled`]) so the instrumentation tax
+//!   can be measured (see `bench_dispatch`) and zeroed out.
+//!
+//! Metric naming: `<layer>_<what>[_total|_us]` with layers `edge_`,
+//! `gateway_`, `node_`, `pipeline_`. The full reference lives in
+//! `docs/OPERATIONS.md` §Live telemetry.
+//!
+//! [`latency_bucket_bounds_us`]: crate::util::stats::latency_bucket_bounds_us
+
+pub mod export;
+pub mod registry;
+
+pub use export::{snapshot_line, SnapshotEmitter, SnapshotSink, StatsRuntime, StatsServer};
+pub use registry::{enabled, registry, set_enabled, Counter, Gauge, Hist, Registry};
+
+/// A cached-handle counter: the registry is consulted once per call
+/// site (first hit), after that the static `Arc` is reused — the hot
+/// path is one relaxed `fetch_add`.
+#[macro_export]
+macro_rules! metric_counter {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Counter>> =
+            std::sync::OnceLock::new();
+        HANDLE
+            .get_or_init(|| $crate::telemetry::registry().counter($name))
+            .as_ref()
+    }};
+}
+
+/// Cached-handle gauge; see [`metric_counter!`].
+#[macro_export]
+macro_rules! metric_gauge {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Gauge>> =
+            std::sync::OnceLock::new();
+        HANDLE
+            .get_or_init(|| $crate::telemetry::registry().gauge($name))
+            .as_ref()
+    }};
+}
+
+/// Cached-handle histogram; see [`metric_counter!`].
+#[macro_export]
+macro_rules! metric_hist {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Hist>> =
+            std::sync::OnceLock::new();
+        HANDLE
+            .get_or_init(|| $crate::telemetry::registry().hist($name))
+            .as_ref()
+    }};
+}

@@ -1,0 +1,410 @@
+//! The metric store: named atomic counters, gauges and histograms.
+//!
+//! One process-global [`Registry`] maps names to metrics. Handing out
+//! `Arc` handles decouples the two costs: registration locks a map
+//! once, recording is relaxed atomics on the shared cell — no lock, no
+//! allocation, safe from any thread. All metrics are monotone or
+//! idempotent, so readers ([`Registry::render_prometheus`],
+//! [`Registry::snapshot_json`]) tolerate racing writers: a scrape is a
+//! consistent-enough point-in-time view, not a barrier.
+
+use crate::util::json::Json;
+use crate::util::stats::{latency_bucket_bounds_us, LatencyHist};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Global record-path switch. On by default; benches flip it to
+/// measure the instrumentation tax, embedders can flip it to zero the
+/// tax out. Disabling stops *recording* — existing values stay
+/// readable.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A value that goes up and down (queue depth, live sessions).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.v.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add(&self, d: i64) {
+        if enabled() {
+            self.v.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    pub fn sub(&self, d: i64) {
+        self.add(-d);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// The atomic cousin of [`LatencyHist`]: identical log-spaced bucket
+/// bounds (1 µs .. ~100 s, 5 per decade, one overflow bucket), but
+/// every cell is an atomic so concurrent threads record without a
+/// lock. [`Hist::to_latency_hist`] snapshots into the single-threaded
+/// type, which makes live histograms mergeable with report histograms.
+#[derive(Debug)]
+pub struct Hist {
+    bounds_us: Vec<f64>,
+    /// bounds.len() + 1 cells; the last is the overflow bucket
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// sums/maxima are kept in integer nanoseconds so they fit an
+    /// atomic without a CAS loop; ~584 years of summed latency before
+    /// wrap
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        let bounds = latency_bucket_bounds_us();
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Hist {
+            bounds_us: bounds,
+            buckets,
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, dur: std::time::Duration) {
+        self.record_us(dur.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&self, us: f64) {
+        if !enabled() {
+            return;
+        }
+        let idx = self
+            .bounds_us
+            .partition_point(|&b| b < us)
+            .min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let ns = (us * 1e3).max(0.0) as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn bounds_us(&self) -> &[f64] {
+        &self.bounds_us
+    }
+
+    /// Point-in-time bucket counts (last entry is the overflow bucket).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Snapshot into the mergeable single-threaded histogram. Racing
+    /// writers may make `count` momentarily disagree with the bucket
+    /// sum; the snapshot derives its count from the buckets so it is
+    /// internally consistent.
+    pub fn to_latency_hist(&self) -> LatencyHist {
+        LatencyHist::from_parts(&self.bucket_counts(), self.sum_us(), self.max_us())
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Hist>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist(_) => "histogram",
+        }
+    }
+}
+
+/// The name → metric map. Use [`registry()`] for the process-global
+/// instance; a fresh `Registry` is only useful in tests.
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+/// The process-global registry every instrumented layer records into.
+pub fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            metrics: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        // a metric map poisoned by a panicking scrape is still valid
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Get-or-create; panics if `name` is already registered as a
+    /// different kind (names are compile-time constants, so a clash is
+    /// a programming error worth failing loudly on).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.lock();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => c.clone(),
+            other => panic!("metric '{name}' is a {}, not a counter", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.lock();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            other => panic!("metric '{name}' is a {}, not a gauge", other.kind()),
+        }
+    }
+
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        let mut m = self.lock();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Arc::new(Hist::new())))
+        {
+            Metric::Hist(h) => h.clone(),
+            other => panic!("metric '{name}' is a {}, not a histogram", other.kind()),
+        }
+    }
+
+    /// Prometheus-style plain-text exposition. Histogram buckets are
+    /// cumulative with `le` bounds in microseconds (matching the `_us`
+    /// name suffix), `_sum` in microseconds, plus a non-standard
+    /// `_max` gauge line (the registry keeps a true maximum, which
+    /// bucket bounds alone cannot express).
+    pub fn render_prometheus(&self) -> String {
+        let m = self.lock();
+        let mut out = String::new();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+                }
+                Metric::Hist(h) => {
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, b) in h.bounds_us().iter().enumerate() {
+                        cum += counts[i];
+                        out.push_str(&format!("{name}_bucket{{le=\"{b:.1}\"}} {cum}\n"));
+                    }
+                    cum += counts.last().copied().unwrap_or(0);
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                    out.push_str(&format!("{name}_sum {}\n", h.sum_us()));
+                    out.push_str(&format!("{name}_count {}\n", h.count()));
+                    out.push_str(&format!("{name}_max {}\n", h.max_us()));
+                }
+            }
+        }
+        out
+    }
+
+    /// One JSON object over every metric: counters/gauges as numbers,
+    /// histograms as `{count, mean_us, p50_us, p95_us, p99_us, max_us}`.
+    pub fn snapshot_json(&self) -> Json {
+        let m = self.lock();
+        let mut obj = BTreeMap::new();
+        for (name, metric) in m.iter() {
+            let v = match metric {
+                Metric::Counter(c) => Json::Num(c.get() as f64),
+                Metric::Gauge(g) => Json::Num(g.get() as f64),
+                Metric::Hist(h) => {
+                    let lh = h.to_latency_hist();
+                    Json::obj(vec![
+                        ("count", Json::Num(lh.count() as f64)),
+                        ("mean_us", Json::Num(lh.mean_us())),
+                        ("p50_us", Json::Num(lh.percentile_us(50.0))),
+                        ("p95_us", Json::Num(lh.percentile_us(95.0))),
+                        ("p99_us", Json::Num(lh.percentile_us(99.0))),
+                        ("max_us", Json::Num(lh.max_us())),
+                    ])
+                }
+            };
+            obj.insert(name.clone(), v);
+        }
+        Json::Obj(obj)
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that assert exact recorded values share this lock with the
+    /// test that flips the global [`set_enabled`] switch, so a disable
+    /// window never swallows another test's increments.
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn counter_gauge_roundtrip_and_handle_identity() {
+        let _g = gate();
+        let r = Registry::new();
+        let c = r.counter("t_counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // second lookup hands back the same cell
+        assert_eq!(r.counter("t_counter").get(), 5);
+        let g = r.gauge("t_gauge");
+        g.set(7);
+        g.sub(3);
+        assert_eq!(g.get(), 4);
+        assert_eq!(r.gauge("t_gauge").get(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn kind_clash_panics() {
+        let r = Registry::new();
+        r.counter("t_clash");
+        r.gauge("t_clash");
+    }
+
+    #[test]
+    fn hist_matches_latency_hist_bucketing() {
+        let _g = gate();
+        let r = Registry::new();
+        let h = r.hist("t_hist");
+        let mut reference = LatencyHist::new();
+        let mut rng = crate::util::prng::Pcg32::new(0x7e1e);
+        for _ in 0..500 {
+            let us = rng.uniform() * 2.0e5;
+            h.record_us(us);
+            reference.record_us(us);
+        }
+        // overflow routing too
+        h.record_us(5.0e9);
+        reference.record_us(5.0e9);
+        let snap = h.to_latency_hist();
+        assert_eq!(snap.count(), reference.count());
+        assert_eq!(snap.bucket_counts(), reference.bucket_counts());
+        assert_eq!(snap.max_us(), reference.max_us());
+        // sum goes through integer nanoseconds: equal to ~1ns per sample
+        assert!((snap.sum_us() - reference.sum_us()).abs() < 1e-3 * 501.0);
+        // and the snapshot merges into a report histogram
+        let mut merged = LatencyHist::new();
+        merged.merge(&snap);
+        assert_eq!(merged.count(), reference.count());
+    }
+
+    #[test]
+    fn disabled_recording_is_a_noop() {
+        let _g = gate();
+        let r = Registry::new();
+        let c = r.counter("t_disabled");
+        let h = r.hist("t_disabled_hist");
+        set_enabled(false);
+        c.inc();
+        h.record_us(10.0);
+        set_enabled(true);
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.count(), 0);
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn prometheus_and_json_render_every_kind() {
+        let _g = gate();
+        let r = Registry::new();
+        r.counter("zz_events_total").add(3);
+        r.gauge("zz_depth").set(-2);
+        r.hist("zz_lat_us").record_us(42.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE zz_events_total counter"));
+        assert!(text.contains("zz_events_total 3"));
+        assert!(text.contains("zz_depth -2"));
+        assert!(text.contains("zz_lat_us_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("zz_lat_us_count 1"));
+        let j = r.snapshot_json();
+        assert_eq!(j.get("zz_events_total").as_f64(), Some(3.0));
+        assert_eq!(j.get("zz_depth").as_f64(), Some(-2.0));
+        assert_eq!(j.get("zz_lat_us").get("count").as_f64(), Some(1.0));
+        assert!(j.get("zz_lat_us").get("p99_us").as_f64().unwrap() >= 42.0 * 0.9);
+    }
+}

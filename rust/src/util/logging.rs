@@ -1,5 +1,6 @@
 //! Leveled stderr logger with elapsed-time stamps (no env_logger offline).
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
@@ -26,12 +27,48 @@ pub fn set_level(level: Level) {
 }
 
 pub fn set_level_from_str(s: &str) {
-    set_level(match s {
-        "debug" => Level::Debug,
-        "warn" => Level::Warn,
-        "error" => Level::Error,
-        _ => Level::Info,
+    match s {
+        "debug" => set_level(Level::Debug),
+        "info" => set_level(Level::Info),
+        "warn" => set_level(Level::Warn),
+        "error" => set_level(Level::Error),
+        other => {
+            // fall back to Info, but say so — a typo'd `--log dbug`
+            // silently swallowing debug output is a debugging trap
+            set_level(Level::Info);
+            log(
+                Level::Warn,
+                format_args!(
+                    "unrecognized log level '{other}' (expected debug|info|warn|error); using info"
+                ),
+            );
+        }
+    }
+}
+
+thread_local! {
+    /// Optional per-thread tag (e.g. `s#42` for a node session thread,
+    /// `lane#3` for a shard worker) printed inside the stamp, so
+    /// interleaved stderr from concurrent sessions stays attributable.
+    static CONTEXT: RefCell<String> = const { RefCell::new(String::new()) };
+}
+
+/// Tag every log line from this thread with `tag` (empty clears).
+pub fn set_thread_context(tag: &str) {
+    CONTEXT.with(|c| {
+        let mut c = c.borrow_mut();
+        c.clear();
+        c.push_str(tag);
     });
+}
+
+pub fn clear_thread_context() {
+    set_thread_context("");
+}
+
+/// This thread's current context tag ("" when unset).
+pub fn thread_context() -> String {
+    CONTEXT.with(|c| c.borrow().clone())
 }
 
 pub fn enabled(level: Level) -> bool {
@@ -47,7 +84,14 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
             Level::Warn => "WRN",
             Level::Error => "ERR",
         };
-        eprintln!("[{t:9.3}s {tag}] {args}");
+        CONTEXT.with(|c| {
+            let ctx = c.borrow();
+            if ctx.is_empty() {
+                eprintln!("[{t:9.3}s {tag}] {args}");
+            } else {
+                eprintln!("[{t:9.3}s {tag} {ctx}] {args}");
+            }
+        });
     }
 }
 
@@ -75,13 +119,49 @@ macro_rules! log_error {
 mod tests {
     use super::*;
 
+    /// LEVEL is process-global; tests that set it serialize here.
+    fn level_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     #[test]
     fn level_gating() {
+        let _g = level_lock();
         set_level(Level::Warn);
         assert!(!enabled(Level::Info));
         assert!(enabled(Level::Warn));
         assert!(enabled(Level::Error));
         set_level(Level::Info);
         assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn unknown_level_string_falls_back_to_info() {
+        let _g = level_lock();
+        set_level_from_str("dbug");
+        assert!(enabled(Level::Info));
+        set_level_from_str("error");
+        assert!(enabled(Level::Error));
+        set_level_from_str("info");
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn thread_context_is_per_thread() {
+        set_thread_context("s#7");
+        assert_eq!(thread_context(), "s#7");
+        // another thread starts clean and its tag does not leak back
+        let other = std::thread::spawn(|| {
+            assert_eq!(thread_context(), "");
+            set_thread_context("lane#1");
+            thread_context()
+        })
+        .join()
+        .unwrap();
+        assert_eq!(other, "lane#1");
+        assert_eq!(thread_context(), "s#7");
+        clear_thread_context();
+        assert_eq!(thread_context(), "");
     }
 }

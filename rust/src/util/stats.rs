@@ -78,8 +78,22 @@ pub fn argmax<T: TotalOrd>(xs: &[T]) -> usize {
         .map_or(0, |(i, _)| i)
 }
 
+/// Log-spaced histogram bucket upper bounds shared by [`LatencyHist`]
+/// and its atomic cousin [`telemetry::Hist`](crate::telemetry::Hist):
+/// 1 µs .. ~100 s, 5 buckets per decade. Identical bounds are what make
+/// the two mergeable (bucket counts add positionally).
+pub fn latency_bucket_bounds_us() -> Vec<f64> {
+    let mut bounds = Vec::new();
+    let mut b = 1.0f64;
+    while b < 1.0e8 {
+        bounds.push(b);
+        b *= 10f64.powf(0.2);
+    }
+    bounds
+}
+
 /// Simple fixed-bucket latency histogram (microseconds), log-spaced.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LatencyHist {
     buckets: Vec<u64>,
     bounds_us: Vec<f64>,
@@ -96,13 +110,7 @@ impl Default for LatencyHist {
 
 impl LatencyHist {
     pub fn new() -> Self {
-        // 1us .. ~100s, 5 buckets per decade
-        let mut bounds = Vec::new();
-        let mut b = 1.0f64;
-        while b < 1.0e8 {
-            bounds.push(b);
-            b *= 10f64.powf(0.2);
-        }
+        let bounds = latency_bucket_bounds_us();
         LatencyHist {
             buckets: vec![0; bounds.len() + 1],
             bounds_us: bounds,
@@ -110,6 +118,22 @@ impl LatencyHist {
             sum_us: 0.0,
             max_us: 0.0,
         }
+    }
+
+    /// Rebuild from raw bucket counts (last entry = overflow bucket)
+    /// plus the moments buckets cannot carry. The count is derived from
+    /// the buckets so the result is always internally consistent; a
+    /// count vector from a different bucket layout is truncated or
+    /// zero-extended rather than panicking (the wire decoder feeds this
+    /// with peer-supplied data).
+    pub fn from_parts(bucket_counts: &[u64], sum_us: f64, max_us: f64) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        let n = bucket_counts.len().min(h.buckets.len());
+        h.buckets[..n].copy_from_slice(&bucket_counts[..n]);
+        h.count = h.buckets.iter().sum();
+        h.sum_us = sum_us;
+        h.max_us = max_us;
+        h
     }
 
     pub fn record(&mut self, dur: std::time::Duration) {
@@ -145,7 +169,25 @@ impl LatencyHist {
         self.max_us
     }
 
-    /// Approximate percentile from bucket upper bounds.
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
+    }
+
+    /// Raw bucket counts; the last entry is the overflow bucket for
+    /// samples at or above the top bound.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Bucket upper bounds (µs); `bucket_counts()` has one extra
+    /// (overflow) entry beyond these.
+    pub fn bounds_us(&self) -> &[f64] {
+        &self.bounds_us
+    }
+
+    /// Approximate percentile from bucket upper bounds, clamped to the
+    /// observed maximum (a bucket's upper bound can exceed the largest
+    /// sample in it, which would report p99 > max).
     pub fn percentile_us(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -155,7 +197,12 @@ impl LatencyHist {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return self.bounds_us.get(i).copied().unwrap_or(self.max_us);
+                return self
+                    .bounds_us
+                    .get(i)
+                    .copied()
+                    .unwrap_or(self.max_us)
+                    .min(self.max_us);
             }
         }
         self.max_us
@@ -235,5 +282,85 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!(a.max_us() >= 1000.0);
+    }
+
+    #[test]
+    fn hist_overflow_bucket_catches_samples_at_and_above_the_top_bound() {
+        let mut h = LatencyHist::new();
+        // the top bound is < 1e8; everything from there up must land in
+        // the single overflow bucket instead of indexing out of range
+        for us in [1.0e8, 5.0e8, 1.0e12, f64::INFINITY] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 4);
+        let counts = h.bucket_counts();
+        assert_eq!(*counts.last().unwrap(), 4, "{counts:?}");
+        assert_eq!(counts.iter().sum::<u64>(), 4);
+        // percentiles of an all-overflow fill report the true maximum,
+        // not a bucket bound
+        assert!(h.percentile_us(50.0).is_infinite());
+        assert!(h.max_us().is_infinite());
+    }
+
+    #[test]
+    fn hist_percentiles_monotone_under_random_fills() {
+        let mut rng = crate::util::prng::Pcg32::new(0x51a7);
+        for trial in 0..20 {
+            let mut h = LatencyHist::new();
+            let n = 1 + rng.below(400);
+            for _ in 0..n {
+                // log-uniform over ~9 decades, crossing into overflow
+                let us = 10f64.powf(rng.range(-0.5, 9.0));
+                h.record_us(us);
+            }
+            let p50 = h.percentile_us(50.0);
+            let p95 = h.percentile_us(95.0);
+            let p99 = h.percentile_us(99.0);
+            assert!(p50 <= p95, "trial {trial}: p50 {p50} > p95 {p95}");
+            assert!(p95 <= p99, "trial {trial}: p95 {p95} > p99 {p99}");
+            assert!(p99 <= h.max_us(), "trial {trial}: p99 {p99} > max {}", h.max_us());
+            assert!(p50 > 0.0);
+        }
+    }
+
+    #[test]
+    fn hist_merge_equals_combined_fill() {
+        let mut rng = crate::util::prng::Pcg32::new(0xfeed);
+        let samples: Vec<f64> = (0..600).map(|_| 10f64.powf(rng.range(0.0, 8.5))).collect();
+        let mut combined = LatencyHist::new();
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        for (i, &us) in samples.iter().enumerate() {
+            combined.record_us(us);
+            if i % 2 == 0 {
+                a.record_us(us);
+            } else {
+                b.record_us(us);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), combined.count());
+        assert_eq!(a.bucket_counts(), combined.bucket_counts());
+        assert_eq!(a.max_us(), combined.max_us());
+        assert!((a.sum_us() - combined.sum_us()).abs() < 1e-6 * combined.sum_us());
+        for q in [10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(a.percentile_us(q), combined.percentile_us(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn hist_from_parts_roundtrip() {
+        let mut h = LatencyHist::new();
+        for us in [3.0, 47.0, 1.0e5, 2.0e9] {
+            h.record_us(us);
+        }
+        let back = LatencyHist::from_parts(h.bucket_counts(), h.sum_us(), h.max_us());
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.bucket_counts(), h.bucket_counts());
+        assert_eq!(back.mean_us(), h.mean_us());
+        assert_eq!(back.percentile_us(95.0), h.percentile_us(95.0));
+        // a foreign layout is tolerated, not a panic
+        let short = LatencyHist::from_parts(&[5, 5], 10.0, 2.0);
+        assert_eq!(short.count(), 10);
     }
 }

@@ -1,0 +1,195 @@
+//! Live-telemetry acceptance: a loopback gateway→node serve with the
+//! `--stats-listen` endpoint scraped mid-run over real HTTP, asserting
+//! the required metric families are present and that their values
+//! advance with the workload; plus the JSONL snapshot schema the CI
+//! smoke step depends on.
+//!
+//! Gateway and node run in one process here, so both layers record
+//! into the same global registry and a single scrape sees the full
+//! `node_*` + `gateway_*` + `pipeline_*` picture. Assertions are
+//! delta-based (scrape before vs. after) because the registry is
+//! process-global and other tests in this binary may record too.
+
+use infilter::coordinator::dispatch::Lane;
+use infilter::coordinator::FrameTask;
+use infilter::dsp::multirate::BandPlan;
+use infilter::net::node::pipeline_factory;
+use infilter::net::{serve_node, NodeConfig, RemoteConfig, RemoteLane};
+use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+use infilter::telemetry::{snapshot_line, StatsServer};
+use infilter::train::TrainedModel;
+use infilter::util::json::Json;
+use infilter::util::prng::Pcg32;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Instant;
+
+const N_STREAMS: u64 = 6;
+const CLIPS_PER_STREAM: u64 = 2;
+const FRAMES: u64 = N_STREAMS * CLIPS_PER_STREAM * 2;
+
+fn engine() -> CpuEngine {
+    let mut plan = BandPlan::paper_default();
+    plan.n_octaves = 2;
+    CpuEngine::with_clip(&plan, 1.0, 64, 2)
+}
+
+fn model() -> TrainedModel {
+    TrainedModel::synthetic(11, 4, engine().n_filters(), 0.0, 1.0)
+}
+
+fn workload() -> Vec<FrameTask> {
+    let mut out = Vec::new();
+    for s in 0..N_STREAMS {
+        let mut rng = Pcg32::substream(97, s);
+        for clip in 0..CLIPS_PER_STREAM {
+            for f in 0..2usize {
+                out.push(FrameTask {
+                    stream: s,
+                    clip_seq: clip,
+                    frame_idx: f,
+                    data: (0..64).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                    label: (s % 4) as usize,
+                    t_gen: Instant::now(),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn spawn_node(m: TrainedModel) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("loopback bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let fp = m.fingerprint();
+    let handle = std::thread::spawn(move || {
+        serve_node(
+            listener,
+            pipeline_factory(engine(), m, 64),
+            fp,
+            NodeConfig::default(),
+            Some(1),
+        )
+        .expect("node serving");
+    });
+    (addr, handle)
+}
+
+/// One real HTTP GET against the stats endpoint; returns the body.
+fn scrape(addr: SocketAddr) -> String {
+    let mut conn = TcpStream::connect(addr).expect("connect stats endpoint");
+    write!(conn, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+    resp.split("\r\n\r\n").nth(1).expect("body").to_string()
+}
+
+/// The value on the exposition line whose first token is exactly
+/// `name` (None when the family has not been registered yet).
+fn metric(body: &str, name: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        let mut it = l.split_whitespace();
+        (it.next() == Some(name)).then(|| it.next().unwrap().parse().unwrap())
+    })
+}
+
+#[test]
+fn scrape_mid_serve_sees_counters_advance() {
+    let server = StatsServer::bind("127.0.0.1:0").unwrap();
+    let base = scrape(server.addr());
+    let base_frames = metric(&base, "node_frames_total").unwrap_or(0.0);
+    let base_results = metric(&base, "node_results_total").unwrap_or(0.0);
+    let base_sent = metric(&base, "gateway_frames_sent_total").unwrap_or(0.0);
+    let base_rtt = metric(&base, "gateway_wire_rtt_us_count").unwrap_or(0.0);
+
+    let m = model();
+    let (addr, node) = spawn_node(m.clone());
+    let mut lane = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+
+    // connected, nothing served yet: pre-registration means every
+    // required family is already scrapeable (at zero), and the live
+    // session is visible
+    let mid = scrape(server.addr());
+    for family in [
+        "node_sessions_live",
+        "node_sessions_total",
+        "node_busy_rejects_total",
+        "node_handshake_failures_total",
+        "node_frames_total",
+        "node_results_total",
+        "gateway_frames_sent_total",
+        "gateway_queue_depth",
+        "gateway_credit_stalls_total",
+        "gateway_reconnects_total",
+        "gateway_reroutes_total",
+        "gateway_wire_rtt_us_count",
+        "gateway_credit_stall_us_count",
+    ] {
+        assert!(
+            metric(&mid, family).is_some(),
+            "family '{family}' missing from mid-serve scrape:\n{mid}"
+        );
+    }
+    let live_before = metric(&mid, "node_sessions_live").unwrap();
+    assert!(live_before >= 1.0, "our session must be live: {live_before}");
+
+    for t in workload() {
+        assert!(lane.push(t));
+    }
+    lane.drain().unwrap();
+
+    // still serving (lane open), after the workload: counters advanced
+    let after = scrape(server.addr());
+    let d = |name: &str, base: f64| metric(&after, name).unwrap() - base;
+    assert!(d("node_frames_total", base_frames) >= FRAMES as f64);
+    assert!(d("node_results_total", base_results) >= (N_STREAMS * CLIPS_PER_STREAM) as f64);
+    assert!(d("gateway_frames_sent_total", base_sent) >= FRAMES as f64);
+    assert!(
+        d("gateway_wire_rtt_us_count", base_rtt) >= 1.0,
+        "the drain barrier is a measured wire round trip"
+    );
+    // node-side per-stage pipeline histograms fill on the same frames
+    assert!(metric(&after, "pipeline_queue_wait_us_count").unwrap() >= FRAMES as f64);
+    assert!(metric(&after, "pipeline_compute_us_count").unwrap() >= 1.0);
+
+    let (report, results) = lane.finish().unwrap();
+    node.join().unwrap();
+    assert_eq!(results.len(), (N_STREAMS * CLIPS_PER_STREAM) as usize);
+    assert_eq!(report.clips_classified, N_STREAMS * CLIPS_PER_STREAM);
+
+    // session over: the live gauge stepped back down
+    let done = scrape(server.addr());
+    assert_eq!(
+        metric(&done, "node_sessions_live").unwrap(),
+        live_before - 1.0
+    );
+    server.stop();
+}
+
+#[test]
+fn snapshot_jsonl_matches_the_documented_schema() {
+    // the exact line `--stats-every` emits, validated the same way the
+    // CI smoke step does: one JSON object, t_s number, metrics object
+    // with counters as numbers and histograms as percentile summaries
+    infilter::telemetry::registry()
+        .counter("telemetry_stats_test_total")
+        .add(3);
+    infilter::telemetry::registry()
+        .hist("telemetry_stats_test_us")
+        .record_us(250.0);
+    let line = snapshot_line(7.5);
+    assert!(!line.contains('\n'), "one object per line");
+    let j = Json::parse(&line).expect("snapshot line parses");
+    assert_eq!(j.get("t_s").as_f64(), Some(7.5));
+    let metrics = j.get("metrics");
+    assert!(metrics.as_obj().is_some());
+    assert!(metrics.get("telemetry_stats_test_total").as_f64().unwrap() >= 3.0);
+    let h = metrics.get("telemetry_stats_test_us");
+    for key in ["count", "mean_us", "p50_us", "p95_us", "p99_us", "max_us"] {
+        assert!(
+            h.get(key).as_f64().is_some(),
+            "histogram snapshot missing '{key}': {line}"
+        );
+    }
+}
