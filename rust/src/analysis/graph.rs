@@ -1,0 +1,358 @@
+//! The static dataflow walk over the fixed-point computation graph:
+//! input quantizer → MP band-pass rows → decimating low-pass → HWR +
+//! kernel accumulation → register read-out → standardisation → MP
+//! inference → margins. Fig. 8's bit-width axis, derived by proof
+//! instead of simulation.
+//!
+//! The walk mirrors [`crate::fixed::pipeline::FixedPipeline`] stage by
+//! stage, using the *actual* quantised coefficients and trained weights
+//! of the frozen pipeline (not just format ranges), and the proven
+//! behaviour of the shift-Newton solver in [`crate::fixed::mp_int`]:
+//!
+//! * every MP operand row `r` built from taps `h` and a W-bit window
+//!   `x` satisfies `r ∈ (H + X) ∪ -(H + X)` where `H` is the tap hull,
+//! * the iterate starts at `z0 = min(r) - 1 - (gamma >> flog2 n)` and
+//!   never exceeds `max(r)` (the shift step under-approximates the
+//!   Newton step toward a root `<= max(r)`, and a forced +1 step stops
+//!   at `ceil(root) <= max(r)`), so `z ∈ [R.lo - 1 - (gamma >> flog2 n),
+//!   R.hi]` for the operand interval `R`,
+//! * the residual is `sum(max(x - z, 0)) - gamma ∈ [-gamma,
+//!   n * (R.hi - z.lo)]` at every point of the accumulation,
+//! * a filter/head output differences two such iterates: `z+ - z-`.
+//!
+//! Each derivation step is a monotone interval transfer function from
+//! [`crate::analysis::interval`], so the resulting per-stage intervals
+//! are sound over-approximations of anything a concrete clip can
+//! produce — DESIGN.md §11 gives the full argument, and
+//! `tests/analysis_soundness.rs` checks dominance against traced runs.
+
+use crate::analysis::interval::Interval;
+use crate::analysis::report::{AnalysisReport, Provision, StageReport};
+use crate::fixed::mp_int::flog2;
+use crate::fixed::pipeline::FixedPipeline;
+use crate::fixed::q::CsdScale;
+use crate::fixed::trace;
+
+/// Interval of the shift-Newton MP iterate for operand interval `r`
+/// over `n` operands with margin `gamma`.
+fn mp_z_interval(r: Interval, n: usize, gamma: i64) -> Interval {
+    let gshift = i128::from(gamma >> flog2(n.max(1) as u32));
+    Interval::new(
+        r.lo.saturating_sub(1).saturating_sub(gshift),
+        r.hi.max(r.lo), // hull is non-empty; z converges below max(r)
+    )
+}
+
+/// Interval of the MP residual accumulator for operand interval `r`.
+fn mp_resid_interval(r: Interval, z: Interval, n: usize, gamma: i64) -> Interval {
+    let spread = r.hi.saturating_sub(z.lo).max(0);
+    Interval::new(
+        i128::from(gamma).saturating_neg().min(0),
+        spread.saturating_mul(n as i128),
+    )
+}
+
+/// Interval of the saturating CSD shift-add scaler applied to `x` —
+/// mirrors [`CsdScale::apply`] term by term (each term is a monotone
+/// shift of `x`; summing term intervals over-approximates the sum).
+fn csd_interval(cs: &CsdScale, x: Interval) -> Interval {
+    let mut acc = Interval::point(0);
+    for &(sh, neg) in &cs.terms {
+        let t = match sh.cmp(&0) {
+            std::cmp::Ordering::Greater => x.shr_round(sh.unsigned_abs().min(126)),
+            std::cmp::Ordering::Equal => x,
+            std::cmp::Ordering::Less => x.shl(sh.unsigned_abs().min(63)),
+        };
+        acc = acc.add(if neg { t.neg() } else { t });
+    }
+    acc
+}
+
+/// One MP filter evaluation (band-pass or low-pass): returns the
+/// `(row, z, resid, out)` intervals for taps hull `h` over signal
+/// interval `sig`, with `n = 2 * taps` operands per MP call.
+fn filter_intervals(
+    h: Interval,
+    sig: Interval,
+    taps: usize,
+    gamma: i64,
+) -> (Interval, Interval, Interval, Interval) {
+    let n = taps.saturating_mul(2);
+    // rows are [h + x, -(h + x)] and [h - x, -(h - x)]: the hull of both
+    // signs of both sums
+    let s = h.add(sig).union(h.sub(sig));
+    let row = s.union(s.neg());
+    let z = mp_z_interval(row, n, gamma);
+    let resid = mp_resid_interval(row, z, n, gamma);
+    let out = z.sub(z); // z+ - z-, both in the z interval
+    (row, z, resid, out)
+}
+
+/// Statically analyze a frozen pipeline processing clips of
+/// `clip_len` samples, against the register budget `prov`.
+pub fn analyze(pipe: &FixedPipeline, clip_len: usize, prov: &Provision) -> AnalysisReport {
+    let dp = pipe.dp_fmt;
+    let mut stages = Vec::new();
+
+    // -- stage 1: input quantizer (clamping register write)
+    let mut sig = Interval::of_format(dp);
+    stages.push(StageReport::new(
+        trace::INPUT.to_string(),
+        sig,
+        prov.w,
+        true,
+    ));
+
+    // -- stages 2-3: per-octave MP filtering, HWR + accumulation
+    let n_oct = pipe.plan.n_octaves;
+    let bt = pipe.plan.bp_taps;
+    let lt = pipe.plan.lp_taps;
+    let gamma = pipe.gamma_f_q;
+    let mut samples_at = clip_len as i128;
+    let mut acc_int: Vec<Interval> = Vec::with_capacity(n_oct);
+    for o in 0..n_oct {
+        // band-pass bank: hull over the octave's actual quantised taps
+        let mut h = Interval::point(0);
+        for taps in &pipe.bp_q[o] {
+            h = h.union(Interval::of_values(taps));
+        }
+        let (row, z, resid, out) = filter_intervals(h, sig, bt, gamma);
+        let n = bt.saturating_mul(2);
+        stages.push(StageReport::new(
+            trace::bp_key(o, "row"),
+            row,
+            prov.mp_operand(),
+            false,
+        ));
+        stages.push(StageReport::new(trace::bp_key(o, "z"), z, prov.mp_z(), false));
+        stages.push(StageReport::new(
+            trace::bp_key(o, "resid"),
+            resid,
+            prov.mp_resid(n),
+            false,
+        ));
+        stages.push(StageReport::new(trace::bp_key(o, "out"), out, prov.w, true));
+        // HWR + accumulate every sample of this octave's signal
+        let acc = out.clamp_to(dp).hwr().scale(samples_at);
+        stages.push(StageReport::new(
+            trace::acc_key(o),
+            acc,
+            prov.acc_bits,
+            false,
+        ));
+        acc_int.push(acc);
+        // anti-alias low pass + decimate feeds the next octave
+        if o.saturating_add(1) < n_oct {
+            let hl = Interval::of_values(&pipe.lp_q[o]);
+            let (row, z, resid, out) = filter_intervals(hl, sig, lt, gamma);
+            let n = lt.saturating_mul(2);
+            stages.push(StageReport::new(
+                trace::lp_key(o, "row"),
+                row,
+                prov.mp_operand(),
+                false,
+            ));
+            stages.push(StageReport::new(
+                trace::lp_key(o, "z"),
+                z,
+                prov.mp_z(),
+                false,
+            ));
+            stages.push(StageReport::new(
+                trace::lp_key(o, "resid"),
+                resid,
+                prov.mp_resid(n),
+                false,
+            ));
+            stages.push(StageReport::new(
+                trace::lp_key(o, "out"),
+                out,
+                prov.w,
+                true,
+            ));
+            sig = out.clamp_to(dp);
+            samples_at = (samples_at.saturating_add(1)) / 2;
+        }
+    }
+
+    // -- stages 4-5: kernel read-out, centring, CSD standardisation
+    let f_per = pipe.plan.filters_per_octave.max(1);
+    let mut readout: Option<Interval> = None;
+    let mut centred: Option<Interval> = None;
+    let mut feature: Option<Interval> = None;
+    for (p, &sh) in pipe.acc_shift.iter().enumerate() {
+        let o = (p / f_per).min(acc_int.len().saturating_sub(1));
+        let pre = acc_int[o].shr_floor(sh);
+        readout = Some(readout.map_or(pre, |r| r.union(pre)));
+        let c = pre
+            .clamp_to(dp)
+            .sub(Interval::point(i128::from(pipe.mu_q[p])));
+        centred = Some(centred.map_or(c, |r| r.union(c)));
+        let f = csd_interval(&pipe.inv_sigma[p], c);
+        feature = Some(feature.map_or(f, |r| r.union(f)));
+    }
+    let readout = readout.unwrap_or(Interval::point(0));
+    let centred = centred.unwrap_or(Interval::point(0));
+    let feature = feature.unwrap_or(Interval::point(0));
+    stages.push(StageReport::new(
+        trace::KERNEL_READOUT.to_string(),
+        readout,
+        prov.w,
+        true,
+    ));
+    stages.push(StageReport::new(
+        trace::STD_CENTRED.to_string(),
+        centred,
+        prov.centred(),
+        false,
+    ));
+    stages.push(StageReport::new(
+        trace::STD_FEATURE.to_string(),
+        feature,
+        prov.csd_internal(),
+        true,
+    ));
+
+    // -- stage 6: MP inference engine over the standardised features
+    if !pipe.wp_q.is_empty() {
+        let k = feature.clamp_to(pipe.k_fmt);
+        let n_bands = pipe.acc_shift.len();
+        let n_inf = n_bands.saturating_mul(2).saturating_add(1);
+        let mut row: Option<Interval> = None;
+        for c in 0..pipe.wp_q.len() {
+            let wp = Interval::of_values(&pipe.wp_q[c]);
+            let wm = Interval::of_values(&pipe.wm_q[c]);
+            // both the z+ row (wp + k, wm - k, bp) and z- row
+            // (wp - k, wm + k, bm)
+            let r = wp
+                .add(k)
+                .union(wp.sub(k))
+                .union(wm.add(k))
+                .union(wm.sub(k))
+                .union(Interval::point(i128::from(pipe.bp_bias_q[c])))
+                .union(Interval::point(i128::from(pipe.bm_bias_q[c])));
+            row = Some(row.map_or(r, |x| x.union(r)));
+        }
+        let row = row.unwrap_or(Interval::point(0));
+        let z = mp_z_interval(row, n_inf, pipe.gamma_1_q);
+        let resid = mp_resid_interval(row, z, n_inf, pipe.gamma_1_q);
+        let margin = z.sub(z);
+        stages.push(StageReport::new(
+            trace::inf_key("row"),
+            row,
+            prov.mp_operand(),
+            false,
+        ));
+        stages.push(StageReport::new(trace::inf_key("z"), z, prov.mp_z(), false));
+        stages.push(StageReport::new(
+            trace::inf_key("resid"),
+            resid,
+            prov.mp_resid(n_inf),
+            false,
+        ));
+        stages.push(StageReport::new(
+            trace::inf_key("margin"),
+            margin,
+            prov.margin(),
+            false,
+        ));
+    }
+
+    AnalysisReport {
+        bits: prov.w,
+        acc_bits: prov.acc_bits,
+        stages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::multirate::BandPlan;
+    use crate::fixed::pipeline::FixedConfig;
+    use crate::mp::machine::{Params, Standardizer};
+
+    fn dummy_pipe(bits: u32, n_octaves: usize) -> FixedPipeline {
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = n_octaves;
+        let nf = plan.n_filters();
+        let params = Params {
+            wp: vec![vec![0.5; nf], vec![-0.25; nf]],
+            wm: vec![vec![-0.5; nf], vec![0.25; nf]],
+            bp: vec![0.1, -0.1],
+            bm: vec![-0.1, 0.1],
+        };
+        let std = Standardizer {
+            mu: vec![10.0; nf],
+            sigma: vec![5.0; nf],
+        };
+        let phi = vec![vec![50.0f32; nf]; 3];
+        FixedPipeline::build(
+            &plan,
+            1.0,
+            4.0,
+            &params,
+            &std,
+            &phi,
+            FixedConfig::with_bits(bits),
+        )
+    }
+
+    #[test]
+    fn paper_budget_is_certified() {
+        let pipe = dummy_pipe(10, 6);
+        let prov = Provision::for_pipeline(&pipe, 24);
+        let rep = analyze(&pipe, 16_000, &prov);
+        assert!(
+            rep.certified(),
+            "paper budget should certify:\n{}",
+            rep.render()
+        );
+        // the kernel accumulator "just fits": 16000 * 511 < 2^23
+        let acc0 = rep.stage("acc[0]").expect("acc[0] stage");
+        assert_eq!(acc0.bits_needed, 24);
+    }
+
+    #[test]
+    fn shrunk_accumulator_fails_the_gate() {
+        let pipe = dummy_pipe(10, 6);
+        let prov = Provision::for_pipeline(&pipe, 16);
+        let rep = analyze(&pipe, 16_000, &prov);
+        assert!(!rep.certified());
+        assert!(rep
+            .overflows()
+            .iter()
+            .any(|s| s.name.starts_with("acc[")));
+    }
+
+    #[test]
+    fn stage_names_join_with_trace_keys() {
+        let pipe = dummy_pipe(8, 3);
+        let prov = Provision::for_pipeline(&pipe, 24);
+        let rep = analyze(&pipe, 2048, &prov);
+        for key in [
+            crate::fixed::trace::INPUT.to_string(),
+            crate::fixed::trace::bp_key(0, "row"),
+            crate::fixed::trace::bp_key(2, "out"),
+            crate::fixed::trace::lp_key(1, "z"),
+            crate::fixed::trace::acc_key(2),
+            crate::fixed::trace::KERNEL_READOUT.to_string(),
+            crate::fixed::trace::STD_CENTRED.to_string(),
+            crate::fixed::trace::STD_FEATURE.to_string(),
+            crate::fixed::trace::inf_key("margin"),
+        ] {
+            assert!(rep.stage(&key).is_some(), "missing stage {key}");
+        }
+        // last octave has no low-pass stage
+        assert!(rep.stage(&crate::fixed::trace::lp_key(2, "z")).is_none());
+    }
+
+    #[test]
+    fn deeper_octaves_accumulate_less() {
+        let pipe = dummy_pipe(10, 4);
+        let prov = Provision::for_pipeline(&pipe, 24);
+        let rep = analyze(&pipe, 16_000, &prov);
+        let need = |o: usize| rep.stage(&crate::fixed::trace::acc_key(o)).unwrap().bits_needed;
+        assert!(need(0) > need(3), "acc[0] {} vs acc[3] {}", need(0), need(3));
+    }
+}

@@ -1,0 +1,246 @@
+//! Saturating interval arithmetic over `i128` — the abstract domain of
+//! the bit-width prover.
+//!
+//! Every datapath value the fixed-point pipeline can produce is an i64;
+//! the analyzer tracks a closed interval `[lo, hi]` ⊇ the set of values a
+//! stage can take, in i128 so that no transfer function can itself wrap.
+//! All operations are *outer* approximations: if `x ∈ X` and `y ∈ Y`
+//! then `x op y ∈ X.op(Y)`. Operations saturate at the i128 range, which
+//! only ever widens an interval — widening is always sound (the report
+//! would then simply demand more bits than any register provides).
+
+use crate::fixed::q::QFormat;
+
+/// Closed integer interval `[lo, hi]` with `lo <= hi`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i128,
+    pub hi: i128,
+}
+
+impl Interval {
+    pub fn new(lo: i128, hi: i128) -> Interval {
+        assert!(lo <= hi, "interval [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+
+    /// The single-point interval `[v, v]`.
+    pub fn point(v: i128) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+
+    /// The full representable range of a W-bit register in format `f`.
+    pub fn of_format(f: QFormat) -> Interval {
+        Interval {
+            lo: i128::from(f.min_q()),
+            hi: i128::from(f.max_q()),
+        }
+    }
+
+    /// Tight hull of a non-empty set of concrete values (e.g. the actual
+    /// quantised filter taps or trained weights).
+    pub fn of_values(vs: &[i64]) -> Interval {
+        assert!(!vs.is_empty(), "of_values on empty slice");
+        let lo = vs.iter().copied().min().unwrap_or(0);
+        let hi = vs.iter().copied().max().unwrap_or(0);
+        Interval {
+            lo: i128::from(lo),
+            hi: i128::from(hi),
+        }
+    }
+
+    pub fn add(self, o: Interval) -> Interval {
+        Interval {
+            lo: self.lo.saturating_add(o.lo),
+            hi: self.hi.saturating_add(o.hi),
+        }
+    }
+
+    pub fn sub(self, o: Interval) -> Interval {
+        Interval {
+            lo: self.lo.saturating_sub(o.hi),
+            hi: self.hi.saturating_sub(o.lo),
+        }
+    }
+
+    pub fn neg(self) -> Interval {
+        Interval {
+            lo: self.hi.saturating_neg(),
+            hi: self.lo.saturating_neg(),
+        }
+    }
+
+    /// Smallest interval containing both operands (set union hull).
+    pub fn union(self, o: Interval) -> Interval {
+        Interval {
+            lo: self.lo.min(o.lo),
+            hi: self.hi.max(o.hi),
+        }
+    }
+
+    /// Half-wave rectification `max(x, 0)` — the HWR stage before the
+    /// kernel accumulator.
+    pub fn hwr(self) -> Interval {
+        Interval {
+            lo: self.lo.max(0),
+            hi: self.hi.max(0),
+        }
+    }
+
+    /// `n * x` for a non-negative repeat count (accumulating `x` at most
+    /// `n` times when `x >= 0`, or bounding a sum of `n` terms from `x`).
+    pub fn scale(self, n: i128) -> Interval {
+        assert!(n >= 0, "scale count {n}");
+        Interval {
+            lo: self.lo.saturating_mul(n),
+            hi: self.hi.saturating_mul(n),
+        }
+    }
+
+    /// Arithmetic right shift (floor division by 2^sh) — monotone, so it
+    /// maps endpoints to endpoints.
+    pub fn shr_floor(self, sh: u32) -> Interval {
+        let sh = sh.min(126);
+        Interval {
+            lo: self.lo >> sh,
+            hi: self.hi >> sh,
+        }
+    }
+
+    /// Round-to-nearest (half-up) right shift, matching
+    /// [`crate::fixed::q::CsdScale::apply`]: `(x + 2^(sh-1)) >> sh`.
+    /// Monotone in `x`.
+    pub fn shr_round(self, sh: u32) -> Interval {
+        if sh == 0 {
+            return self;
+        }
+        let sh = sh.min(126);
+        let half = 1i128 << (sh - 1);
+        Interval {
+            lo: self.lo.saturating_add(half) >> sh,
+            hi: self.hi.saturating_add(half) >> sh,
+        }
+    }
+
+    /// Left shift (multiplication by 2^sh), saturating.
+    pub fn shl(self, sh: u32) -> Interval {
+        let sh = sh.min(126);
+        let f = 1i128.checked_shl(sh).unwrap_or(i128::MAX);
+        self.scale_signed(f)
+    }
+
+    fn scale_signed(self, f: i128) -> Interval {
+        let a = self.lo.saturating_mul(f);
+        let b = self.hi.saturating_mul(f);
+        Interval {
+            lo: a.min(b),
+            hi: a.max(b),
+        }
+    }
+
+    /// Clamp into the representable range of `f` — the effect of a
+    /// saturating register write ([`QFormat::saturate`]).
+    pub fn clamp_to(self, f: QFormat) -> Interval {
+        let r = Interval::of_format(f);
+        Interval {
+            lo: self.lo.clamp(r.lo, r.hi),
+            hi: self.hi.clamp(r.lo, r.hi),
+        }
+    }
+
+    pub fn contains(self, v: i64) -> bool {
+        let v = i128::from(v);
+        self.lo <= v && v <= self.hi
+    }
+
+    pub fn contains_interval(self, o: Interval) -> bool {
+        self.lo <= o.lo && o.hi <= self.hi
+    }
+
+    /// Two's-complement bits needed to represent every value in the
+    /// interval: `max(bits_for(lo), bits_for(hi))`.
+    pub fn bits_needed(self) -> u32 {
+        bits_for(self.lo).max(bits_for(self.hi))
+    }
+}
+
+/// Minimum two's-complement width (sign bit included) that represents
+/// `v` exactly: 1 for {-1, 0}, 8 for 127 and -128, 9 for 128 and -129.
+pub fn bits_for(v: i128) -> u32 {
+    let magnitude = if v >= 0 { v as u128 } else { !v as u128 };
+    (128 - magnitude.leading_zeros()).saturating_add(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn bits_for_twos_complement_boundaries() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(-1), 1);
+        assert_eq!(bits_for(1), 2);
+        assert_eq!(bits_for(-2), 2);
+        assert_eq!(bits_for(127), 8);
+        assert_eq!(bits_for(128), 9);
+        assert_eq!(bits_for(-128), 8);
+        assert_eq!(bits_for(-129), 9);
+        assert_eq!(bits_for(511), 10);
+        assert_eq!(bits_for(-512), 10);
+        assert_eq!(bits_for(i128::from(i64::MAX)), 64);
+        assert_eq!(bits_for(i128::from(i64::MIN)), 64);
+    }
+
+    #[test]
+    fn format_interval_needs_exactly_w_bits() {
+        for bits in 2..=32u32 {
+            let f = QFormat::new(bits, 0);
+            assert_eq!(Interval::of_format(f).bits_needed(), bits);
+        }
+    }
+
+    #[test]
+    fn transfer_functions_are_outer_approximations() {
+        check("interval-soundness", 200, |g| {
+            let (a_lo, a_hi) = {
+                let x = g.int(-10_000, 10_000);
+                let y = g.int(-10_000, 10_000);
+                (x.min(y), x.max(y))
+            };
+            let (b_lo, b_hi) = {
+                let x = g.int(-10_000, 10_000);
+                let y = g.int(-10_000, 10_000);
+                (x.min(y), x.max(y))
+            };
+            let a = Interval::new(i128::from(a_lo), i128::from(a_hi));
+            let b = Interval::new(i128::from(b_lo), i128::from(b_hi));
+            // concrete members
+            let x = g.int(a_lo, a_hi);
+            let y = g.int(b_lo, b_hi);
+            assert!(a.add(b).contains(x + y));
+            assert!(a.sub(b).contains(x - y));
+            assert!(a.neg().contains(-x));
+            assert!(a.union(b).contains(x) && a.union(b).contains(y));
+            assert!(a.hwr().contains(x.max(0)));
+            let sh = g.usize(0, 8) as u32;
+            assert!(a.shr_floor(sh).contains(x >> sh));
+            assert!(a.shl(sh).contains(x << sh));
+            if sh > 0 {
+                assert!(a.shr_round(sh).contains((x + (1i64 << (sh - 1))) >> sh));
+            }
+            let f = QFormat::new(g.usize(2, 16) as u32, 0);
+            assert!(a.clamp_to(f).contains(f.saturate(x)));
+        });
+    }
+
+    #[test]
+    fn saturating_extremes_stay_ordered() {
+        let huge = Interval::new(i128::MIN / 2, i128::MAX / 2);
+        let s = huge.add(huge).scale(4);
+        assert!(s.lo <= s.hi);
+        assert_eq!(s.hi, i128::MAX);
+        assert_eq!(s.lo, i128::MIN);
+        assert_eq!(s.bits_needed(), 128);
+    }
+}

@@ -1,0 +1,25 @@
+//! Static bit-width prover for the multiplierless fixed-point datapath.
+//!
+//! Propagates worst-case value intervals through the frozen computation
+//! graph of a calibrated [`crate::fixed::FixedPipeline`] — input
+//! quantizer → MP band-pass banks → decimating low-pass chain → HWR
+//! accumulators → kernel read-out → standardisation → MP inference
+//! engine — using interval arithmetic over the actual trained
+//! coefficient/weight magnitudes, and reports per stage how many bits
+//! the worst case needs vs how many the hardware provisions.
+//!
+//! This derives the paper's Fig. 8 bit-width requirements by proof
+//! instead of simulation: `certified()` means *no* input clip of the
+//! given length can overflow a non-saturating register. Soundness of
+//! the MP-stage transfer functions rests on the iterate/residual bounds
+//! proven in [`crate::fixed::mp_int`] and is cross-checked empirically
+//! by `tests/analysis_soundness.rs` against the checked-arithmetic
+//! trace mode ([`crate::fixed::trace`]). See DESIGN.md §11.
+
+pub mod graph;
+pub mod interval;
+pub mod report;
+
+pub use graph::analyze;
+pub use interval::Interval;
+pub use report::{AnalysisReport, Provision, StageReport, StageStatus};

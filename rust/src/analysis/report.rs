@@ -1,0 +1,268 @@
+//! Per-stage verdicts of the bit-width prover and the provisioned
+//! register widths they are checked against.
+//!
+//! Every analyzed stage is either backed by a *saturating* register
+//! (a [`crate::fixed::q::QFormat::saturate`] write — it clips, by
+//! design, and can never wrap) or by plain binary arithmetic that
+//! **would wrap silently** if the proven interval outgrew the register.
+//! The CI gate therefore fails only on [`StageStatus::Overflow`] at a
+//! non-saturating stage; a saturating stage whose pre-clamp interval
+//! exceeds its width is reported as [`StageStatus::SaturatesByDesign`]
+//! with the margin, which is exactly the "saturation risk" column an
+//! FPGA designer reads off this table.
+
+use crate::analysis::interval::Interval;
+use crate::fixed::mp_int::clog2;
+use crate::fixed::pipeline::FixedPipeline;
+
+/// Verdict for one datapath stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageStatus {
+    /// Required bits <= provisioned bits: the stage can never overflow.
+    Proven,
+    /// The pre-clamp interval exceeds the register, but the register
+    /// write saturates: values clip (bounded error), they never wrap.
+    SaturatesByDesign,
+    /// The interval exceeds a register with wrap-around semantics:
+    /// a silent-corruption hazard. Fails the CI gate.
+    Overflow,
+}
+
+impl StageStatus {
+    pub fn label(self) -> &'static str {
+        match self {
+            StageStatus::Proven => "proven",
+            StageStatus::SaturatesByDesign => "sat-by-design",
+            StageStatus::Overflow => "OVERFLOW",
+        }
+    }
+}
+
+/// One row of the report: the proven worst-case interval of a stage and
+/// the width of the register that holds it.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    /// Stage key, identical to the [`crate::fixed::trace`] key for the
+    /// same site so the soundness harness can join the two.
+    pub name: String,
+    /// Proven worst-case interval (pre-clamp for saturating stages).
+    pub interval: Interval,
+    /// Minimal safe two's-complement width for `interval`.
+    pub bits_needed: u32,
+    /// Width actually provisioned for this stage.
+    pub bits_provisioned: u32,
+    /// Whether the stage's register write saturates (clips) rather than
+    /// wraps.
+    pub saturating: bool,
+    pub status: StageStatus,
+}
+
+impl StageReport {
+    pub fn new(
+        name: String,
+        interval: Interval,
+        bits_provisioned: u32,
+        saturating: bool,
+    ) -> StageReport {
+        let bits_needed = interval.bits_needed();
+        let status = if bits_needed <= bits_provisioned {
+            StageStatus::Proven
+        } else if saturating {
+            StageStatus::SaturatesByDesign
+        } else {
+            StageStatus::Overflow
+        };
+        StageReport {
+            name,
+            interval,
+            bits_needed,
+            bits_provisioned,
+            saturating,
+            status,
+        }
+    }
+}
+
+/// The provisioned register widths of the datapath, as functions of the
+/// datapath width W — the same closed-form budgets
+/// [`crate::fpga::resources`] prices and DESIGN.md derives:
+///
+/// * MP operand rows and the z register live on the W+2-bit subtract
+///   datapath (row values reach +/-2^W when both addends sit at the
+///   format rails, and z0 undershoots min(xs) by 1 + (gamma >> flog2 n)),
+/// * the MP residual accumulator sums up to n operand-minus-z terms,
+///   each < 2^(W+2), hence (W+1) + clog2(n) + 2 bits,
+/// * a filter/head margin z+ - z- spans twice the z range: W+3 bits,
+/// * the centred kernel subtract k_raw - mu needs W+1 bits,
+/// * the CSD scaler's internal accumulator is budgeted at 2W bits and
+///   saturates (see [`crate::fixed::q::CsdScale::apply`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Provision {
+    /// Datapath width W (samples, taps, filter outputs, features).
+    pub w: u32,
+    /// Kernel accumulator width (RegBank5/6; paper FPGA: 24).
+    pub acc_bits: u32,
+}
+
+impl Provision {
+    pub fn for_pipeline(pipe: &FixedPipeline, acc_bits: u32) -> Provision {
+        Provision {
+            w: pipe.cfg.bits,
+            acc_bits,
+        }
+    }
+
+    /// MP operand-row width (consumed by the x - z subtractor).
+    pub fn mp_operand(&self) -> u32 {
+        self.w.saturating_add(2)
+    }
+
+    /// MP z-register width.
+    pub fn mp_z(&self) -> u32 {
+        self.w.saturating_add(2)
+    }
+
+    /// MP residual-accumulator width for an n-operand evaluation.
+    pub fn mp_resid(&self, n: usize) -> u32 {
+        self.w
+            .saturating_add(1)
+            .saturating_add(clog2(n.max(1) as u32))
+            .saturating_add(2)
+    }
+
+    /// Margin (z+ - z-) width.
+    pub fn margin(&self) -> u32 {
+        self.w.saturating_add(3)
+    }
+
+    /// Centred kernel subtract (k_raw - mu) width.
+    pub fn centred(&self) -> u32 {
+        self.w.saturating_add(1)
+    }
+
+    /// CSD scaler internal accumulator width (saturating).
+    pub fn csd_internal(&self) -> u32 {
+        self.w.saturating_mul(2)
+    }
+}
+
+/// The full per-stage certification table for one pipeline build.
+#[derive(Clone, Debug)]
+pub struct AnalysisReport {
+    /// Datapath width W the pipeline was built with.
+    pub bits: u32,
+    /// Provisioned kernel-accumulator width.
+    pub acc_bits: u32,
+    pub stages: Vec<StageReport>,
+}
+
+impl AnalysisReport {
+    /// True iff no non-saturating stage can overflow: the configuration
+    /// is statically certified.
+    pub fn certified(&self) -> bool {
+        !self
+            .stages
+            .iter()
+            .any(|s| s.status == StageStatus::Overflow)
+    }
+
+    pub fn overflows(&self) -> Vec<&StageReport> {
+        self.stages
+            .iter()
+            .filter(|s| s.status == StageStatus::Overflow)
+            .collect()
+    }
+
+    /// Stage lookup by exact name.
+    pub fn stage(&self, name: &str) -> Option<&StageReport> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+
+    /// Worst (largest) bits_needed - bits_provisioned deficit over the
+    /// non-saturating stages; negative means headroom everywhere.
+    pub fn worst_deficit(&self) -> i64 {
+        self.stages
+            .iter()
+            .filter(|s| !s.saturating)
+            .map(|s| i64::from(s.bits_needed) - i64::from(s.bits_provisioned))
+            .max()
+            .unwrap_or(i64::MIN)
+    }
+
+    /// Plain-text table (fixed-width columns, one stage per row).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "static bit-width analysis: W = {} bits, accumulator = {} bits\n",
+            self.bits, self.acc_bits
+        ));
+        out.push_str(&format!(
+            "{:<18} {:>24} {:>6} {:>6}  {:<8} {}\n",
+            "stage", "proven range", "need", "prov", "reg", "status"
+        ));
+        for s in &self.stages {
+            out.push_str(&format!(
+                "{:<18} {:>24} {:>6} {:>6}  {:<8} {}\n",
+                s.name,
+                format!("[{}, {}]", s.interval.lo, s.interval.hi),
+                s.bits_needed,
+                s.bits_provisioned,
+                if s.saturating { "sat" } else { "wrap" },
+                s.status.label()
+            ));
+        }
+        let verdict = if self.certified() {
+            "CERTIFIED: no non-saturating stage can overflow".to_string()
+        } else {
+            let names: Vec<&str> = self
+                .overflows()
+                .iter()
+                .map(|s| s.name.as_str())
+                .collect();
+            format!("NOT CERTIFIED: possible overflow at {}", names.join(", "))
+        };
+        out.push_str(&verdict);
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_assignment_rules() {
+        let i = Interval::new(-2048, 2047); // needs 12 bits
+        let ok = StageReport::new("a".into(), i, 12, false);
+        assert_eq!(ok.status, StageStatus::Proven);
+        let sat = StageReport::new("b".into(), i, 10, true);
+        assert_eq!(sat.status, StageStatus::SaturatesByDesign);
+        let bad = StageReport::new("c".into(), i, 11, false);
+        assert_eq!(bad.status, StageStatus::Overflow);
+    }
+
+    #[test]
+    fn certification_requires_no_wrap_overflow() {
+        let i = Interval::new(0, 1023); // needs 11 bits
+        let r = AnalysisReport {
+            bits: 10,
+            acc_bits: 24,
+            stages: vec![
+                StageReport::new("x".into(), i, 11, false),
+                StageReport::new("y".into(), i, 4, true),
+            ],
+        };
+        assert!(r.certified());
+        assert!(r.render().contains("CERTIFIED"));
+        let bad = AnalysisReport {
+            bits: 10,
+            acc_bits: 24,
+            stages: vec![StageReport::new("x".into(), i, 10, false)],
+        };
+        assert!(!bad.certified());
+        assert_eq!(bad.overflows().len(), 1);
+        assert!(bad.render().contains("NOT CERTIFIED"));
+        assert!(bad.worst_deficit() >= 1);
+    }
+}

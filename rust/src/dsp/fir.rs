@@ -53,6 +53,19 @@ pub fn bandpass(f1: f64, f2: f64, taps: usize, window: Window) -> Vec<f64> {
     h
 }
 
+/// Largest coefficient magnitude — the quantity fixed-point calibration
+/// and the static bit-width analyzer size coefficient formats from.
+pub fn max_abs(h: &[f64]) -> f64 {
+    h.iter().fold(0.0f64, |a, &b| a.max(b.abs()))
+}
+
+/// L1 norm of the taps — the classical worst-case FIR output bound
+/// (|y| <= ||h||_1 * max|x|), quoted in the analyzer report docs as the
+/// conventional-datapath analogue of the MP interval bound.
+pub fn l1_norm(h: &[f64]) -> f64 {
+    h.iter().fold(0.0f64, |a, &b| a + b.abs())
+}
+
 /// |H(f)| at frequency f (cycles/sample) by direct evaluation.
 pub fn magnitude_at(h: &[f64], f: f64) -> f64 {
     let (mut re, mut im) = (0.0f64, 0.0f64);
@@ -151,6 +164,18 @@ mod tests {
         let pass = magnitude_at(&h, 0.275);
         let stop = magnitude_at(&h, 0.05);
         assert!(pass > 3.0 * stop, "pass {pass} stop {stop}");
+    }
+
+    #[test]
+    fn max_abs_and_l1_norm() {
+        let h = [0.5, -0.75, 0.25];
+        assert!((max_abs(&h) - 0.75).abs() < 1e-15);
+        assert!((l1_norm(&h) - 1.5).abs() < 1e-15);
+        assert_eq!(max_abs(&[]), 0.0);
+        assert_eq!(l1_norm(&[]), 0.0);
+        // l1 always dominates max
+        let g = lowpass(0.12, 33, Window::Hamming);
+        assert!(l1_norm(&g) >= max_abs(&g));
     }
 
     #[test]

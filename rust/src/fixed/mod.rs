@@ -8,6 +8,8 @@
 pub mod mp_int;
 pub mod pipeline;
 pub mod q;
+pub mod trace;
 
 pub use pipeline::{FixedConfig, FixedPipeline};
 pub use q::QFormat;
+pub use trace::RangeTrace;

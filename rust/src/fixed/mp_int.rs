@@ -7,23 +7,66 @@
 //! Newton step, the iterate stays on the f(z) >= 0 side and converges
 //! monotonically, one LSB of overshoot at most (we force a +1 step when
 //! the shift underflows to zero so progress is guaranteed).
+//!
+//! Proven value bounds (the invariants `crate::analysis` builds on, see
+//! DESIGN.md §11): for operands `xs ⊆ [R.lo, R.hi]` and `gamma >= 0`,
+//!
+//! * the iterate satisfies `z ∈ [R.lo - 1 - (gamma >> flog2 n), R.hi]`
+//!   at every step — the start point is the lower bound, shift steps
+//!   under-approximate Newton toward a root `<= max(xs)`, and a forced
+//!   +1 step (taken only while `resid > 0`, i.e. strictly left of the
+//!   root) stops at `ceil(root) <= max(xs)`,
+//! * the residual accumulator satisfies
+//!   `resid ∈ [-gamma, n * (R.hi - z.lo)]` at every point,
+//! * on convergence z is the smallest integer with `resid(z) <= 0`,
+//!   i.e. within one LSB above the exact rational MP solution.
+//!
+//! [`MpObserver`] exposes every operand, iterate and residual value to
+//! the checked-arithmetic trace mode without costing the production
+//! path anything (the no-op observer monomorphises away).
+#![deny(clippy::arithmetic_side_effects)]
 
 /// ceil(log2(n)) for n >= 1 — a priority encoder in hardware.
+/// Returns 0 for the (asserted-against) n = 0 instead of underflowing.
 pub fn clog2(n: u32) -> u32 {
     debug_assert!(n >= 1);
-    32 - (n - 1).leading_zeros()
+    32u32.saturating_sub(n.saturating_sub(1).leading_zeros())
 }
 
 /// floor(log2(n)) for n >= 1.
+/// Returns 0 for the (asserted-against) n = 0 instead of underflowing.
 pub fn flog2(n: u32) -> u32 {
     debug_assert!(n >= 1);
-    31 - n.leading_zeros()
+    31u32.saturating_sub(n.leading_zeros())
 }
+
+/// Observation hooks for the checked-arithmetic debug mode: every MP
+/// operand, every iterate value and every residual value pass through
+/// here. The default methods are no-ops; [`NoObs`] monomorphises the
+/// production path back to the plain loop.
+pub trait MpObserver {
+    fn operand(&mut self, _x: i64) {}
+    fn z(&mut self, _z: i64) {}
+    fn resid(&mut self, _r: i64) {}
+}
+
+/// The no-op observer (production path).
+pub struct NoObs;
+
+impl MpObserver for NoObs {}
 
 /// z = MP(xs, gamma) over i64 fixed-point values (shared format).
 /// `iters` bounds the loop (hardware runs a fixed schedule); returns on
 /// early convergence (resid <= 0 can only be reached at the solution).
 pub fn mp_int(xs: &[i64], gamma: i64, iters: usize) -> i64 {
+    mp_int_with(xs, gamma, iters, &mut NoObs)
+}
+
+/// [`mp_int`] with observation hooks. Arithmetic is explicitly
+/// saturating: the analyzer proves the paper configurations never get
+/// near the i64 rails, but adversarial operands (|x| ~ i64::MAX) must
+/// degrade to clamped values rather than UB/wrap.
+pub fn mp_int_with<O: MpObserver>(xs: &[i64], gamma: i64, iters: usize, obs: &mut O) -> i64 {
     debug_assert!(!xs.is_empty());
     debug_assert!(gamma >= 0);
     let n = xs.len() as u32;
@@ -33,23 +76,34 @@ pub fn mp_int(xs: &[i64], gamma: i64, iters: usize) -> i64 {
     // (A plain (sum-gamma) >> clog2(n) start is WRONG for sum < gamma:
     // shifting a negative value by clog2 divides by 2^ceil > n, which
     // moves the start toward zero — to the right of the root.)
-    let min = xs.iter().copied().min().unwrap();
-    let mut z = min - 1 - (gamma >> flog2(n));
+    let mut min = i64::MAX;
+    for &x in xs {
+        obs.operand(x);
+        min = min.min(x);
+    }
+    // flog2 <= 31 < 64, so the masked shift equals the plain shift
+    let mut z = min
+        .saturating_sub(1)
+        .saturating_sub(gamma.wrapping_shr(flog2(n.max(1))));
+    obs.z(z);
     for _ in 0..iters {
-        let mut resid = -gamma;
+        let mut resid = gamma.saturating_neg();
         let mut count = 0u32;
         for &x in xs {
-            let d = x - z;
+            let d = x.saturating_sub(z);
             if d > 0 {
-                resid += d;
-                count += 1;
+                resid = resid.saturating_add(d);
+                count = count.saturating_add(1);
             }
         }
+        obs.resid(resid);
         if resid <= 0 {
             break;
         }
-        let step = resid >> clog2(count.max(1));
-        z += step.max(1); // guarantee progress at LSB granularity
+        // clog2 <= 32 < 64: masked shift equals the plain shift
+        let step = resid.wrapping_shr(clog2(count.max(1)));
+        z = z.saturating_add(step.max(1)); // guarantee progress at LSB granularity
+        obs.z(z);
     }
     z
 }
@@ -59,7 +113,8 @@ pub fn mp_int(xs: &[i64], gamma: i64, iters: usize) -> i64 {
 /// (empirically <= 14 on 20k random cases; the margin is cheap since the
 /// loop early-exits at resid <= 0).
 pub fn default_iters(n: usize, bits: u32) -> usize {
-    (bits + clog2(n as u32) + 8) as usize
+    bits.saturating_add(clog2(n.min(u32::MAX as usize) as u32))
+        .saturating_add(8) as usize
 }
 
 /// Integer MP FIR step (paper eq. 9) on quantised window + coefficients:
@@ -72,23 +127,38 @@ pub fn mp_fir_step(
     iters: usize,
     scratch: &mut [i64],
 ) -> i64 {
+    mp_fir_step_with(h, window, gamma, iters, scratch, &mut NoObs)
+}
+
+/// [`mp_fir_step`] with observation hooks (shared by both MP calls).
+pub fn mp_fir_step_with<O: MpObserver>(
+    h: &[i64],
+    window: &[i64],
+    gamma: i64,
+    iters: usize,
+    scratch: &mut [i64],
+    obs: &mut O,
+) -> i64 {
     let m = h.len();
     debug_assert_eq!(window.len(), m);
-    debug_assert_eq!(scratch.len(), 2 * m);
-    for k in 0..m {
-        scratch[k] = h[k] + window[k];
-        scratch[m + k] = -h[k] - window[k];
+    debug_assert_eq!(scratch.len(), m.saturating_mul(2));
+    let (pos, neg) = scratch.split_at_mut(m);
+    for ((p, q), (&hk, &wk)) in pos.iter_mut().zip(neg.iter_mut()).zip(h.iter().zip(window)) {
+        *p = hk.saturating_add(wk);
+        *q = (*p).saturating_neg();
     }
-    let zp = mp_int(scratch, gamma, iters);
-    for k in 0..m {
-        scratch[k] = h[k] - window[k];
-        scratch[m + k] = -h[k] + window[k];
+    let zp = mp_int_with(scratch, gamma, iters, obs);
+    let (pos, neg) = scratch.split_at_mut(m);
+    for ((p, q), (&hk, &wk)) in pos.iter_mut().zip(neg.iter_mut()).zip(h.iter().zip(window)) {
+        *p = hk.saturating_sub(wk);
+        *q = (*p).saturating_neg();
     }
-    let zm = mp_int(scratch, gamma, iters);
-    zp - zm
+    let zm = mp_int_with(scratch, gamma, iters, obs);
+    zp.saturating_sub(zm)
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::fixed::q::QFormat;
@@ -102,6 +172,70 @@ mod tests {
         assert_eq!(clog2(3), 2);
         assert_eq!(clog2(32), 5);
         assert_eq!(clog2(33), 6);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // 2^20 iterations: minutes under the interpreter
+    fn clog2_flog2_agree_with_naive_log_up_to_2_pow_20() {
+        // exhaustive against the integer-exact naive definitions:
+        // clog2(n) = smallest c with 2^c >= n,
+        // flog2(n) = largest f with 2^f <= n.
+        let mut naive_c = 0u32;
+        let mut naive_f = 0u32;
+        for n in 1u32..=(1 << 20) {
+            while (1u64 << naive_c) < u64::from(n) {
+                naive_c += 1;
+            }
+            while (1u64 << (naive_f + 1)) <= u64::from(n) {
+                naive_f += 1;
+            }
+            assert_eq!(clog2(n), naive_c, "clog2({n})");
+            assert_eq!(flog2(n), naive_f, "flog2({n})");
+        }
+    }
+
+    /// Exact rational MP solution z* = (sum of active xs - gamma) / k as
+    /// a (numerator, denominator) pair: scan the sorted operands for the
+    /// active-set size k where z* is consistent (water-filling).
+    fn exact_mp_rational(xs: &[i64], gamma: i64) -> (i128, i128) {
+        let mut s: Vec<i128> = xs.iter().map(|&x| i128::from(x)).collect();
+        s.sort_unstable_by(|a, b| b.cmp(a)); // descending
+        let n = s.len();
+        let mut prefix = 0i128;
+        for k in 1..=n {
+            prefix += s[k - 1];
+            let num = prefix - i128::from(gamma);
+            // consistent iff the first excluded operand is inactive:
+            // s[k] <= z* = num / k
+            if k == n || (k as i128) * s[k] <= num {
+                return (num, k as i128);
+            }
+        }
+        unreachable!("water-filling always terminates at k = n");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // 120 proptest cases x 200 iters: too slow for Miri
+    fn mp_int_within_one_lsb_of_exact_solution() {
+        // the tentpole soundness anchor: across random QFormats, operand
+        // counts and magnitudes, the shift-Newton iterate lands on the
+        // smallest integer at or above the exact rational MP solution:
+        // 0 <= k*z - (sum_active - gamma) <= k, i.e. within one LSB.
+        check("mpint-exact", 120, |g| {
+            let n = g.usize(1, 48);
+            let bits = g.usize(6, 20) as u32;
+            let fmt = QFormat::new(bits, g.usize(0, bits as usize - 1) as i32);
+            let lim = fmt.max_q().min(1 << 20);
+            let xs: Vec<i64> = (0..n).map(|_| g.int(-lim, lim)).collect();
+            let gamma = g.int(1, lim.max(2));
+            let z = mp_int(&xs, gamma, 200);
+            let (num, k) = exact_mp_rational(&xs, gamma);
+            let err = k * i128::from(z) - num;
+            assert!(
+                (0..=k).contains(&err),
+                "z {z} not within one LSB of {num}/{k} (err {err}, xs {xs:?}, gamma {gamma})"
+            );
+        });
     }
 
     #[test]
@@ -136,6 +270,67 @@ mod tests {
     }
 
     #[test]
+    fn observer_values_stay_in_proven_bounds() {
+        // the mp_int value bounds the static analyzer assumes, checked
+        // directly on the observer stream for random inputs
+        struct Hull {
+            z: (i64, i64),
+            resid: (i64, i64),
+        }
+        impl MpObserver for Hull {
+            fn z(&mut self, z: i64) {
+                self.z = (self.z.0.min(z), self.z.1.max(z));
+            }
+            fn resid(&mut self, r: i64) {
+                self.resid = (self.resid.0.min(r), self.resid.1.max(r));
+            }
+        }
+        check("mpint-bounds", 100, |g| {
+            let n = g.usize(1, 40);
+            let xs: Vec<i64> = (0..n).map(|_| g.int(-100_000, 100_000)).collect();
+            let gamma = g.int(0, 50_000);
+            let mut hull = Hull {
+                z: (i64::MAX, i64::MIN),
+                resid: (i64::MAX, i64::MIN),
+            };
+            mp_int_with(&xs, gamma, 200, &mut hull);
+            let lo = *xs.iter().min().unwrap();
+            let hi = *xs.iter().max().unwrap();
+            let z_lo = lo - 1 - (gamma >> flog2(n as u32));
+            assert!(hull.z.0 >= z_lo, "z {} below bound {z_lo}", hull.z.0);
+            assert!(hull.z.1 <= hi, "z {} above max {hi}", hull.z.1);
+            assert!(hull.resid.0 >= -gamma, "resid {} below -gamma", hull.resid.0);
+            let resid_hi = (n as i64) * (hi - z_lo);
+            assert!(
+                hull.resid.1 <= resid_hi,
+                "resid {} above bound {resid_hi}",
+                hull.resid.1
+            );
+        });
+    }
+
+    #[test]
+    fn observed_path_is_bit_identical_to_plain_path() {
+        struct Count(u64);
+        impl MpObserver for Count {
+            fn operand(&mut self, _x: i64) {
+                self.0 += 1;
+            }
+        }
+        check("mpint-obs-parity", 40, |g| {
+            let n = g.usize(1, 32);
+            let xs: Vec<i64> = (0..n).map(|_| g.int(-5000, 5000)).collect();
+            let gamma = g.int(0, 3000);
+            let mut c = Count(0);
+            assert_eq!(
+                mp_int(&xs, gamma, 50),
+                mp_int_with(&xs, gamma, 50, &mut c)
+            );
+            assert_eq!(c.0, n as u64);
+        });
+    }
+
+    #[test]
     fn exact_on_simple_cases() {
         // all equal: z = x - gamma/n exactly when divisible
         let xs = vec![1000i64; 8];
@@ -150,6 +345,18 @@ mod tests {
         // at max); allow a couple of LSBs
         let z = mp_int(&xs, 0, 64);
         assert!((z - 100).abs() <= 2, "z {z}");
+    }
+
+    #[test]
+    fn extreme_operands_saturate_instead_of_wrapping() {
+        // adversarial magnitudes: the hardened loop must stay ordered
+        // and finite instead of overflowing in debug builds
+        let xs = vec![i64::MAX, i64::MIN, 0, 17];
+        let z = mp_int(&xs, i64::MAX, 64);
+        assert!(z <= i64::MAX && z >= i64::MIN);
+        let xs2 = vec![i64::MAX; 8];
+        let z2 = mp_int(&xs2, 1, 64);
+        assert!(z2 <= i64::MAX && z2 > i64::MAX - 16);
     }
 
     #[test]

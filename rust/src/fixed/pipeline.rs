@@ -9,12 +9,21 @@
 //!   3. HWR + wide accumulation over the clip (RegBank5/6 analogue),
 //!   4. kernel = upper W bits of the accumulator (paper: "the upper 10
 //!      bits of the kernel function are used for inference engine"),
+//!      saturated into the datapath format on read-out,
 //!   5. standardisation with mu subtraction and a 3-term CSD shift-add
 //!      scale for 1/sigma (multiplierless; see q::CsdScale),
 //!   6. integer MP inference engine (eqs. 3-7) on W-bit weights.
+//!
+//! Every `*_traced` entry point re-runs the identical datapath while
+//! recording per-stage value ranges and saturation counts into a
+//! [`RangeTrace`] — the checked-arithmetic debug mode that
+//! `tests/analysis_soundness.rs` joins against the static bounds of
+//! [`crate::analysis`]. Stage keys come from [`crate::fixed::trace`].
+#![deny(clippy::arithmetic_side_effects)]
 
-use super::mp_int::{self, clog2};
+use super::mp_int::{self, clog2, MpObserver};
 use super::q::{CsdScale, QFormat};
+use super::trace::{self, RangeTrace};
 use crate::dsp::multirate::BandPlan;
 use crate::mp::machine::{Params, Standardizer};
 
@@ -40,29 +49,54 @@ impl FixedConfig {
 
 /// Frozen, calibrated fixed-point pipeline (immutable after build; safe
 /// to share across threads for batched evaluation).
+///
+/// Fields are `pub(crate)` so the static analyzer ([`crate::analysis`])
+/// can read the frozen coefficients/weights it proves bounds over.
 pub struct FixedPipeline {
     pub cfg: FixedConfig,
-    plan: BandPlan,
+    pub(crate) plan: BandPlan,
     /// shared sample/coefficient/filter-output format
-    dp_fmt: QFormat,
-    bp_q: Vec<Vec<Vec<i64>>>, // [octave][filter][tap]
-    lp_q: Vec<Vec<i64>>,      // [transition][tap]
-    gamma_f_q: i64,
+    pub(crate) dp_fmt: QFormat,
+    pub(crate) bp_q: Vec<Vec<Vec<i64>>>, // [octave][filter][tap]
+    pub(crate) lp_q: Vec<Vec<i64>>,      // [transition][tap]
+    pub(crate) gamma_f_q: i64,
     /// per-band accumulator right-shift to form the W-bit kernel.
     /// Per-band (not global): octave o accumulates over 2^o fewer
     /// samples, so a single global shift would squash the low octaves
     /// to a couple of bits — in hardware this is a per-band barrel
     /// shift setting calibrated at training time.
-    acc_shift: Vec<u32>,
-    mu_q: Vec<i64>,          // in post-shift kernel domain, per band
-    inv_sigma: Vec<CsdScale>,
+    pub(crate) acc_shift: Vec<u32>,
+    pub(crate) mu_q: Vec<i64>, // in post-shift kernel domain, per band
+    pub(crate) inv_sigma: Vec<CsdScale>,
     /// standardised-feature / weight / bias / gamma_1 format
-    k_fmt: QFormat,
-    wp_q: Vec<Vec<i64>>,
-    wm_q: Vec<Vec<i64>>,
-    bp_bias_q: Vec<i64>,
-    bm_bias_q: Vec<i64>,
-    gamma_1_q: i64,
+    pub(crate) k_fmt: QFormat,
+    pub(crate) wp_q: Vec<Vec<i64>>,
+    pub(crate) wm_q: Vec<Vec<i64>>,
+    pub(crate) bp_bias_q: Vec<i64>,
+    pub(crate) bm_bias_q: Vec<i64>,
+    pub(crate) gamma_1_q: i64,
+}
+
+/// MP observer wiring one filter/inference site into a [`RangeTrace`].
+struct StageObs<'a> {
+    tr: &'a mut RangeTrace,
+    row: &'a str,
+    z: &'a str,
+    resid: &'a str,
+}
+
+impl MpObserver for StageObs<'_> {
+    fn operand(&mut self, x: i64) {
+        self.tr.observe(self.row, x);
+    }
+
+    fn z(&mut self, z: i64) {
+        self.tr.observe(self.z, z);
+    }
+
+    fn resid(&mut self, r: i64) {
+        self.tr.observe(self.resid, r);
+    }
 }
 
 impl FixedPipeline {
@@ -87,9 +121,9 @@ impl FixedPipeline {
         let coeff_max = bp_f
             .iter()
             .flatten()
-            .flatten()
-            .chain(lp_f.iter().flatten())
-            .fold(0.0f64, |a, &b| a.max(b.abs()));
+            .map(|h| crate::dsp::fir::max_abs(h))
+            .chain(lp_f.iter().map(|h| crate::dsp::fir::max_abs(h)))
+            .fold(0.0f64, f64::max);
         let dp_fmt = QFormat::calibrate(w, coeff_max.max(1.0));
         let bp_q = bp_f
             .iter()
@@ -116,8 +150,8 @@ impl FixedPipeline {
                 .map(|row| f64::from(row[p]).abs())
                 .fold(1e-9f64, f64::max);
             let max_acc_q = max_acc_f * 2f64.powi(dp_fmt.frac);
-            let need_bits = clog2((max_acc_q as u32).max(1) + 1);
-            acc_shift.push(need_bits.saturating_sub(w - 1));
+            let need_bits = clog2((max_acc_q as u32).max(1).saturating_add(1));
+            acc_shift.push(need_bits.saturating_sub(w.saturating_sub(1)));
         }
 
         // ---- standardisation in the per-band shifted kernel domain
@@ -125,11 +159,10 @@ impl FixedPipeline {
         let mut mu_q = Vec::with_capacity(n_bands);
         let mut inv_sigma = Vec::with_capacity(n_bands);
         for p in 0..n_bands {
-            let acc_to_shifted =
-                2f64.powi(dp_fmt.frac) / 2f64.powi(acc_shift[p] as i32);
+            let acc_to_shifted = 2f64.powi(dp_fmt.frac) / 2f64.powi(acc_shift[p] as i32);
             mu_q.push((f64::from(std.mu[p]) * acc_to_shifted).round() as i64);
-            let c = 2f64.powi(k_fmt.frac)
-                / (f64::from(std.sigma[p]).max(1e-6) * acc_to_shifted);
+            let c =
+                2f64.powi(k_fmt.frac) / (f64::from(std.sigma[p]).max(1e-6) * acc_to_shifted);
             inv_sigma.push(CsdScale::approximate(c, cfg.csd_terms));
         }
 
@@ -166,16 +199,45 @@ impl FixedPipeline {
 
     /// Integer MP filter-bank features: raw accumulators per band.
     pub fn accumulate(&self, clip: &[f32]) -> Vec<i64> {
+        self.accumulate_inner(clip, None)
+    }
+
+    /// [`FixedPipeline::accumulate`] in checked-arithmetic debug mode:
+    /// bit-identical result, plus per-stage observations in `tr`.
+    pub fn accumulate_traced(&self, clip: &[f32], tr: &mut RangeTrace) -> Vec<i64> {
+        self.accumulate_inner(clip, Some(tr))
+    }
+
+    // Index arithmetic (window shifts, band addressing `o * f + i`,
+    // scratch slicing `2 * taps`) is structurally bounded by the plan
+    // geometry checked at build time; value arithmetic goes through
+    // saturating ops / mp_int. Accumulator growth is bounded by the
+    // static analyzer (clip_len * max_q << i64::MAX).
+    #[allow(clippy::arithmetic_side_effects)]
+    fn accumulate_inner(&self, clip: &[f32], mut trace: Option<&mut RangeTrace>) -> Vec<i64> {
         let n_oct = self.plan.n_octaves;
         let f = self.plan.filters_per_octave;
         let bt = self.plan.bp_taps;
         let lt = self.plan.lp_taps;
         let iters = self.cfg.mp_iters;
         let mut acc = vec![0i64; n_oct * f];
-        let mut sig: Vec<i64> = clip.iter().map(|&x| self.dp_fmt.quantize_f32(x)).collect();
+        let mut sig: Vec<i64> = clip
+            .iter()
+            .map(|&x| self.dp_fmt.quantize_f32(x))
+            .collect();
+        if let Some(tr) = trace.as_deref_mut() {
+            for &s in &sig {
+                tr.observe(trace::INPUT, s);
+            }
+        }
         let mut scratch = vec![0i64; 2 * bt.max(lt)];
         let mut window = vec![0i64; bt.max(lt)];
         for o in 0..n_oct {
+            let bp_row = trace::bp_key(o, "row");
+            let bp_z = trace::bp_key(o, "z");
+            let bp_resid = trace::bp_key(o, "resid");
+            let bp_out = trace::bp_key(o, "out");
+            let acc_k = trace::acc_key(o);
             // band-pass bank: all filters share the input window
             for (i, h) in self.bp_q[o].iter().enumerate() {
                 window.iter_mut().for_each(|x| *x = 0);
@@ -185,21 +247,50 @@ impl FixedPipeline {
                         window[k] = window[k - 1];
                     }
                     window[0] = sig[t];
-                    let y = mp_int::mp_fir_step(
-                        h,
-                        &window[..bt],
-                        self.gamma_f_q,
-                        iters,
-                        &mut scratch[..2 * bt],
-                    );
-                    let y = self.dp_fmt.saturate(y); // W-bit register write
-                    if y > 0 {
-                        acc[o * f + i] += y; // HWR + accumulate
+                    let y = match trace.as_deref_mut() {
+                        Some(tr) => {
+                            let mut obs = StageObs {
+                                tr,
+                                row: &bp_row,
+                                z: &bp_z,
+                                resid: &bp_resid,
+                            };
+                            mp_int::mp_fir_step_with(
+                                h,
+                                &window[..bt],
+                                self.gamma_f_q,
+                                iters,
+                                &mut scratch[..2 * bt],
+                                &mut obs,
+                            )
+                        }
+                        None => mp_int::mp_fir_step(
+                            h,
+                            &window[..bt],
+                            self.gamma_f_q,
+                            iters,
+                            &mut scratch[..2 * bt],
+                        ),
+                    };
+                    let ys = self.dp_fmt.saturate(y); // W-bit register write
+                    if ys > 0 {
+                        acc[o * f + i] = acc[o * f + i].saturating_add(ys); // HWR + accumulate
+                    }
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.observe(&bp_out, y);
+                        if ys != y {
+                            tr.observe_sat(&bp_out);
+                        }
+                        tr.observe(&acc_k, acc[o * f + i]);
                     }
                 }
             }
             if o < n_oct - 1 {
                 // anti-alias low pass + decimate by 2
+                let lp_row = trace::lp_key(o, "row");
+                let lp_z = trace::lp_key(o, "z");
+                let lp_resid = trace::lp_key(o, "resid");
+                let lp_out = trace::lp_key(o, "out");
                 let h = &self.lp_q[o];
                 window.iter_mut().for_each(|x| *x = 0);
                 let mut dec = Vec::with_capacity(sig.len() / 2 + 1);
@@ -208,15 +299,40 @@ impl FixedPipeline {
                         window[k] = window[k - 1];
                     }
                     window[0] = x;
-                    let y = mp_int::mp_fir_step(
-                        h,
-                        &window[..lt],
-                        self.gamma_f_q,
-                        iters,
-                        &mut scratch[..2 * lt],
-                    );
+                    let y = match trace.as_deref_mut() {
+                        Some(tr) => {
+                            let mut obs = StageObs {
+                                tr,
+                                row: &lp_row,
+                                z: &lp_z,
+                                resid: &lp_resid,
+                            };
+                            mp_int::mp_fir_step_with(
+                                h,
+                                &window[..lt],
+                                self.gamma_f_q,
+                                iters,
+                                &mut scratch[..2 * lt],
+                                &mut obs,
+                            )
+                        }
+                        None => mp_int::mp_fir_step(
+                            h,
+                            &window[..lt],
+                            self.gamma_f_q,
+                            iters,
+                            &mut scratch[..2 * lt],
+                        ),
+                    };
+                    let ys = self.dp_fmt.saturate(y);
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.observe(&lp_out, y);
+                        if ys != y {
+                            tr.observe_sat(&lp_out);
+                        }
+                    }
                     if t % 2 == 0 {
-                        dec.push(self.dp_fmt.saturate(y));
+                        dec.push(ys);
                     }
                 }
                 sig = dec;
@@ -226,38 +342,114 @@ impl FixedPipeline {
     }
 
     /// Kernel register read-out + standardisation: W-bit feature vector.
+    ///
+    /// The read-out `acc >> shift` saturates into the datapath format —
+    /// the register-write clamp at the RegBank5/6 boundary. The shift is
+    /// calibrated from training data, so in-distribution clips never
+    /// clip here; out-of-distribution energy clips instead of leaking a
+    /// wider-than-W value into the centring subtract.
     pub fn standardize(&self, acc: &[i64]) -> Vec<i64> {
+        self.standardize_inner(acc, None)
+    }
+
+    /// [`FixedPipeline::standardize`] in checked-arithmetic debug mode.
+    pub fn standardize_traced(&self, acc: &[i64], tr: &mut RangeTrace) -> Vec<i64> {
+        self.standardize_inner(acc, Some(tr))
+    }
+
+    // acc_shift <= 32 by construction (clog2 of a u32), so the barrel
+    // shift is in range; value arithmetic is saturating.
+    #[allow(clippy::arithmetic_side_effects)]
+    fn standardize_inner(&self, acc: &[i64], mut trace: Option<&mut RangeTrace>) -> Vec<i64> {
         acc.iter()
             .enumerate()
             .map(|(p, &a)| {
-                let k_raw = a >> self.acc_shift[p]; // upper W bits, per band
-                let centred = k_raw - self.mu_q[p];
-                self.k_fmt.saturate(self.inv_sigma[p].apply(centred))
+                let pre = a >> self.acc_shift[p]; // upper W bits, per band
+                let k_raw = self.dp_fmt.saturate(pre);
+                let centred = k_raw.saturating_sub(self.mu_q[p]);
+                let feat = self.inv_sigma[p].apply(centred);
+                let out = self.k_fmt.saturate(feat);
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.observe(trace::KERNEL_READOUT, pre);
+                    if k_raw != pre {
+                        tr.observe_sat(trace::KERNEL_READOUT);
+                    }
+                    tr.observe(trace::STD_CENTRED, centred);
+                    tr.observe(trace::STD_FEATURE, feat);
+                    if out != feat {
+                        tr.observe_sat(trace::STD_FEATURE);
+                    }
+                }
+                out
             })
             .collect()
     }
 
     /// Integer inference engine: per-head margin (z+ - z-) in k_fmt LSBs.
     pub fn infer(&self, k_q: &[i64]) -> Vec<i64> {
+        self.infer_inner(k_q, None)
+    }
+
+    /// [`FixedPipeline::infer`] in checked-arithmetic debug mode.
+    pub fn infer_traced(&self, k_q: &[i64], tr: &mut RangeTrace) -> Vec<i64> {
+        self.infer_inner(k_q, Some(tr))
+    }
+
+    // Row addressing (p_len + i, 2 * p_len) is bounded by the feature
+    // count; operand construction saturates (weights and features are
+    // W-bit, so sums stay in W+2 bits — proven by the analyzer).
+    #[allow(clippy::arithmetic_side_effects)]
+    fn infer_inner(&self, k_q: &[i64], mut trace: Option<&mut RangeTrace>) -> Vec<i64> {
         let p_len = k_q.len();
         let mut row = vec![0i64; 2 * p_len + 1];
+        let inf_row = trace::inf_key("row");
+        let inf_z = trace::inf_key("z");
+        let inf_resid = trace::inf_key("resid");
+        let inf_margin = trace::inf_key("margin");
         (0..self.wp_q.len())
             .map(|c| {
                 for i in 0..p_len {
-                    row[i] = self.wp_q[c][i] + k_q[i];
-                    row[p_len + i] = self.wm_q[c][i] - k_q[i];
+                    row[i] = self.wp_q[c][i].saturating_add(k_q[i]);
+                    row[p_len + i] = self.wm_q[c][i].saturating_sub(k_q[i]);
                 }
                 row[2 * p_len] = self.bp_bias_q[c];
-                let zp = mp_int::mp_int(&row, self.gamma_1_q, self.cfg.mp_iters * 2);
+                let zp = self.run_inference_mp(&row, trace.as_deref_mut(), &inf_row, &inf_z, &inf_resid);
                 for i in 0..p_len {
-                    row[i] = self.wp_q[c][i] - k_q[i];
-                    row[p_len + i] = self.wm_q[c][i] + k_q[i];
+                    row[i] = self.wp_q[c][i].saturating_sub(k_q[i]);
+                    row[p_len + i] = self.wm_q[c][i].saturating_add(k_q[i]);
                 }
                 row[2 * p_len] = self.bm_bias_q[c];
-                let zm = mp_int::mp_int(&row, self.gamma_1_q, self.cfg.mp_iters * 2);
-                zp - zm
+                let zm = self.run_inference_mp(&row, trace.as_deref_mut(), &inf_row, &inf_z, &inf_resid);
+                let margin = zp.saturating_sub(zm);
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.observe(&inf_margin, margin);
+                }
+                margin
             })
             .collect()
+    }
+
+    fn run_inference_mp(
+        &self,
+        row: &[i64],
+        trace: Option<&mut RangeTrace>,
+        row_key: &str,
+        z_key: &str,
+        resid_key: &str,
+    ) -> i64 {
+        let iters = self.cfg.mp_iters.saturating_mul(2);
+        match trace {
+            Some(tr) => {
+                let mut obs = StageObs {
+                    tr,
+                    row: row_key,
+                    z: z_key,
+                    resid: resid_key,
+                };
+                mp_int::mp_int_with(row, self.gamma_1_q, iters, &mut obs)
+            }
+            None => mp_int::mp_int(row, self.gamma_1_q, iters),
+        }
     }
 
     /// End-to-end W-bit classification: float clip in, per-head margins
@@ -270,9 +462,21 @@ impl FixedPipeline {
             .map(|m| self.k_fmt.dequantize(m) as f32)
             .collect()
     }
+
+    /// [`FixedPipeline::classify`] in checked-arithmetic debug mode:
+    /// identical margins, with every stage observed into `tr`.
+    pub fn classify_traced(&self, clip: &[f32], tr: &mut RangeTrace) -> Vec<f32> {
+        let acc = self.accumulate_traced(clip, tr);
+        let k = self.standardize_traced(&acc, tr);
+        self.infer_traced(&k, tr)
+            .into_iter()
+            .map(|m| self.k_fmt.dequantize(m) as f32)
+            .collect()
+    }
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::dsp::chirp;
@@ -300,7 +504,8 @@ mod tests {
         let phis: Vec<Vec<f32>> = (0..6)
             .map(|i| {
                 bank.reset();
-                let clip: Vec<f32> = Pcg32::new(100 + i).normal_vec(2048)
+                let clip: Vec<f32> = Pcg32::new(100 + i)
+                    .normal_vec(2048)
                     .iter()
                     .map(|x| 0.3 * x)
                     .collect();
@@ -347,7 +552,11 @@ mod tests {
             .map(|(&a, &b)| a * f64::from(b))
             .sum();
         let na: f64 = acc_f.iter().map(|a| a * a).sum::<f64>().sqrt();
-        let nb: f64 = phi_f.iter().map(|&b| f64::from(b) * f64::from(b)).sum::<f64>().sqrt();
+        let nb: f64 = phi_f
+            .iter()
+            .map(|&b| f64::from(b) * f64::from(b))
+            .sum::<f64>()
+            .sqrt();
         let cos = dot / (na * nb).max(1e-12);
         assert!(cos > 0.98, "cosine {cos}\nint {acc_f:?}\nfloat {phi_f:?}");
     }
@@ -366,6 +575,52 @@ mod tests {
         let (_, pipe, _, _) = toy_setup(8);
         let clip = chirp::tone(3000.0, 2048, 16_000.0, 0.6);
         assert_eq!(pipe.classify(&clip), pipe.classify(&clip));
+    }
+
+    #[test]
+    fn traced_path_is_bit_identical_and_observes_stages() {
+        let (_, pipe, _, _) = toy_setup(10);
+        let clip = chirp::tone(1800.0, 2048, 16_000.0, 0.6);
+        let mut tr = RangeTrace::new();
+        let traced = pipe.classify_traced(&clip, &mut tr);
+        assert_eq!(traced, pipe.classify(&clip));
+        // every stage family shows up with a sane range
+        for key in [
+            trace::INPUT.to_string(),
+            trace::bp_key(0, "row"),
+            trace::bp_key(0, "z"),
+            trace::bp_key(0, "resid"),
+            trace::bp_key(0, "out"),
+            trace::acc_key(0),
+            trace::lp_key(0, "out"),
+            trace::KERNEL_READOUT.to_string(),
+            trace::STD_CENTRED.to_string(),
+            trace::STD_FEATURE.to_string(),
+            trace::inf_key("row"),
+            trace::inf_key("margin"),
+        ] {
+            let (lo, hi) = tr.range(&key).unwrap_or_else(|| panic!("missing {key}"));
+            assert!(lo <= hi, "{key}: [{lo}, {hi}]");
+        }
+        let fmt = pipe.datapath_format();
+        let (ilo, ihi) = tr.range(trace::INPUT).unwrap();
+        assert!(ilo >= fmt.min_q() && ihi <= fmt.max_q());
+    }
+
+    #[test]
+    fn readout_clamp_only_engages_out_of_distribution() {
+        // in-distribution clips (same family as the calibration set)
+        // must not clip at the kernel read-out; a far louder clip may
+        let (_, pipe, _, _) = toy_setup(10);
+        let clip: Vec<f32> = Pcg32::new(321)
+            .normal_vec(2048)
+            .iter()
+            .map(|x| 0.3 * x)
+            .collect();
+        let mut tr = RangeTrace::new();
+        let acc = pipe.accumulate_traced(&clip, &mut tr);
+        pipe.standardize_traced(&acc, &mut tr);
+        assert_eq!(tr.saturations(trace::KERNEL_READOUT), 0);
     }
 
     #[test]

@@ -6,6 +6,15 @@
 //! (inputs, coefficients, weights, stage outputs) round-to-nearest and
 //! saturate to the W-bit two's-complement range, exactly like the
 //! hardware registers they model.
+//!
+//! Overflow posture (audited for the bit-width prover): every path from
+//! `f64` to `i64` either saturates by construction (`as` casts clamp
+//! since Rust 1.45, then [`QFormat::quantize`] clamps to the format) or
+//! is range-limited by the `frac` bound enforced in [`QFormat::new`];
+//! [`QFormat::rescale_from`] and [`CsdScale::apply`] widen to i128
+//! internally and saturate on the way back, so no shift distance or
+//! term sum can wrap.
+#![deny(clippy::arithmetic_side_effects)]
 
 /// A W-bit two's-complement fixed-point format with `frac` fraction bits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -14,9 +23,17 @@ pub struct QFormat {
     pub frac: i32,
 }
 
+/// Largest |frac| any format may carry: keeps every `2^±frac` scale and
+/// every rescale shift distance well inside the i64/i128 domain.
+pub const MAX_FRAC: i32 = 62;
+
 impl QFormat {
     pub fn new(bits: u32, frac: i32) -> QFormat {
         assert!((2..=32).contains(&bits), "bits {bits}");
+        assert!(
+            (-MAX_FRAC..=MAX_FRAC).contains(&frac),
+            "frac {frac} out of [-{MAX_FRAC}, {MAX_FRAC}]"
+        );
         QFormat { bits, frac }
     }
 
@@ -27,24 +44,34 @@ impl QFormat {
         let ma = max_abs.max(1e-9);
         // need 2^(bits-1-frac) > ma  =>  frac < bits-1 - log2(ma)
         let frac = (f64::from(bits) - 1.0 - ma.log2()).floor() as i32;
-        QFormat { bits, frac }
+        QFormat::new(bits, frac.clamp(-MAX_FRAC, MAX_FRAC))
     }
 
+    // bits is asserted into 2..=32 by `new`; struct literals bypass that,
+    // so clamp defensively before shifting (a wrong-but-safe range beats
+    // a shift-overflow panic).
     pub fn max_q(&self) -> i64 {
-        (1i64 << (self.bits - 1)) - 1
+        (1i64 << self.bits.clamp(2, 32).saturating_sub(1)).saturating_sub(1)
     }
 
     pub fn min_q(&self) -> i64 {
-        -(1i64 << (self.bits - 1))
+        (1i64 << self.bits.clamp(2, 32).saturating_sub(1)).saturating_neg()
     }
 
     /// Least significant bit as a real value.
     pub fn lsb(&self) -> f64 {
-        2f64.powi(-self.frac)
+        2f64.powi(self.frac.saturating_neg())
     }
 
     /// Round-to-nearest quantisation with saturation.
+    ///
+    /// Total for any finite `x`: the scaled value is clamped by the
+    /// `f64 -> i64` `as` cast (which saturates; NaN casts to 0) and then
+    /// by the format range. Non-finite inputs are a caller bug — flagged
+    /// in debug builds, saturated (+inf -> max_q, -inf -> min_q,
+    /// NaN -> 0) in release.
     pub fn quantize(&self, x: f64) -> i64 {
+        debug_assert!(x.is_finite(), "quantize({x}) on non-finite input");
         let scaled = x * 2f64.powi(self.frac);
         let q = scaled.round() as i64;
         q.clamp(self.min_q(), self.max_q())
@@ -55,7 +82,7 @@ impl QFormat {
     }
 
     pub fn dequantize(&self, q: i64) -> f64 {
-        q as f64 * 2f64.powi(-self.frac)
+        q as f64 * 2f64.powi(self.frac.saturating_neg())
     }
 
     pub fn quantize_vec(&self, xs: &[f32]) -> Vec<i64> {
@@ -72,17 +99,48 @@ impl QFormat {
         q.clamp(self.min_q(), self.max_q())
     }
 
+    /// [`QFormat::saturate`] that also reports whether the write
+    /// clipped — the checked-arithmetic debug mode's counter hook.
+    pub fn saturate_counted(&self, q: i64, clipped: &mut u64) -> i64 {
+        let s = self.saturate(q);
+        if s != q {
+            *clipped = clipped.saturating_add(1);
+        }
+        s
+    }
+
     /// Re-scale a value from format `from` into this format using only
     /// arithmetic shifts (round-half-up on right shifts) — what the FPGA
-    /// does between stages of differing precision.
+    /// does between stages of differing precision. Computed in i128 and
+    /// saturated so that extreme `frac` distances clamp instead of
+    /// wrapping.
     pub fn rescale_from(&self, q: i64, from: QFormat) -> i64 {
-        let d = self.frac - from.frac;
-        let v = if d >= 0 {
-            q << d
+        // |frac| <= MAX_FRAC when built through `new`; clamp defensively
+        // for literal-built formats so every shift below is < 127.
+        let d = i64::from(self.frac.clamp(-MAX_FRAC, MAX_FRAC))
+            .saturating_sub(i64::from(from.frac.clamp(-MAX_FRAC, MAX_FRAC)));
+        let v: i64 = if d >= 0 {
+            // widening: |q| < 2^63 and d <= 124, so check the shift in
+            // i128 and clamp anything that leaves the i64 domain
+            if q == 0 {
+                0
+            } else if d >= 63 {
+                if q > 0 {
+                    i64::MAX
+                } else {
+                    i64::MIN
+                }
+            } else {
+                // d <= 62: fits i128 exactly
+                let wide = i128::from(q).wrapping_shl(d as u32);
+                wide.clamp(i128::from(i64::MIN), i128::from(i64::MAX)) as i64
+            }
         } else {
-            let sh = -d;
-            // round to nearest: add half lsb before the arithmetic shift
-            (q + (1i64 << (sh - 1))) >> sh
+            // narrowing: round to nearest (add half lsb, arithmetic
+            // shift); sh <= 124 so both the bias and the sum fit i128
+            let sh = d.unsigned_abs().min(126) as u32;
+            let half = 1i128.wrapping_shl(sh.saturating_sub(1));
+            (i128::from(q).saturating_add(half).wrapping_shr(sh)) as i64
         };
         self.saturate(v)
     }
@@ -111,30 +169,37 @@ impl CsdScale {
             }
             let e = resid.abs().log2().round() as i32;
             let neg = resid < 0.0;
-            terms.push((-e, neg)); // store as right-shift amount
+            terms.push((e.saturating_neg(), neg)); // store as right-shift amount
             let val = if neg { -(2f64.powi(e)) } else { 2f64.powi(e) };
             resid -= val;
         }
         CsdScale { terms }
     }
 
-    /// Apply to a fixed-point value (shifts + adds only).
+    /// Apply to a fixed-point value (shifts + adds only). The term sum
+    /// is accumulated in i128 and saturated back to i64: in hardware
+    /// this is the CSD block's saturating output stage, and it is what
+    /// lets the bit-width prover treat the feature scaler as a
+    /// saturating (clipping, never wrapping) stage.
     pub fn apply(&self, x: i64) -> i64 {
-        let mut acc = 0i64;
+        let mut acc = 0i128;
+        let x = i128::from(x);
         for &(sh, neg) in &self.terms {
-            let t = if sh >= 0 {
-                // round-to-nearest right shift
-                if sh == 0 {
-                    x
-                } else {
-                    (x + (1i64 << (sh - 1))) >> sh
-                }
+            let t: i128 = if sh > 0 {
+                // round-to-nearest right shift; sh clamp keeps the bias
+                // 2^(sh-1) and the sum inside i128
+                let sh = sh.unsigned_abs().min(126);
+                x.saturating_add(1i128.wrapping_shl(sh.saturating_sub(1)))
+                    .wrapping_shr(sh)
+            } else if sh == 0 {
+                x
             } else {
-                x << (-sh)
+                // left shift: |x| <= 2^63 and sh <= 63 keep |t| <= 2^126
+                x.wrapping_shl(sh.unsigned_abs().min(63))
             };
-            acc += if neg { -t } else { t };
+            acc = acc.saturating_add(if neg { t.saturating_neg() } else { t });
         }
-        acc
+        acc.clamp(i128::from(i64::MIN), i128::from(i64::MAX)) as i64
     }
 
     /// The real value this CSD encodes.
@@ -142,7 +207,7 @@ impl CsdScale {
         self.terms
             .iter()
             .map(|&(sh, neg)| {
-                let v = 2f64.powi(-sh);
+                let v = 2f64.powi(sh.saturating_neg());
                 if neg {
                     -v
                 } else {
@@ -154,6 +219,7 @@ impl CsdScale {
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::util::proptest::check;
@@ -178,6 +244,46 @@ mod tests {
     }
 
     #[test]
+    fn quantize_huge_finite_inputs_saturate() {
+        // the f64 -> i64 cast path: values far beyond both the i64 and
+        // the format range must land exactly on the rails
+        let q = QFormat::new(10, 9);
+        assert_eq!(q.quantize(1e300), q.max_q());
+        assert_eq!(q.quantize(-1e300), q.min_q());
+        assert_eq!(q.quantize(9.4e18), q.max_q()); // just past i64::MAX pre-clamp
+        let wide = QFormat::new(32, 0);
+        assert_eq!(wide.quantize(1e300), wide.max_q());
+        assert_eq!(wide.quantize(-1e300), wide.min_q());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite")]
+    fn quantize_nan_is_flagged_in_debug() {
+        QFormat::new(8, 7).quantize(f64::NAN);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn quantize_non_finite_saturates_in_release() {
+        let q = QFormat::new(8, 7);
+        assert_eq!(q.quantize(f64::NAN), 0);
+        assert_eq!(q.quantize(f64::INFINITY), q.max_q());
+        assert_eq!(q.quantize(f64::NEG_INFINITY), q.min_q());
+    }
+
+    #[test]
+    fn saturate_counted_counts_only_clips() {
+        let q = QFormat::new(8, 0);
+        let mut clips = 0u64;
+        assert_eq!(q.saturate_counted(100, &mut clips), 100);
+        assert_eq!(clips, 0);
+        assert_eq!(q.saturate_counted(1000, &mut clips), 127);
+        assert_eq!(q.saturate_counted(-1000, &mut clips), -128);
+        assert_eq!(clips, 2);
+    }
+
+    #[test]
     fn calibrate_covers_range() {
         check("q-calibrate", 40, |g| {
             let bits = g.usize(4, 16) as u32;
@@ -188,6 +294,21 @@ mod tests {
             assert!(recon > 0.4 * ma, "ma {ma} recon {recon} fmt {q:?}");
             assert!(recon <= ma * 1.01 + q.lsb());
         });
+    }
+
+    #[test]
+    fn calibrate_extreme_magnitudes_keep_frac_bounded() {
+        // huge and tiny calibration targets must clamp frac instead of
+        // producing shift distances past the i64 domain
+        let tiny = QFormat::calibrate(8, 1e-300);
+        assert!(tiny.frac <= MAX_FRAC);
+        let huge = QFormat::calibrate(8, 1e300);
+        assert!(huge.frac >= -MAX_FRAC);
+        // and rescaling across the extreme gap saturates, not wraps
+        let v = huge.rescale_from(tiny.quantize(5e-301), tiny);
+        assert!(v.abs() <= huge.max_q());
+        let w = tiny.rescale_from(huge.quantize(1e295), huge);
+        assert!(w.abs() <= tiny.max_q());
     }
 
     #[test]
@@ -228,5 +349,20 @@ mod tests {
         let csd = CsdScale::approximate(-0.75, 3);
         assert!((csd.value() + 0.75).abs() < 1e-9);
         assert_eq!(csd.apply(64), -48);
+    }
+
+    #[test]
+    fn csd_apply_saturates_at_extremes() {
+        // three maximal left-shift terms on a near-maximal input: the
+        // i128 accumulator must clamp to the i64 rails, never wrap
+        let big = CsdScale {
+            terms: vec![(-40, false), (-40, false), (-40, false)],
+        };
+        assert_eq!(big.apply(i64::MAX / 2), i64::MAX);
+        assert_eq!(big.apply(i64::MIN / 2), i64::MIN);
+        let neg = CsdScale {
+            terms: vec![(-40, true)],
+        };
+        assert_eq!(neg.apply(i64::MAX), i64::MIN);
     }
 }

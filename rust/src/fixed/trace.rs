@@ -1,0 +1,144 @@
+//! Checked-arithmetic debug mode for the fixed-point pipeline: records
+//! the observed min/max value and saturation count at every datapath
+//! site the static analyzer ([`crate::analysis`]) bounds.
+//!
+//! The stage keys here are the single source of truth — the analyzer
+//! builds its [`crate::analysis::report::StageReport`] names with the
+//! same constructors, so the soundness harness can join "what the
+//! prover claims" with "what a real clip actually produced" by exact
+//! key equality.
+#![deny(clippy::arithmetic_side_effects)]
+
+use std::collections::BTreeMap;
+
+/// Input quantizer output (post-clamp W-bit samples).
+pub const INPUT: &str = "input";
+/// Kernel register read-out `acc >> shift`, pre-clamp.
+pub const KERNEL_READOUT: &str = "kernel_readout";
+/// Centred kernel `k_raw - mu`.
+pub const STD_CENTRED: &str = "std.centred";
+/// CSD-scaled feature, pre-clamp.
+pub const STD_FEATURE: &str = "std.feature";
+
+/// Band-pass stage key for octave `o`; `part` is one of
+/// `row` / `z` / `resid` / `out`.
+pub fn bp_key(o: usize, part: &str) -> String {
+    format!("bp[{o}].{part}")
+}
+
+/// Low-pass (anti-alias) stage key for octave `o`.
+pub fn lp_key(o: usize, part: &str) -> String {
+    format!("lp[{o}].{part}")
+}
+
+/// Kernel accumulator for octave `o`.
+pub fn acc_key(o: usize) -> String {
+    format!("acc[{o}]")
+}
+
+/// Inference-engine stage key; `part` is one of
+/// `row` / `z` / `resid` / `margin`.
+pub fn inf_key(part: &str) -> String {
+    format!("inf.{part}")
+}
+
+/// Observed per-stage value ranges and saturation counts from one or
+/// more traced pipeline evaluations.
+#[derive(Clone, Debug, Default)]
+pub struct RangeTrace {
+    /// stage key -> (min, max) observed value.
+    pub ranges: BTreeMap<String, (i64, i64)>,
+    /// stage key -> number of saturating register writes that clipped.
+    pub sat_counts: BTreeMap<String, u64>,
+}
+
+impl RangeTrace {
+    pub fn new() -> RangeTrace {
+        RangeTrace::default()
+    }
+
+    /// Record one observed value at `key`.
+    pub fn observe(&mut self, key: &str, v: i64) {
+        match self.ranges.get_mut(key) {
+            Some((lo, hi)) => {
+                *lo = (*lo).min(v);
+                *hi = (*hi).max(v);
+            }
+            None => {
+                self.ranges.insert(key.to_string(), (v, v));
+            }
+        }
+    }
+
+    /// Record that a saturating write at `key` actually clipped.
+    pub fn observe_sat(&mut self, key: &str) {
+        let c = self.sat_counts.entry(key.to_string()).or_insert(0);
+        *c = c.saturating_add(1);
+    }
+
+    pub fn range(&self, key: &str) -> Option<(i64, i64)> {
+        self.ranges.get(key).copied()
+    }
+
+    pub fn saturations(&self, key: &str) -> u64 {
+        self.sat_counts.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn total_saturations(&self) -> u64 {
+        self.sat_counts.values().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    /// Merge another trace into this one (union of ranges, summed
+    /// saturation counts) — used to pool observations across clips.
+    pub fn merge(&mut self, other: &RangeTrace) {
+        for (k, &(lo, hi)) in &other.ranges {
+            self.observe(k, lo);
+            self.observe(k, hi);
+        }
+        for (k, &c) in &other.sat_counts {
+            let e = self.sat_counts.entry(k.clone()).or_insert(0);
+            *e = e.saturating_add(c);
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_tracks_min_max() {
+        let mut t = RangeTrace::new();
+        t.observe("s", 5);
+        t.observe("s", -3);
+        t.observe("s", 2);
+        assert_eq!(t.range("s"), Some((-3, 5)));
+        assert_eq!(t.range("other"), None);
+    }
+
+    #[test]
+    fn saturation_counts_accumulate_and_merge() {
+        let mut a = RangeTrace::new();
+        a.observe("x", 1);
+        a.observe_sat("x");
+        a.observe_sat("x");
+        let mut b = RangeTrace::new();
+        b.observe("x", 9);
+        b.observe("y", -4);
+        b.observe_sat("x");
+        a.merge(&b);
+        assert_eq!(a.range("x"), Some((1, 9)));
+        assert_eq!(a.range("y"), Some((-4, -4)));
+        assert_eq!(a.saturations("x"), 3);
+        assert_eq!(a.total_saturations(), 3);
+    }
+
+    #[test]
+    fn stage_keys_are_stable() {
+        assert_eq!(bp_key(2, "row"), "bp[2].row");
+        assert_eq!(lp_key(0, "out"), "lp[0].out");
+        assert_eq!(acc_key(4), "acc[4]");
+        assert_eq!(inf_key("margin"), "inf.margin");
+    }
+}

@@ -123,17 +123,27 @@ impl Estimate {
 /// One MP module (Gu's iterative architecture): operand subtractor,
 /// comparator, running-sum accumulator, active counter, barrel shifter
 /// for the step division, z register, FSM.
+///
+/// Register widths follow the statically proven requirements of
+/// [`crate::analysis::report::Provision`] (see DESIGN.md §11): operand
+/// rows and the z iterate live on a (W+2)-bit subtract datapath, and
+/// the residual accumulator needs (W+1) + ceil(log2 n) + 2 bits. The
+/// pre-analyzer model budgeted only W bits for operands/z and
+/// W + ceil(log2 n) for the residual — widths the prover shows a
+/// worst-case clip can overflow.
 fn mp_module(m: &CostModel, w: usize, max_n: usize) -> (f64, f64) {
     let nbits = (max_n as f64).log2().ceil();
-    let acc_w = w as f64 + nbits; // running sum needs headroom
-    let lut = m.lut_per_adder_bit * (w as f64)        // operand subtract
-        + m.lut_per_cmp_bit * (w as f64)              // > 0 compare
-        + m.lut_per_adder_bit * acc_w                 // residual accumulate
-        + m.lut_per_adder_bit * nbits                 // active counter
-        + m.lut_per_mux_bit * acc_w * nbits / 2.0     // barrel shift (step)
-        + m.lut_per_adder_bit * (w as f64)            // z update adder
+    let op_w = w as f64 + 2.0; // operand row / x - z subtract width
+    let z_w = w as f64 + 2.0; // z iterate register
+    let acc_w = (w as f64 + 1.0) + nbits + 2.0; // residual accumulator
+    let lut = m.lut_per_adder_bit * op_w          // operand subtract
+        + m.lut_per_cmp_bit * op_w                // > 0 compare
+        + m.lut_per_adder_bit * acc_w             // residual accumulate
+        + m.lut_per_adder_bit * nbits             // active counter
+        + m.lut_per_mux_bit * acc_w * nbits / 2.0 // barrel shift (step)
+        + m.lut_per_adder_bit * z_w               // z update adder
         + m.fsm_lut;
-    let ff = m.ff_per_reg_bit * (acc_w + nbits + w as f64 * 2.0) + m.fsm_ff;
+    let ff = m.ff_per_reg_bit * (acc_w + nbits + z_w + op_w) + m.fsm_ff;
     (lut, ff)
 }
 

@@ -37,6 +37,9 @@ impl Default for MpModuleModel {
     fn default() -> Self {
         // 6 iterations reach datapath LSB precision for n <= 64 operands
         // (see fixed::mp_int tests); hardware runs the fixed worst case.
+        // The conservative software budget (fixed::mp_int::default_iters,
+        // ~24 trips at this width) would blow the sample slot — pinned by
+        // software_iteration_budget_is_not_schedulable below.
         MpModuleModel {
             iterations: 6,
             setup_cycles: 4,
@@ -300,6 +303,30 @@ mod tests {
         cfg.n_samples = 4096;
         let r = simulate(&cfg);
         assert!(!r.schedulable, "{}", r.render());
+    }
+
+    #[test]
+    fn software_iteration_budget_is_not_schedulable() {
+        // fixed::mp_int::default_iters is deliberately conservative
+        // (bits + clog2(n) + 8 = 24 trips for a 32-operand eval on the
+        // 11-bit MP datapath). Running that budget in hardware would blow
+        // the 3125-cycle sample slot on MP1; the fixed 6-iteration
+        // schedule fits with headroom — the quantitative reason
+        // MpModuleModel::default trims the trip count.
+        let sw = crate::fixed::mp_int::default_iters(2 * 16, 11) as u64;
+        assert!(sw >= 20, "software budget unexpectedly small: {sw}");
+        let mut cfg = SimConfig {
+            n_samples: 2048,
+            ..Default::default()
+        };
+        cfg.mp.iterations = sw;
+        let r = simulate(&cfg);
+        assert!(!r.schedulable, "{}", r.render());
+        // steady-state view: the octave-0 bank alone overruns the slot
+        let f = cfg.filters_per_octave as u64;
+        assert!(f * cfg.mp.filter_cycles(cfg.bp_taps) > CYCLES_PER_SAMPLE);
+        let hw = SimConfig::default();
+        assert!(f * hw.mp.filter_cycles(hw.bp_taps) < CYCLES_PER_SAMPLE);
     }
 
     #[test]

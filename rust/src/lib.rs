@@ -29,6 +29,7 @@
 //!   `infilter-node` flags, report counters, failure modes,
 //! * `README.md` — build, CLI and benchmark walkthroughs.
 
+pub mod analysis;
 pub mod bench_util;
 pub mod carihc;
 pub mod config;

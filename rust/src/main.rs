@@ -15,6 +15,7 @@
 //!               [--pre-trigger F] [--connect host:port,...]
 //!   edge-roc                          gate ROC + bytes-saved tables
 //!   fpga-sim
+//!   analyze  [--bits W] [--acc-bits N] [--clip-len L] [--sweep]
 //!
 //! Common options: --artifacts DIR  --results DIR  --seed N  --threads N
 //!                 --gamma-f X  --gamma-1 X  --log debug|info|warn
@@ -32,7 +33,8 @@ use infilter::net::{RemoteConfig, RemotePool};
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::runtime::engine::ModelEngine;
 use infilter::train::{
-    quick_cpu_model, train_heads, train_model, TrainConfig, TrainedModel,
+    quick_cpu_model, quick_cpu_model_with_phi, train_heads, train_model, TrainConfig,
+    TrainedModel,
 };
 use infilter::util::cli::Args;
 use infilter::util::prng::Pcg32;
@@ -79,6 +81,12 @@ USAGE: infilter <subcommand> [options]
   See docs/OPERATIONS.md for the full deployment walkthrough.
   edge-roc  gate ROC + uplink bytes-saved tables
   fpga-sim  cycle-level Fig. 7 schedule simulation
+  analyze   static bit-width prover for the fixed-point datapath:
+            interval analysis over the calibrated pipeline, exits
+            non-zero unless every non-saturating register is proven
+            overflow-free (docs/DESIGN.md §11)
+            [--bits W (10)] [--acc-bits N (24)] [--clip-len L (16000)]
+            [--sweep] [--scale S] [--epochs E]
 
 common: --artifacts DIR --results DIR --seed N --threads N
         --gamma-f X --gamma-1 X --log LEVEL";
@@ -107,6 +115,7 @@ fn run(args: &Args) -> Result<()> {
         Some("edge-fleet") => cmd_edge_fleet(&cfg, args),
         Some("edge-roc") => cmd_edge_roc(&cfg),
         Some("fpga-sim") => cmd_fpga_sim(),
+        Some("analyze") => cmd_analyze(&cfg, args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -576,5 +585,76 @@ fn cmd_fpga_sim() -> Result<()> {
     use infilter::fpga::sim::{simulate, SimConfig};
     let r = simulate(&SimConfig::default());
     println!("{}", r.render());
+    Ok(())
+}
+
+/// `analyze`: the static bit-width prover (docs/DESIGN.md §11). Trains
+/// the deterministic quick CPU model (no AOT artifacts needed), builds
+/// the calibrated fixed-point pipeline for the requested width, and runs
+/// the interval analysis over the full computation graph. Exits non-zero
+/// if any non-saturating register can overflow in the worst case — CI
+/// runs this as a gate on the default paper configuration.
+fn cmd_analyze(cfg: &AppConfig, args: &Args) -> Result<()> {
+    use infilter::analysis::{analyze, Provision};
+    use infilter::fixed::pipeline::{FixedConfig, FixedPipeline};
+
+    let scale = args.get_f64("scale", 0.05);
+    let epochs = args.get_usize("epochs", 30);
+    let clip_len = args.get_usize("clip-len", 16_000);
+    let acc_bits = args.get_usize("acc-bits", 24) as u32;
+    log_info!("analyze: CPU-training the calibration model (scale {scale})");
+    let (model, train_phi) =
+        quick_cpu_model_with_phi(cfg.seed, scale, epochs, cfg.gamma_f, cfg.threads);
+    let plan = infilter::dsp::multirate::BandPlan::paper_default();
+    let sweep = args.flag("sweep");
+    let widths: Vec<u32> = if sweep {
+        vec![4, 6, 8, 10, 12, 16]
+    } else {
+        vec![args.get_usize("bits", 10) as u32]
+    };
+    let mut summary = Table::new(
+        "bit-width certification",
+        &["W", "acc", "verdict", "worst deficit (bits)"],
+    );
+    let mut failed: Vec<u32> = Vec::new();
+    for &bits in &widths {
+        let pipe = FixedPipeline::build(
+            &plan,
+            model.gamma_f,
+            model.gamma_1,
+            &model.params,
+            &model.std,
+            &train_phi,
+            FixedConfig::with_bits(bits),
+        );
+        let prov = Provision::for_pipeline(&pipe, acc_bits);
+        let report = analyze(&pipe, clip_len, &prov);
+        if !sweep {
+            println!("{}", report.render());
+        }
+        summary.row(vec![
+            bits.to_string(),
+            acc_bits.to_string(),
+            if report.certified() { "CERTIFIED" } else { "overflow" }.to_string(),
+            report.worst_deficit().to_string(),
+        ]);
+        if !report.certified() {
+            failed.push(bits);
+        }
+    }
+    if sweep {
+        // informational: which widths the proof certifies under this
+        // accumulator budget — Fig. 8's x-axis, derived without
+        // simulating a single clip
+        println!("{}", summary.render());
+        return Ok(());
+    }
+    if !failed.is_empty() {
+        bail!(
+            "bit-width proof FAILED for W = {failed:?} with a {acc_bits}-bit \
+             accumulator: a worst-case clip of {clip_len} samples can overflow \
+             a non-saturating register (see the stage table above)"
+        );
+    }
     Ok(())
 }

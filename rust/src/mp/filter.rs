@@ -42,6 +42,8 @@ impl MpFirFilter {
         self.delay.iter_mut().for_each(|d| *d = 0.0);
     }
 
+    // delay-line index math: k in 1..len so k - 1 never underflows
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn step(&mut self, x: f32) -> f32 {
         let y =
             kernel::mp_fir_step(&self.h, x, &self.delay, self.gamma_f, self.iters, &mut self.row);
@@ -90,7 +92,7 @@ impl MpMultirateBank {
             plan: plan.clone(),
             bp,
             lp,
-            phase: vec![false; plan.n_octaves - 1],
+            phase: vec![false; plan.n_octaves.saturating_sub(1)],
         }
     }
 
@@ -101,6 +103,9 @@ impl MpMultirateBank {
     }
 
     /// Per-band output blocks (octave o at rate fs/2^o).
+    // band addressing o * f + i is bounded by the plan geometry the
+    // constructors allocated for; o < n_oct keeps n_oct - 1 safe
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn process(&mut self, xs: &[f32]) -> Vec<Vec<f32>> {
         let n_oct = self.plan.n_octaves;
         let f = self.plan.filters_per_octave;
@@ -136,6 +141,7 @@ impl MpMultirateBank {
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::dsp::chirp;

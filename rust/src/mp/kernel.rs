@@ -58,6 +58,9 @@ pub const DEFAULT_NEWTON_ITERS: usize = 12;
 /// comparisons and is effectively ignored, where the exact [`mp`]
 /// propagates NaN — callers that may see corrupt samples must screen
 /// them upstream (the edge gate's quantizer already does).
+// count <= 2 * row length << u32::MAX and 2 * a.len() cannot overflow
+// usize for any allocatable slice; float math is exempt from the lint
+#[allow(clippy::arithmetic_side_effects)]
 pub fn mp_sym(a: &[f32], gamma: f32, iters: usize) -> f32 {
     debug_assert!(!a.is_empty());
     let mut z = -gamma / (2 * a.len()) as f32;
@@ -96,6 +99,9 @@ pub fn mp_sym(a: &[f32], gamma: f32, iters: usize) -> f32 {
 /// bit-identical to `mp_sym` on that lane's values; converged lanes are
 /// skipped (same no-change guarantee as the scalar breaks) and the loop
 /// exits when all 8 are done.
+// lane addressing k * 8 + s is bounded by the debug-asserted row length;
+// counters are bounded by 2m per trip
+#[allow(clippy::arithmetic_side_effects)]
 pub fn mp_sym8(rows: &[f32], m: usize, gamma: f32, iters: usize) -> [f32; 8] {
     debug_assert!(m >= 1 && rows.len() >= 8 * m);
     let mut z = [-gamma / (2 * m) as f32; 8];
@@ -139,6 +145,8 @@ pub fn mp_sym8(rows: &[f32], m: usize, gamma: f32, iters: usize) -> [f32; 8] {
 /// (newest first, `delay[j] = x[n-1-j]`), one `m`-long operand buffer
 /// (`row`) rebuilt per sign. The [`crate::mp::filter::MpFirFilter`]
 /// hot path.
+// k in 1..m keeps k - 1 in range; delay.len() + 1 == m is debug-asserted
+#[allow(clippy::arithmetic_side_effects)]
 pub fn mp_fir_step(
     h: &[f32],
     x: f32,
@@ -167,6 +175,8 @@ pub fn mp_fir_step(
 /// Block eq. 9 step: window `w[k] = ext[base - k]` is a backwards slice
 /// of a delay-prefix-extended signal. Same operand values (hence bit
 /// results) as [`mp_fir_step`] on the equivalent delay line.
+// base - k stays in range: base + 1 >= m is debug-asserted and k < m
+#[allow(clippy::arithmetic_side_effects)]
 #[inline]
 fn mp_fir_at(
     h: &[f32],
@@ -195,13 +205,15 @@ fn mp_fir_at(
 /// two `Vec`s and sorts per call.
 pub fn mp_fir_eval_exact(h: &[f32], w: &[f32], gamma: f32) -> f32 {
     let m = h.len();
-    let mut plus = vec![0.0f32; 2 * m];
-    let mut minus = vec![0.0f32; 2 * m];
+    let mut plus = vec![0.0f32; m.saturating_mul(2)];
+    let mut minus = vec![0.0f32; m.saturating_mul(2)];
     mp_fir_eval_sort(h, w, gamma, &mut plus, &mut minus)
 }
 
 /// Scratch-parameterised body of [`mp_fir_eval_exact`] (verbatim the old
 /// `CpuEngine` helper).
+// m + k < 2m <= buffer length by the callers' allocation
+#[allow(clippy::arithmetic_side_effects)]
 fn mp_fir_eval_sort(h: &[f32], w: &[f32], gamma: f32, plus: &mut [f32], minus: &mut [f32]) -> f32 {
     let m = h.len();
     for k in 0..m {
@@ -215,6 +227,8 @@ fn mp_fir_eval_sort(h: &[f32], w: &[f32], gamma: f32, plus: &mut [f32], minus: &
 
 /// Build `window[k] = x[n-k]`, reaching into `delay` (previous block's
 /// tail, newest first) for `n < k`. Reference path only.
+// n - k guarded by n >= k; k - n - 1 < delay.len() by the window layout
+#[allow(clippy::arithmetic_side_effects)]
 fn fill_window(window: &mut [f32], sig: &[f32], delay: &[f32], n: usize) {
     window[0] = sig[n];
     for k in 1..window.len() {
@@ -224,6 +238,8 @@ fn fill_window(window: &mut [f32], sig: &[f32], delay: &[f32], n: usize) {
 
 /// Persist the newest `delay.len()` samples of `sig` (newest first).
 /// Reference path only.
+// len - 1 - j in range: delay is never longer than sig on this path
+#[allow(clippy::arithmetic_side_effects)]
 fn save_delay(delay: &mut [f32], sig: &[f32]) {
     let len = sig.len();
     for (j, d) in delay.iter_mut().enumerate() {
@@ -240,6 +256,8 @@ fn ensure_len(v: &mut Vec<f32>, n: usize) {
 /// Lay one octave's input out as `[reversed delay | block]` so every tap
 /// window is a plain backwards slice. `delay` is newest-first
 /// (`delay[j] = x[-1-j]`), hence reversed into the prefix.
+// d - 1 - i in range for i < d; ext is sized d + sig.len() by callers
+#[allow(clippy::arithmetic_side_effects)]
 fn load_ext(ext: &mut [f32], delay: &[f32], sig: &[f32]) {
     let d = delay.len();
     for (i, e) in ext[..d].iter_mut().enumerate() {
@@ -321,14 +339,18 @@ impl FilterBankKernel {
     }
 
     pub fn n_filters(&self) -> usize {
-        self.n_octaves * self.filters_per_octave
+        self.n_octaves.saturating_mul(self.filters_per_octave)
     }
 
+    // row addressing is bounded by the coefficient tensors the
+    // constructor laid out for exactly this plan geometry
+    #[allow(clippy::arithmetic_side_effects)]
     fn bp_row(&self, o: usize, i: usize) -> &[f32] {
         let t = self.bp_taps;
         &self.bp[(o * self.filters_per_octave + i) * t..][..t]
     }
 
+    #[allow(clippy::arithmetic_side_effects)]
     fn lp_row(&self, o: usize) -> &[f32] {
         &self.lp[o * self.lp_taps..][..self.lp_taps]
     }
@@ -341,6 +363,10 @@ impl FilterBankKernel {
     /// `frame.len()` must be divisible by `2^(n_octaves-1)` and leave at
     /// least `bp_taps - 1` samples at the deepest octave (the `CpuEngine`
     /// constructor enforces this).
+    // all index math (delay splices, band addressing, halving) is
+    // bounded by the plan geometry debug-asserted on entry; taps >= 2
+    // keeps bp_d/lp_d subtractions non-negative
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn process_frame(
         &self,
         s: &mut FrameScratch,
@@ -419,6 +445,9 @@ impl FilterBankKernel {
     /// lane's Phi and state update is bit-identical to its b1 result.
     /// `phi` is stream-major: `phi[s * n_filters() + p]`. All 8 frames
     /// must have equal length (pad with silence).
+    // same structural bounds as process_frame, with the fixed B = 8
+    // stride layout sized by the ensure_len calls below
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn process_frame_b8(
         &self,
         s: &mut FrameScratch,
@@ -536,6 +565,9 @@ impl FilterBankKernel {
     /// window copy, exact `mp::mp`, per-call allocations). Pins
     /// [`process_frame`] in the parity suite and serves as the old path
     /// in the bench trajectory.
+    // kept verbatim as the pre-kernel reference; index math is bounded
+    // by the same plan geometry as process_frame
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn process_frame_exact(&self, state: &mut StreamState, frame: &[f32], phi: &mut [f32]) {
         let n_oct = self.n_octaves;
         let f_per = self.filters_per_octave;
@@ -592,6 +624,7 @@ impl FilterBankKernel {
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::util::proptest::check;

@@ -42,8 +42,9 @@ impl Params {
     }
 
     pub fn from_tensors(heads: usize, feats: usize, wp: &[f32], wm: &[f32], bp: &[f32], bm: &[f32]) -> Params {
-        assert_eq!(wp.len(), heads * feats);
-        assert_eq!(wm.len(), heads * feats);
+        let expect = heads.saturating_mul(feats);
+        assert_eq!(wp.len(), expect);
+        assert_eq!(wm.len(), expect);
         Params {
             wp: wp.chunks(feats).map(<[f32]>::to_vec).collect(),
             wm: wm.chunks(feats).map(<[f32]>::to_vec).collect(),
@@ -74,7 +75,7 @@ pub fn decide_head(
 ) -> Decision {
     let p_len = k.len();
     scratch.clear();
-    scratch.reserve(2 * p_len + 1);
+    scratch.reserve(p_len.saturating_mul(2).saturating_add(1));
     // z+ operand: [w+ + K+, w- + K-, b+]
     for i in 0..p_len {
         scratch.push(wp[i] + k[i]);
@@ -176,6 +177,7 @@ impl Standardizer {
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::util::prng::Pcg32;

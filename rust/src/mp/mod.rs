@@ -6,6 +6,12 @@
 //!   * the CPU fallback path of the coordinator (no PJRT),
 //!   * the Fig. 6 figure harness (MP filter-bank gain response),
 //!   * generating expectations for the fixed-point hardware model.
+//!
+//! Arithmetic hygiene: the module-wide lint below forbids implicitly
+//! wrapping/panicking integer arithmetic; float arithmetic (which
+//! saturates to ±inf instead of panicking) is exempt by the lint's
+//! definition, and the few integer counters use explicit saturating ops.
+#![deny(clippy::arithmetic_side_effects)]
 
 pub mod filter;
 pub mod kernel;
@@ -25,7 +31,7 @@ pub fn mp(xs: &[f32], gamma: f32) -> f32 {
     let mut cum = 0.0f64;
     let mut best = f64::from(s[0]) - f64::from(gamma); // k = 1 fallback
     for (k0, &v) in s.iter().enumerate() {
-        let k = (k0 + 1) as f64;
+        let k = (k0.saturating_add(1)) as f64;
         cum += f64::from(v);
         // support rule: k * xs_k + gamma >= cum  (largest such k wins)
         if k * f64::from(v) + f64::from(gamma) >= cum {
@@ -69,7 +75,7 @@ pub fn mp_newton_steps(xs: &[f32], gamma: f32, iters: usize) -> (f32, usize) {
             let d = x - z;
             if d > 0.0 {
                 resid += d;
-                count += 1;
+                count = count.saturating_add(1);
             }
         }
         if resid == 0.0 {
@@ -77,7 +83,7 @@ pub fn mp_newton_steps(xs: &[f32], gamma: f32, iters: usize) -> (f32, usize) {
         }
         let zn = z + resid / (count.max(1) as f32);
         if zn == z {
-            return (z, t + 1);
+            return (z, t.saturating_add(1));
         }
         z = zn;
     }
@@ -101,6 +107,7 @@ pub fn mp_residual(xs: &[f32], gamma: f32, z: f32) -> f32 {
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::util::proptest::check;

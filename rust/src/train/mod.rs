@@ -186,6 +186,22 @@ pub fn quick_cpu_model(
     gamma_f: f32,
     threads: usize,
 ) -> TrainedModel {
+    quick_cpu_model_with_phi(seed, scale, epochs, gamma_f, threads).0
+}
+
+/// [`quick_cpu_model`] that also returns the raw (unstandardised)
+/// training feature rows it extracted. The fixed-point calibrator
+/// ([`crate::fixed::FixedPipeline::build`]) and the `analyze` bit-width
+/// prover need these rows to size accumulator shifts and Q formats, and
+/// re-extracting them would double the most expensive step of the quick
+/// path.
+pub fn quick_cpu_model_with_phi(
+    seed: u64,
+    scale: f64,
+    epochs: usize,
+    gamma_f: f32,
+    threads: usize,
+) -> (TrainedModel, Vec<Vec<f32>>) {
     let eng = crate::runtime::backend::CpuEngine::new(
         &crate::dsp::multirate::BandPlan::paper_default(),
         gamma_f,
@@ -213,7 +229,7 @@ pub fn quick_cpu_model(
         losses.last().copied().unwrap_or(0.0),
         model.fingerprint()
     );
-    model
+    (model, phi)
 }
 
 /// Hyper-parameters of the annealed SGD run.
