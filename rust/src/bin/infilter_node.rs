@@ -34,6 +34,11 @@ USAGE: infilter-node [options]
                   concurrent gateway sessions before further
                   handshakes are rejected Busy (default 4)
   --credits N     in-flight frame window per gateway (default 256)
+  --idle-timeout SECS
+                  reap a session after SECS with no gateway traffic at
+                  a message boundary, freeing its --max-sessions slot
+                  (0 = never, the default; counted in
+                  node_idle_reaps_total)
   --queue N       per-stream frame buffer inside the lane (default 32)
   --model PATH    serve this model (must match the gateway's)
   --seed N --scale S --epochs E
@@ -89,6 +94,10 @@ fn run(args: &Args) -> Result<()> {
     let cfg = NodeConfig {
         credits: args.get_usize("credits", 256).min(u32::MAX as usize) as u32,
         max_sessions: args.get_usize("max-sessions", NodeConfig::default().max_sessions),
+        session_idle_timeout: match args.get_u64("idle-timeout", 0) {
+            0 => None,
+            secs => Some(std::time::Duration::from_secs(secs)),
+        },
         ..NodeConfig::default()
     };
     let max_conns = args.get("max-conns").map(|_| args.get_usize("max-conns", 1));

@@ -16,6 +16,7 @@
 //!   edge-roc                          gate ROC + bytes-saved tables
 //!   fpga-sim
 //!   analyze  [--bits W] [--acc-bits N] [--clip-len L] [--sweep]
+//!   chaos-soak  [--seed N] [--rounds R] [--duration SECS] [--faults LIST]
 //!
 //! Common options: --artifacts DIR  --results DIR  --seed N  --threads N
 //!                 --gamma-f X  --gamma-1 X  --log debug|info|warn
@@ -87,6 +88,17 @@ USAGE: infilter <subcommand> [options]
             overflow-free (docs/DESIGN.md §11)
             [--bits W (10)] [--acc-bits N (24)] [--clip-len L (16000)]
             [--sweep] [--scale S] [--epochs E]
+  chaos-soak  deterministic fault-injection soak: each round runs a
+            loopback gateway↔node workload behind a seeded chaos
+            proxy, then checks the accounting invariants and bit
+            parity of everything delivered (docs/OPERATIONS.md
+            §Chaos testing). Exits non-zero on the first violation,
+            printing the reproducing seed.
+            [--seed N] [--rounds R (8)] [--duration SECS (0 = use
+            --rounds)] [--faults k1,k2,... | all (all)] [--streams N
+            (4)] [--clips K (2)] [--nodes N (1)]
+            [--idle-timeout-ms M (500)] [--stats-listen ADDR]
+            [--stats-every N] [--stats-file PATH]
 
 common: --artifacts DIR --results DIR --seed N --threads N
         --gamma-f X --gamma-1 X --log LEVEL";
@@ -116,6 +128,7 @@ fn run(args: &Args) -> Result<()> {
         Some("edge-roc") => cmd_edge_roc(&cfg),
         Some("fpga-sim") => cmd_fpga_sim(),
         Some("analyze") => cmd_analyze(&cfg, args),
+        Some("chaos-soak") => cmd_chaos_soak(args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -380,6 +393,125 @@ fn cmd_serve_remote(cfg: &AppConfig, args: &Args, connect: &str) -> Result<()> {
     );
     let (report, _results) = serve_on(pool, model.classes.len(), &scfg)?;
     println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_chaos_soak(args: &Args) -> Result<()> {
+    let stats = infilter::telemetry::StatsRuntime::from_args(args)?;
+    let res = cmd_chaos_soak_inner(args);
+    stats.finish();
+    res
+}
+
+fn cmd_chaos_soak_inner(args: &Args) -> Result<()> {
+    use infilter::net::chaos::{self, FaultKind, Invariants, ScenarioConfig};
+    use std::time::{Duration, Instant};
+
+    let seed = args.get_u64("seed", 0x11F1_17E4);
+    let rounds = args.get_usize("rounds", 8);
+    let duration = args.get_u64("duration", 0);
+    let faults: Vec<FaultKind> = match args.get("faults") {
+        None | Some("all") => FaultKind::ALL.to_vec(),
+        Some(csv) => csv
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(FaultKind::parse)
+            .collect::<Result<Vec<_>>>()?,
+    };
+    if faults.is_empty() {
+        bail!("--faults selected an empty set");
+    }
+    let streams = args.get_u64("streams", 4);
+    let clips = args.get_u64("clips", 2);
+    let nodes = args.get_usize("nodes", 1);
+    let idle_ms = args.get_u64("idle-timeout-ms", 500);
+    let idle_timeout = if idle_ms > 0 {
+        Some(Duration::from_millis(idle_ms))
+    } else {
+        None
+    };
+
+    chaos::register_chaos_metrics();
+    let names: Vec<&str> = faults.iter().map(|k| k.name()).collect();
+    let repro = |through_round: usize| {
+        format!(
+            "REPRODUCE: infilter chaos-soak --seed {seed} --faults {} --rounds {} \
+             --streams {streams} --clips {clips} --nodes {nodes} --idle-timeout-ms {idle_ms}",
+            names.join(","),
+            through_round + 1
+        )
+    };
+    println!(
+        "chaos-soak: seed {seed} | fault pool [{}] | {streams} streams x {clips} clips on \
+         {nodes} node(s)",
+        names.join(",")
+    );
+    println!("  every failure below reproduces with: infilter chaos-soak --seed {seed}");
+
+    let t0 = Instant::now();
+    let mut seeder = Pcg32::substream(seed, 0xC4A0_5);
+    let mut round = 0usize;
+    let mut total_faults = 0u64;
+    let mut total_clips = 0u64;
+    loop {
+        if duration > 0 {
+            if t0.elapsed() >= Duration::from_secs(duration) {
+                break;
+            }
+        } else if round >= rounds {
+            break;
+        }
+        // The round seed drives the workload, the fault schedule, and
+        // every proxy decision — no ambient entropy anywhere.
+        let round_seed = seeder.next_u64();
+        let mut rng = Pcg32::new(round_seed);
+        let n = 1 + rng.below(3) as usize;
+        let schedule: Vec<FaultKind> = (0..n)
+            .map(|_| faults[rng.below(faults.len() as u32) as usize])
+            .collect();
+        let lethal = schedule.iter().any(|k| k.lethal());
+        let cfg = ScenarioConfig {
+            seed: round_seed,
+            faults: schedule.clone(),
+            streams,
+            clips_per_stream: clips,
+            nodes,
+            io_timeout: Duration::from_secs(2),
+            idle_timeout,
+        };
+        let out = chaos::run_scenario(&cfg).with_context(|| repro(round))?;
+        let mut inv = Invariants::new(out.clips_pushed).seeded(round_seed).pool(nodes);
+        if !lethal {
+            // Only delay/throttle scheduled: shaping must never lose
+            // or abort anything.
+            inv = inv.lossless();
+        }
+        let verdict = inv
+            .check(&out.report)
+            .and_then(|()| inv.check_results(&out.report, &out.results, &out.reference));
+        if let Err(e) = verdict {
+            log_warn!("chaos-soak: invariant violation in round {round}");
+            bail!("{e:#}\n{}", repro(round));
+        }
+        total_faults += out.faults_injected;
+        total_clips += out.clips_pushed;
+        log_info!(
+            "chaos-soak round {round}: [{}] -> {} fault(s) injected; {} classified / {} \
+             aborted / {} frames dropped of {} clips pushed",
+            schedule.iter().map(|k| k.name()).collect::<Vec<_>>().join(","),
+            out.faults_injected,
+            out.report.clips_classified,
+            out.report.clips_aborted,
+            out.report.frames_dropped,
+            out.clips_pushed
+        );
+        round += 1;
+    }
+    println!(
+        "chaos-soak OK: {round} round(s), {total_clips} clips pushed, {total_faults} fault(s) \
+         injected, every invariant held (seed {seed})"
+    );
     Ok(())
 }
 

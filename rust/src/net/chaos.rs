@@ -1,0 +1,1313 @@
+//! Deterministic chaos harness for the cross-process serving stack:
+//! wire-level fault injection, node-side crash/stall points, and the
+//! accounting-invariant checker that every failover test asserts.
+//!
+//! Three building blocks, composable but independent:
+//!
+//! * [`ChaosProxy`] — a seeded in-process TCP fault proxy that sits
+//!   between a gateway ([`RemoteLane`]/[`RemotePool`]) and
+//!   [`serve_node`](super::node::serve_node) on loopback and executes a
+//!   [`FaultPlan`]: a reproducible schedule of wire faults (delay,
+//!   throttle, drop, half-close, RST, stall, truncate-mid-frame, and
+//!   bit corruption of the length prefix or the payload, separately
+//!   selectable). All randomness comes from the plan-owned
+//!   [`Pcg32`] stream — no ambient entropy — so a failing run replays
+//!   exactly from its seed.
+//! * [`NodeFaultPoint`] / [`arm_node_fault`] — labelled crash/stall
+//!   points inside the node session itself (admission, mid-compute,
+//!   pre-`DrainAck`, pre-`FlushAck` — the barrier edges `docs/WIRE.md`
+//!   specifies), generalizing the gateway-side
+//!   `RemoteLane::inject_link_failure` hook to the other end of the
+//!   wire.
+//! * [`Invariants`] — the accounting contract over a merged
+//!   [`ServeReport`]: classified + aborted never exceeds the clips
+//!   pushed, every unresolved clip left at least one accounted frame
+//!   drop, no double-count across reconnect/re-route, and (for pools)
+//!   per-lane sums equal the pool totals. Violations increment
+//!   `gateway_invariant_violations_total` and carry the reproducing
+//!   seed in their message.
+//!
+//! [`run_scenario`] wires the three together into one bounded, seeded
+//! end-to-end round (nodes + proxies + gateway + local bit-parity
+//! reference); `tests/net_chaos.rs` and the `infilter chaos-soak`
+//! subcommand are both thin drivers over it. The operational story —
+//! fault taxonomy, seed-reproduction workflow, counters — lives in
+//! `docs/OPERATIONS.md` §Chaos testing.
+//!
+//! [`RemoteLane`]: super::lane::RemoteLane
+//! [`RemotePool`]: super::lane::RemotePool
+//! [`Pcg32`]: crate::util::prng::Pcg32
+
+use super::lane::{RemoteConfig, RemotePool};
+use super::node::{pipeline_factory, serve_node_until, NodeConfig, NodeShutdown};
+use super::proto::MAX_MSG_BYTES;
+use crate::coordinator::dispatch::{Lane, PipelineBuilder};
+use crate::coordinator::metrics::ServeReport;
+use crate::coordinator::{ClassifyResult, FrameTask};
+use crate::dsp::multirate::BandPlan;
+use crate::runtime::backend::{CpuEngine, InferenceBackend};
+use crate::telemetry::registry;
+use crate::train::TrainedModel;
+use crate::util::prng::Pcg32;
+use crate::{log_info, log_warn};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// fault taxonomy
+// ---------------------------------------------------------------------
+
+/// One kind of wire fault the proxy can inject on a connection. The
+/// taxonomy (and which WIRE.md state machine each kind stresses) is
+/// tabulated in `docs/OPERATIONS.md` §Chaos testing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// fixed + jittered per-message latency, both directions (non-lethal)
+    Delay,
+    /// bandwidth cap: sleep proportional to bytes forwarded (non-lethal)
+    Throttle,
+    /// close both directions at the trigger message (orderly FIN)
+    DropConn,
+    /// half-close toward the node: it sees a clean EOF mid-stream and
+    /// runs its normal teardown while the gateway keeps pushing into
+    /// the void
+    HalfClose,
+    /// abrupt close that leaves received-but-unforwarded bytes unread,
+    /// so the kernel answers the gateway with RST instead of FIN
+    /// (best-effort: when no bytes are pending the peer sees a FIN —
+    /// the same death contract either way)
+    Rst,
+    /// accept the gateway's bytes but stop forwarding for a bounded
+    /// window, then kill the connection — a wedged-but-open peer
+    Stall,
+    /// forward a frame's length header but only half its payload, then
+    /// close: the node dies mid-`read_exact`
+    TruncateFrame,
+    /// flip a high bit of the u32 length prefix: the node's decoder
+    /// must reject the frame *before* allocating for it (lengths are
+    /// bounded by [`MAX_MSG_BYTES`])
+    CorruptLen,
+    /// flip one bit of the payload's first byte (the message type):
+    /// every such flip is session-fatal on the node, and sample data is
+    /// never touched, so delivered results stay bit-exact
+    CorruptPayload,
+}
+
+impl FaultKind {
+    /// Every kind, in the canonical order used by `--faults all`.
+    pub const ALL: [FaultKind; 9] = [
+        FaultKind::Delay,
+        FaultKind::Throttle,
+        FaultKind::DropConn,
+        FaultKind::HalfClose,
+        FaultKind::Rst,
+        FaultKind::Stall,
+        FaultKind::TruncateFrame,
+        FaultKind::CorruptLen,
+        FaultKind::CorruptPayload,
+    ];
+
+    /// Stable slug used in CLI `--faults` lists and in the
+    /// `chaos_fault_<name>_total` counter family.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Delay => "delay",
+            FaultKind::Throttle => "throttle",
+            FaultKind::DropConn => "drop",
+            FaultKind::HalfClose => "half_close",
+            FaultKind::Rst => "rst",
+            FaultKind::Stall => "stall",
+            FaultKind::TruncateFrame => "truncate",
+            FaultKind::CorruptLen => "corrupt_len",
+            FaultKind::CorruptPayload => "corrupt_payload",
+        }
+    }
+
+    /// Parse a [`name`](Self::name) slug back into its kind.
+    pub fn parse(s: &str) -> Result<FaultKind> {
+        FaultKind::ALL
+            .into_iter()
+            .find(|k| k.name() == s)
+            .with_context(|| {
+                let known: Vec<&str> = FaultKind::ALL.iter().map(|k| k.name()).collect();
+                format!("unknown fault kind '{s}' (known: {})", known.join(", "))
+            })
+    }
+
+    /// Whether this kind kills the connection it fires on. Non-lethal
+    /// kinds (delay, throttle) shape every message instead, and a run
+    /// under them must stay lossless.
+    pub fn lethal(self) -> bool {
+        !matches!(self, FaultKind::Delay | FaultKind::Throttle)
+    }
+}
+
+/// Per-connection fault parameters, sampled once from the plan's PRNG
+/// when the connection is accepted (so the schedule replays exactly).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct ConnFault {
+    kind: Option<FaultKind>,
+    /// 1-based index of the gateway→node message a lethal kind fires
+    /// on; sampled ≥ 3 so the Hello (message 1) always goes through
+    after_msgs: u64,
+    /// per-message fixed delay for [`FaultKind::Delay`]
+    delay: Duration,
+    /// max extra per-message jitter, microseconds
+    jitter_us: u32,
+    /// bandwidth cap for [`FaultKind::Throttle`], bytes/second
+    throttle_bps: u64,
+    /// absorb window for [`FaultKind::Stall`] — bounded well below any
+    /// sane gateway `io_timeout` so the death is observed as a death,
+    /// not as a barrier timeout
+    stall: Duration,
+    /// bit selector for the corruption kinds
+    bit: u32,
+    /// seed of the per-connection jitter stream
+    jitter_seed: u64,
+}
+
+/// A reproducible schedule of wire faults: connection *i* through the
+/// proxy executes the *i*-th scheduled [`FaultKind`]; connections past
+/// the end of the schedule pass through clean (which is what lets a
+/// gateway's reconnect land on a healthy session and the run
+/// terminate). All per-connection parameters are sampled from the
+/// plan-owned PRNG — the whole schedule is a pure function of the seed.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rng: Pcg32,
+    schedule: VecDeque<FaultKind>,
+}
+
+impl FaultPlan {
+    /// An empty (pure passthrough) plan. [`push`](Self::push) faults
+    /// onto it, or use [`with_faults`](Self::with_faults).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rng: Pcg32::substream(seed, 0xFA01),
+            schedule: VecDeque::new(),
+        }
+    }
+
+    /// A plan that injects `faults[i]` on the *i*-th connection.
+    pub fn with_faults(seed: u64, faults: &[FaultKind]) -> FaultPlan {
+        let mut plan = FaultPlan::new(seed);
+        plan.schedule.extend(faults.iter().copied());
+        plan
+    }
+
+    /// Append one fault to the per-connection schedule.
+    pub fn push(&mut self, kind: FaultKind) {
+        self.schedule.push_back(kind);
+    }
+
+    /// The seed this plan derives everything from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Sample the next connection's fault parameters (advances both the
+    /// schedule and the PRNG — one call per accepted connection).
+    fn next_conn(&mut self) -> ConnFault {
+        ConnFault {
+            kind: self.schedule.pop_front(),
+            after_msgs: 3 + u64::from(self.rng.below(6)),
+            delay: Duration::from_micros(500 + u64::from(self.rng.below(1500))),
+            jitter_us: 200,
+            throttle_bps: 128 * 1024 * u64::from(1 + self.rng.below(4)),
+            stall: Duration::from_millis(100 + u64::from(self.rng.below(200))),
+            bit: self.rng.next_u32(),
+            jitter_seed: self.rng.next_u64(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// telemetry
+// ---------------------------------------------------------------------
+
+/// Pre-register every chaos metric family so a scrape or JSONL snapshot
+/// taken before the first fault already names them at zero: the
+/// `chaos_faults_injected_total` roll-up, one `chaos_fault_<kind>_total`
+/// per [`FaultKind`], the node-side `chaos_node_faults_total`, and the
+/// gateway-side `gateway_invariant_violations_total`.
+pub fn register_chaos_metrics() {
+    let _ = registry().counter("chaos_faults_injected_total");
+    let _ = registry().counter("chaos_node_faults_total");
+    let _ = registry().counter("gateway_invariant_violations_total");
+    for k in FaultKind::ALL {
+        let _ = registry().counter(&format!("chaos_fault_{}_total", k.name()));
+    }
+}
+
+/// Count one injected fault: the shared total, the per-kind family, and
+/// the proxy's own counter. The per-kind names are dynamic, so this
+/// goes through the registry directly rather than the cached-handle
+/// macros (which cache per call-site, not per name).
+fn note_fault(total: &AtomicU64, kind: FaultKind) {
+    total.fetch_add(1, Ordering::Relaxed);
+    registry().counter("chaos_faults_injected_total").inc();
+    registry()
+        .counter(&format!("chaos_fault_{}_total", kind.name()))
+        .inc();
+}
+
+// ---------------------------------------------------------------------
+// the proxy
+// ---------------------------------------------------------------------
+
+/// A deterministic in-process TCP fault proxy. Point a gateway at
+/// [`addr`](Self::addr) instead of the node, and every connection is
+/// forwarded through a pair of pump threads that execute the
+/// [`FaultPlan`]: gateway→node traffic is forwarded *message-aware*
+/// (the length-prefixed framing is parsed, so faults can target frame
+/// boundaries, the length prefix, or the payload separately), node→
+/// gateway traffic is forwarded as raw chunks with the same
+/// delay/throttle shaping.
+///
+/// The proxy is fully bounded: [`stop`](Self::stop) (also called on
+/// drop) wakes every pump via its read timeout and joins all threads.
+pub struct ChaosProxy {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    faults: Arc<AtomicU64>,
+    conns: Arc<AtomicU64>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind a fresh loopback port and start proxying to `upstream`
+    /// under `plan`.
+    pub fn spawn(upstream: &str, plan: FaultPlan) -> Result<ChaosProxy> {
+        register_chaos_metrics();
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding the chaos proxy")?;
+        let addr = listener.local_addr().context("proxy address")?.to_string();
+        listener
+            .set_nonblocking(true)
+            .context("setting the proxy listener non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let faults = Arc::new(AtomicU64::new(0));
+        let conns = Arc::new(AtomicU64::new(0));
+        let upstream = upstream.to_string();
+        log_info!("chaos proxy on {addr} -> {upstream} (seed {:#x})", plan.seed());
+        let accept = std::thread::Builder::new()
+            .name("chaos-accept".to_string())
+            .spawn({
+                let (stop, faults, conns) = (stop.clone(), faults.clone(), conns.clone());
+                move || accept_loop(&listener, &upstream, plan, &stop, &faults, &conns)
+            })
+            .context("spawning the chaos accept loop")?;
+        Ok(ChaosProxy {
+            addr,
+            stop,
+            faults,
+            conns,
+            accept: Some(accept),
+        })
+    }
+
+    /// The loopback address gateways should dial.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// How many faults have fired so far (non-lethal shaping counts
+    /// once per connection it applies to).
+    pub fn faults_injected(&self) -> u64 {
+        self.faults.load(Ordering::Relaxed)
+    }
+
+    /// How many connections have been accepted (and matched against the
+    /// plan's schedule).
+    pub fn connections(&self) -> u64 {
+        self.conns.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, kill every in-flight pump, and join all proxy
+    /// threads. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    upstream: &str,
+    mut plan: FaultPlan,
+    stop: &Arc<AtomicBool>,
+    faults: &Arc<AtomicU64>,
+    conns: &Arc<AtomicU64>,
+) {
+    let mut pumps: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        pumps.retain(|h| !h.is_finished());
+        match listener.accept() {
+            Ok((client, _)) => {
+                conns.fetch_add(1, Ordering::Relaxed);
+                let fault = plan.next_conn();
+                match proxy_conn(client, upstream, fault, stop, faults) {
+                    Ok((up, down)) => pumps.extend([up, down]),
+                    Err(e) => log_warn!("chaos proxy: connection setup failed: {e:#}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                log_warn!("chaos proxy: accept failed: {e:#}");
+                break;
+            }
+        }
+    }
+    for h in pumps {
+        let _ = h.join();
+    }
+}
+
+/// Set up one proxied connection: dial the upstream node and start the
+/// two pump threads. Pump reads run under a short read timeout and
+/// re-check the stop flag, so `ChaosProxy::stop` always terminates
+/// them.
+fn proxy_conn(
+    client: TcpStream,
+    upstream: &str,
+    fault: ConnFault,
+    stop: &Arc<AtomicBool>,
+    faults: &Arc<AtomicU64>,
+) -> Result<(JoinHandle<()>, JoinHandle<()>)> {
+    client.set_nonblocking(false).context("client blocking mode")?;
+    client.set_nodelay(true).ok();
+    let node = TcpStream::connect(upstream)
+        .with_context(|| format!("chaos proxy dialing upstream {upstream}"))?;
+    node.set_nodelay(true).ok();
+    // read timeouts double as the stop-flag poll interval; write
+    // timeouts bound a pump wedged against a dead peer
+    let poll = Duration::from_millis(50);
+    client.set_read_timeout(Some(poll)).ok();
+    node.set_read_timeout(Some(poll)).ok();
+    client.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    node.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    let client_w = client.try_clone().context("cloning the client socket")?;
+    let node_w = node.try_clone().context("cloning the node socket")?;
+    let up = std::thread::Builder::new()
+        .name("chaos-up".to_string())
+        .spawn({
+            let (stop, faults) = (stop.clone(), faults.clone());
+            move || pump_up(client, node_w, fault, &stop, &faults)
+        })
+        .context("spawning the up pump")?;
+    let down = std::thread::Builder::new()
+        .name("chaos-down".to_string())
+        .spawn({
+            let stop = stop.clone();
+            move || pump_down(node, client_w, fault, &stop)
+        })
+        .context("spawning the down pump")?;
+    Ok((up, down))
+}
+
+/// Fill `buf` from `s`, treating timeout wakeups as stop-flag polls.
+/// `Ok(false)` is a clean EOF before the first byte; EOF mid-buffer and
+/// a raised stop flag are errors.
+fn read_full(s: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> std::io::Result<bool> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Err(std::io::Error::other("chaos proxy stopped"));
+        }
+        match s.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => return Err(std::io::Error::other("peer closed mid-message")),
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read-and-discard from `s` until EOF, an error, the stop flag, or
+/// (when given) the bounded window elapses — the "wedged but open peer"
+/// behaviour behind [`FaultKind::Stall`] and the tail of
+/// [`FaultKind::HalfClose`].
+fn absorb(s: &mut TcpStream, stop: &AtomicBool, window: Option<Duration>) {
+    let t0 = Instant::now();
+    let mut sink = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::Relaxed) || window.is_some_and(|w| t0.elapsed() >= w) {
+            return;
+        }
+        match s.read(&mut sink) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// The gateway→node direction, forwarded message by message so faults
+/// can target the framing itself. Returns when either side dies, a
+/// lethal fault fires, or the proxy stops.
+fn pump_up(
+    mut client: TcpStream,
+    mut node: TcpStream,
+    fault: ConnFault,
+    stop: &AtomicBool,
+    faults: &AtomicU64,
+) {
+    let mut jitter = Pcg32::new(fault.jitter_seed);
+    let mut hdr = [0u8; 4];
+    let mut payload: Vec<u8> = Vec::new();
+    let mut msg_idx = 0u64;
+    let mut shaped = false;
+    loop {
+        match read_full(&mut client, &mut hdr, stop) {
+            Ok(true) => {}
+            Ok(false) => {
+                // clean gateway EOF at a boundary: propagate the
+                // half-close; the down pump finishes the node's tail
+                let _ = node.shutdown(Shutdown::Write);
+                return;
+            }
+            Err(_) => {
+                let _ = node.shutdown(Shutdown::Both);
+                let _ = client.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        if len == 0 || len > MAX_MSG_BYTES {
+            // our own gateway never produces this; treat as a dead link
+            log_warn!("chaos proxy: unparseable upstream framing (len {len})");
+            let _ = node.shutdown(Shutdown::Both);
+            let _ = client.shutdown(Shutdown::Both);
+            return;
+        }
+        payload.resize(len, 0);
+        if !matches!(read_full(&mut client, &mut payload, stop), Ok(true)) {
+            let _ = node.shutdown(Shutdown::Both);
+            let _ = client.shutdown(Shutdown::Both);
+            return;
+        }
+        msg_idx += 1;
+        // non-lethal shaping applies to every message
+        match fault.kind {
+            Some(FaultKind::Delay) => {
+                if !shaped {
+                    shaped = true;
+                    note_fault(faults, FaultKind::Delay);
+                }
+                let extra = u64::from(jitter.below(fault.jitter_us.max(1)));
+                std::thread::sleep(fault.delay + Duration::from_micros(extra));
+            }
+            Some(FaultKind::Throttle) => {
+                if !shaped {
+                    shaped = true;
+                    note_fault(faults, FaultKind::Throttle);
+                }
+                let us = (len as u64 + 4) * 1_000_000 / fault.throttle_bps.max(1);
+                std::thread::sleep(Duration::from_micros(us));
+            }
+            _ => {}
+        }
+        if fault.kind.is_some_and(FaultKind::lethal) && msg_idx == fault.after_msgs {
+            let kind = fault.kind.expect("lethal implies a kind");
+            note_fault(faults, kind);
+            match kind {
+                FaultKind::DropConn => {
+                    let _ = node.shutdown(Shutdown::Both);
+                    let _ = client.shutdown(Shutdown::Both);
+                    return;
+                }
+                FaultKind::HalfClose => {
+                    // the node sees a clean EOF and runs its teardown;
+                    // we keep absorbing the gateway's pushes until it
+                    // notices the death and closes its end
+                    let _ = node.shutdown(Shutdown::Write);
+                    absorb(&mut client, stop, None);
+                    let _ = client.shutdown(Shutdown::Both);
+                    let _ = node.shutdown(Shutdown::Both);
+                    return;
+                }
+                FaultKind::Rst => {
+                    // let the gateway's next bytes pile up unread, kill
+                    // the node side, and drop our client dups without
+                    // reading: closing a socket with unread data makes
+                    // the kernel answer with RST (best-effort — with
+                    // nothing pending the peer sees a FIN, which
+                    // exercises the identical death contract)
+                    std::thread::sleep(Duration::from_millis(20));
+                    let _ = node.shutdown(Shutdown::Both);
+                    return;
+                }
+                FaultKind::Stall => {
+                    absorb(&mut client, stop, Some(fault.stall));
+                    let _ = node.shutdown(Shutdown::Both);
+                    let _ = client.shutdown(Shutdown::Both);
+                    return;
+                }
+                FaultKind::TruncateFrame => {
+                    let keep = len / 2;
+                    if node.write_all(&hdr).is_ok() {
+                        let _ = node.write_all(&payload[..keep]);
+                    }
+                    let _ = node.shutdown(Shutdown::Both);
+                    let _ = client.shutdown(Shutdown::Both);
+                    return;
+                }
+                FaultKind::CorruptLen => {
+                    // flip one of bits 27..32: real payloads are under
+                    // 2^26 B, so the corrupted length always exceeds
+                    // MAX_MSG_BYTES and the node must reject it before
+                    // allocating. The session dies on the node's terms.
+                    let bit = 27 + (fault.bit % 5);
+                    let mut bad = hdr;
+                    bad[(bit / 8) as usize] ^= 1 << (bit % 8);
+                    if node.write_all(&bad).is_err() || node.write_all(&payload).is_err() {
+                        let _ = node.shutdown(Shutdown::Both);
+                        let _ = client.shutdown(Shutdown::Both);
+                        return;
+                    }
+                    continue; // keep pumping until the node closes on us
+                }
+                FaultKind::CorruptPayload => {
+                    // flip a bit of the message-type byte: every such
+                    // flip is session-fatal node-side, and sample data
+                    // is never corrupted (delivered results must stay
+                    // bit-exact)
+                    payload[0] ^= 1u8 << (fault.bit % 8);
+                }
+                FaultKind::Delay | FaultKind::Throttle => unreachable!("non-lethal"),
+            }
+        }
+        if node.write_all(&hdr).is_err() || node.write_all(&payload).is_err() {
+            let _ = node.shutdown(Shutdown::Both);
+            let _ = client.shutdown(Shutdown::Both);
+            return;
+        }
+    }
+}
+
+/// The node→gateway direction: raw chunk forwarding with the same
+/// delay/throttle shaping (results and credit grants ride this path).
+fn pump_down(mut node: TcpStream, mut client: TcpStream, fault: ConnFault, stop: &AtomicBool) {
+    let mut jitter = Pcg32::new(fault.jitter_seed ^ 0xD0D0);
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            let _ = node.shutdown(Shutdown::Both);
+            let _ = client.shutdown(Shutdown::Both);
+            return;
+        }
+        let n = match node.read(&mut buf) {
+            Ok(0) => {
+                let _ = client.shutdown(Shutdown::Write);
+                return;
+            }
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => {
+                let _ = client.shutdown(Shutdown::Both);
+                return;
+            }
+        };
+        match fault.kind {
+            Some(FaultKind::Delay) => {
+                let extra = u64::from(jitter.below(fault.jitter_us.max(1)));
+                std::thread::sleep(fault.delay + Duration::from_micros(extra));
+            }
+            Some(FaultKind::Throttle) => {
+                let us = n as u64 * 1_000_000 / fault.throttle_bps.max(1);
+                std::thread::sleep(Duration::from_micros(us));
+            }
+            _ => {}
+        }
+        if client.write_all(&buf[..n]).is_err() {
+            let _ = node.shutdown(Shutdown::Both);
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// node-side fault points
+// ---------------------------------------------------------------------
+
+/// Labelled places inside a node session where a chaos run can inject a
+/// crash or stall — the wire-protocol edges `docs/WIRE.md` names, where
+/// a death is hardest for the gateway's accounting to survive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeFaultPoint {
+    /// right after the session took its `max_sessions` slot, before any
+    /// lane exists (the gateway is still waiting for its Welcome)
+    Admission,
+    /// in the compute loop, immediately after frames made progress
+    MidCompute,
+    /// after a drain's results went out but before the `DrainAck`
+    PreDrainAck,
+    /// after flushed tails went out but before the `FlushAck`
+    PreFlushAck,
+}
+
+/// What an armed [`NodeFaultPoint`] does when a session reaches it.
+#[derive(Clone, Copy, Debug)]
+pub enum NodeFaultAction {
+    /// fail the session with an error, as an in-process crash would —
+    /// the gateway observes a dead link and must fail over
+    CrashSession,
+    /// block the session thread for the given window, then continue
+    Stall(Duration),
+}
+
+static NODE_FAULTS_ARMED: AtomicUsize = AtomicUsize::new(0);
+static NODE_FAULTS: Mutex<Vec<(NodeFaultPoint, NodeFaultAction)>> = Mutex::new(Vec::new());
+
+fn with_fault_table<T>(f: impl FnOnce(&mut Vec<(NodeFaultPoint, NodeFaultAction)>) -> T) -> T {
+    let mut table = NODE_FAULTS.lock().unwrap_or_else(PoisonError::into_inner);
+    let out = f(&mut table);
+    NODE_FAULTS_ARMED.store(table.len(), Ordering::SeqCst);
+    out
+}
+
+/// Arm a one-shot fault at `point`: the next node session (in this
+/// process) to reach it consumes the entry and executes `action`. The
+/// table is process-global — test suites that arm faults must serialize
+/// against other node-spawning tests in the same binary.
+pub fn arm_node_fault(point: NodeFaultPoint, action: NodeFaultAction) {
+    with_fault_table(|t| t.push((point, action)));
+}
+
+/// Clear every armed node fault (test hygiene).
+pub fn disarm_node_faults() {
+    with_fault_table(Vec::clear);
+}
+
+/// The hook the node session calls at each labelled point. Unarmed
+/// (the production state) this is a single relaxed atomic load. An
+/// armed [`NodeFaultAction::CrashSession`] surfaces as an `Err`, which
+/// the session layer treats exactly like any internal failure.
+pub fn node_fault_point(point: NodeFaultPoint) -> Result<()> {
+    if NODE_FAULTS_ARMED.load(Ordering::Relaxed) == 0 {
+        return Ok(());
+    }
+    let action = with_fault_table(|t| {
+        t.iter()
+            .position(|(p, _)| *p == point)
+            .map(|i| t.remove(i).1)
+    });
+    let Some(action) = action else {
+        return Ok(());
+    };
+    registry().counter("chaos_faults_injected_total").inc();
+    registry().counter("chaos_node_faults_total").inc();
+    match action {
+        NodeFaultAction::CrashSession => bail!("chaos: injected session crash at {point:?}"),
+        NodeFaultAction::Stall(d) => {
+            log_warn!("chaos: injected {d:?} stall at {point:?}");
+            std::thread::sleep(d);
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the accounting-invariant checker
+// ---------------------------------------------------------------------
+
+/// The accounting contract every merged [`ServeReport`] must satisfy,
+/// with optional tighteners for runs whose shape guarantees more. The
+/// universal base contract (checked always):
+///
+/// * `clips_classified + clips_aborted <= clips_pushed` — a clip
+///   resolves **at most once**, across any number of reconnects and
+///   re-routes (the at-most-once contract of `docs/WIRE.md`).
+/// * `clips_pushed - clips_classified - clips_aborted <=
+///   frames_dropped` — a clip may legitimately resolve as *neither*
+///   (its frames were shed at push time, or it was pruned complete-but-
+///   unresolved at a barrier after a credit-stall shed), but every such
+///   clip must have left at least one accounted dropped frame. Silent
+///   loss is the bug class this catches.
+/// * `clips_correct <= clips_classified`, `clips_padded <=
+///   clips_classified`.
+///
+/// Builder knobs: [`lossless`](Self::lossless) for runs where nothing
+/// may be lost (equality plus zero drops/aborts), [`exact`](Self::exact)
+/// for runs where every push completed before any kill (so `classified
+/// + aborted == pushed` exactly), [`pool`](Self::pool) for pool-merged
+/// reports (per-lane rows sum to the totals), and
+/// [`seeded`](Self::seeded) so every violation message carries the
+/// reproducing seed. Each violation also increments
+/// `gateway_invariant_violations_total`.
+#[derive(Clone, Copy, Debug)]
+pub struct Invariants {
+    clips_pushed: u64,
+    seed: Option<u64>,
+    lossless: bool,
+    exact: bool,
+    pool: Option<usize>,
+}
+
+impl Invariants {
+    /// Check against a workload of `clips_pushed` clips offered to the
+    /// lane (complete clips: every frame was pushed or shed-and-counted
+    /// by the lane itself).
+    pub fn new(clips_pushed: u64) -> Invariants {
+        Invariants {
+            clips_pushed,
+            seed: None,
+            lossless: false,
+            exact: false,
+            pool: None,
+        }
+    }
+
+    /// Tag every violation with the reproducing seed.
+    pub fn seeded(mut self, seed: u64) -> Invariants {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// The run had no faults (or only non-lethal shaping): zero drops,
+    /// zero aborts, zero padding, and every pushed clip classified.
+    pub fn lossless(mut self) -> Invariants {
+        self.lossless = true;
+        self
+    }
+
+    /// Every push completed before any kill, so each clip is *exactly*
+    /// classified or aborted: `classified + aborted == pushed`.
+    pub fn exact(mut self) -> Invariants {
+        self.exact = true;
+        self
+    }
+
+    /// The report is a pool merge over `nodes` nodes: one per-lane row
+    /// per node, and the rows sum to the pool totals. (Do not use on a
+    /// single `RemoteLane`'s report — its rows describe the node's
+    /// *internal* lanes, not pool membership.)
+    pub fn pool(mut self, nodes: usize) -> Invariants {
+        self.pool = Some(nodes);
+        self
+    }
+
+    fn tag(&self) -> String {
+        match self.seed {
+            Some(s) => format!("[chaos seed {s:#x}] "),
+            None => String::new(),
+        }
+    }
+
+    /// Every violated invariant, as human-readable messages (empty =
+    /// the report honours the contract). Each violation increments
+    /// `gateway_invariant_violations_total`.
+    pub fn violations(&self, r: &ServeReport) -> Vec<String> {
+        let tag = self.tag();
+        let mut v: Vec<String> = Vec::new();
+        let resolved = r.clips_classified + r.clips_aborted;
+        if resolved > self.clips_pushed {
+            v.push(format!(
+                "{tag}double-count: classified {} + aborted {} > {} clips pushed",
+                r.clips_classified, r.clips_aborted, self.clips_pushed
+            ));
+        }
+        let unresolved = self.clips_pushed.saturating_sub(resolved);
+        if unresolved > r.frames_dropped {
+            v.push(format!(
+                "{tag}silent loss: {unresolved} unresolved clips but only {} dropped \
+                 frames accounted (classified {}, aborted {}, pushed {})",
+                r.frames_dropped, r.clips_classified, r.clips_aborted, self.clips_pushed
+            ));
+        }
+        if r.clips_correct > r.clips_classified {
+            v.push(format!(
+                "{tag}correct {} exceeds classified {}",
+                r.clips_correct, r.clips_classified
+            ));
+        }
+        if r.clips_padded > r.clips_classified {
+            v.push(format!(
+                "{tag}padded {} exceeds classified {}",
+                r.clips_padded, r.clips_classified
+            ));
+        }
+        if self.exact && resolved != self.clips_pushed {
+            v.push(format!(
+                "{tag}exact accounting violated: classified {} + aborted {} != {} pushed",
+                r.clips_classified, r.clips_aborted, self.clips_pushed
+            ));
+        }
+        if self.lossless {
+            if r.clips_classified != self.clips_pushed {
+                v.push(format!(
+                    "{tag}lossless run classified {} of {} clips",
+                    r.clips_classified, self.clips_pushed
+                ));
+            }
+            for (name, n) in [
+                ("frames_dropped", r.frames_dropped),
+                ("clips_aborted", r.clips_aborted),
+                ("clips_padded", r.clips_padded),
+            ] {
+                if n != 0 {
+                    v.push(format!("{tag}lossless run has {name} = {n}"));
+                }
+            }
+        }
+        if let Some(nodes) = self.pool {
+            if r.per_lane.len() != nodes {
+                v.push(format!(
+                    "{tag}pool merge has {} per-lane rows, expected one per node ({nodes})",
+                    r.per_lane.len()
+                ));
+            }
+            let clips: u64 = r.per_lane.iter().map(|l| l.clips).sum();
+            if clips != r.clips_classified {
+                v.push(format!(
+                    "{tag}per-lane clips sum {clips} != pool classified {}",
+                    r.clips_classified
+                ));
+            }
+            let dropped: u64 = r.per_lane.iter().map(|l| l.frames_dropped).sum();
+            if dropped != r.frames_dropped {
+                v.push(format!(
+                    "{tag}per-lane dropped sum {dropped} != pool frames_dropped {}",
+                    r.frames_dropped
+                ));
+            }
+        }
+        registry()
+            .counter("gateway_invariant_violations_total")
+            .add(v.len() as u64);
+        v
+    }
+
+    /// [`violations`](Self::violations) as a `Result`, every message
+    /// joined (and seed-tagged) in the error.
+    pub fn check(&self, r: &ServeReport) -> Result<()> {
+        let v = self.violations(r);
+        ensure!(
+            v.is_empty(),
+            "accounting invariants violated:\n  {}",
+            v.join("\n  ")
+        );
+        Ok(())
+    }
+
+    /// Panicking form of [`check`](Self::check) for test suites.
+    pub fn assert_ok(&self, r: &ServeReport) {
+        if let Err(e) = self.check(r) {
+            panic!("{e:#}");
+        }
+    }
+
+    /// Check the delivered results against the report and a local
+    /// bit-parity reference: exactly `clips_classified` results, no
+    /// duplicate `(stream, clip)` key (the observable form of a
+    /// double-count across reconnect/re-route), and every delivered
+    /// result bit-identical to the reference's result for that clip.
+    /// Under [`lossless`](Self::lossless) the delivered set must cover
+    /// the whole reference (full parity); otherwise it may be any
+    /// subset (accounted loss). This is the *bit-parity-or-accounted-
+    /// loss* half of the chaos contract; [`check`](Self::check) is the
+    /// counter half.
+    pub fn check_results(
+        &self,
+        report: &ServeReport,
+        results: &[ClassifyResult],
+        reference: &[ClassifyResult],
+    ) -> Result<()> {
+        let tag = self.tag();
+        let mut by_clip: HashMap<(u64, u64), &ClassifyResult> = HashMap::new();
+        for r in reference {
+            by_clip.insert((r.stream, r.clip_seq), r);
+        }
+        ensure!(
+            results.len() as u64 == report.clips_classified,
+            "{tag}{} delivered results but clips_classified = {}",
+            results.len(),
+            report.clips_classified
+        );
+        let mut seen: HashSet<(u64, u64)> = HashSet::new();
+        for r in results {
+            ensure!(
+                seen.insert((r.stream, r.clip_seq)),
+                "{tag}duplicate result for stream {} clip {} — double-count across \
+                 reconnect/re-route",
+                r.stream,
+                r.clip_seq
+            );
+            let expect = by_clip.get(&(r.stream, r.clip_seq)).with_context(|| {
+                format!(
+                    "{tag}result for stream {} clip {} not in the reference workload",
+                    r.stream, r.clip_seq
+                )
+            })?;
+            ensure!(
+                r.predicted == expect.predicted && r.label == expect.label,
+                "{tag}prediction parity broken (stream {} clip {}): remote {} vs local {}",
+                r.stream,
+                r.clip_seq,
+                r.predicted,
+                expect.predicted
+            );
+            ensure!(
+                r.p.len() == expect.p.len()
+                    && r.p.iter().zip(&expect.p).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{tag}score bit-parity broken (stream {} clip {})",
+                r.stream,
+                r.clip_seq
+            );
+        }
+        if self.lossless {
+            ensure!(
+                results.len() == reference.len(),
+                "{tag}lossless run delivered {} of {} reference clips",
+                results.len(),
+                reference.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Panicking form of [`check_results`](Self::check_results) for
+    /// test suites.
+    pub fn assert_results(
+        &self,
+        report: &ServeReport,
+        results: &[ClassifyResult],
+        reference: &[ClassifyResult],
+    ) {
+        if let Err(e) = self.check_results(report, results, reference) {
+            panic!("{e:#}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the scenario runner
+// ---------------------------------------------------------------------
+
+/// One bounded, seeded chaos round: `nodes` loopback nodes each behind
+/// a [`ChaosProxy`] executing `faults`, a [`RemotePool`] gateway
+/// pushing a deterministic clip workload through drain + finish, and a
+/// local in-process run of the identical workload as the bit-parity
+/// reference.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    /// drives the workload, every fault plan, and all jitter
+    pub seed: u64,
+    /// per-connection fault schedule handed to **each** node's proxy
+    pub faults: Vec<FaultKind>,
+    pub streams: u64,
+    pub clips_per_stream: u64,
+    pub nodes: usize,
+    /// gateway-side I/O timeout; scenario stalls are sampled well below
+    /// it so a wedged link is observed as a death, not a barrier error
+    pub io_timeout: Duration,
+    /// node-side [`NodeConfig::session_idle_timeout`]
+    pub idle_timeout: Option<Duration>,
+}
+
+impl ScenarioConfig {
+    /// The bounded default used by tier-1 tests and `chaos-soak`
+    /// quick rounds: 4 streams × 2 clips on one node.
+    pub fn quick(seed: u64, faults: Vec<FaultKind>) -> ScenarioConfig {
+        ScenarioConfig {
+            seed,
+            faults,
+            streams: 4,
+            clips_per_stream: 2,
+            nodes: 1,
+            io_timeout: Duration::from_secs(2),
+            idle_timeout: None,
+        }
+    }
+}
+
+/// What [`run_scenario`] observed; feed `report` (and `results` against
+/// `reference`) to an [`Invariants`] built from `clips_pushed`.
+#[derive(Debug)]
+pub struct ScenarioOutcome {
+    pub report: ServeReport,
+    pub results: Vec<ClassifyResult>,
+    /// the same workload classified on a local in-process pipeline
+    pub reference: Vec<ClassifyResult>,
+    pub clips_pushed: u64,
+    /// faults the proxies actually fired (≥ 1 whenever a fault was
+    /// scheduled: the trigger index is sampled below the workload size)
+    pub faults_injected: u64,
+}
+
+/// The tiny fixed geometry every scenario runs: 2-octave band plan,
+/// 64-sample frames, 2 frames per clip at 16 kHz (the same fixture the
+/// loopback/failover suites use — milliseconds per clip).
+fn scenario_engine() -> CpuEngine {
+    let mut plan = BandPlan::paper_default();
+    plan.n_octaves = 2;
+    CpuEngine::with_clip(&plan, 1.0, 64, 2)
+}
+
+/// The deterministic workload: same seed, same samples, bit for bit.
+fn scenario_tasks(cfg: &ScenarioConfig) -> Vec<FrameTask> {
+    let mut out = Vec::new();
+    for s in 0..cfg.streams {
+        let mut rng = Pcg32::substream(cfg.seed ^ 0x5EED_C11F, s);
+        for clip in 0..cfg.clips_per_stream {
+            for f in 0..2usize {
+                out.push(FrameTask {
+                    stream: s,
+                    clip_seq: clip,
+                    frame_idx: f,
+                    data: (0..64).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                    label: (s % 3) as usize,
+                    t_gen: Instant::now(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Run one chaos scenario end to end. Deterministic given `cfg.seed`
+/// up to OS scheduling: *which* clips resolve as classified vs aborted
+/// can vary run to run, but the [`Invariants`] contract must hold for
+/// every outcome — that is exactly what makes the harness a property
+/// check rather than a golden test.
+pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioOutcome> {
+    ensure!(cfg.nodes >= 1, "a scenario needs at least one node");
+    ensure!(cfg.streams >= 1 && cfg.clips_per_stream >= 1, "empty workload");
+    register_chaos_metrics();
+    let model = TrainedModel::synthetic(7, 3, scenario_engine().n_filters(), 0.0, 1.0);
+    let fp = model.fingerprint();
+
+    let mut shutdowns = Vec::new();
+    let mut node_handles = Vec::new();
+    let mut proxies = Vec::new();
+    let mut addrs = Vec::new();
+    for i in 0..cfg.nodes {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding a scenario node")?;
+        let node_addr = listener.local_addr().context("node address")?.to_string();
+        let stop = NodeShutdown::new();
+        let ncfg = NodeConfig {
+            credits: 32,
+            session_idle_timeout: cfg.idle_timeout,
+            ..NodeConfig::default()
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("chaos-node-{i}"))
+            .spawn({
+                let (stop, model) = (stop.clone(), model.clone());
+                move || {
+                    let factory = pipeline_factory(scenario_engine(), model, 64);
+                    if let Err(e) = serve_node_until(listener, factory, fp, ncfg, None, stop) {
+                        log_warn!("chaos scenario node failed: {e:#}");
+                    }
+                }
+            })
+            .context("spawning a scenario node")?;
+        // each node gets its own substream so multi-node schedules do
+        // not mirror each other, while staying a pure function of seed
+        let plan_seed = Pcg32::substream(cfg.seed, i as u64).next_u64();
+        let proxy = ChaosProxy::spawn(&node_addr, FaultPlan::with_faults(plan_seed, &cfg.faults))?;
+        addrs.push(proxy.addr().to_string());
+        proxies.push(proxy);
+        shutdowns.push(stop);
+        node_handles.push(handle);
+    }
+
+    let rcfg = RemoteConfig {
+        io_timeout: cfg.io_timeout,
+        reconnect_attempts: 6,
+        reconnect_backoff: Duration::from_millis(5),
+        reconnect_max_backoff: Duration::from_millis(50),
+        ..RemoteConfig::default()
+    };
+    let mut pool = RemotePool::connect(&addrs, fp, rcfg)
+        .with_context(|| format!("chaos gateway connect (seed {:#x})", cfg.seed))?;
+
+    let clips_pushed = cfg.streams * cfg.clips_per_stream;
+    for t in scenario_tasks(cfg) {
+        // a false return is the lane shedding under a dead link — the
+        // loss is accounted inside the report, which is what the
+        // invariants verify
+        let _ = pool.push(t);
+    }
+    Lane::drain(&mut pool)
+        .with_context(|| format!("chaos drain barrier (seed {:#x})", cfg.seed))?;
+    let (report, results) = Lane::finish(pool)
+        .with_context(|| format!("chaos gateway finish (seed {:#x})", cfg.seed))?;
+
+    let faults_injected = proxies.iter().map(ChaosProxy::faults_injected).sum();
+    for stop in &shutdowns {
+        stop.shutdown();
+    }
+    for h in node_handles {
+        let _ = h.join();
+    }
+    for mut p in proxies {
+        p.stop();
+    }
+
+    let reference = {
+        let mut lane = PipelineBuilder::new(scenario_engine(), model)
+            .queue_capacity(64)
+            .build();
+        for t in scenario_tasks(cfg) {
+            Lane::push(&mut lane, t);
+        }
+        Lane::drain(&mut lane).context("reference drain")?;
+        let (_, mut rs) = Lane::finish(lane).context("reference finish")?;
+        rs.sort_by_key(|r| (r.stream, r.clip_seq));
+        rs
+    };
+
+    Ok(ScenarioOutcome {
+        report,
+        results,
+        reference,
+        clips_pushed,
+        faults_injected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_kind_slugs_roundtrip() {
+        for k in FaultKind::ALL {
+            assert_eq!(FaultKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(FaultKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn fault_plan_replays_from_its_seed() {
+        let faults = [FaultKind::Stall, FaultKind::Rst, FaultKind::Delay];
+        let mut a = FaultPlan::with_faults(42, &faults);
+        let mut b = FaultPlan::with_faults(42, &faults);
+        for _ in 0..8 {
+            assert_eq!(a.next_conn(), b.next_conn());
+        }
+        let mut c = FaultPlan::with_faults(43, &faults);
+        assert_ne!(a.next_conn(), c.next_conn(), "a new seed is a new schedule");
+    }
+
+    #[test]
+    fn lethal_triggers_spare_the_handshake() {
+        let mut plan = FaultPlan::with_faults(7, &[FaultKind::DropConn; 32]);
+        for _ in 0..32 {
+            let f = plan.next_conn();
+            assert!(f.after_msgs >= 3, "Hello (message 1) must pass");
+            assert!(f.after_msgs <= 8, "trigger lands inside a small workload");
+        }
+    }
+
+    #[test]
+    fn invariants_accept_a_clean_report() {
+        let r = ServeReport {
+            clips_classified: 8,
+            clips_correct: 5,
+            ..ServeReport::default()
+        };
+        Invariants::new(8).lossless().exact().assert_ok(&r);
+    }
+
+    #[test]
+    fn invariants_catch_double_count_and_silent_loss() {
+        let r = ServeReport {
+            clips_classified: 9, // 8 pushed: one clip counted twice
+            ..ServeReport::default()
+        };
+        let v = Invariants::new(8).seeded(0xabc).violations(&r);
+        assert!(!v.is_empty());
+        assert!(v[0].contains("double-count"), "{v:?}");
+        assert!(v[0].contains("0xabc"), "violations carry the seed: {v:?}");
+
+        let mut r = ServeReport {
+            clips_classified: 5, // 3 clips vanished with no drops accounted
+            ..ServeReport::default()
+        };
+        let v = Invariants::new(8).violations(&r);
+        assert!(v.iter().any(|m| m.contains("silent loss")), "{v:?}");
+
+        // the same shape IS legal once the drops are accounted
+        r.frames_dropped = 3;
+        assert!(Invariants::new(8).violations(&r).is_empty());
+    }
+
+    #[test]
+    fn pool_invariant_checks_per_lane_sums() {
+        let r = ServeReport {
+            clips_classified: 4,
+            per_lane: vec![
+                crate::coordinator::metrics::LaneStats {
+                    lane: 0,
+                    frames: 4,
+                    clips: 3,
+                    frames_dropped: 0,
+                },
+                crate::coordinator::metrics::LaneStats {
+                    lane: 1,
+                    frames: 2,
+                    clips: 2, // sums to 5, pool says 4
+                    frames_dropped: 0,
+                },
+            ],
+            ..ServeReport::default()
+        };
+        let v = Invariants::new(4).pool(2).violations(&r);
+        assert!(v.iter().any(|m| m.contains("per-lane clips sum")), "{v:?}");
+    }
+
+    #[test]
+    fn unarmed_node_fault_points_are_free_and_ok() {
+        for p in [
+            NodeFaultPoint::Admission,
+            NodeFaultPoint::MidCompute,
+            NodeFaultPoint::PreDrainAck,
+            NodeFaultPoint::PreFlushAck,
+        ] {
+            node_fault_point(p).unwrap();
+        }
+    }
+}

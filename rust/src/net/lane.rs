@@ -389,6 +389,7 @@ impl RemoteLane {
         crate::metric_counter!("gateway_credit_stalls_total");
         crate::metric_counter!("gateway_reconnects_total");
         crate::metric_counter!("gateway_reroutes_total");
+        crate::metric_counter!("gateway_invariant_violations_total");
         crate::metric_gauge!("gateway_queue_depth");
         crate::metric_hist!("gateway_credit_stall_us");
         crate::metric_hist!("gateway_wire_rtt_us");

@@ -42,10 +42,14 @@
 //! [`Pipeline`]: crate::coordinator::Pipeline
 //! [`ShardedPipeline`]: crate::coordinator::ShardedPipeline
 
+pub mod chaos;
 pub mod lane;
 pub mod node;
 pub mod proto;
 
+pub use chaos::{
+    ChaosProxy, FaultKind, FaultPlan, Invariants, NodeFaultAction, NodeFaultPoint,
+};
 pub use lane::{RemoteConfig, RemoteLane, RemotePool};
 pub use node::{serve_node, serve_node_until, NodeConfig, NodeShutdown};
 pub use proto::RejectCode;

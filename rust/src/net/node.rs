@@ -51,6 +51,16 @@ pub struct NodeConfig {
     /// a thread and a fresh compute lane, so this caps the node's
     /// compute and memory fan-out.
     pub max_sessions: usize,
+    /// how long an **established** session may sit with no traffic at a
+    /// message boundary before the node reaps it (`None` = never, the
+    /// pre-PR-8 behaviour). Without this, a wedged gateway — silent but
+    /// never closing — holds one of the [`max_sessions`](Self::max_sessions)
+    /// admission slots forever. Reaping is a *clean* teardown: the lane
+    /// drains, every result and the final `Report` are written toward
+    /// the (possibly dead) peer, and the slot is released so the next
+    /// gateway admits. Counted in `node_idle_reaps_total`. CLI:
+    /// `infilter-node --idle-timeout`.
+    pub session_idle_timeout: Option<Duration>,
 }
 
 impl Default for NodeConfig {
@@ -59,6 +69,7 @@ impl Default for NodeConfig {
             credits: 256,
             handshake_timeout: Duration::from_secs(10),
             max_sessions: 4,
+            session_idle_timeout: None,
         }
     }
 }
@@ -97,6 +108,9 @@ enum NodeEvent {
     FlushTails(u64),
     /// gateway half-closed: no more frames are coming
     Eof,
+    /// [`NodeConfig::session_idle_timeout`] fired at a message boundary:
+    /// the peer is wedged (silent but not closed); reap the session
+    Idle,
     ReadError(String),
 }
 
@@ -193,6 +207,7 @@ where
     crate::metric_counter!("node_handshake_failures_total");
     crate::metric_counter!("node_frames_total");
     crate::metric_counter!("node_results_total");
+    crate::metric_counter!("node_idle_reaps_total");
     // non-blocking accept so the loop can observe the shutdown switch
     // (and reap finished sessions) without a poke connection
     listener
@@ -391,6 +406,10 @@ where
     let _slot = SlotGuard(active);
     crate::metric_gauge!("node_sessions_live").add(1);
     crate::metric_counter!("node_sessions_total").inc();
+    // chaos: labelled crash/stall point right after admission — the slot
+    // is held, so a crash here exercises SlotGuard release + gateway
+    // failover before any lane exists
+    super::chaos::node_fault_point(super::chaos::NodeFaultPoint::Admission)?;
 
     let (results_tx, results_rx) = mpsc::channel::<ClassifyResult>();
     let lane = match factory(results_tx).context("building the connection's compute lane") {
@@ -464,9 +483,12 @@ fn handle_conn<L: Lane>(
         )?;
         bail!("handshake rejected: {e:#}");
     }
+    // the handshake timeout's job is done; from here the session either
+    // runs untimed (legacy `None`) or under the idle-reap deadline that
+    // keeps a wedged gateway from pinning its admission slot forever
     rstream
-        .set_read_timeout(None)
-        .context("clearing the handshake timeout")?;
+        .set_read_timeout(cfg.session_idle_timeout)
+        .context("setting the session read timeout")?;
     let credits = cfg.credits.max(1);
     write_msg(
         &mut writer,
@@ -512,6 +534,10 @@ fn handle_conn<L: Lane>(
                     }
                     Ok(None) => {
                         let _ = ev_tx.send(NodeEvent::Eof);
+                        return;
+                    }
+                    Err(e) if e.downcast_ref::<super::proto::IdleTimeout>().is_some() => {
+                        let _ = ev_tx.send(NodeEvent::Idle);
                         return;
                     }
                     Err(e) => {
@@ -567,6 +593,11 @@ fn handle_conn<L: Lane>(
             }
         }
         let advanced = lane.service()?;
+        if advanced > 0 {
+            // chaos: labelled crash/stall point mid-compute — frames are
+            // in flight and partially classified when the session dies
+            super::chaos::node_fault_point(super::chaos::NodeFaultPoint::MidCompute)?;
+        }
         let wrote = write_results(&results_rx, &mut writer, &mut scratch, &mut clips_out)?
             + flush_credits(&mut writer, &mut scratch, &mut pending_credits)?;
         if wrote > 0 {
@@ -702,6 +733,9 @@ fn handle_event<L: Lane>(
             lane.drain()?;
             write_results(results_rx, writer, scratch, clips_out)?;
             flush_credits(writer, scratch, pending_credits)?;
+            // chaos: crash/stall on the barrier edge — results are on
+            // the wire but the ack is not, the worst spot for a death
+            super::chaos::node_fault_point(super::chaos::NodeFaultPoint::PreDrainAck)?;
             write_msg(writer, &Msg::DrainAck { token }, scratch)?;
             writer.flush()?;
             Ok(false)
@@ -713,11 +747,21 @@ fn handle_event<L: Lane>(
             let flushed = lane.flush_tails()?;
             write_results(results_rx, writer, scratch, clips_out)?;
             flush_credits(writer, scratch, pending_credits)?;
+            // chaos: same barrier-edge point for the flush-tails ack
+            super::chaos::node_fault_point(super::chaos::NodeFaultPoint::PreFlushAck)?;
             write_msg(writer, &Msg::FlushAck { token, flushed }, scratch)?;
             writer.flush()?;
             Ok(false)
         }
         NodeEvent::Eof => Ok(true),
+        NodeEvent::Idle => {
+            // wedged peer: treat like a half-close so the teardown path
+            // runs (drain, report toward the dead socket, SlotGuard
+            // release) and the admission slot is freed for a live peer
+            crate::metric_counter!("node_idle_reaps_total").inc();
+            log_warn!("node: reaping idle session (no traffic within the idle timeout)");
+            Ok(true)
+        }
         NodeEvent::ReadError(e) => bail!("gateway connection failed: {e}"),
     }
 }

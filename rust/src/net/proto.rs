@@ -716,13 +716,47 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &Msg, scratch: &mut Vec<u8>) -> Resul
     Ok(())
 }
 
+/// Marker error surfaced by [`read_msg`] when a read timeout configured
+/// on the underlying stream (`set_read_timeout`) fires **at a message
+/// boundary** — no header bytes had arrived yet. Callers that run an
+/// idle-reaping policy (see `NodeConfig::session_idle_timeout`) downcast
+/// with `err.downcast_ref::<IdleTimeout>()` to distinguish "peer is
+/// silent" from a real transport failure. A timeout that fires
+/// *mid-message* is never mapped to this type: a half-delivered frame
+/// means the link is broken, not idle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IdleTimeout;
+
+impl std::fmt::Display for IdleTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("peer idle: read timed out at a message boundary")
+    }
+}
+
+impl std::error::Error for IdleTimeout {}
+
 /// Read one framed message. Returns `Ok(None)` on a clean EOF at a
-/// message boundary; EOF mid-message is an error.
+/// message boundary; EOF mid-message is an error. If the stream has a
+/// read timeout set and it expires before *any* header byte arrives,
+/// the error is the downcastable [`IdleTimeout`] marker; expiring
+/// mid-message stays an ordinary transport error.
 pub fn read_msg<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Option<Msg>> {
     let mut len4 = [0u8; 4];
     let mut got = 0usize;
     while got < 4 {
-        let n = r.read(&mut len4[got..])?;
+        let n = match r.read(&mut len4[got..]) {
+            Ok(n) => n,
+            Err(e)
+                if got == 0
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Err(anyhow::Error::new(IdleTimeout));
+            }
+            Err(e) => return Err(e.into()),
+        };
         if n == 0 {
             ensure!(got == 0, "connection closed mid-message ({got}/4 header bytes)");
             return Ok(None);

@@ -1,0 +1,429 @@
+//! Deterministic chaos acceptance for the cross-process serving stack,
+//! tier-1 safe (loopback TCP, port 0, bounded windows, no external
+//! network): every wire fault the [`ChaosProxy`] can inject, every
+//! labelled node-side crash point, and the wedged-session idle reaper —
+//! each round checked against the shared [`Invariants`] accounting
+//! contract plus bit-parity-or-accounted-loss of everything delivered.
+//! Every failure message carries the reproducing seed; replay a round
+//! outside the suite with `infilter chaos-soak --seed <seed>`
+//! (docs/OPERATIONS.md §Chaos testing).
+//!
+//! The node-side fault table is process-global, and every scenario here
+//! spawns node sessions inside this test binary, so the whole suite
+//! runs one test at a time behind [`serial`] — an armed fault can never
+//! leak into a neighbouring scenario.
+//!
+//! [`ChaosProxy`]: infilter::net::ChaosProxy
+//! [`Invariants`]: infilter::net::Invariants
+
+use infilter::coordinator::dispatch::Lane;
+use infilter::coordinator::FrameTask;
+use infilter::dsp::multirate::BandPlan;
+use infilter::net::chaos::{
+    arm_node_fault, disarm_node_faults, run_scenario, ScenarioConfig,
+};
+use infilter::net::node::pipeline_factory;
+use infilter::net::{
+    serve_node_until, FaultKind, Invariants, NodeConfig, NodeFaultAction, NodeFaultPoint,
+    NodeShutdown, RemoteConfig, RemoteLane,
+};
+use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+use infilter::telemetry::registry;
+use infilter::train::TrainedModel;
+use infilter::util::prng::Pcg32;
+use std::net::TcpListener;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn engine() -> CpuEngine {
+    let mut plan = BandPlan::paper_default();
+    plan.n_octaves = 2;
+    CpuEngine::with_clip(&plan, 1.0, 64, 2)
+}
+
+fn model() -> TrainedModel {
+    TrainedModel::synthetic(11, 4, engine().n_filters(), 0.0, 1.0)
+}
+
+fn clip_frames(stream: u64, clip: u64) -> Vec<FrameTask> {
+    let mut rng = Pcg32::substream(113 ^ clip.wrapping_mul(29), stream);
+    (0..2usize)
+        .map(|f| FrameTask {
+            stream,
+            clip_seq: clip,
+            frame_idx: f,
+            data: (0..64).map(|_| (rng.normal() * 0.1) as f32).collect(),
+            label: (stream % 4) as usize,
+            t_gen: Instant::now(),
+        })
+        .collect()
+}
+
+fn spawn_node(
+    m: TrainedModel,
+    cfg: NodeConfig,
+) -> (String, NodeShutdown, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("loopback bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let fp = m.fingerprint();
+    let stop = NodeShutdown::new();
+    let handle = std::thread::spawn({
+        let stop = stop.clone();
+        move || {
+            serve_node_until(listener, pipeline_factory(engine(), m, 64), fp, cfg, None, stop)
+                .expect("node serving");
+        }
+    });
+    (addr, stop, handle)
+}
+
+/// Keep dialling until the node admits a session (a reaped or released
+/// slot re-admits within milliseconds; the deadline is pure slack).
+fn connect_eventually(addr: &str, m: &TrainedModel) -> RemoteLane {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match RemoteLane::connect(addr, m.fingerprint(), RemoteConfig::default()) {
+            Ok(lane) => return lane,
+            Err(e) if Instant::now() >= deadline => {
+                panic!("no session admitted within the deadline: {e:#}")
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// One seeded round under a lethal wire fault: the proxy must actually
+/// fire, and whatever the timing dealt, the accounting contract and the
+/// bit-parity of everything delivered must hold.
+fn lethal_round(kind: FaultKind, seed: u64) {
+    let cfg = ScenarioConfig::quick(seed, vec![kind]);
+    let out = run_scenario(&cfg)
+        .unwrap_or_else(|e| panic!("[chaos seed {seed:#x}] scenario failed: {e:#}"));
+    assert!(
+        out.faults_injected >= 1,
+        "[chaos seed {seed:#x}] the proxy never fired {kind:?}"
+    );
+    let inv = Invariants::new(out.clips_pushed).seeded(seed);
+    inv.assert_ok(&out.report);
+    inv.assert_results(&out.report, &out.results, &out.reference);
+}
+
+/// One seeded round under a shaping (non-lethal) fault: traffic is
+/// delayed or throttled but nothing may be lost — full bit parity.
+fn shaped_round(kind: FaultKind, seed: u64) {
+    let cfg = ScenarioConfig::quick(seed, vec![kind]);
+    let out = run_scenario(&cfg)
+        .unwrap_or_else(|e| panic!("[chaos seed {seed:#x}] scenario failed: {e:#}"));
+    assert!(
+        out.faults_injected >= 1,
+        "[chaos seed {seed:#x}] the proxy never shaped the connection with {kind:?}"
+    );
+    let inv = Invariants::new(out.clips_pushed).seeded(seed).lossless();
+    inv.assert_ok(&out.report);
+    inv.assert_results(&out.report, &out.results, &out.reference);
+}
+
+// ---------------------------------------------------------------------
+// wire faults, one deterministic round per kind
+// ---------------------------------------------------------------------
+
+#[test]
+fn delay_shaping_is_lossless_and_bit_exact() {
+    let _g = serial();
+    shaped_round(FaultKind::Delay, 0xDE1A);
+}
+
+#[test]
+fn throttle_shaping_is_lossless_and_bit_exact() {
+    let _g = serial();
+    shaped_round(FaultKind::Throttle, 0x7B07);
+}
+
+#[test]
+fn dropped_connection_round_keeps_accounting_exact() {
+    let _g = serial();
+    lethal_round(FaultKind::DropConn, 0xD60B);
+}
+
+#[test]
+fn half_close_round_keeps_accounting_exact() {
+    let _g = serial();
+    lethal_round(FaultKind::HalfClose, 0x4A1F);
+}
+
+#[test]
+fn rst_round_keeps_accounting_exact() {
+    let _g = serial();
+    lethal_round(FaultKind::Rst, 0x2572);
+}
+
+#[test]
+fn stall_round_keeps_accounting_exact() {
+    let _g = serial();
+    lethal_round(FaultKind::Stall, 0x57A1);
+}
+
+#[test]
+fn truncated_frame_round_keeps_accounting_exact() {
+    let _g = serial();
+    lethal_round(FaultKind::TruncateFrame, 0x7B0C);
+}
+
+#[test]
+fn corrupt_length_prefix_round_keeps_accounting_exact() {
+    let _g = serial();
+    lethal_round(FaultKind::CorruptLen, 0xC02F);
+}
+
+#[test]
+fn corrupt_payload_round_keeps_accounting_exact() {
+    let _g = serial();
+    lethal_round(FaultKind::CorruptPayload, 0xC0FB);
+}
+
+#[test]
+fn pool_round_with_dead_lanes_sums_per_lane_accounting() {
+    let _g = serial();
+    let seed = 0x9001;
+    let cfg = ScenarioConfig {
+        streams: 6,
+        nodes: 2,
+        ..ScenarioConfig::quick(seed, vec![FaultKind::DropConn])
+    };
+    let out = run_scenario(&cfg)
+        .unwrap_or_else(|e| panic!("[chaos seed {seed:#x}] scenario failed: {e:#}"));
+    assert!(
+        out.faults_injected >= 1,
+        "[chaos seed {seed:#x}] no proxy fired"
+    );
+    let inv = Invariants::new(out.clips_pushed).seeded(seed).pool(2);
+    inv.assert_ok(&out.report);
+    inv.assert_results(&out.report, &out.results, &out.reference);
+}
+
+/// The chaos stall plus the idle reaper together: while the proxy
+/// absorbs traffic the node session goes silent, the reaper frees its
+/// slot mid-run, and the gateway's failover still accounts every clip.
+#[test]
+fn stall_round_with_idle_reaping_stays_consistent() {
+    let _g = serial();
+    let seed = 0x1D1E;
+    let cfg = ScenarioConfig {
+        idle_timeout: Some(Duration::from_millis(100)),
+        ..ScenarioConfig::quick(seed, vec![FaultKind::Stall])
+    };
+    let out = run_scenario(&cfg)
+        .unwrap_or_else(|e| panic!("[chaos seed {seed:#x}] scenario failed: {e:#}"));
+    let inv = Invariants::new(out.clips_pushed).seeded(seed);
+    inv.assert_ok(&out.report);
+    inv.assert_results(&out.report, &out.results, &out.reference);
+}
+
+// ---------------------------------------------------------------------
+// node-side crash/stall points
+// ---------------------------------------------------------------------
+
+/// One seeded round with a crash armed at a labelled node fault point
+/// and a clean wire: the gateway must observe the death, fail over, and
+/// keep the accounting contract.
+fn node_crash_round(point: NodeFaultPoint, seed: u64) {
+    disarm_node_faults();
+    arm_node_fault(point, NodeFaultAction::CrashSession);
+    let cfg = ScenarioConfig::quick(seed, vec![]);
+    let out = run_scenario(&cfg).unwrap_or_else(|e| {
+        disarm_node_faults();
+        panic!("[chaos seed {seed:#x}] scenario failed: {e:#}")
+    });
+    disarm_node_faults();
+    assert!(
+        out.report.reconnects >= 1,
+        "[chaos seed {seed:#x}] the crash at {point:?} never forced a failover"
+    );
+    let inv = Invariants::new(out.clips_pushed).seeded(seed);
+    inv.assert_ok(&out.report);
+    inv.assert_results(&out.report, &out.results, &out.reference);
+}
+
+#[test]
+fn node_crash_mid_compute_is_survived() {
+    let _g = serial();
+    node_crash_round(NodeFaultPoint::MidCompute, 0x3C01);
+}
+
+#[test]
+fn node_crash_before_drain_ack_is_survived() {
+    let _g = serial();
+    node_crash_round(NodeFaultPoint::PreDrainAck, 0x3C02);
+}
+
+#[test]
+fn node_crash_before_flush_ack_is_survived() {
+    let _g = serial();
+    node_crash_round(NodeFaultPoint::PreFlushAck, 0x3C03);
+}
+
+#[test]
+fn node_crash_at_admission_releases_the_slot() {
+    let _g = serial();
+    disarm_node_faults();
+    let m = model();
+    let (addr, stop, node) = spawn_node(
+        m.clone(),
+        NodeConfig {
+            credits: 16,
+            max_sessions: 1,
+            ..NodeConfig::default()
+        },
+    );
+    arm_node_fault(NodeFaultPoint::Admission, NodeFaultAction::CrashSession);
+    let denied = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default());
+    assert!(
+        denied.is_err(),
+        "the armed admission crash kills the first session before its Welcome"
+    );
+    // the crashed session held the only slot; a leak would make every
+    // further handshake Busy forever
+    let mut lane = connect_eventually(&addr, &m);
+    for t in clip_frames(3, 0) {
+        assert!(lane.push(t));
+    }
+    lane.drain().unwrap();
+    let (report, results) = lane.finish().unwrap();
+    stop.shutdown();
+    node.join().unwrap();
+    disarm_node_faults();
+    Invariants::new(1).lossless().exact().assert_ok(&report);
+    assert_eq!(results.len(), 1);
+}
+
+#[test]
+fn node_stall_before_drain_ack_only_delays() {
+    let _g = serial();
+    let seed = 0x57A11;
+    disarm_node_faults();
+    arm_node_fault(
+        NodeFaultPoint::PreDrainAck,
+        NodeFaultAction::Stall(Duration::from_millis(150)),
+    );
+    let cfg = ScenarioConfig::quick(seed, vec![]);
+    let out = run_scenario(&cfg).unwrap_or_else(|e| {
+        disarm_node_faults();
+        panic!("[chaos seed {seed:#x}] scenario failed: {e:#}")
+    });
+    disarm_node_faults();
+    // the stall is far below the gateway io_timeout: a hiccup, not a
+    // death — the run must stay lossless and bit-exact
+    let inv = Invariants::new(out.clips_pushed).seeded(seed).lossless().exact();
+    inv.assert_ok(&out.report);
+    inv.assert_results(&out.report, &out.results, &out.reference);
+}
+
+// ---------------------------------------------------------------------
+// the wedged-session idle reaper
+// ---------------------------------------------------------------------
+
+#[test]
+fn wedged_session_holds_the_slot_forever_without_idle_timeout() {
+    let _g = serial();
+    let m = model();
+    let (addr, stop, node) = spawn_node(
+        m.clone(),
+        NodeConfig {
+            credits: 16,
+            max_sessions: 1,
+            ..NodeConfig::default()
+        },
+    );
+    // a wedged gateway: handshaken, then silent but never closing
+    let wedged = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+    let window = Instant::now() + Duration::from_millis(300);
+    while Instant::now() < window {
+        assert!(
+            RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).is_err(),
+            "without an idle timeout the wedged session must hold the only slot \
+             for the whole soak window"
+        );
+        std::thread::sleep(Duration::from_millis(40));
+    }
+    // a *closed* session releases the slot promptly — the leak is the
+    // wedge, not the teardown
+    drop(wedged);
+    let mut lane = connect_eventually(&addr, &m);
+    for t in clip_frames(1, 0) {
+        assert!(lane.push(t));
+    }
+    lane.drain().unwrap();
+    let (report, _) = lane.finish().unwrap();
+    stop.shutdown();
+    node.join().unwrap();
+    Invariants::new(1).lossless().exact().assert_ok(&report);
+}
+
+#[test]
+fn idle_timeout_reaps_the_wedged_session_and_readmits() {
+    let _g = serial();
+    let m = model();
+    let reaps_before = registry().counter("node_idle_reaps_total").get();
+    let (addr, stop, node) = spawn_node(
+        m.clone(),
+        NodeConfig {
+            credits: 16,
+            max_sessions: 1,
+            session_idle_timeout: Some(Duration::from_millis(50)),
+            ..NodeConfig::default()
+        },
+    );
+    let wedged = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default()).unwrap();
+    // the node reaps the silent session after ~50ms; the freed slot
+    // must admit a fresh gateway that then runs a full clean session
+    let mut lane = connect_eventually(&addr, &m);
+    for t in clip_frames(2, 0) {
+        assert!(lane.push(t));
+    }
+    lane.drain().unwrap();
+    let (report, results) = lane.finish().unwrap();
+    drop(wedged);
+    stop.shutdown();
+    node.join().unwrap();
+    Invariants::new(1).lossless().exact().assert_ok(&report);
+    assert_eq!(results.len(), 1);
+    assert!(
+        registry().counter("node_idle_reaps_total").get() > reaps_before,
+        "the reap is counted in node_idle_reaps_total"
+    );
+}
+
+// ---------------------------------------------------------------------
+// mini soak: mixed seeded schedules, the CLI's loop in miniature
+// ---------------------------------------------------------------------
+
+#[test]
+fn mini_soak_across_seeds_and_mixed_schedules() {
+    let _g = serial();
+    for seed in [0x51u64, 0x52, 0x53] {
+        let mut rng = Pcg32::new(seed);
+        let n = 1 + rng.below(2) as usize;
+        let schedule: Vec<FaultKind> = (0..n)
+            .map(|_| FaultKind::ALL[rng.below(FaultKind::ALL.len() as u32) as usize])
+            .collect();
+        let lethal = schedule.iter().any(|k| k.lethal());
+        let cfg = ScenarioConfig {
+            faults: schedule,
+            ..ScenarioConfig::quick(seed, vec![])
+        };
+        let out = run_scenario(&cfg)
+            .unwrap_or_else(|e| panic!("[chaos seed {seed:#x}] scenario failed: {e:#}"));
+        let mut inv = Invariants::new(out.clips_pushed).seeded(seed);
+        if !lethal {
+            inv = inv.lossless();
+        }
+        inv.assert_ok(&out.report);
+        inv.assert_results(&out.report, &out.results, &out.reference);
+    }
+}

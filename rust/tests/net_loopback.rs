@@ -10,7 +10,7 @@ use infilter::coordinator::shard::ShardedPipeline;
 use infilter::coordinator::{ClassifyResult, FrameTask};
 use infilter::dsp::multirate::BandPlan;
 use infilter::net::node::pipeline_factory;
-use infilter::net::{serve_node, NodeConfig, RemoteConfig, RemoteLane, RemotePool};
+use infilter::net::{serve_node, Invariants, NodeConfig, RemoteConfig, RemoteLane, RemotePool};
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::train::TrainedModel;
 use infilter::util::prng::Pcg32;
@@ -138,7 +138,10 @@ fn remote_matches_local_and_sharded_bit_exactly() {
         );
         assert_eq!(a.label, c.label);
     }
-    // the node's report matches the local lane's counters
+    // the node's report matches the local lane's counters and the
+    // shared accounting contract (tests/net_chaos.rs runs the same
+    // checker under injected faults)
+    Invariants::new(12).lossless().exact().assert_ok(&remote_report);
     assert_eq!(remote_report.clips_classified, local_report.clips_classified);
     assert_eq!(
         remote_report.batch.frames_processed,
@@ -171,9 +174,8 @@ fn gateway_drain_is_a_wire_barrier() {
     }
     let (report, results) = remote.finish().unwrap();
     node.join().unwrap();
-    assert_eq!(report.clips_classified, 12);
+    Invariants::new(12).lossless().exact().assert_ok(&report);
     assert_eq!(results.len(), 12);
-    assert_eq!(report.clips_padded, 0);
 }
 
 #[test]
@@ -199,13 +201,10 @@ fn pool_fans_out_across_nodes_and_merges_reports() {
     let (report, results) = Lane::finish(pool).unwrap();
     node_a.join().unwrap();
     node_b.join().unwrap();
-    assert_eq!(report.clips_classified, 8);
+    // lossless + exact + per-lane rows summing to the pool totals, via
+    // the shared accounting checker
+    Invariants::new(8).lossless().exact().pool(2).assert_ok(&report);
     assert_eq!(results.len(), 8);
-    assert_eq!(report.per_lane.len(), 2, "one breakdown row per node");
-    assert_eq!(
-        report.per_lane.iter().map(|l| l.clips).sum::<u64>(),
-        8
-    );
 
     // and the pooled results equal a local run, bit for bit
     let mut local = PipelineBuilder::new(engine(), m).queue_capacity(64).build();
