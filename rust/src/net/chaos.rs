@@ -1044,6 +1044,12 @@ pub struct ScenarioConfig {
     pub io_timeout: Duration,
     /// node-side [`NodeConfig::session_idle_timeout`]
     pub idle_timeout: Option<Duration>,
+    /// arm a [`ConformanceMonitor`](super::model::ConformanceMonitor)
+    /// on every gateway lane; observed divergences from the protocol
+    /// spec machines are returned in
+    /// [`ScenarioOutcome::spec_divergences`] (and each one bumps
+    /// `gateway_invariant_violations_total`)
+    pub monitor: bool,
 }
 
 impl ScenarioConfig {
@@ -1058,6 +1064,7 @@ impl ScenarioConfig {
             nodes: 1,
             io_timeout: Duration::from_secs(2),
             idle_timeout: None,
+            monitor: true,
         }
     }
 }
@@ -1074,6 +1081,11 @@ pub struct ScenarioOutcome {
     /// faults the proxies actually fired (≥ 1 whenever a fault was
     /// scheduled: the trigger index is sampled below the workload size)
     pub faults_injected: u64,
+    /// conformance-monitor divergences, in observation order; always
+    /// empty when [`ScenarioConfig::monitor`] is off, and expected
+    /// empty even under faults — any entry is an implementation/spec
+    /// drift, not a tolerated chaos outcome
+    pub spec_divergences: Vec<String>,
 }
 
 /// The tiny fixed geometry every scenario runs: 2-octave band plan,
@@ -1162,6 +1174,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioOutcome> {
     };
     let mut pool = RemotePool::connect(&addrs, fp, rcfg)
         .with_context(|| format!("chaos gateway connect (seed {:#x})", cfg.seed))?;
+    let monitor_logs = if cfg.monitor { pool.arm_monitors() } else { Vec::new() };
 
     let clips_pushed = cfg.streams * cfg.clips_per_stream;
     for t in scenario_tasks(cfg) {
@@ -1174,6 +1187,10 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioOutcome> {
         .with_context(|| format!("chaos drain barrier (seed {:#x})", cfg.seed))?;
     let (report, results) = Lane::finish(pool)
         .with_context(|| format!("chaos gateway finish (seed {:#x})", cfg.seed))?;
+    let spec_divergences: Vec<String> = monitor_logs
+        .iter()
+        .flat_map(|log| log.divergences())
+        .collect();
 
     let faults_injected = proxies.iter().map(ChaosProxy::faults_injected).sum();
     for stop in &shutdowns {
@@ -1205,6 +1222,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioOutcome> {
         reference,
         clips_pushed,
         faults_injected,
+        spec_divergences,
     })
 }
 

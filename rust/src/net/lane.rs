@@ -25,6 +25,7 @@
 //! return to their home node at the next clip boundary after it comes
 //! back.
 
+use super::model::{BarrierKind, ConformanceMonitor, CreditLedger, LaneSpec, MonitorLog};
 use super::proto::{
     read_msg, write_msg, Handshake, Msg, RejectCode, WireReport, WireResult, VERSION,
 };
@@ -38,7 +39,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -139,8 +140,9 @@ struct Link {
     writer: BufWriter<TcpStream>,
     events: mpsc::Receiver<Event>,
     reader: Option<JoinHandle<()>>,
-    /// frames the node still allows in flight
-    credits: u32,
+    /// the session's credit window, delegated to the executable spec:
+    /// `credits + in_flight == window` by construction
+    ledger: CreditLedger,
     /// the node-assigned session id from `Welcome`
     session: u64,
     /// set once the reader saw EOF/error; `None` while the link is up
@@ -286,7 +288,7 @@ fn open_link(
             writer,
             events: ev_rx,
             reader: Some(reader),
-            credits,
+            ledger: CreditLedger::new(credits),
             session,
             closed: None,
         },
@@ -314,10 +316,14 @@ pub struct RemoteLane {
     scratch: Vec<u8>,
     /// why the last session died, for error messages
     last_death: Option<String>,
-    /// `true` once a re-handshake was refused permanently
-    /// ([`RejectCode::retryable`] = false): stop probing a node that
-    /// can never accept us again
-    poisoned: bool,
+    /// the executable spec machine this lane delegates its protocol
+    /// decisions to: barrier token minting/matching, at-most-once death
+    /// reckoning, and permanent poisoning after a non-retryable Reject
+    /// (the same machine `verify-proto` model-checks)
+    spec: LaneSpec,
+    /// shadow spec copy fed the observable wire events; armed in
+    /// debug/chaos builds via [`arm_monitor`](Self::arm_monitor)
+    monitor: Option<ConformanceMonitor>,
     /// reconnect schedule: earliest next attempt and current backoff
     next_try: Instant,
     backoff: Duration,
@@ -345,11 +351,6 @@ pub struct RemoteLane {
     /// a link death); folded into [`ServeReport::clips_aborted`]
     clips_aborted: u64,
     reconnects: u64,
-    /// monotonic token shared by the drain and flush-tails barriers
-    /// (never reset: a stale ack from a dead session can't alias)
-    drain_token: u64,
-    last_ack: Option<u64>,
-    last_flush_ack: Option<(u64, u64)>,
     node_report: Option<WireReport>,
     sink: Option<Box<dyn ClassifySink>>,
     collect: bool,
@@ -401,7 +402,8 @@ impl RemoteLane {
             link: Some(link),
             scratch: Vec::new(),
             last_death: None,
-            poisoned: false,
+            spec: LaneSpec::new(),
+            monitor: None,
             next_try: Instant::now(),
             backoff: cfg.reconnect_backoff,
             queue: VecDeque::new(),
@@ -415,9 +417,6 @@ impl RemoteLane {
             frames_dropped: 0,
             clips_aborted: 0,
             reconnects: 0,
-            drain_token: 0,
-            last_ack: None,
-            last_flush_ack: None,
             node_report: None,
             sink: None,
             collect: true,
@@ -454,6 +453,22 @@ impl RemoteLane {
         self.link.as_ref().map_or(0, |l| l.session)
     }
 
+    /// Arm the runtime [`ConformanceMonitor`]: an independent copy of
+    /// the spec machines shadow-checks this lane's observable wire
+    /// events from here on, recording every divergence in the returned
+    /// log and bumping `gateway_invariant_violations_total`. Intended
+    /// for debug/chaos builds; the lane's behaviour is unchanged.
+    pub fn arm_monitor(&mut self) -> Arc<MonitorLog> {
+        let log = MonitorLog::new();
+        let ledger = self.link.as_ref().map(|l| l.ledger);
+        self.monitor = Some(ConformanceMonitor::resume(
+            self.spec,
+            ledger,
+            Arc::clone(&log),
+        ));
+        log
+    }
+
     /// How often this lane replaced a dead session with a fresh one.
     pub fn reconnects(&self) -> u64 {
         self.reconnects
@@ -470,7 +485,8 @@ impl RemoteLane {
         if self.link.is_some() {
             return true;
         }
-        if self.poisoned || self.cfg.reconnect_attempts == 0 || Instant::now() < self.next_try {
+        if self.spec.is_poisoned() || self.cfg.reconnect_attempts == 0 || Instant::now() < self.next_try
+        {
             return false;
         }
         self.try_reconnect();
@@ -528,17 +544,35 @@ impl RemoteLane {
                 1
             }
             Event::Credit(n) => {
+                if let Some(m) = self.monitor.as_mut() {
+                    m.on_credit(n);
+                }
                 if let Some(l) = self.link.as_mut() {
-                    l.credits = l.credits.saturating_add(n);
+                    if let Err(v) = l.ledger.grant(n) {
+                        crate::metric_counter!("gateway_invariant_violations_total").inc();
+                        log_warn!("node {} granted credits off-spec: {v}", self.peer);
+                    }
                 }
                 0
             }
             Event::DrainAck(token) => {
-                self.last_ack = Some(token);
+                if let Some(m) = self.monitor.as_mut() {
+                    m.on_drain_ack(token);
+                }
+                if let Err(v) = self.spec.on_drain_ack(token) {
+                    crate::metric_counter!("gateway_invariant_violations_total").inc();
+                    log_warn!("node {} acked a drain off-spec: {v}", self.peer);
+                }
                 0
             }
             Event::FlushAck(token, flushed) => {
-                self.last_flush_ack = Some((token, flushed));
+                if let Some(m) = self.monitor.as_mut() {
+                    m.on_flush_ack(token, flushed);
+                }
+                if let Err(v) = self.spec.on_flush_ack(token, flushed) {
+                    crate::metric_counter!("gateway_invariant_violations_total").inc();
+                    log_warn!("node {} acked a flush off-spec: {v}", self.peer);
+                }
                 0
             }
             Event::Report(r) => {
@@ -645,21 +679,29 @@ impl RemoteLane {
         for (stream, clip) in doomed {
             self.mark_clip_dead(stream, clip);
         }
-        let lost_frames = self.queue.len() as u64;
-        let lost_clips = self.clip_t0.len() as u64;
-        self.note_dropped(lost_frames);
+        // the reckoning itself is a spec decision: the machine returns
+        // the counts exactly once per death (a second call for the same
+        // death yields zeros — the at-most-once contract verify-proto
+        // proves), transitions to Down, and clears the ack latches
+        let queued = self.queue.len() as u64;
+        let unresolved = self.clip_t0.len() as u64;
+        if let Some(m) = self.monitor.as_mut() {
+            m.on_death(queued, unresolved);
+        }
+        let reck = self.spec.on_death(queued, unresolved);
+        self.note_dropped(reck.frames_dropped);
         self.queue.clear();
         crate::metric_gauge!("gateway_queue_depth").set(0);
-        self.note_aborted(lost_clips);
+        self.note_aborted(reck.clips_aborted);
         self.clip_t0.clear();
         self.node_report = None;
-        self.last_ack = None;
-        self.last_flush_ack = None;
         self.barrier_t0 = None;
         log_warn!(
-            "link to node {} died ({cause}): {lost_frames} queued frames and \
-             {lost_clips} in-flight clips accounted lost (at-most-once)",
-            self.peer
+            "link to node {} died ({cause}): {} queued frames and \
+             {} in-flight clips accounted lost (at-most-once)",
+            self.peer,
+            reck.frames_dropped,
+            reck.clips_aborted
         );
         self.last_death = Some(cause);
         self.next_try = Instant::now();
@@ -682,12 +724,19 @@ impl RemoteLane {
                     link.session,
                     self.reconnects
                 );
+                if let Some(m) = self.monitor.as_mut() {
+                    m.on_welcome(link.ledger.window());
+                }
+                self.spec.on_session_established();
                 self.link = Some(link);
             }
             Err(e) => {
                 if let Some(rej) = e.downcast_ref::<Rejected>() {
                     if !rej.code.retryable() {
-                        self.poisoned = true;
+                        self.spec.poison();
+                        if let Some(m) = self.monitor.as_mut() {
+                            m.on_poison();
+                        }
                         self.last_death = Some(format!("{rej}"));
                         log_warn!(
                             "node {} refused the re-handshake permanently: {rej}",
@@ -712,7 +761,7 @@ impl RemoteLane {
         if self.link.is_some() {
             return Ok(());
         }
-        if !self.poisoned && self.cfg.reconnect_attempts > 0 {
+        if !self.spec.is_poisoned() && self.cfg.reconnect_attempts > 0 {
             for _ in 0..self.cfg.reconnect_attempts {
                 let now = Instant::now();
                 if now < self.next_try {
@@ -722,7 +771,7 @@ impl RemoteLane {
                 if self.link.is_some() {
                     return Ok(());
                 }
-                if self.poisoned {
+                if self.spec.is_poisoned() {
                     break;
                 }
             }
@@ -731,7 +780,7 @@ impl RemoteLane {
             "node {} is down ({}) and reconnection is {}",
             self.peer,
             self.last_death.as_deref().unwrap_or("unknown cause"),
-            if self.poisoned {
+            if self.spec.is_poisoned() {
                 "refused permanently"
             } else if self.cfg.reconnect_attempts == 0 {
                 "disabled"
@@ -787,11 +836,11 @@ impl RemoteLane {
     fn flush_queue(&mut self) -> Result<()> {
         let mut wrote = false;
         loop {
-            let credits = match self.link.as_ref() {
-                Some(l) => l.credits,
+            let can_send = match self.link.as_ref() {
+                Some(l) => l.ledger.can_send(),
                 None => return Ok(()),
             };
-            if credits == 0 {
+            if !can_send {
                 break;
             }
             let Some(task) = self.queue.pop_front() else {
@@ -825,7 +874,15 @@ impl RemoteLane {
             );
             match sent {
                 Ok(()) => {
-                    link.credits -= 1;
+                    if let Err(v) = link.ledger.consume() {
+                        // unreachable while can_send gates the loop, but
+                        // the spec stays the arbiter: count, don't mask
+                        crate::metric_counter!("gateway_invariant_violations_total").inc();
+                        log_warn!("frame sent off-spec: {v}");
+                    }
+                    if let Some(m) = self.monitor.as_mut() {
+                        m.on_frame_sent();
+                    }
                     wrote = true;
                     crate::metric_counter!("gateway_frames_sent_total").inc();
                 }
@@ -901,8 +958,12 @@ impl RemoteLane {
     /// start every node's barrier before waiting on any of them.
     fn send_drain(&mut self) -> Result<u64> {
         self.flush_queue_blocking()?;
-        self.drain_token += 1;
-        let token = self.drain_token;
+        // token minting is a spec decision: monotonic, never reset, so
+        // a stale ack from a dead session can't alias a live barrier
+        let token = self.spec.issue(BarrierKind::Drain);
+        if let Some(m) = self.monitor.as_mut() {
+            m.on_barrier_sent(BarrierKind::Drain, token);
+        }
         self.send_ctl(&Msg::Drain { token })?;
         self.barrier_t0 = Some(Instant::now());
         Ok(token)
@@ -919,7 +980,7 @@ impl RemoteLane {
     }
 
     fn await_drain(&mut self, token: u64) -> Result<()> {
-        while self.last_ack != Some(token) {
+        while !self.spec.drain_satisfied(token) {
             self.wait_event()?;
         }
         self.note_barrier_rtt();
@@ -939,8 +1000,10 @@ impl RemoteLane {
     /// [`send_drain`]: Self::send_drain
     fn send_flush(&mut self) -> Result<u64> {
         self.flush_queue_blocking()?;
-        self.drain_token += 1;
-        let token = self.drain_token;
+        let token = self.spec.issue(BarrierKind::Flush);
+        if let Some(m) = self.monitor.as_mut() {
+            m.on_barrier_sent(BarrierKind::Flush, token);
+        }
         self.send_ctl(&Msg::FlushTails { token })?;
         self.barrier_t0 = Some(Instant::now());
         Ok(token)
@@ -948,15 +1011,13 @@ impl RemoteLane {
 
     fn await_flush(&mut self, token: u64) -> Result<u64> {
         loop {
-            if let Some((t, flushed)) = self.last_flush_ack {
-                if t == token {
-                    // a flush resolves everything sent so far — partial
-                    // tails included, padded results precede the ack —
-                    // so any surviving entry is dead and pruned outright
-                    self.clip_t0.clear();
-                    self.note_barrier_rtt();
-                    return Ok(flushed);
-                }
+            if let Some(flushed) = self.spec.flush_satisfied(token) {
+                // a flush resolves everything sent so far — partial
+                // tails included, padded results precede the ack —
+                // so any surviving entry is dead and pruned outright
+                self.clip_t0.clear();
+                self.note_barrier_rtt();
+                return Ok(flushed);
             }
             self.wait_event()?;
         }
@@ -1345,6 +1406,12 @@ impl RemotePool {
     /// Mutable access to one node's lane (chaos hooks and tests).
     pub fn lane_mut(&mut self, node: usize) -> &mut RemoteLane {
         &mut self.lanes[node]
+    }
+
+    /// Arm a [`ConformanceMonitor`] on every lane (see
+    /// [`RemoteLane::arm_monitor`]); one log per node, pool order.
+    pub fn arm_monitors(&mut self) -> Vec<Arc<MonitorLog>> {
+        self.lanes.iter_mut().map(RemoteLane::arm_monitor).collect()
     }
 
     /// Pick the lane for one frame. Migration happens **only at clip

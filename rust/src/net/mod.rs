@@ -7,7 +7,11 @@
 //! gateway session.
 //!
 //! The wire protocol itself is specified in `docs/WIRE.md` (message
-//! table, handshake, credit/drain/flush state machines, versioning);
+//! table, handshake, credit/drain/flush state machines, versioning)
+//! and *executably* in [`model`]: the spec state machines production
+//! delegates to, the bounded model checker behind `infilter
+//! verify-proto`, and the [`model::ConformanceMonitor`] that
+//! shadow-checks live traces in chaos builds;
 //! `docs/OPERATIONS.md` is the deployment walkthrough and failure-mode
 //! reference; DESIGN.md §10 is the architectural summary. Five
 //! properties the layer guarantees:
@@ -44,12 +48,14 @@
 
 pub mod chaos;
 pub mod lane;
+pub mod model;
 pub mod node;
 pub mod proto;
 
 pub use chaos::{
     ChaosProxy, FaultKind, FaultPlan, Invariants, NodeFaultAction, NodeFaultPoint,
 };
+pub use model::{ConformanceMonitor, MonitorLog};
 pub use lane::{RemoteConfig, RemoteLane, RemotePool};
 pub use node::{serve_node, serve_node_until, NodeConfig, NodeShutdown};
 pub use proto::RejectCode;

@@ -1,0 +1,1066 @@
+//! Bounded explicit-state model checker for wire protocol v3.
+//!
+//! The checker runs the *same* spec machines production delegates to
+//! ([`CreditLedger`], [`LaneSpec`], [`NodeSpec`]) inside a small closed
+//! world: one gateway lane, one node session (replaced on reconnect,
+//! like production), two FIFO wires (TCP preserves order within a
+//! session — reordering happens *between* the two directions and the
+//! endpoints' own actions, which is exactly what the BFS interleaves),
+//! and a bounded budget of fault events from the PR 8 chaos taxonomy:
+//! `drop` (transport sever), `dup` (duplicated delivery attempt of a
+//! control message), `half-close`, and the four node crash points
+//! (`crash-admission`, `crash-mid-compute`, `crash-pre-drain-ack`,
+//! `crash-pre-flush-ack`).
+//!
+//! Exploration is breadth-first with full-state dedup, so the first
+//! violation found is a *minimal* counterexample trace. The five
+//! checked invariants are the WIRE.md guarantees:
+//!
+//! * `credit-conservation` — `credits + in_flight == window`, no grant
+//!   leak, no send on an empty window;
+//! * `drain-completeness` — when a drain ack matches, every complete
+//!   pre-barrier clip has resolved;
+//! * `flush-idempotence` — a second flush with no intervening frames
+//!   flushes nothing;
+//! * `death-accounting` — every clip resolves exactly once (classified
+//!   xor aborted), across any number of session deaths;
+//! * `deadlock-freedom` — every non-terminal state has a successor.
+//!
+//! Scope bounds (deliberate, documented): payload messages (`Frame`,
+//! `Result`, `Credit`) are never duplicated by the model — TCP delivers
+//! them exactly once within a session, and the cross-session replay
+//! hazard is covered by the death/reconnect faults plus the
+//! `stale-results` mutation. Clips are a fixed two frames, matching the
+//! chaos scenario fixture.
+//!
+//! [`Mutation`] deliberately breaks one spec rule so CI can prove the
+//! checker catches it (`verify-proto --mutate drop-credit-grant` must
+//! exit non-zero with a printed trace).
+#![deny(clippy::arithmetic_side_effects)]
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::spec::{BarrierKind, CreditLedger, LaneSpec, LaneState, NodeSpec, NodeState};
+
+/// One WIRE.md guarantee the checker can prove within its bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Invariant {
+    CreditConservation,
+    DrainCompleteness,
+    FlushIdempotence,
+    DeathAccounting,
+    DeadlockFreedom,
+}
+
+impl Invariant {
+    pub const ALL: [Invariant; 5] = [
+        Invariant::CreditConservation,
+        Invariant::DrainCompleteness,
+        Invariant::FlushIdempotence,
+        Invariant::DeathAccounting,
+        Invariant::DeadlockFreedom,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Invariant::CreditConservation => "credit-conservation",
+            Invariant::DrainCompleteness => "drain-completeness",
+            Invariant::FlushIdempotence => "flush-idempotence",
+            Invariant::DeathAccounting => "death-accounting",
+            Invariant::DeadlockFreedom => "deadlock-freedom",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Invariant> {
+        for i in Invariant::ALL {
+            if i.name() == s {
+                return Ok(i);
+            }
+        }
+        bail!(
+            "unknown invariant {s:?} (one of: {})",
+            Invariant::ALL.map(Invariant::name).join(", ")
+        )
+    }
+
+    /// Map a [`super::spec::SpecViolation`] rule slug back to the
+    /// invariant it belongs to.
+    fn from_rule(rule: &str) -> Invariant {
+        Invariant::parse(rule).unwrap_or(Invariant::DeathAccounting)
+    }
+}
+
+/// A fault event the checker may inject, mirroring the chaos taxonomy
+/// (`FaultKind` / `NodeFaultPoint` in `net/chaos.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultEvent {
+    /// transport sever: the session dies, in-flight messages are lost
+    Drop,
+    /// duplicated delivery attempt of a control message (Drain,
+    /// DrainAck, FlushTails, FlushAck) — the token machinery must
+    /// absorb it
+    Dup,
+    /// gateway-side half-close mid-stream: the node tears down cleanly
+    HalfClose,
+    /// re-handshake dies at the admission gate (one wasted attempt)
+    CrashAdmission,
+    /// node session dies with frames held, partially classified
+    CrashMidCompute,
+    /// node dies after streaming drain results but before the ack
+    CrashPreDrainAck,
+    /// node dies after streaming flush results but before the ack
+    CrashPreFlushAck,
+}
+
+impl FaultEvent {
+    pub const ALL: [FaultEvent; 7] = [
+        FaultEvent::Drop,
+        FaultEvent::Dup,
+        FaultEvent::HalfClose,
+        FaultEvent::CrashAdmission,
+        FaultEvent::CrashMidCompute,
+        FaultEvent::CrashPreDrainAck,
+        FaultEvent::CrashPreFlushAck,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultEvent::Drop => "drop",
+            FaultEvent::Dup => "dup",
+            FaultEvent::HalfClose => "half-close",
+            FaultEvent::CrashAdmission => "crash-admission",
+            FaultEvent::CrashMidCompute => "crash-mid-compute",
+            FaultEvent::CrashPreDrainAck => "crash-pre-drain-ack",
+            FaultEvent::CrashPreFlushAck => "crash-pre-flush-ack",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultEvent> {
+        for f in FaultEvent::ALL {
+            if f.name() == s {
+                return Ok(f);
+            }
+        }
+        bail!(
+            "unknown fault {s:?} (one of: {})",
+            FaultEvent::ALL.map(FaultEvent::name).join(", ")
+        )
+    }
+}
+
+/// A deliberate single-rule break in the executable spec, used to prove
+/// the checker actually catches violations (CI runs `drop-credit-grant`
+/// and requires a non-zero exit + printed trace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mutation {
+    None,
+    /// the node computes a grant but never sends it → the gateway
+    /// starves → deadlock-freedom
+    DropCreditGrant,
+    /// every grant is sent twice → credit-conservation
+    DoubleGrant,
+    /// the node acks a drain without classifying what it holds →
+    /// drain-completeness
+    SkipDrainClassify,
+    /// every flush reports at least one padded tail → flush-idempotence
+    FlushAlwaysPads,
+    /// a death keeps the dead session's undelivered results, replaying
+    /// them later → death-accounting
+    StaleResults,
+}
+
+impl Mutation {
+    pub const ALL: [Mutation; 6] = [
+        Mutation::None,
+        Mutation::DropCreditGrant,
+        Mutation::DoubleGrant,
+        Mutation::SkipDrainClassify,
+        Mutation::FlushAlwaysPads,
+        Mutation::StaleResults,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mutation::None => "none",
+            Mutation::DropCreditGrant => "drop-credit-grant",
+            Mutation::DoubleGrant => "double-grant",
+            Mutation::SkipDrainClassify => "skip-drain-classify",
+            Mutation::FlushAlwaysPads => "flush-always-pads",
+            Mutation::StaleResults => "stale-results",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Mutation> {
+        for m in Mutation::ALL {
+            if m.name() == s {
+                return Ok(m);
+            }
+        }
+        bail!(
+            "unknown mutation {s:?} (one of: {})",
+            Mutation::ALL.map(Mutation::name).join(", ")
+        )
+    }
+}
+
+/// Bounds and knobs for one exploration.
+#[derive(Debug, Clone)]
+pub struct CheckConfig {
+    /// workload size in frames (two frames per clip; an odd count
+    /// leaves a stranded tail for the flush barrier to pad)
+    pub frames: u32,
+    /// credit window the node grants at Welcome
+    pub window: u32,
+    /// BFS depth bound (transitions from the initial state)
+    pub depth: usize,
+    /// hard cap on distinct states, against runaway configs
+    pub max_states: usize,
+    /// fault kinds the exploration may inject
+    pub faults: Vec<FaultEvent>,
+    /// how many fault events one execution may contain
+    pub fault_budget: u8,
+    /// invariants to check (violations of others are ignored)
+    pub invariants: Vec<Invariant>,
+    pub mutation: Mutation,
+}
+
+impl Default for CheckConfig {
+    /// The paper-config default CI runs: 5 frames (two clips and a
+    /// stranded tail) under a window of 2, every fault kind once.
+    fn default() -> CheckConfig {
+        CheckConfig {
+            frames: 5,
+            window: 2,
+            depth: 96,
+            max_states: 2_000_000,
+            faults: FaultEvent::ALL.to_vec(),
+            fault_budget: 1,
+            invariants: Invariant::ALL.to_vec(),
+            mutation: Mutation::None,
+        }
+    }
+}
+
+/// What the BFS visited, for the CI artifact and for eyeballing that a
+/// depth bound actually covered the space (`complete`).
+#[derive(Debug, Clone, Default)]
+pub struct ExplorationStats {
+    pub states_explored: u64,
+    pub transitions: u64,
+    pub dedup_hits: u64,
+    pub max_depth_reached: usize,
+    pub terminal_states: u64,
+    /// non-terminal states cut off at the depth bound (0 ⇒ the bound
+    /// was high enough: the exploration is exhaustive, not sampled)
+    pub truncated: u64,
+}
+
+/// A shortest violating run: the labelled transitions from the initial
+/// state, plus what broke at the end.
+#[derive(Debug, Clone)]
+pub struct Counterexample {
+    pub invariant: Invariant,
+    pub detail: String,
+    pub trace: Vec<String>,
+}
+
+impl fmt::Display for Counterexample {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "invariant {} violated after {} steps: {}",
+            self.invariant.name(),
+            self.trace.len(),
+            self.detail
+        )?;
+        for (i, step) in self.trace.iter().enumerate() {
+            writeln!(f, "  {:>3}. {step}", i.saturating_add(1))?;
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CheckOutcome {
+    pub stats: ExplorationStats,
+    pub violation: Option<Counterexample>,
+    /// true when every reachable state within the bounds was expanded
+    /// (no truncation, no state-cap hit)
+    pub complete: bool,
+}
+
+// ---------------------------------------------------------------------
+// The closed world
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum WireMsg {
+    Frame,
+    Credit(u32),
+    Drain(u64),
+    DrainAck(u64),
+    Flush(u64),
+    FlushAck(u64, u64),
+    Result,
+}
+
+/// The whole model state. Heap use is the two wire queues; everything
+/// else is the spec machines plus counters, so hashing and cloning stay
+/// cheap enough for six-figure state counts.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct World {
+    ledger: CreditLedger,
+    lane: LaneSpec,
+    node: NodeSpec,
+    to_node: VecDeque<WireMsg>,
+    to_gw: VecDeque<WireMsg>,
+    // workload
+    frames_left: u32,
+    /// the current clip's first frame went out, its second has not
+    clip_open: bool,
+    /// the next workload frame continues a clip that died with a
+    /// previous session and must be shed at push (dead-clips guard)
+    shed_next: bool,
+    // gateway accounting (the quantities Invariants checks in chaos)
+    clips_begun: u32,
+    open_clips: u32,
+    classified: u32,
+    aborted: u32,
+    dropped: u32,
+    // barrier bookkeeping
+    drain_pending: Option<u64>,
+    drain_done: bool,
+    flush_pending: Option<u64>,
+    flushes_done: u8,
+    // node-side session state
+    held: u32,
+    ack_drain: Option<u64>,
+    ack_flush: Option<(u64, u64)>,
+    // fault machinery
+    faults_left: u8,
+    /// the transport is severed / the node session is gone; the
+    /// gateway has not observed it yet
+    session_dead: bool,
+}
+
+impl World {
+    fn initial(cfg: &CheckConfig) -> World {
+        let mut lane = LaneSpec::new();
+        lane.on_session_established();
+        let mut node = NodeSpec::new(cfg.window);
+        node.on_welcome_sent();
+        World {
+            ledger: CreditLedger::new(cfg.window),
+            lane,
+            node,
+            to_node: VecDeque::new(),
+            to_gw: VecDeque::new(),
+            frames_left: cfg.frames,
+            clip_open: false,
+            shed_next: false,
+            clips_begun: 0,
+            open_clips: 0,
+            classified: 0,
+            aborted: 0,
+            dropped: 0,
+            drain_pending: None,
+            drain_done: false,
+            flush_pending: None,
+            flushes_done: 0,
+            held: 0,
+            ack_drain: None,
+            ack_flush: None,
+            faults_left: cfg.fault_budget,
+            session_dead: false,
+        }
+    }
+
+    /// The happy end: workload done, drain barrier completed, both
+    /// flush barriers acked, wires empty, session alive and quiet.
+    fn terminal(&self) -> bool {
+        self.frames_left == 0
+            && !self.shed_next
+            && self.drain_done
+            && self.flushes_done >= 2
+            && self.to_node.is_empty()
+            && self.to_gw.is_empty()
+            && self.ack_drain.is_none()
+            && self.ack_flush.is_none()
+            && !self.session_dead
+            && self.lane.state() == LaneState::Streaming
+    }
+
+    fn node_alive(&self) -> bool {
+        !self.session_dead && self.node.state() == NodeState::Streaming
+    }
+}
+
+/// A violation detected while applying a transition.
+type Breach = (Invariant, String);
+
+/// Append `(label, successor, breach?)` for every enabled transition.
+#[allow(clippy::too_many_lines)]
+fn successors(w: &World, cfg: &CheckConfig, out: &mut Vec<(String, World, Option<Breach>)>) {
+    let gw_live = w.lane.state() != LaneState::Down && w.lane.state() != LaneState::Poisoned;
+
+    // ---- gateway: shed a continuation frame of a dead clip
+    if w.shed_next && w.frames_left > 0 {
+        let mut n = w.clone();
+        n.frames_left = n.frames_left.saturating_sub(1);
+        n.dropped = n.dropped.saturating_add(1);
+        n.shed_next = false;
+        n.clip_open = false;
+        out.push(("gw: shed continuation frame of dead clip".into(), n, None));
+    }
+
+    // ---- gateway: send one frame
+    if gw_live && !w.shed_next && w.frames_left > 0 && w.drain_pending.is_none() && !w.drain_done {
+        if w.ledger.can_send() {
+            let mut n = w.clone();
+            let breach = n.ledger.consume().err();
+            if n.clip_open {
+                n.clip_open = false;
+            } else {
+                n.clip_open = true;
+                n.clips_begun = n.clips_begun.saturating_add(1);
+                n.open_clips = n.open_clips.saturating_add(1);
+            }
+            n.frames_left = n.frames_left.saturating_sub(1);
+            n.to_node.push_back(WireMsg::Frame);
+            out.push((
+                "gw: send frame".into(),
+                n,
+                breach.map(|v| (Invariant::from_rule(v.rule), v.detail)),
+            ));
+        }
+        // an exhausted window is a stall, not a transition: the gateway
+        // blocks until a credit or a death arrives
+    }
+
+    // ---- gateway: issue the drain barrier
+    if gw_live && w.frames_left == 0 && !w.shed_next && !w.drain_done && w.drain_pending.is_none() {
+        let mut n = w.clone();
+        let token = n.lane.issue(BarrierKind::Drain);
+        n.drain_pending = Some(token);
+        n.to_node.push_back(WireMsg::Drain(token));
+        out.push((format!("gw: send Drain(token {token})"), n, None));
+    }
+
+    // ---- gateway: issue a flush barrier (two in a row: idempotence)
+    if gw_live && w.drain_done && w.flushes_done < 2 && w.flush_pending.is_none() {
+        let mut n = w.clone();
+        let token = n.lane.issue(BarrierKind::Flush);
+        n.flush_pending = Some(token);
+        n.to_node.push_back(WireMsg::Flush(token));
+        out.push((format!("gw: send FlushTails(token {token})"), n, None));
+    }
+
+    // ---- gateway: receive the next node→gateway message
+    if let Some(head) = w.to_gw.front() {
+        let mut n = w.clone();
+        let msg = n.to_gw.pop_front().expect("front checked");
+        let mut breach: Option<Breach> = None;
+        let label = match msg {
+            WireMsg::Result => {
+                if n.open_clips == 0 {
+                    breach = Some((
+                        Invariant::DeathAccounting,
+                        "a result arrived for a clip already resolved \
+                         (classified or aborted): double accounting"
+                            .into(),
+                    ));
+                } else {
+                    n.open_clips = n.open_clips.saturating_sub(1);
+                }
+                n.classified = n.classified.saturating_add(1);
+                "gw: recv Result".to_string()
+            }
+            WireMsg::Credit(c) => {
+                if let Err(v) = n.ledger.grant(c) {
+                    breach = Some((Invariant::from_rule(v.rule), v.detail));
+                }
+                format!("gw: recv Credit({c})")
+            }
+            WireMsg::DrainAck(t) => {
+                if let Err(v) = n.lane.on_drain_ack(t) {
+                    breach = Some((Invariant::from_rule(v.rule), v.detail));
+                }
+                if n.drain_pending == Some(t) && n.lane.drain_satisfied(t) {
+                    n.drain_pending = None;
+                    n.drain_done = true;
+                    // every complete pre-barrier clip must have resolved
+                    // by now (results precede the ack on the FIFO wire);
+                    // only a stranded half-sent tail may stay open
+                    let allowed = u32::from(w.clip_open);
+                    if n.open_clips > allowed && breach.is_none() {
+                        breach = Some((
+                            Invariant::DrainCompleteness,
+                            format!(
+                                "drain ack matched with {} unresolved complete \
+                                 clip(s) ({} allowed for the stranded tail)",
+                                n.open_clips, allowed
+                            ),
+                        ));
+                    }
+                }
+                format!("gw: recv DrainAck(token {t})")
+            }
+            WireMsg::FlushAck(t, flushed) => {
+                if let Err(v) = n.lane.on_flush_ack(t, flushed) {
+                    breach = Some((Invariant::from_rule(v.rule), v.detail));
+                }
+                if n.flush_pending == Some(t) && n.lane.flush_satisfied(t).is_some() {
+                    n.flush_pending = None;
+                    let second = n.flushes_done == 1;
+                    n.flushes_done = n.flushes_done.saturating_add(1);
+                    if second && flushed != 0 && breach.is_none() {
+                        breach = Some((
+                            Invariant::FlushIdempotence,
+                            format!(
+                                "second flush with no intervening frames \
+                                 reported {flushed} padded tail(s)"
+                            ),
+                        ));
+                    }
+                }
+                format!("gw: recv FlushAck(token {t}, flushed {flushed})")
+            }
+            WireMsg::Frame | WireMsg::Drain(_) | WireMsg::Flush(_) => {
+                unreachable!("gateway-bound wire never carries {head:?}")
+            }
+        };
+        out.push((label, n, breach));
+    }
+
+    // ---- gateway: observe a session death (at-most-once reckoning)
+    if w.session_dead && gw_live {
+        let mut n = w.clone();
+        let reck = n.lane.on_death(0, u64::from(n.open_clips));
+        n.aborted = n
+            .aborted
+            .saturating_add(u32::try_from(reck.clips_aborted).unwrap_or(u32::MAX));
+        n.open_clips = 0;
+        n.shed_next = n.clip_open && n.frames_left > 0;
+        n.clip_open = false;
+        n.drain_pending = None;
+        n.flush_pending = None;
+        n.to_node.clear();
+        if cfg.mutation == Mutation::StaleResults {
+            // the injected bug: undelivered results of the dead session
+            // survive and replay into the next session's accounting
+            n.to_gw.retain(|m| matches!(m, WireMsg::Result));
+        } else {
+            n.to_gw.clear();
+        }
+        n.session_dead = false;
+        n.held = 0;
+        n.ack_drain = None;
+        n.ack_flush = None;
+        out.push((
+            format!(
+                "gw: observe death ({} clip(s) aborted, at-most-once)",
+                reck.clips_aborted
+            ),
+            n,
+            None,
+        ));
+    }
+
+    // ---- gateway: reconnect a down lane
+    if w.lane.state() == LaneState::Down && !w.session_dead {
+        let mut n = w.clone();
+        n.lane.on_session_established();
+        n.ledger = CreditLedger::new(cfg.window);
+        let mut node = NodeSpec::new(cfg.window);
+        node.on_welcome_sent();
+        n.node = node;
+        n.held = 0;
+        out.push(("gw: reconnect (fresh session, fresh window)".into(), n, None));
+    }
+
+    // ---- node: receive the next gateway→node message
+    if w.node_alive() && w.ack_drain.is_none() && w.ack_flush.is_none() {
+        if let Some(head) = w.to_node.front() {
+            let mut n = w.clone();
+            let msg = n.to_node.pop_front().expect("front checked");
+            let mut breach: Option<Breach> = None;
+            let label = match msg {
+                WireMsg::Frame => {
+                    if let Err(v) = n.node.on_frame() {
+                        breach = Some((Invariant::from_rule(v.rule), v.detail));
+                    }
+                    n.held = n.held.saturating_add(1);
+                    "node: recv Frame".to_string()
+                }
+                WireMsg::Drain(t) => match n.node.on_barrier(t) {
+                    Err(_) => "node: absorb replayed Drain".to_string(),
+                    Ok(()) => {
+                        if cfg.mutation != Mutation::SkipDrainClassify {
+                            while n.held >= 2 {
+                                n.held = n.held.saturating_sub(2);
+                                n.to_gw.push_back(WireMsg::Result);
+                            }
+                        }
+                        push_grant(&mut n, cfg);
+                        n.ack_drain = Some(t);
+                        format!("node: drain (token {t}): classify + stream results")
+                    }
+                },
+                WireMsg::Flush(t) => match n.node.on_barrier(t) {
+                    Err(_) => "node: absorb replayed FlushTails".to_string(),
+                    Ok(()) => {
+                        while n.held >= 2 {
+                            n.held = n.held.saturating_sub(2);
+                            n.to_gw.push_back(WireMsg::Result);
+                        }
+                        let mut flushed = 0u64;
+                        if n.held == 1 {
+                            n.held = 0;
+                            flushed = 1;
+                            n.to_gw.push_back(WireMsg::Result); // padded tail
+                        }
+                        if cfg.mutation == Mutation::FlushAlwaysPads {
+                            flushed = flushed.max(1);
+                        }
+                        push_grant(&mut n, cfg);
+                        n.ack_flush = Some((t, flushed));
+                        format!("node: flush tails (token {t}): pad + stream results")
+                    }
+                },
+                WireMsg::Credit(_)
+                | WireMsg::DrainAck(_)
+                | WireMsg::FlushAck(..)
+                | WireMsg::Result => {
+                    unreachable!("node-bound wire never carries {head:?}")
+                }
+            };
+            out.push((label, n, breach));
+        }
+    }
+
+    // ---- node: classify one complete clip
+    if w.node_alive() && w.held >= 2 && w.ack_drain.is_none() && w.ack_flush.is_none() {
+        let mut n = w.clone();
+        n.held = n.held.saturating_sub(2);
+        n.to_gw.push_back(WireMsg::Result);
+        out.push(("node: classify clip, stream Result".into(), n, None));
+    }
+
+    // ---- node: coalesce and grant owed credits
+    if w.node_alive()
+        && w.node.pending_credits() > 0
+        && w.ack_drain.is_none()
+        && w.ack_flush.is_none()
+    {
+        let mut n = w.clone();
+        let c = n.node.take_credits();
+        push_grant_of(&mut n, c, cfg);
+        out.push((format!("node: grant Credit({c})"), n, None));
+    }
+
+    // ---- node: put a pending barrier ack on the wire
+    if w.node_alive() {
+        if let Some(t) = w.ack_drain {
+            let mut n = w.clone();
+            n.ack_drain = None;
+            n.to_gw.push_back(WireMsg::DrainAck(t));
+            out.push((format!("node: send DrainAck(token {t})"), n, None));
+        }
+        if let Some((t, flushed)) = w.ack_flush {
+            let mut n = w.clone();
+            n.ack_flush = None;
+            n.to_gw.push_back(WireMsg::FlushAck(t, flushed));
+            out.push((
+                format!("node: send FlushAck(token {t}, flushed {flushed})"),
+                n,
+                None,
+            ));
+        }
+    }
+
+    // ---- faults
+    if w.faults_left > 0 {
+        for &f in &cfg.faults {
+            match f {
+                FaultEvent::Drop if !w.session_dead && gw_live => {
+                    let mut n = w.clone();
+                    n.faults_left = n.faults_left.saturating_sub(1);
+                    n.session_dead = true;
+                    out.push(("fault: drop (transport severed)".into(), n, None));
+                }
+                FaultEvent::Dup => {
+                    let dup_ctl = |q: &VecDeque<WireMsg>| {
+                        matches!(
+                            q.front(),
+                            Some(
+                                WireMsg::Drain(_)
+                                    | WireMsg::DrainAck(_)
+                                    | WireMsg::Flush(_)
+                                    | WireMsg::FlushAck(..)
+                            )
+                        )
+                    };
+                    if dup_ctl(&w.to_node) {
+                        let mut n = w.clone();
+                        n.faults_left = n.faults_left.saturating_sub(1);
+                        let head = n.to_node.front().expect("checked").clone();
+                        n.to_node.push_front(head);
+                        out.push(("fault: dup control message toward node".into(), n, None));
+                    }
+                    if dup_ctl(&w.to_gw) {
+                        let mut n = w.clone();
+                        n.faults_left = n.faults_left.saturating_sub(1);
+                        let head = n.to_gw.front().expect("checked").clone();
+                        n.to_gw.push_front(head);
+                        out.push(("fault: dup control message toward gateway".into(), n, None));
+                    }
+                }
+                FaultEvent::HalfClose if w.node_alive() => {
+                    // the node sees EOF: classify what it holds, stream
+                    // the results, then the session ends
+                    let mut n = w.clone();
+                    n.faults_left = n.faults_left.saturating_sub(1);
+                    while n.held >= 2 {
+                        n.held = n.held.saturating_sub(2);
+                        n.to_gw.push_back(WireMsg::Result);
+                    }
+                    n.node.on_eof();
+                    n.session_dead = true;
+                    out.push((
+                        "fault: half-close (node drains, then session ends)".into(),
+                        n,
+                        None,
+                    ));
+                }
+                FaultEvent::CrashAdmission
+                    if w.lane.state() == LaneState::Down && !w.session_dead =>
+                {
+                    let mut n = w.clone();
+                    n.faults_left = n.faults_left.saturating_sub(1);
+                    out.push((
+                        "fault: crash-admission (reconnect attempt dies at the gate)".into(),
+                        n,
+                        None,
+                    ));
+                }
+                FaultEvent::CrashMidCompute if w.node_alive() && w.held > 0 => {
+                    let mut n = w.clone();
+                    n.faults_left = n.faults_left.saturating_sub(1);
+                    n.session_dead = true;
+                    out.push((
+                        "fault: crash-mid-compute (node dies holding frames)".into(),
+                        n,
+                        None,
+                    ));
+                }
+                FaultEvent::CrashPreDrainAck if w.ack_drain.is_some() && !w.session_dead => {
+                    let mut n = w.clone();
+                    n.faults_left = n.faults_left.saturating_sub(1);
+                    n.ack_drain = None;
+                    n.session_dead = true;
+                    out.push((
+                        "fault: crash-pre-drain-ack (results sent, ack lost)".into(),
+                        n,
+                        None,
+                    ));
+                }
+                FaultEvent::CrashPreFlushAck if w.ack_flush.is_some() && !w.session_dead => {
+                    let mut n = w.clone();
+                    n.faults_left = n.faults_left.saturating_sub(1);
+                    n.ack_flush = None;
+                    n.session_dead = true;
+                    out.push((
+                        "fault: crash-pre-flush-ack (results sent, ack lost)".into(),
+                        n,
+                        None,
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Put a freshly coalesced grant on the wire (the mutation hook sits
+/// here so `drop-credit-grant` / `double-grant` hit every grant site).
+fn push_grant(w: &mut World, cfg: &CheckConfig) {
+    let c = w.node.take_credits();
+    push_grant_of(w, c, cfg);
+}
+
+fn push_grant_of(w: &mut World, c: u32, cfg: &CheckConfig) {
+    if c == 0 {
+        return;
+    }
+    match cfg.mutation {
+        Mutation::DropCreditGrant => {}
+        Mutation::DoubleGrant => {
+            w.to_gw.push_back(WireMsg::Credit(c));
+            w.to_gw.push_back(WireMsg::Credit(c));
+        }
+        _ => w.to_gw.push_back(WireMsg::Credit(c)),
+    }
+}
+
+/// Run the bounded BFS. Deterministic: same config, same exploration,
+/// same (minimal) counterexample.
+pub fn check(cfg: &CheckConfig) -> CheckOutcome {
+    let mut stats = ExplorationStats::default();
+    let enabled = |i: Invariant| cfg.invariants.contains(&i);
+
+    // arena of visited states for trace reconstruction
+    struct NodeRec {
+        parent: usize,
+        label: String,
+        depth: usize,
+    }
+    let mut arena: Vec<NodeRec> = vec![NodeRec {
+        parent: usize::MAX,
+        label: String::new(),
+        depth: 0,
+    }];
+    let mut seen: HashMap<World, usize> = HashMap::new();
+    let root = World::initial(cfg);
+    seen.insert(root.clone(), 0);
+    let mut frontier: VecDeque<(World, usize)> = VecDeque::new();
+    frontier.push_back((root, 0));
+
+    let trace_to = |arena: &[NodeRec], mut idx: usize| -> Vec<String> {
+        let mut steps = Vec::new();
+        while idx != 0 {
+            steps.push(arena[idx].label.clone());
+            idx = arena[idx].parent;
+        }
+        steps.reverse();
+        steps
+    };
+
+    let mut succ: Vec<(String, World, Option<Breach>)> = Vec::new();
+    let mut capped = false;
+    while let Some((world, idx)) = frontier.pop_front() {
+        let depth = arena[idx].depth;
+        stats.states_explored = stats.states_explored.saturating_add(1);
+        stats.max_depth_reached = stats.max_depth_reached.max(depth);
+
+        if world.terminal() {
+            stats.terminal_states = stats.terminal_states.saturating_add(1);
+            // every clip resolves exactly once across the whole run
+            let resolved = world.classified.saturating_add(world.aborted);
+            if enabled(Invariant::DeathAccounting)
+                && (resolved != world.clips_begun || world.open_clips != 0)
+            {
+                return CheckOutcome {
+                    stats,
+                    violation: Some(Counterexample {
+                        invariant: Invariant::DeathAccounting,
+                        detail: format!(
+                            "terminal state resolves {} of {} clips \
+                             ({} classified + {} aborted, {} still open)",
+                            resolved,
+                            world.clips_begun,
+                            world.classified,
+                            world.aborted,
+                            world.open_clips
+                        ),
+                        trace: trace_to(&arena, idx),
+                    }),
+                    complete: false,
+                };
+            }
+            continue;
+        }
+
+        if depth >= cfg.depth {
+            stats.truncated = stats.truncated.saturating_add(1);
+            continue;
+        }
+
+        succ.clear();
+        successors(&world, cfg, &mut succ);
+        if succ.is_empty() {
+            // non-terminal, no enabled transition: the protocol wedged
+            if enabled(Invariant::DeadlockFreedom) {
+                return CheckOutcome {
+                    stats,
+                    violation: Some(Counterexample {
+                        invariant: Invariant::DeadlockFreedom,
+                        detail: format!(
+                            "no transition enabled ({} frames unsent, {} credits, \
+                             {} clips open)",
+                            world.frames_left,
+                            world.ledger.credits(),
+                            world.open_clips
+                        ),
+                        trace: trace_to(&arena, idx),
+                    }),
+                    complete: false,
+                };
+            }
+            continue;
+        }
+        for (label, next, breach) in succ.drain(..) {
+            stats.transitions = stats.transitions.saturating_add(1);
+            if let Some((inv, detail)) = breach {
+                if enabled(inv) {
+                    let mut trace = trace_to(&arena, idx);
+                    trace.push(label);
+                    return CheckOutcome {
+                        stats,
+                        violation: Some(Counterexample {
+                            invariant: inv,
+                            detail,
+                            trace,
+                        }),
+                        complete: false,
+                    };
+                }
+            }
+            if seen.contains_key(&next) {
+                stats.dedup_hits = stats.dedup_hits.saturating_add(1);
+                continue;
+            }
+            if seen.len() >= cfg.max_states {
+                capped = true;
+                continue;
+            }
+            arena.push(NodeRec {
+                parent: idx,
+                label,
+                depth: depth.saturating_add(1),
+            });
+            let rec = arena.len().saturating_sub(1);
+            seen.insert(next.clone(), rec);
+            frontier.push_back((next, rec));
+        }
+    }
+
+    let complete = stats.truncated == 0 && !capped;
+    CheckOutcome {
+        stats,
+        violation: None,
+        complete,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(mutation: Mutation, faults: Vec<FaultEvent>, budget: u8) -> CheckConfig {
+        CheckConfig {
+            frames: 5,
+            window: 2,
+            depth: 96,
+            faults,
+            fault_budget: budget,
+            mutation,
+            ..CheckConfig::default()
+        }
+    }
+
+    #[test]
+    fn correct_spec_passes_exhaustively_with_all_faults() {
+        let out = check(&quick(Mutation::None, FaultEvent::ALL.to_vec(), 1));
+        assert!(
+            out.violation.is_none(),
+            "unexpected counterexample:\n{}",
+            out.violation.unwrap()
+        );
+        assert!(out.complete, "depth bound truncated the exploration: {:?}", out.stats);
+        assert!(out.stats.terminal_states > 0, "no terminal state reached");
+        assert!(out.stats.states_explored > 100, "{:?}", out.stats);
+    }
+
+    #[test]
+    fn correct_spec_passes_without_faults_too() {
+        let out = check(&quick(Mutation::None, vec![], 0));
+        assert!(out.violation.is_none());
+        assert!(out.complete);
+    }
+
+    #[test]
+    fn dropped_credit_grant_deadlocks() {
+        let out = check(&quick(Mutation::DropCreditGrant, vec![], 0));
+        let cex = out.violation.expect("the checker must catch the dropped grant");
+        assert_eq!(cex.invariant, Invariant::DeadlockFreedom);
+        assert!(!cex.trace.is_empty());
+        // BFS order: the trace is minimal; re-running yields the same one
+        let again = check(&quick(Mutation::DropCreditGrant, vec![], 0));
+        assert_eq!(again.violation.unwrap().trace, cex.trace);
+    }
+
+    #[test]
+    fn double_grant_breaks_credit_conservation() {
+        let out = check(&quick(Mutation::DoubleGrant, vec![], 0));
+        let cex = out.violation.expect("over-grant must be caught");
+        assert_eq!(cex.invariant, Invariant::CreditConservation);
+    }
+
+    #[test]
+    fn skipped_drain_classify_breaks_completeness() {
+        let out = check(&quick(Mutation::SkipDrainClassify, vec![], 0));
+        let cex = out.violation.expect("unclassified drain must be caught");
+        assert_eq!(cex.invariant, Invariant::DrainCompleteness);
+    }
+
+    #[test]
+    fn eager_flush_padding_breaks_idempotence() {
+        let out = check(&quick(Mutation::FlushAlwaysPads, vec![], 0));
+        let cex = out.violation.expect("non-idempotent flush must be caught");
+        assert_eq!(cex.invariant, Invariant::FlushIdempotence);
+    }
+
+    #[test]
+    fn stale_results_after_death_break_at_most_once() {
+        let out = check(&quick(
+            Mutation::StaleResults,
+            vec![FaultEvent::CrashMidCompute, FaultEvent::Drop],
+            1,
+        ));
+        let cex = out.violation.expect("replayed results must be caught");
+        assert_eq!(cex.invariant, Invariant::DeathAccounting);
+    }
+
+    #[test]
+    fn invariant_filter_masks_other_violations() {
+        // only credit-conservation armed: the dropped grant's deadlock
+        // is out of scope, so the run completes violation-free
+        let cfg = CheckConfig {
+            invariants: vec![Invariant::CreditConservation],
+            ..quick(Mutation::DropCreditGrant, vec![], 0)
+        };
+        let out = check(&cfg);
+        assert!(out.violation.is_none());
+    }
+
+    #[test]
+    fn slugs_roundtrip() {
+        for i in Invariant::ALL {
+            assert_eq!(Invariant::parse(i.name()).unwrap(), i);
+        }
+        for f in FaultEvent::ALL {
+            assert_eq!(FaultEvent::parse(f.name()).unwrap(), f);
+        }
+        for m in Mutation::ALL {
+            assert_eq!(Mutation::parse(m.name()).unwrap(), m);
+        }
+        assert!(Invariant::parse("nope").is_err());
+        assert!(FaultEvent::parse("nope").is_err());
+        assert!(Mutation::parse("nope").is_err());
+    }
+
+    #[test]
+    fn tiny_depth_reports_truncation() {
+        let cfg = CheckConfig {
+            depth: 3,
+            ..quick(Mutation::None, vec![], 0)
+        };
+        let out = check(&cfg);
+        assert!(out.violation.is_none());
+        assert!(!out.complete, "a 3-deep sweep cannot be exhaustive");
+        assert!(out.stats.truncated > 0);
+    }
+}

@@ -1,0 +1,34 @@
+//! Executable specification of wire protocol v3.
+//!
+//! Three pure, heap-light state machines ([`spec`]) are the single
+//! source of truth for the protocol's transition decisions:
+//!
+//! * [`CreditLedger`] — the gateway's credit window
+//!   (`credits + in_flight == window`, always);
+//! * [`LaneSpec`] — the gateway lane: barrier token minting and
+//!   matching, reconnect death-reckoning (at-most-once), poisoning;
+//! * [`NodeSpec`] — the node session: credit accrual/coalescing,
+//!   barrier-token replay absorption, idle reap, clean EOF.
+//!
+//! Production (`net/lane.rs`, `net/node.rs`) **delegates** to these
+//! types instead of open-coding the decisions, the bounded model
+//! checker ([`checker`]) exhaustively explores them under reorderings
+//! and chaos-taxonomy faults (`infilter verify-proto`), and the
+//! [`ConformanceMonitor`] shadow-checks real `Msg` traces in
+//! debug/chaos builds — so the proved model and the shipping
+//! implementation are mechanically prevented from drifting, the same
+//! way `analysis/` is cross-checked by `RangeTrace`.
+
+pub mod checker;
+pub mod monitor;
+pub mod spec;
+
+pub use checker::{
+    check, CheckConfig, CheckOutcome, Counterexample, ExplorationStats, FaultEvent, Invariant,
+    Mutation,
+};
+pub use monitor::{ConformanceMonitor, MonitorLog};
+pub use spec::{
+    BarrierKind, CreditLedger, CreditState, DeathReckoning, LaneSpec, LaneState, NodeSpec,
+    NodeState, SpecViolation,
+};

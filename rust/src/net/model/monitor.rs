@@ -1,0 +1,271 @@
+//! Runtime conformance monitor: the spec machines shadow-checking a
+//! real session's `Msg` trace.
+//!
+//! The production lane already *delegates* its transition decisions to
+//! [`LaneSpec`]/[`CreditLedger`], but delegation alone cannot catch a
+//! wiring bug — a call skipped, made twice, or made out of order. The
+//! monitor closes that hole: it keeps an **independent** copy of the
+//! spec machines, fed only by the observable wire events (Welcome,
+//! frame sent, Credit received, barrier issued, acks, deaths), and
+//! records a divergence whenever the observed trace is one the spec
+//! would not produce. Every divergence also bumps
+//! `gateway_invariant_violations_total`, so a chaos soak with the
+//! monitor armed fails loudly instead of silently drifting from the
+//! model `verify-proto` proved.
+//!
+//! Hooks are infallible by design — the monitor observes, it never
+//! vetoes. Production behaviour is identical armed or not; only the
+//! log and the metric change.
+#![deny(clippy::arithmetic_side_effects)]
+
+use std::sync::{Arc, Mutex};
+
+use super::spec::{BarrierKind, CreditLedger, LaneSpec};
+
+/// Shared sink for divergences: the scenario runner keeps the `Arc`
+/// and reads it after the session (and the lane that owned the
+/// monitor) is gone.
+#[derive(Debug, Default)]
+pub struct MonitorLog {
+    divergences: Mutex<Vec<String>>,
+}
+
+impl MonitorLog {
+    pub fn new() -> Arc<MonitorLog> {
+        Arc::new(MonitorLog::default())
+    }
+
+    fn record(&self, msg: String) {
+        crate::metric_counter!("gateway_invariant_violations_total").inc();
+        crate::log_warn!("conformance monitor: {msg}");
+        self.divergences
+            .lock()
+            .expect("monitor log poisoned")
+            .push(msg);
+    }
+
+    /// Every divergence observed so far, in order.
+    pub fn divergences(&self) -> Vec<String> {
+        self.divergences
+            .lock()
+            .expect("monitor log poisoned")
+            .clone()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.divergences
+            .lock()
+            .expect("monitor log poisoned")
+            .is_empty()
+    }
+}
+
+/// The shadow checker one gateway lane carries in debug/chaos builds.
+///
+/// Call the `on_*` hooks at the wire-observation points; the monitor
+/// replays the same event through its private spec copies and records
+/// any step the spec rejects or decides differently.
+#[derive(Debug)]
+pub struct ConformanceMonitor {
+    /// `None` until the first Welcome (no session, nothing to check)
+    ledger: Option<CreditLedger>,
+    lane: LaneSpec,
+    log: Arc<MonitorLog>,
+}
+
+impl ConformanceMonitor {
+    pub fn new(log: Arc<MonitorLog>) -> ConformanceMonitor {
+        ConformanceMonitor {
+            ledger: None,
+            lane: LaneSpec::new(),
+            log,
+        }
+    }
+
+    /// Arm mid-session: adopt the production machines' current state as
+    /// the shadow's starting point. A monitor armed at t₀ must not flag
+    /// history it never observed — in particular the already-spent part
+    /// of the credit window and already-minted barrier tokens.
+    pub fn resume(
+        spec: LaneSpec,
+        ledger: Option<CreditLedger>,
+        log: Arc<MonitorLog>,
+    ) -> ConformanceMonitor {
+        ConformanceMonitor {
+            ledger,
+            lane: spec,
+            log,
+        }
+    }
+
+    pub fn log(&self) -> Arc<MonitorLog> {
+        Arc::clone(&self.log)
+    }
+
+    /// A Welcome established (or re-established) a session granting
+    /// `window` credits.
+    pub fn on_welcome(&mut self, window: u32) {
+        self.ledger = Some(CreditLedger::new(window));
+        self.lane.on_session_established();
+    }
+
+    /// The lane put one frame on the wire.
+    pub fn on_frame_sent(&mut self) {
+        match self.ledger.as_mut() {
+            Some(l) => {
+                if let Err(v) = l.consume() {
+                    self.log.record(format!("frame sent off-spec: {v}"));
+                }
+            }
+            None => self
+                .log
+                .record("frame sent with no session established".into()),
+        }
+    }
+
+    /// A Credit{n} arrived from the node.
+    pub fn on_credit(&mut self, n: u32) {
+        match self.ledger.as_mut() {
+            Some(l) => {
+                if let Err(v) = l.grant(n) {
+                    self.log.record(format!("credit grant off-spec: {v}"));
+                }
+            }
+            None => self
+                .log
+                .record(format!("Credit({n}) with no session established")),
+        }
+    }
+
+    /// The lane issued a barrier with `token`; the monitor's own spec
+    /// copy must mint the same token, or the production counter and the
+    /// spec have diverged.
+    pub fn on_barrier_sent(&mut self, kind: BarrierKind, token: u64) {
+        let own = self.lane.issue(kind);
+        if own != token {
+            self.log.record(format!(
+                "{} token diverged: lane sent {token}, spec expects {own}",
+                kind.name()
+            ));
+        }
+    }
+
+    /// A DrainAck{token} arrived.
+    pub fn on_drain_ack(&mut self, token: u64) {
+        if let Err(v) = self.lane.on_drain_ack(token) {
+            self.log.record(format!("drain ack off-spec: {v}"));
+        }
+    }
+
+    /// A FlushAck{token, flushed} arrived.
+    pub fn on_flush_ack(&mut self, token: u64, flushed: u64) {
+        if let Err(v) = self.lane.on_flush_ack(token, flushed) {
+            self.log.record(format!("flush ack off-spec: {v}"));
+        }
+    }
+
+    /// The lane reckoned a session death, reporting `frames` dropped
+    /// and `clips` aborted; the spec must agree the reckoning was due
+    /// (a second reckoning for the same death is the at-most-once bug).
+    pub fn on_death(&mut self, frames: u64, clips: u64) {
+        let reck = self.lane.on_death(frames, clips);
+        if reck.frames_dropped != frames || reck.clips_aborted != clips {
+            self.log.record(format!(
+                "death reckoning diverged: lane counted {frames} frames / \
+                 {clips} clips, spec allows {} / {} (at-most-once)",
+                reck.frames_dropped, reck.clips_aborted
+            ));
+        }
+        self.ledger = None;
+    }
+
+    /// The lane gave up on the endpoint for good (permanent Reject).
+    pub fn on_poison(&mut self) {
+        self.lane.poison();
+        self.ledger = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed() -> (ConformanceMonitor, Arc<MonitorLog>) {
+        let log = MonitorLog::new();
+        (ConformanceMonitor::new(Arc::clone(&log)), log)
+    }
+
+    #[test]
+    fn clean_session_stays_clean() {
+        let (mut m, log) = armed();
+        m.on_welcome(2);
+        m.on_frame_sent();
+        m.on_frame_sent();
+        m.on_credit(2);
+        m.on_barrier_sent(BarrierKind::Drain, 1);
+        m.on_drain_ack(1);
+        m.on_barrier_sent(BarrierKind::Flush, 2);
+        m.on_flush_ack(2, 0);
+        m.on_death(0, 0);
+        assert!(log.is_clean(), "{:?}", log.divergences());
+    }
+
+    #[test]
+    fn overspending_the_window_is_a_divergence() {
+        let (mut m, log) = armed();
+        m.on_welcome(1);
+        m.on_frame_sent();
+        m.on_frame_sent(); // no credit left
+        assert_eq!(log.divergences().len(), 1);
+        assert!(log.divergences()[0].contains("off-spec"));
+    }
+
+    #[test]
+    fn grant_leak_is_a_divergence() {
+        let (mut m, log) = armed();
+        m.on_welcome(2);
+        m.on_frame_sent();
+        m.on_credit(2); // only 1 in flight
+        assert!(!log.is_clean());
+    }
+
+    #[test]
+    fn token_mismatch_is_a_divergence() {
+        let (mut m, log) = armed();
+        m.on_welcome(2);
+        m.on_barrier_sent(BarrierKind::Drain, 7); // spec would mint 1
+        assert!(!log.is_clean());
+        assert!(log.divergences()[0].contains("token diverged"));
+    }
+
+    #[test]
+    fn future_ack_is_a_divergence() {
+        let (mut m, log) = armed();
+        m.on_welcome(2);
+        m.on_drain_ack(5); // nothing issued yet
+        assert!(!log.is_clean());
+    }
+
+    #[test]
+    fn double_death_reckoning_is_a_divergence() {
+        let (mut m, log) = armed();
+        m.on_welcome(2);
+        m.on_frame_sent();
+        m.on_death(1, 1);
+        assert!(log.is_clean(), "first reckoning is legitimate");
+        m.on_death(1, 1); // same death counted twice
+        assert!(!log.is_clean());
+        assert!(log.divergences()[0].contains("at-most-once"));
+    }
+
+    #[test]
+    fn reconnect_resets_the_window() {
+        let (mut m, log) = armed();
+        m.on_welcome(1);
+        m.on_frame_sent();
+        m.on_death(0, 0);
+        m.on_welcome(1); // fresh session, fresh window
+        m.on_frame_sent();
+        assert!(log.is_clean(), "{:?}", log.divergences());
+    }
+}

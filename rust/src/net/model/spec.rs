@@ -1,0 +1,578 @@
+//! Pure state machines for wire protocol v3 — the executable half of
+//! `docs/WIRE.md`.
+//!
+//! Three machines cover the protocol: the [`CreditLedger`] (the
+//! credit/in-flight window both ends must agree on), the [`LaneSpec`]
+//! (the gateway `RemoteLane`'s barrier-token and death-reckoning
+//! decisions) and the [`NodeSpec`] (the node session's credit-recycling
+//! and teardown decisions). They are heap-free `Copy` values over plain
+//! integers so the model checker can clone, hash and dedup millions of
+//! them, and they are the *production* decision procedures: `net/lane.rs`
+//! and `net/node.rs` call these types instead of open-coding the
+//! transitions, so the checked model and the shipping implementation
+//! cannot drift apart.
+//!
+//! Every method either performs a legal transition or returns a
+//! [`SpecViolation`] naming the WIRE.md rule that was broken. Production
+//! callers treat a violation as an invariant breach (they bump
+//! `gateway_invariant_violations_total` / `node_spec_violations_total`
+//! and continue with the clamped state the spec left behind); the model
+//! checker treats it as a counterexample.
+#![deny(clippy::arithmetic_side_effects)]
+
+use std::fmt;
+
+/// An observed transition the protocol specification forbids. `rule` is
+/// the kebab-case invariant slug `verify-proto` reports (see
+/// [`super::checker::Invariant`]); `detail` is the human-readable
+/// account of what happened.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecViolation {
+    pub rule: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for SpecViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.rule, self.detail)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Credit / in-flight ledger
+// ---------------------------------------------------------------------
+
+/// Observable condition of a [`CreditLedger`]: `Open` while credits
+/// remain, `Exhausted` when the window is fully in flight (the gateway
+/// must stall), `Violated` once a transition broke conservation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CreditState {
+    Open,
+    Exhausted,
+    Violated,
+}
+
+/// The session-scoped credit window (WIRE.md §Credit flow). Invariant:
+/// `credits + in_flight == window` at all times — a frame send moves
+/// one unit from `credits` to `in_flight`, a grant moves `n` back. A
+/// grant larger than `in_flight` is a conservation breach (the node
+/// granted credit for frames it never received), as is a send with an
+/// empty window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CreditLedger {
+    window: u32,
+    credits: u32,
+    in_flight: u32,
+    violated: bool,
+}
+
+impl CreditLedger {
+    /// A fresh session's ledger: the full `window` granted by `Welcome`.
+    pub fn new(window: u32) -> CreditLedger {
+        CreditLedger {
+            window,
+            credits: window,
+            in_flight: 0,
+            violated: false,
+        }
+    }
+
+    pub fn window(&self) -> u32 {
+        self.window
+    }
+
+    /// Credits the gateway may still spend.
+    pub fn credits(&self) -> u32 {
+        self.credits
+    }
+
+    /// Frames sent whose credit has not come back yet.
+    pub fn in_flight(&self) -> u32 {
+        self.in_flight
+    }
+
+    pub fn state(&self) -> CreditState {
+        if self.violated {
+            CreditState::Violated
+        } else if self.credits == 0 {
+            CreditState::Exhausted
+        } else {
+            CreditState::Open
+        }
+    }
+
+    /// Whether a frame may go on the wire right now.
+    pub fn can_send(&self) -> bool {
+        self.credits > 0
+    }
+
+    /// Spend one credit for a frame send. Sending on an exhausted
+    /// window breaks conservation (the node's bounded buffer is the
+    /// whole point of the window).
+    pub fn consume(&mut self) -> Result<(), SpecViolation> {
+        match self.credits.checked_sub(1) {
+            Some(c) => {
+                self.credits = c;
+                self.in_flight = self.in_flight.saturating_add(1);
+                Ok(())
+            }
+            None => {
+                self.violated = true;
+                Err(SpecViolation {
+                    rule: "credit-conservation",
+                    detail: format!(
+                        "frame sent with zero credits ({} in flight, window {})",
+                        self.in_flight, self.window
+                    ),
+                })
+            }
+        }
+    }
+
+    /// Fold a `Credit{n}` grant back into the window. A grant can only
+    /// return credit for frames actually in flight; anything larger is
+    /// a leak (the state is clamped to the full window so a production
+    /// caller degrades the way the old saturating arithmetic did,
+    /// but the breach is reported).
+    pub fn grant(&mut self, n: u32) -> Result<(), SpecViolation> {
+        match self.in_flight.checked_sub(n) {
+            Some(f) => {
+                self.in_flight = f;
+                self.credits = self.credits.saturating_add(n).min(self.window);
+                Ok(())
+            }
+            None => {
+                let over = n;
+                let had = self.in_flight;
+                self.violated = true;
+                self.in_flight = 0;
+                self.credits = self.window;
+                Err(SpecViolation {
+                    rule: "credit-conservation",
+                    detail: format!(
+                        "grant of {over} credits with only {had} frames in flight \
+                         (window {})",
+                        self.window
+                    ),
+                })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gateway lane spec
+// ---------------------------------------------------------------------
+
+/// Which wire barrier a token belongs to (they share one monotonic
+/// token counter, WIRE.md §Drain barrier / §Flush-tails barrier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BarrierKind {
+    Drain,
+    Flush,
+}
+
+impl BarrierKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BarrierKind::Drain => "drain",
+            BarrierKind::Flush => "flush",
+        }
+    }
+}
+
+/// Gateway lane lifecycle (WIRE.md §Reconnect semantics): `Streaming`
+/// with a live session, `AwaitingDrainAck` / `AwaitingFlushAck` while a
+/// barrier token is outstanding, `Down` between a death and the next
+/// successful re-handshake, `Poisoned` once a node refused the
+/// re-handshake permanently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LaneState {
+    Streaming,
+    AwaitingDrainAck,
+    AwaitingFlushAck,
+    Down,
+    Poisoned,
+}
+
+/// What one observed link death costs, decided by
+/// [`LaneSpec::on_death`]: queued frames become drops, unresolved clips
+/// become aborts — exactly once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct DeathReckoning {
+    pub frames_dropped: u64,
+    pub clips_aborted: u64,
+}
+
+/// The gateway `RemoteLane`'s transition decisions: barrier token issue
+/// and matching, and the at-most-once death reckoning. The token
+/// counter is monotonic for the lane's whole life (never reset on
+/// reconnect) so a stale ack from a dead session can never satisfy a
+/// live barrier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LaneSpec {
+    state: LaneState,
+    next_token: u64,
+    last_drain_ack: Option<u64>,
+    last_flush_ack: Option<(u64, u64)>,
+}
+
+impl LaneSpec {
+    /// A lane whose first session is established (`connect` succeeded).
+    pub fn new() -> LaneSpec {
+        LaneSpec {
+            state: LaneState::Streaming,
+            next_token: 0,
+            last_drain_ack: None,
+            last_flush_ack: None,
+        }
+    }
+
+    pub fn state(&self) -> LaneState {
+        self.state
+    }
+
+    /// The highest barrier token issued so far.
+    pub fn token(&self) -> u64 {
+        self.next_token
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.state == LaneState::Poisoned
+    }
+
+    /// Issue the next barrier token and move to the matching awaiting
+    /// state. Tokens are strictly monotonic (saturating only at the
+    /// unreachable 2^64 boundary).
+    pub fn issue(&mut self, kind: BarrierKind) -> u64 {
+        self.next_token = self.next_token.saturating_add(1);
+        self.state = match kind {
+            BarrierKind::Drain => LaneState::AwaitingDrainAck,
+            BarrierKind::Flush => LaneState::AwaitingFlushAck,
+        };
+        self.next_token
+    }
+
+    /// Record a `DrainAck`. An ack for a token this lane never issued
+    /// is a protocol breach and is *not* recorded (recording it could
+    /// mask a real pending barrier); a stale token from an earlier
+    /// barrier is recorded but satisfies nothing.
+    pub fn on_drain_ack(&mut self, token: u64) -> Result<(), SpecViolation> {
+        if token > self.next_token {
+            return Err(SpecViolation {
+                rule: "drain-completeness",
+                detail: format!(
+                    "DrainAck for token {token} but only {} issued",
+                    self.next_token
+                ),
+            });
+        }
+        self.last_drain_ack = Some(token);
+        if self.state == LaneState::AwaitingDrainAck && token == self.next_token {
+            self.state = LaneState::Streaming;
+        }
+        Ok(())
+    }
+
+    /// Record a `FlushAck` (same token rules as [`Self::on_drain_ack`]).
+    pub fn on_flush_ack(&mut self, token: u64, flushed: u64) -> Result<(), SpecViolation> {
+        if token > self.next_token {
+            return Err(SpecViolation {
+                rule: "flush-idempotence",
+                detail: format!(
+                    "FlushAck for token {token} but only {} issued",
+                    self.next_token
+                ),
+            });
+        }
+        self.last_flush_ack = Some((token, flushed));
+        if self.state == LaneState::AwaitingFlushAck && token == self.next_token {
+            self.state = LaneState::Streaming;
+        }
+        Ok(())
+    }
+
+    /// Whether the drain barrier for `token` has completed.
+    pub fn drain_satisfied(&self, token: u64) -> bool {
+        self.last_drain_ack == Some(token)
+    }
+
+    /// The flushed-count of the completed flush barrier for `token`, if
+    /// its ack has arrived.
+    pub fn flush_satisfied(&self, token: u64) -> Option<u64> {
+        match self.last_flush_ack {
+            Some((t, flushed)) if t == token => Some(flushed),
+            _ => None,
+        }
+    }
+
+    /// The at-most-once death reckoning (WIRE.md §Reconnect semantics
+    /// step 1): the first observation of a session death converts the
+    /// `queued_frames` still unsent into drops and the
+    /// `unresolved_clips` into aborts, clears both ack latches (a dead
+    /// session's acks must not satisfy a future barrier) and moves to
+    /// `Down`. A repeat observation accounts *nothing* — that is the
+    /// at-most-once guarantee, and the model checker proves production
+    /// cannot double-count through this gate.
+    pub fn on_death(&mut self, queued_frames: u64, unresolved_clips: u64) -> DeathReckoning {
+        if matches!(self.state, LaneState::Down | LaneState::Poisoned) {
+            return DeathReckoning::default();
+        }
+        self.state = LaneState::Down;
+        self.last_drain_ack = None;
+        self.last_flush_ack = None;
+        DeathReckoning {
+            frames_dropped: queued_frames,
+            clips_aborted: unresolved_clips,
+        }
+    }
+
+    /// A replacement session is live (successful re-handshake). The
+    /// token counter deliberately survives.
+    pub fn on_session_established(&mut self) {
+        if self.state != LaneState::Poisoned {
+            self.state = LaneState::Streaming;
+        }
+    }
+
+    /// A node refused the re-handshake permanently: never probe again.
+    pub fn poison(&mut self) {
+        self.state = LaneState::Poisoned;
+    }
+}
+
+impl Default for LaneSpec {
+    fn default() -> Self {
+        LaneSpec::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Node session spec
+// ---------------------------------------------------------------------
+
+/// Node session lifecycle (WIRE.md §Session teardown): `AwaitingHello`
+/// before the handshake resolves, `Streaming` once `Welcome` is out,
+/// `Reaped` when the idle deadline fired, `Closed` after the gateway's
+/// half-close (EOF) started the final drain + report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeState {
+    AwaitingHello,
+    Streaming,
+    Reaped,
+    Closed,
+}
+
+/// The node session's transition decisions: credit recycling (one
+/// credit owed per frame accepted, coalesced into a single `Credit`
+/// grant per service round) and barrier-token monotonicity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeSpec {
+    state: NodeState,
+    window: u32,
+    /// credits owed to the gateway: frames accepted whose grant has not
+    /// been coalesced into a `Credit` message yet
+    pending_credits: u32,
+    /// highest barrier token seen this session (gateway tokens are
+    /// strictly monotonic, so a repeat is a replay)
+    last_token: u64,
+}
+
+impl NodeSpec {
+    /// A session that has read a `Hello` but not yet answered.
+    pub fn new(window: u32) -> NodeSpec {
+        NodeSpec {
+            state: NodeState::AwaitingHello,
+            window,
+            pending_credits: 0,
+            last_token: 0,
+        }
+    }
+
+    pub fn state(&self) -> NodeState {
+        self.state
+    }
+
+    pub fn window(&self) -> u32 {
+        self.window
+    }
+
+    /// Credits owed but not yet granted back.
+    pub fn pending_credits(&self) -> u32 {
+        self.pending_credits
+    }
+
+    /// `Welcome` is on the wire: the session is live.
+    pub fn on_welcome_sent(&mut self) {
+        self.state = NodeState::Streaming;
+    }
+
+    /// One frame accepted: accrue the credit owed for it. More owed
+    /// credits than the window means the gateway overdrew — frames
+    /// arrived that no credit covered.
+    pub fn on_frame(&mut self) -> Result<(), SpecViolation> {
+        let p = self.pending_credits.saturating_add(1);
+        if p > self.window {
+            self.pending_credits = self.window;
+            return Err(SpecViolation {
+                rule: "credit-conservation",
+                detail: format!(
+                    "frame accepted beyond the credit window \
+                     ({p} un-credited frames, window {})",
+                    self.window
+                ),
+            });
+        }
+        self.pending_credits = p;
+        Ok(())
+    }
+
+    /// Coalesce everything owed into one grant (0 = nothing owed, send
+    /// no message).
+    pub fn take_credits(&mut self) -> u32 {
+        std::mem::take(&mut self.pending_credits)
+    }
+
+    /// A `Drain`/`FlushTails` token arrived. Gateway tokens are
+    /// strictly monotonic within a session; a repeat or regression is a
+    /// duplicated delivery and must be absorbed, not re-acked.
+    pub fn on_barrier(&mut self, token: u64) -> Result<(), SpecViolation> {
+        if token <= self.last_token {
+            return Err(SpecViolation {
+                rule: "drain-completeness",
+                detail: format!(
+                    "barrier token {token} replayed (highest seen {})",
+                    self.last_token
+                ),
+            });
+        }
+        self.last_token = token;
+        Ok(())
+    }
+
+    /// The idle deadline fired: tear down as if half-closed.
+    pub fn on_idle(&mut self) {
+        self.state = NodeState::Reaped;
+    }
+
+    /// The gateway half-closed: run the final drain + report.
+    pub fn on_eof(&mut self) {
+        self.state = NodeState::Closed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_conserves_the_window() {
+        let mut l = CreditLedger::new(3);
+        assert_eq!(l.state(), CreditState::Open);
+        for _ in 0..3 {
+            assert!(l.can_send());
+            l.consume().unwrap();
+        }
+        assert_eq!(l.state(), CreditState::Exhausted);
+        assert!(!l.can_send());
+        assert_eq!(l.in_flight(), 3);
+        assert!(l.consume().is_err(), "send on an empty window must flag");
+        l = CreditLedger::new(3);
+        l.consume().unwrap();
+        l.consume().unwrap();
+        l.grant(2).unwrap();
+        assert_eq!(l.credits(), 3);
+        assert_eq!(l.in_flight(), 0);
+        // credits + in_flight == window throughout
+        assert_eq!(l.credits() + l.in_flight(), l.window());
+    }
+
+    #[test]
+    fn ledger_flags_a_grant_leak() {
+        let mut l = CreditLedger::new(4);
+        l.consume().unwrap();
+        let e = l.grant(2).unwrap_err();
+        assert_eq!(e.rule, "credit-conservation");
+        assert_eq!(l.state(), CreditState::Violated);
+        // degraded-but-bounded: clamped to the full window, like the
+        // saturating arithmetic it replaced
+        assert_eq!(l.credits(), 4);
+    }
+
+    #[test]
+    fn lane_tokens_are_monotonic_and_stale_acks_satisfy_nothing() {
+        let mut s = LaneSpec::new();
+        let t1 = s.issue(BarrierKind::Drain);
+        assert_eq!(s.state(), LaneState::AwaitingDrainAck);
+        s.on_drain_ack(t1).unwrap();
+        assert!(s.drain_satisfied(t1));
+        assert_eq!(s.state(), LaneState::Streaming);
+        let t2 = s.issue(BarrierKind::Flush);
+        assert!(t2 > t1);
+        // the old drain ack does not satisfy the flush barrier
+        assert_eq!(s.flush_satisfied(t2), None);
+        s.on_flush_ack(t1, 7).unwrap(); // stale: recorded, not matched
+        assert_eq!(s.flush_satisfied(t2), None);
+        s.on_flush_ack(t2, 1).unwrap();
+        assert_eq!(s.flush_satisfied(t2), Some(1));
+        // an ack from the future is a protocol breach
+        assert!(s.on_drain_ack(99).is_err());
+    }
+
+    #[test]
+    fn death_reckoning_is_at_most_once() {
+        let mut s = LaneSpec::new();
+        let t = s.issue(BarrierKind::Drain);
+        let first = s.on_death(5, 2);
+        assert_eq!(first.frames_dropped, 5);
+        assert_eq!(first.clips_aborted, 2);
+        assert_eq!(s.state(), LaneState::Down);
+        assert!(!s.drain_satisfied(t), "death clears the ack latches");
+        let second = s.on_death(5, 2);
+        assert_eq!(second, DeathReckoning::default(), "second reckoning is free");
+        s.on_session_established();
+        assert_eq!(s.state(), LaneState::Streaming);
+        let t2 = s.issue(BarrierKind::Drain);
+        assert!(t2 > t, "the token counter survives the reconnect");
+    }
+
+    #[test]
+    fn poisoned_lane_stays_poisoned() {
+        let mut s = LaneSpec::new();
+        s.on_death(0, 0);
+        s.poison();
+        s.on_session_established();
+        assert!(s.is_poisoned());
+        assert_eq!(s.on_death(3, 3), DeathReckoning::default());
+    }
+
+    #[test]
+    fn node_credits_coalesce_and_tokens_reject_replay() {
+        let mut n = NodeSpec::new(8);
+        assert_eq!(n.state(), NodeState::AwaitingHello);
+        n.on_welcome_sent();
+        assert_eq!(n.state(), NodeState::Streaming);
+        n.on_frame().unwrap();
+        n.on_frame().unwrap();
+        assert_eq!(n.pending_credits(), 2);
+        assert_eq!(n.take_credits(), 2);
+        assert_eq!(n.take_credits(), 0, "coalescing drains the debt");
+        n.on_barrier(3).unwrap();
+        assert!(n.on_barrier(3).is_err(), "replayed token is absorbed");
+        assert!(n.on_barrier(2).is_err(), "regressed token is absorbed");
+        n.on_barrier(4).unwrap();
+        n.on_idle();
+        assert_eq!(n.state(), NodeState::Reaped);
+    }
+
+    #[test]
+    fn node_flags_window_overdraw() {
+        let mut n = NodeSpec::new(2);
+        n.on_welcome_sent();
+        n.on_frame().unwrap();
+        n.on_frame().unwrap();
+        let e = n.on_frame().unwrap_err();
+        assert_eq!(e.rule, "credit-conservation");
+        assert_eq!(n.pending_credits(), 2, "clamped to the window");
+    }
+}

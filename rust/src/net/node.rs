@@ -20,6 +20,7 @@
 //! [`Pipeline`]: crate::coordinator::Pipeline
 //! [`ShardedPipeline`]: crate::coordinator::ShardedPipeline
 
+use super::model::NodeSpec;
 use super::proto::{
     read_msg, write_msg, Handshake, Msg, RejectCode, WireReport, WireResult, VERSION,
 };
@@ -208,6 +209,7 @@ where
     crate::metric_counter!("node_frames_total");
     crate::metric_counter!("node_results_total");
     crate::metric_counter!("node_idle_reaps_total");
+    crate::metric_counter!("node_spec_violations_total");
     // non-blocking accept so the loop can observe the shutdown switch
     // (and reap finished sessions) without a poke connection
     listener
@@ -552,9 +554,13 @@ fn handle_conn<L: Lane>(
         })
         .context("spawning node reader")?;
 
-    // ---- compute loop
+    // ---- compute loop. The session's protocol decisions (credit
+    // accrual/coalescing, barrier-token replay absorption, teardown
+    // cause) delegate to the executable spec machine `verify-proto`
+    // model-checks, so node and model cannot drift.
     let mut frames_in = 0u64;
-    let mut pending_credits = 0u32;
+    let mut spec = NodeSpec::new(credits);
+    spec.on_welcome_sent();
     let mut clips_out = 0u64;
     let mut eof = false;
     'session: loop {
@@ -575,7 +581,7 @@ fn handle_conn<L: Lane>(
                         &mut writer,
                         &mut scratch,
                         &mut frames_in,
-                        &mut pending_credits,
+                        &mut spec,
                         &mut clips_out,
                     )? {
                         eof = true;
@@ -599,7 +605,7 @@ fn handle_conn<L: Lane>(
             super::chaos::node_fault_point(super::chaos::NodeFaultPoint::MidCompute)?;
         }
         let wrote = write_results(&results_rx, &mut writer, &mut scratch, &mut clips_out)?
-            + flush_credits(&mut writer, &mut scratch, &mut pending_credits)?;
+            + flush_credits(&mut writer, &mut scratch, &mut spec)?;
         if wrote > 0 {
             writer.flush()?;
         }
@@ -615,7 +621,7 @@ fn handle_conn<L: Lane>(
                         &mut writer,
                         &mut scratch,
                         &mut frames_in,
-                        &mut pending_credits,
+                        &mut spec,
                         &mut clips_out,
                     )? {
                         eof = true;
@@ -688,18 +694,19 @@ fn write_results(
     Ok(n)
 }
 
-/// Grant accumulated credits back to the gateway. Returns 1 if a grant
-/// was written (caller flushes).
+/// Grant accumulated credits back to the gateway: the spec coalesces
+/// everything owed into one `Credit{n}`. Returns 1 if a grant was
+/// written (caller flushes).
 fn flush_credits(
     writer: &mut BufWriter<TcpStream>,
     scratch: &mut Vec<u8>,
-    pending: &mut u32,
+    spec: &mut NodeSpec,
 ) -> Result<usize> {
-    if *pending == 0 {
+    let n = spec.take_credits();
+    if n == 0 {
         return Ok(0);
     }
-    write_msg(writer, &Msg::Credit { n: *pending }, scratch)?;
-    *pending = 0;
+    write_msg(writer, &Msg::Credit { n }, scratch)?;
     Ok(1)
 }
 
@@ -713,7 +720,7 @@ fn handle_event<L: Lane>(
     writer: &mut BufWriter<TcpStream>,
     scratch: &mut Vec<u8>,
     frames_in: &mut u64,
-    pending_credits: &mut u32,
+    spec: &mut NodeSpec,
     clips_out: &mut u64,
 ) -> Result<bool> {
     match ev {
@@ -723,16 +730,30 @@ fn handle_event<L: Lane>(
             // per-stream queue overflow is dropped and accounted inside
             // the lane's own report, mirroring the in-process path
             lane.push(task);
-            *pending_credits += 1;
+            // the credit owed for this frame accrues in the spec; a
+            // frame beyond the window means the gateway overdrew —
+            // count the breach, keep serving with the clamped state
+            if let Err(v) = spec.on_frame() {
+                crate::metric_counter!("node_spec_violations_total").inc();
+                log_warn!("gateway sent off-spec: {v}");
+            }
             Ok(false)
         }
         NodeEvent::Drain(token) => {
+            // a replayed/regressed token is a duplicated delivery: the
+            // spec says absorb it (re-draining would re-ack a barrier
+            // the gateway already matched)
+            if let Err(v) = spec.on_barrier(token) {
+                crate::metric_counter!("node_spec_violations_total").inc();
+                log_warn!("absorbing off-spec drain barrier: {v}");
+                return Ok(false);
+            }
             // barrier: classify everything received before the token,
             // stream the results, *then* ack — the gateway relies on
             // every pre-barrier result preceding the ack on the wire
             lane.drain()?;
             write_results(results_rx, writer, scratch, clips_out)?;
-            flush_credits(writer, scratch, pending_credits)?;
+            flush_credits(writer, scratch, spec)?;
             // chaos: crash/stall on the barrier edge — results are on
             // the wire but the ack is not, the worst spot for a death
             super::chaos::node_fault_point(super::chaos::NodeFaultPoint::PreDrainAck)?;
@@ -741,23 +762,32 @@ fn handle_event<L: Lane>(
             Ok(false)
         }
         NodeEvent::FlushTails(token) => {
+            if let Err(v) = spec.on_barrier(token) {
+                crate::metric_counter!("node_spec_violations_total").inc();
+                log_warn!("absorbing off-spec flush barrier: {v}");
+                return Ok(false);
+            }
             // the gateway's end-of-stream request: zero-pad stranded
             // partial tail clips and stream their results before the
             // ack (same ordering contract as the drain barrier)
             let flushed = lane.flush_tails()?;
             write_results(results_rx, writer, scratch, clips_out)?;
-            flush_credits(writer, scratch, pending_credits)?;
+            flush_credits(writer, scratch, spec)?;
             // chaos: same barrier-edge point for the flush-tails ack
             super::chaos::node_fault_point(super::chaos::NodeFaultPoint::PreFlushAck)?;
             write_msg(writer, &Msg::FlushAck { token, flushed }, scratch)?;
             writer.flush()?;
             Ok(false)
         }
-        NodeEvent::Eof => Ok(true),
+        NodeEvent::Eof => {
+            spec.on_eof();
+            Ok(true)
+        }
         NodeEvent::Idle => {
             // wedged peer: treat like a half-close so the teardown path
             // runs (drain, report toward the dead socket, SlotGuard
             // release) and the admission slot is freed for a live peer
+            spec.on_idle();
             crate::metric_counter!("node_idle_reaps_total").inc();
             log_warn!("node: reaping idle session (no traffic within the idle timeout)");
             Ok(true)

@@ -10,7 +10,10 @@
 //! endian; audio samples and scores are f32 bit patterns. A length
 //! above [`MAX_MSG_BYTES`] (or below 1) fails decoding immediately, so
 //! a corrupt or misaligned peer errors out instead of allocating
-//! gigabytes.
+//! gigabytes. All length-bound arithmetic on wire-supplied values uses
+//! checked/saturating forms — this module sits behind the same
+//! `arithmetic_side_effects` wall as the fixed-point datapath, because
+//! its inputs come from the network, not from proved ranges.
 //!
 //! Session shape:
 //!
@@ -30,6 +33,7 @@
 //!   [shutdown(Write)] ────────────▶
 //!                                 ◀── Report, close
 //! ```
+#![deny(clippy::arithmetic_side_effects)]
 
 use crate::coordinator::metrics::{LaneStats, ServeReport};
 use crate::util::stats::LatencyHist;
@@ -413,17 +417,25 @@ impl<'a> Dec<'a> {
         Dec { buf, pos: 0 }
     }
 
+    /// Bytes left after the cursor. `pos <= len` is a cursor invariant,
+    /// but the saturating form keeps the bound honest even if it were
+    /// ever broken — a wire-supplied length must never wrap a bound.
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+
     fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
-        // overflow-safe form of `pos + n <= len` (n is wire-supplied;
-        // pos <= len is a cursor invariant)
+        // overflow-safe form of `pos + n <= len` (n is wire-supplied)
         ensure!(
-            n <= self.buf.len() - self.pos,
+            n <= self.remaining(),
             "truncated wire message: wanted {n} bytes at offset {}, have {}",
             self.pos,
             self.buf.len()
         );
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        // cannot overflow: n <= len - pos was just checked
+        let end = self.pos.saturating_add(n);
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(s)
     }
 
@@ -457,7 +469,7 @@ impl<'a> Dec<'a> {
         // corrupt length cannot reserve memory it never fills; the
         // division sidesteps `n * 4` overflow on 32-bit targets
         ensure!(
-            n <= (self.buf.len() - self.pos) / 4,
+            n <= self.remaining() / 4,
             "f32 vector longer than its message ({n})"
         );
         let mut out = Vec::with_capacity(n);
@@ -479,7 +491,7 @@ impl<'a> Dec<'a> {
         // bucket count is 8 bytes); a foreign bucket layout is handled
         // leniently by `from_parts`, a corrupt length is not
         ensure!(
-            n <= (self.buf.len() - self.pos) / 8,
+            n <= self.remaining() / 8,
             "histogram longer than its message ({n} buckets)"
         );
         let mut counts = Vec::with_capacity(n);
@@ -761,7 +773,8 @@ pub fn read_msg<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Option<Msg>
             ensure!(got == 0, "connection closed mid-message ({got}/4 header bytes)");
             return Ok(None);
         }
-        got += n;
+        // n <= 4 - got (read into a 4-byte slice), so this cannot wrap
+        got = got.saturating_add(n);
     }
     let len = u32::from_le_bytes(len4) as usize;
     ensure!(
@@ -774,6 +787,7 @@ pub fn read_msg<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Option<Msg>
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)] // tests compute on known literals
 mod tests {
     use super::*;
     use std::io::Cursor;

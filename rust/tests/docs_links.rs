@@ -208,3 +208,80 @@ fn wire_spec_covers_every_protocol_message() {
          (code is v{code_version})"
     );
 }
+
+/// Parse the variant names of one `pub enum` out of a source file, the
+/// same way [`wire_spec_covers_every_protocol_message`] parses `Msg`.
+fn enum_variants(source: &str, enum_name: &str) -> Vec<String> {
+    let marker = format!("pub enum {enum_name} {{");
+    let body = source
+        .split(marker.as_str())
+        .nth(1)
+        .unwrap_or_else(|| panic!("source defines `pub enum {enum_name}`"));
+    let body = &body[..body.find("\n}").expect("enum body ends")];
+    let mut variants = Vec::new();
+    for line in body.lines() {
+        let t = line.trim();
+        if t.starts_with("///") || t.starts_with("//") || t.is_empty() {
+            continue;
+        }
+        let name: String = t
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric())
+            .collect();
+        if !name.is_empty() && name.chars().next().unwrap().is_ascii_uppercase() {
+            variants.push(name);
+        }
+    }
+    variants
+}
+
+/// CamelCase → kebab-case, mirroring `Invariant::name` in the checker.
+fn kebab(ident: &str) -> String {
+    let mut out = String::new();
+    for c in ident.chars() {
+        if c.is_ascii_uppercase() && !out.is_empty() {
+            out.push('-');
+        }
+        out.push(c.to_ascii_lowercase());
+    }
+    out
+}
+
+/// docs/WIRE.md must name every state of the three executable-spec
+/// machines and every invariant `verify-proto` checks — parsed from the
+/// model sources, so the prose cannot silently fall behind the spec the
+/// checker actually explores.
+#[test]
+fn wire_spec_covers_every_spec_machine_state_and_checked_invariant() {
+    let root = repo_root();
+    let wire = fs::read_to_string(root.join("docs/WIRE.md")).unwrap();
+    let spec = fs::read_to_string(root.join("rust/src/net/model/spec.rs")).unwrap();
+    for machine in ["LaneState", "NodeState", "CreditState"] {
+        let variants = enum_variants(&spec, machine);
+        assert!(
+            variants.len() >= 3,
+            "expected the full {machine} state set, parsed {variants:?}"
+        );
+        for v in &variants {
+            assert!(
+                wire.contains(v),
+                "docs/WIRE.md does not mention `{machine}::{v}` — the spec \
+                 prose fell behind rust/src/net/model/spec.rs"
+            );
+        }
+    }
+    let checker = fs::read_to_string(root.join("rust/src/net/model/checker.rs")).unwrap();
+    let invariants = enum_variants(&checker, "Invariant");
+    assert!(
+        invariants.len() >= 5,
+        "expected the five checked invariants, parsed {invariants:?}"
+    );
+    for inv in &invariants {
+        let name = kebab(inv);
+        assert!(
+            wire.contains(&name),
+            "docs/WIRE.md does not name checked invariant `{name}` — the \
+             spec prose fell behind rust/src/net/model/checker.rs"
+        );
+    }
+}

@@ -98,6 +98,23 @@ fn connect_eventually(addr: &str, m: &TrainedModel) -> RemoteLane {
     }
 }
 
+/// Every scenario round runs with the [`ConformanceMonitor`] armed
+/// (`ScenarioConfig::quick` sets `monitor: true`): whatever a fault
+/// does to the session, the gateway's observable trace must stay one
+/// the protocol spec machines would produce. A divergence is an
+/// implementation/spec drift, never a tolerated chaos outcome, so it
+/// fails the round with the reproducing seed.
+///
+/// [`ConformanceMonitor`]: infilter::net::ConformanceMonitor
+fn assert_conformant(seed: u64, out: &infilter::net::chaos::ScenarioOutcome) {
+    assert!(
+        out.spec_divergences.is_empty(),
+        "[chaos seed {seed:#x}] conformance monitor diverged from the protocol \
+         spec:\n  {}\nREPRODUCE: infilter chaos-soak --seed {seed:#x}",
+        out.spec_divergences.join("\n  ")
+    );
+}
+
 /// One seeded round under a lethal wire fault: the proxy must actually
 /// fire, and whatever the timing dealt, the accounting contract and the
 /// bit-parity of everything delivered must hold.
@@ -109,6 +126,7 @@ fn lethal_round(kind: FaultKind, seed: u64) {
         out.faults_injected >= 1,
         "[chaos seed {seed:#x}] the proxy never fired {kind:?}"
     );
+    assert_conformant(seed, &out);
     let inv = Invariants::new(out.clips_pushed).seeded(seed);
     inv.assert_ok(&out.report);
     inv.assert_results(&out.report, &out.results, &out.reference);
@@ -124,6 +142,7 @@ fn shaped_round(kind: FaultKind, seed: u64) {
         out.faults_injected >= 1,
         "[chaos seed {seed:#x}] the proxy never shaped the connection with {kind:?}"
     );
+    assert_conformant(seed, &out);
     let inv = Invariants::new(out.clips_pushed).seeded(seed).lossless();
     inv.assert_ok(&out.report);
     inv.assert_results(&out.report, &out.results, &out.reference);
@@ -202,6 +221,7 @@ fn pool_round_with_dead_lanes_sums_per_lane_accounting() {
         out.faults_injected >= 1,
         "[chaos seed {seed:#x}] no proxy fired"
     );
+    assert_conformant(seed, &out);
     let inv = Invariants::new(out.clips_pushed).seeded(seed).pool(2);
     inv.assert_ok(&out.report);
     inv.assert_results(&out.report, &out.results, &out.reference);
@@ -220,6 +240,7 @@ fn stall_round_with_idle_reaping_stays_consistent() {
     };
     let out = run_scenario(&cfg)
         .unwrap_or_else(|e| panic!("[chaos seed {seed:#x}] scenario failed: {e:#}"));
+    assert_conformant(seed, &out);
     let inv = Invariants::new(out.clips_pushed).seeded(seed);
     inv.assert_ok(&out.report);
     inv.assert_results(&out.report, &out.results, &out.reference);
@@ -241,6 +262,7 @@ fn node_crash_round(point: NodeFaultPoint, seed: u64) {
         panic!("[chaos seed {seed:#x}] scenario failed: {e:#}")
     });
     disarm_node_faults();
+    assert_conformant(seed, &out);
     assert!(
         out.report.reconnects >= 1,
         "[chaos seed {seed:#x}] the crash at {point:?} never forced a failover"
@@ -317,6 +339,7 @@ fn node_stall_before_drain_ack_only_delays() {
         panic!("[chaos seed {seed:#x}] scenario failed: {e:#}")
     });
     disarm_node_faults();
+    assert_conformant(seed, &out);
     // the stall is far below the gateway io_timeout: a hiccup, not a
     // death — the run must stay lossless and bit-exact
     let inv = Invariants::new(out.clips_pushed).seeded(seed).lossless().exact();
@@ -419,6 +442,7 @@ fn mini_soak_across_seeds_and_mixed_schedules() {
         };
         let out = run_scenario(&cfg)
             .unwrap_or_else(|e| panic!("[chaos seed {seed:#x}] scenario failed: {e:#}"));
+        assert_conformant(seed, &out);
         let mut inv = Invariants::new(out.clips_pushed).seeded(seed);
         if !lethal {
             inv = inv.lossless();

@@ -1,0 +1,212 @@
+//! Tier-1 acceptance for the wire-protocol model layer: the bounded
+//! checker proves every WIRE.md invariant over the correct executable
+//! spec, each deliberate spec mutation is caught by exactly the
+//! invariant it breaks (with a minimal, deterministic counterexample
+//! trace), and the [`ConformanceMonitor`] armed on a real loopback
+//! session observes a clean trace end to end.
+//!
+//! The CI `model` job runs the same checks through the
+//! `infilter verify-proto` subcommand; this file keeps them inside
+//! `cargo test` so a regression is caught before any workflow runs.
+//!
+//! [`ConformanceMonitor`]: infilter::net::ConformanceMonitor
+
+use infilter::coordinator::dispatch::Lane;
+use infilter::coordinator::FrameTask;
+use infilter::dsp::multirate::BandPlan;
+use infilter::net::model::{check, CheckConfig, FaultEvent, Invariant, Mutation};
+use infilter::net::node::pipeline_factory;
+use infilter::net::{serve_node_until, NodeConfig, NodeShutdown, RemoteConfig, RemoteLane};
+use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+use infilter::train::TrainedModel;
+use infilter::util::prng::Pcg32;
+use std::net::TcpListener;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------
+// the checker against the correct spec
+// ---------------------------------------------------------------------
+
+/// The CI-depth exploration: every fault kind available, every
+/// invariant armed, and the whole bounded space expanded (`complete`),
+/// so a pass is an exhaustive proof within the bounds, not a sample.
+#[test]
+fn exhaustive_check_proves_all_invariants_at_ci_depth() {
+    let out = check(&CheckConfig::default());
+    assert!(
+        out.violation.is_none(),
+        "the correct spec must satisfy every invariant:\n{}",
+        out.violation.unwrap()
+    );
+    assert!(
+        out.complete,
+        "the default bounds must cover the space exhaustively \
+         ({} truncated)",
+        out.stats.truncated
+    );
+    assert!(out.stats.terminal_states > 0, "no execution ever finished");
+    assert!(
+        out.stats.states_explored > 1_000,
+        "implausibly small space ({}) — did fault interleaving collapse?",
+        out.stats.states_explored
+    );
+}
+
+/// Which invariant each deliberate spec break trips. This is the
+/// checker checking itself: a model checker that cannot find a planted
+/// bug proves nothing by passing.
+#[test]
+fn every_mutation_is_caught_by_its_invariant() {
+    let expected = [
+        (Mutation::DropCreditGrant, Invariant::DeadlockFreedom),
+        (Mutation::DoubleGrant, Invariant::CreditConservation),
+        (Mutation::SkipDrainClassify, Invariant::DrainCompleteness),
+        (Mutation::FlushAlwaysPads, Invariant::FlushIdempotence),
+    ];
+    for (mutation, invariant) in expected {
+        let cfg = CheckConfig {
+            mutation,
+            ..CheckConfig::default()
+        };
+        let out = check(&cfg);
+        let cx = out.violation.unwrap_or_else(|| {
+            panic!("mutation {} escaped the checker", mutation.name())
+        });
+        assert_eq!(
+            cx.invariant,
+            invariant,
+            "mutation {} tripped {} instead of {}:\n{cx}",
+            mutation.name(),
+            cx.invariant.name(),
+            invariant.name()
+        );
+        assert!(
+            !cx.trace.is_empty(),
+            "a counterexample must carry its reproducing trace"
+        );
+    }
+}
+
+/// The stale-results mutation needs a death to replay across, so it is
+/// driven by the crash faults rather than the full pool.
+#[test]
+fn stale_results_mutation_breaks_death_accounting() {
+    let cfg = CheckConfig {
+        mutation: Mutation::StaleResults,
+        faults: vec![FaultEvent::CrashMidCompute, FaultEvent::Drop],
+        ..CheckConfig::default()
+    };
+    let out = check(&cfg);
+    let cx = out.violation.expect("stale results escaped the checker");
+    assert_eq!(cx.invariant, Invariant::DeathAccounting, "{cx}");
+}
+
+/// BFS order is deterministic, so the minimal counterexample is a
+/// stable artifact: two runs print the identical trace. OPERATIONS.md's
+/// replay walkthrough depends on this.
+#[test]
+fn counterexample_traces_are_minimal_and_deterministic() {
+    let cfg = CheckConfig {
+        mutation: Mutation::DropCreditGrant,
+        faults: Vec::new(),
+        ..CheckConfig::default()
+    };
+    let a = check(&cfg).violation.expect("deadlock not found");
+    let b = check(&cfg).violation.expect("deadlock not found on rerun");
+    assert_eq!(a.trace, b.trace, "the minimal trace must be reproducible");
+    assert_eq!(a.invariant, Invariant::DeadlockFreedom);
+}
+
+/// `--invariant` masks everything else: with only flush-idempotence
+/// armed, the double-grant bug must *not* be reported.
+#[test]
+fn invariant_filter_scopes_the_check() {
+    let cfg = CheckConfig {
+        mutation: Mutation::DoubleGrant,
+        invariants: vec![Invariant::FlushIdempotence],
+        ..CheckConfig::default()
+    };
+    assert!(
+        check(&cfg).violation.is_none(),
+        "a masked invariant must not fail the run"
+    );
+}
+
+// ---------------------------------------------------------------------
+// the monitor against a real session
+// ---------------------------------------------------------------------
+
+fn engine() -> CpuEngine {
+    let mut plan = BandPlan::paper_default();
+    plan.n_octaves = 2;
+    CpuEngine::with_clip(&plan, 1.0, 64, 2)
+}
+
+/// A full loopback session — connect, stream, drain, flush, finish —
+/// with the conformance monitor armed from the start: the production
+/// lane's observable trace must be one the spec machines produce, so
+/// the monitor log stays empty and the invariant-violation counter
+/// stays flat.
+#[test]
+fn loopback_session_is_conformant_under_the_monitor() {
+    let m = TrainedModel::synthetic(5, 3, engine().n_filters(), 0.0, 1.0);
+    let fp = m.fingerprint();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("loopback bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = NodeShutdown::new();
+    let node = std::thread::spawn({
+        let (stop, m) = (stop.clone(), m.clone());
+        move || {
+            serve_node_until(
+                listener,
+                pipeline_factory(engine(), m, 64),
+                fp,
+                NodeConfig { credits: 4, ..NodeConfig::default() },
+                None,
+                stop,
+            )
+            .expect("node serving");
+        }
+    });
+
+    let mut lane = RemoteLane::connect(&addr, fp, RemoteConfig::default()).expect("connect");
+    let log = lane.arm_monitor();
+    let mut rng = Pcg32::new(0xC0F0);
+    for stream in 0..3u64 {
+        for clip in 0..2u64 {
+            for f in 0..2usize {
+                assert!(lane.push(FrameTask {
+                    stream,
+                    clip_seq: clip,
+                    frame_idx: f,
+                    data: (0..64).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                    label: (stream % 3) as usize,
+                    t_gen: Instant::now(),
+                }));
+            }
+        }
+    }
+    lane.drain().expect("drain barrier");
+    // a stranded half clip exercises the flush path under the monitor
+    assert!(lane.push(FrameTask {
+        stream: 9,
+        clip_seq: 0,
+        frame_idx: 0,
+        data: vec![0.01; 64],
+        label: 0,
+        t_gen: Instant::now(),
+    }));
+    let flushed = lane.flush_tails().expect("flush barrier");
+    assert_eq!(flushed, 1, "the stranded tail is padded exactly once");
+    let (report, results) = lane.finish().expect("finish");
+    stop.shutdown();
+    node.join().unwrap();
+
+    assert!(
+        log.is_clean(),
+        "conformance monitor diverged on a clean session:\n  {}",
+        log.divergences().join("\n  ")
+    );
+    assert_eq!(report.clips_classified, 7, "6 full clips + 1 padded tail");
+    assert_eq!(results.len(), 7);
+}
