@@ -12,9 +12,15 @@ use infilter::coordinator::{
     BatcherPolicy, FrameTask, Lane, PipelineBuilder, ShardedPipeline,
 };
 use infilter::dsp::multirate::BandPlan;
+use infilter::fixed::{FixedConfig, FixedPipeline};
+use infilter::mp::filter::MpMultirateBank;
 use infilter::net::node::pipeline_factory;
-use infilter::net::{serve_node, NodeConfig, RemoteConfig, RemoteLane, RemotePool};
+use infilter::net::{
+    serve_node, NodeConfig, RemoteConfig, RemoteLane, RemotePool, WireFormat,
+};
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
+use infilter::runtime::fixed::FixedEngine;
+use infilter::telemetry::registry;
 use infilter::train::TrainedModel;
 use infilter::util::prng::Pcg32;
 use std::net::TcpListener;
@@ -48,6 +54,66 @@ fn workload() -> Vec<FrameTask> {
                     clip_seq: clip,
                     frame_idx: f,
                     data: (0..FRAME_LEN).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                    label: (s % 10) as usize,
+                    t_gen: Instant::now(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The integer serving backend over the same geometry: the synthetic
+/// model's float params/standardiser quantised through the certified
+/// fixed-point pipeline (construction sits outside the timed region,
+/// like engine()).
+fn fixed_engine(m: &TrainedModel) -> FixedEngine {
+    let mut plan = BandPlan::paper_default();
+    plan.n_octaves = 3;
+    let mut bank = MpMultirateBank::new(&plan, m.gamma_f);
+    let phis: Vec<Vec<f32>> = (0..6)
+        .map(|i| {
+            bank.reset();
+            let clip: Vec<f32> = Pcg32::new(100 + i)
+                .normal_vec(FRAME_LEN * CLIP_FRAMES)
+                .iter()
+                .map(|x| 0.3 * x)
+                .collect();
+            bank.features(&clip)
+        })
+        .collect();
+    let pipe = FixedPipeline::build(
+        &plan,
+        m.gamma_f,
+        m.gamma_1,
+        &m.params,
+        &m.std,
+        &phis,
+        FixedConfig::with_bits(10),
+    );
+    FixedEngine::new(pipe, FRAME_LEN, CLIP_FRAMES, 24).expect("bench config certifies")
+}
+
+/// Smooth-tone workload for the wire-bandwidth comparison: the v4
+/// delta codec's best case (tiny second-order residuals), matching the
+/// acoustic frames a deployed gateway actually ships.
+fn tone_workload() -> Vec<FrameTask> {
+    let mut out = Vec::new();
+    for s in 0..N_STREAMS {
+        for clip in 0..CLIPS_PER_STREAM {
+            for f in 0..CLIP_FRAMES {
+                let base = (clip as usize * CLIP_FRAMES + f) * FRAME_LEN;
+                out.push(FrameTask {
+                    stream: s,
+                    clip_seq: clip,
+                    frame_idx: f,
+                    data: (0..FRAME_LEN)
+                        .map(|i| {
+                            let t = (base + i) as f64;
+                            (0.25 * (2.0 * std::f64::consts::PI * 200.0 * t / 16_000.0).sin())
+                                as f32
+                        })
+                        .collect(),
                     label: (s % 10) as usize,
                     t_gen: Instant::now(),
                 });
@@ -140,6 +206,30 @@ fn main() {
         );
     }
 
+    // the same single lane hosting the integer FixedEngine instead of
+    // the float CpuEngine: the ratio against pipeline_1lane is the
+    // serving cost of the certified fixed-point datapath
+    {
+        let (m, tasks) = (m.clone(), tasks.clone());
+        let feng = fixed_engine(&m);
+        b.run_with_throughput(
+            "dispatch/pipeline_1lane_fixed",
+            Some((total_clips as f64, "clips")),
+            || {
+                let mut lane = PipelineBuilder::new(feng.clone(), m.clone())
+                    .queue_capacity(64)
+                    .build();
+                for t in tasks.clone() {
+                    lane.push(t);
+                }
+                lane.drain().unwrap();
+                let (report, _) = lane.finish();
+                assert_eq!(report.clips_classified, total_clips);
+                report.clips_classified
+            },
+        );
+    }
+
     // the same workload through a loopback TCP node: connect + credit
     // flow + frame serialisation + drain barrier + report — the whole
     // cross-process tax relative to pipeline_1lane, tracked from day one
@@ -165,6 +255,90 @@ fn main() {
                 });
                 let mut lane = RemoteLane::connect(&addr, fp, RemoteConfig::default()).unwrap();
                 for t in tasks.clone() {
+                    assert!(lane.push(t));
+                }
+                lane.drain().unwrap();
+                let (report, _) = lane.finish().unwrap();
+                node.join().unwrap();
+                assert_eq!(report.clips_classified, total_clips);
+                report.clips_classified
+            },
+        );
+    }
+
+    // the loopback node again, but the gateway negotiates the v4 q15
+    // payload and ships the tone workload — plus a one-shot
+    // bytes-on-wire comparison against f32 framing via the
+    // gateway_wire_frame_bytes_total counter. On smooth audio the
+    // delta codec's second-order residuals fit one varint byte per
+    // sample, so the ratio must clear 3.5x (a regression here means
+    // the predictor or the varint packer broke).
+    {
+        let (eng, m) = (eng.clone(), m.clone());
+        let tone = tone_workload();
+        let fp = m.fingerprint();
+        let session_bytes = |wf: WireFormat| -> u64 {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let (eng, m) = (eng.clone(), m.clone());
+            let node = std::thread::spawn(move || {
+                serve_node(
+                    listener,
+                    pipeline_factory(eng, m, 64),
+                    fp,
+                    NodeConfig::default(),
+                    Some(1),
+                )
+                .unwrap();
+            });
+            let counter = registry().counter("gateway_wire_frame_bytes_total");
+            let before = counter.get();
+            let rcfg = RemoteConfig { wire_format: wf, ..RemoteConfig::default() };
+            let mut lane = RemoteLane::connect(&addr, fp, rcfg).unwrap();
+            for t in tone.clone() {
+                assert!(lane.push(t));
+            }
+            lane.drain().unwrap();
+            let (report, _) = lane.finish().unwrap();
+            node.join().unwrap();
+            assert_eq!(report.clips_classified, total_clips);
+            counter.get() - before
+        };
+        let f32_bytes = session_bytes(WireFormat::F32);
+        let q15_bytes = session_bytes(WireFormat::Q15);
+        let ratio = f32_bytes as f64 / q15_bytes as f64;
+        eprintln!(
+            "wire bytes (tone workload): f32 {f32_bytes}, q15 {q15_bytes}, ratio {ratio:.2}x"
+        );
+        assert!(
+            ratio >= 3.5,
+            "q15 framing only saved {ratio:.2}x over f32 (need >= 3.5x): \
+             f32 {f32_bytes} B vs q15 {q15_bytes} B"
+        );
+
+        b.run_with_throughput(
+            "dispatch/remote_1node_q15",
+            Some((total_clips as f64, "clips")),
+            || {
+                let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap().to_string();
+                let (eng, m) = (eng.clone(), m.clone());
+                let node = std::thread::spawn(move || {
+                    serve_node(
+                        listener,
+                        pipeline_factory(eng, m, 64),
+                        fp,
+                        NodeConfig::default(),
+                        Some(1),
+                    )
+                    .unwrap();
+                });
+                let rcfg = RemoteConfig {
+                    wire_format: WireFormat::Q15,
+                    ..RemoteConfig::default()
+                };
+                let mut lane = RemoteLane::connect(&addr, fp, rcfg).unwrap();
+                for t in tone.clone() {
                     assert!(lane.push(t));
                 }
                 lane.drain().unwrap();

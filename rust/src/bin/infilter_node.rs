@@ -40,6 +40,11 @@ USAGE: infilter-node [options]
                   (0 = never, the default; counted in
                   node_idle_reaps_total)
   --queue N       per-stream frame buffer inside the lane (default 32)
+  --wire-format f32|q15
+                  pin the frame sample encoding (wire protocol v4):
+                  a gateway proposing anything else is rejected
+                  Incompatible. Default: adopt whatever the gateway
+                  proposes
   --model PATH    serve this model (must match the gateway's)
   --seed N --scale S --epochs E
                   quick-model training knobs when no --model is given
@@ -97,6 +102,10 @@ fn run(args: &Args) -> Result<()> {
         session_idle_timeout: match args.get_u64("idle-timeout", 0) {
             0 => None,
             secs => Some(std::time::Duration::from_secs(secs)),
+        },
+        wire_format: match args.get("wire-format") {
+            None => None,
+            Some(s) => Some(infilter::net::WireFormat::parse(s)?),
         },
         ..NodeConfig::default()
     };

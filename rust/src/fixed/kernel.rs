@@ -1,0 +1,318 @@
+//! Integer delay-prefix block kernel — the streaming form of
+//! [`FixedPipeline::accumulate`], mirroring the float
+//! [`crate::mp::kernel::FilterBankKernel`] layout sample for sample.
+//!
+//! [`process_frame`] runs one block through the Fig. 3 octave cascade on
+//! `i64` datapath values: each octave's input is laid out once as a
+//! delay-prefix-extended signal (`[reversed delay | block]`), the
+//! anti-alias low pass is only evaluated at the surviving (even) sample
+//! positions, and all intermediate storage lives in a caller-owned
+//! [`FixedScratch`] grown once and reused — zero steady-state heap
+//! allocations. Unlike the float kernel, each MP-FIR evaluation copies
+//! its tap window into a small contiguous buffer first, because
+//! [`mp_int::mp_fir_step`] takes a newest-first window slice (the copy
+//! is `bp_taps` words, allocation-free).
+//!
+//! Bit-exactness contract (the serving-path half of DESIGN.md §13):
+//! [`mp_int::mp_fir_step`] is stateless, so an output depends only on
+//! its window contents; the extended prefix reproduces exactly the
+//! operands the clip-level `accumulate` window shift produces (zero
+//! initial state = the zero-filled startup window), integer addition is
+//! associative, and block lengths divisible by `2^(n_octaves-1)` keep
+//! the decimation parity aligned with the clip grid. Hence summing the
+//! per-frame partial Phi over a clip equals `accumulate` on the
+//! concatenated clip, bit for bit — the property the golden-vector
+//! suite and `runtime::fixed` build on.
+//!
+//! The delay lines live in the shared f32 [`StreamState`] (the HLO
+//! layout every backend uses). That is exact, not approximate: state
+//! samples are W-bit datapath values (|v| <= 2^(W-1) < 2^24 for the
+//! W <= 24 configs `FixedEngine` admits), and every integer of that
+//! magnitude converts f32 <-> i64 losslessly.
+#![deny(clippy::arithmetic_side_effects)]
+
+use super::mp_int;
+use super::pipeline::FixedPipeline;
+use crate::runtime::engine::StreamState;
+
+fn ensure_len(v: &mut Vec<i64>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0);
+    }
+}
+
+/// Lay one octave's input out as `[reversed delay | block]` so every tap
+/// window is a plain backwards slice. `delay` is newest-first
+/// (`delay[j] = x[-1-j]`), hence reversed into the prefix.
+// d - 1 - i in range for i < d; ext is sized d + sig.len() by the caller
+#[allow(clippy::arithmetic_side_effects)]
+fn load_ext(ext: &mut [i64], delay: &[i64], sig: &[i64]) {
+    let d = delay.len();
+    for (i, e) in ext[..d].iter_mut().enumerate() {
+        *e = delay[d - 1 - i];
+    }
+    ext[d..d + sig.len()].copy_from_slice(sig);
+}
+
+/// All intermediate storage of the integer block kernel, grown on first
+/// use and reused forever after. Owned per engine, never shared across
+/// concurrent callers.
+#[derive(Clone, Debug, Default)]
+pub struct FixedScratch {
+    /// `[reversed bp delay | octave block]`
+    ext: Vec<i64>,
+    /// decimated (saturated) low-pass output
+    low: Vec<i64>,
+    /// quantised input block (octave 0 signal)
+    sig: Vec<i64>,
+    /// one newest-first tap window (`max(bp_taps, lp_taps)`)
+    win: Vec<i64>,
+    /// `mp_fir_step` row scratch (`2 * max(bp_taps, lp_taps)`)
+    fir: Vec<i64>,
+    /// integer mirror of `StreamState::bp` for the duration of a block
+    bp_i: Vec<i64>,
+    /// integer mirror of `StreamState::lp` for the duration of a block
+    lp_i: Vec<i64>,
+}
+
+impl FixedScratch {
+    pub fn new() -> FixedScratch {
+        FixedScratch::default()
+    }
+}
+
+/// One block through the integer octave cascade: updates the HLO-layout
+/// `state` in place and writes the block's partial Phi (HWR +
+/// accumulate per band, in datapath LSB units) into `phi`
+/// (`n_filters` long). Partial accumulators are integers below the
+/// certified `2^acc_bits` bound, so the f32 Phi slots hold them
+/// exactly (`acc_bits <= 24` is enforced at engine construction).
+///
+/// `frame.len()` must be divisible by `2^(n_octaves-1)` and leave at
+/// least `bp_taps - 1` samples at the deepest octave; the plan must
+/// have `lp_taps <= bp_taps` (the delay splice below) — the
+/// `runtime::fixed::FixedEngine` constructor enforces all three.
+// all index math (delay splices, band addressing, halving) is bounded
+// by the plan geometry debug-asserted on entry, exactly as in the float
+// kernel; value arithmetic goes through mp_int / QFormat::saturate /
+// saturating_add, and the accumulator stays below the analyzer's
+// certified bound (<< i64::MAX)
+#[allow(clippy::arithmetic_side_effects)]
+pub fn process_frame(
+    pipe: &FixedPipeline,
+    s: &mut FixedScratch,
+    state: &mut StreamState,
+    frame: &[f32],
+    phi: &mut [f32],
+) {
+    let n_oct = pipe.plan.n_octaves;
+    let f_per = pipe.plan.filters_per_octave;
+    let bt = pipe.plan.bp_taps;
+    let lt = pipe.plan.lp_taps;
+    let bp_d = bt - 1;
+    let lp_d = lt - 1;
+    let iters = pipe.cfg.mp_iters;
+    let gamma = pipe.gamma_f_q;
+    debug_assert!(lt <= bt, "delay splice requires lp_taps <= bp_taps");
+    debug_assert_eq!(phi.len(), n_oct * f_per);
+    debug_assert_eq!(state.bp.len(), n_oct * bp_d);
+    debug_assert_eq!(state.lp.len(), (n_oct - 1) * lp_d);
+
+    let mut len = frame.len();
+    ensure_len(&mut s.ext, bp_d + len);
+    ensure_len(&mut s.low, (len / 2).max(1));
+    ensure_len(&mut s.sig, len.max(1));
+    ensure_len(&mut s.win, bt.max(lt));
+    ensure_len(&mut s.fir, 2 * bt.max(lt));
+    ensure_len(&mut s.bp_i, state.bp.len());
+    ensure_len(&mut s.lp_i, state.lp.len());
+    // delay lines: exact f32 -> i64 (W-bit integers, see module doc)
+    for (d, &x) in s.bp_i.iter_mut().zip(&state.bp) {
+        *d = x as i64;
+    }
+    for (d, &x) in s.lp_i.iter_mut().zip(&state.lp) {
+        *d = x as i64;
+    }
+    // octave-0 signal: the same per-sample quantiser `accumulate` runs
+    for (q, &x) in s.sig[..len].iter_mut().zip(frame) {
+        *q = pipe.dp_fmt.quantize_f32(x);
+    }
+    load_ext(&mut s.ext, &s.bp_i[..bp_d], &s.sig[..len]);
+
+    for o in 0..n_oct {
+        let tail = bp_d + len;
+        for i in 0..f_per {
+            let h = &pipe.bp_q[o][i];
+            let mut acc = 0i64;
+            for n in 0..len {
+                let base = bp_d + n;
+                for k in 0..bt {
+                    s.win[k] = s.ext[base - k]; // newest first
+                }
+                let y = mp_int::mp_fir_step(h, &s.win[..bt], gamma, iters, &mut s.fir[..2 * bt]);
+                let ys = pipe.dp_fmt.saturate(y); // W-bit register write
+                if ys > 0 {
+                    acc = acc.saturating_add(ys); // HWR + accumulate
+                }
+            }
+            phi[o * f_per + i] = acc as f32; // exact: acc < 2^acc_bits <= 2^24
+        }
+        for j in 0..bp_d {
+            s.bp_i[o * bp_d + j] = s.ext[tail - 1 - j];
+        }
+        if o + 1 < n_oct {
+            // The low pass keeps its own (shorter) delay line; splice it
+            // over the tail of the extended prefix (lp_d <= bp_d, and
+            // the band-pass loop above is done reading the prefix).
+            for j in 0..lp_d {
+                s.ext[bp_d - 1 - j] = s.lp_i[o * lp_d + j];
+            }
+            let h = &pipe.lp_q[o];
+            let half = len / 2;
+            // decimate in place: only the surviving even-index outputs
+            // are ever evaluated (their windows still span the odd
+            // samples, so the operands equal the filter-then-decimate
+            // form `accumulate` runs)
+            for jj in 0..half {
+                let base = bp_d + 2 * jj;
+                for k in 0..lt {
+                    s.win[k] = s.ext[base - k];
+                }
+                let y = mp_int::mp_fir_step(h, &s.win[..lt], gamma, iters, &mut s.fir[..2 * lt]);
+                s.low[jj] = pipe.dp_fmt.saturate(y);
+            }
+            for j in 0..lp_d {
+                s.lp_i[o * lp_d + j] = s.ext[tail - 1 - j];
+            }
+            len = half;
+            load_ext(&mut s.ext, &s.bp_i[(o + 1) * bp_d..][..bp_d], &s.low[..len]);
+        }
+    }
+    // exact i64 -> f32 write-back (W-bit values)
+    for (d, &x) in state.bp.iter_mut().zip(&s.bp_i) {
+        *d = x as f32;
+    }
+    for (d, &x) in state.lp.iter_mut().zip(&s.lp_i) {
+        *d = x as f32;
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
+mod tests {
+    use super::*;
+    use crate::dsp::multirate::BandPlan;
+    use crate::fixed::pipeline::FixedConfig;
+    use crate::mp::filter::MpMultirateBank;
+    use crate::mp::machine::{Params, Standardizer};
+    use crate::util::prng::Pcg32;
+
+    fn toy_pipe(bits: u32) -> (BandPlan, FixedPipeline) {
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = 3;
+        let mut rng = Pcg32::new(7);
+        let feats = plan.n_filters();
+        let params = Params {
+            wp: (0..2).map(|_| rng.normal_vec(feats)).collect(),
+            wm: (0..2).map(|_| rng.normal_vec(feats)).collect(),
+            bp: vec![0.1, -0.2],
+            bm: vec![-0.1, 0.2],
+        };
+        let mut bank = MpMultirateBank::new(&plan, 1.0);
+        let phis: Vec<Vec<f32>> = (0..6)
+            .map(|i| {
+                bank.reset();
+                let clip: Vec<f32> = Pcg32::new(100 + i)
+                    .normal_vec(2048)
+                    .iter()
+                    .map(|x| 0.3 * x)
+                    .collect();
+                bank.features(&clip)
+            })
+            .collect();
+        let std = Standardizer::fit(&phis);
+        let pipe = FixedPipeline::build(
+            &plan,
+            1.0,
+            4.0,
+            &params,
+            &std,
+            &phis,
+            FixedConfig::with_bits(bits),
+        );
+        (plan, pipe)
+    }
+
+    fn noise_clip(seed: u64, n: usize) -> Vec<f32> {
+        Pcg32::new(seed)
+            .normal_vec(n)
+            .iter()
+            .map(|x| 0.3 * x)
+            .collect()
+    }
+
+    /// Sum per-frame Phi rows into clip accumulators, converting the
+    /// (exact-integer) f32 slots back to i64.
+    fn run_frames(pipe: &FixedPipeline, clip: &[f32], frame_len: usize) -> (Vec<i64>, StreamState) {
+        let plan = &pipe.plan;
+        let p = plan.n_filters();
+        let mut s = FixedScratch::new();
+        let mut st = StreamState::zero(plan.n_octaves, plan.bp_taps, plan.lp_taps);
+        let mut acc = vec![0i64; p];
+        let mut phi = vec![0.0f32; p];
+        for frame in clip.chunks(frame_len) {
+            process_frame(pipe, &mut s, &mut st, frame, &mut phi);
+            for (a, &v) in acc.iter_mut().zip(&phi) {
+                *a += v as i64;
+            }
+        }
+        (acc, st)
+    }
+
+    #[test]
+    fn streamed_frames_match_clip_accumulate_bit_exact() {
+        // the kernel's load-bearing property: 4 x 512 streamed frames
+        // reproduce the clip-level reference accumulators exactly
+        let (_, pipe) = toy_pipe(10);
+        let clip = noise_clip(42, 2048);
+        let want = pipe.accumulate(&clip);
+        let (got, _) = run_frames(&pipe, &clip, 512);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn chunked_equals_whole_block_bit_exact() {
+        // two 256-sample blocks equal one 512-sample block: integer
+        // accumulation is associative, so unlike the float kernel this
+        // holds with assert_eq, not a tolerance
+        let (_, pipe) = toy_pipe(10);
+        let clip = noise_clip(7, 512);
+        let (whole, st_whole) = run_frames(&pipe, &clip, 512);
+        let (chunked, st_chunk) = run_frames(&pipe, &clip, 256);
+        assert_eq!(whole, chunked);
+        assert_eq!(st_whole, st_chunk);
+    }
+
+    #[test]
+    fn state_samples_stay_exact_in_f32() {
+        // every delay-line sample written back to the shared f32 state
+        // is a W-bit integer that survives the f32 round-trip
+        let (_, pipe) = toy_pipe(10);
+        let clip = noise_clip(9, 1024);
+        let (_, st) = run_frames(&pipe, &clip, 256);
+        for &v in st.bp.iter().chain(&st.lp) {
+            assert_eq!(v, (v as i64) as f32, "non-integer state sample {v}");
+            assert!(v.abs() < (1 << 24) as f32);
+        }
+    }
+
+    #[test]
+    fn low_bit_config_streams_exactly_too() {
+        // 8-bit datapath: different saturation behaviour, same contract
+        let (_, pipe) = toy_pipe(8);
+        let clip = noise_clip(11, 1024);
+        let want = pipe.accumulate(&clip);
+        let (got, _) = run_frames(&pipe, &clip, 256);
+        assert_eq!(got, want);
+    }
+}

@@ -5,11 +5,13 @@
 //! multiplierless FPGA datapath provides. `fpga::` layers cycle timing
 //! and resource costs on top of these semantics.
 
+pub mod kernel;
 pub mod mp_int;
 pub mod pipeline;
 pub mod q;
 pub mod trace;
 
+pub use kernel::FixedScratch;
 pub use pipeline::{FixedConfig, FixedPipeline};
 pub use q::QFormat;
 pub use trace::RangeTrace;

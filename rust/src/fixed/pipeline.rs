@@ -52,6 +52,7 @@ impl FixedConfig {
 ///
 /// Fields are `pub(crate)` so the static analyzer ([`crate::analysis`])
 /// can read the frozen coefficients/weights it proves bounds over.
+#[derive(Clone)]
 pub struct FixedPipeline {
     pub cfg: FixedConfig,
     pub(crate) plan: BandPlan,
@@ -387,19 +388,37 @@ impl FixedPipeline {
 
     /// Integer inference engine: per-head margin (z+ - z-) in k_fmt LSBs.
     pub fn infer(&self, k_q: &[i64]) -> Vec<i64> {
-        self.infer_inner(k_q, None)
+        self.infer_full_inner(k_q, None)
+            .into_iter()
+            .map(|(m, _, _)| m)
+            .collect()
     }
 
     /// [`FixedPipeline::infer`] in checked-arithmetic debug mode.
     pub fn infer_traced(&self, k_q: &[i64], tr: &mut RangeTrace) -> Vec<i64> {
-        self.infer_inner(k_q, Some(tr))
+        self.infer_full_inner(k_q, Some(tr))
+            .into_iter()
+            .map(|(m, _, _)| m)
+            .collect()
+    }
+
+    /// Integer inference engine with the per-head `(margin, z+, z-)`
+    /// triple exposed — the serving backend reports class scores, not
+    /// just margins, so it needs both MP sums (same datapath as
+    /// [`FixedPipeline::infer`], which is this minus the projections).
+    pub fn infer_full(&self, k_q: &[i64]) -> Vec<(i64, i64, i64)> {
+        self.infer_full_inner(k_q, None)
     }
 
     // Row addressing (p_len + i, 2 * p_len) is bounded by the feature
     // count; operand construction saturates (weights and features are
     // W-bit, so sums stay in W+2 bits — proven by the analyzer).
     #[allow(clippy::arithmetic_side_effects)]
-    fn infer_inner(&self, k_q: &[i64], mut trace: Option<&mut RangeTrace>) -> Vec<i64> {
+    fn infer_full_inner(
+        &self,
+        k_q: &[i64],
+        mut trace: Option<&mut RangeTrace>,
+    ) -> Vec<(i64, i64, i64)> {
         let p_len = k_q.len();
         let mut row = vec![0i64; 2 * p_len + 1];
         let inf_row = trace::inf_key("row");
@@ -424,7 +443,7 @@ impl FixedPipeline {
                 if let Some(tr) = trace.as_deref_mut() {
                     tr.observe(&inf_margin, margin);
                 }
-                margin
+                (margin, zp, zm)
             })
             .collect()
     }
@@ -575,6 +594,20 @@ mod tests {
         let (_, pipe, _, _) = toy_setup(8);
         let clip = chirp::tone(3000.0, 2048, 16_000.0, 0.6);
         assert_eq!(pipe.classify(&clip), pipe.classify(&clip));
+    }
+
+    #[test]
+    fn infer_full_margins_match_infer() {
+        let (_, pipe, _, _) = toy_setup(10);
+        let clip = chirp::tone(2200.0, 2048, 16_000.0, 0.5);
+        let k = pipe.standardize(&pipe.accumulate(&clip));
+        let full = pipe.infer_full(&k);
+        let margins = pipe.infer(&k);
+        assert_eq!(full.len(), margins.len());
+        for (&(m, zp, zm), &m2) in full.iter().zip(&margins) {
+            assert_eq!(m, m2);
+            assert_eq!(m, zp.saturating_sub(zm));
+        }
     }
 
     #[test]

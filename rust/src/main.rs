@@ -57,6 +57,7 @@ USAGE: infilter <subcommand> [options]
   train     --dataset esc10|fsdd [--scale S] [--out results/model.json]
   serve     [--streams N] [--clips K] [--shards N] [--realtime]
             [--model PATH] [--connect HOST:PORT[,HOST:PORT...]]
+            [--wire-format f32|q15]
   edge-fleet  continuous-ingest fleet simulation (no artifacts needed)
             [--streams N] [--shards N] [--seconds S] [--events K]
             [--duty-awake A] [--duty-sleep B] [--uplink-bps N]
@@ -72,6 +73,10 @@ USAGE: infilter <subcommand> [options]
   barrier over the wire); start workers with `infilter-node --listen
   HOST:PORT` holding the same --model (or the same quick-model
   --seed/--scale/--epochs) — the handshake rejects mismatches.
+  --wire-format q15 ships frames as delta-coded 16-bit q1.15
+  samples (wire protocol v4, ~4x less frame bandwidth); nodes
+  adopt the gateway's proposal unless pinned with their own
+  --wire-format flag.
   A dead node link reconnects with backoff and its streams re-route
   to surviving nodes meanwhile (at-most-once, losses accounted):
     --reconnect-attempts N   attempts per blocking call, 0 = off (4)
@@ -100,9 +105,10 @@ USAGE: infilter <subcommand> [options]
             [--seed N] [--rounds R (8)] [--duration SECS (0 = use
             --rounds)] [--faults k1,k2,... | all (all)] [--streams N
             (4)] [--clips K (2)] [--nodes N (1)]
-            [--idle-timeout-ms M (500)] [--stats-listen ADDR]
+            [--idle-timeout-ms M (500)] [--wire-format f32|q15 (f32)]
+            [--stats-listen ADDR]
             [--stats-every N] [--stats-file PATH]
-  verify-proto  bounded model check of wire protocol v3: exhaustively
+  verify-proto  bounded model check of wire protocol v4: exhaustively
             explores the executable spec (docs/WIRE.md §Executable
             spec) under message reorderings and the chaos fault
             taxonomy, proving credit-conservation, drain-completeness,
@@ -112,7 +118,8 @@ USAGE: infilter <subcommand> [options]
             [--depth N (96)] [--frames N (5)] [--window N (2)]
             [--faults k1,k2,... | all | none (all)]
             [--fault-budget N (1)] [--invariant NAME (all)]
-            [--mutate NAME (none)] [--stats-file PATH]
+            [--mutate NAME (none)] [--wire-format f32|q15 (f32)]
+            [--stats-file PATH]
 
 common: --artifacts DIR --results DIR --seed N --threads N
         --gamma-f X --gamma-1 X --log LEVEL";
@@ -388,7 +395,7 @@ fn cmd_serve_remote(cfg: &AppConfig, args: &Args, connect: &str) -> Result<()> {
     let pool = RemotePool::connect(
         &split_addrs(connect),
         model.fingerprint(),
-        remote_config(args),
+        remote_config(args)?,
     )?;
     let scfg = ServeConfig {
         n_streams: args.get_usize("streams", 8),
@@ -446,15 +453,21 @@ fn cmd_chaos_soak_inner(args: &Args) -> Result<()> {
     } else {
         None
     };
+    let wire_format = match args.get("wire-format") {
+        None => infilter::net::WireFormat::F32,
+        Some(s) => infilter::net::WireFormat::parse(s)?,
+    };
 
     chaos::register_chaos_metrics();
     let names: Vec<&str> = faults.iter().map(|k| k.name()).collect();
     let repro = |through_round: usize| {
         format!(
             "REPRODUCE: infilter chaos-soak --seed {seed} --faults {} --rounds {} \
-             --streams {streams} --clips {clips} --nodes {nodes} --idle-timeout-ms {idle_ms}",
+             --streams {streams} --clips {clips} --nodes {nodes} --idle-timeout-ms {idle_ms} \
+             --wire-format {}",
             names.join(","),
-            through_round + 1
+            through_round + 1,
+            wire_format.name()
         )
     };
     println!(
@@ -495,6 +508,7 @@ fn cmd_chaos_soak_inner(args: &Args) -> Result<()> {
             io_timeout: Duration::from_secs(2),
             idle_timeout,
             monitor: true,
+            wire_format,
         };
         let out = chaos::run_scenario(&cfg).with_context(|| repro(round))?;
         if !out.spec_divergences.is_empty() {
@@ -566,6 +580,9 @@ fn cmd_verify_proto(args: &Args) -> Result<()> {
     }
     if let Some(name) = args.get("mutate") {
         cfg.mutation = Mutation::parse(name)?;
+    }
+    if let Some(s) = args.get("wire-format") {
+        cfg.wire_format = infilter::net::WireFormat::parse(s)?;
     }
 
     let fault_names: Vec<&str> = cfg.faults.iter().map(|f| f.name()).collect();
@@ -739,11 +756,16 @@ fn edge_model(cfg: &AppConfig, args: &Args) -> Result<TrainedModel> {
 }
 
 /// Gateway-side wire knobs from the CLI: `--reconnect-attempts N`
-/// (0 disables failover) and `--reconnect-backoff-ms M` on top of the
-/// [`RemoteConfig`] defaults.
-fn remote_config(args: &Args) -> RemoteConfig {
+/// (0 disables failover), `--reconnect-backoff-ms M` and
+/// `--wire-format f32|q15` (the v4 quantized frame payload) on top of
+/// the [`RemoteConfig`] defaults.
+fn remote_config(args: &Args) -> Result<RemoteConfig> {
     let d = RemoteConfig::default();
-    RemoteConfig {
+    let wire_format = match args.get("wire-format") {
+        None => d.wire_format,
+        Some(s) => infilter::net::WireFormat::parse(s)?,
+    };
+    Ok(RemoteConfig {
         reconnect_attempts: args.get_usize(
             "reconnect-attempts",
             d.reconnect_attempts as usize,
@@ -752,8 +774,9 @@ fn remote_config(args: &Args) -> RemoteConfig {
             "reconnect-backoff-ms",
             d.reconnect_backoff.as_millis() as u64,
         )),
+        wire_format,
         ..d
-    }
+    })
 }
 
 /// `--connect host:port[,host:port...]` -> node addresses.
@@ -797,7 +820,7 @@ fn cmd_edge_fleet_inner(cfg: &AppConfig, args: &Args) -> Result<()> {
         let pool = RemotePool::connect(
             &split_addrs(connect),
             model.fingerprint(),
-            remote_config(args),
+            remote_config(args)?,
         )?;
         let fcfg = FleetConfig::from_edge(
             &edge,

@@ -40,7 +40,7 @@
 
 use super::lane::{RemoteConfig, RemotePool};
 use super::node::{pipeline_factory, serve_node_until, NodeConfig, NodeShutdown};
-use super::proto::MAX_MSG_BYTES;
+use super::proto::{dequantize_q, quantize_q15_vec, WireFormat, MAX_MSG_BYTES};
 use crate::coordinator::dispatch::{Lane, PipelineBuilder};
 use crate::coordinator::metrics::ServeReport;
 use crate::coordinator::{ClassifyResult, FrameTask};
@@ -1050,6 +1050,11 @@ pub struct ScenarioConfig {
     /// [`ScenarioOutcome::spec_divergences`] (and each one bumps
     /// `gateway_invariant_violations_total`)
     pub monitor: bool,
+    /// frame payload encoding the gateway proposes (wire protocol v4).
+    /// Under [`WireFormat::Q15`] the workload samples are pre-snapped to
+    /// the q1.15 grid, so the quantised wire is the identity on them and
+    /// the local bit-parity reference stays exact
+    pub wire_format: WireFormat,
 }
 
 impl ScenarioConfig {
@@ -1065,6 +1070,7 @@ impl ScenarioConfig {
             io_timeout: Duration::from_secs(2),
             idle_timeout: None,
             monitor: true,
+            wire_format: WireFormat::F32,
         }
     }
 }
@@ -1098,17 +1104,24 @@ fn scenario_engine() -> CpuEngine {
 }
 
 /// The deterministic workload: same seed, same samples, bit for bit.
+/// Q15 scenarios snap every sample to the q1.15 grid (dequantise ∘
+/// quantise, idempotent), so the quantised wire carries them losslessly
+/// and remote results stay bit-comparable to the local reference.
 fn scenario_tasks(cfg: &ScenarioConfig) -> Vec<FrameTask> {
     let mut out = Vec::new();
     for s in 0..cfg.streams {
         let mut rng = Pcg32::substream(cfg.seed ^ 0x5EED_C11F, s);
         for clip in 0..cfg.clips_per_stream {
             for f in 0..2usize {
+                let mut data: Vec<f32> = (0..64).map(|_| (rng.normal() * 0.1) as f32).collect();
+                if cfg.wire_format == WireFormat::Q15 {
+                    data = dequantize_q(WireFormat::Q15.frac(), &quantize_q15_vec(&data));
+                }
                 out.push(FrameTask {
                     stream: s,
                     clip_seq: clip,
                     frame_idx: f,
-                    data: (0..64).map(|_| (rng.normal() * 0.1) as f32).collect(),
+                    data,
                     label: (s % 3) as usize,
                     t_gen: Instant::now(),
                 });
@@ -1170,6 +1183,7 @@ pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioOutcome> {
         reconnect_attempts: 6,
         reconnect_backoff: Duration::from_millis(5),
         reconnect_max_backoff: Duration::from_millis(50),
+        wire_format: cfg.wire_format,
         ..RemoteConfig::default()
     };
     let mut pool = RemotePool::connect(&addrs, fp, rcfg)

@@ -27,7 +27,8 @@
 
 use super::model::{BarrierKind, ConformanceMonitor, CreditLedger, LaneSpec, MonitorLog};
 use super::proto::{
-    read_msg, write_msg, Handshake, Msg, RejectCode, WireReport, WireResult, VERSION,
+    quantize_q15_vec, read_msg, write_msg, Handshake, Msg, RejectCode, WireFormat, WireReport,
+    WireResult, VERSION,
 };
 use crate::coordinator::dispatch::{ClassifySink, Lane};
 use crate::coordinator::metrics::ServeReport;
@@ -73,6 +74,12 @@ pub struct RemoteConfig {
     /// silence) costs a routing decision seconds, not the full I/O
     /// timeout. Clamped to `io_timeout` if set larger.
     pub reconnect_dial_timeout: Duration,
+    /// how frame payloads travel (v4): [`WireFormat::F32`] is the
+    /// compatible default; [`WireFormat::Q15`] quantizes samples to
+    /// q1.15 and delta-codes them, ≈4× less frame bandwidth. Proposed
+    /// in the `Hello` and pinned for the lane's lifetime (reconnects
+    /// re-negotiate the same format).
+    pub wire_format: WireFormat,
 }
 
 impl Default for RemoteConfig {
@@ -84,6 +91,7 @@ impl Default for RemoteConfig {
             reconnect_backoff: Duration::from_millis(50),
             reconnect_max_backoff: Duration::from_secs(2),
             reconnect_dial_timeout: Duration::from_secs(2),
+            wire_format: WireFormat::F32,
         }
     }
 }
@@ -239,6 +247,12 @@ fn open_link(
         hello.model_fingerprint
     );
     ensure!(
+        shake.wire_format == hello.wire_format,
+        "node {peer} answered with wire format {} to a {} proposal",
+        shake.wire_format.name(),
+        hello.wire_format.name()
+    );
+    ensure!(
         shake.frame_len > 0 && shake.clip_frames > 0 && credits > 0,
         "node {peer} sent a degenerate welcome (frame_len {}, \
          clip_frames {}, credits {credits})",
@@ -363,7 +377,9 @@ impl RemoteLane {
     /// which has no local backend to disagree with). The initial
     /// connect is fail-fast; only an *established* link reconnects.
     pub fn connect(addr: &str, model_fingerprint: u64, cfg: RemoteConfig) -> Result<RemoteLane> {
-        RemoteLane::connect_expect(addr, Handshake::wildcard(model_fingerprint), cfg)
+        let mut hello = Handshake::wildcard(model_fingerprint);
+        hello.wire_format = cfg.wire_format;
+        RemoteLane::connect_expect(addr, hello, cfg)
     }
 
     /// Connect with a fully pinned [`Handshake`] (zero fields wildcard):
@@ -380,11 +396,13 @@ impl RemoteLane {
             clip_frames: shake.clip_frames,
             n_filters: hello.n_filters, // the node cannot announce its real value
             model_fingerprint: hello.model_fingerprint,
+            wire_format: hello.wire_format, // open_link verified the echo
         };
         // pre-register this side's metric families so a scrape or JSONL
         // snapshot taken before any traffic flows already names them
         // (at zero) instead of omitting them
         crate::metric_counter!("gateway_frames_sent_total");
+        crate::metric_counter!("gateway_wire_frame_bytes_total");
         crate::metric_counter!("gateway_frames_dropped_total");
         crate::metric_counter!("gateway_clips_aborted_total");
         crate::metric_counter!("gateway_credit_stalls_total");
@@ -861,17 +879,27 @@ impl RemoteLane {
                 }
             }
             let link = self.link.as_mut().expect("checked above");
-            let sent = write_msg(
-                &mut link.writer,
-                &Msg::Frame {
+            // the negotiated frame encoding: f32 passthrough, or q1.15
+            // quantize + delta-code (the dequantized grid is what the
+            // node classifies — see WIRE.md §Quantized frames)
+            let msg = match self.hello.wire_format {
+                WireFormat::F32 => Msg::Frame {
                     stream: task.stream,
                     clip_seq: task.clip_seq,
                     frame_idx: task.frame_idx as u32,
                     label: task.label as u32,
                     samples: task.data,
                 },
-                &mut self.scratch,
-            );
+                WireFormat::Q15 => Msg::FrameQ {
+                    stream: task.stream,
+                    clip_seq: task.clip_seq,
+                    frame_idx: task.frame_idx as u32,
+                    label: task.label as u32,
+                    frac: WireFormat::Q15.frac(),
+                    samples: quantize_q15_vec(&task.data),
+                },
+            };
+            let sent = write_msg(&mut link.writer, &msg, &mut self.scratch);
             match sent {
                 Ok(()) => {
                     if let Err(v) = link.ledger.consume() {
@@ -885,6 +913,11 @@ impl RemoteLane {
                     }
                     wrote = true;
                     crate::metric_counter!("gateway_frames_sent_total").inc();
+                    // scratch still holds the encoded payload; +4 for
+                    // the length prefix — the bytes-on-wire counter the
+                    // q15-vs-f32 bench asserts against
+                    crate::metric_counter!("gateway_wire_frame_bytes_total")
+                        .add(self.scratch.len() as u64 + 4);
                 }
                 Err(e) => {
                     self.note_dropped(1); // the frame the write consumed

@@ -58,4 +58,4 @@ pub use chaos::{
 pub use model::{ConformanceMonitor, MonitorLog};
 pub use lane::{RemoteConfig, RemoteLane, RemotePool};
 pub use node::{serve_node, serve_node_until, NodeConfig, NodeShutdown};
-pub use proto::RejectCode;
+pub use proto::{RejectCode, WireFormat};

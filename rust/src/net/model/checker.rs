@@ -1,4 +1,4 @@
-//! Bounded explicit-state model checker for wire protocol v3.
+//! Bounded explicit-state model checker for wire protocol v4.
 //!
 //! The checker runs the *same* spec machines production delegates to
 //! ([`CreditLedger`], [`LaneSpec`], [`NodeSpec`]) inside a small closed
@@ -31,7 +31,11 @@
 //! them exactly once within a session, and the cross-session replay
 //! hazard is covered by the death/reconnect faults plus the
 //! `stale-results` mutation. Clips are a fixed two frames, matching the
-//! chaos scenario fixture.
+//! chaos scenario fixture. Frames carry their negotiated [`WireFormat`]
+//! as an opaque tag: the v4 `FrameQ` payload changes the bytes on the
+//! wire, not the protocol state machine, so credit/barrier/accounting
+//! proofs hold per format by running the exploration once per tag
+//! (`CheckConfig::wire_format`).
 //!
 //! [`Mutation`] deliberately breaks one spec rule so CI can prove the
 //! checker catches it (`verify-proto --mutate drop-credit-grant` must
@@ -43,6 +47,7 @@ use std::fmt;
 
 use anyhow::{bail, Result};
 
+use super::super::proto::WireFormat;
 use super::spec::{BarrierKind, CreditLedger, LaneSpec, LaneState, NodeSpec, NodeState};
 
 /// One WIRE.md guarantee the checker can prove within its bounds.
@@ -225,6 +230,10 @@ pub struct CheckConfig {
     /// invariants to check (violations of others are ignored)
     pub invariants: Vec<Invariant>,
     pub mutation: Mutation,
+    /// sample encoding the modelled handshake negotiated; frames carry
+    /// it as an opaque tag (v4 `FrameQ` changes payload bytes, not the
+    /// protocol state machine), so run once per format to cover both
+    pub wire_format: WireFormat,
 }
 
 impl Default for CheckConfig {
@@ -240,6 +249,7 @@ impl Default for CheckConfig {
             fault_budget: 1,
             invariants: Invariant::ALL.to_vec(),
             mutation: Mutation::None,
+            wire_format: WireFormat::F32,
         }
     }
 }
@@ -298,7 +308,10 @@ pub struct CheckOutcome {
 
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 enum WireMsg {
-    Frame,
+    /// A workload frame, tagged with the session's negotiated sample
+    /// encoding. The tag is opaque to the spec machines — the payload
+    /// format must never change credit/barrier/accounting behaviour.
+    Frame(WireFormat),
     Credit(u32),
     Drain(u64),
     DrainAck(u64),
@@ -429,7 +442,7 @@ fn successors(w: &World, cfg: &CheckConfig, out: &mut Vec<(String, World, Option
                 n.open_clips = n.open_clips.saturating_add(1);
             }
             n.frames_left = n.frames_left.saturating_sub(1);
-            n.to_node.push_back(WireMsg::Frame);
+            n.to_node.push_back(WireMsg::Frame(cfg.wire_format));
             out.push((
                 "gw: send frame".into(),
                 n,
@@ -528,7 +541,7 @@ fn successors(w: &World, cfg: &CheckConfig, out: &mut Vec<(String, World, Option
                 }
                 format!("gw: recv FlushAck(token {t}, flushed {flushed})")
             }
-            WireMsg::Frame | WireMsg::Drain(_) | WireMsg::Flush(_) => {
+            WireMsg::Frame(_) | WireMsg::Drain(_) | WireMsg::Flush(_) => {
                 unreachable!("gateway-bound wire never carries {head:?}")
             }
         };
@@ -588,12 +601,12 @@ fn successors(w: &World, cfg: &CheckConfig, out: &mut Vec<(String, World, Option
             let msg = n.to_node.pop_front().expect("front checked");
             let mut breach: Option<Breach> = None;
             let label = match msg {
-                WireMsg::Frame => {
+                WireMsg::Frame(f) => {
                     if let Err(v) = n.node.on_frame() {
                         breach = Some((Invariant::from_rule(v.rule), v.detail));
                     }
                     n.held = n.held.saturating_add(1);
-                    "node: recv Frame".to_string()
+                    format!("node: recv Frame({})", f.name())
                 }
                 WireMsg::Drain(t) => match n.node.on_barrier(t) {
                     Err(_) => "node: absorb replayed Drain".to_string(),
@@ -979,6 +992,24 @@ mod tests {
         let out = check(&quick(Mutation::None, vec![], 0));
         assert!(out.violation.is_none());
         assert!(out.complete);
+    }
+
+    #[test]
+    fn correct_spec_passes_with_q15_frames() {
+        // the v4 payload is an opaque tag to the spec machines: the
+        // same exhaustive exploration must hold under q15 framing
+        let cfg = CheckConfig {
+            wire_format: WireFormat::Q15,
+            ..quick(Mutation::None, FaultEvent::ALL.to_vec(), 1)
+        };
+        let out = check(&cfg);
+        assert!(
+            out.violation.is_none(),
+            "unexpected counterexample under q15 framing:\n{}",
+            out.violation.unwrap()
+        );
+        assert!(out.complete, "q15 exploration truncated: {:?}", out.stats);
+        assert!(out.stats.terminal_states > 0, "no terminal state reached");
     }
 
     #[test]

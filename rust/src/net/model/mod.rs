@@ -1,4 +1,4 @@
-//! Executable specification of wire protocol v3.
+//! Executable specification of wire protocol v4.
 //!
 //! Three pure, heap-light state machines ([`spec`]) are the single
 //! source of truth for the protocol's transition decisions:

@@ -1,4 +1,4 @@
-//! Pure state machines for wire protocol v3 — the executable half of
+//! Pure state machines for wire protocol v4 — the executable half of
 //! `docs/WIRE.md`.
 //!
 //! Three machines cover the protocol: the [`CreditLedger`] (the

@@ -22,7 +22,8 @@
 
 use super::model::NodeSpec;
 use super::proto::{
-    read_msg, write_msg, Handshake, Msg, RejectCode, WireReport, WireResult, VERSION,
+    dequantize_q, read_msg, write_msg, Handshake, Msg, RejectCode, WireFormat, WireReport,
+    WireResult, VERSION,
 };
 use crate::coordinator::dispatch::{ClassifySink, Lane, Pipeline, PipelineBuilder};
 use crate::coordinator::{ClassifyResult, FrameTask};
@@ -62,6 +63,13 @@ pub struct NodeConfig {
     /// gateway admits. Counted in `node_idle_reaps_total`. CLI:
     /// `infilter-node --idle-timeout`.
     pub session_idle_timeout: Option<Duration>,
+    /// frame-payload format policy (v4): `None` adopts whatever the
+    /// gateway proposes in its `Hello` (the node decodes both `Frame`
+    /// and `FrameQ` regardless); `Some(wf)` pins the format — an
+    /// operator bandwidth policy — and a gateway proposing anything
+    /// else is refused as [`RejectCode::Incompatible`]. CLI:
+    /// `infilter-node --wire-format`.
+    pub wire_format: Option<WireFormat>,
 }
 
 impl Default for NodeConfig {
@@ -71,6 +79,7 @@ impl Default for NodeConfig {
             handshake_timeout: Duration::from_secs(10),
             max_sessions: 4,
             session_idle_timeout: None,
+            wire_format: None,
         }
     }
 }
@@ -470,6 +479,10 @@ fn handle_conn<L: Lane>(
         n_filters: 0, // not observable through the Lane trait; geometry
         // is pinned by frame_len/clip_frames/sample_rate + fingerprint
         model_fingerprint: fingerprint,
+        // adopt the gateway's frame encoding (like n_filters below)
+        // unless the operator pinned one, in which case `accepts`
+        // refuses a mismatched proposal as Incompatible
+        wire_format: cfg.wire_format.unwrap_or(hello.wire_format),
     };
     // n_filters is the one field the node cannot introspect; accept the
     // gateway's pin verbatim rather than comparing against 0
@@ -523,6 +536,23 @@ fn handle_conn<L: Lane>(
                         clip_seq,
                         frame_idx: frame_idx as usize,
                         data: samples,
+                        label: label as usize,
+                        t_gen: Instant::now(),
+                    }),
+                    Ok(Some(Msg::FrameQ {
+                        stream,
+                        clip_seq,
+                        frame_idx,
+                        label,
+                        frac,
+                        samples,
+                    })) => NodeEvent::Frame(FrameTask {
+                        stream,
+                        clip_seq,
+                        frame_idx: frame_idx as usize,
+                        // q → f32 is exact (`q·2^-frac`), so the node
+                        // classifies the quantized grid deterministically
+                        data: dequantize_q(frac, &samples),
                         label: label as usize,
                         t_gen: Instant::now(),
                     }),
@@ -880,6 +910,83 @@ mod tests {
         assert_eq!(report.clips_padded, 0);
         assert_eq!(report.reconnects, 0);
         assert_eq!(report.latency.count(), 8, "gateway-side latency recorded");
+    }
+
+    /// Snap every sample to the q1.15 grid so the Q15 wire encoding is
+    /// the identity on it (dequantize∘quantize is idempotent).
+    fn snap_q15(tasks: Vec<FrameTask>) -> Vec<FrameTask> {
+        use super::super::proto::{dequantize_q, quantize_q15_vec};
+        tasks
+            .into_iter()
+            .map(|mut t| {
+                t.data = dequantize_q(15, &quantize_q15_vec(&t.data));
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn q15_session_matches_f32_bit_exact_on_snapped_frames() {
+        let m = model();
+        let addr = spawn_node(m.clone(), 8, 2);
+        let mut by_format = Vec::new();
+        for wf in [WireFormat::F32, WireFormat::Q15] {
+            let cfg = RemoteConfig {
+                wire_format: wf,
+                ..RemoteConfig::default()
+            };
+            let mut lane = RemoteLane::connect(&addr, m.fingerprint(), cfg).unwrap();
+            assert_eq!(lane.handshake().wire_format, wf, "node echoes the proposal");
+            for t in snap_q15(tasks(4, 2)) {
+                assert!(lane.push(t));
+            }
+            lane.drain().unwrap();
+            let (report, mut results) = lane.finish().unwrap();
+            assert_eq!(report.clips_classified, 8);
+            results.sort_by_key(|r| (r.stream, r.clip_seq));
+            by_format.push(results);
+        }
+        // q15-clean samples cross the quantized wire unchanged, so the
+        // two sessions must classify bit-identically
+        let (f32_run, q15_run) = (&by_format[0], &by_format[1]);
+        assert_eq!(f32_run.len(), q15_run.len());
+        for (a, b) in f32_run.iter().zip(q15_run) {
+            assert_eq!(a.predicted, b.predicted);
+            let pa: Vec<u32> = a.p.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u32> = b.p.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(pa, pb, "stream {} clip {}", a.stream, a.clip_seq);
+        }
+    }
+
+    #[test]
+    fn pinned_wire_format_rejects_mismatched_gateway() {
+        let m = model();
+        let addr = spawn_node_cfg(
+            m.clone(),
+            NodeConfig {
+                credits: 8,
+                wire_format: Some(WireFormat::Q15),
+                ..NodeConfig::default()
+            },
+            2,
+        );
+        // an f32 gateway is refused as incompatible...
+        let err = RemoteLane::connect(&addr, m.fingerprint(), RemoteConfig::default())
+            .expect_err("format pin must reject an f32 proposal");
+        assert!(format!("{err:#}").contains("wire-format"), "{err:#}");
+        // ...and a q15 gateway is admitted and serves normally
+        let cfg = RemoteConfig {
+            wire_format: WireFormat::Q15,
+            ..RemoteConfig::default()
+        };
+        let mut lane = RemoteLane::connect(&addr, m.fingerprint(), cfg).unwrap();
+        for t in tasks(2, 1) {
+            assert!(lane.push(t));
+        }
+        lane.drain().unwrap();
+        assert_eq!(lane.clips_classified(), 2);
+        let (report, _) = lane.finish().unwrap();
+        assert_eq!(report.clips_classified, 2);
     }
 
     #[test]

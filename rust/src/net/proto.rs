@@ -45,8 +45,11 @@ pub const MAGIC: u32 = 0x4946_4C54;
 /// Protocol version; bumped on any wire-incompatible change (see the
 /// versioning policy in `docs/WIRE.md`). v2 added the session id to
 /// `Welcome` and the machine-readable reason code to `Reject`; v3
-/// added the per-stage duration histograms to `Report`.
-pub const VERSION: u16 = 3;
+/// added the per-stage duration histograms to `Report`; v4 added the
+/// sample-format descriptor to the handshake (a layout change — hence
+/// the bump) and the quantized [`Msg::FrameQ`] payload. The f32
+/// [`Msg::Frame`] remains valid within v4 and stays the default.
+pub const VERSION: u16 = 4;
 /// Hard ceiling on one message's payload (64 MiB ≫ any real frame).
 pub const MAX_MSG_BYTES: usize = 1 << 26;
 
@@ -61,6 +64,107 @@ const T_DRAIN_ACK: u8 = 8;
 const T_REPORT: u8 = 9;
 const T_FLUSH_TAILS: u8 = 10;
 const T_FLUSH_ACK: u8 = 11;
+const T_FRAME_Q: u8 = 12;
+
+/// How frame payloads travel on the wire, negotiated in the handshake:
+/// the gateway proposes a format in its `Hello`, the node adopts it and
+/// echoes it in `Welcome` (unless pinned otherwise, in which case the
+/// handshake is rejected as incompatible). On the wire the format is a
+/// `(code, frac)` byte pair so future q-formats need no version bump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WireFormat {
+    /// 4-byte IEEE f32 samples ([`Msg::Frame`]) — the default, and what
+    /// every pre-v4 deployment sent.
+    F32,
+    /// Signed 16-bit q1.15 samples ([`Msg::FrameQ`]): quantized to
+    /// `round(x * 2^15)` saturated at the rails, then delta-coded
+    /// (second-order predictor + zigzag + LEB128 varint) — lossless for
+    /// the quantized values, ≈4× smaller than f32 on real audio.
+    Q15,
+}
+
+impl WireFormat {
+    /// Wire byte identifying the sample encoding.
+    pub fn code(self) -> u8 {
+        match self {
+            WireFormat::F32 => 0,
+            WireFormat::Q15 => 1,
+        }
+    }
+
+    /// Fractional bits of the q-format (0 for f32).
+    pub fn frac(self) -> u8 {
+        match self {
+            WireFormat::F32 => 0,
+            WireFormat::Q15 => 15,
+        }
+    }
+
+    /// Decode the handshake's `(code, frac)` descriptor pair. Unknown
+    /// codes are a hard error: a peer proposing a format this build
+    /// cannot decode must fail the handshake, not classify garbage.
+    pub fn from_wire(code: u8, frac: u8) -> Result<WireFormat> {
+        match (code, frac) {
+            (0, 0) => Ok(WireFormat::F32),
+            (1, 15) => Ok(WireFormat::Q15),
+            _ => bail!("unknown wire sample format (code {code}, frac {frac})"),
+        }
+    }
+
+    /// CLI slug (`--wire-format f32|q15`).
+    pub fn name(self) -> &'static str {
+        match self {
+            WireFormat::F32 => "f32",
+            WireFormat::Q15 => "q15",
+        }
+    }
+
+    /// Parse a CLI slug.
+    pub fn parse(s: &str) -> Result<WireFormat> {
+        match s {
+            "f32" => Ok(WireFormat::F32),
+            "q15" => Ok(WireFormat::Q15),
+            _ => bail!("unknown wire format {s:?} (one of: f32, q15)"),
+        }
+    }
+}
+
+/// Quantize one sample to q1.15: round to nearest, saturate at the
+/// rails, NaN folds to 0. The absolute quantization error is at most
+/// half an LSB (2^-16) inside the rails.
+pub fn quantize_q15(x: f32) -> i16 {
+    if x.is_nan() {
+        return 0;
+    }
+    let v = (f64::from(x) * 32_768.0).round();
+    if v >= 32_767.0 {
+        32_767
+    } else if v <= -32_768.0 {
+        -32_768
+    } else {
+        v as i16
+    }
+}
+
+/// Quantize a frame into a reusable buffer (the steady-state send path).
+pub fn quantize_q15_into(xs: &[f32], out: &mut Vec<i16>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| quantize_q15(x)));
+}
+
+/// Quantize a frame, allocating.
+pub fn quantize_q15_vec(xs: &[f32]) -> Vec<i16> {
+    let mut out = Vec::new();
+    quantize_q15_into(xs, &mut out);
+    out
+}
+
+/// Dequantize q-format samples back to f32: `q * 2^-frac`, exact in
+/// f32 for every i16 value (16 significand bits needed, 24 available).
+pub fn dequantize_q(frac: u8, qs: &[i16]) -> Vec<f32> {
+    let scale = 2.0f32.powi(-i32::from(frac));
+    qs.iter().map(|&q| f32::from(q) * scale).collect()
+}
 
 /// Machine-readable class of a [`Msg::Reject`], so a gateway can
 /// decide whether retrying the handshake can ever succeed without
@@ -129,6 +233,10 @@ pub struct Handshake {
     pub clip_frames: u32,
     pub n_filters: u32,
     pub model_fingerprint: u64,
+    /// v4: how this gateway will encode frame payloads. The node adopts
+    /// the proposal (like `n_filters`) unless its operator pinned a
+    /// format, in which case a mismatch is rejected as incompatible.
+    pub wire_format: WireFormat,
 }
 
 impl Handshake {
@@ -141,6 +249,7 @@ impl Handshake {
             clip_frames: 0,
             n_filters: 0,
             model_fingerprint,
+            wire_format: WireFormat::F32,
         }
     }
 
@@ -189,6 +298,12 @@ impl Handshake {
             "sample_rate mismatch: gateway expects {} Hz, node runs {} Hz",
             hello.sample_rate,
             self.sample_rate
+        );
+        ensure!(
+            hello.wire_format == self.wire_format,
+            "wire-format mismatch: gateway sends {}, node expects {}",
+            hello.wire_format.name(),
+            self.wire_format.name()
         );
         Ok(())
     }
@@ -325,6 +440,19 @@ pub enum Msg {
         label: u32,
         samples: Vec<f32>,
     },
+    /// gateway → node (v4): one audio frame with samples quantized to a
+    /// signed q-format (`frac` fractional bits, q1.15 today) and
+    /// delta-coded on the wire. Self-describing — `frac` travels with
+    /// the frame — so decoding needs no handshake state; the handshake
+    /// descriptor only tells the node what to *expect*.
+    FrameQ {
+        stream: u64,
+        clip_seq: u64,
+        frame_idx: u32,
+        label: u32,
+        frac: u8,
+        samples: Vec<i16>,
+    },
     /// node → gateway: one classified clip.
     Result(WireResult),
     /// node → gateway: `n` more frames may be sent (frames consumed).
@@ -404,6 +532,39 @@ fn put_shake(out: &mut Vec<u8>, h: &Handshake) {
     put_u32(out, h.clip_frames);
     put_u32(out, h.n_filters);
     put_u64(out, h.model_fingerprint);
+    out.push(h.wire_format.code());
+    out.push(h.wire_format.frac());
+}
+
+/// Append `vs` delta-coded: residuals of a fixed second-order predictor
+/// (`pred = 2·s[n-1] − s[n-2]`, state starts at zero), zigzag-mapped
+/// and LEB128-varint coded. Lossless for the i16 values; smooth audio
+/// residuals fit one byte, the worst case is three (|r| ≤ 131071 <
+/// 2^17, so the zigzag value is < 2^18 ≤ 21 bits ≤ 3 varint groups).
+#[allow(clippy::arithmetic_side_effects)]
+// bounds: |p1|,|p2| ≤ 32768 ⇒ |pred| ≤ 98304; |r| = |s − pred| ≤
+// 131071 — every intermediate fits i32 with ≥14 bits to spare, and the
+// shifts use constant amounts < 32.
+fn put_i16s_packed(out: &mut Vec<u8>, vs: &[i16]) {
+    put_u32(out, vs.len() as u32);
+    let (mut p1, mut p2) = (0i32, 0i32);
+    for &v in vs {
+        let s = i32::from(v);
+        let pred = 2 * p1 - p2;
+        let r = s - pred;
+        let mut z = ((r << 1) ^ (r >> 31)) as u32;
+        loop {
+            let b = (z & 0x7F) as u8;
+            z >>= 7;
+            if z == 0 {
+                out.push(b);
+                break;
+            }
+            out.push(b | 0x80);
+        }
+        p2 = p1;
+        p1 = s;
+    }
 }
 
 /// Bounds-checked little-endian cursor over one received payload.
@@ -503,6 +664,53 @@ impl<'a> Dec<'a> {
         Ok(LatencyHist::from_parts(&counts, sum_us, max_us))
     }
 
+    /// Decode the delta-coded i16 vector [`put_i16s_packed`] produced.
+    /// Every failure mode — truncated varint, overlong varint, residual
+    /// reconstructing outside i16 — is a decode *error*, never a panic:
+    /// these bytes come off the network.
+    #[allow(clippy::arithmetic_side_effects)]
+    // bounds: shift ≤ 14 is enforced (so `part << shift` keeps every
+    // bit and z < 2^21); |r| ≤ 2^20 and |pred| ≤ 98304 from validated
+    // i16 state, so `pred + r` fits i32 with room to spare.
+    fn i16s_packed(&mut self) -> Result<Vec<i16>> {
+        let n = self.u32()? as usize;
+        // every sample takes at least one wire byte: bound the
+        // allocation against the received payload, like f32s
+        ensure!(
+            n <= self.remaining(),
+            "packed sample vector longer than its message ({n})"
+        );
+        let mut out = Vec::with_capacity(n);
+        let (mut p1, mut p2) = (0i32, 0i32);
+        for _ in 0..n {
+            let mut z: u32 = 0;
+            let mut shift = 0u32;
+            loop {
+                let b = self.u8()?;
+                ensure!(
+                    shift <= 14,
+                    "overlong varint in packed samples (no residual needs >3 bytes)"
+                );
+                z |= u32::from(b & 0x7F) << shift;
+                if b & 0x80 == 0 {
+                    break;
+                }
+                shift += 7;
+            }
+            let r = (z >> 1) as i32 ^ -((z & 1) as i32);
+            let pred = 2 * p1 - p2;
+            let s = pred + r;
+            ensure!(
+                (-32_768..=32_767).contains(&s),
+                "packed sample out of i16 range ({s})"
+            );
+            out.push(s as i16);
+            p2 = p1;
+            p1 = s;
+        }
+        Ok(out)
+    }
+
     fn shake(&mut self) -> Result<Handshake> {
         let magic = self.u32()?;
         ensure!(
@@ -516,6 +724,7 @@ impl<'a> Dec<'a> {
             clip_frames: self.u32()?,
             n_filters: self.u32()?,
             model_fingerprint: self.u64()?,
+            wire_format: WireFormat::from_wire(self.u8()?, self.u8()?)?,
         })
     }
 
@@ -566,6 +775,22 @@ impl Msg {
                 put_u32(out, *frame_idx);
                 put_u32(out, *label);
                 put_f32s(out, samples);
+            }
+            Msg::FrameQ {
+                stream,
+                clip_seq,
+                frame_idx,
+                label,
+                frac,
+                samples,
+            } => {
+                out.push(T_FRAME_Q);
+                put_u64(out, *stream);
+                put_u64(out, *clip_seq);
+                put_u32(out, *frame_idx);
+                put_u32(out, *label);
+                out.push(*frac);
+                put_i16s_packed(out, samples);
             }
             Msg::Result(r) => {
                 out.push(T_RESULT);
@@ -644,6 +869,25 @@ impl Msg {
                 label: d.u32()?,
                 samples: d.f32s()?,
             },
+            T_FRAME_Q => {
+                let stream = d.u64()?;
+                let clip_seq = d.u64()?;
+                let frame_idx = d.u32()?;
+                let label = d.u32()?;
+                let frac = d.u8()?;
+                ensure!(
+                    (1..=15).contains(&frac),
+                    "implausible q-format frac {frac} in FrameQ"
+                );
+                Msg::FrameQ {
+                    stream,
+                    clip_seq,
+                    frame_idx,
+                    label,
+                    frac,
+                    samples: d.i16s_packed()?,
+                }
+            }
             T_RESULT => Msg::Result(WireResult {
                 stream: d.u64()?,
                 clip_seq: d.u64()?,
@@ -811,6 +1055,7 @@ mod tests {
             clip_frames: 8,
             n_filters: 30,
             model_fingerprint: 0xdead_beef_cafe_f00d,
+            wire_format: WireFormat::F32,
         }
     }
 
@@ -839,6 +1084,29 @@ mod tests {
                 label: 5,
                 samples: vec![0.25, -1.5, 0.0, f32::MIN_POSITIVE],
             },
+            Msg::FrameQ {
+                stream: 7,
+                clip_seq: 3,
+                frame_idx: 2,
+                label: 5,
+                frac: 15,
+                samples: vec![],
+            },
+            Msg::FrameQ {
+                stream: 9,
+                clip_seq: 0,
+                frame_idx: 0,
+                label: 1,
+                frac: 15,
+                // rails, sign flips and the worst-case alternating
+                // extremes all survive the delta coder
+                samples: vec![32_767, -32_768, 32_767, -32_768, 0, 1, -1, 12_345],
+            },
+            Msg::Hello({
+                let mut h = sample_shake();
+                h.wire_format = WireFormat::Q15;
+                h
+            }),
             Msg::Result(WireResult {
                 stream: 7,
                 clip_seq: 3,
@@ -1012,5 +1280,170 @@ mod tests {
         payload[1] ^= 0xFF; // corrupt the magic (byte 0 is the type)
         let err = Msg::decode(&payload).unwrap_err();
         assert!(format!("{err:#}").contains("magic"));
+    }
+
+    #[test]
+    fn wire_format_descriptor_roundtrips_and_rejects_unknowns() {
+        for wf in [WireFormat::F32, WireFormat::Q15] {
+            assert_eq!(WireFormat::from_wire(wf.code(), wf.frac()).unwrap(), wf);
+            assert_eq!(WireFormat::parse(wf.name()).unwrap(), wf);
+        }
+        assert!(WireFormat::from_wire(2, 15).is_err());
+        assert!(WireFormat::from_wire(1, 14).is_err());
+        assert!(WireFormat::parse("q7").is_err());
+        // a corrupt format descriptor fails the whole handshake decode
+        let mut payload = Vec::new();
+        Msg::Hello(sample_shake()).encode(&mut payload);
+        let code_at = payload.len() - 2;
+        payload[code_at] = 0xEE;
+        assert!(Msg::decode(&payload).is_err());
+    }
+
+    #[test]
+    fn mismatched_wire_format_is_rejected_by_accepts() {
+        let node = sample_shake();
+        let mut q15 = node;
+        q15.wire_format = WireFormat::Q15;
+        let err = node.accepts(&q15).unwrap_err();
+        assert!(format!("{err:#}").contains("wire-format"));
+        // identity-only precheck stays format-agnostic: the node adopts
+        // the proposal before the full geometry check runs
+        node.accepts_identity(&q15).unwrap();
+    }
+
+    #[test]
+    fn q15_quantizer_saturates_and_dequantizes_exactly() {
+        assert_eq!(quantize_q15(0.0), 0);
+        assert_eq!(quantize_q15(1.0), 32_767); // +1.0 is past the rail
+        assert_eq!(quantize_q15(-1.0), -32_768);
+        assert_eq!(quantize_q15(1e9), 32_767);
+        assert_eq!(quantize_q15(-1e9), -32_768);
+        assert_eq!(quantize_q15(f32::NAN), 0);
+        assert_eq!(quantize_q15(f32::INFINITY), 32_767);
+        assert_eq!(quantize_q15(f32::NEG_INFINITY), -32_768);
+        assert_eq!(quantize_q15(0.5), 16_384);
+        // dequantize is exact for every i16: q * 2^-15 needs 16
+        // significand bits, f32 has 24
+        let all = [i16::MIN, -1, 0, 1, 12_345, i16::MAX];
+        let back = dequantize_q(15, &all);
+        for (q, x) in all.iter().zip(&back) {
+            assert_eq!(quantize_q15(*x), *q);
+        }
+    }
+
+    #[test]
+    fn prop_q15_roundtrip_within_one_lsb() {
+        let lsb = 1.0 / 32_768.0f32;
+        crate::util::proptest::check("proto_q15_roundtrip", 400, |g| {
+            // mix in-range values with rail-crossing outliers
+            let x = if g.bool() {
+                g.f32(-1.5, 1.5)
+            } else {
+                g.f32(-1e6, 1e6)
+            };
+            let q = quantize_q15(x);
+            let y = dequantize_q(15, &[q])[0];
+            // inside the rails: within one LSB of x; outside: pinned
+            // to the nearest rail
+            let clamped = x.clamp(-1.0, 32_767.0 / 32_768.0);
+            assert!(
+                (y - clamped).abs() <= lsb,
+                "x={x} q={q} y={y} (err {})",
+                (y - clamped).abs()
+            );
+        });
+    }
+
+    #[test]
+    fn prop_packed_i16_codec_is_lossless() {
+        crate::util::proptest::check("proto_packed_i16", 300, |g| {
+            let n = g.usize(0, 300);
+            let mut vs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // mix smooth ramps (the audio case) with white extremes
+                let v = if g.bool() {
+                    g.int(-200, 200) as i16
+                } else {
+                    g.int(-32_768, 32_767) as i16
+                };
+                vs.push(v);
+            }
+            let mut wire = Vec::new();
+            put_i16s_packed(&mut wire, &vs);
+            let mut d = Dec::new(&wire);
+            let back = d.i16s_packed().unwrap();
+            d.finish().unwrap();
+            assert_eq!(back, vs);
+        });
+    }
+
+    #[test]
+    fn prop_q15_clean_samples_survive_the_wire_bit_exactly() {
+        // dequantize∘quantize is idempotent: once snapped to the q15
+        // grid, a frame crosses the wire without any change at all —
+        // the property the chaos/parity suites' bit-exact remote
+        // rounds rely on
+        crate::util::proptest::check("proto_q15_idempotent", 200, |g| {
+            let clean = dequantize_q(15, &quantize_q15_vec(&g.signal(64, 0.4)));
+            let there = quantize_q15_vec(&clean);
+            let back = dequantize_q(15, &there);
+            assert_eq!(clean, back);
+        });
+    }
+
+    #[test]
+    fn smooth_audio_packs_to_about_one_byte_per_sample() {
+        // the bandwidth claim the q15 bench asserts end-to-end: a low
+        // frequency tone's second-order residuals fit single varint
+        // bytes, so FrameQ ≈ ¼ the f32 payload
+        let n = 1024usize;
+        let tone: Vec<i16> = (0..n)
+            .map(|i| {
+                let t = i as f32 / 16_000.0;
+                quantize_q15(0.25 * (2.0 * std::f32::consts::PI * 200.0 * t).sin())
+            })
+            .collect();
+        let mut packed = Vec::new();
+        put_i16s_packed(&mut packed, &tone);
+        let f32_bytes = 4 + 4 * n;
+        assert!(
+            packed.len() * 3 < f32_bytes,
+            "packed {} B vs f32 {} B",
+            packed.len(),
+            f32_bytes
+        );
+        let mut d = Dec::new(&packed);
+        assert_eq!(d.i16s_packed().unwrap(), tone);
+    }
+
+    #[test]
+    fn corrupt_packed_samples_error_not_panic() {
+        // overlong varint: four continuation bytes
+        let mut wire = Vec::new();
+        put_u32(&mut wire, 1);
+        wire.extend_from_slice(&[0x80, 0x80, 0x80, 0x01]);
+        assert!(Dec::new(&wire).i16s_packed().is_err());
+        // residual walks outside i16
+        let mut wire = Vec::new();
+        put_u32(&mut wire, 2);
+        // first sample 32767 (zigzag(32767) = 65534), then a huge jump
+        let mut z = 65_534u32;
+        loop {
+            let b = (z & 0x7F) as u8;
+            z >>= 7;
+            if z == 0 {
+                wire.push(b);
+                break;
+            }
+            wire.push(b | 0x80);
+        }
+        // zero residual: s = pred = 2·32767 = 65534, outside i16
+        wire.push(0x00);
+        assert!(Dec::new(&wire).i16s_packed().is_err());
+        // truncated: count says 4, bytes end after 1
+        let mut wire = Vec::new();
+        put_u32(&mut wire, 4);
+        wire.push(0x00);
+        assert!(Dec::new(&wire).i16s_packed().is_err());
     }
 }

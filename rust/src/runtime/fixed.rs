@@ -1,0 +1,409 @@
+//! `FixedEngine` — the integer serving backend (DESIGN.md §13).
+//!
+//! An [`InferenceBackend`] whose per-frame feature extraction and
+//! clip-level inference run entirely on the `fixed::` primitives
+//! (add/sub, shift, compare): frames go through the integer
+//! delay-prefix block kernel ([`crate::fixed::kernel`]), inference
+//! through [`FixedPipeline::standardize`] + [`FixedPipeline::infer_full`].
+//! The only floats in the steady state are the transport
+//! representations — incoming samples are quantised once on entry
+//! (the same `QFormat::quantize_f32` the offline reference runs), and
+//! per-frame Phi / delay-line values travel through the shared f32
+//! surfaces (`StreamState`, the `Pipeline::tick` Phi slots) as exact
+//! small integers. That exactness is a construction-time invariant,
+//! not luck: [`FixedEngine::new`] rejects datapath or accumulator
+//! widths above 24 bits (f32 holds every integer below 2^24 exactly,
+//! and the certified accumulator bound caps every partial sum), so
+//! clip decisions are bit-identical to [`FixedPipeline::classify`] —
+//! the property the golden-vector suite pins.
+//!
+//! Construction is gated on the static bit-width prover: an engine
+//! only exists for configurations `crate::analysis` certifies
+//! overflow-free for the serving clip length, so the prover's verdict
+//! applies to the serving path verbatim (an un-certified config — e.g.
+//! a 16-bit accumulator — fails at `FixedEngine::new`, not in the
+//! field).
+
+use super::backend::InferenceBackend;
+use super::engine::StreamState;
+use crate::analysis::{analyze, Provision};
+use crate::fixed::kernel::{self, FixedScratch};
+use crate::fixed::FixedPipeline;
+use crate::mp::machine::{Params, Standardizer};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Widest datapath/accumulator the f32 transport surfaces hold exactly
+/// (every integer |v| < 2^24 is an f32 fixpoint).
+pub const MAX_EXACT_BITS: u32 = 24;
+
+/// Integer inference backend over a frozen [`FixedPipeline`].
+///
+/// Cloning shares the (immutable) pipeline and gives the clone its own
+/// scratch, so a sharded serving pool clones one certified engine per
+/// lane.
+#[derive(Clone)]
+pub struct FixedEngine {
+    pipe: Arc<FixedPipeline>,
+    frame_len: usize,
+    clip_frames: usize,
+    acc_bits: u32,
+    scratch: FixedScratch,
+    /// reusable i64 accumulator/feature row for `inference`
+    phi_q: Vec<i64>,
+}
+
+impl FixedEngine {
+    /// Certify and freeze a serving engine for `pipe` at the given clip
+    /// geometry.
+    ///
+    /// Fails unless
+    /// * the geometry satisfies the block-kernel contract (frame length
+    ///   divisible by `2^(n_octaves-1)`, deepest octave at least one
+    ///   band-pass delay line long, `lp_taps <= bp_taps`),
+    /// * datapath and accumulator widths are `<= 24` bits (the f32
+    ///   transport exactness window), and
+    /// * the static analyzer certifies the configuration overflow-free
+    ///   for `frame_len * clip_frames`-sample clips with `acc_bits`
+    ///   accumulators.
+    pub fn new(
+        pipe: FixedPipeline,
+        frame_len: usize,
+        clip_frames: usize,
+        acc_bits: u32,
+    ) -> Result<FixedEngine> {
+        let plan = &pipe.plan;
+        ensure!(
+            frame_len % (1 << (plan.n_octaves.saturating_sub(1))) == 0,
+            "frame_len {frame_len} not divisible by 2^{}",
+            plan.n_octaves.saturating_sub(1)
+        );
+        ensure!(
+            (frame_len >> (plan.n_octaves.saturating_sub(1))) >= plan.bp_taps.saturating_sub(1),
+            "deepest octave frame shorter than the band-pass delay line"
+        );
+        ensure!(
+            plan.lp_taps <= plan.bp_taps,
+            "block kernel requires lp_taps ({}) <= bp_taps ({})",
+            plan.lp_taps,
+            plan.bp_taps
+        );
+        ensure!(
+            pipe.cfg.bits <= MAX_EXACT_BITS && acc_bits <= MAX_EXACT_BITS,
+            "datapath {} / accumulator {acc_bits} bits exceed the {MAX_EXACT_BITS}-bit \
+             f32-exact transport window",
+            pipe.cfg.bits
+        );
+        let clip_len = frame_len.saturating_mul(clip_frames);
+        let report = analyze(&pipe, clip_len, &Provision::for_pipeline(&pipe, acc_bits));
+        ensure!(
+            report.certified(),
+            "bit-width certification failed for W={} acc={acc_bits} clip_len={clip_len}: {}",
+            pipe.cfg.bits,
+            report
+                .overflows()
+                .iter()
+                .map(|s| s.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        crate::log_info!(
+            "fixed engine certified: W={} acc={acc_bits} clip_len={clip_len} worst deficit {}",
+            pipe.cfg.bits,
+            report.worst_deficit()
+        );
+        let p = plan.n_filters();
+        Ok(FixedEngine {
+            pipe: Arc::new(pipe),
+            frame_len,
+            clip_frames,
+            acc_bits,
+            scratch: FixedScratch::new(),
+            phi_q: vec![0i64; p],
+        })
+    }
+
+    /// The frozen pipeline this engine serves (the golden reference).
+    pub fn pipeline(&self) -> &FixedPipeline {
+        &self.pipe
+    }
+
+    pub fn acc_bits(&self) -> u32 {
+        self.acc_bits
+    }
+}
+
+impl InferenceBackend for FixedEngine {
+    fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    fn clip_frames(&self) -> usize {
+        self.clip_frames
+    }
+
+    fn n_filters(&self) -> usize {
+        self.pipe.plan.n_filters()
+    }
+
+    fn sample_rate(&self) -> f64 {
+        self.pipe.plan.sample_rate
+    }
+
+    fn zero_state(&self) -> StreamState {
+        StreamState::zero(
+            self.pipe.plan.n_octaves,
+            self.pipe.plan.bp_taps,
+            self.pipe.plan.lp_taps,
+        )
+    }
+
+    fn mp_frame_features(&mut self, state: &mut StreamState, frame: &[f32]) -> Result<Vec<f32>> {
+        let mut phi = vec![0.0f32; self.pipe.plan.n_filters()];
+        self.mp_frame_features_into(state, frame, &mut phi)?;
+        Ok(phi)
+    }
+
+    fn mp_frame_features_into(
+        &mut self,
+        state: &mut StreamState,
+        frame: &[f32],
+        phi_out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(frame.len() == self.frame_len, "frame length mismatch");
+        ensure!(
+            phi_out.len() == self.pipe.plan.n_filters(),
+            "phi length mismatch"
+        );
+        kernel::process_frame(&self.pipe, &mut self.scratch, state, frame, phi_out);
+        Ok(())
+    }
+
+    // The integer path has no lane-interleaved wide kernel (yet): b8 is
+    // 8 scalar blocks, which is trivially bit-identical to b1 — the
+    // property the float kernel has to prove. Revisit when the integer
+    // SIMD kernel lands (ROADMAP).
+    fn mp_frame_features_b8(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            states.len() == 8 && frames.len() == 8,
+            "b8 path needs exactly 8 lanes"
+        );
+        states
+            .iter_mut()
+            .zip(frames)
+            .map(|(st, f)| self.mp_frame_features(st, f))
+            .collect()
+    }
+
+    fn mp_frame_features_b8_into(
+        &mut self,
+        states: &mut [StreamState],
+        frames: &[&[f32]],
+        phi_out: &mut [f32],
+    ) -> Result<()> {
+        let p = self.pipe.plan.n_filters();
+        ensure!(
+            states.len() == 8 && frames.len() == 8,
+            "b8 path needs exactly 8 lanes"
+        );
+        ensure!(phi_out.len() == 8usize.saturating_mul(p), "phi length mismatch");
+        for (i, (st, f)) in states.iter_mut().zip(frames).enumerate() {
+            let start = i.saturating_mul(p);
+            self.mp_frame_features_into(st, f, &mut phi_out[start..start.saturating_add(p)])?;
+        }
+        Ok(())
+    }
+
+    /// Integer clip-level inference. The float `params`/`std`/`gamma_1`
+    /// arguments the trait threads through are ignored: this engine's
+    /// quantised mirror of them was frozen into the [`FixedPipeline`] at
+    /// build time (using the live float values here would silently fork
+    /// the datapath from the certified one). Returned scores are the
+    /// integer margins/sums dequantised for reporting — `p` is exactly
+    /// [`FixedPipeline::classify`]'s output.
+    fn inference(
+        &mut self,
+        _params: &Params,
+        _std: &Standardizer,
+        phi: &[f32],
+        _gamma_1: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let p = self.pipe.plan.n_filters();
+        ensure!(phi.len() == p, "phi length mismatch");
+        self.phi_q.resize(p, 0);
+        for (q, &a) in self.phi_q.iter_mut().zip(phi) {
+            // exact: Phi slots hold integers below the certified
+            // 2^acc_bits <= 2^24 bound
+            *q = a as i64;
+        }
+        let k = self.pipe.standardize(&self.phi_q);
+        let full = self.pipe.infer_full(&k);
+        let fmt = self.pipe.feature_format();
+        let deq = |v: i64| fmt.dequantize(v) as f32;
+        Ok((
+            full.iter().map(|&(m, _, _)| deq(m)).collect(),
+            full.iter().map(|&(_, zp, _)| deq(zp)).collect(),
+            full.iter().map(|&(_, _, zm)| deq(zm)).collect(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::multirate::BandPlan;
+    use crate::fixed::FixedConfig;
+    use crate::mp::filter::MpMultirateBank;
+    use crate::util::prng::Pcg32;
+
+    fn toy_pipe(bits: u32) -> FixedPipeline {
+        let mut plan = BandPlan::paper_default();
+        plan.n_octaves = 3;
+        let mut rng = Pcg32::new(7);
+        let feats = plan.n_filters();
+        let params = Params {
+            wp: (0..2).map(|_| rng.normal_vec(feats)).collect(),
+            wm: (0..2).map(|_| rng.normal_vec(feats)).collect(),
+            bp: vec![0.1, -0.2],
+            bm: vec![-0.1, 0.2],
+        };
+        let mut bank = MpMultirateBank::new(&plan, 1.0);
+        let phis: Vec<Vec<f32>> = (0..6)
+            .map(|i| {
+                bank.reset();
+                let clip: Vec<f32> = Pcg32::new(100 + i)
+                    .normal_vec(2048)
+                    .iter()
+                    .map(|x| 0.3 * x)
+                    .collect();
+                bank.features(&clip)
+            })
+            .collect();
+        let std = Standardizer::fit(&phis);
+        FixedPipeline::build(
+            &plan,
+            1.0,
+            4.0,
+            &params,
+            &std,
+            &phis,
+            FixedConfig::with_bits(bits),
+        )
+    }
+
+    fn noise_clip(seed: u64, n: usize) -> Vec<f32> {
+        Pcg32::new(seed)
+            .normal_vec(n)
+            .iter()
+            .map(|x| 0.3 * x)
+            .collect()
+    }
+
+    fn dummy_params() -> (Params, Standardizer) {
+        (
+            Params {
+                wp: vec![],
+                wm: vec![],
+                bp: vec![],
+                bm: vec![],
+            },
+            Standardizer {
+                mu: vec![],
+                sigma: vec![],
+            },
+        )
+    }
+
+    /// Drive a clip through the engine the way `Pipeline::tick` does:
+    /// per-frame `*_into` features accumulated into the clip Phi, then
+    /// `inference`.
+    fn engine_classify(eng: &mut FixedEngine, clip: &[f32]) -> Vec<f32> {
+        let p = eng.n_filters();
+        let mut st = eng.zero_state();
+        let mut acc = vec![0.0f32; p];
+        let mut phi = vec![0.0f32; p];
+        for frame in clip.chunks(eng.frame_len()) {
+            eng.mp_frame_features_into(&mut st, frame, &mut phi).unwrap();
+            for (a, &v) in acc.iter_mut().zip(&phi) {
+                *a += v;
+            }
+        }
+        let (params, std) = dummy_params();
+        let (pv, _, _) = eng.inference(&params, &std, &acc, 0.0).unwrap();
+        pv
+    }
+
+    #[test]
+    fn sixteen_bit_accumulator_rejected_at_construction() {
+        // the satellite fix: the offline gate's verdict is enforced
+        // where the engine is born, not just in the analyze CLI
+        let err = FixedEngine::new(toy_pipe(10), 512, 4, 16)
+            .expect_err("16-bit accumulator must fail certification");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("certification failed"), "{msg}");
+    }
+
+    #[test]
+    fn over_wide_datapath_rejected_at_construction() {
+        // 26-bit accumulators break the f32-exact Phi transport even if
+        // the prover would pass them
+        let err = FixedEngine::new(toy_pipe(10), 512, 4, 26)
+            .expect_err("accumulator beyond the f32-exact window must be rejected");
+        assert!(format!("{err:#}").contains("f32-exact"), "{err:#}");
+    }
+
+    #[test]
+    fn misaligned_frame_length_rejected() {
+        let err = FixedEngine::new(toy_pipe(10), 510, 4, 24)
+            .expect_err("frame length must honour the decimation grid");
+        assert!(format!("{err:#}").contains("divisible"), "{err:#}");
+    }
+
+    #[test]
+    fn engine_decisions_bit_identical_to_pipeline_classify() {
+        // the tentpole contract: the streamed serving path reproduces
+        // the offline reference margins exactly, for every clip
+        let mut eng = FixedEngine::new(toy_pipe(10), 512, 4, 24).unwrap();
+        let reference = eng.pipeline().clone();
+        for seed in [3u64, 17, 99] {
+            let clip = noise_clip(seed, 2048);
+            let got = engine_classify(&mut eng, &clip);
+            let want = reference.classify(&clip);
+            assert_eq!(got, want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn b8_matches_b1_and_into_matches_allocating() {
+        let mut eng = FixedEngine::new(toy_pipe(10), 512, 4, 24).unwrap();
+        let p = eng.n_filters();
+        let clips: Vec<Vec<f32>> = (0..8).map(|i| noise_clip(200 + i, 512)).collect();
+        let frames: Vec<&[f32]> = clips.iter().map(Vec::as_slice).collect();
+        let mut states: Vec<StreamState> = (0..8).map(|_| eng.zero_state()).collect();
+        let phis8 = eng.mp_frame_features_b8(&mut states, &frames).unwrap();
+        let mut states_flat: Vec<StreamState> = (0..8).map(|_| eng.zero_state()).collect();
+        let mut flat = vec![0.0f32; 8 * p];
+        eng.mp_frame_features_b8_into(&mut states_flat, &frames, &mut flat)
+            .unwrap();
+        for s in 0..8 {
+            let mut st = eng.zero_state();
+            let phi1 = eng.mp_frame_features(&mut st, &clips[s]).unwrap();
+            assert_eq!(phis8[s], phi1, "lane {s}");
+            assert_eq!(flat[s * p..(s + 1) * p], phi1[..], "lane {s} flat");
+            assert_eq!(states[s], st, "lane {s} state");
+            assert_eq!(states_flat[s], st, "lane {s} flat state");
+        }
+    }
+
+    #[test]
+    fn clones_share_the_pipeline_and_classify_identically() {
+        let mut eng = FixedEngine::new(toy_pipe(10), 512, 4, 24).unwrap();
+        let mut cloned = eng.clone();
+        let clip = noise_clip(55, 2048);
+        assert_eq!(engine_classify(&mut eng, &clip), engine_classify(&mut cloned, &clip));
+    }
+}

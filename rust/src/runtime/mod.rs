@@ -11,6 +11,7 @@
 
 pub mod backend;
 pub mod engine;
+pub mod fixed;
 
 use crate::config::ModelConstants;
 use crate::util::json::Json;

@@ -1,0 +1,377 @@
+//! Golden-vector acceptance for the fixed-point datapath
+//! (tests/golden/README.md).
+//!
+//! `tests/golden/manifest.json` pins a deterministic fixture set; the
+//! expected integer feature rows / margins / decisions live in
+//! `tests/golden/expected.json`, blessed by this suite on first run
+//! (delete the file to regenerate deliberately). Two independent
+//! properties are enforced:
+//!
+//! 1. **Reference stability** — `fixed::FixedPipeline` reproduces the
+//!    blessed vectors bit-exactly; any drift is a datapath change and
+//!    fails loudly with the offending clip and stage.
+//! 2. **Serving parity** — `runtime::fixed::FixedEngine`, driven
+//!    frame-by-frame through the allocation-free `*_into` surface the
+//!    way `Pipeline::tick` drives it, matches the clip-level reference
+//!    bit-identically after *every* frame (prefix accumulate), and its
+//!    inference output matches `FixedPipeline::classify` to the bit.
+//!    This holds even before a bless, so a fresh checkout is guarded.
+
+use infilter::dsp::multirate::BandPlan;
+use infilter::fixed::{FixedConfig, FixedPipeline};
+use infilter::mp::filter::MpMultirateBank;
+use infilter::mp::machine::{Params, Standardizer};
+use infilter::runtime::backend::InferenceBackend;
+use infilter::runtime::fixed::FixedEngine;
+use infilter::util::json::Json;
+use infilter::util::prng::Pcg32;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn load_json(name: &str) -> Option<Json> {
+    let path = golden_dir().join(name);
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(Json::parse(&text).unwrap_or_else(|e| panic!("{}: invalid JSON: {e:?}", path.display())))
+}
+
+/// The calibrated pipeline every golden clip runs through — the same
+/// deterministic toy setup the `fixed::kernel` unit tests use, so a
+/// golden failure here and a kernel failure there point at the same
+/// datapath.
+fn golden_pipe(bits: u32) -> (BandPlan, FixedPipeline) {
+    let mut plan = BandPlan::paper_default();
+    plan.n_octaves = 3;
+    let mut rng = Pcg32::new(7);
+    let feats = plan.n_filters();
+    let params = Params {
+        wp: (0..2).map(|_| rng.normal_vec(feats)).collect(),
+        wm: (0..2).map(|_| rng.normal_vec(feats)).collect(),
+        bp: vec![0.1, -0.2],
+        bm: vec![-0.1, 0.2],
+    };
+    let mut bank = MpMultirateBank::new(&plan, 1.0);
+    let phis: Vec<Vec<f32>> = (0..6)
+        .map(|i| {
+            bank.reset();
+            let clip: Vec<f32> = Pcg32::new(100 + i)
+                .normal_vec(2048)
+                .iter()
+                .map(|x| 0.3 * x)
+                .collect();
+            bank.features(&clip)
+        })
+        .collect();
+    let std = Standardizer::fit(&phis);
+    let pipe = FixedPipeline::build(
+        &plan,
+        1.0,
+        4.0,
+        &params,
+        &std,
+        &phis,
+        FixedConfig::with_bits(bits),
+    );
+    (plan, pipe)
+}
+
+/// Regenerate one fixture clip from its manifest spec. Everything is
+/// seeded through the repo's own `Pcg32`; no ambient entropy.
+fn clip_from_spec(spec: &Json, len: usize, sample_rate: f64) -> Vec<f32> {
+    let kind = spec.get("kind").as_str().expect("clip kind");
+    let seed = spec.get("seed").as_f64().expect("clip seed") as u64;
+    let amp = spec.get("amp").as_f64().expect("clip amp");
+    let freq = spec.get("freq").as_f64().expect("clip freq");
+    let tone = |a: f64| -> Vec<f32> {
+        (0..len)
+            .map(|i| (a * (2.0 * std::f64::consts::PI * freq * i as f64 / sample_rate).sin()) as f32)
+            .collect()
+    };
+    let noise = |a: f64| -> Vec<f32> {
+        Pcg32::new(seed).normal_vec(len).iter().map(|x| (a * f64::from(*x)) as f32).collect()
+    };
+    match kind {
+        "noise" => noise(amp),
+        "tone" => tone(amp),
+        "mix" => {
+            let t = tone(amp);
+            noise(amp * 0.5).iter().zip(&t).map(|(n, t)| n + t).collect()
+        }
+        other => panic!("unknown clip kind {other:?} in manifest"),
+    }
+}
+
+/// What the reference pipeline produces for one clip — the unit the
+/// expected file stores and the engine must reproduce.
+struct GoldenRow {
+    name: String,
+    acc: Vec<i64>,
+    k: Vec<i64>,
+    /// per head: (margin, z+, z-)
+    margins: Vec<(i64, i64, i64)>,
+    decision: usize,
+}
+
+fn argmax_margin(margins: &[(i64, i64, i64)]) -> usize {
+    let mut best = 0usize;
+    for (i, m) in margins.iter().enumerate() {
+        if m.0 > margins[best].0 {
+            best = i;
+        }
+    }
+    best
+}
+
+fn reference_row(pipe: &FixedPipeline, name: &str, clip: &[f32]) -> GoldenRow {
+    let acc = pipe.accumulate(clip);
+    let k = pipe.standardize(&acc);
+    let margins = pipe.infer_full(&k);
+    let decision = argmax_margin(&margins);
+    GoldenRow {
+        name: name.to_string(),
+        acc,
+        k,
+        margins,
+        decision,
+    }
+}
+
+fn i64s(xs: &[i64]) -> Json {
+    Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn row_to_json(r: &GoldenRow) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("acc", i64s(&r.acc)),
+        ("k", i64s(&r.k)),
+        (
+            "margins",
+            Json::Arr(
+                r.margins
+                    .iter()
+                    .map(|&(m, zp, zm)| i64s(&[m, zp, zm]))
+                    .collect(),
+            ),
+        ),
+        ("decision", Json::Num(r.decision as f64)),
+    ])
+}
+
+fn json_to_i64s(j: &Json, what: &str, clip: &str) -> Vec<i64> {
+    j.as_arr()
+        .unwrap_or_else(|| panic!("expected.json: {clip}/{what} is not an array"))
+        .iter()
+        .map(|v| {
+            let f = v.as_f64().unwrap_or_else(|| panic!("expected.json: {clip}/{what} non-number"));
+            // every stored value sits far inside f64's exact-integer
+            // window (the prover caps registers at < 2^31)
+            f as i64
+        })
+        .collect()
+}
+
+fn assert_row_matches(expected: &Json, got: &GoldenRow) {
+    let clip = &got.name;
+    assert_eq!(
+        expected.get("name").as_str(),
+        Some(clip.as_str()),
+        "expected.json clip order drifted from manifest.json"
+    );
+    assert_eq!(
+        json_to_i64s(expected.get("acc"), "acc", clip),
+        got.acc,
+        "[golden {clip}] accumulated feature row drifted from the blessed vector \
+         (datapath change? delete tests/golden/expected.json to re-bless deliberately)"
+    );
+    assert_eq!(
+        json_to_i64s(expected.get("k"), "k", clip),
+        got.k,
+        "[golden {clip}] standardized feature row drifted from the blessed vector"
+    );
+    let margins: Vec<(i64, i64, i64)> = expected
+        .get("margins")
+        .as_arr()
+        .unwrap_or_else(|| panic!("expected.json: {clip}/margins missing"))
+        .iter()
+        .map(|t| {
+            let v = json_to_i64s(t, "margins", clip);
+            assert_eq!(v.len(), 3, "[golden {clip}] margin triple arity");
+            (v[0], v[1], v[2])
+        })
+        .collect();
+    assert_eq!(
+        margins, got.margins,
+        "[golden {clip}] inference margins drifted from the blessed vector"
+    );
+    assert_eq!(
+        expected.get("decision").as_usize(),
+        Some(got.decision),
+        "[golden {clip}] decision drifted from the blessed vector"
+    );
+}
+
+fn dummy_params() -> (Params, Standardizer) {
+    (
+        Params {
+            wp: vec![],
+            wm: vec![],
+            bp: vec![],
+            bm: vec![],
+        },
+        Standardizer {
+            mu: vec![],
+            sigma: vec![],
+        },
+    )
+}
+
+#[test]
+fn golden_vectors_pin_the_fixed_datapath_and_the_serving_engine() {
+    let manifest = load_json("manifest.json").expect("tests/golden/manifest.json is committed");
+    let bits = manifest.get("bits").as_usize().expect("manifest bits") as u32;
+    let acc_bits = manifest.get("acc_bits").as_usize().expect("manifest acc_bits") as u32;
+    let frame_len = manifest.get("frame_len").as_usize().expect("manifest frame_len");
+    let clip_len = manifest.get("clip_len").as_usize().expect("manifest clip_len");
+    assert_eq!(clip_len % frame_len, 0, "manifest clip/frame geometry");
+    let clip_frames = clip_len / frame_len;
+
+    let (plan, pipe) = golden_pipe(bits);
+    let specs = manifest.get("clips").as_arr().expect("manifest clips").to_vec();
+    assert!(!specs.is_empty(), "manifest has no clips");
+
+    // ---- reference rows for every fixture clip
+    let rows: Vec<(Vec<f32>, GoldenRow)> = specs
+        .iter()
+        .map(|spec| {
+            let name = spec.get("name").as_str().expect("clip name");
+            let clip = clip_from_spec(spec, clip_len, plan.sample_rate);
+            let row = reference_row(&pipe, name, &clip);
+            (clip, row)
+        })
+        .collect();
+
+    // ---- serving parity: always enforced, needs no blessed file.
+    // The engine is constructed through its certification gate and
+    // driven exactly the way Pipeline::tick drives a backend.
+    let mut eng = FixedEngine::new(pipe.clone(), frame_len, clip_frames, acc_bits)
+        .expect("the golden configuration certifies");
+    let (params, std) = dummy_params();
+    let p = eng.n_filters();
+    for (clip, row) in &rows {
+        let clip_name = &row.name;
+        let mut st = eng.zero_state();
+        let mut acc = vec![0.0f32; p];
+        let mut phi = vec![0.0f32; p];
+        for (fi, frame) in clip.chunks(frame_len).enumerate() {
+            eng.mp_frame_features_into(&mut st, frame, &mut phi).unwrap();
+            for (a, v) in acc.iter_mut().zip(&phi) {
+                *a += v;
+            }
+            // frame-level golden check: after frame fi the engine's
+            // running accumulator equals the reference pipeline run on
+            // the clip prefix — bit-exact, not approximately
+            let prefix = pipe.accumulate(&clip[..(fi + 1) * frame_len]);
+            let got: Vec<i64> = acc.iter().map(|&v| v as i64).collect();
+            assert!(
+                acc.iter().all(|v| v.fract() == 0.0),
+                "[golden {clip_name}] frame {fi}: Phi left the exact-integer window"
+            );
+            assert_eq!(
+                got, prefix,
+                "[golden {clip_name}] frame {fi}: engine features diverged from the \
+                 clip-prefix reference"
+            );
+        }
+        let (pv, zp, zm) = eng.inference(&params, &std, &acc, 1.0).unwrap();
+        let reference = pipe.classify(clip);
+        assert_eq!(pv.len(), reference.len());
+        for (h, (a, b)) in pv.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "[golden {clip_name}] head {h}: engine margin {a} != reference {b}"
+            );
+        }
+        // the engine's (z+, z-) must be the dequantized infer_full pair
+        let k_fmt = pipe.feature_format();
+        for (h, &(_, rzp, rzm)) in row.margins.iter().enumerate() {
+            assert_eq!(
+                zp[h].to_bits(),
+                (k_fmt.dequantize(rzp) as f32).to_bits(),
+                "[golden {clip_name}] z+ head {h}"
+            );
+            assert_eq!(
+                zm[h].to_bits(),
+                (k_fmt.dequantize(rzm) as f32).to_bits(),
+                "[golden {clip_name}] z- head {h}"
+            );
+        }
+    }
+
+    // ---- blessed-vector stability
+    match load_json("expected.json") {
+        None => {
+            let blessed = Json::obj(vec![
+                ("bits", Json::Num(f64::from(bits))),
+                ("acc_bits", Json::Num(f64::from(acc_bits))),
+                (
+                    "clips",
+                    Json::Arr(rows.iter().map(|(_, r)| row_to_json(r)).collect()),
+                ),
+            ]);
+            let path = golden_dir().join("expected.json");
+            std::fs::write(&path, blessed.to_string_pretty())
+                .unwrap_or_else(|e| panic!("blessing {}: {e}", path.display()));
+            eprintln!(
+                "golden: blessed {} with {} clip(s) — commit it; later runs enforce it bit-exactly",
+                path.display(),
+                rows.len()
+            );
+        }
+        Some(expected) => {
+            assert_eq!(expected.get("bits").as_usize(), Some(bits as usize));
+            assert_eq!(expected.get("acc_bits").as_usize(), Some(acc_bits as usize));
+            let eclips = expected.get("clips").as_arr().expect("expected.json clips");
+            assert_eq!(
+                eclips.len(),
+                rows.len(),
+                "expected.json clip count drifted from manifest.json — delete it to re-bless"
+            );
+            for (e, (_, r)) in eclips.iter().zip(&rows) {
+                assert_row_matches(e, r);
+            }
+        }
+    }
+}
+
+/// The fixture set must exercise more than one decision path — all
+/// clips landing on one head would make the decision pins vacuous.
+#[test]
+fn golden_fixtures_are_not_degenerate() {
+    let manifest = load_json("manifest.json").expect("manifest");
+    let bits = manifest.get("bits").as_usize().unwrap() as u32;
+    let clip_len = manifest.get("clip_len").as_usize().unwrap();
+    let (plan, pipe) = golden_pipe(bits);
+    let mut nonzero_acc = 0usize;
+    let mut margins_seen = std::collections::BTreeSet::new();
+    for spec in manifest.get("clips").as_arr().unwrap() {
+        let name = spec.get("name").as_str().unwrap();
+        let clip = clip_from_spec(spec, clip_len, plan.sample_rate);
+        let row = reference_row(&pipe, name, &clip);
+        if row.acc.iter().any(|&v| v != 0) {
+            nonzero_acc += 1;
+        }
+        margins_seen.insert(row.margins.iter().map(|m| m.0).collect::<Vec<_>>());
+    }
+    assert!(
+        nonzero_acc >= 3,
+        "most fixture clips produce empty feature rows — the golden pins are vacuous"
+    );
+    assert!(
+        margins_seen.len() >= 2,
+        "every fixture clip lands on identical margins — widen the fixture set"
+    );
+}

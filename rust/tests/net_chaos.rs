@@ -25,7 +25,7 @@ use infilter::net::chaos::{
 use infilter::net::node::pipeline_factory;
 use infilter::net::{
     serve_node_until, FaultKind, Invariants, NodeConfig, NodeFaultAction, NodeFaultPoint,
-    NodeShutdown, RemoteConfig, RemoteLane,
+    NodeShutdown, RemoteConfig, RemoteLane, WireFormat,
 };
 use infilter::runtime::backend::{CpuEngine, InferenceBackend};
 use infilter::telemetry::registry;
@@ -244,6 +244,61 @@ fn stall_round_with_idle_reaping_stays_consistent() {
     let inv = Invariants::new(out.clips_pushed).seeded(seed);
     inv.assert_ok(&out.report);
     inv.assert_results(&out.report, &out.results, &out.reference);
+}
+
+// ---------------------------------------------------------------------
+// wire protocol v4: quantized (q15) frame payloads under chaos
+// ---------------------------------------------------------------------
+
+/// One seeded round with the v4 `FrameQ` payload negotiated in the
+/// handshake. `ScenarioConfig` pre-snaps the workload to the q15 grid,
+/// so the codec is the identity on these samples and the bit-parity
+/// half of [`Invariants`] carries over unchanged — any disagreement is
+/// a codec or framing bug, not quantization noise.
+fn q15_round(kind: FaultKind, seed: u64, lossless: bool) {
+    let cfg = ScenarioConfig {
+        wire_format: WireFormat::Q15,
+        ..ScenarioConfig::quick(seed, vec![kind])
+    };
+    let out = run_scenario(&cfg)
+        .unwrap_or_else(|e| panic!("[chaos seed {seed:#x}] q15 scenario failed: {e:#}"));
+    assert!(
+        out.faults_injected >= 1,
+        "[chaos seed {seed:#x}] the proxy never fired {kind:?}"
+    );
+    assert_conformant(seed, &out);
+    let mut inv = Invariants::new(out.clips_pushed).seeded(seed);
+    if lossless {
+        inv = inv.lossless();
+    }
+    inv.assert_ok(&out.report);
+    inv.assert_results(&out.report, &out.results, &out.reference);
+}
+
+#[test]
+fn q15_delay_shaping_is_lossless_and_bit_exact() {
+    let _g = serial();
+    q15_round(FaultKind::Delay, 0x0415A, true);
+}
+
+#[test]
+fn q15_dropped_connection_round_keeps_accounting_exact() {
+    let _g = serial();
+    q15_round(FaultKind::DropConn, 0x0415B, false);
+}
+
+#[test]
+fn q15_truncated_frame_round_keeps_accounting_exact() {
+    let _g = serial();
+    // truncation now lands mid-FrameQ: the varint decoder must reject,
+    // never panic, and the session death must account every clip
+    q15_round(FaultKind::TruncateFrame, 0x0415C, false);
+}
+
+#[test]
+fn q15_corrupt_payload_round_keeps_accounting_exact() {
+    let _g = serial();
+    q15_round(FaultKind::CorruptPayload, 0x0415D, false);
 }
 
 // ---------------------------------------------------------------------

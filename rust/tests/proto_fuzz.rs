@@ -13,7 +13,7 @@ use std::io::Cursor;
 
 /// A seeded valid message of a seeded variant — the corruption targets.
 fn arbitrary_msg(g: &mut Gen) -> Msg {
-    match g.usize(0, 5) {
+    match g.usize(0, 6) {
         0 => Msg::Hello(Handshake::wildcard(g.rng.next_u64())),
         1 => {
             let n = g.usize(0, 64);
@@ -23,6 +23,19 @@ fn arbitrary_msg(g: &mut Gen) -> Msg {
                 frame_idx: g.rng.next_u32(),
                 label: g.rng.next_u32() % 16,
                 samples: g.signal(n, 0.5),
+            }
+        }
+        6 => {
+            // the v4 quantized frame: delta-coded i16 samples; extreme
+            // values exercise the predictor's escape paths
+            let n = g.usize(0, 64);
+            Msg::FrameQ {
+                stream: g.rng.next_u64(),
+                clip_seq: g.rng.next_u64(),
+                frame_idx: g.rng.next_u32(),
+                label: g.rng.next_u32() % 16,
+                frac: g.int(1, 15) as u8,
+                samples: (0..n).map(|_| g.int(-32768, 32767) as i16).collect(),
             }
         }
         2 => Msg::Credit { n: g.rng.next_u32() },
